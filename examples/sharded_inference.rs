@@ -1,0 +1,95 @@
+//! Sharded inference demo (Fig. 1(4)): the transformer split across two
+//! shard stages with replicas, served over RPC with automatic failover.
+//! See `benches/sharded_inference.rs` for the measured version; this
+//! example walks through the moving parts and prints the predictions.
+//!
+//! Requires `make artifacts`.
+//! Run: cargo run --release --example sharded_inference
+
+use lattica::netsim::topology::LinkProfile;
+use lattica::netsim::SECOND;
+use lattica::node::NodeEvent;
+use lattica::rpc::RpcEvent;
+use lattica::runtime::Engine;
+use lattica::scenarios::bootstrap_mesh;
+use lattica::shard::{PipelineClient, ShardServer};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    let engine = Rc::new(RefCell::new(Engine::load(dir)?));
+    let cfg = engine.borrow().manifest.config.clone();
+    let params = engine.borrow().manifest.load_init_params()?;
+    let split = cfg.n_layer / 2;
+
+    let (mut world, nodes) = bootstrap_mesh(5, 99, LinkProfile::DATACENTER);
+    let client = nodes[0].clone();
+    println!(
+        "pipeline: stage0 = embed+layers[0..{split}] (2 replicas), stage1 = layers[{split}..{}]+logits (2 replicas)",
+        cfg.n_layer
+    );
+    let stages = vec![
+        vec![nodes[1].borrow().peer_id(), nodes[2].borrow().peer_id()],
+        vec![nodes[3].borrow().peer_id(), nodes[4].borrow().peer_id()],
+    ];
+    for (i, nd) in nodes[1..].iter().enumerate() {
+        let stage = i / 2;
+        nd.borrow_mut().app = Some(Box::new(ShardServer::new(
+            engine.clone(),
+            if stage == 0 { (0, split) } else { (split, cfg.n_layer) },
+            stage == 0,
+            stage == 1,
+            params.clone(),
+        )));
+    }
+    world.run_for(SECOND);
+
+    let mut pipeline = PipelineClient::new(stages);
+    // An arithmetic-sequence prompt (the synthetic training task).
+    let delta = 3i32;
+    let tokens: Vec<i32> = (0..cfg.seq_len as i32).map(|i| (5 + delta * i) % cfg.vocab as i32).collect();
+    println!("prompt: arithmetic sequence mod {} with delta {delta}", cfg.vocab);
+
+    for q in 0..4u64 {
+        if q == 2 {
+            // Kill stage-0 replica 0 mid-demo: the stub fails over.
+            let dead = nodes[1].borrow().endpoint_id();
+            world.remove_endpoint(dead);
+            println!("!! killed stage-0 replica 0 — requests continue via replica 1");
+        }
+        {
+            let mut c = client.borrow_mut();
+            pipeline.infer(&mut c, &mut world.net, tokens.clone())?;
+        }
+        let deadline = world.net.now() + 60 * SECOND;
+        while pipeline.completed.len() <= q as usize && world.net.now() < deadline {
+            world.run_for(SECOND / 50);
+            let evs = client.borrow_mut().drain_events();
+            let mut c = client.borrow_mut();
+            for e in &evs {
+                if let NodeEvent::Rpc(ev) = e {
+                    pipeline.on_rpc_event(&mut c, &mut world.net, ev);
+                }
+            }
+        }
+        let (rid, logits, started) = pipeline.completed.last().expect("completed");
+        let vals = logits.as_f32()?;
+        let argmax = vals
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap();
+        let expect = (tokens[cfg.seq_len - 1] + delta) % cfg.vocab as i32;
+        println!(
+            "request {rid}: predicted next token {argmax} (sequence-correct would be {expect}), latency {}",
+            lattica::util::timefmt::fmt_ns(world.net.now() - started)
+        );
+    }
+    assert_eq!(pipeline.completed.len(), 4);
+    assert!(pipeline.failed.is_empty());
+    println!("sharded_inference OK (untrained weights predict arbitrarily; failover masked the kill)");
+    Ok(())
+}

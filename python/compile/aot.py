@@ -1,0 +1,100 @@
+"""AOT lowering: JAX → HLO text artifacts + manifest.json.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the Rust `xla` crate) rejects; the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once via `make artifacts`; Python never runs on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import ModelConfig, init_params, make_entry_points, param_names, param_shapes
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--vocab", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--n-head", type=int, default=4)
+    ap.add_argument("--n-layer", type=int, default=4)
+    ap.add_argument("--d-ff", type=int, default=512)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        vocab=args.vocab,
+        d_model=args.d_model,
+        n_head=args.n_head,
+        n_layer=args.n_layer,
+        d_ff=args.d_ff,
+        seq_len=args.seq_len,
+        batch=args.batch,
+    )
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    artifacts = {}
+    for name, (fn, specs) in make_entry_points(cfg).items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "path": path,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars, {len(specs)} inputs)")
+
+    # Initial parameters, saved as raw little-endian f32 for the trainer.
+    params = init_params(cfg, seed=args.seed)
+    blob_path = os.path.join(args.out_dir, "init_params.bin")
+    with open(blob_path, "wb") as f:
+        for p in params:
+            f.write(np.asarray(p, dtype=np.float32).tobytes())
+    print(f"wrote init_params.bin ({os.path.getsize(blob_path)} bytes)")
+
+    manifest = {
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_head": cfg.n_head,
+            "n_layer": cfg.n_layer,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+            "batch": cfg.batch,
+        },
+        "params": [
+            {"name": n, "shape": list(s)}
+            for n, s in zip(param_names(cfg), param_shapes(cfg))
+        ],
+        "n_layer_params": 12,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

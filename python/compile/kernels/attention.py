@@ -1,0 +1,117 @@
+"""Flash-style causal attention as a Pallas kernel.
+
+TPU adaptation of the flash-attention tiling (DESIGN.md §4): Q blocks x KV
+blocks form the grid; the online-softmax running state (m, l, acc) lives in
+VMEM scratch carried across the KV grid dimension; the two matmuls per tile
+(QK^T and PV) are shaped to feed the MXU. ``interpret=True`` everywhere: the
+CPU PJRT client cannot execute Mosaic custom-calls, and interpret mode
+lowers to plain HLO so the AOT artifact runs in the Rust runtime.
+
+VMEM budget per (block_q, block_k) tile at d = head_dim:
+    q:   block_q * d * 4 B          k,v: block_k * d * 4 B each
+    acc: block_q * d * 4 B          m,l: block_q * 4 B each
+Defaults (128, 128, d <= 128) stay under ~256 KiB, far below the ~16 MiB
+VMEM of a TPU core, leaving room for double buffering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, scale, block_q, block_k, causal
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (block_q, d)
+    k = k_ref[0].astype(jnp.float32)  # (block_k, d)
+    v = v_ref[0].astype(jnp.float32)  # (block_k, d)
+
+    # QK^T on the MXU.
+    s = jnp.dot(q, k.T) * scale  # (block_q, block_k)
+
+    if causal:
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (block_q,)
+    l_prev = l_ref[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+    correction = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])  # (block_q, block_k)
+    l_cur = l_prev * correction + p.sum(axis=-1)
+
+    # PV on the MXU, accumulated in VMEM scratch.
+    acc_ref[...] = acc_ref[...] * correction[:, None] + jnp.dot(p, v)
+    m_ref[...] = m_cur
+    l_ref[...] = l_cur
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+def attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+):
+    """Causal attention over (heads, seq, head_dim) arrays."""
+    h, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q != 0 or s % block_k != 0:
+        # Fall back to a single block covering the sequence (small shapes).
+        block_q = block_k = s
+    scale = 1.0 / (d**0.5)
+    grid = (h, s // block_q, s // block_k)
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        causal=causal,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda hh, qq, kk: (hh, qq, 0)),
+            pl.BlockSpec((1, block_k, d), lambda hh, qq, kk: (hh, kk, 0)),
+            pl.BlockSpec((1, block_k, d), lambda hh, qq, kk: (hh, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda hh, qq, kk: (hh, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+
+
+def vmem_bytes(block_q: int, block_k: int, d: int) -> int:
+    """Estimated VMEM footprint of one grid step (see module docstring)."""
+    return 4 * (block_q * d * 2 + block_k * d * 2 + 2 * block_q)

@@ -1,0 +1,32 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Every kernel in this package has an exact (up to float tolerance) reference
+here; pytest + hypothesis compare them across shapes and dtypes.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Scaled dot-product attention over (heads, seq, dim) arrays."""
+    _, s, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(d, dtype=jnp.float32))
+    logits = (
+        jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    )
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, :, :], logits, -1e30)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("hqk,hkd->hqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ffn_ref(x, w1, b1, w2, b2):
+    """Fused feed-forward: GELU(x @ w1 + b1) @ w2 + b2 (tanh GELU)."""
+    x32 = x.astype(jnp.float32)
+    h = x32 @ w1.astype(jnp.float32) + b1.astype(jnp.float32)
+    h = 0.5 * h * (1.0 + jnp.tanh(0.7978845608028654 * (h + 0.044715 * h**3)))
+    out = h @ w2.astype(jnp.float32) + b2.astype(jnp.float32)
+    return out.astype(x.dtype)

@@ -1,0 +1,325 @@
+"""L2: GPT-style decoder in JAX, calling the L1 Pallas kernels.
+
+The model is the AI payload that Lattica moves around: the trainer node
+steps `train_step`, publishes the flat parameter list as CID-addressed
+blocks, and inference clusters execute `embed` / `layer_fwd` / `logits`
+artifacts shard-by-shard over RPC streams.
+
+Parameters are a FLAT LIST of arrays in a deterministic order (see
+`param_names`); the Rust runtime treats them as an opaque ordered list
+described by artifacts/manifest.json.
+
+Scale note (recorded in DESIGN.md §3): the paper's workloads are data-center
+models; on this CPU-only testbed we train a ~1M-parameter decoder so the
+end-to-end example finishes in minutes. Every code path (kernels, AOT,
+sharded serving, checkpoint distribution) is identical at larger widths —
+`ModelConfig` scales d_model/n_layer without touching the stack.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref as kref
+from .kernels.attention import attention as _attention_fwd
+from .kernels.ffn import ffn as _ffn_fwd
+
+
+# Pallas interpret-mode calls are not differentiable (no JVP rule for
+# scratch + control flow); we attach the reference implementation's VJP so
+# `train_step` can backprop while every forward pass — including inside the
+# training graph — still runs the L1 kernel.
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    return _attention_fwd(q, k, v, causal=True)
+
+
+def _attn_fwd_rule(q, k, v):
+    return _attention_fwd(q, k, v, causal=True), (q, k, v)
+
+
+def _attn_bwd_rule(res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: kref.attention_ref(q, k, v, causal=True), q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_attn_fwd_rule, _attn_bwd_rule)
+
+
+@jax.custom_vjp
+def ffn(x, w1, b1, w2, b2):
+    return _ffn_fwd(x, w1, b1, w2, b2)
+
+
+def _ffn_fwd_rule(x, w1, b1, w2, b2):
+    return _ffn_fwd(x, w1, b1, w2, b2), (x, w1, b1, w2, b2)
+
+
+def _ffn_bwd_rule(res, g):
+    _, vjp = jax.vjp(kref.ffn_ref, *res)
+    return vjp(g)
+
+
+ffn.defvjp(_ffn_fwd_rule, _ffn_bwd_rule)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256
+    d_model: int = 128
+    n_head: int = 4
+    n_layer: int = 4
+    d_ff: int = 512
+    seq_len: int = 64
+    batch: int = 4
+    # Adam
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_head
+
+
+LAYER_PARAMS = [
+    "ln1_g",
+    "ln1_b",
+    "wq",
+    "wk",
+    "wv",
+    "wo",
+    "ln2_g",
+    "ln2_b",
+    "w1",
+    "b1",
+    "w2",
+    "b2",
+]
+
+N_LAYER_PARAMS = len(LAYER_PARAMS)
+
+
+def param_names(cfg: ModelConfig):
+    names = ["wte", "wpe"]
+    for i in range(cfg.n_layer):
+        names += [f"l{i}.{n}" for n in LAYER_PARAMS]
+    names += ["lnf_g", "lnf_b", "wout"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig):
+    d, f, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    shapes = [(v, d), (s, d)]
+    for _ in range(cfg.n_layer):
+        shapes += [
+            (d,),
+            (d,),
+            (d, d),
+            (d, d),
+            (d, d),
+            (d, d),
+            (d,),
+            (d,),
+            (d, f),
+            (f,),
+            (f, d),
+            (d,),
+        ]
+    shapes += [(d,), (d,), (d, v)]
+    return shapes
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Deterministic initialization, returned as the flat list."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in zip(param_names(cfg), param_shapes(cfg)):
+        key, sub = jax.random.split(key)
+        leaf = name.split(".")[-1]
+        if leaf in ("ln1_g", "ln2_g", "lnf_g"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif leaf in ("ln1_b", "ln2_b", "lnf_b", "b1", "b2"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 0.02 if name in ("wte", "wpe") else (2.0 / fan_in) ** 0.5 * 0.5
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params
+
+
+def layer_param_slice(cfg: ModelConfig, layer: int):
+    """(start, end) indices of layer `layer` in the flat list."""
+    start = 2 + layer * N_LAYER_PARAMS
+    return start, start + N_LAYER_PARAMS
+
+
+def _layernorm(x, g, b):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def layer_fwd(hidden, lp, cfg: ModelConfig):
+    """One transformer block over hidden (B, S, D). `lp` = 12 tensors."""
+    (ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, b1, w2, b2) = lp
+    b, s, d = hidden.shape
+    h, dh = cfg.n_head, cfg.d_head
+
+    x = _layernorm(hidden, ln1_g, ln1_b)
+    x2 = x.reshape(b * s, d)
+    q = (x2 @ wq).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = (x2 @ wk).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    v = (x2 @ wv).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+
+    # L1 Pallas kernel, vmapped over the batch.
+    att = jax.vmap(attention)(q, k, v)
+    att = att.transpose(0, 2, 1, 3).reshape(b * s, d)
+    hidden = hidden + (att @ wo).reshape(b, s, d)
+
+    x = _layernorm(hidden, ln2_g, ln2_b)
+    # L1 fused FFN kernel over flattened rows.
+    y = ffn(x.reshape(b * s, d), w1, b1, w2, b2)
+    return hidden + y.reshape(b, s, d)
+
+
+def embed(tokens, wte, wpe):
+    """tokens (B, S) int32 → hidden (B, S, D)."""
+    s = tokens.shape[1]
+    return wte[tokens] + wpe[None, :s, :]
+
+
+def logits_head(hidden, lnf_g, lnf_b, wout):
+    x = _layernorm(hidden, lnf_g, lnf_b)
+    return x @ wout
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    """Full forward pass → logits (B, S, V)."""
+    hidden = embed(tokens, params[0], params[1])
+    for i in range(cfg.n_layer):
+        a, b = layer_param_slice(cfg, i)
+        hidden = layer_fwd(hidden, params[a:b], cfg)
+    return logits_head(hidden, params[-3], params[-2], params[-1])
+
+
+def loss_fn(params, tokens_in, tokens_out, cfg: ModelConfig):
+    """Mean next-token cross entropy."""
+    logits = forward(params, tokens_in, cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tokens_out[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def train_step(params, m, v, step, batch, cfg: ModelConfig):
+    """One Adam step. `batch` is (B, S+1) int32; returns updated state + loss.
+
+    All state flows through arguments/results so the Rust trainer holds the
+    optimizer state as plain literals between steps.
+    """
+    tokens_in = batch[:, :-1]
+    tokens_out = batch[:, 1:]
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens_in, tokens_out, cfg)
+    step = step + 1
+    t = step.astype(jnp.float32)
+    b1, b2 = cfg.beta1, cfg.beta2
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * (g * g)
+        mhat = mi / (1 - b1**t)
+        vhat = vi / (1 - b2**t)
+        new_params.append(p - cfg.lr * mhat / (jnp.sqrt(vhat) + cfg.eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_params, new_m, new_v, step, loss
+
+
+def eval_loss(params, batch, cfg: ModelConfig):
+    return loss_fn(params, batch[:, :-1], batch[:, 1:], cfg)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (fixed shapes; see aot.py)
+# ---------------------------------------------------------------------------
+
+
+def make_entry_points(cfg: ModelConfig):
+    """Callables + example argument shapes for every artifact we ship."""
+    d = cfg.d_model
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    def spec(shape, dt=f32):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    lp_specs = [
+        spec((d,)),
+        spec((d,)),
+        spec((d, d)),
+        spec((d, d)),
+        spec((d, d)),
+        spec((d, d)),
+        spec((d,)),
+        spec((d,)),
+        spec((d, cfg.d_ff)),
+        spec((cfg.d_ff,)),
+        spec((cfg.d_ff, d)),
+        spec((d,)),
+    ]
+
+    param_specs = [spec(s) for s in param_shapes(cfg)]
+
+    # Serving entry points use batch=1.
+    def embed_b1(tokens, wte, wpe):
+        return (embed(tokens, wte, wpe),)
+
+    def layer_b1(hidden, *lp):
+        return (layer_fwd(hidden, list(lp), cfg),)
+
+    def logits_b1(hidden, lnf_g, lnf_b, wout):
+        out = logits_head(hidden, lnf_g, lnf_b, wout)
+        return (out[:, -1, :],)  # next-token logits only
+
+    def train(*args):
+        n = len(param_specs)
+        params = list(args[:n])
+        m = list(args[n : 2 * n])
+        v = list(args[2 * n : 3 * n])
+        step = args[3 * n]
+        batch = args[3 * n + 1]
+        new_p, new_m, new_v, step, loss = train_step(params, m, v, step, batch, cfg)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (step, loss)
+
+    def evaluate(*args):
+        n = len(param_specs)
+        params = list(args[:n])
+        batch = args[n]
+        return (eval_loss(params, batch, cfg),)
+
+    return {
+        "embed": (
+            embed_b1,
+            [spec((1, cfg.seq_len), i32), spec((cfg.vocab, d)), spec((cfg.seq_len, d))],
+        ),
+        "layer_fwd": (layer_b1, [spec((1, cfg.seq_len, d))] + lp_specs),
+        "logits": (
+            logits_b1,
+            [spec((1, cfg.seq_len, d)), spec((d,)), spec((d,)), spec((d, cfg.vocab))],
+        ),
+        "train_step": (
+            train,
+            param_specs * 3
+            + [spec((), i32), spec((cfg.batch, cfg.seq_len + 1), i32)],
+        ),
+        "eval_loss": (
+            evaluate,
+            param_specs + [spec((cfg.batch, cfg.seq_len + 1), i32)],
+        ),
+    }

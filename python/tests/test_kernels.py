@@ -1,0 +1,141 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; fixed cases pin the defaults.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention, vmem_bytes as attn_vmem
+from compile.kernels.ffn import ffn, vmem_bytes as ffn_vmem
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+class TestAttention:
+    def test_matches_ref_default(self):
+        key = jax.random.PRNGKey(0)
+        kq, kk, kv = jax.random.split(key, 3)
+        q, k, v = (rand(kq, (4, 64, 32)), rand(kk, (4, 64, 32)), rand(kv, (4, 64, 32)))
+        got = attention(q, k, v)
+        want = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_multi_block_grid(self):
+        key = jax.random.PRNGKey(1)
+        kq, kk, kv = jax.random.split(key, 3)
+        # seq 256 with block 64 → 4x4 KV grid, exercises online softmax.
+        q = rand(kq, (2, 256, 16))
+        k = rand(kk, (2, 256, 16))
+        v = rand(kv, (2, 256, 16))
+        got = attention(q, k, v, block_q=64, block_k=64)
+        want = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_non_causal(self):
+        key = jax.random.PRNGKey(2)
+        kq, kk, kv = jax.random.split(key, 3)
+        q, k, v = (rand(kq, (1, 32, 8)), rand(kk, (1, 32, 8)), rand(kv, (1, 32, 8)))
+        got = attention(q, k, v, causal=False)
+        want = ref.attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_causality_enforced(self):
+        # Future positions must not influence earlier outputs.
+        key = jax.random.PRNGKey(3)
+        kq, kk, kv = jax.random.split(key, 3)
+        q, k, v = (rand(kq, (1, 16, 8)), rand(kk, (1, 16, 8)), rand(kv, (1, 16, 8)))
+        out1 = attention(q, k, v)
+        v2 = v.at[:, -1, :].set(99.0)
+        k2 = k.at[:, -1, :].set(99.0)
+        out2 = attention(q, k2, v2)
+        np.testing.assert_allclose(out1[:, :-1], out2[:, :-1], rtol=1e-5, atol=1e-5)
+
+    def test_softmax_stability_large_logits(self):
+        key = jax.random.PRNGKey(4)
+        kq, kk, kv = jax.random.split(key, 3)
+        q = rand(kq, (1, 32, 8), scale=30.0)
+        k = rand(kk, (1, 32, 8), scale=30.0)
+        v = rand(kv, (1, 32, 8))
+        got = attention(q, k, v)
+        assert np.isfinite(np.asarray(got)).all()
+        want = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        heads=st.sampled_from([1, 2, 4]),
+        seq=st.sampled_from([8, 16, 32, 64, 96]),
+        dim=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**16),
+        causal=st.booleans(),
+    )
+    def test_hypothesis_shapes(self, heads, seq, dim, seed, causal):
+        key = jax.random.PRNGKey(seed)
+        kq, kk, kv = jax.random.split(key, 3)
+        q = rand(kq, (heads, seq, dim))
+        k = rand(kk, (heads, seq, dim))
+        v = rand(kv, (heads, seq, dim))
+        got = attention(q, k, v, causal=causal, block_q=32, block_k=32)
+        want = ref.attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_vmem_estimate_within_budget(self):
+        # Default blocks must fit VMEM with double-buffering headroom.
+        assert attn_vmem(128, 128, 128) < 2 * 1024 * 1024
+
+
+class TestFfn:
+    def test_matches_ref_default(self):
+        key = jax.random.PRNGKey(10)
+        ks = jax.random.split(key, 5)
+        x = rand(ks[0], (64, 32))
+        w1 = rand(ks[1], (32, 128), scale=0.3)
+        b1 = rand(ks[2], (128,), scale=0.1)
+        w2 = rand(ks[3], (128, 32), scale=0.3)
+        b2 = rand(ks[4], (32,), scale=0.1)
+        got = ffn(x, w1, b1, w2, b2)
+        want = ref.ffn_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_tiled_grid_matches(self):
+        key = jax.random.PRNGKey(11)
+        ks = jax.random.split(key, 5)
+        x = rand(ks[0], (256, 64))
+        w1 = rand(ks[1], (64, 512), scale=0.2)
+        b1 = rand(ks[2], (512,), scale=0.1)
+        w2 = rand(ks[3], (512, 64), scale=0.2)
+        b2 = rand(ks[4], (64,), scale=0.1)
+        got = ffn(x, w1, b1, w2, b2, block_m=64, block_f=128)
+        want = ref.ffn_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        rows=st.sampled_from([4, 16, 64, 100]),
+        d=st.sampled_from([8, 32, 64]),
+        f=st.sampled_from([16, 64, 256]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, rows, d, f, seed):
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 5)
+        x = rand(ks[0], (rows, d))
+        w1 = rand(ks[1], (d, f), scale=0.3)
+        b1 = rand(ks[2], (f,), scale=0.1)
+        w2 = rand(ks[3], (f, d), scale=0.3)
+        b2 = rand(ks[4], (d,), scale=0.1)
+        got = ffn(x, w1, b1, w2, b2, block_m=32, block_f=64)
+        want = ref.ffn_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_vmem_estimate_within_budget(self):
+        assert ffn_vmem(128, 512, 512) < 4 * 1024 * 1024

@@ -1,0 +1,84 @@
+//! CRDT store convergence under churn and partitions (§2's eventually
+//! consistent, verifiable replication).
+//!
+//! N replicas apply random concurrent updates; anti-entropy rounds run over
+//! a random gossip ring, with a partition separating the first half from
+//! the second for the first phase. Convergence = identical store digests.
+
+use lattica::netsim::topology::LinkProfile;
+use lattica::netsim::SECOND;
+use lattica::scenarios::bootstrap_mesh;
+use lattica::util::cli::Args;
+use lattica::util::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.opt_usize("nodes", 8).unwrap();
+    let updates = args.opt_usize("updates", 200).unwrap();
+    let (mut world, nodes) = bootstrap_mesh(n, 777, LinkProfile::FIBER);
+    let mut rng = Rng::new(99);
+
+    // Phase 1: concurrent updates, syncing only within partition halves.
+    for i in 0..updates {
+        let r = rng.gen_index(n);
+        let mut nd = nodes[r].borrow_mut();
+        match rng.gen_index(3) {
+            0 => nd.crdt.gcounter("train/steps").increment(r as u64, 1),
+            1 => {
+                let member = format!("peer-{}", rng.gen_index(n * 2));
+                nd.crdt.orset("cluster/members").add(r as u64, member.as_bytes());
+            }
+            _ => {
+                let v = format!("ckpt-{i}");
+                nd.crdt.lww("model/latest").set(v.into_bytes(), i as u64, r as u64);
+            }
+        }
+        drop(nd);
+        if i % 10 == 9 {
+            // Partitioned anti-entropy: only same-half pairs sync.
+            let a = rng.gen_index(n);
+            let b = if a < n / 2 { rng.gen_index(n / 2) } else { n / 2 + rng.gen_index(n - n / 2) };
+            if a != b {
+                let peer = nodes[b].borrow().peer_id();
+                let _ = nodes[a].borrow_mut().crdt_sync_with(&mut world.net, &peer);
+                world.run_for(SECOND / 4);
+            }
+        }
+    }
+    world.run_for(2 * SECOND);
+    let digests: Vec<_> = nodes.iter().map(|nd| nd.borrow().crdt.digest()).collect();
+    let halves_diverged = digests[0] != digests[n - 1];
+    println!("after partitioned phase: halves diverged = {halves_diverged}");
+
+    // Phase 2: heal the partition — full ring sync until digests agree.
+    let t0 = world.net.now();
+    let mut rounds = 0;
+    loop {
+        rounds += 1;
+        for a in 0..n {
+            let b = (a + 1) % n;
+            let peer = nodes[b].borrow().peer_id();
+            let _ = nodes[a].borrow_mut().crdt_sync_with(&mut world.net, &peer);
+        }
+        world.run_for(SECOND);
+        let d0 = nodes[0].borrow().crdt.digest();
+        if nodes.iter().all(|nd| nd.borrow().crdt.digest() == d0) {
+            break;
+        }
+        assert!(rounds < 20, "no convergence after {rounds} ring rounds");
+    }
+    let heal = (world.net.now() - t0) as f64 / 1e9;
+    println!("converged after {rounds} ring rounds ({heal:.2}s virtual)");
+
+    // Verify the merged state makes sense.
+    let mut n0 = nodes[0].borrow_mut();
+    let steps = n0.crdt.gcounter("train/steps").value();
+    println!(
+        "final: steps counter = {steps}, members = {}, latest = {:?}",
+        n0.crdt.orset("cluster/members").len(),
+        String::from_utf8_lossy(n0.crdt.lww("model/latest").get())
+    );
+    assert!(steps > 0);
+    assert!(rounds <= n, "ring anti-entropy must converge within N rounds");
+    println!("shape check OK: digest-verified convergence within N ring rounds");
+}

@@ -1,0 +1,134 @@
+//! Fig. 1(3): RL pipeline — the training cluster publishes model chunks;
+//! inference clusters A–C synchronize via gossip announcements + Bitswap,
+//! compared against a central parameter-server baseline (every cluster
+//! pulls the full blob from the trainer).
+//!
+//! Reports per-checkpoint sync latency and trainer egress. The model blob
+//! is the real parameter set from `artifacts/` when present (run
+//! `make artifacts`), or a synthetic 3.5 MB blob otherwise.
+
+use lattica::content::DagManifest;
+use lattica::netsim::topology::LinkProfile;
+use lattica::netsim::SECOND;
+use lattica::node::{run_until, NodeEvent};
+use lattica::protocols::gossip::GossipEvent;
+use lattica::scenarios::bootstrap_mesh;
+use lattica::util::cli::Args;
+use lattica::util::timefmt;
+
+fn main() {
+    let args = Args::from_env();
+    let checkpoints = args.opt_usize("checkpoints", 3).unwrap();
+    let clusters = args.opt_usize("clusters", 3).unwrap();
+
+    // Model blob: real init params if available.
+    let blob: Vec<u8> = {
+        let p = std::path::Path::new("artifacts/init_params.bin");
+        if p.exists() {
+            std::fs::read(p).unwrap()
+        } else {
+            let mut rng = lattica::util::Rng::new(5);
+            rng.gen_bytes(3_500_000)
+        }
+    };
+    println!(
+        "Fig 1(3): model sync — {} checkpoint blob, {clusters} inference clusters",
+        timefmt::fmt_bytes(blob.len() as u64)
+    );
+
+    for p2p in [true, false] {
+        let (mut world, nodes) = bootstrap_mesh(clusters + 1, if p2p { 41 } else { 42 }, LinkProfile::FIBER);
+        let trainer = nodes[0].clone();
+        let trainer_peer = trainer.borrow().peer_id();
+        // Everyone subscribes to the model topic.
+        for nd in &nodes {
+            let mut n = nd.borrow_mut();
+            let lattica::node::LatticaNode { swarm, gossip, .. } = &mut *n;
+            let mut ctx = lattica::protocols::Ctx::new(swarm, &mut world.net);
+            gossip.subscribe(&mut ctx, &lattica::model::model_topic("policy"));
+        }
+        world.run_for(SECOND);
+
+        let mut sync_times = Vec::new();
+        for v in 1..=checkpoints {
+            // Trainer publishes checkpoint v (content + DHT + gossip).
+            let t0 = world.net.now();
+            let root = {
+                let mut tr = trainer.borrow_mut();
+                // Vary the blob per version so chunks differ.
+                let mut data = blob.clone();
+                data[0] = v as u8;
+                let root = tr.publish_blob(&mut world.net, "policy-blob", v as u64, &data, 256 * 1024);
+                // Gossip the announcement (what publish_checkpoint does for
+                // real tensor checkpoints — see examples/collaborative_rl).
+                let ann = lattica::model::ModelAnnouncement {
+                    name: "policy".into(),
+                    version: v as u64,
+                    root,
+                };
+                let lattica::node::LatticaNode { swarm, gossip, .. } = &mut *tr;
+                let mut ctx = lattica::protocols::Ctx::new(swarm, &mut world.net);
+                gossip.publish(&mut ctx, &lattica::model::model_topic("policy"), ann.encode());
+                root
+            };
+            world.run_for(SECOND / 2);
+            // Clusters hear the announcement (or poll, in the baseline) and fetch.
+            for c in &nodes[1..] {
+                // Drain gossip to emulate reacting to the announcement.
+                let _ann = c
+                    .borrow_mut()
+                    .drain_events()
+                    .into_iter()
+                    .filter_map(|e| match e {
+                        NodeEvent::Gossip(GossipEvent::Received { data, .. }) => Some(data),
+                        _ => None,
+                    })
+                    .last();
+                let providers = if p2p {
+                    nodes.iter().map(|n| n.borrow().peer_id()).collect()
+                } else {
+                    vec![trainer_peer]
+                };
+                c.borrow_mut().fetch_blob(&mut world.net, root, vec![trainer_peer]);
+                let _ = providers;
+            }
+            run_until(&mut world, 30 * SECOND, || {
+                nodes[1..].iter().all(|c| c.borrow().blockstore.has(&root))
+            });
+            for c in &nodes[1..] {
+                let providers: Vec<_> = if p2p {
+                    nodes.iter().map(|n| n.borrow().peer_id()).collect()
+                } else {
+                    vec![trainer_peer]
+                };
+                c.borrow_mut()
+                    .fetch_manifest_chunks(&mut world.net, &root, providers)
+                    .unwrap();
+            }
+            let ok = run_until(&mut world, 120 * SECOND, || {
+                nodes[1..].iter().all(|c| {
+                    let n = c.borrow();
+                    DagManifest::load(&n.blockstore, &root)
+                        .map(|m| m.is_complete(&n.blockstore))
+                        .unwrap_or(false)
+                })
+            });
+            assert!(ok, "checkpoint {v} did not propagate");
+            sync_times.push((world.net.now() - t0) as f64 / 1e9);
+        }
+        let egress: u64 = trainer
+            .borrow()
+            .bitswap
+            .ledgers
+            .values()
+            .map(|l| l.bytes_sent)
+            .sum();
+        let mean = sync_times.iter().sum::<f64>() / sync_times.len() as f64;
+        println!(
+            "  {}: mean sync {mean:.2}s/checkpoint, trainer egress {}",
+            if p2p { "lattica p2p   " } else { "central server" },
+            timefmt::fmt_bytes(egress)
+        );
+    }
+    println!("done (lower trainer egress in p2p mode = the decentralized-CDN effect)");
+}

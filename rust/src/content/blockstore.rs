@@ -1,0 +1,151 @@
+//! In-memory verified blockstore with size accounting and LRU-ish pruning.
+
+use super::cid::Cid;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Block storage keyed by CID. Every `put` verifies the hash; blocks are
+/// reference-counted (`Rc`) so Bitswap can serve them without copying.
+pub struct Blockstore {
+    blocks: HashMap<Cid, Rc<Vec<u8>>>,
+    total_bytes: usize,
+    /// Optional cap; inserting beyond it evicts in insertion order.
+    pub capacity_bytes: Option<usize>,
+    insertion_order: Vec<Cid>,
+}
+
+impl Default for Blockstore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Blockstore {
+    pub fn new() -> Blockstore {
+        Blockstore {
+            blocks: HashMap::new(),
+            total_bytes: 0,
+            capacity_bytes: None,
+            insertion_order: Vec::new(),
+        }
+    }
+
+    /// Store a block; returns its CID.
+    pub fn put(&mut self, data: Vec<u8>) -> Cid {
+        let cid = Cid::of(&data);
+        self.put_verified(cid, data).expect("hash just computed");
+        cid
+    }
+
+    /// Store a block claimed to have `cid`; fails if the hash mismatches.
+    pub fn put_verified(&mut self, cid: Cid, data: Vec<u8>) -> Result<()> {
+        anyhow::ensure!(cid.verify(&data), "block does not match CID {cid}");
+        if self.blocks.contains_key(&cid) {
+            return Ok(());
+        }
+        self.total_bytes += data.len();
+        self.blocks.insert(cid, Rc::new(data));
+        self.insertion_order.push(cid);
+        if let Some(cap) = self.capacity_bytes {
+            while self.total_bytes > cap && self.insertion_order.len() > 1 {
+                let victim = self.insertion_order.remove(0);
+                if victim == cid {
+                    self.insertion_order.push(victim);
+                    continue;
+                }
+                if let Some(b) = self.blocks.remove(&victim) {
+                    self.total_bytes -= b.len();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, cid: &Cid) -> Option<Rc<Vec<u8>>> {
+        self.blocks.get(cid).cloned()
+    }
+
+    pub fn has(&self, cid: &Cid) -> bool {
+        self.blocks.contains_key(cid)
+    }
+
+    pub fn remove(&mut self, cid: &Cid) {
+        if let Some(b) = self.blocks.remove(cid) {
+            self.total_bytes -= b.len();
+            self.insertion_order.retain(|c| c != cid);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.total_bytes
+    }
+
+    pub fn cids(&self) -> impl Iterator<Item = &Cid> {
+        self.blocks.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut bs = Blockstore::new();
+        let cid = bs.put(b"hello world".to_vec());
+        assert!(bs.has(&cid));
+        assert_eq!(&**bs.get(&cid).unwrap(), b"hello world");
+        assert_eq!(bs.len(), 1);
+        assert_eq!(bs.total_bytes(), 11);
+    }
+
+    #[test]
+    fn duplicate_put_idempotent() {
+        let mut bs = Blockstore::new();
+        let c1 = bs.put(b"same".to_vec());
+        let c2 = bs.put(b"same".to_vec());
+        assert_eq!(c1, c2);
+        assert_eq!(bs.len(), 1);
+        assert_eq!(bs.total_bytes(), 4);
+    }
+
+    #[test]
+    fn verification_rejects_forgery() {
+        let mut bs = Blockstore::new();
+        let cid = Cid::of(b"real");
+        assert!(bs.put_verified(cid, b"fake".to_vec()).is_err());
+        assert!(!bs.has(&cid));
+        assert!(bs.put_verified(cid, b"real".to_vec()).is_ok());
+    }
+
+    #[test]
+    fn capacity_evicts_oldest() {
+        let mut bs = Blockstore::new();
+        bs.capacity_bytes = Some(25);
+        let c1 = bs.put(vec![1u8; 10]);
+        let c2 = bs.put(vec![2u8; 10]);
+        let c3 = bs.put(vec![3u8; 10]);
+        assert!(!bs.has(&c1), "oldest evicted");
+        assert!(bs.has(&c2) && bs.has(&c3));
+        assert!(bs.total_bytes() <= 25);
+    }
+
+    #[test]
+    fn remove_updates_accounting() {
+        let mut bs = Blockstore::new();
+        let cid = bs.put(vec![0u8; 100]);
+        bs.remove(&cid);
+        assert!(!bs.has(&cid));
+        assert_eq!(bs.total_bytes(), 0);
+        assert!(bs.is_empty());
+    }
+}

@@ -1,0 +1,137 @@
+//! Chunkers: fixed-size and content-defined (rolling-hash) splitting.
+//!
+//! Fixed chunking is the fast path for model checkpoints (dense binary,
+//! no insert/delete edits). The rolling-hash chunker (a Buzhash-style CDC)
+//! keeps chunk boundaries stable under insertions, which matters for
+//! text-like static assets in the CDN scenario.
+
+/// Default chunk size: 256 KiB (matches the paper's large-payload size).
+pub const DEFAULT_CHUNK_SIZE: usize = 256 * 1024;
+
+/// Split into fixed-size chunks (last chunk may be short).
+pub fn chunk_fixed(data: &[u8], size: usize) -> Vec<&[u8]> {
+    assert!(size > 0);
+    if data.is_empty() {
+        return Vec::new();
+    }
+    data.chunks(size).collect()
+}
+
+/// Buzhash table (deterministic pseudo-random, generated from splitmix).
+fn buz_table() -> [u64; 256] {
+    let mut t = [0u64; 256];
+    let mut rng = crate::util::Rng::new(0xB022_7A81_E5);
+    for v in t.iter_mut() {
+        *v = rng.next_u64();
+    }
+    t
+}
+
+/// Content-defined chunking with a 64-byte rolling window.
+///
+/// A boundary is declared when the rolling hash has `mask_bits` low zero
+/// bits (expected chunk ≈ 2^mask_bits bytes), clamped to [min, max].
+pub fn chunk_rolling(data: &[u8], mask_bits: u32, min: usize, max: usize) -> Vec<&[u8]> {
+    const WINDOW: usize = 64;
+    assert!(min >= WINDOW && max > min);
+    if data.is_empty() {
+        return Vec::new();
+    }
+    let table = buz_table();
+    let mask = (1u64 << mask_bits) - 1;
+    let mut chunks = Vec::new();
+    let mut start = 0usize;
+    let mut hash = 0u64;
+    let mut i = 0usize;
+    while i < data.len() {
+        let b = data[i] as usize;
+        hash = hash.rotate_left(1) ^ table[b];
+        // Only roll out bytes that belong to the current chunk's window
+        // (the hash is reset at each boundary).
+        if i - start >= WINDOW {
+            let old = data[i - WINDOW] as usize;
+            hash ^= table[old].rotate_left(WINDOW as u32);
+        }
+        let len = i - start + 1;
+        if (len >= min && (hash & mask) == 0) || len >= max {
+            chunks.push(&data[start..=i]);
+            start = i + 1;
+            hash = 0;
+        }
+        i += 1;
+    }
+    if start < data.len() {
+        chunks.push(&data[start..]);
+    }
+    chunks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn fixed_reassembles() {
+        let mut rng = Rng::new(1);
+        let data = rng.gen_bytes(1_000_000);
+        let chunks = chunk_fixed(&data, DEFAULT_CHUNK_SIZE);
+        assert_eq!(chunks.len(), 4);
+        let joined: Vec<u8> = chunks.concat();
+        assert_eq!(joined, data);
+        assert!(chunk_fixed(&[], 100).is_empty());
+        assert_eq!(chunk_fixed(&[1, 2, 3], 2), vec![&[1u8, 2][..], &[3u8][..]]);
+    }
+
+    #[test]
+    fn rolling_reassembles_and_respects_bounds() {
+        let mut rng = Rng::new(2);
+        let data = rng.gen_bytes(500_000);
+        let chunks = chunk_rolling(&data, 13, 2048, 64 * 1024);
+        let joined: Vec<u8> = chunks.concat();
+        assert_eq!(joined, data);
+        for (i, c) in chunks.iter().enumerate() {
+            assert!(c.len() <= 64 * 1024);
+            if i + 1 < chunks.len() {
+                assert!(c.len() >= 2048, "chunk {i} too small: {}", c.len());
+            }
+        }
+        // Expected size ≈ 8 KiB ⇒ between ~30 and ~250 chunks for 500 KB.
+        assert!(chunks.len() > 20 && chunks.len() < 260, "{}", chunks.len());
+    }
+
+    #[test]
+    fn rolling_boundaries_stable_under_insertion() {
+        let mut rng = Rng::new(3);
+        let data = rng.gen_bytes(200_000);
+        let mut edited = data.clone();
+        // Insert 100 bytes near the front.
+        let insert = rng.gen_bytes(100);
+        edited.splice(5000..5000, insert.iter().copied());
+
+        let c1: Vec<Vec<u8>> = chunk_rolling(&data, 12, 1024, 32 * 1024)
+            .into_iter()
+            .map(|c| c.to_vec())
+            .collect();
+        let c2: Vec<Vec<u8>> = chunk_rolling(&edited, 12, 1024, 32 * 1024)
+            .into_iter()
+            .map(|c| c.to_vec())
+            .collect();
+        use std::collections::HashSet;
+        let s1: HashSet<&Vec<u8>> = c1.iter().collect();
+        let shared = c2.iter().filter(|c| s1.contains(c)).count();
+        // Most chunks survive the edit (content-defined boundaries).
+        assert!(
+            shared * 10 >= c2.len() * 7,
+            "only {shared}/{} chunks shared",
+            c2.len()
+        );
+        // Fixed chunking, by contrast, shares almost nothing.
+        let f1: HashSet<Vec<u8>> = chunk_fixed(&data, 8192).iter().map(|c| c.to_vec()).collect();
+        let f_shared = chunk_fixed(&edited, 8192)
+            .iter()
+            .filter(|c| f1.contains(**c))
+            .count();
+        assert!(f_shared <= 1, "fixed chunking shared {f_shared}");
+    }
+}

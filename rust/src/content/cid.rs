@@ -1,0 +1,97 @@
+//! Content identifiers: SHA-256 multihash of the block bytes.
+
+use crate::util::hex;
+use anyhow::Result;
+use sha2::{Digest, Sha256};
+use std::fmt;
+
+/// A content identifier (multihash code 0x12, length 32).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Cid(pub [u8; 32]);
+
+impl Cid {
+    /// Hash a block's bytes.
+    pub fn of(data: &[u8]) -> Cid {
+        let mut h = Sha256::new();
+        h.update(data);
+        Cid(h.finalize().into())
+    }
+
+    pub fn as_bytes(&self) -> &[u8; 32] {
+        &self.0
+    }
+
+    /// The Kademlia key for provider records of this CID.
+    pub fn to_key(&self) -> [u8; 32] {
+        self.0
+    }
+
+    pub fn to_multihash(&self) -> Vec<u8> {
+        let mut v = Vec::with_capacity(34);
+        v.push(0x12);
+        v.push(0x20);
+        v.extend_from_slice(&self.0);
+        v
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Cid> {
+        anyhow::ensure!(b.len() == 32, "cid must be 32 bytes, got {}", b.len());
+        let mut d = [0u8; 32];
+        d.copy_from_slice(b);
+        Ok(Cid(d))
+    }
+
+    /// Verify data against this CID.
+    pub fn verify(&self, data: &[u8]) -> bool {
+        Cid::of(data) == *self
+    }
+}
+
+impl fmt::Debug for Cid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Cid({})", hex::encode_prefix(&self.0, 10))
+    }
+}
+
+impl fmt::Display for Cid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", hex::encode_prefix(&self.0, 14))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_distinct() {
+        let a = Cid::of(b"hello");
+        let b = Cid::of(b"hello");
+        let c = Cid::of(b"hellp");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn sha256_known_vector() {
+        // sha256("abc")
+        let cid = Cid::of(b"abc");
+        assert_eq!(
+            crate::util::hex::encode(cid.as_bytes()),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+
+    #[test]
+    fn verify_and_multihash() {
+        let data = b"block data";
+        let cid = Cid::of(data);
+        assert!(cid.verify(data));
+        assert!(!cid.verify(b"other"));
+        let mh = cid.to_multihash();
+        assert_eq!(mh.len(), 34);
+        assert_eq!(&mh[..2], &[0x12, 0x20]);
+        assert_eq!(Cid::from_bytes(&mh[2..]).unwrap(), cid);
+        assert!(Cid::from_bytes(&mh).is_err());
+    }
+}

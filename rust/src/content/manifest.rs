@@ -1,0 +1,162 @@
+//! DAG manifests: one root CID naming a chunked artifact.
+//!
+//! The manifest block lists the chunk CIDs (in order) plus metadata; its
+//! own CID is the artifact's root. Fetching = get manifest block → get
+//! chunks (any provider, any order) → verify each against its CID →
+//! reassemble. A tampered chunk cannot slip through because the chunk CID
+//! is bound by the manifest, which is bound by the root.
+
+use super::blockstore::Blockstore;
+use super::cid::Cid;
+use crate::wire::{Message, PbReader, PbWriter};
+use anyhow::{Context, Result};
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DagManifest {
+    /// Human-readable label ("model/ckpt-120", "asset/video.bin").
+    pub name: String,
+    /// Application version counter (model checkpoint step, asset rev).
+    pub version: u64,
+    /// Total payload size in bytes.
+    pub total_size: u64,
+    /// Chunk CIDs in order.
+    pub chunks: Vec<Cid>,
+}
+
+impl Message for DagManifest {
+    fn encode_to(&self, w: &mut PbWriter) {
+        w.string(1, &self.name);
+        w.uint(2, self.version);
+        w.uint(3, self.total_size);
+        for c in &self.chunks {
+            w.bytes(4, c.as_bytes());
+        }
+    }
+
+    fn decode(buf: &[u8]) -> Result<DagManifest> {
+        let mut m = DagManifest::default();
+        PbReader::new(buf).for_each(|f| {
+            match f.number {
+                1 => m.name = f.as_string()?,
+                2 => m.version = f.as_u64(),
+                3 => m.total_size = f.as_u64(),
+                4 => m.chunks.push(Cid::from_bytes(f.as_bytes()?)?),
+                _ => {}
+            }
+            Ok(())
+        })?;
+        Ok(m)
+    }
+}
+
+impl DagManifest {
+    /// Chunk `data`, store chunks + manifest, return (root CID, manifest).
+    pub fn publish(
+        store: &mut Blockstore,
+        name: &str,
+        version: u64,
+        data: &[u8],
+        chunk_size: usize,
+    ) -> (Cid, DagManifest) {
+        let chunks: Vec<Cid> = super::chunker::chunk_fixed(data, chunk_size)
+            .into_iter()
+            .map(|c| store.put(c.to_vec()))
+            .collect();
+        let m = DagManifest {
+            name: name.to_string(),
+            version,
+            total_size: data.len() as u64,
+            chunks,
+        };
+        let root = store.put(m.encode());
+        (root, m)
+    }
+
+    /// Load a manifest block from the store by root CID.
+    pub fn load(store: &Blockstore, root: &Cid) -> Result<DagManifest> {
+        let block = store.get(root).context("manifest block missing")?;
+        DagManifest::decode(&block)
+    }
+
+    /// Whether every chunk is locally present.
+    pub fn is_complete(&self, store: &Blockstore) -> bool {
+        self.chunks.iter().all(|c| store.has(c))
+    }
+
+    /// CIDs still missing locally.
+    pub fn missing<'a>(&'a self, store: &Blockstore) -> Vec<Cid> {
+        self.chunks.iter().filter(|c| !store.has(c)).copied().collect()
+    }
+
+    /// Reassemble the payload (fails if chunks are missing or sizes lie).
+    pub fn assemble(&self, store: &Blockstore) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(self.total_size as usize);
+        for c in &self.chunks {
+            let b = store
+                .get(c)
+                .with_context(|| format!("missing chunk {c}"))?;
+            out.extend_from_slice(&b);
+        }
+        anyhow::ensure!(
+            out.len() as u64 == self.total_size,
+            "assembled size {} != declared {}",
+            out.len(),
+            self.total_size
+        );
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn publish_fetch_roundtrip() {
+        let mut store = Blockstore::new();
+        let mut rng = Rng::new(4);
+        let data = rng.gen_bytes(700_000);
+        let (root, m) = DagManifest::publish(&mut store, "asset/x", 3, &data, 256 * 1024);
+        assert_eq!(m.chunks.len(), 3);
+        assert!(m.is_complete(&store));
+        let loaded = DagManifest::load(&store, &root).unwrap();
+        assert_eq!(loaded, m);
+        assert_eq!(loaded.assemble(&store).unwrap(), data);
+    }
+
+    #[test]
+    fn missing_chunks_reported() {
+        let mut store = Blockstore::new();
+        // Distinct chunk contents (identical chunks would share one CID).
+        let mut rng = Rng::new(5);
+        let data = rng.gen_bytes(100_000);
+        let (root, m) = DagManifest::publish(&mut store, "a", 1, &data, 30_000);
+        store.remove(&m.chunks[1]);
+        let loaded = DagManifest::load(&store, &root).unwrap();
+        assert!(!loaded.is_complete(&store));
+        assert_eq!(loaded.missing(&store), vec![m.chunks[1]]);
+        assert!(loaded.assemble(&store).is_err());
+    }
+
+    #[test]
+    fn root_binds_everything() {
+        let mut s1 = Blockstore::new();
+        let (root1, _) = DagManifest::publish(&mut s1, "a", 1, &[1, 2, 3], 2);
+        let mut s2 = Blockstore::new();
+        let (root2, _) = DagManifest::publish(&mut s2, "a", 1, &[1, 2, 4], 2);
+        assert_ne!(root1, root2, "different payloads → different roots");
+        let mut s3 = Blockstore::new();
+        let (root3, _) = DagManifest::publish(&mut s3, "a", 2, &[1, 2, 3], 2);
+        assert_ne!(root1, root3, "version is part of the root");
+    }
+
+    #[test]
+    fn empty_payload() {
+        let mut store = Blockstore::new();
+        let (root, m) = DagManifest::publish(&mut store, "empty", 1, &[], 1024);
+        assert!(m.chunks.is_empty());
+        let loaded = DagManifest::load(&store, &root).unwrap();
+        assert_eq!(loaded.assemble(&store).unwrap(), Vec::<u8>::new());
+    }
+}

@@ -1,0 +1,17 @@
+//! Content-addressed storage: CIDs, chunking, the blockstore and manifests.
+//!
+//! Data blocks are named by the SHA-256 multihash of their bytes (§2
+//! "Content-Addressed Data Synchronization"). Large artifacts (model
+//! checkpoints, static assets) are chunked; a [`manifest::DagManifest`]
+//! lists the chunk CIDs and is itself a block, so one root CID names the
+//! whole artifact and every transfer is verifiable.
+
+pub mod cid;
+pub mod chunker;
+pub mod blockstore;
+pub mod manifest;
+
+pub use blockstore::Blockstore;
+pub use cid::Cid;
+pub use chunker::{chunk_fixed, chunk_rolling, DEFAULT_CHUNK_SIZE};
+pub use manifest::DagManifest;

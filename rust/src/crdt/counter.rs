@@ -1,0 +1,193 @@
+//! Grow-only and PN counters.
+
+use super::{Crdt, ReplicaId};
+use crate::wire::{Message, PbReader, PbWriter};
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Grow-only counter: per-replica maxima.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GCounter {
+    pub counts: BTreeMap<ReplicaId, u64>,
+}
+
+impl GCounter {
+    pub fn new() -> GCounter {
+        GCounter::default()
+    }
+
+    pub fn increment(&mut self, replica: ReplicaId, by: u64) {
+        *self.counts.entry(replica).or_default() += by;
+    }
+
+    pub fn value(&self) -> u64 {
+        self.counts.values().sum()
+    }
+}
+
+impl Crdt for GCounter {
+    fn merge(&mut self, other: &Self) {
+        for (r, v) in &other.counts {
+            let e = self.counts.entry(*r).or_default();
+            *e = (*e).max(*v);
+        }
+    }
+}
+
+impl Message for GCounter {
+    fn encode_to(&self, w: &mut PbWriter) {
+        for (r, v) in &self.counts {
+            let mut inner = PbWriter::new();
+            inner.uint(1, *r);
+            inner.uint(2, *v);
+            w.bytes_always(1, &inner.finish());
+        }
+    }
+
+    fn decode(buf: &[u8]) -> Result<GCounter> {
+        let mut c = GCounter::new();
+        PbReader::new(buf).for_each(|f| {
+            if f.number == 1 {
+                let mut r = 0u64;
+                let mut v = 0u64;
+                PbReader::new(f.as_bytes()?).for_each(|g| {
+                    match g.number {
+                        1 => r = g.as_u64(),
+                        2 => v = g.as_u64(),
+                        _ => {}
+                    }
+                    Ok(())
+                })?;
+                c.counts.insert(r, v);
+            }
+            Ok(())
+        })?;
+        Ok(c)
+    }
+}
+
+/// Increment/decrement counter: two grow-only counters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PnCounter {
+    pub pos: GCounter,
+    pub neg: GCounter,
+}
+
+impl PnCounter {
+    pub fn new() -> PnCounter {
+        PnCounter::default()
+    }
+
+    pub fn increment(&mut self, replica: ReplicaId, by: u64) {
+        self.pos.increment(replica, by);
+    }
+
+    pub fn decrement(&mut self, replica: ReplicaId, by: u64) {
+        self.neg.increment(replica, by);
+    }
+
+    pub fn value(&self) -> i64 {
+        self.pos.value() as i64 - self.neg.value() as i64
+    }
+}
+
+impl Crdt for PnCounter {
+    fn merge(&mut self, other: &Self) {
+        self.pos.merge(&other.pos);
+        self.neg.merge(&other.neg);
+    }
+}
+
+impl Message for PnCounter {
+    fn encode_to(&self, w: &mut PbWriter) {
+        w.message(1, &self.pos);
+        w.message(2, &self.neg);
+    }
+
+    fn decode(buf: &[u8]) -> Result<PnCounter> {
+        let mut c = PnCounter::new();
+        PbReader::new(buf).for_each(|f| {
+            match f.number {
+                1 => c.pos = f.as_message()?,
+                2 => c.neg = f.as_message()?,
+                _ => {}
+            }
+            Ok(())
+        })?;
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gcounter_converges() {
+        let mut a = GCounter::new();
+        let mut b = GCounter::new();
+        a.increment(1, 5);
+        b.increment(2, 3);
+        a.increment(1, 2);
+        let mut a2 = a.clone();
+        a2.merge(&b);
+        let mut b2 = b.clone();
+        b2.merge(&a);
+        assert_eq!(a2, b2);
+        assert_eq!(a2.value(), 10);
+    }
+
+    #[test]
+    fn merge_idempotent_commutative_associative() {
+        let mut rng = crate::util::Rng::new(8);
+        let mk = |rng: &mut crate::util::Rng| {
+            let mut c = GCounter::new();
+            for _ in 0..5 {
+                c.increment(rng.gen_range(4), rng.gen_range(10) + 1);
+            }
+            c
+        };
+        for _ in 0..50 {
+            let (a, b, c) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+            // idempotent
+            let mut x = a.clone();
+            x.merge(&a);
+            assert_eq!(x, a);
+            // commutative
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            assert_eq!(ab, ba);
+            // associative
+            let mut abc1 = ab.clone();
+            abc1.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut abc2 = a.clone();
+            abc2.merge(&bc);
+            assert_eq!(abc1, abc2);
+        }
+    }
+
+    #[test]
+    fn pncounter_tracks_both_directions() {
+        let mut a = PnCounter::new();
+        a.increment(1, 10);
+        a.decrement(1, 4);
+        let mut b = PnCounter::new();
+        b.decrement(2, 3);
+        a.merge(&b);
+        assert_eq!(a.value(), 3);
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let mut c = PnCounter::new();
+        c.increment(42, 7);
+        c.decrement(9, 2);
+        let dec = PnCounter::decode(&c.encode()).unwrap();
+        assert_eq!(dec, c);
+        assert_eq!(dec.value(), 5);
+    }
+}

@@ -1,0 +1,27 @@
+//! Conflict-free replicated data types and the replicated store.
+//!
+//! The paper's "decentralized data store based on CRDTs" (§1, §2): nodes
+//! mutate locally, exchange state via anti-entropy, and converge without
+//! coordination. Implemented types: [`GCounter`], [`PnCounter`],
+//! [`LwwRegister`], [`OrSet`]. [`store::CrdtStore`] holds named instances,
+//! exposes a Merkle-style state digest for cheap "are we converged?"
+//! checks, and encodes full or partial state for the sync protocol
+//! (`node::crdt_sync`).
+
+pub mod counter;
+pub mod lww;
+pub mod orset;
+pub mod store;
+
+pub use counter::{GCounter, PnCounter};
+pub use lww::LwwRegister;
+pub use orset::OrSet;
+pub use store::{CrdtStore, CrdtValue};
+
+/// Replica identifier (the node's PeerId digest works; tests use ints).
+pub type ReplicaId = u64;
+
+/// State-based CRDT: merge must be commutative, associative, idempotent.
+pub trait Crdt: Clone {
+    fn merge(&mut self, other: &Self);
+}

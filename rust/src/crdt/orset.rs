@@ -1,0 +1,234 @@
+//! Observed-remove set: add wins over concurrent remove.
+//!
+//! Each add creates a unique tag (replica, counter); removal tombstones
+//! the observed tags only, so a concurrent re-add survives.
+
+use super::{Crdt, ReplicaId};
+use crate::wire::{Message, PbReader, PbWriter};
+use anyhow::Result;
+use std::collections::{BTreeMap, BTreeSet};
+
+type Tag = (ReplicaId, u64);
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OrSet {
+    /// element → live tags
+    elements: BTreeMap<Vec<u8>, BTreeSet<Tag>>,
+    /// tombstoned tags (per element, kept so merges can't resurrect)
+    tombstones: BTreeMap<Vec<u8>, BTreeSet<Tag>>,
+    counter: u64,
+}
+
+impl OrSet {
+    pub fn new() -> OrSet {
+        OrSet::default()
+    }
+
+    pub fn add(&mut self, replica: ReplicaId, element: &[u8]) {
+        self.counter += 1;
+        let tag = (replica, self.counter);
+        self.elements.entry(element.to_vec()).or_default().insert(tag);
+    }
+
+    /// Remove: tombstones every currently observed tag.
+    pub fn remove(&mut self, element: &[u8]) {
+        if let Some(tags) = self.elements.get_mut(element) {
+            let dead: BTreeSet<Tag> = std::mem::take(tags);
+            self.tombstones
+                .entry(element.to_vec())
+                .or_default()
+                .extend(dead);
+        }
+    }
+
+    pub fn contains(&self, element: &[u8]) -> bool {
+        self.elements.get(element).map_or(false, |t| !t.is_empty())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Vec<u8>> {
+        self.elements
+            .iter()
+            .filter(|(_, t)| !t.is_empty())
+            .map(|(e, _)| e)
+    }
+
+    pub fn len(&self) -> usize {
+        self.elements.values().filter(|t| !t.is_empty()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Crdt for OrSet {
+    fn merge(&mut self, other: &Self) {
+        // Union tombstones first.
+        for (e, ts) in &other.tombstones {
+            self.tombstones.entry(e.clone()).or_default().extend(ts.iter().copied());
+        }
+        // Union live tags, minus anything tombstoned anywhere.
+        for (e, ts) in &other.elements {
+            self.elements.entry(e.clone()).or_default().extend(ts.iter().copied());
+        }
+        for (e, ts) in &mut self.elements {
+            if let Some(dead) = self.tombstones.get(e) {
+                ts.retain(|t| !dead.contains(t));
+            }
+        }
+        self.counter = self.counter.max(other.counter);
+    }
+}
+
+impl Message for OrSet {
+    fn encode_to(&self, w: &mut PbWriter) {
+        let write_map = |w: &mut PbWriter, field: u32, map: &BTreeMap<Vec<u8>, BTreeSet<Tag>>| {
+            for (e, tags) in map {
+                let mut inner = PbWriter::new();
+                inner.bytes_always(1, e);
+                for (r, c) in tags {
+                    let mut tag = PbWriter::new();
+                    tag.uint(1, *r);
+                    tag.uint(2, *c);
+                    inner.bytes_always(2, &tag.finish());
+                }
+                w.bytes_always(field, &inner.finish());
+            }
+        };
+        write_map(w, 1, &self.elements);
+        write_map(w, 2, &self.tombstones);
+        w.uint(3, self.counter);
+    }
+
+    fn decode(buf: &[u8]) -> Result<OrSet> {
+        let mut s = OrSet::new();
+        let read_entry = |data: &[u8]| -> Result<(Vec<u8>, BTreeSet<Tag>)> {
+            let mut elem = Vec::new();
+            let mut tags = BTreeSet::new();
+            PbReader::new(data).for_each(|g| {
+                match g.number {
+                    1 => elem = g.as_bytes()?.to_vec(),
+                    2 => {
+                        let mut r = 0u64;
+                        let mut c = 0u64;
+                        PbReader::new(g.as_bytes()?).for_each(|t| {
+                            match t.number {
+                                1 => r = t.as_u64(),
+                                2 => c = t.as_u64(),
+                                _ => {}
+                            }
+                            Ok(())
+                        })?;
+                        tags.insert((r, c));
+                    }
+                    _ => {}
+                }
+                Ok(())
+            })?;
+            Ok((elem, tags))
+        };
+        PbReader::new(buf).for_each(|f| {
+            match f.number {
+                1 => {
+                    let (e, t) = read_entry(f.as_bytes()?)?;
+                    s.elements.insert(e, t);
+                }
+                2 => {
+                    let (e, t) = read_entry(f.as_bytes()?)?;
+                    s.tombstones.insert(e, t);
+                }
+                3 => s.counter = f.as_u64(),
+                _ => {}
+            }
+            Ok(())
+        })?;
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_remove_contains() {
+        let mut s = OrSet::new();
+        s.add(1, b"x");
+        assert!(s.contains(b"x"));
+        s.remove(b"x");
+        assert!(!s.contains(b"x"));
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn add_wins_over_concurrent_remove() {
+        let mut a = OrSet::new();
+        a.add(1, b"item");
+        let mut b = a.clone();
+        // A removes; B concurrently re-adds with a fresh tag.
+        a.remove(b"item");
+        b.add(2, b"item");
+        let mut m1 = a.clone();
+        m1.merge(&b);
+        let mut m2 = b.clone();
+        m2.merge(&a);
+        assert_eq!(m1, m2);
+        assert!(m1.contains(b"item"), "add must win");
+    }
+
+    #[test]
+    fn removed_stays_removed_after_remerge() {
+        let mut a = OrSet::new();
+        a.add(1, b"x");
+        let old = a.clone();
+        a.remove(b"x");
+        // Merging the pre-remove state back must not resurrect x.
+        a.merge(&old);
+        assert!(!a.contains(b"x"));
+    }
+
+    #[test]
+    fn convergence_random_ops() {
+        let mut rng = crate::util::Rng::new(12);
+        for _ in 0..20 {
+            let mut replicas: Vec<OrSet> = (0..3).map(|_| OrSet::new()).collect();
+            for _ in 0..30 {
+                let r = rng.gen_index(3);
+                let elem = [b'a' + rng.gen_range(5) as u8];
+                if rng.gen_bool(0.7) {
+                    replicas[r].add(r as u64, &elem);
+                } else {
+                    replicas[r].remove(&elem);
+                }
+            }
+            // Full pairwise merge until fixpoint.
+            for _ in 0..3 {
+                for i in 0..3 {
+                    for j in 0..3 {
+                        if i != j {
+                            let other = replicas[j].clone();
+                            replicas[i].merge(&other);
+                        }
+                    }
+                }
+            }
+            let s0: Vec<_> = replicas[0].iter().cloned().collect();
+            for r in &replicas[1..] {
+                let s: Vec<_> = r.iter().cloned().collect();
+                assert_eq!(s, s0, "replicas diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let mut s = OrSet::new();
+        s.add(1, b"alpha");
+        s.add(2, b"beta");
+        s.remove(b"alpha");
+        let dec = OrSet::decode(&s.encode()).unwrap();
+        assert_eq!(dec, s);
+        assert!(!dec.contains(b"alpha"));
+        assert!(dec.contains(b"beta"));
+    }
+}

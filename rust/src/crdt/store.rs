@@ -1,0 +1,296 @@
+//! The replicated store: named CRDT instances + verifiable state digest.
+
+use super::counter::{GCounter, PnCounter};
+use super::lww::LwwRegister;
+use super::orset::OrSet;
+use super::Crdt;
+use crate::wire::{Message, PbReader, PbWriter};
+use anyhow::{bail, Result};
+use sha2::{Digest, Sha256};
+use std::collections::BTreeMap;
+
+/// A value in the store.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CrdtValue {
+    GCounter(GCounter),
+    PnCounter(PnCounter),
+    Lww(LwwRegister),
+    OrSet(OrSet),
+}
+
+impl CrdtValue {
+    fn kind(&self) -> u64 {
+        match self {
+            CrdtValue::GCounter(_) => 1,
+            CrdtValue::PnCounter(_) => 2,
+            CrdtValue::Lww(_) => 3,
+            CrdtValue::OrSet(_) => 4,
+        }
+    }
+
+    fn body(&self) -> Vec<u8> {
+        match self {
+            CrdtValue::GCounter(c) => c.encode(),
+            CrdtValue::PnCounter(c) => c.encode(),
+            CrdtValue::Lww(r) => r.encode(),
+            CrdtValue::OrSet(s) => s.encode(),
+        }
+    }
+
+    fn from_parts(kind: u64, body: &[u8]) -> Result<CrdtValue> {
+        Ok(match kind {
+            1 => CrdtValue::GCounter(GCounter::decode(body)?),
+            2 => CrdtValue::PnCounter(PnCounter::decode(body)?),
+            3 => CrdtValue::Lww(LwwRegister::decode(body)?),
+            4 => CrdtValue::OrSet(OrSet::decode(body)?),
+            k => bail!("unknown crdt kind {k}"),
+        })
+    }
+
+    fn merge(&mut self, other: &CrdtValue) -> Result<()> {
+        match (self, other) {
+            (CrdtValue::GCounter(a), CrdtValue::GCounter(b)) => a.merge(b),
+            (CrdtValue::PnCounter(a), CrdtValue::PnCounter(b)) => a.merge(b),
+            (CrdtValue::Lww(a), CrdtValue::Lww(b)) => a.merge(b),
+            (CrdtValue::OrSet(a), CrdtValue::OrSet(b)) => a.merge(b),
+            _ => bail!("type mismatch merging CRDT"),
+        }
+        Ok(())
+    }
+}
+
+/// Named CRDT instances with digest-based convergence checks.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CrdtStore {
+    entries: BTreeMap<String, CrdtValue>,
+}
+
+impl CrdtStore {
+    pub fn new() -> CrdtStore {
+        CrdtStore::default()
+    }
+
+    pub fn gcounter(&mut self, key: &str) -> &mut GCounter {
+        match self
+            .entries
+            .entry(key.to_string())
+            .or_insert_with(|| CrdtValue::GCounter(GCounter::new()))
+        {
+            CrdtValue::GCounter(c) => c,
+            _ => panic!("{key} is not a gcounter"),
+        }
+    }
+
+    pub fn pncounter(&mut self, key: &str) -> &mut PnCounter {
+        match self
+            .entries
+            .entry(key.to_string())
+            .or_insert_with(|| CrdtValue::PnCounter(PnCounter::new()))
+        {
+            CrdtValue::PnCounter(c) => c,
+            _ => panic!("{key} is not a pncounter"),
+        }
+    }
+
+    pub fn lww(&mut self, key: &str) -> &mut LwwRegister {
+        match self
+            .entries
+            .entry(key.to_string())
+            .or_insert_with(|| CrdtValue::Lww(LwwRegister::new()))
+        {
+            CrdtValue::Lww(r) => r,
+            _ => panic!("{key} is not a lww register"),
+        }
+    }
+
+    pub fn orset(&mut self, key: &str) -> &mut OrSet {
+        match self
+            .entries
+            .entry(key.to_string())
+            .or_insert_with(|| CrdtValue::OrSet(OrSet::new()))
+        {
+            CrdtValue::OrSet(s) => s,
+            _ => panic!("{key} is not an orset"),
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&CrdtValue> {
+        self.entries.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Deterministic digest over the full state: equal digests ⇒ converged
+    /// (the "verifiable" replication check; BTreeMap gives canonical order).
+    pub fn digest(&self) -> [u8; 32] {
+        let mut h = Sha256::new();
+        for (k, v) in &self.entries {
+            h.update((k.len() as u64).to_be_bytes());
+            h.update(k.as_bytes());
+            h.update([v.kind() as u8]);
+            let body = v.body();
+            h.update((body.len() as u64).to_be_bytes());
+            h.update(&body);
+        }
+        h.finalize().into()
+    }
+
+    /// Per-key digests (anti-entropy sends only differing keys).
+    pub fn key_digests(&self) -> BTreeMap<String, [u8; 32]> {
+        self.entries
+            .iter()
+            .map(|(k, v)| {
+                let mut h = Sha256::new();
+                h.update([v.kind() as u8]);
+                h.update(v.body());
+                (k.clone(), h.finalize().into())
+            })
+            .collect()
+    }
+
+    /// Merge another store's (possibly partial) state.
+    pub fn merge(&mut self, other: &CrdtStore) -> Result<()> {
+        for (k, v) in &other.entries {
+            match self.entries.get_mut(k) {
+                Some(mine) => mine.merge(v)?,
+                None => {
+                    self.entries.insert(k.clone(), v.clone());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Extract a sub-store containing only `keys` (for delta shipping).
+    pub fn extract(&self, keys: &[String]) -> CrdtStore {
+        CrdtStore {
+            entries: keys
+                .iter()
+                .filter_map(|k| self.entries.get(k).map(|v| (k.clone(), v.clone())))
+                .collect(),
+        }
+    }
+}
+
+impl Message for CrdtStore {
+    fn encode_to(&self, w: &mut PbWriter) {
+        for (k, v) in &self.entries {
+            let mut inner = PbWriter::new();
+            inner.string(1, k);
+            inner.uint(2, v.kind());
+            inner.bytes_always(3, &v.body());
+            w.bytes_always(1, &inner.finish());
+        }
+    }
+
+    fn decode(buf: &[u8]) -> Result<CrdtStore> {
+        let mut s = CrdtStore::new();
+        PbReader::new(buf).for_each(|f| {
+            if f.number == 1 {
+                let mut key = String::new();
+                let mut kind = 0u64;
+                let mut body = Vec::new();
+                PbReader::new(f.as_bytes()?).for_each(|g| {
+                    match g.number {
+                        1 => key = g.as_string()?,
+                        2 => kind = g.as_u64(),
+                        3 => body = g.as_bytes()?.to_vec(),
+                        _ => {}
+                    }
+                    Ok(())
+                })?;
+                s.entries.insert(key, CrdtValue::from_parts(kind, &body)?);
+            }
+            Ok(())
+        })?;
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_accessors_and_digest() {
+        let mut s = CrdtStore::new();
+        s.gcounter("epochs").increment(1, 3);
+        s.lww("leader").set(b"node-7".to_vec(), 100, 1);
+        s.orset("members").add(1, b"alice");
+        assert_eq!(s.len(), 3);
+        let d1 = s.digest();
+        s.gcounter("epochs").increment(1, 1);
+        assert_ne!(s.digest(), d1, "digest tracks state");
+    }
+
+    #[test]
+    fn stores_converge_and_digests_agree() {
+        let mut a = CrdtStore::new();
+        let mut b = CrdtStore::new();
+        a.gcounter("c").increment(1, 5);
+        b.gcounter("c").increment(2, 7);
+        a.orset("s").add(1, b"x");
+        b.orset("s").add(2, b"y");
+        b.lww("r").set(b"vb".to_vec(), 9, 2);
+
+        let a0 = a.clone();
+        a.merge(&b).unwrap();
+        b.merge(&a0).unwrap();
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.gcounter("c").value(), 12);
+        assert!(a.orset("s").contains(b"x") && a.orset("s").contains(b"y"));
+    }
+
+    #[test]
+    fn partial_sync_via_key_digests() {
+        let mut a = CrdtStore::new();
+        let mut b = CrdtStore::new();
+        a.gcounter("same").increment(1, 1);
+        b.gcounter("same").increment(1, 1);
+        a.gcounter("diff").increment(1, 5);
+        b.gcounter("diff").increment(2, 9);
+
+        let da = a.key_digests();
+        let db = b.key_digests();
+        let differing: Vec<String> = da
+            .iter()
+            .filter(|(k, d)| db.get(*k) != Some(d))
+            .map(|(k, _)| k.clone())
+            .collect();
+        assert_eq!(differing, vec!["diff".to_string()]);
+        let delta = b.extract(&differing);
+        assert_eq!(delta.len(), 1);
+        a.merge(&delta).unwrap();
+        assert_eq!(a.gcounter("diff").value(), 14);
+    }
+
+    #[test]
+    fn type_mismatch_rejected() {
+        let mut a = CrdtStore::new();
+        a.gcounter("k").increment(1, 1);
+        let mut b = CrdtStore::new();
+        b.lww("k").set(b"v".to_vec(), 1, 1);
+        assert!(a.merge(&b).is_err());
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let mut s = CrdtStore::new();
+        s.pncounter("pn").increment(3, 10);
+        s.pncounter("pn").decrement(3, 4);
+        s.orset("set").add(1, b"e");
+        let dec = CrdtStore::decode(&s.encode()).unwrap();
+        assert_eq!(dec, s);
+        assert_eq!(dec.digest(), s.digest());
+    }
+}

@@ -1,0 +1,106 @@
+//! HKDF-SHA256 (RFC 5869) built on the `hmac` + `sha2` crates.
+
+use hmac::{Hmac, Mac};
+use sha2::Sha256;
+
+type HmacSha256 = Hmac<Sha256>;
+
+/// HMAC-SHA256 convenience.
+pub fn hmac_sha256(key: &[u8], data: &[u8]) -> [u8; 32] {
+    let mut mac = HmacSha256::new_from_slice(key).expect("hmac accepts any key length");
+    mac.update(data);
+    let out = mac.finalize().into_bytes();
+    let mut a = [0u8; 32];
+    a.copy_from_slice(&out);
+    a
+}
+
+/// HKDF-Extract.
+pub fn extract(salt: &[u8], ikm: &[u8]) -> [u8; 32] {
+    hmac_sha256(salt, ikm)
+}
+
+/// HKDF-Expand to `out.len()` bytes (≤ 255*32).
+pub fn expand(prk: &[u8; 32], info: &[u8], out: &mut [u8]) {
+    assert!(out.len() <= 255 * 32);
+    let mut t: Vec<u8> = Vec::new();
+    let mut pos = 0;
+    let mut counter = 1u8;
+    while pos < out.len() {
+        let mut mac = HmacSha256::new_from_slice(prk).unwrap();
+        mac.update(&t);
+        mac.update(info);
+        mac.update(&[counter]);
+        t = mac.finalize().into_bytes().to_vec();
+        let n = (out.len() - pos).min(32);
+        out[pos..pos + n].copy_from_slice(&t[..n]);
+        pos += n;
+        counter += 1;
+    }
+}
+
+/// Extract-then-expand in one call.
+pub fn hkdf(salt: &[u8], ikm: &[u8], info: &[u8], out: &mut [u8]) {
+    let prk = extract(salt, ikm);
+    expand(&prk, info, out);
+}
+
+/// Derive two 32-byte keys (the Noise HKDF2 pattern).
+pub fn hkdf2(chaining_key: &[u8; 32], ikm: &[u8]) -> ([u8; 32], [u8; 32]) {
+    let prk = extract(chaining_key, ikm);
+    let mut out = [0u8; 64];
+    expand(&prk, &[], &mut out);
+    let mut a = [0u8; 32];
+    let mut b = [0u8; 32];
+    a.copy_from_slice(&out[..32]);
+    b.copy_from_slice(&out[32..]);
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hex;
+
+    #[test]
+    fn rfc5869_case_1() {
+        let ikm = hex::decode("0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b").unwrap();
+        let salt = hex::decode("000102030405060708090a0b0c").unwrap();
+        let info = hex::decode("f0f1f2f3f4f5f6f7f8f9").unwrap();
+        let prk = extract(&salt, &ikm);
+        assert_eq!(
+            hex::encode(&prk),
+            "077709362c2e32df0ddc3f0dc47bba6390b6c73bb50f9c3122ec844ad7c2b3e5"
+        );
+        let mut okm = [0u8; 42];
+        expand(&prk, &info, &mut okm);
+        assert_eq!(
+            hex::encode(&okm),
+            "3cb25f25faacd57a90434f64d0362f2a2d2d0a90cf1a5a4c5db02d56ecc4c5bf34007208d5b887185865"
+        );
+    }
+
+    #[test]
+    fn rfc5869_case_3_empty() {
+        let ikm = [0x0b; 22];
+        let prk = extract(&[], &ikm);
+        let mut okm = [0u8; 42];
+        expand(&prk, &[], &mut okm);
+        assert_eq!(
+            hex::encode(&okm),
+            "8da4e775a563c18f715f802a063c5a31b8a11f5c5ee1879ec3454e5f3c738d2d9d201395faa4b61a96c8"
+        );
+    }
+
+    #[test]
+    fn hkdf2_splits() {
+        let ck = [7u8; 32];
+        let (a, b) = hkdf2(&ck, b"input");
+        assert_ne!(a, b);
+        let (a2, b2) = hkdf2(&ck, b"input");
+        assert_eq!(a, a2);
+        assert_eq!(b, b2);
+        let (a3, _) = hkdf2(&ck, b"other");
+        assert_ne!(a, a3);
+    }
+}

@@ -1,0 +1,25 @@
+//! Cryptographic substrate for the secure channel.
+//!
+//! The paper upgrades every connection with authenticated encryption ("Noise
+//! protocol or TLS 1.3, as provided by libp2p", §2). Neither a Noise nor a
+//! TLS implementation is available offline, so this module builds one from
+//! primitives:
+//!
+//! * [`x25519`] — RFC 7748 Curve25519 Diffie–Hellman (from scratch, 51-bit
+//!   limb field arithmetic, Montgomery ladder).
+//! * [`hkdf`] — HKDF-SHA256 (RFC 5869) over the `hmac`/`sha2` crates.
+//! * [`aead`] — AES-128-CTR + HMAC-SHA256 encrypt-then-MAC AEAD with a
+//!   Poly1305-style interface (nonce, associated data, 16-byte tag).
+//! * [`noise`] — a Noise-XX-shaped 3-message handshake providing mutual
+//!   static-key authentication and forward secrecy, producing a pair of
+//!   [`aead::CipherState`]s for transport encryption.
+//!
+//! Signatures for identity records use a hash-based scheme in
+//! [`crate::identity`]; channel authentication binds static x25519 keys.
+
+pub mod x25519;
+pub mod hkdf;
+pub mod aead;
+pub mod noise;
+
+pub use x25519::{PublicKey, StaticSecret};

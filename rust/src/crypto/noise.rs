@@ -1,0 +1,451 @@
+//! Noise-XX-shaped handshake providing mutual authentication and forward
+//! secrecy for Lattica connections.
+//!
+//! Pattern (initiator → responder):
+//!
+//! ```text
+//!   msg1: -> e
+//!   msg2: <- e, ee, s, es
+//!   msg3: -> s, se
+//! ```
+//!
+//! Static keys are x25519; each DH result is mixed into a chaining key with
+//! HKDF, and handshake payloads after the first DH are encrypted. Both sides
+//! finish with two [`CipherState`]s (one per direction) and learn the peer's
+//! authenticated static public key, which `swarm` binds to the `PeerId`.
+
+use super::aead::{self, CipherState};
+use super::hkdf;
+use super::x25519::{PublicKey, StaticSecret};
+use anyhow::{bail, Context, Result};
+use sha2::{Digest, Sha256};
+
+const PROTOCOL_NAME: &[u8] = b"Noise_XX_25519_AESCTRHMAC_SHA256/lattica";
+
+struct SymmetricState {
+    ck: [u8; 32],
+    h: [u8; 32],
+    key: Option<[u8; 32]>,
+    nonce: u64,
+}
+
+impl SymmetricState {
+    fn new() -> SymmetricState {
+        let mut hasher = Sha256::new();
+        hasher.update(PROTOCOL_NAME);
+        let h: [u8; 32] = hasher.finalize().into();
+        SymmetricState {
+            ck: h,
+            h,
+            key: None,
+            nonce: 0,
+        }
+    }
+
+    fn mix_hash(&mut self, data: &[u8]) {
+        let mut hasher = Sha256::new();
+        hasher.update(self.h);
+        hasher.update(data);
+        self.h = hasher.finalize().into();
+    }
+
+    fn mix_key(&mut self, ikm: &[u8]) {
+        let (ck, k) = hkdf::hkdf2(&self.ck, ikm);
+        self.ck = ck;
+        self.key = Some(k);
+        self.nonce = 0;
+    }
+
+    fn nonce_bytes(&mut self) -> [u8; 12] {
+        let mut n = [0u8; 12];
+        n[4..].copy_from_slice(&self.nonce.to_be_bytes());
+        self.nonce += 1;
+        n
+    }
+
+    fn encrypt_and_hash(&mut self, plaintext: &[u8]) -> Vec<u8> {
+        let out = match self.key {
+            None => plaintext.to_vec(),
+            Some(k) => {
+                let n = self.nonce_bytes();
+                aead::seal(&k, &n, &self.h, plaintext)
+            }
+        };
+        self.mix_hash(&out);
+        out
+    }
+
+    fn decrypt_and_hash(&mut self, data: &[u8]) -> Result<Vec<u8>> {
+        let out = match self.key {
+            None => data.to_vec(),
+            Some(k) => {
+                let n = self.nonce_bytes();
+                aead::open(&k, &n, &self.h, data).context("handshake decryption failed")?
+            }
+        };
+        self.mix_hash(data);
+        Ok(out)
+    }
+
+}
+
+/// Result of a completed handshake.
+pub struct Transport {
+    /// Cipher for messages we send.
+    pub tx: CipherState,
+    /// Cipher for messages we receive.
+    pub rx: CipherState,
+    /// Raw send key, for datagram transports that derive nonces from packet
+    /// numbers instead of the sequential CipherState counter.
+    pub tx_key: [u8; 32],
+    /// Raw receive key.
+    pub rx_key: [u8; 32],
+    /// The peer's authenticated static key.
+    pub remote_static: PublicKey,
+    /// Handshake channel-binding hash.
+    pub handshake_hash: [u8; 32],
+}
+
+enum Role {
+    Initiator,
+    Responder,
+}
+
+enum Step {
+    I1,     // initiator: send e
+    R1,     // responder: expect e
+    I2,     // initiator: expect e,ee,s,es
+    R2,     // responder: send e,ee,s,es
+    I3,     // initiator: send s,se
+    R3,     // responder: expect s,se
+    Done,
+}
+
+/// Driving state machine for the XX handshake. `write_message` /
+/// `read_message` alternate until [`HandshakeState::is_done`].
+pub struct HandshakeState {
+    role: Role,
+    step: Step,
+    ss: SymmetricState,
+    s: StaticSecret,
+    e: Option<StaticSecret>,
+    re: Option<PublicKey>,
+    rs: Option<PublicKey>,
+    rng_seed: [u8; 32],
+    eph_counter: u64,
+}
+
+impl HandshakeState {
+    pub fn initiator(static_key: StaticSecret, rng: &mut crate::util::Rng) -> HandshakeState {
+        let mut seed = [0u8; 32];
+        rng.fill_bytes(&mut seed);
+        let mut ss = SymmetricState::new();
+        ss.mix_hash(b"");
+        HandshakeState {
+            role: Role::Initiator,
+            step: Step::I1,
+            ss,
+            s: static_key,
+            e: None,
+            re: None,
+            rs: None,
+            rng_seed: seed,
+            eph_counter: 0,
+        }
+    }
+
+    pub fn responder(static_key: StaticSecret, rng: &mut crate::util::Rng) -> HandshakeState {
+        let mut seed = [0u8; 32];
+        rng.fill_bytes(&mut seed);
+        let mut ss = SymmetricState::new();
+        ss.mix_hash(b"");
+        HandshakeState {
+            role: Role::Responder,
+            step: Step::R1,
+            ss,
+            s: static_key,
+            e: None,
+            re: None,
+            rs: None,
+            rng_seed: seed,
+            eph_counter: 0,
+        }
+    }
+
+    fn gen_ephemeral(&mut self) -> StaticSecret {
+        // Deterministic per-handshake ephemeral derivation from the seeded RNG.
+        let mut ikm = Vec::with_capacity(40);
+        ikm.extend_from_slice(&self.rng_seed);
+        ikm.extend_from_slice(&self.eph_counter.to_be_bytes());
+        self.eph_counter += 1;
+        let mut out = [0u8; 32];
+        hkdf::hkdf(b"lattica-eph", &ikm, b"", &mut out);
+        StaticSecret::from_bytes(out)
+    }
+
+    pub fn is_done(&self) -> bool {
+        matches!(self.step, Step::Done)
+    }
+
+    /// True when it is our turn to produce a message.
+    pub fn is_my_turn(&self) -> bool {
+        matches!(
+            (&self.role, &self.step),
+            (Role::Initiator, Step::I1)
+                | (Role::Initiator, Step::I3)
+                | (Role::Responder, Step::R2)
+        )
+    }
+
+    /// Produce the next handshake message with optional payload.
+    pub fn write_message(&mut self, payload: &[u8]) -> Result<Vec<u8>> {
+        match (&self.role, &self.step) {
+            (Role::Initiator, Step::I1) => {
+                // -> e
+                let e = self.gen_ephemeral();
+                let epub = e.public_key();
+                self.e = Some(e);
+                let mut msg = epub.as_bytes().to_vec();
+                self.ss.mix_hash(epub.as_bytes());
+                msg.extend_from_slice(&self.ss.encrypt_and_hash(payload));
+                self.step = Step::I2;
+                Ok(msg)
+            }
+            (Role::Responder, Step::R2) => {
+                // <- e, ee, s, es
+                let e = self.gen_ephemeral();
+                let epub = e.public_key();
+                let re = self.re.context("no remote ephemeral")?;
+                let mut msg = epub.as_bytes().to_vec();
+                self.ss.mix_hash(epub.as_bytes());
+                self.ss.mix_key(&e.diffie_hellman(&re)); // ee
+                let s_pub = self.s.public_key();
+                msg.extend_from_slice(&self.ss.encrypt_and_hash(s_pub.as_bytes())); // s
+                self.ss.mix_key(&self.s.diffie_hellman(&re)); // es (responder side: s · re)
+                self.e = Some(e);
+                msg.extend_from_slice(&self.ss.encrypt_and_hash(payload));
+                self.step = Step::R3;
+                Ok(msg)
+            }
+            (Role::Initiator, Step::I3) => {
+                // -> s, se
+                let re = self.re.context("no remote ephemeral")?;
+                let s_pub = self.s.public_key();
+                let mut msg = self.ss.encrypt_and_hash(s_pub.as_bytes());
+                self.ss.mix_key(&self.s.diffie_hellman(&re)); // se
+                msg.extend_from_slice(&self.ss.encrypt_and_hash(payload));
+                self.step = Step::Done;
+                Ok(msg)
+            }
+            _ => bail!("write_message called out of turn"),
+        }
+    }
+
+    /// Consume the peer's handshake message, returning its payload.
+    pub fn read_message(&mut self, msg: &[u8]) -> Result<Vec<u8>> {
+        match (&self.role, &self.step) {
+            (Role::Responder, Step::R1) => {
+                // -> e
+                if msg.len() < 32 {
+                    bail!("handshake msg1 too short");
+                }
+                let re = PublicKey::from_bytes(&msg[..32])?;
+                self.ss.mix_hash(re.as_bytes());
+                self.re = Some(re);
+                let payload = self.ss.decrypt_and_hash(&msg[32..])?;
+                self.step = Step::R2;
+                Ok(payload)
+            }
+            (Role::Initiator, Step::I2) => {
+                // <- e, ee, s, es
+                if msg.len() < 32 + 32 + aead::TAG_LEN {
+                    bail!("handshake msg2 too short");
+                }
+                let re = PublicKey::from_bytes(&msg[..32])?;
+                self.ss.mix_hash(re.as_bytes());
+                self.re = Some(re);
+                let e = self.e.as_ref().context("no local ephemeral")?;
+                self.ss.mix_key(&e.diffie_hellman(&re)); // ee
+                let s_end = 32 + 32 + aead::TAG_LEN;
+                let rs_bytes = self.ss.decrypt_and_hash(&msg[32..s_end])?;
+                let rs = PublicKey::from_bytes(&rs_bytes)?;
+                self.ss.mix_key(&e.diffie_hellman(&rs)); // es (initiator side: e · rs)
+                self.rs = Some(rs);
+                let payload = self.ss.decrypt_and_hash(&msg[s_end..])?;
+                self.step = Step::I3;
+                Ok(payload)
+            }
+            (Role::Responder, Step::R3) => {
+                // -> s, se
+                if msg.len() < 32 + aead::TAG_LEN {
+                    bail!("handshake msg3 too short");
+                }
+                let s_end = 32 + aead::TAG_LEN;
+                let rs_bytes = self.ss.decrypt_and_hash(&msg[..s_end])?;
+                let rs = PublicKey::from_bytes(&rs_bytes)?;
+                let e = self.e.as_ref().context("no local ephemeral")?;
+                self.ss.mix_key(&e.diffie_hellman(&rs)); // se (responder side: e · rs)
+                self.rs = Some(rs);
+                let payload = self.ss.decrypt_and_hash(&msg[s_end..])?;
+                self.step = Step::Done;
+                Ok(payload)
+            }
+            _ => bail!("read_message called out of turn"),
+        }
+    }
+
+    /// Finalize into transport ciphers. Call only when [`is_done`].
+    pub fn into_transport(self) -> Result<Transport> {
+        if !self.is_done() {
+            bail!("handshake not complete");
+        }
+        let (k1, k2) = hkdf::hkdf2(&self.ss.ck, &[]);
+        let remote_static = self.rs.context("peer static key not learned")?;
+        let (tx_key, rx_key) = match self.role {
+            Role::Initiator => (k1, k2),
+            Role::Responder => (k2, k1),
+        };
+        Ok(Transport {
+            tx: CipherState::new(tx_key),
+            rx: CipherState::new(rx_key),
+            tx_key,
+            rx_key,
+            remote_static,
+            handshake_hash: self.ss.h,
+        })
+    }
+}
+
+/// Run a complete in-memory handshake (used by tests and by the simulated
+/// transport's connection upgrade, which exchanges the three messages over
+/// the wire).
+pub fn handshake_pair(
+    init_static: StaticSecret,
+    resp_static: StaticSecret,
+    rng: &mut crate::util::Rng,
+) -> Result<(Transport, Transport)> {
+    let mut i = HandshakeState::initiator(init_static, rng);
+    let mut r = HandshakeState::responder(resp_static, rng);
+    let m1 = i.write_message(b"")?;
+    r.read_message(&m1)?;
+    let m2 = r.write_message(b"")?;
+    i.read_message(&m2)?;
+    let m3 = i.write_message(b"")?;
+    r.read_message(&m3)?;
+    Ok((i.into_transport()?, r.into_transport()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn keys(rng: &mut Rng) -> (StaticSecret, StaticSecret) {
+        (StaticSecret::generate(rng), StaticSecret::generate(rng))
+    }
+
+    #[test]
+    fn full_handshake_and_transport() {
+        let mut rng = Rng::new(1);
+        let (si, sr) = keys(&mut rng);
+        let i_pub = si.public_key();
+        let r_pub = sr.public_key();
+        let (mut ti, mut tr) = handshake_pair(si, sr, &mut rng).unwrap();
+
+        // Static keys mutually learned.
+        assert_eq!(ti.remote_static, r_pub);
+        assert_eq!(tr.remote_static, i_pub);
+        // Channel binding agrees.
+        assert_eq!(ti.handshake_hash, tr.handshake_hash);
+
+        // Bidirectional transport.
+        let c = ti.tx.seal(b"", b"ping");
+        assert_eq!(tr.rx.open(b"", &c).unwrap(), b"ping");
+        let c = tr.tx.seal(b"", b"pong");
+        assert_eq!(ti.rx.open(b"", &c).unwrap(), b"pong");
+    }
+
+    #[test]
+    fn payloads_delivered() {
+        let mut rng = Rng::new(2);
+        let (si, sr) = keys(&mut rng);
+        let mut i = HandshakeState::initiator(si, &mut rng);
+        let mut r = HandshakeState::responder(sr, &mut rng);
+        let m1 = i.write_message(b"hello-from-i").unwrap();
+        assert_eq!(r.read_message(&m1).unwrap(), b"hello-from-i");
+        let m2 = r.write_message(b"hello-from-r").unwrap();
+        assert_eq!(i.read_message(&m2).unwrap(), b"hello-from-r");
+        let m3 = i.write_message(b"final").unwrap();
+        assert_eq!(r.read_message(&m3).unwrap(), b"final");
+        assert!(i.is_done() && r.is_done());
+    }
+
+    #[test]
+    fn msg2_payload_is_encrypted() {
+        let mut rng = Rng::new(3);
+        let (si, sr) = keys(&mut rng);
+        let mut i = HandshakeState::initiator(si, &mut rng);
+        let mut r = HandshakeState::responder(sr, &mut rng);
+        let m1 = i.write_message(b"").unwrap();
+        r.read_message(&m1).unwrap();
+        let secret = b"secret-payload-xyz";
+        let m2 = r.write_message(secret).unwrap();
+        // Encrypted: plaintext must not appear in the message.
+        assert!(!m2.windows(secret.len()).any(|w| w == secret));
+    }
+
+    #[test]
+    fn tampered_handshake_fails() {
+        let mut rng = Rng::new(4);
+        let (si, sr) = keys(&mut rng);
+        let mut i = HandshakeState::initiator(si, &mut rng);
+        let mut r = HandshakeState::responder(sr, &mut rng);
+        let m1 = i.write_message(b"").unwrap();
+        r.read_message(&m1).unwrap();
+        let mut m2 = r.write_message(b"").unwrap();
+        let n = m2.len();
+        m2[n - 1] ^= 0xff;
+        assert!(i.read_message(&m2).is_err());
+    }
+
+    #[test]
+    fn mitm_key_substitution_detected() {
+        // An attacker replacing the responder's ephemeral breaks the es DH
+        // and the static-key ciphertext fails to authenticate.
+        let mut rng = Rng::new(5);
+        let (si, sr) = keys(&mut rng);
+        let mut i = HandshakeState::initiator(si, &mut rng);
+        let mut r = HandshakeState::responder(sr, &mut rng);
+        let m1 = i.write_message(b"").unwrap();
+        r.read_message(&m1).unwrap();
+        let mut m2 = r.write_message(b"").unwrap();
+        // Replace the ephemeral (first 32 bytes) with an attacker key.
+        let attacker = StaticSecret::generate(&mut rng);
+        m2[..32].copy_from_slice(attacker.public_key().as_bytes());
+        assert!(i.read_message(&m2).is_err());
+    }
+
+    #[test]
+    fn out_of_turn_errors() {
+        let mut rng = Rng::new(6);
+        let (si, sr) = keys(&mut rng);
+        let mut i = HandshakeState::initiator(si, &mut rng);
+        let mut r = HandshakeState::responder(sr, &mut rng);
+        assert!(r.write_message(b"").is_err()); // responder can't speak first
+        assert!(i.read_message(&[0u8; 64]).is_err()); // initiator reads second
+        let _ = i.write_message(b"").unwrap();
+        assert!(i.write_message(b"").is_err()); // initiator must wait
+    }
+
+    #[test]
+    fn sessions_have_distinct_keys() {
+        let mut rng = Rng::new(7);
+        let (si, sr) = keys(&mut rng);
+        let (mut t1, _) = handshake_pair(si.clone(), sr.clone(), &mut rng).unwrap();
+        let (mut t2, _) = handshake_pair(si, sr, &mut rng).unwrap();
+        // Same plaintext encrypts differently across sessions (fresh ephemerals).
+        let c1 = t1.tx.seal(b"", b"x");
+        let c2 = t2.tx.seal(b"", b"x");
+        assert_ne!(c1, c2);
+    }
+}

@@ -1,0 +1,42 @@
+//! # Lattica
+//!
+//! A decentralized cross-NAT communication framework for scalable AI
+//! inference and training (reproduction of the Gradient CS.DC 2025 paper).
+//!
+//! Lattica composes three planes:
+//!
+//! 1. **Connectivity** — a libp2p-style swarm over simulated transports with
+//!    multi-protocol NAT traversal (AutoNAT, circuit relay, DCUtR hole
+//!    punching, rendezvous) and Noise-style authenticated encryption.
+//! 2. **Data** — content-addressed blocks (CIDs), Bitswap block exchange,
+//!    a Kademlia DHT for provider discovery, and a CRDT store for
+//!    eventually-consistent verifiable state.
+//! 3. **Compute** — a dual-plane RPC protocol (unary control plane +
+//!    credit-backpressured streaming data plane) carrying sharded inference
+//!    and collaborative training of an AOT-compiled JAX/Pallas transformer
+//!    executed through PJRT (`runtime`).
+//!
+//! The network is a deterministic discrete-event simulation (`netsim`) so
+//! NAT semantics and WAN conditions are exactly reproducible; see
+//! DESIGN.md §3 for the substitution rationale. Start with
+//! [`node::LatticaNode`] and the `examples/` directory.
+
+pub mod util;
+pub mod wire;
+pub mod crypto;
+pub mod identity;
+pub mod multiaddr;
+pub mod netsim;
+pub mod transport;
+pub mod swarm;
+pub mod runtime;
+pub mod content;
+pub mod crdt;
+pub mod protocols;
+pub mod rpc;
+pub mod metrics;
+pub mod node;
+pub mod model;
+pub mod shard;
+pub mod trainer;
+pub mod scenarios;

@@ -1,0 +1,119 @@
+//! `lattica` CLI — leader entrypoint and launcher.
+//!
+//! The library is driven through examples and benches (see README); this
+//! binary provides environment self-checks and a config-file launcher for
+//! scripted deployments on the simulator.
+
+use anyhow::Result;
+use lattica::netsim::topology::{LinkProfile, TopologyBuilder};
+use lattica::netsim::{World, SECOND};
+use lattica::node::config::{load_config, NodeConfig};
+use lattica::node::{run_until, LatticaNode};
+use lattica::util::cli::Args;
+
+const USAGE: &str = "lattica <subcommand> [options]
+
+subcommands:
+  version                 print version info
+  selftest                PJRT + artifacts smoke test (run `make artifacts` first)
+  launch --config <file>  boot a deployment described by a TOML-subset file
+                          ([node.<name>] sections; see node/config.rs) and
+                          verify full-mesh connectivity
+  demo                    pointer to the runnable examples
+";
+
+fn main() -> Result<()> {
+    lattica::util::logging::init();
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("version") | None => {
+            println!("lattica {} (reproduction build)", env!("CARGO_PKG_VERSION"));
+            if args.subcommand().is_none() {
+                println!("{USAGE}");
+            }
+            Ok(())
+        }
+        Some("selftest") => {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            println!(
+                "PJRT ok: platform={} devices={}",
+                client.platform_name(),
+                client.device_count()
+            );
+            match lattica::runtime::Engine::load("artifacts") {
+                Ok(mut e) => {
+                    let cfg = e.manifest.config.clone();
+                    println!(
+                        "artifacts ok: {} entries, model d={} layers={}",
+                        e.manifest.artifacts.len(),
+                        cfg.d_model,
+                        cfg.n_layer
+                    );
+                    let params = e.manifest.load_init_params()?;
+                    let tok = lattica::runtime::Tensor::from_i32(
+                        &[1, cfg.seq_len],
+                        &vec![1; cfg.seq_len],
+                    );
+                    let out = e.run("embed", &[tok, params[0].clone(), params[1].clone()])?;
+                    println!("embed executed: output {:?}", out[0].shape);
+                }
+                Err(e) => println!("artifacts not available ({e}); run `make artifacts`"),
+            }
+            Ok(())
+        }
+        Some("launch") => {
+            let path = args
+                .opt("config")
+                .ok_or_else(|| anyhow::anyhow!("--config <file> required"))?;
+            let table = load_config(path)?;
+            // Collect node sections: keys like "node.<name>.<field>".
+            let mut names: Vec<String> = table
+                .keys()
+                .filter_map(|k| k.strip_prefix("node."))
+                .filter_map(|k| k.split('.').next().map(|s| s.to_string()))
+                .collect();
+            names.sort();
+            names.dedup();
+            anyhow::ensure!(!names.is_empty(), "no [node.<name>] sections in {path}");
+            let mut topo = TopologyBuilder::paper_regions();
+            let hosts: Vec<u32> = names
+                .iter()
+                .map(|_| topo.public_host(0, LinkProfile::DATACENTER))
+                .collect();
+            let mut world = World::new(topo.build(1));
+            let nodes: Vec<_> = names
+                .iter()
+                .zip(&hosts)
+                .map(|(name, &h)| {
+                    let cfg = NodeConfig::from_table(&table, &format!("node.{name}"));
+                    println!("spawning {name}: seed={} relay={}", cfg.seed, cfg.relay_enabled);
+                    LatticaNode::spawn(&mut world, h, cfg)
+                })
+                .collect();
+            // Mesh them.
+            let ma0 = nodes[0].borrow().listen_addr();
+            for n in nodes.iter().skip(1) {
+                n.borrow_mut().dial(&mut world.net, &ma0)?;
+            }
+            let ok = run_until(&mut world, 10 * SECOND, || {
+                let p0 = nodes[0].borrow().peer_id();
+                nodes.iter().skip(1).all(|n| n.borrow().swarm.is_connected(&p0))
+            });
+            anyhow::ensure!(ok, "deployment failed to connect");
+            println!("deployment up: {} nodes connected", nodes.len());
+            Ok(())
+        }
+        Some("demo") => {
+            println!("runnable scenarios:");
+            println!("  cargo run --release --example quickstart");
+            println!("  cargo run --release --example collaborative_rl   (end-to-end driver)");
+            println!("  cargo run --release --example sharded_inference");
+            println!("  cargo run --release --example edge_intelligence");
+            println!("  cargo run --release --example federated_learning");
+            Ok(())
+        }
+        Some(other) => {
+            anyhow::bail!("unknown subcommand {other:?}\nusage: {USAGE}");
+        }
+    }
+}

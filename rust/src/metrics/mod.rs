@@ -1,0 +1,142 @@
+//! Lightweight metrics: counters, histograms and rate meters used by the
+//! bench harness to print the paper's tables.
+
+use crate::netsim::Time;
+
+/// Log-bucketed latency histogram (ns), p50/p95/p99 extraction.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Sorted samples (we keep raw values; volumes here are modest).
+    samples: Vec<u64>,
+    sorted: bool,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            samples: Vec::new(),
+            sorted: true,
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_unstable();
+            self.sorted = true;
+        }
+    }
+
+    pub fn percentile(&mut self, p: f64) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        self.ensure_sorted();
+        let idx = ((self.samples.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        self.samples[idx]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<u64>() as f64 / self.samples.len() as f64
+    }
+
+    pub fn max(&mut self) -> u64 {
+        self.ensure_sorted();
+        *self.samples.last().unwrap_or(&0)
+    }
+
+    pub fn summary(&mut self) -> String {
+        format!(
+            "n={} mean={} p50={} p95={} p99={} max={}",
+            self.len(),
+            crate::util::timefmt::fmt_ns(self.mean() as u64),
+            crate::util::timefmt::fmt_ns(self.percentile(50.0)),
+            crate::util::timefmt::fmt_ns(self.percentile(95.0)),
+            crate::util::timefmt::fmt_ns(self.percentile(99.0)),
+            crate::util::timefmt::fmt_ns(self.max()),
+        )
+    }
+}
+
+/// Completed-ops counter over a virtual-time window → QPS.
+#[derive(Clone, Debug, Default)]
+pub struct QpsMeter {
+    pub completed: u64,
+    pub started_at: Time,
+    pub finished_at: Time,
+}
+
+impl QpsMeter {
+    pub fn start(now: Time) -> QpsMeter {
+        QpsMeter {
+            completed: 0,
+            started_at: now,
+            finished_at: now,
+        }
+    }
+
+    pub fn record(&mut self, now: Time) {
+        self.completed += 1;
+        self.finished_at = now;
+    }
+
+    /// Queries per (virtual) second.
+    pub fn qps(&self) -> f64 {
+        let dt = self.finished_at.saturating_sub(self.started_at);
+        if dt == 0 {
+            return 0.0;
+        }
+        self.completed as f64 * 1e9 / dt as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::new();
+        for v in (1..=100).rev() {
+            h.record(v);
+        }
+        assert_eq!(h.len(), 100);
+        let p50 = h.percentile(50.0);
+        assert!((50..=51).contains(&p50), "p50={p50}");
+        let p99 = h.percentile(99.0);
+        assert!((99..=100).contains(&p99), "p99={p99}");
+        assert_eq!(h.max(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn qps_meter() {
+        let mut m = QpsMeter::start(0);
+        for i in 1..=1000u64 {
+            m.record(i * 1_000_000); // one per ms
+        }
+        let qps = m.qps();
+        assert!((qps - 1000.0).abs() < 1.0, "qps={qps}");
+    }
+}

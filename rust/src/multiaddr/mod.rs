@@ -1,0 +1,226 @@
+//! Multiaddresses for the simulated network.
+//!
+//! A simplified multiaddr covering what the simulator can express:
+//!
+//! ```text
+//! /sim/<host>/udp/<port>                  — raw datagram endpoint
+//! /sim/<host>/udp/<port>/tcpl             — TCP-like reliable transport
+//! /sim/<host>/udp/<port>/quicl            — QUIC-like transport
+//! /sim/<host>/udp/<port>/quicl/p2p/<id>   — with an expected peer
+//! /sim/<host>/udp/<port>/quicl/p2p/<relay>/p2p-circuit/p2p/<target>
+//! ```
+//!
+//! `<host>` is the simulator host id (u32), mirroring an IP; NATs translate
+//! `(host, port)` pairs exactly like IPv4 NATs translate `ip:port`.
+
+use crate::identity::PeerId;
+use crate::util::hex;
+use anyhow::{bail, Context, Result};
+use std::fmt;
+
+/// Transport selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Proto {
+    /// TCP-like reliable byte stream (upgraded with Noise + mux).
+    TcpLike,
+    /// QUIC-like multiplexed transport (integrated crypto).
+    QuicLike,
+}
+
+impl Proto {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Proto::TcpLike => "tcpl",
+            Proto::QuicLike => "quicl",
+        }
+    }
+}
+
+/// A network-layer endpoint in the simulator: like `ip:port`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SimAddr {
+    pub host: u32,
+    pub port: u16,
+}
+
+impl SimAddr {
+    pub fn new(host: u32, port: u16) -> SimAddr {
+        SimAddr { host, port }
+    }
+}
+
+impl fmt::Debug for SimAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.host, self.port)
+    }
+}
+
+impl fmt::Display for SimAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.host, self.port)
+    }
+}
+
+/// A full multiaddr: endpoint + transport + optional peer + optional relay.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct Multiaddr {
+    pub addr: SimAddr,
+    pub proto: Proto,
+    /// Expected peer at this address.
+    pub peer: Option<PeerId>,
+    /// If set, this is a circuit address: dial `addr` (the relay), then ask
+    /// for a circuit to `target`.
+    pub circuit_target: Option<PeerId>,
+}
+
+impl Multiaddr {
+    pub fn direct(addr: SimAddr, proto: Proto) -> Multiaddr {
+        Multiaddr {
+            addr,
+            proto,
+            peer: None,
+            circuit_target: None,
+        }
+    }
+
+    pub fn with_peer(mut self, peer: PeerId) -> Multiaddr {
+        self.peer = Some(peer);
+        self
+    }
+
+    /// Circuit address via `relay_addr` (which must carry the relay's peer id)
+    /// to `target`.
+    pub fn circuit(relay: Multiaddr, target: PeerId) -> Multiaddr {
+        Multiaddr {
+            addr: relay.addr,
+            proto: relay.proto,
+            peer: relay.peer,
+            circuit_target: Some(target),
+        }
+    }
+
+    pub fn is_circuit(&self) -> bool {
+        self.circuit_target.is_some()
+    }
+
+    /// Parse the textual form.
+    pub fn parse(s: &str) -> Result<Multiaddr> {
+        let parts: Vec<&str> = s.split('/').filter(|p| !p.is_empty()).collect();
+        let mut iter = parts.into_iter();
+        let mut next = |what: &str| -> Result<&str> {
+            iter.next().with_context(|| format!("missing {what}"))
+        };
+        if next("sim")? != "sim" {
+            bail!("multiaddr must start with /sim");
+        }
+        let host: u32 = next("host")?.parse().context("bad host")?;
+        if next("udp")? != "udp" {
+            bail!("expected /udp component");
+        }
+        let port: u16 = next("port")?.parse().context("bad port")?;
+        let mut ma = Multiaddr::direct(SimAddr::new(host, port), Proto::QuicLike);
+        let mut have_proto = false;
+        while let Ok(component) = next("component") {
+            match component {
+                "tcpl" => {
+                    ma.proto = Proto::TcpLike;
+                    have_proto = true;
+                }
+                "quicl" => {
+                    ma.proto = Proto::QuicLike;
+                    have_proto = true;
+                }
+                "p2p" => {
+                    let id_hex = next("peer id")?;
+                    let digest = hex::decode(id_hex).context("bad peer id hex")?;
+                    anyhow::ensure!(digest.len() == 32, "peer id must be 32 bytes");
+                    let mut d = [0u8; 32];
+                    d.copy_from_slice(&digest);
+                    let pid = PeerId(d);
+                    if ma.peer.is_none() {
+                        ma.peer = Some(pid);
+                    } else if ma.circuit_target.is_none() {
+                        bail!("peer after peer requires /p2p-circuit");
+                    } else {
+                        ma.circuit_target = Some(pid);
+                    }
+                }
+                "p2p-circuit" => {
+                    anyhow::ensure!(ma.peer.is_some(), "circuit requires relay peer id");
+                    // Mark pending target; replaced by following /p2p.
+                    ma.circuit_target = Some(PeerId([0u8; 32]));
+                }
+                other => bail!("unknown multiaddr component {other:?}"),
+            }
+        }
+        let _ = have_proto;
+        if ma.circuit_target == Some(PeerId([0u8; 32])) {
+            bail!("p2p-circuit missing target peer");
+        }
+        Ok(ma)
+    }
+}
+
+impl fmt::Display for Multiaddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "/sim/{}/udp/{}/{}",
+            self.addr.host,
+            self.addr.port,
+            self.proto.tag()
+        )?;
+        if let Some(p) = &self.peer {
+            write!(f, "/p2p/{}", hex::encode(&p.0))?;
+        }
+        if let Some(t) = &self.circuit_target {
+            write!(f, "/p2p-circuit/p2p/{}", hex::encode(&t.0))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::identity::Keypair;
+
+    #[test]
+    fn parse_direct() {
+        let ma = Multiaddr::parse("/sim/7/udp/4001/quicl").unwrap();
+        assert_eq!(ma.addr, SimAddr::new(7, 4001));
+        assert_eq!(ma.proto, Proto::QuicLike);
+        assert!(ma.peer.is_none());
+    }
+
+    #[test]
+    fn roundtrip_with_peer() {
+        let pid = Keypair::from_seed(3).peer_id();
+        let ma = Multiaddr::direct(SimAddr::new(1, 9), Proto::TcpLike).with_peer(pid);
+        let s = ma.to_string();
+        assert_eq!(Multiaddr::parse(&s).unwrap(), ma);
+    }
+
+    #[test]
+    fn roundtrip_circuit() {
+        let relay_id = Keypair::from_seed(1).peer_id();
+        let target_id = Keypair::from_seed(2).peer_id();
+        let relay = Multiaddr::direct(SimAddr::new(5, 4001), Proto::QuicLike).with_peer(relay_id);
+        let circ = Multiaddr::circuit(relay, target_id);
+        assert!(circ.is_circuit());
+        let s = circ.to_string();
+        let back = Multiaddr::parse(&s).unwrap();
+        assert_eq!(back, circ);
+        assert_eq!(back.circuit_target, Some(target_id));
+    }
+
+    #[test]
+    fn bad_addrs_rejected() {
+        assert!(Multiaddr::parse("/ip4/1.2.3.4/tcp/80").is_err());
+        assert!(Multiaddr::parse("/sim/x/udp/1").is_err());
+        assert!(Multiaddr::parse("/sim/1/udp/99999").is_err());
+        assert!(Multiaddr::parse("/sim/1/udp/1/bogus").is_err());
+        assert!(Multiaddr::parse("/sim/1/udp/1/quicl/p2p/zz").is_err());
+        assert!(Multiaddr::parse("/sim/1/udp/1/quicl/p2p-circuit").is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! The event queue: a binary heap ordered by (time, sequence) so ties are
+//! broken deterministically in insertion order.
+
+use super::Time;
+use std::collections::BinaryHeap;
+
+/// Payload of a scheduled event.
+#[derive(Debug)]
+pub enum EventKind {
+    /// Deliver a datagram to a bound endpoint.
+    Deliver {
+        dst_endpoint: usize,
+        /// Source address as seen by the receiver (post-NAT).
+        from: crate::multiaddr::SimAddr,
+        /// Destination address it was sent to (the receiver's view).
+        to: crate::multiaddr::SimAddr,
+        payload: Vec<u8>,
+    },
+    /// Fire a timer registered by an endpoint.
+    Timer { endpoint: usize, token: u64 },
+    /// External stop marker used by `World::run_until`.
+    Stop,
+}
+
+struct Entry {
+    at: Time,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reverse ordering: BinaryHeap is a max-heap, we want earliest first.
+        (other.at, other.seq).cmp(&(self.at, self.seq))
+    }
+}
+
+/// Min-heap of timed events with deterministic tie-breaking.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    pub fn push(&mut self, at: Time, kind: EventKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { at, seq, kind });
+    }
+
+    pub fn pop(&mut self) -> Option<(Time, EventKind)> {
+        self.heap.pop().map(|e| (e.at, e.kind))
+    }
+
+    pub fn peek_time(&self) -> Option<Time> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordered_by_time_then_seq() {
+        let mut q = EventQueue::new();
+        q.push(10, EventKind::Timer { endpoint: 0, token: 1 });
+        q.push(5, EventKind::Timer { endpoint: 0, token: 2 });
+        q.push(10, EventKind::Timer { endpoint: 0, token: 3 });
+        let (t1, k1) = q.pop().unwrap();
+        assert_eq!(t1, 5);
+        assert!(matches!(k1, EventKind::Timer { token: 2, .. }));
+        let (t2, k2) = q.pop().unwrap();
+        assert_eq!(t2, 10);
+        assert!(matches!(k2, EventKind::Timer { token: 1, .. }));
+        let (_, k3) = q.pop().unwrap();
+        assert!(matches!(k3, EventKind::Timer { token: 3, .. }));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut q = EventQueue::new();
+        q.push(100, EventKind::Stop);
+        q.push(50, EventKind::Stop);
+        assert_eq!(q.pop().unwrap().0, 50);
+        q.push(25, EventKind::Stop);
+        q.push(75, EventKind::Stop);
+        assert_eq!(q.pop().unwrap().0, 25);
+        assert_eq!(q.pop().unwrap().0, 75);
+        assert_eq!(q.pop().unwrap().0, 100);
+        assert!(q.is_empty());
+    }
+}

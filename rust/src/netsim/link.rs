@@ -1,0 +1,159 @@
+//! Link shaping: per-host uplink/downlink serialization, propagation delay
+//! and random loss.
+//!
+//! The model is the standard store-and-forward pipeline:
+//!
+//! ```text
+//! depart = max(now, uplink_free) + size/up_rate
+//! arrive = depart + propagation(jittered) + size/down_rate (queued)
+//! ```
+//!
+//! Both directions keep a `next_free` watermark so sustained transfers are
+//! bandwidth-limited (this is what caps 256 KB RPC throughput in Table 1),
+//! and a bounded queue ahead-of-line so overload turns into drops
+//! (drop-tail) rather than unbounded queueing.
+
+use super::Time;
+use crate::util::Rng;
+
+/// Per-direction shaping state.
+#[derive(Clone, Debug)]
+pub struct Shaper {
+    /// Bytes per second.
+    pub rate_bps: u64,
+    /// Time the link becomes free for the next packet.
+    next_free: Time,
+    /// Maximum queueing ahead (in ns) before drop-tail.
+    pub max_queue_ns: Time,
+    /// Fixed per-packet cost expressed in equivalent bytes (models
+    /// per-packet CPU/syscall overhead on loopback paths).
+    pub per_pkt_overhead: usize,
+}
+
+impl Shaper {
+    pub fn new(rate_bytes_per_sec: u64) -> Shaper {
+        Shaper {
+            rate_bps: rate_bytes_per_sec,
+            next_free: 0,
+            // Default ~50 ms of queue — a typical shallow router buffer.
+            max_queue_ns: 50 * super::MILLI,
+            per_pkt_overhead: 0,
+        }
+    }
+
+    /// Serialization delay for `size` bytes.
+    #[inline]
+    pub fn tx_time(&self, size: usize) -> Time {
+        if self.rate_bps == 0 {
+            return 0; // unlimited
+        }
+        ((size + self.per_pkt_overhead) as u128 * super::SECOND as u128
+            / self.rate_bps as u128) as Time
+    }
+
+    /// Try to enqueue a packet at `now`; returns the departure time or None
+    /// if the queue is full (packet dropped).
+    pub fn enqueue(&mut self, now: Time, size: usize) -> Option<Time> {
+        let start = self.next_free.max(now);
+        if start.saturating_sub(now) > self.max_queue_ns {
+            return None; // drop-tail
+        }
+        let depart = start + self.tx_time(size);
+        self.next_free = depart;
+        Some(depart)
+    }
+
+    /// Current queue depth in ns (diagnostics, backpressure signals).
+    pub fn queue_depth(&self, now: Time) -> Time {
+        self.next_free.saturating_sub(now)
+    }
+}
+
+/// Propagation + loss characteristics between two regions.
+#[derive(Clone, Copy, Debug)]
+pub struct PathProfile {
+    /// One-way propagation delay.
+    pub delay: Time,
+    /// Random jitter bound (uniform in [0, jitter)).
+    pub jitter: Time,
+    /// Packet loss probability in [0,1).
+    pub loss: f64,
+}
+
+impl PathProfile {
+    pub fn new(delay: Time, jitter: Time, loss: f64) -> PathProfile {
+        PathProfile { delay, jitter, loss }
+    }
+
+    /// Sample the one-way latency; None if the packet is lost.
+    pub fn sample(&self, rng: &mut Rng) -> Option<Time> {
+        if self.loss > 0.0 && rng.gen_bool(self.loss) {
+            return None;
+        }
+        let j = if self.jitter > 0 {
+            rng.gen_range(self.jitter)
+        } else {
+            0
+        };
+        Some(self.delay + j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{MILLI, SECOND};
+
+    #[test]
+    fn tx_time_scales_with_size() {
+        let s = Shaper::new(1_000_000); // 1 MB/s
+        assert_eq!(s.tx_time(1_000_000), SECOND);
+        assert_eq!(s.tx_time(1000), SECOND / 1000);
+        assert_eq!(Shaper::new(0).tx_time(1 << 20), 0);
+    }
+
+    #[test]
+    fn serialization_backs_up() {
+        let mut s = Shaper::new(1_000_000); // 1 MB/s → 1 ms per KB
+        let d1 = s.enqueue(0, 1000).unwrap();
+        let d2 = s.enqueue(0, 1000).unwrap();
+        assert_eq!(d1, MILLI);
+        assert_eq!(d2, 2 * MILLI);
+        // After the link drains, no queueing.
+        let d3 = s.enqueue(10 * MILLI, 1000).unwrap();
+        assert_eq!(d3, 11 * MILLI);
+    }
+
+    #[test]
+    fn drop_tail_when_queue_full() {
+        let mut s = Shaper::new(1_000_000);
+        s.max_queue_ns = 5 * MILLI;
+        // Fill > 5 ms of queue with 1 ms packets.
+        let mut drops = 0;
+        for _ in 0..10 {
+            if s.enqueue(0, 1000).is_none() {
+                drops += 1;
+            }
+        }
+        assert!(drops >= 4, "expected drop-tail, got {drops} drops");
+    }
+
+    #[test]
+    fn path_loss_rate() {
+        let p = PathProfile::new(MILLI, 0, 0.25);
+        let mut rng = Rng::new(9);
+        let lost = (0..100_000).filter(|_| p.sample(&mut rng).is_none()).count();
+        let rate = lost as f64 / 100_000.0;
+        assert!((rate - 0.25).abs() < 0.01, "loss rate {rate}");
+    }
+
+    #[test]
+    fn jitter_within_bounds() {
+        let p = PathProfile::new(10 * MILLI, 2 * MILLI, 0.0);
+        let mut rng = Rng::new(10);
+        for _ in 0..1000 {
+            let d = p.sample(&mut rng).unwrap();
+            assert!(d >= 10 * MILLI && d < 12 * MILLI);
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! Deterministic discrete-event network simulator.
+//!
+//! This is the substrate substituting for the real Internet (DESIGN.md §3):
+//! hosts exchange UDP-like datagrams through links with latency, bandwidth
+//! and loss, and through NAT boxes implementing the four classical RFC 4787
+//! behaviours. All stack layers above (transport, swarm, protocols, RPC) are
+//! event-driven state machines scheduled by [`Net`]'s virtual clock, which
+//! makes every experiment exactly reproducible from a seed.
+//!
+//! Key types:
+//! * [`Net`] — event queue, virtual clock, topology, NAT state. Handlers
+//!   receive `&mut Net` to send datagrams and arm timers.
+//! * [`World`] — owns the endpoints (node state machines) and drives the
+//!   dispatch loop.
+//! * [`nat::NatBox`] — per-NAT translation and filtering state.
+//! * [`topology::TopologyBuilder`] — declarative construction of regions,
+//!   public hosts, NATed hosts and link profiles.
+
+pub mod event;
+pub mod nat;
+pub mod link;
+pub mod topology;
+pub mod net;
+pub mod world;
+
+pub use net::{EndpointId, Net, Timer};
+pub use topology::{HostCfg, LinkProfile, Region, TopologyBuilder};
+pub use world::{Endpoint, World};
+
+/// Virtual time in nanoseconds since simulation start.
+pub type Time = u64;
+
+pub const MICRO: Time = 1_000;
+pub const MILLI: Time = 1_000_000;
+pub const SECOND: Time = 1_000_000_000;

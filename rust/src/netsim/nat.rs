@@ -1,0 +1,357 @@
+//! NAT boxes: translation + filtering per the RFC 4787 taxonomy.
+//!
+//! Each NAT owns a public host address and translates between the private
+//! endpoints behind it and the outside world. Hole-punch outcomes emerge
+//! from these semantics (see the pairing matrix test at the bottom, and the
+//! `nat_traversal` bench reproducing the paper's ~70 % direct success rate).
+
+use super::Time;
+use crate::multiaddr::SimAddr;
+use std::collections::HashMap;
+
+/// Classical NAT behaviour classes.
+///
+/// Mapping = how external ports are allocated for internal endpoints.
+/// Filtering = which inbound packets are accepted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NatType {
+    /// Endpoint-independent mapping + endpoint-independent filtering.
+    FullCone,
+    /// Endpoint-independent mapping + address-dependent filtering.
+    RestrictedCone,
+    /// Endpoint-independent mapping + address-and-port-dependent filtering.
+    PortRestrictedCone,
+    /// Address-and-port-dependent mapping (fresh public port per remote
+    /// endpoint) + address-and-port-dependent filtering. Hole punching
+    /// across two of these fails (unpredictable ports).
+    Symmetric,
+}
+
+impl NatType {
+    pub fn label(&self) -> &'static str {
+        match self {
+            NatType::FullCone => "full-cone",
+            NatType::RestrictedCone => "restricted-cone",
+            NatType::PortRestrictedCone => "port-restricted",
+            NatType::Symmetric => "symmetric",
+        }
+    }
+
+    /// Whether UDP hole punching between two NAT types succeeds, given both
+    /// sides know each other's observed (public) endpoints and simultaneously
+    /// send. Follows Ford et al. (2005) §4: endpoint-independent mapping on
+    /// at least one path combined with compatible filtering is required.
+    pub fn punch_compatible(a: NatType, b: NatType) -> bool {
+        use NatType::*;
+        match (a, b) {
+            // Symmetric ↔ symmetric and symmetric ↔ port-restricted fail:
+            // the symmetric side's punch allocates a fresh unpredictable
+            // port, so the peer's packets target a stale mapping.
+            (Symmetric, Symmetric) => false,
+            (Symmetric, PortRestrictedCone) | (PortRestrictedCone, Symmetric) => false,
+            // Everything else succeeds with coordinated simultaneous open.
+            _ => true,
+        }
+    }
+}
+
+/// Lifetime of an idle UDP mapping (conservative consumer-router default).
+pub const MAPPING_TTL: Time = 30 * super::SECOND;
+
+#[derive(Clone, Debug)]
+struct Mapping {
+    public_port: u16,
+    /// Remote endpoints this internal endpoint has sent to (for filtering).
+    peers: HashMap<SimAddr, Time>,
+    last_used: Time,
+}
+
+/// A NAT device translating for one or more private hosts.
+pub struct NatBox {
+    pub nat_type: NatType,
+    pub public_host: u32,
+    /// Endpoint-independent mappings: internal (host,port) → mapping.
+    eim: HashMap<SimAddr, Mapping>,
+    /// Endpoint-dependent mappings (symmetric): (internal, remote) → mapping.
+    edm: HashMap<(SimAddr, SimAddr), Mapping>,
+    /// Reverse: public port → internal endpoint (+ remote for symmetric).
+    reverse: HashMap<u16, (SimAddr, Option<SimAddr>)>,
+    next_port: u16,
+    /// Whether hairpin (internal→internal via public addr) is supported.
+    pub hairpin: bool,
+}
+
+impl NatBox {
+    pub fn new(nat_type: NatType, public_host: u32, port_base: u16) -> NatBox {
+        NatBox {
+            nat_type,
+            public_host,
+            eim: HashMap::new(),
+            edm: HashMap::new(),
+            reverse: HashMap::new(),
+            next_port: port_base,
+            hairpin: false,
+        }
+    }
+
+    fn alloc_port(&mut self, rng: &mut crate::util::Rng) -> u16 {
+        // Symmetric NATs allocate unpredictably; cone NATs sequentially.
+        match self.nat_type {
+            NatType::Symmetric => loop {
+                let p = 10_000 + (rng.gen_range(50_000) as u16);
+                if !self.reverse.contains_key(&p) {
+                    return p;
+                }
+            },
+            _ => loop {
+                let p = self.next_port;
+                self.next_port = self.next_port.wrapping_add(1).max(1024);
+                if !self.reverse.contains_key(&p) {
+                    return p;
+                }
+            },
+        }
+    }
+
+    /// Translate an outbound packet. Returns the public source address.
+    pub fn translate_outbound(
+        &mut self,
+        now: Time,
+        internal: SimAddr,
+        remote: SimAddr,
+        rng: &mut crate::util::Rng,
+    ) -> SimAddr {
+        self.expire(now);
+        let public_host = self.public_host;
+        match self.nat_type {
+            NatType::Symmetric => {
+                let key = (internal, remote);
+                if let Some(m) = self.edm.get_mut(&key) {
+                    m.last_used = now;
+                    m.peers.insert(remote, now);
+                    return SimAddr::new(public_host, m.public_port);
+                }
+                let port = self.alloc_port(rng);
+                let mut peers = HashMap::new();
+                peers.insert(remote, now);
+                self.edm.insert(
+                    key,
+                    Mapping {
+                        public_port: port,
+                        peers,
+                        last_used: now,
+                    },
+                );
+                self.reverse.insert(port, (internal, Some(remote)));
+                SimAddr::new(public_host, port)
+            }
+            _ => {
+                if let Some(m) = self.eim.get_mut(&internal) {
+                    m.last_used = now;
+                    m.peers.insert(remote, now);
+                    return SimAddr::new(public_host, m.public_port);
+                }
+                let port = self.alloc_port(rng);
+                let mut peers = HashMap::new();
+                peers.insert(remote, now);
+                self.eim.insert(
+                    internal,
+                    Mapping {
+                        public_port: port,
+                        peers,
+                        last_used: now,
+                    },
+                );
+                self.reverse.insert(port, (internal, None));
+                SimAddr::new(public_host, port)
+            }
+        }
+    }
+
+    /// Translate an inbound packet addressed to `public` from `remote`.
+    /// Returns the internal destination if the filter admits it.
+    pub fn translate_inbound(
+        &mut self,
+        now: Time,
+        remote: SimAddr,
+        public: SimAddr,
+    ) -> Option<SimAddr> {
+        self.expire(now);
+        debug_assert_eq!(public.host, self.public_host);
+        let (internal, bound_remote) = self.reverse.get(&public.port).copied()?;
+        let mapping = match self.nat_type {
+            NatType::Symmetric => self.edm.get_mut(&(internal, bound_remote?))?,
+            _ => self.eim.get_mut(&internal)?,
+        };
+        let admitted = match self.nat_type {
+            NatType::FullCone => true,
+            NatType::RestrictedCone => mapping.peers.keys().any(|p| p.host == remote.host),
+            NatType::PortRestrictedCone => mapping.peers.contains_key(&remote),
+            NatType::Symmetric => mapping.peers.contains_key(&remote),
+        };
+        if admitted {
+            mapping.last_used = now;
+            Some(internal)
+        } else {
+            None
+        }
+    }
+
+    /// Drop idle mappings.
+    fn expire(&mut self, now: Time) {
+        let ttl = MAPPING_TTL;
+        let mut dead_ports = Vec::new();
+        self.eim.retain(|_, m| {
+            let live = now.saturating_sub(m.last_used) < ttl;
+            if !live {
+                dead_ports.push(m.public_port);
+            }
+            live
+        });
+        self.edm.retain(|_, m| {
+            let live = now.saturating_sub(m.last_used) < ttl;
+            if !live {
+                dead_ports.push(m.public_port);
+            }
+            live
+        });
+        for p in dead_ports {
+            self.reverse.remove(&p);
+        }
+    }
+
+    /// Number of live mappings (diagnostics).
+    pub fn mapping_count(&self) -> usize {
+        self.eim.len() + self.edm.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn addr(h: u32, p: u16) -> SimAddr {
+        SimAddr::new(h, p)
+    }
+
+    #[test]
+    fn full_cone_accepts_any_remote() {
+        let mut rng = Rng::new(1);
+        let mut nat = NatBox::new(NatType::FullCone, 100, 20_000);
+        let internal = addr(1, 5000);
+        let server = addr(200, 53);
+        let pub_addr = nat.translate_outbound(0, internal, server, &mut rng);
+        assert_eq!(pub_addr.host, 100);
+        // Unrelated remote can reach the mapping.
+        let stranger = addr(201, 9999);
+        assert_eq!(nat.translate_inbound(1, stranger, pub_addr), Some(internal));
+    }
+
+    #[test]
+    fn restricted_cone_filters_by_host() {
+        let mut rng = Rng::new(2);
+        let mut nat = NatBox::new(NatType::RestrictedCone, 100, 20_000);
+        let internal = addr(1, 5000);
+        let server = addr(200, 53);
+        let pub_addr = nat.translate_outbound(0, internal, server, &mut rng);
+        // Same host, different port: allowed (address-dependent only).
+        assert_eq!(
+            nat.translate_inbound(1, addr(200, 99), pub_addr),
+            Some(internal)
+        );
+        // Different host: dropped.
+        assert_eq!(nat.translate_inbound(1, addr(201, 53), pub_addr), None);
+    }
+
+    #[test]
+    fn port_restricted_filters_by_host_and_port() {
+        let mut rng = Rng::new(3);
+        let mut nat = NatBox::new(NatType::PortRestrictedCone, 100, 20_000);
+        let internal = addr(1, 5000);
+        let server = addr(200, 53);
+        let pub_addr = nat.translate_outbound(0, internal, server, &mut rng);
+        assert_eq!(nat.translate_inbound(1, server, pub_addr), Some(internal));
+        assert_eq!(nat.translate_inbound(1, addr(200, 99), pub_addr), None);
+    }
+
+    #[test]
+    fn cone_mapping_is_endpoint_independent() {
+        let mut rng = Rng::new(4);
+        let mut nat = NatBox::new(NatType::PortRestrictedCone, 100, 20_000);
+        let internal = addr(1, 5000);
+        let p1 = nat.translate_outbound(0, internal, addr(200, 1), &mut rng);
+        let p2 = nat.translate_outbound(1, internal, addr(201, 2), &mut rng);
+        assert_eq!(p1, p2, "EIM: same public endpoint for all remotes");
+    }
+
+    #[test]
+    fn symmetric_mapping_is_endpoint_dependent() {
+        let mut rng = Rng::new(5);
+        let mut nat = NatBox::new(NatType::Symmetric, 100, 20_000);
+        let internal = addr(1, 5000);
+        let p1 = nat.translate_outbound(0, internal, addr(200, 1), &mut rng);
+        let p2 = nat.translate_outbound(1, internal, addr(201, 2), &mut rng);
+        assert_ne!(p1, p2, "EDM: fresh public endpoint per remote");
+        // Only the bound remote may answer.
+        assert_eq!(nat.translate_inbound(2, addr(200, 1), p1), Some(internal));
+        assert_eq!(nat.translate_inbound(2, addr(201, 2), p1), None);
+    }
+
+    #[test]
+    fn mappings_expire() {
+        let mut rng = Rng::new(6);
+        let mut nat = NatBox::new(NatType::FullCone, 100, 20_000);
+        let internal = addr(1, 5000);
+        let server = addr(200, 53);
+        let pub_addr = nat.translate_outbound(0, internal, server, &mut rng);
+        assert_eq!(nat.mapping_count(), 1);
+        // After TTL, inbound no longer resolves.
+        let later = MAPPING_TTL + super::super::SECOND;
+        assert_eq!(nat.translate_inbound(later, server, pub_addr), None);
+        assert_eq!(nat.mapping_count(), 0);
+    }
+
+    #[test]
+    fn keepalive_refreshes_mapping() {
+        let mut rng = Rng::new(7);
+        let mut nat = NatBox::new(NatType::FullCone, 100, 20_000);
+        let internal = addr(1, 5000);
+        let server = addr(200, 53);
+        let pub1 = nat.translate_outbound(0, internal, server, &mut rng);
+        // Keepalive at 0.8 TTL.
+        let t1 = MAPPING_TTL * 8 / 10;
+        let pub2 = nat.translate_outbound(t1, internal, server, &mut rng);
+        assert_eq!(pub1, pub2);
+        // Mapping still live at 1.5 TTL (refreshed at t1).
+        let t2 = MAPPING_TTL * 3 / 2;
+        assert_eq!(nat.translate_inbound(t2, server, pub1), Some(internal));
+    }
+
+    #[test]
+    fn two_internal_hosts_get_distinct_ports() {
+        let mut rng = Rng::new(8);
+        let mut nat = NatBox::new(NatType::FullCone, 100, 20_000);
+        let a = nat.translate_outbound(0, addr(1, 5000), addr(200, 1), &mut rng);
+        let b = nat.translate_outbound(0, addr(2, 5000), addr(200, 1), &mut rng);
+        assert_ne!(a.port, b.port);
+    }
+
+    #[test]
+    fn punch_matrix_matches_ford() {
+        use NatType::*;
+        let types = [FullCone, RestrictedCone, PortRestrictedCone, Symmetric];
+        for &a in &types {
+            for &b in &types {
+                let ok = NatType::punch_compatible(a, b);
+                let expect_fail = matches!(
+                    (a, b),
+                    (Symmetric, Symmetric)
+                        | (Symmetric, PortRestrictedCone)
+                        | (PortRestrictedCone, Symmetric)
+                );
+                assert_eq!(ok, !expect_fail, "{a:?} vs {b:?}");
+            }
+        }
+    }
+}

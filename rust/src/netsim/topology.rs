@@ -1,0 +1,237 @@
+//! Topology construction: regions, public hosts, NATed hosts, link profiles.
+//!
+//! A topology is a set of hosts placed in regions, with per-host access-link
+//! rates and optional NAT attachment. The inter-region path matrix supplies
+//! propagation delay/jitter/loss; presets mirror the paper's four Table 1
+//! scenarios (same host, same-region LAN, same-region WAN, inter-continent).
+
+use super::link::{PathProfile, Shaper};
+use super::nat::{NatBox, NatType};
+use super::{Time, MICRO, MILLI};
+
+/// Region index into the path matrix.
+pub type Region = usize;
+
+/// Link profile presets for access links.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkProfile {
+    /// Uplink bytes/sec (0 = unlimited).
+    pub up_bps: u64,
+    /// Downlink bytes/sec (0 = unlimited).
+    pub down_bps: u64,
+}
+
+impl LinkProfile {
+    /// 10 Gbps symmetric (the paper's testbed NICs).
+    pub const DATACENTER: LinkProfile = LinkProfile {
+        up_bps: 1_250_000_000,
+        down_bps: 1_250_000_000,
+    };
+
+    /// 1 Gbps symmetric (well-connected edge).
+    pub const FIBER: LinkProfile = LinkProfile {
+        up_bps: 125_000_000,
+        down_bps: 125_000_000,
+    };
+
+    /// 100/40 Mbps consumer broadband.
+    pub const BROADBAND: LinkProfile = LinkProfile {
+        up_bps: 5_000_000,
+        down_bps: 12_500_000,
+    };
+
+    /// Unlimited (control experiments).
+    pub const UNLIMITED: LinkProfile = LinkProfile { up_bps: 0, down_bps: 0 };
+}
+
+/// Per-host configuration.
+#[derive(Clone, Debug)]
+pub struct HostCfg {
+    pub region: Region,
+    pub link: LinkProfile,
+    /// NAT this host sits behind, if any.
+    pub nat: Option<usize>,
+}
+
+pub(crate) struct HostState {
+    pub cfg: HostCfg,
+    pub uplink: Shaper,
+    pub downlink: Shaper,
+    /// Loopback serialization: models per-packet stack/CPU cost for
+    /// same-host traffic (real loopback is serialized by the kernel, not
+    /// instantaneous). Default ≈400 MB/s effective RPC-stack throughput.
+    pub lo: Shaper,
+    pub next_ephemeral: u16,
+    /// Set if this host id is a NAT's public face (owned by that NAT).
+    pub nat_face: Option<usize>,
+}
+
+/// Declarative topology builder. Produces the host/NAT tables consumed by
+/// [`super::net::Net`].
+pub struct TopologyBuilder {
+    pub(crate) hosts: Vec<HostState>,
+    pub(crate) nats: Vec<NatBox>,
+    pub(crate) paths: Vec<Vec<PathProfile>>,
+    pub(crate) loopback: PathProfile,
+    /// Same-host serialization rate (bytes/sec); see HostState::lo.
+    pub loopback_bps: u64,
+}
+
+impl TopologyBuilder {
+    /// Start a topology with `n_regions` regions and a default path matrix
+    /// (filled by [`Self::path`] or [`Self::paths_preset`]).
+    pub fn new(n_regions: usize) -> TopologyBuilder {
+        let default = PathProfile::new(10 * MILLI, MILLI, 0.0);
+        TopologyBuilder {
+            hosts: Vec::new(),
+            nats: Vec::new(),
+            paths: vec![vec![default; n_regions]; n_regions],
+            loopback: PathProfile::new(15 * MICRO, 5 * MICRO, 0.0),
+            loopback_bps: 1_500_000_000,
+        }
+    }
+
+    /// Set the path profile between two regions (symmetric).
+    pub fn path(&mut self, a: Region, b: Region, p: PathProfile) -> &mut Self {
+        self.paths[a][b] = p;
+        self.paths[b][a] = p;
+        self
+    }
+
+    /// Intra-region path (different hosts, same region).
+    pub fn intra(&mut self, r: Region, p: PathProfile) -> &mut Self {
+        self.paths[r][r] = p;
+        self
+    }
+
+    /// The Table 1 scenario matrix: region 0 = a LAN site, region 1 = same
+    /// metro (WAN), region 2 = another continent.
+    ///
+    /// One-way delays: LAN 0.25 ms, same-region WAN 10 ms, inter-continent
+    /// 75 ms (≈150 ms RTT).
+    pub fn paper_regions() -> TopologyBuilder {
+        let mut t = TopologyBuilder::new(3);
+        t.intra(0, PathProfile::new(250 * MICRO, 50 * MICRO, 0.0));
+        t.intra(1, PathProfile::new(10 * MILLI, MILLI, 0.0001));
+        t.intra(2, PathProfile::new(10 * MILLI, MILLI, 0.0001));
+        t.path(0, 1, PathProfile::new(10 * MILLI, MILLI, 0.0001));
+        t.path(0, 2, PathProfile::new(75 * MILLI, 3 * MILLI, 0.001));
+        t.path(1, 2, PathProfile::new(75 * MILLI, 3 * MILLI, 0.001));
+        t
+    }
+
+    /// Add a publicly reachable host; returns its host id.
+    pub fn public_host(&mut self, region: Region, link: LinkProfile) -> u32 {
+        let id = self.hosts.len() as u32;
+        self.hosts.push(HostState {
+            cfg: HostCfg {
+                region,
+                link,
+                nat: None,
+            },
+            uplink: Shaper::new(link.up_bps),
+            downlink: Shaper::new(link.down_bps),
+            lo: {
+                let mut s = Shaper::new(self.loopback_bps);
+                s.per_pkt_overhead = 12 * 1024;
+                s
+            },
+            next_ephemeral: 49_152,
+            nat_face: None,
+        });
+        id
+    }
+
+    /// Add a NAT device in `region`; returns the NAT id. The NAT's public
+    /// face is itself a host (so it has an address and an access link).
+    pub fn nat(&mut self, region: Region, nat_type: NatType, link: LinkProfile) -> usize {
+        let face = self.public_host(region, link);
+        let nat_id = self.nats.len();
+        self.hosts[face as usize].nat_face = Some(nat_id);
+        self.nats
+            .push(NatBox::new(nat_type, face, 20_000 + (nat_id as u16 * 97) % 10_000));
+        nat_id
+    }
+
+    /// Add a host behind NAT `nat_id`; returns its host id. The private
+    /// host's access link models the LAN behind the NAT (usually fast);
+    /// the NAT face's link is the shared WAN access.
+    pub fn natted_host(&mut self, nat_id: usize, link: LinkProfile) -> u32 {
+        let region = self.hosts[self.nats[nat_id].public_host as usize].cfg.region;
+        let id = self.hosts.len() as u32;
+        self.hosts.push(HostState {
+            cfg: HostCfg {
+                region,
+                link,
+                nat: Some(nat_id),
+            },
+            uplink: Shaper::new(link.up_bps),
+            downlink: Shaper::new(link.down_bps),
+            lo: {
+                let mut s = Shaper::new(self.loopback_bps);
+                s.per_pkt_overhead = 12 * 1024;
+                s
+            },
+            next_ephemeral: 49_152,
+            nat_face: None,
+        });
+        id
+    }
+
+    /// Override the loopback profile (same-host delivery).
+    pub fn set_loopback(&mut self, p: PathProfile) -> &mut Self {
+        self.loopback = p;
+        self
+    }
+
+    /// Consume into a [`super::net::Net`] with the given RNG seed.
+    pub fn build(self, seed: u64) -> super::net::Net {
+        super::net::Net::from_topology(self, seed)
+    }
+
+    /// Per-host one-way propagation profile between two hosts.
+    pub(crate) fn path_between(&self, a: u32, b: u32) -> PathProfile {
+        if a == b {
+            return self.loopback;
+        }
+        let ra = self.hosts[a as usize].cfg.region;
+        let rb = self.hosts[b as usize].cfg.region;
+        self.paths[ra][rb]
+    }
+
+    /// Delay helper used by tests.
+    pub fn expected_delay(&self, a: u32, b: u32) -> Time {
+        self.path_between(a, b).delay
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_places_hosts() {
+        let mut t = TopologyBuilder::paper_regions();
+        let a = t.public_host(0, LinkProfile::DATACENTER);
+        let b = t.public_host(2, LinkProfile::FIBER);
+        let nat = t.nat(1, NatType::Symmetric, LinkProfile::BROADBAND);
+        let c = t.natted_host(nat, LinkProfile::UNLIMITED);
+        assert_eq!(a, 0);
+        assert_eq!(b, 1);
+        // NAT face is host 2, private host is 3.
+        assert_eq!(c, 3);
+        assert_eq!(t.hosts[2].nat_face, Some(nat));
+        assert_eq!(t.hosts[c as usize].cfg.nat, Some(nat));
+        assert_eq!(t.hosts[c as usize].cfg.region, 1);
+    }
+
+    #[test]
+    fn path_matrix_symmetric_and_loopback() {
+        let mut t = TopologyBuilder::paper_regions();
+        let a = t.public_host(0, LinkProfile::UNLIMITED);
+        let b = t.public_host(2, LinkProfile::UNLIMITED);
+        assert_eq!(t.expected_delay(a, b), 75 * MILLI);
+        assert_eq!(t.expected_delay(b, a), 75 * MILLI);
+        assert_eq!(t.expected_delay(a, a), t.loopback.delay);
+    }
+}

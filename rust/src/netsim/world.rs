@@ -1,0 +1,253 @@
+//! The dispatch loop: owns endpoints and drives events from [`Net`].
+
+use super::event::EventKind;
+use super::net::{EndpointId, Net};
+use super::Time;
+use crate::multiaddr::SimAddr;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// A datagram-level endpoint: one per node network stack.
+pub trait Endpoint {
+    /// A datagram arrived. `from` is the sender as observed on the wire
+    /// (post-NAT); `to` is the local bound address it was delivered to.
+    fn on_datagram(&mut self, net: &mut Net, from: SimAddr, to: SimAddr, payload: Vec<u8>);
+
+    /// A timer armed via [`Net::set_timer`] fired.
+    fn on_timer(&mut self, net: &mut Net, token: u64);
+}
+
+/// Owns the endpoint registry and the run loop.
+pub struct World {
+    pub net: Net,
+    endpoints: Vec<Option<Rc<RefCell<dyn Endpoint>>>>,
+}
+
+impl World {
+    pub fn new(net: Net) -> World {
+        World {
+            net,
+            endpoints: Vec::new(),
+        }
+    }
+
+    /// Register an endpoint; returns its id (used for binds and timers).
+    pub fn add_endpoint(&mut self, ep: Rc<RefCell<dyn Endpoint>>) -> EndpointId {
+        self.endpoints.push(Some(ep));
+        self.endpoints.len() - 1
+    }
+
+    /// The id the next [`World::add_endpoint`] call will return — lets a
+    /// node construct subsystems that need their endpoint id before
+    /// registration.
+    pub fn next_endpoint_id(&self) -> EndpointId {
+        self.endpoints.len()
+    }
+
+    /// Remove an endpoint (simulating a crashed node); its pending events
+    /// are silently dropped.
+    pub fn remove_endpoint(&mut self, id: EndpointId) {
+        if let Some(slot) = self.endpoints.get_mut(id) {
+            *slot = None;
+        }
+    }
+
+    pub fn endpoint(&self, id: EndpointId) -> Option<Rc<RefCell<dyn Endpoint>>> {
+        self.endpoints.get(id).and_then(|e| e.clone())
+    }
+
+    /// Process events until the queue is empty or the virtual clock passes
+    /// `deadline`. Returns the number of events processed.
+    pub fn run_until(&mut self, deadline: Time) -> u64 {
+        let mut n = 0;
+        while let Some(t) = self.net.queue.peek_time() {
+            if t > deadline {
+                break;
+            }
+            let (at, kind) = self.net.queue.pop().unwrap();
+            self.net.set_now(at);
+            self.net.stats.events_processed += 1;
+            n += 1;
+            match kind {
+                EventKind::Deliver {
+                    dst_endpoint,
+                    from,
+                    to,
+                    payload,
+                } => {
+                    self.net.stats.deliver_events += 1;
+                    if let Some(ep) = self.endpoint(dst_endpoint) {
+                        ep.borrow_mut().on_datagram(&mut self.net, from, to, payload);
+                    }
+                }
+                EventKind::Timer { endpoint, token } => {
+                    self.net.stats.timer_events += 1;
+                    if let Some(ep) = self.endpoint(endpoint) {
+                        ep.borrow_mut().on_timer(&mut self.net, token);
+                    }
+                }
+                EventKind::Stop => break,
+            }
+        }
+        // Advance the clock to the deadline even if idle, so back-to-back
+        // run_until calls observe monotonic time.
+        if self.net.now() < deadline {
+            self.net.set_now(deadline);
+        }
+        n
+    }
+
+    /// Run for a relative duration.
+    pub fn run_for(&mut self, d: Time) -> u64 {
+        self.run_until(self.net.now() + d)
+    }
+
+    /// Run until the queue drains completely (use with care: keepalive
+    /// timers can make this unbounded — prefer `run_until`).
+    pub fn run_to_quiescence(&mut self, max_events: u64) -> u64 {
+        let mut n = 0;
+        while n < max_events {
+            let Some((at, kind)) = self.net.queue.pop() else {
+                break;
+            };
+            self.net.set_now(at);
+            self.net.stats.events_processed += 1;
+            n += 1;
+            match kind {
+                EventKind::Deliver {
+                    dst_endpoint,
+                    from,
+                    to,
+                    payload,
+                } => {
+                    if let Some(ep) = self.endpoint(dst_endpoint) {
+                        ep.borrow_mut().on_datagram(&mut self.net, from, to, payload);
+                    }
+                }
+                EventKind::Timer { endpoint, token } => {
+                    if let Some(ep) = self.endpoint(endpoint) {
+                        ep.borrow_mut().on_timer(&mut self.net, token);
+                    }
+                }
+                EventKind::Stop => break,
+            }
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::topology::{LinkProfile, TopologyBuilder};
+    use crate::netsim::{MILLI, SECOND};
+
+    /// Sink endpoint: records datagrams without replying.
+    struct Sink {
+        received: Vec<(SimAddr, Vec<u8>)>,
+    }
+
+    impl Endpoint for Sink {
+        fn on_datagram(&mut self, _net: &mut Net, from: SimAddr, _to: SimAddr, payload: Vec<u8>) {
+            self.received.push((from, payload));
+        }
+
+        fn on_timer(&mut self, _net: &mut Net, _token: u64) {}
+    }
+
+    /// Echo endpoint: replies to every datagram, counts received.
+    struct Echo {
+        addr: SimAddr,
+        received: Vec<(SimAddr, Vec<u8>)>,
+        timers: Vec<u64>,
+    }
+
+    impl Endpoint for Echo {
+        fn on_datagram(&mut self, net: &mut Net, from: SimAddr, _to: SimAddr, payload: Vec<u8>) {
+            self.received.push((from, payload.clone()));
+            let mut reply = b"echo:".to_vec();
+            reply.extend_from_slice(&payload);
+            net.send(self.addr, from, reply);
+        }
+
+        fn on_timer(&mut self, _net: &mut Net, token: u64) {
+            self.timers.push(token);
+        }
+    }
+
+    #[test]
+    fn request_reply_through_world() {
+        let mut t = TopologyBuilder::paper_regions();
+        let a = t.public_host(0, LinkProfile::UNLIMITED);
+        let b = t.public_host(1, LinkProfile::UNLIMITED);
+        let mut world = World::new(t.build(5));
+
+        let server = Rc::new(RefCell::new(Echo {
+            addr: SimAddr::new(b, 80),
+            received: vec![],
+            timers: vec![],
+        }));
+        let client = Rc::new(RefCell::new(Sink { received: vec![] }));
+        let sid = world.add_endpoint(server.clone());
+        let cid = world.add_endpoint(client.clone());
+        world.net.bind(sid, SimAddr::new(b, 80)).unwrap();
+        world.net.bind(cid, SimAddr::new(a, 9000)).unwrap();
+
+        world
+            .net
+            .send(SimAddr::new(a, 9000), SimAddr::new(b, 80), b"hi".to_vec());
+        world.run_until(SECOND);
+
+        assert_eq!(server.borrow().received.len(), 1);
+        assert_eq!(client.borrow().received.len(), 1);
+        assert_eq!(client.borrow().received[0].1, b"echo:hi");
+        // RTT ≈ 2 × 10 ms.
+        assert!(world.net.now() >= 20 * MILLI);
+    }
+
+    #[test]
+    fn timers_fire_in_order() {
+        let t = TopologyBuilder::new(1);
+        let mut world = World::new(t.build(6));
+        let ep = Rc::new(RefCell::new(Echo {
+            addr: SimAddr::new(0, 0),
+            received: vec![],
+            timers: vec![],
+        }));
+        let id = world.add_endpoint(ep.clone());
+        world.net.set_timer(id, 30 * MILLI, 3);
+        world.net.set_timer(id, 10 * MILLI, 1);
+        world.net.set_timer(id, 20 * MILLI, 2);
+        world.run_until(SECOND);
+        assert_eq!(ep.borrow().timers, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn removed_endpoint_gets_nothing() {
+        let mut t = TopologyBuilder::new(1);
+        let a = t.public_host(0, LinkProfile::UNLIMITED);
+        let b = t.public_host(0, LinkProfile::UNLIMITED);
+        let mut world = World::new(t.build(7));
+        let ep = Rc::new(RefCell::new(Echo {
+            addr: SimAddr::new(b, 80),
+            received: vec![],
+            timers: vec![],
+        }));
+        let id = world.add_endpoint(ep.clone());
+        world.net.bind(id, SimAddr::new(b, 80)).unwrap();
+        world
+            .net
+            .send(SimAddr::new(a, 1), SimAddr::new(b, 80), b"x".to_vec());
+        world.remove_endpoint(id);
+        world.run_until(SECOND);
+        assert!(ep.borrow().received.is_empty());
+    }
+
+    #[test]
+    fn clock_advances_to_deadline_when_idle() {
+        let t = TopologyBuilder::new(1);
+        let mut world = World::new(t.build(8));
+        world.run_until(5 * SECOND);
+        assert_eq!(world.net.now(), 5 * SECOND);
+    }
+}

@@ -1,0 +1,214 @@
+//! Node configuration: role flags + a TOML-subset file parser so
+//! deployments can be described declaratively (the launcher in `main.rs`
+//! reads these).
+//!
+//! Supported syntax: `key = value` lines, `[section]` headers (flattened
+//! to `section.key`), `#` comments, string/integer/bool/float values.
+
+use crate::multiaddr::Proto;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Role/behaviour configuration for one node.
+#[derive(Clone, Debug)]
+pub struct NodeConfig {
+    /// Deterministic identity seed.
+    pub seed: u64,
+    /// Listen port.
+    pub port: u16,
+    /// Preferred transport.
+    pub proto: Proto,
+    /// Serve as a circuit relay.
+    pub relay_enabled: bool,
+    /// Serve as a rendezvous registry.
+    pub rendezvous_server: bool,
+    /// Human label for logs/reports.
+    pub label: String,
+}
+
+impl Default for NodeConfig {
+    fn default() -> Self {
+        NodeConfig {
+            seed: 1,
+            port: 4001,
+            proto: Proto::QuicLike,
+            relay_enabled: false,
+            rendezvous_server: false,
+            label: String::new(),
+        }
+    }
+}
+
+impl NodeConfig {
+    pub fn with_seed(seed: u64) -> NodeConfig {
+        NodeConfig {
+            seed,
+            ..NodeConfig::default()
+        }
+    }
+
+    pub fn relay(seed: u64) -> NodeConfig {
+        NodeConfig {
+            seed,
+            relay_enabled: true,
+            rendezvous_server: true,
+            label: "relay".into(),
+            ..NodeConfig::default()
+        }
+    }
+
+    /// Build from a parsed config table (prefix e.g. "node").
+    pub fn from_table(t: &BTreeMap<String, ConfigValue>, prefix: &str) -> NodeConfig {
+        let get = |k: &str| t.get(&format!("{prefix}.{k}"));
+        let mut c = NodeConfig::default();
+        if let Some(v) = get("seed").and_then(|v| v.as_int()) {
+            c.seed = v as u64;
+        }
+        if let Some(v) = get("port").and_then(|v| v.as_int()) {
+            c.port = v as u16;
+        }
+        if let Some(v) = get("relay").and_then(|v| v.as_bool()) {
+            c.relay_enabled = v;
+        }
+        if let Some(v) = get("rendezvous").and_then(|v| v.as_bool()) {
+            c.rendezvous_server = v;
+        }
+        if let Some(v) = get("label").and_then(|v| v.as_str()) {
+            c.label = v.to_string();
+        }
+        if let Some(v) = get("transport").and_then(|v| v.as_str()) {
+            c.proto = if v == "tcp" { Proto::TcpLike } else { Proto::QuicLike };
+        }
+        c
+    }
+}
+
+/// A parsed config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl ConfigValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            ConfigValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            ConfigValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            ConfigValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            ConfigValue::Float(f) => Some(*f),
+            ConfigValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+}
+
+/// Parse TOML-subset text into a flat `section.key → value` table.
+pub fn parse_config(text: &str) -> Result<BTreeMap<String, ConfigValue>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = inner.trim().to_string();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("line {}: expected key = value", lineno + 1);
+        };
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let v = v.trim();
+        let value = if let Some(s) = v.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+            ConfigValue::Str(s.to_string())
+        } else if v == "true" || v == "false" {
+            ConfigValue::Bool(v == "true")
+        } else if let Ok(i) = v.parse::<i64>() {
+            ConfigValue::Int(i)
+        } else if let Ok(f) = v.parse::<f64>() {
+            ConfigValue::Float(f)
+        } else {
+            ConfigValue::Str(v.to_string())
+        };
+        out.insert(key, value);
+    }
+    Ok(out)
+}
+
+/// Load a config file.
+pub fn load_config(path: &str) -> Result<BTreeMap<String, ConfigValue>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    parse_config(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let text = r#"
+# deployment
+global_seed = 42
+
+[node]
+seed = 7
+port = 4002
+relay = true
+label = "edge-1"  # trailing comment
+lr = 0.5
+"#;
+        let t = parse_config(text).unwrap();
+        assert_eq!(t["global_seed"], ConfigValue::Int(42));
+        assert_eq!(t["node.seed"], ConfigValue::Int(7));
+        assert_eq!(t["node.relay"], ConfigValue::Bool(true));
+        assert_eq!(t["node.label"], ConfigValue::Str("edge-1".into()));
+        assert_eq!(t["node.lr"], ConfigValue::Float(0.5));
+
+        let c = NodeConfig::from_table(&t, "node");
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.port, 4002);
+        assert!(c.relay_enabled);
+        assert_eq!(c.label, "edge-1");
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        assert!(parse_config("not a kv line").is_err());
+    }
+
+    #[test]
+    fn defaults_sane() {
+        let c = NodeConfig::default();
+        assert_eq!(c.port, 4001);
+        assert!(!c.relay_enabled);
+        let r = NodeConfig::relay(9);
+        assert!(r.relay_enabled && r.rendezvous_server);
+    }
+}

@@ -1,0 +1,555 @@
+//! The Lattica node: swarm + protocols + content + CRDT + RPC, composed
+//! per role and driven by the simulator event loop.
+//!
+//! This is the deployment unit: a bootstrap/relay/rendezvous server, a
+//! trainer, an inference shard or an edge client are all `LatticaNode`s
+//! with different [`NodeConfig`] roles (the launcher in `main.rs` and the
+//! examples build topologies out of them).
+
+pub mod config;
+
+use crate::content::{Blockstore, Cid, DagManifest};
+use crate::crdt::CrdtStore;
+use crate::identity::{Keypair, PeerId};
+use crate::multiaddr::{Multiaddr, SimAddr};
+use crate::netsim::{Endpoint, EndpointId, Net, Time, World, MILLI, SECOND};
+use crate::protocols::autonat::{Autonat, AUTONAT_PROTO, PROBE_MAGIC};
+use crate::protocols::bitswap::{Bitswap, BitswapEvent, BITSWAP_PROTO};
+use crate::protocols::dcutr::{Dcutr, DCUTR_PROTO};
+use crate::protocols::gossip::{Gossip, GossipEvent, GOSSIP_PROTO};
+use crate::protocols::identify::{Identify, IDENTIFY_PROTO};
+use crate::protocols::kad::{Kademlia, KadEvent, PeerEntry, KAD_PROTO};
+use crate::protocols::ping::{Ping, PING_PROTO};
+use crate::protocols::rendezvous::{Rendezvous, RendezvousEvent, RENDEZVOUS_PROTO};
+use crate::protocols::Ctx;
+use crate::rpc::{RpcEvent, RpcNode, RPC_PROTO, RPC_STREAM_PROTO};
+use crate::swarm::{Swarm, SwarmConfig, SwarmEvent, TIMER_SWARM_TICK};
+use crate::wire::Message;
+use anyhow::Result;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+pub use config::NodeConfig;
+
+/// Timer tokens (swarm owns token 1).
+pub const TIMER_PROTO_TICK: u64 = 2;
+/// Protocol housekeeping period.
+pub const PROTO_TICK_PERIOD: Time = 250 * MILLI;
+
+/// Application-level events surfaced by the node.
+#[derive(Debug)]
+pub enum NodeEvent {
+    PeerConnected { peer: PeerId, relayed: bool },
+    PeerDisconnected { peer: PeerId },
+    Kad(KadEvent),
+    Bitswap(BitswapEvent),
+    Gossip(GossipEvent),
+    Rpc(RpcEvent),
+    Rendezvous(RendezvousEvent),
+    PunchResult { peer: PeerId, success: bool },
+    ObservedAddr { addr: SimAddr },
+}
+
+/// Application logic attached to a node (shard server, trainer, echo
+/// service…). Events are offered to the app first; returning `None`
+/// consumes the event, returning it back leaves it for external polling.
+pub trait App {
+    fn handle(
+        &mut self,
+        node: &mut LatticaNode,
+        net: &mut Net,
+        ev: NodeEvent,
+    ) -> Option<NodeEvent>;
+}
+
+/// See module docs.
+pub struct LatticaNode {
+    pub cfg: NodeConfig,
+    pub swarm: Swarm,
+    pub kad: Kademlia,
+    pub bitswap: Bitswap,
+    pub gossip: Gossip,
+    pub rpc: RpcNode,
+    pub ping: Ping,
+    pub identify: Identify,
+    pub autonat: Autonat,
+    pub rendezvous: Rendezvous,
+    pub dcutr: Dcutr,
+    pub blockstore: Blockstore,
+    pub crdt: CrdtStore,
+    /// Attached application logic (served inline, so RPC handlers add no
+    /// artificial polling latency).
+    pub app: Option<Box<dyn App>>,
+    /// Blob-sync driver state (see [`LatticaNode::sync_blob`]).
+    blob_sync: std::collections::HashMap<Cid, BlobSync>,
+    events: VecDeque<NodeEvent>,
+    tick_armed: bool,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum BlobSyncState {
+    FetchingManifest,
+    FetchingChunks,
+    Complete,
+}
+
+struct BlobSync {
+    state: BlobSyncState,
+    /// (local block count, virtual time) at the last observed progress.
+    progress: (usize, Time),
+}
+
+/// Restart a stalled fetch after this much virtual time without progress
+/// (sessions can erode their provider lists across reconnects).
+const BLOB_STALL_RESTART: Time = 10 * SECOND;
+
+impl LatticaNode {
+    /// Construct and register a node on `host` in the world. Binds the
+    /// configured port and arms the protocol tick.
+    pub fn spawn(world: &mut World, host: u32, cfg: NodeConfig) -> Rc<RefCell<LatticaNode>> {
+        let keypair = Keypair::from_seed(cfg.seed);
+        let local_peer = keypair.peer_id();
+        let addr = SimAddr::new(host, cfg.port);
+        let eid = world.next_endpoint_id();
+        let swarm_cfg = SwarmConfig {
+            relay_enabled: cfg.relay_enabled,
+            ..SwarmConfig::default()
+        };
+        let rng = world.net.rng.fork();
+        let swarm = Swarm::new(keypair, eid, addr, swarm_cfg, rng);
+        let protocols: Vec<String> = [
+            KAD_PROTO,
+            BITSWAP_PROTO,
+            GOSSIP_PROTO,
+            RPC_PROTO,
+            RPC_STREAM_PROTO,
+            PING_PROTO,
+            IDENTIFY_PROTO,
+            AUTONAT_PROTO,
+            RENDEZVOUS_PROTO,
+            DCUTR_PROTO,
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let node = LatticaNode {
+            kad: Kademlia::new(local_peer, host, cfg.port),
+            bitswap: Bitswap::new(),
+            gossip: Gossip::new(local_peer),
+            rpc: RpcNode::new(),
+            ping: Ping::new(),
+            identify: Identify::new(protocols),
+            autonat: Autonat::new(),
+            rendezvous: Rendezvous::new(cfg.rendezvous_server),
+            dcutr: Dcutr::new(),
+            blockstore: Blockstore::new(),
+            crdt: CrdtStore::new(),
+            app: None,
+            blob_sync: std::collections::HashMap::new(),
+            swarm,
+            cfg,
+            events: VecDeque::new(),
+            tick_armed: false,
+        };
+        let rc = Rc::new(RefCell::new(node));
+        let got = world.add_endpoint(rc.clone());
+        debug_assert_eq!(got, eid);
+        world.net.bind(eid, addr).expect("bind node port");
+        {
+            let mut n = rc.borrow_mut();
+            n.arm_proto_tick(&mut world.net);
+        }
+        rc
+    }
+
+    pub fn peer_id(&self) -> PeerId {
+        self.swarm.local_peer
+    }
+
+    pub fn endpoint_id(&self) -> EndpointId {
+        self.swarm.endpoint_id
+    }
+
+    pub fn listen_addr(&self) -> Multiaddr {
+        Multiaddr::direct(self.swarm.local_addr, self.cfg.proto).with_peer(self.peer_id())
+    }
+
+    pub fn poll_event(&mut self) -> Option<NodeEvent> {
+        self.events.pop_front()
+    }
+
+    pub fn drain_events(&mut self) -> Vec<NodeEvent> {
+        self.events.drain(..).collect()
+    }
+
+    fn arm_proto_tick(&mut self, net: &mut Net) {
+        if !self.tick_armed {
+            net.set_timer(self.swarm.endpoint_id, PROTO_TICK_PERIOD, TIMER_PROTO_TICK);
+            self.tick_armed = true;
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // High-level operations (the SDK surface)
+    // ------------------------------------------------------------------
+
+    /// Dial a multiaddr.
+    pub fn dial(&mut self, net: &mut Net, addr: &Multiaddr) -> Result<u64> {
+        self.swarm.dial(net, addr)
+    }
+
+    /// Bootstrap into the DHT via a known peer: add it, then self-lookup.
+    pub fn bootstrap(&mut self, net: &mut Net, entry: PeerEntry) {
+        let mut ctx = Ctx::new(&mut self.swarm, net);
+        self.kad.add_address(&mut ctx, entry);
+        let key = *self.kad.table.local.as_bytes();
+        self.kad.find_node(&mut ctx, key);
+    }
+
+    /// Publish a blob: chunk + store + announce provider records on the DHT.
+    /// Returns the root CID.
+    pub fn publish_blob(
+        &mut self,
+        net: &mut Net,
+        name: &str,
+        version: u64,
+        data: &[u8],
+        chunk_size: usize,
+    ) -> Cid {
+        let (root, manifest) =
+            DagManifest::publish(&mut self.blockstore, name, version, data, chunk_size);
+        let mut ctx = Ctx::new(&mut self.swarm, net);
+        self.kad.provide(&mut ctx, root.to_key());
+        for c in &manifest.chunks {
+            // Providing the root is usually enough (fetchers ask the same
+            // provider set for chunks), but announcing chunks too lets
+            // partial caches serve.
+            self.kad.provide(&mut ctx, c.to_key());
+        }
+        root
+    }
+
+    /// Fetch a blob by root CID from a known provider set.
+    pub fn fetch_blob(&mut self, net: &mut Net, root: Cid, providers: Vec<PeerId>) -> u64 {
+        let mut ctx = Ctx::new(&mut self.swarm, net);
+        // First fetch the manifest block, then its chunks (the bitswap
+        // session state machine handles both phases via completion events;
+        // the node-level helper in examples drives phase 2).
+        self.bitswap
+            .fetch(&mut ctx, &self.blockstore, vec![root], providers)
+    }
+
+    /// Fetch all chunks listed by a locally-present manifest.
+    pub fn fetch_manifest_chunks(
+        &mut self,
+        net: &mut Net,
+        root: &Cid,
+        providers: Vec<PeerId>,
+    ) -> Result<u64> {
+        let manifest = DagManifest::load(&self.blockstore, root)?;
+        let missing = manifest.missing(&self.blockstore);
+        let mut ctx = Ctx::new(&mut self.swarm, net);
+        Ok(self.bitswap.fetch(&mut ctx, &self.blockstore, missing, providers))
+    }
+
+    /// Idempotent blob-sync driver: call repeatedly (e.g. once per poll
+    /// loop iteration) until it returns true. Fetches the manifest, then
+    /// the chunks, creating each Bitswap session exactly once.
+    pub fn sync_blob(&mut self, net: &mut Net, root: Cid, providers: &[PeerId]) -> bool {
+        let now = net.now();
+        let blocks_now = self.blockstore.len();
+        let state = self
+            .blob_sync
+            .get(&root)
+            .map(|b| b.state)
+            .unwrap_or(BlobSyncState::FetchingManifest);
+        let mark = |node: &mut Self, st: BlobSyncState| {
+            node.blob_sync.insert(
+                root,
+                BlobSync {
+                    state: st,
+                    progress: (blocks_now, now),
+                },
+            );
+        };
+        match state {
+            BlobSyncState::Complete => true,
+            BlobSyncState::FetchingManifest => {
+                if self.blockstore.has(&root) {
+                    // Manifest arrived: move on to chunks.
+                    let _ = self.fetch_manifest_chunks(net, &root, providers.to_vec());
+                    mark(self, BlobSyncState::FetchingChunks);
+                    false
+                } else {
+                    let restart = match self.blob_sync.get(&root) {
+                        None => true,
+                        Some(b) => now.saturating_sub(b.progress.1) > BLOB_STALL_RESTART,
+                    };
+                    if restart {
+                        self.fetch_blob(net, root, providers.to_vec());
+                        mark(self, BlobSyncState::FetchingManifest);
+                    }
+                    false
+                }
+            }
+            BlobSyncState::FetchingChunks => {
+                let complete = DagManifest::load(&self.blockstore, &root)
+                    .map(|m| m.is_complete(&self.blockstore))
+                    .unwrap_or(false);
+                if complete {
+                    mark(self, BlobSyncState::Complete);
+                    return true;
+                }
+                // Progress tracking + stalled-session restart.
+                let entry = self.blob_sync.get(&root).map(|b| b.progress);
+                match entry {
+                    Some((prev_blocks, _since)) if blocks_now > prev_blocks => {
+                        mark(self, BlobSyncState::FetchingChunks);
+                    }
+                    Some((_, since)) if now.saturating_sub(since) > BLOB_STALL_RESTART => {
+                        let _ = self.fetch_manifest_chunks(net, &root, providers.to_vec());
+                        mark(self, BlobSyncState::FetchingChunks);
+                    }
+                    _ => {}
+                }
+                false
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Event plumbing
+    // ------------------------------------------------------------------
+
+    fn pump(&mut self, net: &mut Net) {
+        // Move swarm events through protocol dispatch until quiescent.
+        loop {
+            let Some(ev) = self.swarm.poll_event() else { break };
+            self.dispatch_swarm_event(net, ev);
+        }
+        // Collect protocol events for the application.
+        while let Some(e) = self.kad.poll_event() {
+            self.events.push_back(NodeEvent::Kad(e));
+        }
+        while let Some(e) = self.bitswap.poll_event() {
+            self.events.push_back(NodeEvent::Bitswap(e));
+        }
+        while let Some(e) = self.gossip.poll_event() {
+            self.events.push_back(NodeEvent::Gossip(e));
+        }
+        while let Some(e) = self.rpc.poll_event() {
+            self.events.push_back(NodeEvent::Rpc(e));
+        }
+        while let Some(e) = self.rendezvous.poll_event() {
+            self.events.push_back(NodeEvent::Rendezvous(e));
+        }
+        while let Some(_e) = self.ping.poll_event() {}
+        while let Some(_e) = self.identify.poll_event() {}
+        while let Some(_e) = self.autonat.poll_event() {}
+        while let Some(_e) = self.dcutr.poll_event() {}
+        // Offer events to the attached app (take/put avoids double borrow).
+        if let Some(mut app) = self.app.take() {
+            let pending: Vec<NodeEvent> = self.events.drain(..).collect();
+            for ev in pending {
+                if let Some(back) = app.handle(self, net, ev) {
+                    self.events.push_back(back);
+                }
+            }
+            // The app may have triggered more protocol activity.
+            if self.app.is_none() {
+                self.app = Some(app);
+            }
+        }
+    }
+
+    fn dispatch_swarm_event(&mut self, net: &mut Net, ev: SwarmEvent) {
+        match ev {
+            SwarmEvent::ConnEstablished {
+                cid: _,
+                peer,
+                role: _,
+                relayed,
+                remote_addr,
+            } => {
+                let mut ctx = Ctx::new(&mut self.swarm, net);
+                self.kad.on_peer_connected(&mut ctx, peer);
+                self.gossip.on_peer_connected(&mut ctx, peer);
+                self.identify.on_peer_connected(&mut ctx, peer, remote_addr);
+                // Learn the peer's DHT entry from its observed endpoint.
+                if !relayed {
+                    self.kad.add_address(
+                        &mut ctx,
+                        PeerEntry {
+                            id: peer,
+                            host: remote_addr.host,
+                            port: remote_addr.port,
+                        },
+                    );
+                }
+                self.events
+                    .push_back(NodeEvent::PeerConnected { peer, relayed });
+            }
+            SwarmEvent::ConnClosed { cid, peer, .. } => {
+                self.rpc.on_conn_closed(cid);
+                if let Some(p) = peer {
+                    let mut ctx = Ctx::new(&mut self.swarm, net);
+                    self.bitswap.on_peer_disconnected(&mut ctx, p);
+                    self.gossip.on_peer_disconnected(p);
+                    if !ctx.swarm.is_connected(&p) {
+                        self.events.push_back(NodeEvent::PeerDisconnected { peer: p });
+                    }
+                }
+            }
+            SwarmEvent::DialFailed { cid, reason } => {
+                self.rpc.on_conn_closed(cid);
+                log::debug!("dial failed: {reason}");
+            }
+            SwarmEvent::InboundStream { .. } => {
+                // Streams materialize on first message; nothing to do here.
+            }
+            SwarmEvent::StreamMsg { cid, stream, msg } => {
+                self.dispatch_stream_msg(net, cid, stream, msg);
+            }
+            SwarmEvent::StreamFinished { .. } | SwarmEvent::StreamReset { .. } => {}
+            SwarmEvent::ObservedAddr { addr } => {
+                self.events.push_back(NodeEvent::ObservedAddr { addr });
+            }
+            SwarmEvent::PunchResult { peer, success, .. } => {
+                self.events.push_back(NodeEvent::PunchResult { peer, success });
+            }
+        }
+    }
+
+    fn dispatch_stream_msg(&mut self, net: &mut Net, cid: u64, stream: u64, msg: Vec<u8>) {
+        let Some(peer) = self.swarm.connection_peer(cid) else { return };
+        let proto = self
+            .swarm
+            .stream_proto(cid, stream)
+            .unwrap_or_default();
+        let remote_host = match self.swarm.connection_path(cid) {
+            Some(crate::swarm::Path::Direct(a)) => a.host,
+            _ => 0,
+        };
+        let mut ctx = Ctx::new(&mut self.swarm, net);
+        let res: Result<()> = match proto.as_str() {
+            KAD_PROTO => {
+                // Responder vs requester: if we have a pending query using
+                // this stream the message is a reply; otherwise serve it.
+                // handle_response ignores non-replies and vice versa.
+                self.kad.handle_response(&mut ctx, cid, stream, &msg);
+                self.kad.handle_request(&mut ctx, peer, cid, stream, &msg)
+            }
+            BITSWAP_PROTO => {
+                self.bitswap
+                    .handle_msg(&mut ctx, &mut self.blockstore, peer, cid, stream, &msg)
+            }
+            GOSSIP_PROTO => self.gossip.handle_msg(&mut ctx, peer, cid, stream, &msg),
+            RPC_PROTO => self.rpc.handle_unary_msg(&mut ctx, peer, cid, stream, &msg),
+            RPC_STREAM_PROTO => self
+                .rpc
+                .handle_stream_msg(&mut ctx, peer, cid, stream, &msg),
+            PING_PROTO => {
+                self.ping.handle_msg(&mut ctx, cid, stream, &msg);
+                Ok(())
+            }
+            IDENTIFY_PROTO => self.identify.handle_msg(&mut ctx, peer, &msg),
+            AUTONAT_PROTO => self.autonat.handle_msg(&mut ctx, &msg),
+            RENDEZVOUS_PROTO => {
+                self.rendezvous
+                    .handle_msg(&mut ctx, peer, remote_host, cid, stream, &msg)
+            }
+            DCUTR_PROTO => self.dcutr.handle_msg(&mut ctx, peer, cid, stream, &msg),
+            // CRDT anti-entropy (see crdt_sync below).
+            CRDT_PROTO => self.handle_crdt_msg(net, peer, cid, stream, &msg),
+            other => {
+                log::debug!("unrouted protocol {other:?}");
+                Ok(())
+            }
+        };
+        if let Err(e) = res {
+            log::debug!("protocol {proto} error from {peer}: {e}");
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // CRDT anti-entropy
+    // ------------------------------------------------------------------
+
+    /// Push our full CRDT state to a peer (simple anti-entropy; the digest
+    /// comparison in `crdt_converged` verifies convergence).
+    pub fn crdt_sync_with(&mut self, net: &mut Net, peer: &PeerId) -> Result<()> {
+        let state = self.crdt.encode();
+        let mut ctx = Ctx::new(&mut self.swarm, net);
+        let (cid, stream) = ctx.open_stream(peer, CRDT_PROTO)?;
+        ctx.send(cid, stream, &state)?;
+        ctx.finish(cid, stream);
+        Ok(())
+    }
+
+    fn handle_crdt_msg(
+        &mut self,
+        _net: &mut Net,
+        _peer: PeerId,
+        _cid: u64,
+        _stream: u64,
+        msg: &[u8],
+    ) -> Result<()> {
+        let other = CrdtStore::decode(msg)?;
+        self.crdt.merge(&other)?;
+        Ok(())
+    }
+}
+
+/// CRDT anti-entropy protocol id.
+pub const CRDT_PROTO: &str = "/lattica/crdt/1";
+
+impl Endpoint for LatticaNode {
+    fn on_datagram(&mut self, net: &mut Net, from: SimAddr, to: SimAddr, payload: Vec<u8>) {
+        // AutoNAT probe datagrams are not transport packets.
+        if payload.len() == 16 && payload.starts_with(PROBE_MAGIC) {
+            self.autonat.handle_probe_datagram(&payload);
+            self.pump(net);
+            return;
+        }
+        self.swarm.handle_datagram(net, from, to, payload);
+        self.pump(net);
+    }
+
+    fn on_timer(&mut self, net: &mut Net, token: u64) {
+        match token {
+            TIMER_SWARM_TICK => self.swarm.on_timer(net, token),
+            TIMER_PROTO_TICK => {
+                self.tick_armed = false;
+                {
+                    let mut ctx = Ctx::new(&mut self.swarm, net);
+                    self.kad.tick(&mut ctx);
+                    self.bitswap.tick(&mut ctx);
+                    self.rpc.tick(&mut ctx);
+                }
+                self.autonat.tick(net.now());
+                self.arm_proto_tick(net);
+            }
+            _ => {}
+        }
+        self.pump(net);
+    }
+}
+
+/// Run the world until `pred` is true or `timeout` virtual time passes.
+/// Convenience for tests/examples. Returns whether the predicate held.
+pub fn run_until<F: FnMut() -> bool>(world: &mut World, timeout: Time, mut pred: F) -> bool {
+    let start = world.net.now();
+    while world.net.now() < start + timeout {
+        if pred() {
+            return true;
+        }
+        world.run_for(20 * MILLI);
+    }
+    pred()
+}
+
+/// Convenience: virtual-time seconds.
+pub fn secs(s: u64) -> Time {
+    s * SECOND
+}

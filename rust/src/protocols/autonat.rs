@@ -1,0 +1,190 @@
+//! AutoNAT (`/lattica/autonat/1`): dial-back reachability probing.
+//!
+//! A node asks a connected peer to dial the address it believes it listens
+//! on; if the probe datagram arrives, the node is publicly reachable
+//! (NatStatus::Public), otherwise it should obtain a relay reservation.
+
+use super::Ctx;
+use crate::identity::PeerId;
+use crate::multiaddr::SimAddr;
+use crate::netsim::{Time, SECOND};
+use crate::wire::{Message, PbReader, PbWriter};
+use anyhow::Result;
+use std::collections::VecDeque;
+
+pub const AUTONAT_PROTO: &str = "/lattica/autonat/1";
+
+/// Probe datagrams are prefixed with this magic so the node layer can
+/// distinguish them from transport packets.
+pub const PROBE_MAGIC: &[u8; 8] = b"LATPROBE";
+
+const M_DIAL_REQUEST: u64 = 1;
+#[allow(dead_code)]
+const M_DIAL_DONE: u64 = 2;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AutonatMsg {
+    pub kind: u64,
+    pub host: u32,
+    pub port: u32,
+    pub nonce: u64,
+}
+
+impl Message for AutonatMsg {
+    fn encode_to(&self, w: &mut PbWriter) {
+        w.uint(1, self.kind);
+        w.uint(2, self.host as u64);
+        w.uint(3, self.port as u64);
+        w.uint(4, self.nonce);
+    }
+
+    fn decode(buf: &[u8]) -> Result<AutonatMsg> {
+        let mut m = AutonatMsg::default();
+        PbReader::new(buf).for_each(|f| {
+            match f.number {
+                1 => m.kind = f.as_u64(),
+                2 => m.host = f.as_u64() as u32,
+                3 => m.port = f.as_u64() as u32,
+                4 => m.nonce = f.as_u64(),
+                _ => {}
+            }
+            Ok(())
+        })?;
+        Ok(m)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NatStatus {
+    Unknown,
+    /// Probes reach us directly.
+    Public,
+    /// Dial-back failed: we are behind a NAT/firewall.
+    Private,
+}
+
+#[derive(Debug)]
+pub enum AutonatEvent {
+    StatusChanged { status: NatStatus },
+}
+
+pub struct Autonat {
+    pub status: NatStatus,
+    pending_nonce: Option<(u64, Time)>,
+    events: VecDeque<AutonatEvent>,
+}
+
+impl Default for Autonat {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Autonat {
+    pub fn new() -> Autonat {
+        Autonat {
+            status: NatStatus::Unknown,
+            pending_nonce: None,
+            events: VecDeque::new(),
+        }
+    }
+
+    pub fn poll_event(&mut self) -> Option<AutonatEvent> {
+        self.events.pop_front()
+    }
+
+    /// Ask `peer` to dial us back at our bound address.
+    pub fn probe(&mut self, ctx: &mut Ctx, peer: &PeerId) -> Result<()> {
+        let nonce = ctx.net.rng.next_u64();
+        let local = ctx.swarm.local_addr;
+        let msg = AutonatMsg {
+            kind: M_DIAL_REQUEST,
+            host: local.host,
+            port: local.port as u32,
+            nonce,
+        };
+        let (cid, stream) = ctx.open_stream(peer, AUTONAT_PROTO)?;
+        ctx.send(cid, stream, &msg.encode())?;
+        ctx.finish(cid, stream);
+        self.pending_nonce = Some((nonce, ctx.now() + 3 * SECOND));
+        Ok(())
+    }
+
+    /// Server side: a DIAL_REQUEST arrived — fire the probe datagram.
+    pub fn handle_msg(&mut self, ctx: &mut Ctx, msg: &[u8]) -> Result<()> {
+        let m = AutonatMsg::decode(msg)?;
+        if m.kind == M_DIAL_REQUEST {
+            let mut probe = PROBE_MAGIC.to_vec();
+            probe.extend_from_slice(&m.nonce.to_be_bytes());
+            let target = SimAddr::new(m.host, m.port as u16);
+            let local = ctx.swarm.local_addr;
+            ctx.net.send(local, target, probe);
+        }
+        Ok(())
+    }
+
+    /// Node hook: a probe datagram arrived at our socket.
+    pub fn handle_probe_datagram(&mut self, payload: &[u8]) {
+        if payload.len() != 16 || &payload[..8] != PROBE_MAGIC {
+            return;
+        }
+        let nonce = u64::from_be_bytes(payload[8..16].try_into().unwrap());
+        if let Some((expect, _)) = self.pending_nonce {
+            if expect == nonce {
+                self.pending_nonce = None;
+                if self.status != NatStatus::Public {
+                    self.status = NatStatus::Public;
+                    self.events.push_back(AutonatEvent::StatusChanged {
+                        status: NatStatus::Public,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Tick: a probe that never landed means we're private.
+    pub fn tick(&mut self, now: Time) {
+        if let Some((_, deadline)) = self.pending_nonce {
+            if now >= deadline {
+                self.pending_nonce = None;
+                if self.status != NatStatus::Private {
+                    self.status = NatStatus::Private;
+                    self.events.push_back(AutonatEvent::StatusChanged {
+                        status: NatStatus::Private,
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_roundtrip() {
+        let m = AutonatMsg {
+            kind: M_DIAL_REQUEST,
+            host: 3,
+            port: 4001,
+            nonce: 0xDEADBEEF,
+        };
+        assert_eq!(AutonatMsg::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn probe_datagram_recognition() {
+        let mut a = Autonat::new();
+        a.pending_nonce = Some((42, 1000));
+        let mut probe = PROBE_MAGIC.to_vec();
+        probe.extend_from_slice(&42u64.to_be_bytes());
+        a.handle_probe_datagram(&probe);
+        assert_eq!(a.status, NatStatus::Public);
+        // Timeout path.
+        let mut b = Autonat::new();
+        b.pending_nonce = Some((7, 1000));
+        b.tick(2000);
+        assert_eq!(b.status, NatStatus::Private);
+    }
+}

@@ -1,0 +1,422 @@
+//! Bitswap-style block exchange: wantlists, per-peer ledgers and
+//! multi-provider fetch sessions.
+//!
+//! Protocol `/lattica/bitswap/1`: one persistent stream per peer pair,
+//! carrying WANT / HAVE / BLOCK / CANCEL messages. A [`Session`] fetches a
+//! set of CIDs by striping wants across providers, re-striping on timeout
+//! or miss — this is the "decentralized CDN" data path of Fig. 1(2/3).
+
+use super::Ctx;
+use crate::content::{Blockstore, Cid};
+use crate::identity::PeerId;
+use crate::netsim::{Time, SECOND};
+use crate::wire::{Message, PbReader, PbWriter};
+use anyhow::Result;
+use std::collections::{HashMap, HashSet, VecDeque};
+
+pub const BITSWAP_PROTO: &str = "/lattica/bitswap/1";
+
+/// Re-stripe unanswered wants after this long.
+pub const WANT_TIMEOUT: Time = SECOND;
+
+const M_WANT: u64 = 1;
+const M_BLOCK: u64 = 2;
+const M_HAVE: u64 = 3;
+const M_DONT_HAVE: u64 = 4;
+const M_CANCEL: u64 = 5;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BitswapMsg {
+    pub kind: u64,
+    pub cids: Vec<Cid>,
+    /// BLOCK: payload (one per message keeps frames small).
+    pub block: Vec<u8>,
+}
+
+impl Message for BitswapMsg {
+    fn encode_to(&self, w: &mut PbWriter) {
+        w.uint(1, self.kind);
+        for c in &self.cids {
+            w.bytes_always(2, c.as_bytes());
+        }
+        w.bytes(3, &self.block);
+    }
+
+    fn decode(buf: &[u8]) -> Result<BitswapMsg> {
+        let mut m = BitswapMsg::default();
+        PbReader::new(buf).for_each(|f| {
+            match f.number {
+                1 => m.kind = f.as_u64(),
+                2 => m.cids.push(Cid::from_bytes(f.as_bytes()?)?),
+                3 => m.block = f.as_bytes()?.to_vec(),
+                _ => {}
+            }
+            Ok(())
+        })?;
+        Ok(m)
+    }
+}
+
+/// Per-peer accounting (the paper's "ledger": debt ratio for fairness).
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+}
+
+impl Ledger {
+    /// Debt ratio: >1 means we've sent them more than received.
+    pub fn debt_ratio(&self) -> f64 {
+        self.bytes_sent as f64 / (self.bytes_received as f64 + 1.0)
+    }
+}
+
+#[derive(Debug)]
+pub enum BitswapEvent {
+    /// A wanted block arrived (already stored + verified).
+    BlockReceived { cid: Cid, from: PeerId, size: usize },
+    /// A fetch session completed (all CIDs present locally).
+    SessionComplete { session: u64 },
+    /// A session cannot progress: no provider had some CID.
+    SessionStalled { session: u64, missing: Vec<Cid> },
+}
+
+struct WantState {
+    sessions: HashSet<u64>,
+    asked: Vec<PeerId>,
+    current: Option<(PeerId, Time)>, // who we asked last + deadline
+}
+
+struct Session {
+    #[allow(dead_code)]
+    id: u64,
+    wanted: HashSet<Cid>,
+    providers: Vec<PeerId>,
+}
+
+/// The Bitswap behaviour. The node owns the [`Blockstore`] and passes it in.
+pub struct Bitswap {
+    /// Open bitswap streams per peer: peer → (cid, stream).
+    streams: HashMap<PeerId, (u64, u64)>,
+    pub ledgers: HashMap<PeerId, Ledger>,
+    wants: HashMap<Cid, WantState>,
+    sessions: HashMap<u64, Session>,
+    next_session: u64,
+    events: VecDeque<BitswapEvent>,
+    rr_counter: usize,
+}
+
+impl Default for Bitswap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bitswap {
+    pub fn new() -> Bitswap {
+        Bitswap {
+            streams: HashMap::new(),
+            ledgers: HashMap::new(),
+            wants: HashMap::new(),
+            sessions: HashMap::new(),
+            next_session: 1,
+            events: VecDeque::new(),
+            rr_counter: 0,
+        }
+    }
+
+    pub fn poll_event(&mut self) -> Option<BitswapEvent> {
+        self.events.pop_front()
+    }
+
+    fn stream_to(&mut self, ctx: &mut Ctx, peer: &PeerId) -> Result<(u64, u64)> {
+        if let Some(&(cid, stream)) = self.streams.get(peer) {
+            return Ok((cid, stream));
+        }
+        let (cid, stream) = ctx.open_stream(peer, BITSWAP_PROTO)?;
+        self.streams.insert(*peer, (cid, stream));
+        Ok((cid, stream))
+    }
+
+    /// Start fetching `cids` from `providers` (already-connected or known
+    /// peers). Returns the session id.
+    pub fn fetch(
+        &mut self,
+        ctx: &mut Ctx,
+        store: &Blockstore,
+        cids: Vec<Cid>,
+        providers: Vec<PeerId>,
+    ) -> u64 {
+        let id = self.next_session;
+        self.next_session += 1;
+        let wanted: HashSet<Cid> = cids.iter().filter(|c| !store.has(c)).copied().collect();
+        let session = Session {
+            id,
+            wanted: wanted.clone(),
+            providers: providers.clone(),
+        };
+        self.sessions.insert(id, session);
+        if wanted.is_empty() {
+            self.events.push_back(BitswapEvent::SessionComplete { session: id });
+            return id;
+        }
+        for c in wanted {
+            let w = self.wants.entry(c).or_insert_with(|| WantState {
+                sessions: HashSet::new(),
+                asked: Vec::new(),
+                current: None,
+            });
+            w.sessions.insert(id);
+        }
+        self.dispatch_wants(ctx, id);
+        id
+    }
+
+    /// Stripe pending wants of a session across its providers.
+    fn dispatch_wants(&mut self, ctx: &mut Ctx, session_id: u64) {
+        let now = ctx.now();
+        let Some(s) = self.sessions.get(&session_id) else { return };
+        let providers = s.providers.clone();
+        if providers.is_empty() {
+            let missing: Vec<Cid> = s.wanted.iter().copied().collect();
+            self.events.push_back(BitswapEvent::SessionStalled {
+                session: session_id,
+                missing,
+            });
+            return;
+        }
+        let wanted: Vec<Cid> = s.wanted.iter().copied().collect();
+        // Group assignments per provider to batch WANT messages.
+        let mut batches: HashMap<PeerId, Vec<Cid>> = HashMap::new();
+        let mut stalled = Vec::new();
+        for c in wanted {
+            let w = self.wants.get_mut(&c).expect("want state");
+            if let Some((_, deadline)) = w.current {
+                if deadline > now {
+                    continue; // outstanding ask still fresh
+                }
+            }
+            // Pick the next provider we haven't asked for this cid.
+            let next = providers
+                .iter()
+                .cycle()
+                .skip(self.rr_counter % providers.len())
+                .take(providers.len())
+                .find(|p| !w.asked.contains(p))
+                .copied();
+            self.rr_counter += 1;
+            match next {
+                Some(p) => {
+                    w.asked.push(p);
+                    w.current = Some((p, now + WANT_TIMEOUT));
+                    batches.entry(p).or_default().push(c);
+                }
+                None => {
+                    // Every provider asked once: start a fresh round next
+                    // tick (providers may come online / reconnect) and tell
+                    // the application we're cycling.
+                    w.asked.clear();
+                    w.current = None;
+                    stalled.push(c);
+                }
+            }
+        }
+        for (peer, cids) in batches {
+            match self.stream_to(ctx, &peer) {
+                Ok((cid, stream)) => {
+                    let msg = BitswapMsg {
+                        kind: M_WANT,
+                        cids,
+                        block: Vec::new(),
+                    };
+                    let _ = ctx.send(cid, stream, &msg.encode());
+                }
+                Err(_) => {
+                    // Not connected (yet): roll the asks back so the next
+                    // tick retries this provider instead of skipping it.
+                    for c in cids {
+                        if let Some(w) = self.wants.get_mut(&c) {
+                            w.asked.retain(|p| p != &peer);
+                            w.current = None;
+                        }
+                    }
+                }
+            }
+        }
+        if !stalled.is_empty() {
+            self.events.push_back(BitswapEvent::SessionStalled {
+                session: session_id,
+                missing: stalled,
+            });
+        }
+    }
+
+    /// Node hook: message on a bitswap stream.
+    pub fn handle_msg(
+        &mut self,
+        ctx: &mut Ctx,
+        store: &mut Blockstore,
+        peer: PeerId,
+        conn: u64,
+        stream: u64,
+        msg: &[u8],
+    ) -> Result<()> {
+        // Remember the stream for replies.
+        self.streams.entry(peer).or_insert((conn, stream));
+        let m = BitswapMsg::decode(msg)?;
+        match m.kind {
+            M_WANT => {
+                for c in m.cids {
+                    match store.get(&c) {
+                        Some(block) => {
+                            let reply = BitswapMsg {
+                                kind: M_BLOCK,
+                                cids: vec![c],
+                                block: (*block).clone(),
+                            };
+                            self.ledgers.entry(peer).or_default().bytes_sent +=
+                                block.len() as u64;
+                            let _ = ctx.send(conn, stream, &reply.encode());
+                        }
+                        None => {
+                            let reply = BitswapMsg {
+                                kind: M_DONT_HAVE,
+                                cids: vec![c],
+                                block: Vec::new(),
+                            };
+                            let _ = ctx.send(conn, stream, &reply.encode());
+                        }
+                    }
+                }
+            }
+            M_BLOCK => {
+                let Some(&c) = m.cids.first() else { return Ok(()) };
+                if store.put_verified(c, m.block.clone()).is_err() {
+                    log::warn!("peer {peer} sent corrupt block for {c}");
+                    return Ok(());
+                }
+                self.ledgers.entry(peer).or_default().bytes_received += m.block.len() as u64;
+                self.events.push_back(BitswapEvent::BlockReceived {
+                    cid: c,
+                    from: peer,
+                    size: m.block.len(),
+                });
+                self.on_block_arrived(ctx, store, c);
+            }
+            M_DONT_HAVE => {
+                for c in m.cids {
+                    let sessions: Vec<u64> = if let Some(w) = self.wants.get_mut(&c) {
+                        if let Some((p, _)) = w.current {
+                            if p == peer {
+                                w.current = None; // re-stripe now
+                            }
+                        }
+                        w.sessions.iter().copied().collect()
+                    } else {
+                        Vec::new()
+                    };
+                    for sid in sessions {
+                        self.dispatch_wants(ctx, sid);
+                    }
+                }
+            }
+            M_HAVE | M_CANCEL => {}
+            _ => {}
+        }
+        Ok(())
+    }
+
+    fn on_block_arrived(&mut self, ctx: &mut Ctx, store: &Blockstore, c: Cid) {
+        let Some(w) = self.wants.remove(&c) else { return };
+        for sid in w.sessions {
+            let complete = {
+                let Some(s) = self.sessions.get_mut(&sid) else { continue };
+                s.wanted.remove(&c);
+                s.wanted.is_empty()
+            };
+            if complete {
+                self.sessions.remove(&sid);
+                self.events
+                    .push_back(BitswapEvent::SessionComplete { session: sid });
+            } else {
+                let _ = ctx;
+            }
+        }
+        let _ = store;
+    }
+
+    /// Node hook: periodic tick — retry timed-out and unsent wants
+    /// (a want can be unsent if the provider connection wasn't up yet).
+    pub fn tick(&mut self, ctx: &mut Ctx) {
+        let now = ctx.now();
+        let due: Vec<u64> = self
+            .wants
+            .values()
+            .filter(|w| w.current.map_or(true, |(_, d)| d <= now))
+            .flat_map(|w| w.sessions.iter().copied())
+            .collect();
+        let unique: HashSet<u64> = due.into_iter().collect();
+        for sid in unique {
+            self.dispatch_wants(ctx, sid);
+        }
+    }
+
+    /// Node hook: peer disconnected — drop its stream and re-stripe.
+    pub fn on_peer_disconnected(&mut self, ctx: &mut Ctx, peer: PeerId) {
+        self.streams.remove(&peer);
+        let affected: HashSet<u64> = self
+            .wants
+            .values_mut()
+            .filter_map(|w| {
+                if let Some((p, _)) = w.current {
+                    if p == peer {
+                        w.current = None;
+                        return Some(w.sessions.iter().copied().collect::<Vec<_>>());
+                    }
+                }
+                None
+            })
+            .flatten()
+            .collect();
+        for sid in affected {
+            if let Some(s) = self.sessions.get_mut(&sid) {
+                s.providers.retain(|p| *p != peer);
+            }
+            self.dispatch_wants(ctx, sid);
+        }
+    }
+
+    pub fn active_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_roundtrip() {
+        let m = BitswapMsg {
+            kind: M_WANT,
+            cids: vec![Cid::of(b"a"), Cid::of(b"b")],
+            block: vec![],
+        };
+        assert_eq!(BitswapMsg::decode(&m.encode()).unwrap(), m);
+        let m = BitswapMsg {
+            kind: M_BLOCK,
+            cids: vec![Cid::of(b"xyz")],
+            block: b"xyz".to_vec(),
+        };
+        assert_eq!(BitswapMsg::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn ledger_debt_ratio() {
+        let mut l = Ledger::default();
+        assert!(l.debt_ratio() < 1e-9);
+        l.bytes_sent = 100;
+        l.bytes_received = 50;
+        assert!(l.debt_ratio() > 1.9 && l.debt_ratio() < 2.1);
+    }
+}

@@ -1,0 +1,143 @@
+//! DCUtR (`/lattica/dcutr/1`): Direct Connection Upgrade through Relay.
+//!
+//! Runs over a *relayed* connection: the two sides exchange their observed
+//! public addresses and a synchronization point, then both call
+//! [`crate::swarm::Swarm::start_punch`] simultaneously. The swarm handles
+//! path probing and migration; this protocol is the coordination layer.
+
+use super::Ctx;
+use crate::identity::PeerId;
+use crate::multiaddr::SimAddr;
+use crate::wire::{Message, PbReader, PbWriter};
+use anyhow::Result;
+use std::collections::VecDeque;
+
+pub const DCUTR_PROTO: &str = "/lattica/dcutr/1";
+
+const M_CONNECT: u64 = 1; // initiator → responder: my addrs
+const M_SYNC: u64 = 2; // responder → initiator: my addrs, punch now
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DcutrMsg {
+    pub kind: u64,
+    pub host: u32,
+    pub port: u32,
+}
+
+impl Message for DcutrMsg {
+    fn encode_to(&self, w: &mut PbWriter) {
+        w.uint(1, self.kind);
+        w.uint(2, self.host as u64);
+        w.uint(3, self.port as u64);
+    }
+
+    fn decode(buf: &[u8]) -> Result<DcutrMsg> {
+        let mut m = DcutrMsg::default();
+        PbReader::new(buf).for_each(|f| {
+            match f.number {
+                1 => m.kind = f.as_u64(),
+                2 => m.host = f.as_u64() as u32,
+                3 => m.port = f.as_u64() as u32,
+                _ => {}
+            }
+            Ok(())
+        })?;
+        Ok(m)
+    }
+}
+
+#[derive(Debug)]
+pub enum DcutrEvent {
+    /// Both sides agreed; the swarm punch has been started on `conn`.
+    PunchStarted { conn: u64, peer: PeerId },
+}
+
+#[derive(Default)]
+pub struct Dcutr {
+    events: VecDeque<DcutrEvent>,
+}
+
+impl Dcutr {
+    pub fn new() -> Dcutr {
+        Dcutr::default()
+    }
+
+    pub fn poll_event(&mut self) -> Option<DcutrEvent> {
+        self.events.pop_front()
+    }
+
+    fn best_external(ctx: &Ctx) -> Option<SimAddr> {
+        ctx.swarm.external_addrs.first().copied()
+    }
+
+    /// Initiate an upgrade on relayed connection `conn` to `peer`.
+    pub fn upgrade(&mut self, ctx: &mut Ctx, conn: u64, peer: &PeerId) -> Result<()> {
+        let ext = Self::best_external(ctx)
+            .ok_or_else(|| anyhow::anyhow!("no observed external address yet"))?;
+        let (cid, stream) = {
+            let stream = ctx.swarm.open_stream_on(ctx.net, conn, DCUTR_PROTO)?;
+            (conn, stream)
+        };
+        let msg = DcutrMsg {
+            kind: M_CONNECT,
+            host: ext.host,
+            port: ext.port as u32,
+        };
+        ctx.send(cid, stream, &msg.encode())?;
+        let _ = peer;
+        Ok(())
+    }
+
+    /// Inbound dcutr message on connection `conn`.
+    pub fn handle_msg(
+        &mut self,
+        ctx: &mut Ctx,
+        peer: PeerId,
+        conn: u64,
+        stream: u64,
+        msg: &[u8],
+    ) -> Result<()> {
+        let m = DcutrMsg::decode(msg)?;
+        let their_addr = SimAddr::new(m.host, m.port as u16);
+        match m.kind {
+            M_CONNECT => {
+                // Responder: reply with our address, then punch.
+                if let Some(ext) = Self::best_external(ctx) {
+                    let reply = DcutrMsg {
+                        kind: M_SYNC,
+                        host: ext.host,
+                        port: ext.port as u32,
+                    };
+                    ctx.send(conn, stream, &reply.encode())?;
+                    ctx.finish(conn, stream);
+                }
+                if ctx.swarm.start_punch(ctx.net, conn, their_addr).is_ok() {
+                    self.events.push_back(DcutrEvent::PunchStarted { conn, peer });
+                }
+            }
+            M_SYNC => {
+                // Initiator: punch now.
+                if ctx.swarm.start_punch(ctx.net, conn, their_addr).is_ok() {
+                    self.events.push_back(DcutrEvent::PunchStarted { conn, peer });
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_roundtrip() {
+        let m = DcutrMsg {
+            kind: M_SYNC,
+            host: 3,
+            port: 54321,
+        };
+        assert_eq!(DcutrMsg::decode(&m.encode()).unwrap(), m);
+    }
+}

@@ -1,0 +1,293 @@
+//! Gossip pub-sub (flood-sub with a seen-cache and bounded fanout).
+//!
+//! Protocol `/lattica/gossip/1`. Topics are strings; messages carry a
+//! (origin, seq) id so duplicates are suppressed. Used to announce new
+//! model versions (root CIDs) to inference clusters — Fig. 1(3).
+
+use super::Ctx;
+use crate::identity::PeerId;
+use crate::wire::{Message, PbReader, PbWriter};
+use anyhow::Result;
+use std::collections::{HashMap, HashSet, VecDeque};
+
+pub const GOSSIP_PROTO: &str = "/lattica/gossip/1";
+
+/// Max peers a message is forwarded to per hop.
+pub const FANOUT: usize = 6;
+/// Seen-cache size.
+pub const SEEN_CAP: usize = 4096;
+
+const M_PUBLISH: u64 = 1;
+const M_SUBSCRIBE: u64 = 2;
+const M_UNSUBSCRIBE: u64 = 3;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GossipMsg {
+    pub kind: u64,
+    pub topic: String,
+    pub origin: Vec<u8>,
+    pub seq: u64,
+    pub data: Vec<u8>,
+}
+
+impl Message for GossipMsg {
+    fn encode_to(&self, w: &mut PbWriter) {
+        w.uint(1, self.kind);
+        w.string(2, &self.topic);
+        w.bytes(3, &self.origin);
+        w.uint(4, self.seq);
+        w.bytes(5, &self.data);
+    }
+
+    fn decode(buf: &[u8]) -> Result<GossipMsg> {
+        let mut m = GossipMsg::default();
+        PbReader::new(buf).for_each(|f| {
+            match f.number {
+                1 => m.kind = f.as_u64(),
+                2 => m.topic = f.as_string()?,
+                3 => m.origin = f.as_bytes()?.to_vec(),
+                4 => m.seq = f.as_u64(),
+                5 => m.data = f.as_bytes()?.to_vec(),
+                _ => {}
+            }
+            Ok(())
+        })?;
+        Ok(m)
+    }
+}
+
+#[derive(Debug)]
+pub enum GossipEvent {
+    /// A message arrived on a subscribed topic.
+    Received {
+        topic: String,
+        origin: PeerId,
+        seq: u64,
+        data: Vec<u8>,
+    },
+}
+
+/// The gossip behaviour.
+pub struct Gossip {
+    local: PeerId,
+    /// Topics we subscribe to.
+    pub subscriptions: HashSet<String>,
+    /// Peer → topics they subscribe to (learned from SUBSCRIBE msgs).
+    peer_topics: HashMap<PeerId, HashSet<String>>,
+    /// Open gossip stream per peer.
+    streams: HashMap<PeerId, (u64, u64)>,
+    seen: HashSet<(Vec<u8>, u64)>,
+    seen_order: VecDeque<(Vec<u8>, u64)>,
+    next_seq: u64,
+    events: VecDeque<GossipEvent>,
+    pub messages_forwarded: u64,
+}
+
+impl Gossip {
+    pub fn new(local: PeerId) -> Gossip {
+        Gossip {
+            local,
+            subscriptions: HashSet::new(),
+            peer_topics: HashMap::new(),
+            streams: HashMap::new(),
+            seen: HashSet::new(),
+            seen_order: VecDeque::new(),
+            next_seq: 1,
+            events: VecDeque::new(),
+            messages_forwarded: 0,
+        }
+    }
+
+    pub fn poll_event(&mut self) -> Option<GossipEvent> {
+        self.events.pop_front()
+    }
+
+    fn stream_to(&mut self, ctx: &mut Ctx, peer: &PeerId) -> Result<(u64, u64)> {
+        if let Some(&s) = self.streams.get(peer) {
+            return Ok(s);
+        }
+        let s = ctx.open_stream(peer, GOSSIP_PROTO)?;
+        self.streams.insert(*peer, s);
+        Ok(s)
+    }
+
+    /// Subscribe locally and tell connected peers.
+    pub fn subscribe(&mut self, ctx: &mut Ctx, topic: &str) {
+        self.subscriptions.insert(topic.to_string());
+        let msg = GossipMsg {
+            kind: M_SUBSCRIBE,
+            topic: topic.to_string(),
+            ..Default::default()
+        };
+        let peers: Vec<PeerId> = ctx
+            .swarm
+            .peerstore
+            .known_peers()
+            .copied()
+            .filter(|p| ctx.swarm.is_connected(p))
+            .collect();
+        for p in peers {
+            if let Ok((c, s)) = self.stream_to(ctx, &p) {
+                let _ = ctx.send(c, s, &msg.encode());
+            }
+        }
+    }
+
+    /// Greet a newly connected peer with our subscriptions.
+    pub fn on_peer_connected(&mut self, ctx: &mut Ctx, peer: PeerId) {
+        let topics: Vec<String> = self.subscriptions.iter().cloned().collect();
+        for t in topics {
+            let msg = GossipMsg {
+                kind: M_SUBSCRIBE,
+                topic: t,
+                ..Default::default()
+            };
+            if let Ok((c, s)) = self.stream_to(ctx, &peer) {
+                let _ = ctx.send(c, s, &msg.encode());
+            }
+        }
+    }
+
+    pub fn on_peer_disconnected(&mut self, peer: PeerId) {
+        self.streams.remove(&peer);
+        self.peer_topics.remove(&peer);
+    }
+
+    /// Publish to a topic.
+    pub fn publish(&mut self, ctx: &mut Ctx, topic: &str, data: Vec<u8>) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let msg = GossipMsg {
+            kind: M_PUBLISH,
+            topic: topic.to_string(),
+            origin: self.local.as_bytes().to_vec(),
+            seq,
+            data,
+        };
+        self.mark_seen(msg.origin.clone(), seq);
+        self.forward(ctx, &msg, None);
+        seq
+    }
+
+    fn mark_seen(&mut self, origin: Vec<u8>, seq: u64) -> bool {
+        let key = (origin, seq);
+        if self.seen.contains(&key) {
+            return false;
+        }
+        self.seen.insert(key.clone());
+        self.seen_order.push_back(key);
+        if self.seen_order.len() > SEEN_CAP {
+            if let Some(old) = self.seen_order.pop_front() {
+                self.seen.remove(&old);
+            }
+        }
+        true
+    }
+
+    fn forward(&mut self, ctx: &mut Ctx, msg: &GossipMsg, exclude: Option<PeerId>) {
+        // Prefer peers known to subscribe; fall back to any connected peer.
+        let mut targets: Vec<PeerId> = self
+            .peer_topics
+            .iter()
+            .filter(|(_, t)| t.contains(&msg.topic))
+            .map(|(p, _)| *p)
+            .collect();
+        if targets.len() < FANOUT {
+            for p in ctx.swarm.peerstore.known_peers().copied().collect::<Vec<_>>() {
+                if !targets.contains(&p) && ctx.swarm.is_connected(&p) {
+                    targets.push(p);
+                }
+            }
+        }
+        let mut sent = 0;
+        for p in targets {
+            if Some(p) == exclude || p == self.local {
+                continue;
+            }
+            if sent >= FANOUT {
+                break;
+            }
+            if !ctx.swarm.is_connected(&p) {
+                continue;
+            }
+            if let Ok((c, s)) = self.stream_to(ctx, &p) {
+                if ctx.send(c, s, &msg.encode()).is_ok() {
+                    sent += 1;
+                    self.messages_forwarded += 1;
+                }
+            }
+        }
+    }
+
+    /// Node hook: inbound gossip message.
+    pub fn handle_msg(
+        &mut self,
+        ctx: &mut Ctx,
+        peer: PeerId,
+        conn: u64,
+        stream: u64,
+        msg: &[u8],
+    ) -> Result<()> {
+        self.streams.entry(peer).or_insert((conn, stream));
+        let m = GossipMsg::decode(msg)?;
+        match m.kind {
+            M_SUBSCRIBE => {
+                self.peer_topics.entry(peer).or_default().insert(m.topic);
+            }
+            M_UNSUBSCRIBE => {
+                if let Some(t) = self.peer_topics.get_mut(&peer) {
+                    t.remove(&m.topic);
+                }
+            }
+            M_PUBLISH => {
+                if !self.mark_seen(m.origin.clone(), m.seq) {
+                    return Ok(()); // duplicate
+                }
+                if self.subscriptions.contains(&m.topic) {
+                    let mut origin = [0u8; 32];
+                    if m.origin.len() == 32 {
+                        origin.copy_from_slice(&m.origin);
+                    }
+                    self.events.push_back(GossipEvent::Received {
+                        topic: m.topic.clone(),
+                        origin: PeerId(origin),
+                        seq: m.seq,
+                        data: m.data.clone(),
+                    });
+                }
+                self.forward(ctx, &m, Some(peer));
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::identity::Keypair;
+
+    #[test]
+    fn msg_roundtrip() {
+        let m = GossipMsg {
+            kind: M_PUBLISH,
+            topic: "models".into(),
+            origin: vec![1u8; 32],
+            seq: 42,
+            data: b"root-cid".to_vec(),
+        };
+        assert_eq!(GossipMsg::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn seen_cache_dedupes_and_bounds() {
+        let mut g = Gossip::new(Keypair::from_seed(1).peer_id());
+        assert!(g.mark_seen(vec![1], 1));
+        assert!(!g.mark_seen(vec![1], 1));
+        for i in 0..SEEN_CAP + 10 {
+            g.mark_seen(vec![2], i as u64);
+        }
+        assert!(g.seen.len() <= SEEN_CAP);
+    }
+}

@@ -1,0 +1,131 @@
+//! Identify (`/lattica/id/1`): on connection, exchange listen addresses,
+//! supported protocols, and the *observed* remote address — the raw
+//! material for AutoNAT reachability inference.
+
+use super::Ctx;
+use crate::identity::PeerId;
+use crate::multiaddr::SimAddr;
+use crate::wire::{Message, PbReader, PbWriter};
+use anyhow::Result;
+use std::collections::VecDeque;
+
+pub const IDENTIFY_PROTO: &str = "/lattica/id/1";
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct IdentifyMsg {
+    /// Our listen port (host is implicit from the connection).
+    pub listen_port: u32,
+    pub protocols: Vec<String>,
+    /// The remote's address as we observe it on this connection.
+    pub observed_host: u32,
+    pub observed_port: u32,
+    pub agent: String,
+}
+
+impl Message for IdentifyMsg {
+    fn encode_to(&self, w: &mut PbWriter) {
+        w.uint(1, self.listen_port as u64);
+        for p in &self.protocols {
+            w.bytes_always(2, p.as_bytes());
+        }
+        w.uint(3, self.observed_host as u64);
+        w.uint(4, self.observed_port as u64);
+        w.string(5, &self.agent);
+    }
+
+    fn decode(buf: &[u8]) -> Result<IdentifyMsg> {
+        let mut m = IdentifyMsg::default();
+        PbReader::new(buf).for_each(|f| {
+            match f.number {
+                1 => m.listen_port = f.as_u64() as u32,
+                2 => m.protocols.push(f.as_string()?),
+                3 => m.observed_host = f.as_u64() as u32,
+                4 => m.observed_port = f.as_u64() as u32,
+                5 => m.agent = f.as_string()?,
+                _ => {}
+            }
+            Ok(())
+        })?;
+        Ok(m)
+    }
+}
+
+#[derive(Debug)]
+pub enum IdentifyEvent {
+    /// Peer told us how it sees us.
+    ObservedSelf { addr: SimAddr, by: PeerId },
+    /// We learned a peer's info.
+    Identified { peer: PeerId, protocols: Vec<String> },
+}
+
+#[derive(Default)]
+pub struct Identify {
+    pub local_protocols: Vec<String>,
+    events: VecDeque<IdentifyEvent>,
+}
+
+impl Identify {
+    pub fn new(protocols: Vec<String>) -> Identify {
+        Identify {
+            local_protocols: protocols,
+            events: VecDeque::new(),
+        }
+    }
+
+    pub fn poll_event(&mut self) -> Option<IdentifyEvent> {
+        self.events.pop_front()
+    }
+
+    /// On connection established: push our identify to the peer.
+    pub fn on_peer_connected(&mut self, ctx: &mut Ctx, peer: PeerId, remote_addr: SimAddr) {
+        let msg = IdentifyMsg {
+            listen_port: ctx.swarm.local_addr.port as u32,
+            protocols: self.local_protocols.clone(),
+            observed_host: remote_addr.host,
+            observed_port: remote_addr.port as u32,
+            agent: "lattica/0.1".into(),
+        };
+        if let Ok((cid, stream)) = ctx.open_stream(&peer, IDENTIFY_PROTO) {
+            let _ = ctx.send(cid, stream, &msg.encode());
+            ctx.finish(cid, stream);
+        }
+    }
+
+    /// Inbound identify message.
+    pub fn handle_msg(&mut self, ctx: &mut Ctx, peer: PeerId, msg: &[u8]) -> Result<()> {
+        let m = IdentifyMsg::decode(msg)?;
+        ctx.swarm
+            .peerstore
+            .set_protocols(peer, m.protocols.clone());
+        let observed = SimAddr::new(m.observed_host, m.observed_port as u16);
+        if !ctx.swarm.external_addrs.contains(&observed) {
+            ctx.swarm.external_addrs.push(observed);
+        }
+        self.events.push_back(IdentifyEvent::ObservedSelf {
+            addr: observed,
+            by: peer,
+        });
+        self.events.push_back(IdentifyEvent::Identified {
+            peer,
+            protocols: m.protocols,
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_roundtrip() {
+        let m = IdentifyMsg {
+            listen_port: 4001,
+            protocols: vec!["/lattica/rpc/1".into(), "/lattica/kad/1".into()],
+            observed_host: 7,
+            observed_port: 30000,
+            agent: "lattica/0.1".into(),
+        };
+        assert_eq!(IdentifyMsg::decode(&m.encode()).unwrap(), m);
+    }
+}

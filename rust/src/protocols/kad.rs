@@ -1,0 +1,748 @@
+//! Kademlia DHT: XOR-metric routing table, iterative lookups, provider
+//! records and a replicated key→value record store.
+//!
+//! Protocol `/lattica/kad/1`: one stream per request; the responder answers
+//! on the same stream and finishes it. Queries run `ALPHA` probes in
+//! parallel over the k-closest candidate set, converging in O(log N) hops
+//! (measured by `benches/dht_lookup`).
+
+use super::Ctx;
+use crate::identity::PeerId;
+use crate::multiaddr::{Multiaddr, Proto, SimAddr};
+use crate::netsim::{Time, SECOND};
+use crate::wire::{Message, PbReader, PbWriter};
+use anyhow::Result;
+use std::collections::{HashMap, HashSet, VecDeque};
+
+pub const KAD_PROTO: &str = "/lattica/kad/1";
+
+/// Replication factor (bucket size and lookup breadth).
+pub const K: usize = 20;
+/// Lookup parallelism.
+pub const ALPHA: usize = 3;
+/// Per-request timeout.
+pub const REQUEST_TIMEOUT: Time = 5 * SECOND;
+
+const M_FIND_NODE: u64 = 1;
+const M_GET_PROVIDERS: u64 = 2;
+const M_ADD_PROVIDER: u64 = 3;
+const M_PUT_RECORD: u64 = 4;
+const M_GET_RECORD: u64 = 5;
+const M_REPLY: u64 = 6;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PeerEntry {
+    pub id: PeerId,
+    pub host: u32,
+    pub port: u16,
+}
+
+impl PeerEntry {
+    pub fn to_multiaddr(&self) -> Multiaddr {
+        Multiaddr::direct(SimAddr::new(self.host, self.port), Proto::QuicLike).with_peer(self.id)
+    }
+}
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct KadMsg {
+    pub kind: u64,
+    pub key: Vec<u8>,
+    /// REPLY: closer peers.
+    pub closer: Vec<PeerEntry>,
+    /// REPLY: providers of `key`.
+    pub providers: Vec<PeerEntry>,
+    /// PUT_RECORD / REPLY: record value.
+    pub value: Vec<u8>,
+    /// REPLY: whether a record was found.
+    pub found: bool,
+    /// ADD_PROVIDER: the provider's reachable endpoint.
+    pub provider: Option<PeerEntry>,
+}
+
+fn encode_entry(w: &mut PbWriter, field: u32, e: &PeerEntry) {
+    let mut inner = PbWriter::new();
+    inner.bytes_always(1, e.id.as_bytes());
+    inner.uint(2, e.host as u64);
+    inner.uint(3, e.port as u64);
+    w.bytes_always(field, &inner.finish());
+}
+
+fn decode_entry(buf: &[u8]) -> Result<PeerEntry> {
+    let mut e = PeerEntry::default();
+    PbReader::new(buf).for_each(|f| {
+        match f.number {
+            1 => {
+                let b = f.as_bytes()?;
+                anyhow::ensure!(b.len() == 32, "bad peer id");
+                let mut d = [0u8; 32];
+                d.copy_from_slice(b);
+                e.id = PeerId(d);
+            }
+            2 => e.host = f.as_u64() as u32,
+            3 => e.port = f.as_u64() as u16,
+            _ => {}
+        }
+        Ok(())
+    })?;
+    Ok(e)
+}
+
+impl Message for KadMsg {
+    fn encode_to(&self, w: &mut PbWriter) {
+        w.uint(1, self.kind);
+        w.bytes(2, &self.key);
+        for e in &self.closer {
+            encode_entry(w, 3, e);
+        }
+        for e in &self.providers {
+            encode_entry(w, 4, e);
+        }
+        w.bytes(5, &self.value);
+        w.boolean(6, self.found);
+        if let Some(p) = &self.provider {
+            encode_entry(w, 7, p);
+        }
+    }
+
+    fn decode(buf: &[u8]) -> Result<KadMsg> {
+        let mut m = KadMsg::default();
+        PbReader::new(buf).for_each(|f| {
+            match f.number {
+                1 => m.kind = f.as_u64(),
+                2 => m.key = f.as_bytes()?.to_vec(),
+                3 => m.closer.push(decode_entry(f.as_bytes()?)?),
+                4 => m.providers.push(decode_entry(f.as_bytes()?)?),
+                5 => m.value = f.as_bytes()?.to_vec(),
+                6 => m.found = f.as_bool(),
+                7 => m.provider = Some(decode_entry(f.as_bytes()?)?),
+                _ => {}
+            }
+            Ok(())
+        })?;
+        Ok(m)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Routing table
+// ---------------------------------------------------------------------------
+
+/// 256-bucket XOR routing table with k-sized buckets (LRU eviction of
+/// stale entries is approximated by replace-oldest).
+pub struct RoutingTable {
+    pub local: PeerId,
+    buckets: Vec<Vec<PeerEntry>>,
+}
+
+impl RoutingTable {
+    pub fn new(local: PeerId) -> RoutingTable {
+        RoutingTable {
+            local,
+            buckets: vec![Vec::new(); 256],
+        }
+    }
+
+    pub fn insert(&mut self, entry: PeerEntry) {
+        if entry.id == self.local {
+            return;
+        }
+        let Some(idx) = self.local.bucket_index(&entry.id) else {
+            return;
+        };
+        let bucket = &mut self.buckets[idx];
+        if let Some(pos) = bucket.iter().position(|e| e.id == entry.id) {
+            let e = bucket.remove(pos);
+            bucket.push(PeerEntry { host: entry.host, port: entry.port, ..e });
+            return;
+        }
+        if bucket.len() >= K {
+            bucket.remove(0);
+        }
+        bucket.push(entry);
+    }
+
+    pub fn remove(&mut self, id: &PeerId) {
+        if let Some(idx) = self.local.bucket_index(id) {
+            self.buckets[idx].retain(|e| e.id != *id);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buckets.iter().map(|b| b.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `n` entries closest to `key` by XOR distance.
+    pub fn closest(&self, key: &[u8; 32], n: usize) -> Vec<PeerEntry> {
+        let mut all: Vec<&PeerEntry> = self.buckets.iter().flatten().collect();
+        all.sort_by_key(|e| xor_distance(e.id.as_bytes(), key));
+        all.into_iter().take(n).cloned().collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &PeerEntry> {
+        self.buckets.iter().flatten()
+    }
+}
+
+pub fn xor_distance(a: &[u8; 32], b: &[u8; 32]) -> [u8; 32] {
+    let mut d = [0u8; 32];
+    for i in 0..32 {
+        d[i] = a[i] ^ b[i];
+    }
+    d
+}
+
+// ---------------------------------------------------------------------------
+// Query engine
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryKind {
+    FindNode,
+    GetProviders,
+    GetRecord,
+}
+
+/// A completed query's outcome.
+#[derive(Debug)]
+pub enum KadEvent {
+    QueryFinished {
+        query_id: u64,
+        key: [u8; 32],
+        kind: QueryKind,
+        closest: Vec<PeerEntry>,
+        providers: Vec<PeerEntry>,
+        record: Option<Vec<u8>>,
+        /// Hops = number of request rounds taken (O(log N) check).
+        hops: u32,
+    },
+    /// Routing table learned a new peer.
+    RoutingUpdated { peer: PeerId },
+}
+
+struct Query {
+    #[allow(dead_code)]
+    id: u64,
+    kind: QueryKind,
+    key: [u8; 32],
+    /// Candidates sorted by distance; bool = queried.
+    candidates: Vec<(PeerEntry, bool)>,
+    inflight: HashMap<(u64, u64), (PeerId, Time)>, // (cid,stream) → peer,deadline
+    providers: Vec<PeerEntry>,
+    record: Option<Vec<u8>>,
+    responded: HashSet<PeerId>,
+    hops: u32,
+    /// Stop early once providers/record found.
+    early_exit: bool,
+}
+
+/// The Kademlia behaviour.
+pub struct Kademlia {
+    pub table: RoutingTable,
+    /// Local provider records: key → providers.
+    pub provider_store: HashMap<[u8; 32], Vec<PeerEntry>>,
+    /// Local record store.
+    pub record_store: HashMap<[u8; 32], Vec<u8>>,
+    /// This node's advertised endpoint.
+    pub local_entry: PeerEntry,
+    queries: HashMap<u64, Query>,
+    next_query_id: u64,
+    /// Requests awaiting a connection to `peer`.
+    pending_sends: Vec<(PeerId, KadMsg, Option<(u64, u64)>)>, // (target, msg, query ref)
+    events: VecDeque<KadEvent>,
+}
+
+impl Kademlia {
+    pub fn new(local: PeerId, host: u32, port: u16) -> Kademlia {
+        Kademlia {
+            table: RoutingTable::new(local),
+            provider_store: HashMap::new(),
+            record_store: HashMap::new(),
+            local_entry: PeerEntry {
+                id: local,
+                host,
+                port,
+            },
+            queries: HashMap::new(),
+            next_query_id: 1,
+            pending_sends: Vec::new(),
+            events: VecDeque::new(),
+        }
+    }
+
+    pub fn poll_event(&mut self) -> Option<KadEvent> {
+        self.events.pop_front()
+    }
+
+    /// Add a bootstrap/learned peer.
+    pub fn add_address(&mut self, ctx: &mut Ctx, entry: PeerEntry) {
+        ctx.swarm
+            .peerstore
+            .add_address(entry.id, entry.to_multiaddr());
+        self.table.insert(entry.clone());
+        self.events
+            .push_back(KadEvent::RoutingUpdated { peer: entry.id });
+    }
+
+    /// Start an iterative FIND_NODE (also used for table refresh).
+    pub fn find_node(&mut self, ctx: &mut Ctx, key: [u8; 32]) -> u64 {
+        self.start_query(ctx, QueryKind::FindNode, key, false)
+    }
+
+    /// Find providers for a CID key.
+    pub fn get_providers(&mut self, ctx: &mut Ctx, key: [u8; 32]) -> u64 {
+        self.start_query(ctx, QueryKind::GetProviders, key, true)
+    }
+
+    /// Fetch a record.
+    pub fn get_record(&mut self, ctx: &mut Ctx, key: [u8; 32]) -> u64 {
+        self.start_query(ctx, QueryKind::GetRecord, key, true)
+    }
+
+    /// Announce ourselves as a provider to the k closest peers.
+    pub fn provide(&mut self, ctx: &mut Ctx, key: [u8; 32]) {
+        // Store locally, then push ADD_PROVIDER to closest known peers.
+        let me = self.local_entry.clone();
+        self.provider_store
+            .entry(key)
+            .or_default()
+            .retain(|e| e.id != me.id);
+        self.provider_store.entry(key).or_default().push(me.clone());
+        let msg = KadMsg {
+            kind: M_ADD_PROVIDER,
+            key: key.to_vec(),
+            provider: Some(me),
+            ..Default::default()
+        };
+        for target in self.table.closest(&key, K) {
+            self.send_to(ctx, target.id, msg.clone(), None);
+        }
+    }
+
+    /// Store a record on the k closest peers (and locally).
+    pub fn put_record(&mut self, ctx: &mut Ctx, key: [u8; 32], value: Vec<u8>) {
+        self.record_store.insert(key, value.clone());
+        let msg = KadMsg {
+            kind: M_PUT_RECORD,
+            key: key.to_vec(),
+            value,
+            ..Default::default()
+        };
+        for target in self.table.closest(&key, K) {
+            self.send_to(ctx, target.id, msg.clone(), None);
+        }
+    }
+
+    fn start_query(&mut self, ctx: &mut Ctx, kind: QueryKind, key: [u8; 32], early: bool) -> u64 {
+        let id = self.next_query_id;
+        self.next_query_id += 1;
+        let mut candidates: Vec<(PeerEntry, bool)> = self
+            .table
+            .closest(&key, K)
+            .into_iter()
+            .map(|e| (e, false))
+            .collect();
+        candidates.sort_by_key(|(e, _)| xor_distance(e.id.as_bytes(), &key));
+        let mut q = Query {
+            id,
+            kind,
+            key,
+            candidates,
+            inflight: HashMap::new(),
+            providers: Vec::new(),
+            record: None,
+            responded: HashSet::new(),
+            hops: 0,
+            early_exit: early,
+        };
+        // Check the local stores first.
+        if kind == QueryKind::GetProviders {
+            if let Some(p) = self.provider_store.get(&key) {
+                q.providers.extend(p.iter().cloned());
+            }
+        }
+        if kind == QueryKind::GetRecord {
+            q.record = self.record_store.get(&key).cloned();
+        }
+        self.queries.insert(id, q);
+        self.advance_query(ctx, id);
+        id
+    }
+
+    fn request_msg(kind: QueryKind, key: &[u8; 32]) -> KadMsg {
+        KadMsg {
+            kind: match kind {
+                QueryKind::FindNode => M_FIND_NODE,
+                QueryKind::GetProviders => M_GET_PROVIDERS,
+                QueryKind::GetRecord => M_GET_RECORD,
+            },
+            key: key.to_vec(),
+            ..Default::default()
+        }
+    }
+
+    fn advance_query(&mut self, ctx: &mut Ctx, qid: u64) {
+        let now = ctx.now();
+        let Some(q) = self.queries.get_mut(&qid) else { return };
+        // Early exit?
+        let done_early =
+            q.early_exit && (!q.providers.is_empty() || q.record.is_some()) && q.hops > 0;
+        // Next unqueried candidates while under parallelism.
+        let mut to_send: Vec<PeerEntry> = Vec::new();
+        if !done_early {
+            for (e, queried) in q.candidates.iter_mut() {
+                if q.inflight.len() + to_send.len() >= ALPHA {
+                    break;
+                }
+                if !*queried {
+                    *queried = true;
+                    to_send.push(e.clone());
+                }
+            }
+        }
+        let finished = q.inflight.is_empty() && to_send.is_empty();
+        let kind = q.kind;
+        let key = q.key;
+        if finished {
+            let q = self.queries.remove(&qid).unwrap();
+            let mut closest: Vec<PeerEntry> =
+                q.candidates.into_iter().map(|(e, _)| e).collect();
+            closest.sort_by_key(|e| xor_distance(e.id.as_bytes(), &key));
+            closest.truncate(K);
+            self.events.push_back(KadEvent::QueryFinished {
+                query_id: qid,
+                key,
+                kind,
+                closest,
+                providers: q.providers,
+                record: q.record,
+                hops: q.hops,
+            });
+            return;
+        }
+        let _ = now;
+        for e in to_send {
+            let msg = Self::request_msg(kind, &key);
+            self.send_to(ctx, e.id, msg, Some((qid, 0)));
+        }
+    }
+
+    /// Send a request, dialing first if necessary.
+    fn send_to(&mut self, ctx: &mut Ctx, peer: PeerId, msg: KadMsg, query: Option<(u64, u64)>) {
+        if peer == self.table.local {
+            return;
+        }
+        match ctx.ensure_connected(&peer) {
+            Ok(true) => {
+                if let Ok((cid, stream)) = ctx.open_stream(&peer, KAD_PROTO) {
+                    let _ = ctx.send(cid, stream, &msg.encode());
+                    if !matches!(
+                        msg.kind,
+                        M_ADD_PROVIDER | M_PUT_RECORD
+                    ) {
+                        if let Some((qid, _)) = query {
+                            if let Some(q) = self.queries.get_mut(&qid) {
+                                q.inflight
+                                    .insert((cid, stream), (peer, ctx.now() + REQUEST_TIMEOUT));
+                            }
+                        }
+                    } else {
+                        ctx.finish(cid, stream);
+                    }
+                } else if let Some((qid, _)) = query {
+                    self.fail_inflight_peer(ctx, qid, peer);
+                }
+            }
+            Ok(false) => {
+                // Dial in flight: queue for ConnEstablished.
+                self.pending_sends.push((peer, msg, query));
+            }
+            Err(_) => {
+                if let Some((qid, _)) = query {
+                    self.fail_inflight_peer(ctx, qid, peer);
+                }
+            }
+        }
+    }
+
+    fn fail_inflight_peer(&mut self, ctx: &mut Ctx, qid: u64, _peer: PeerId) {
+        self.advance_query(ctx, qid);
+    }
+
+    /// Node hook: a connection to `peer` is up — flush queued requests.
+    pub fn on_peer_connected(&mut self, ctx: &mut Ctx, peer: PeerId) {
+        let pending: Vec<(PeerId, KadMsg, Option<(u64, u64)>)> = {
+            let (ready, rest): (Vec<_>, Vec<_>) = self
+                .pending_sends
+                .drain(..)
+                .partition(|(p, _, _)| *p == peer);
+            self.pending_sends = rest;
+            ready
+        };
+        for (p, msg, query) in pending {
+            self.send_to(ctx, p, msg, query);
+        }
+    }
+
+    /// Node hook: dial failed or conn closed — fail pending sends to peer.
+    pub fn on_peer_unreachable(&mut self, ctx: &mut Ctx, peer: PeerId) {
+        let failed: Vec<(PeerId, KadMsg, Option<(u64, u64)>)> = {
+            let (bad, rest): (Vec<_>, Vec<_>) = self
+                .pending_sends
+                .drain(..)
+                .partition(|(p, _, _)| *p == peer);
+            self.pending_sends = rest;
+            bad
+        };
+        self.table.remove(&peer);
+        for (_, _, query) in failed {
+            if let Some((qid, _)) = query {
+                self.advance_query(ctx, qid);
+            }
+        }
+    }
+
+    /// Node hook: inbound request message on a kad stream.
+    pub fn handle_request(
+        &mut self,
+        ctx: &mut Ctx,
+        peer: PeerId,
+        cid: u64,
+        stream: u64,
+        msg: &[u8],
+    ) -> Result<()> {
+        let m = KadMsg::decode(msg)?;
+        match m.kind {
+            M_FIND_NODE | M_GET_PROVIDERS | M_GET_RECORD => {
+                let mut key = [0u8; 32];
+                if m.key.len() == 32 {
+                    key.copy_from_slice(&m.key);
+                }
+                let mut reply = KadMsg {
+                    kind: M_REPLY,
+                    key: m.key.clone(),
+                    closer: self.table.closest(&key, K),
+                    ..Default::default()
+                };
+                if m.kind == M_GET_PROVIDERS {
+                    if let Some(p) = self.provider_store.get(&key) {
+                        reply.providers = p.clone();
+                    }
+                }
+                if m.kind == M_GET_RECORD {
+                    if let Some(v) = self.record_store.get(&key) {
+                        reply.value = v.clone();
+                        reply.found = true;
+                    }
+                }
+                ctx.send(cid, stream, &reply.encode())?;
+                ctx.finish(cid, stream);
+            }
+            M_ADD_PROVIDER => {
+                let mut key = [0u8; 32];
+                if m.key.len() == 32 {
+                    key.copy_from_slice(&m.key);
+                }
+                if let Some(p) = m.provider {
+                    // Only accept provider records attributed to the
+                    // authenticated sender (Castro et al. secure routing).
+                    if p.id == peer {
+                        let list = self.provider_store.entry(key).or_default();
+                        list.retain(|e| e.id != p.id);
+                        list.push(p);
+                        if list.len() > 2 * K {
+                            list.remove(0);
+                        }
+                    }
+                }
+            }
+            M_PUT_RECORD => {
+                let mut key = [0u8; 32];
+                if m.key.len() == 32 {
+                    key.copy_from_slice(&m.key);
+                }
+                self.record_store.insert(key, m.value);
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Node hook: response message on a stream we opened.
+    pub fn handle_response(&mut self, ctx: &mut Ctx, cid: u64, stream: u64, msg: &[u8]) {
+        let Ok(m) = KadMsg::decode(msg) else { return };
+        if m.kind != M_REPLY {
+            return;
+        }
+        // Find the owning query.
+        let qid = self
+            .queries
+            .iter()
+            .find(|(_, q)| q.inflight.contains_key(&(cid, stream)))
+            .map(|(id, _)| *id);
+        let Some(qid) = qid else { return };
+        {
+            let q = self.queries.get_mut(&qid).unwrap();
+            let (peer, _) = q.inflight.remove(&(cid, stream)).unwrap();
+            q.responded.insert(peer);
+            q.hops += 1;
+            for p in &m.providers {
+                if !q.providers.iter().any(|e| e.id == p.id) {
+                    q.providers.push(p.clone());
+                }
+            }
+            if m.found && q.record.is_none() {
+                q.record = Some(m.value.clone());
+            }
+        }
+        // Learn closer peers (update table + candidates).
+        for e in &m.closer {
+            self.table.insert(e.clone());
+            ctx.swarm.peerstore.add_address(e.id, e.to_multiaddr());
+            let q = self.queries.get_mut(&qid).unwrap();
+            if !q.candidates.iter().any(|(c, _)| c.id == e.id) && e.id != self.table.local {
+                q.candidates.push((e.clone(), false));
+            }
+        }
+        let key = self.queries[&qid].key;
+        let q = self.queries.get_mut(&qid).unwrap();
+        q.candidates
+            .sort_by_key(|(e, _)| xor_distance(e.id.as_bytes(), &key));
+        q.candidates.truncate(3 * K);
+        self.advance_query(ctx, qid);
+    }
+
+    /// Periodic tick: expire stalled requests.
+    pub fn tick(&mut self, ctx: &mut Ctx) {
+        let now = ctx.now();
+        let qids: Vec<u64> = self.queries.keys().copied().collect();
+        for qid in qids {
+            let expired: Vec<(u64, u64)> = self
+                .queries
+                .get(&qid)
+                .map(|q| {
+                    q.inflight
+                        .iter()
+                        .filter(|(_, (_, dl))| *dl <= now)
+                        .map(|(k, _)| *k)
+                        .collect()
+                })
+                .unwrap_or_default();
+            if !expired.is_empty() {
+                for k in expired {
+                    if let Some(q) = self.queries.get_mut(&qid) {
+                        q.inflight.remove(&k);
+                        let _ = ctx; // stream will be reset by peer or idle out
+                    }
+                }
+                self.advance_query(ctx, qid);
+            }
+        }
+    }
+
+    pub fn active_queries(&self) -> usize {
+        self.queries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::identity::Keypair;
+
+    fn entry(seed: u64) -> PeerEntry {
+        PeerEntry {
+            id: Keypair::from_seed(seed).peer_id(),
+            host: seed as u32,
+            port: 4001,
+        }
+    }
+
+    #[test]
+    fn kad_msg_roundtrip() {
+        let m = KadMsg {
+            kind: M_REPLY,
+            key: vec![7u8; 32],
+            closer: vec![entry(1), entry(2)],
+            providers: vec![entry(3)],
+            value: b"record".to_vec(),
+            found: true,
+            provider: Some(entry(4)),
+        };
+        assert_eq!(KadMsg::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn routing_table_insert_and_closest() {
+        let local = Keypair::from_seed(0).peer_id();
+        let mut rt = RoutingTable::new(local);
+        for s in 1..=50u64 {
+            rt.insert(entry(s));
+        }
+        // Random ids concentrate in the top buckets; K-bucket eviction may
+        // drop a few, but most survive.
+        let before = rt.len();
+        assert!((40..=50).contains(&before), "len={before}");
+        // Self never inserted.
+        rt.insert(PeerEntry {
+            id: local,
+            host: 9,
+            port: 9,
+        });
+        assert_eq!(rt.len(), before);
+        let key = *Keypair::from_seed(99).peer_id().as_bytes();
+        let closest = rt.closest(&key, 10);
+        assert_eq!(closest.len(), 10);
+        // Verify ordering by XOR distance.
+        for w in closest.windows(2) {
+            assert!(
+                xor_distance(w[0].id.as_bytes(), &key) <= xor_distance(w[1].id.as_bytes(), &key)
+            );
+        }
+        // And that they really are the 10 closest of all 50.
+        let mut all: Vec<PeerEntry> = rt.iter().cloned().collect();
+        all.sort_by_key(|e| xor_distance(e.id.as_bytes(), &key));
+        assert_eq!(
+            closest.iter().map(|e| e.id).collect::<Vec<_>>(),
+            all[..10].iter().map(|e| e.id).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn routing_table_update_refreshes_addr() {
+        let mut rt = RoutingTable::new(Keypair::from_seed(0).peer_id());
+        let mut e = entry(5);
+        rt.insert(e.clone());
+        e.port = 9999;
+        rt.insert(e.clone());
+        assert_eq!(rt.len(), 1);
+        assert_eq!(rt.iter().next().unwrap().port, 9999);
+    }
+
+    #[test]
+    fn bucket_bounded_at_k() {
+        // Many peers in the same far bucket: stays ≤ K.
+        let local = Keypair::from_seed(0).peer_id();
+        let mut rt = RoutingTable::new(local);
+        for s in 1..=200u64 {
+            rt.insert(entry(s));
+        }
+        let key = *local.as_bytes();
+        let _ = key;
+        for b in 0..256 {
+            let count = rt.iter().filter(|e| local.bucket_index(&e.id) == Some(b)).count();
+            assert!(count <= K, "bucket {b} has {count}");
+        }
+    }
+
+    #[test]
+    fn xor_distance_is_metric_like() {
+        let a = *Keypair::from_seed(1).peer_id().as_bytes();
+        let b = *Keypair::from_seed(2).peer_id().as_bytes();
+        assert_eq!(xor_distance(&a, &a), [0u8; 32]);
+        assert_eq!(xor_distance(&a, &b), xor_distance(&b, &a));
+    }
+}

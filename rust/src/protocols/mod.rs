@@ -1,0 +1,77 @@
+//! Application protocols running over swarm streams.
+//!
+//! Each protocol is a state machine owned by the node; the node routes
+//! [`crate::swarm::SwarmEvent`]s to it by protocol name and passes a
+//! [`Ctx`] so handlers can open streams, send messages and dial peers.
+
+pub mod kad;
+pub mod bitswap;
+pub mod gossip;
+pub mod ping;
+pub mod identify;
+pub mod autonat;
+pub mod rendezvous;
+pub mod dcutr;
+
+use crate::identity::PeerId;
+use crate::multiaddr::Multiaddr;
+use crate::netsim::Net;
+use crate::swarm::Swarm;
+
+/// Mutable access to the node's networking for protocol handlers.
+pub struct Ctx<'a> {
+    pub swarm: &'a mut Swarm,
+    pub net: &'a mut Net,
+}
+
+impl<'a> Ctx<'a> {
+    pub fn new(swarm: &'a mut Swarm, net: &'a mut Net) -> Ctx<'a> {
+        Ctx { swarm, net }
+    }
+
+    pub fn local_peer(&self) -> PeerId {
+        self.swarm.local_peer
+    }
+
+    pub fn now(&self) -> crate::netsim::Time {
+        self.net.now()
+    }
+
+    /// Open a stream to a connected peer.
+    pub fn open_stream(&mut self, peer: &PeerId, proto: &str) -> anyhow::Result<(u64, u64)> {
+        self.swarm.open_stream(self.net, peer, proto)
+    }
+
+    pub fn send(&mut self, cid: u64, stream: u64, msg: &[u8]) -> anyhow::Result<()> {
+        self.swarm.send_msg(self.net, cid, stream, msg)
+    }
+
+    pub fn finish(&mut self, cid: u64, stream: u64) {
+        self.swarm.finish_stream(self.net, cid, stream)
+    }
+
+    pub fn reset(&mut self, cid: u64, stream: u64, error: &str) {
+        self.swarm.reset_stream(self.net, cid, stream, error)
+    }
+
+    /// Dial a peer if not already connected; returns true if connected now,
+    /// false if a dial is in flight (caller retries on ConnEstablished).
+    pub fn ensure_connected(&mut self, peer: &PeerId) -> anyhow::Result<bool> {
+        if self.swarm.is_connected(peer) {
+            return Ok(true);
+        }
+        let addr = self
+            .swarm
+            .peerstore
+            .addrs(peer)
+            .first()
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("no known address for {peer}"))?;
+        self.dial(&addr)?;
+        Ok(false)
+    }
+
+    pub fn dial(&mut self, addr: &Multiaddr) -> anyhow::Result<u64> {
+        self.swarm.dial(self.net, addr)
+    }
+}

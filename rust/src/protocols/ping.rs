@@ -1,0 +1,60 @@
+//! Liveness + RTT measurement (`/lattica/ping/1`): echo a 32-byte payload.
+
+use super::Ctx;
+use crate::identity::PeerId;
+use crate::netsim::Time;
+use anyhow::Result;
+use std::collections::{HashMap, VecDeque};
+
+pub const PING_PROTO: &str = "/lattica/ping/1";
+
+#[derive(Debug)]
+pub enum PingEvent {
+    Rtt { peer: PeerId, rtt: Time },
+}
+
+#[derive(Default)]
+pub struct Ping {
+    outstanding: HashMap<(u64, u64), (PeerId, Time, Vec<u8>)>,
+    events: VecDeque<PingEvent>,
+}
+
+impl Ping {
+    pub fn new() -> Ping {
+        Ping::default()
+    }
+
+    pub fn poll_event(&mut self) -> Option<PingEvent> {
+        self.events.pop_front()
+    }
+
+    pub fn ping(&mut self, ctx: &mut Ctx, peer: &PeerId) -> Result<()> {
+        let (cid, stream) = ctx.open_stream(peer, PING_PROTO)?;
+        let payload = {
+            let mut p = vec![0u8; 32];
+            ctx.net.rng.fill_bytes(&mut p);
+            p
+        };
+        ctx.send(cid, stream, &payload)?;
+        self.outstanding
+            .insert((cid, stream), (*peer, ctx.now(), payload));
+        Ok(())
+    }
+
+    /// Inbound message: echo if it's a request, record RTT if a response.
+    pub fn handle_msg(&mut self, ctx: &mut Ctx, cid: u64, stream: u64, msg: &[u8]) {
+        if let Some((peer, sent_at, payload)) = self.outstanding.remove(&(cid, stream)) {
+            if payload == msg {
+                self.events.push_back(PingEvent::Rtt {
+                    peer,
+                    rtt: ctx.now().saturating_sub(sent_at),
+                });
+            }
+            ctx.finish(cid, stream);
+        } else {
+            // Server side: echo and finish.
+            let _ = ctx.send(cid, stream, msg);
+            ctx.finish(cid, stream);
+        }
+    }
+}

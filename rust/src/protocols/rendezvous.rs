@@ -1,0 +1,216 @@
+//! Rendezvous (`/lattica/rendezvous/1`): namespace registration/discovery
+//! for expedited peer discovery (faster than a DHT walk for small groups).
+
+use super::Ctx;
+use crate::identity::PeerId;
+use crate::netsim::{Time, SECOND};
+use crate::protocols::kad::PeerEntry;
+use crate::wire::{Message, PbReader, PbWriter};
+use anyhow::Result;
+use std::collections::{HashMap, VecDeque};
+
+pub const RENDEZVOUS_PROTO: &str = "/lattica/rendezvous/1";
+
+/// Registrations expire after this long without refresh.
+pub const REGISTRATION_TTL: Time = 120 * SECOND;
+
+const M_REGISTER: u64 = 1;
+const M_DISCOVER: u64 = 2;
+const M_PEERS: u64 = 3;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RendezvousMsg {
+    pub kind: u64,
+    pub namespace: String,
+    pub port: u32,
+    pub peers: Vec<PeerEntry>,
+}
+
+impl Message for RendezvousMsg {
+    fn encode_to(&self, w: &mut PbWriter) {
+        w.uint(1, self.kind);
+        w.string(2, &self.namespace);
+        w.uint(3, self.port as u64);
+        for e in &self.peers {
+            let mut inner = PbWriter::new();
+            inner.bytes_always(1, e.id.as_bytes());
+            inner.uint(2, e.host as u64);
+            inner.uint(3, e.port as u64);
+            w.bytes_always(4, &inner.finish());
+        }
+    }
+
+    fn decode(buf: &[u8]) -> Result<RendezvousMsg> {
+        let mut m = RendezvousMsg::default();
+        PbReader::new(buf).for_each(|f| {
+            match f.number {
+                1 => m.kind = f.as_u64(),
+                2 => m.namespace = f.as_string()?,
+                3 => m.port = f.as_u64() as u32,
+                4 => {
+                    let mut e = PeerEntry::default();
+                    PbReader::new(f.as_bytes()?).for_each(|g| {
+                        match g.number {
+                            1 => {
+                                let b = g.as_bytes()?;
+                                anyhow::ensure!(b.len() == 32, "bad id");
+                                let mut d = [0u8; 32];
+                                d.copy_from_slice(b);
+                                e.id = PeerId(d);
+                            }
+                            2 => e.host = g.as_u64() as u32,
+                            3 => e.port = g.as_u64() as u16,
+                            _ => {}
+                        }
+                        Ok(())
+                    })?;
+                    m.peers.push(e);
+                }
+                _ => {}
+            }
+            Ok(())
+        })?;
+        Ok(m)
+    }
+}
+
+#[derive(Debug)]
+pub enum RendezvousEvent {
+    Discovered {
+        namespace: String,
+        peers: Vec<PeerEntry>,
+    },
+}
+
+/// Both roles: server (registry) and client.
+pub struct Rendezvous {
+    /// Server: namespace → (peer, entry, expiry).
+    registry: HashMap<String, Vec<(PeerEntry, Time)>>,
+    /// Client: discover requests awaiting replies, by (cid, stream).
+    pending: HashMap<(u64, u64), String>,
+    events: VecDeque<RendezvousEvent>,
+    pub is_server: bool,
+}
+
+impl Rendezvous {
+    pub fn new(is_server: bool) -> Rendezvous {
+        Rendezvous {
+            registry: HashMap::new(),
+            pending: HashMap::new(),
+            events: VecDeque::new(),
+            is_server,
+        }
+    }
+
+    pub fn poll_event(&mut self) -> Option<RendezvousEvent> {
+        self.events.pop_front()
+    }
+
+    /// Register ourselves under `namespace` at a rendezvous server.
+    pub fn register(&mut self, ctx: &mut Ctx, server: &PeerId, namespace: &str) -> Result<()> {
+        let msg = RendezvousMsg {
+            kind: M_REGISTER,
+            namespace: namespace.to_string(),
+            port: ctx.swarm.local_addr.port as u32,
+            peers: vec![],
+        };
+        let (cid, stream) = ctx.open_stream(server, RENDEZVOUS_PROTO)?;
+        ctx.send(cid, stream, &msg.encode())?;
+        ctx.finish(cid, stream);
+        Ok(())
+    }
+
+    /// Ask a rendezvous server who is registered under `namespace`.
+    pub fn discover(&mut self, ctx: &mut Ctx, server: &PeerId, namespace: &str) -> Result<()> {
+        let msg = RendezvousMsg {
+            kind: M_DISCOVER,
+            namespace: namespace.to_string(),
+            ..Default::default()
+        };
+        let (cid, stream) = ctx.open_stream(server, RENDEZVOUS_PROTO)?;
+        ctx.send(cid, stream, &msg.encode())?;
+        self.pending.insert((cid, stream), namespace.to_string());
+        Ok(())
+    }
+
+    /// Inbound message (either role).
+    pub fn handle_msg(
+        &mut self,
+        ctx: &mut Ctx,
+        peer: PeerId,
+        remote_host: u32,
+        cid: u64,
+        stream: u64,
+        msg: &[u8],
+    ) -> Result<()> {
+        let m = RendezvousMsg::decode(msg)?;
+        match m.kind {
+            M_REGISTER if self.is_server => {
+                let entry = PeerEntry {
+                    id: peer,
+                    host: remote_host,
+                    port: m.port as u16,
+                };
+                let now = ctx.now();
+                let list = self.registry.entry(m.namespace).or_default();
+                list.retain(|(e, _)| e.id != peer);
+                list.push((entry, now + REGISTRATION_TTL));
+            }
+            M_DISCOVER if self.is_server => {
+                let now = ctx.now();
+                let peers: Vec<PeerEntry> = self
+                    .registry
+                    .get(&m.namespace)
+                    .map(|l| {
+                        l.iter()
+                            .filter(|(_, exp)| *exp > now)
+                            .map(|(e, _)| e.clone())
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                let reply = RendezvousMsg {
+                    kind: M_PEERS,
+                    namespace: m.namespace,
+                    peers,
+                    ..Default::default()
+                };
+                ctx.send(cid, stream, &reply.encode())?;
+                ctx.finish(cid, stream);
+            }
+            M_PEERS => {
+                if let Some(ns) = self.pending.remove(&(cid, stream)) {
+                    for e in &m.peers {
+                        ctx.swarm.peerstore.add_address(e.id, e.to_multiaddr());
+                    }
+                    self.events.push_back(RendezvousEvent::Discovered {
+                        namespace: ns,
+                        peers: m.peers,
+                    });
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::identity::Keypair;
+
+    #[test]
+    fn msg_roundtrip() {
+        let m = RendezvousMsg {
+            kind: M_PEERS,
+            namespace: "inference-cluster-a".into(),
+            port: 4001,
+            peers: vec![PeerEntry {
+                id: Keypair::from_seed(1).peer_id(),
+                host: 4,
+                port: 4001,
+            }],
+        };
+        assert_eq!(RendezvousMsg::decode(&m.encode()).unwrap(), m);
+    }
+}

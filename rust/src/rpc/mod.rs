@@ -1,0 +1,523 @@
+//! Dual-plane RPC (§2 "RPC and Streaming for Training and Inference").
+//!
+//! * **Unary plane** (`/lattica/rpc/1`) — request/response for control
+//!   operations (health, shard placement, version queries). One stream per
+//!   call; idempotent retries are driven by the caller (see
+//!   [`crate::shard`] for the shard-aware stub with DHT failover).
+//! * **Streaming plane** (`/lattica/rpc-stream/1`) — long-lived flows for
+//!   tensors. Application-level credit grants ride on top of the
+//!   transport's byte-level flow control, so a slow consumer throttles the
+//!   producer at message granularity (the paper's "adaptive backpressure").
+
+use crate::identity::PeerId;
+use crate::netsim::{Time, SECOND};
+use crate::protocols::Ctx;
+use crate::wire::{Message, PbReader, PbWriter};
+use anyhow::Result;
+use std::collections::{HashMap, VecDeque};
+
+pub const RPC_PROTO: &str = "/lattica/rpc/1";
+pub const RPC_STREAM_PROTO: &str = "/lattica/rpc-stream/1";
+
+/// Default unary deadline.
+pub const CALL_TIMEOUT: Time = 10 * SECOND;
+/// Initial message credits granted to a stream sender.
+pub const INITIAL_CREDITS: u32 = 16;
+/// Grant more credits once the receiver consumed this many.
+pub const CREDIT_BATCH: u32 = 8;
+
+const M_REQUEST: u64 = 1;
+const M_RESPONSE: u64 = 2;
+const M_STREAM_OPEN: u64 = 3;
+const M_STREAM_ITEM: u64 = 4;
+const M_STREAM_CREDIT: u64 = 5;
+const M_STREAM_END: u64 = 6;
+
+/// Response status.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    Ok = 0,
+    NotFound = 1,
+    Error = 2,
+    Unavailable = 3,
+}
+
+impl Status {
+    fn from_u64(v: u64) -> Status {
+        match v {
+            0 => Status::Ok,
+            1 => Status::NotFound,
+            3 => Status::Unavailable,
+            _ => Status::Error,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RpcMsg {
+    pub kind: u64,
+    pub service: String,
+    pub method: String,
+    pub payload: Vec<u8>,
+    pub status: u64,
+    /// STREAM_*: item sequence or credit count.
+    pub seq: u64,
+}
+
+impl Message for RpcMsg {
+    fn encode_to(&self, w: &mut PbWriter) {
+        w.uint(1, self.kind);
+        w.string(2, &self.service);
+        w.string(3, &self.method);
+        w.bytes(4, &self.payload);
+        w.uint(5, self.status);
+        w.uint(6, self.seq);
+    }
+
+    fn decode(buf: &[u8]) -> Result<RpcMsg> {
+        let mut m = RpcMsg::default();
+        PbReader::new(buf).for_each(|f| {
+            match f.number {
+                1 => m.kind = f.as_u64(),
+                2 => m.service = f.as_string()?,
+                3 => m.method = f.as_string()?,
+                4 => m.payload = f.as_bytes()?.to_vec(),
+                5 => m.status = f.as_u64(),
+                6 => m.seq = f.as_u64(),
+                _ => {}
+            }
+            Ok(())
+        })?;
+        Ok(m)
+    }
+}
+
+/// Handle identifying an in-progress inbound request (for replies).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ReplyHandle {
+    pub conn: u64,
+    pub stream: u64,
+}
+
+/// Handle identifying an RPC stream (either direction).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StreamHandle {
+    pub conn: u64,
+    pub stream: u64,
+}
+
+#[derive(Debug)]
+pub enum RpcEvent {
+    /// Server side: a unary request arrived; reply via [`RpcNode::respond`].
+    Request {
+        peer: PeerId,
+        service: String,
+        method: String,
+        payload: Vec<u8>,
+        reply: ReplyHandle,
+    },
+    /// Client side: a unary call finished.
+    Response {
+        call_id: u64,
+        status: Status,
+        payload: Vec<u8>,
+        /// Round-trip time of this call.
+        rtt: Time,
+    },
+    /// Client side: call failed locally (timeout / disconnect).
+    CallFailed { call_id: u64, reason: String },
+    /// Server side: peer opened an RPC stream.
+    StreamOpened {
+        peer: PeerId,
+        service: String,
+        handle: StreamHandle,
+    },
+    /// An item arrived on an RPC stream.
+    StreamItem {
+        handle: StreamHandle,
+        seq: u64,
+        payload: Vec<u8>,
+    },
+    /// Stream finished cleanly.
+    StreamEnded { handle: StreamHandle },
+    /// Sender: more credits granted (can send again).
+    CreditsAvailable { handle: StreamHandle, credits: u32 },
+}
+
+struct PendingCall {
+    call_id: u64,
+    deadline: Time,
+    sent_at: Time,
+}
+
+struct StreamState {
+    /// Credits we may still spend sending.
+    send_credits: u32,
+    /// Items received since the last credit grant.
+    recv_since_grant: u32,
+    /// Outbound items waiting for credits.
+    backlog: VecDeque<Vec<u8>>,
+    next_seq: u64,
+    ended: bool,
+}
+
+/// Per-node RPC state.
+pub struct RpcNode {
+    /// (conn, stream) → pending unary call.
+    calls: HashMap<(u64, u64), PendingCall>,
+    next_call_id: u64,
+    streams: HashMap<StreamHandle, StreamState>,
+    events: VecDeque<RpcEvent>,
+    /// Counters for metrics.
+    pub calls_sent: u64,
+    pub calls_served: u64,
+}
+
+impl Default for RpcNode {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RpcNode {
+    pub fn new() -> RpcNode {
+        RpcNode {
+            calls: HashMap::new(),
+            next_call_id: 1,
+            streams: HashMap::new(),
+            events: VecDeque::new(),
+            calls_sent: 0,
+            calls_served: 0,
+        }
+    }
+
+    pub fn poll_event(&mut self) -> Option<RpcEvent> {
+        self.events.pop_front()
+    }
+
+    // ------------------------------------------------------------------
+    // Unary plane
+    // ------------------------------------------------------------------
+
+    /// Issue a unary call to a connected peer. Returns the call id.
+    pub fn call(
+        &mut self,
+        ctx: &mut Ctx,
+        peer: &PeerId,
+        service: &str,
+        method: &str,
+        payload: &[u8],
+    ) -> Result<u64> {
+        let (conn, stream) = ctx.open_stream(peer, RPC_PROTO)?;
+        let msg = RpcMsg {
+            kind: M_REQUEST,
+            service: service.to_string(),
+            method: method.to_string(),
+            payload: payload.to_vec(),
+            ..Default::default()
+        };
+        ctx.send(conn, stream, &msg.encode())?;
+        let call_id = self.next_call_id;
+        self.next_call_id += 1;
+        self.calls.insert(
+            (conn, stream),
+            PendingCall {
+                call_id,
+                deadline: ctx.now() + CALL_TIMEOUT,
+                sent_at: ctx.now(),
+            },
+        );
+        self.calls_sent += 1;
+        Ok(call_id)
+    }
+
+    /// Server side: reply to an inbound request.
+    pub fn respond(
+        &mut self,
+        ctx: &mut Ctx,
+        reply: ReplyHandle,
+        status: Status,
+        payload: &[u8],
+    ) -> Result<()> {
+        let msg = RpcMsg {
+            kind: M_RESPONSE,
+            status: status as u64,
+            payload: payload.to_vec(),
+            ..Default::default()
+        };
+        ctx.send(reply.conn, reply.stream, &msg.encode())?;
+        ctx.finish(reply.conn, reply.stream);
+        self.calls_served += 1;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Streaming plane
+    // ------------------------------------------------------------------
+
+    /// Open an RPC stream to a peer for `service`.
+    pub fn open_rpc_stream(
+        &mut self,
+        ctx: &mut Ctx,
+        peer: &PeerId,
+        service: &str,
+    ) -> Result<StreamHandle> {
+        let (conn, stream) = ctx.open_stream(peer, RPC_STREAM_PROTO)?;
+        let msg = RpcMsg {
+            kind: M_STREAM_OPEN,
+            service: service.to_string(),
+            ..Default::default()
+        };
+        ctx.send(conn, stream, &msg.encode())?;
+        let handle = StreamHandle { conn, stream };
+        self.streams.insert(
+            handle,
+            StreamState {
+                send_credits: INITIAL_CREDITS,
+                recv_since_grant: 0,
+                backlog: VecDeque::new(),
+                next_seq: 0,
+                ended: false,
+            },
+        );
+        Ok(handle)
+    }
+
+    /// Send an item; queued if out of credits. Returns the backlog depth
+    /// (the producer's backpressure signal — "writers monitor queue depth").
+    pub fn send_item(&mut self, ctx: &mut Ctx, handle: StreamHandle, payload: Vec<u8>) -> usize {
+        let Some(s) = self.streams.get_mut(&handle) else { return 0 };
+        s.backlog.push_back(payload);
+        Self::drain_backlog(ctx, handle, s);
+        s.backlog.len()
+    }
+
+    fn drain_backlog(ctx: &mut Ctx, handle: StreamHandle, s: &mut StreamState) {
+        while s.send_credits > 0 && !s.backlog.is_empty() {
+            let payload = s.backlog.pop_front().unwrap();
+            let msg = RpcMsg {
+                kind: M_STREAM_ITEM,
+                payload,
+                seq: s.next_seq,
+                ..Default::default()
+            };
+            s.next_seq += 1;
+            s.send_credits -= 1;
+            let _ = ctx.send(handle.conn, handle.stream, &msg.encode());
+        }
+    }
+
+    /// Close a stream cleanly (after the backlog drains).
+    pub fn end_stream(&mut self, ctx: &mut Ctx, handle: StreamHandle) {
+        if let Some(s) = self.streams.get_mut(&handle) {
+            s.ended = true;
+            if s.backlog.is_empty() {
+                let msg = RpcMsg {
+                    kind: M_STREAM_END,
+                    ..Default::default()
+                };
+                let _ = ctx.send(handle.conn, handle.stream, &msg.encode());
+                ctx.finish(handle.conn, handle.stream);
+            }
+        }
+    }
+
+    /// Outstanding backlog for a stream (backpressure introspection).
+    pub fn backlog(&self, handle: StreamHandle) -> usize {
+        self.streams.get(&handle).map_or(0, |s| s.backlog.len())
+    }
+
+    // ------------------------------------------------------------------
+    // Node hooks
+    // ------------------------------------------------------------------
+
+    /// Inbound message on an `/lattica/rpc/1` stream.
+    pub fn handle_unary_msg(
+        &mut self,
+        ctx: &mut Ctx,
+        peer: PeerId,
+        conn: u64,
+        stream: u64,
+        msg: &[u8],
+    ) -> Result<()> {
+        let m = RpcMsg::decode(msg)?;
+        match m.kind {
+            M_REQUEST => {
+                self.events.push_back(RpcEvent::Request {
+                    peer,
+                    service: m.service,
+                    method: m.method,
+                    payload: m.payload,
+                    reply: ReplyHandle { conn, stream },
+                });
+            }
+            M_RESPONSE => {
+                if let Some(call) = self.calls.remove(&(conn, stream)) {
+                    self.events.push_back(RpcEvent::Response {
+                        call_id: call.call_id,
+                        status: Status::from_u64(m.status),
+                        payload: m.payload,
+                        rtt: ctx.now().saturating_sub(call.sent_at),
+                    });
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Inbound message on an `/lattica/rpc-stream/1` stream.
+    pub fn handle_stream_msg(
+        &mut self,
+        ctx: &mut Ctx,
+        peer: PeerId,
+        conn: u64,
+        stream: u64,
+        msg: &[u8],
+    ) -> Result<()> {
+        let handle = StreamHandle { conn, stream };
+        let m = RpcMsg::decode(msg)?;
+        match m.kind {
+            M_STREAM_OPEN => {
+                self.streams.insert(
+                    handle,
+                    StreamState {
+                        send_credits: INITIAL_CREDITS,
+                        recv_since_grant: 0,
+                        backlog: VecDeque::new(),
+                        next_seq: 0,
+                        ended: false,
+                    },
+                );
+                self.events.push_back(RpcEvent::StreamOpened {
+                    peer,
+                    service: m.service,
+                    handle,
+                });
+            }
+            M_STREAM_ITEM => {
+                self.events.push_back(RpcEvent::StreamItem {
+                    handle,
+                    seq: m.seq,
+                    payload: m.payload,
+                });
+                // Zero-copy note: in this in-process simulation the payload
+                // is moved, not copied, from the transport reassembly buffer.
+                if let Some(s) = self.streams.get_mut(&handle) {
+                    s.recv_since_grant += 1;
+                    if s.recv_since_grant >= CREDIT_BATCH {
+                        let grant = RpcMsg {
+                            kind: M_STREAM_CREDIT,
+                            seq: s.recv_since_grant as u64,
+                            ..Default::default()
+                        };
+                        s.recv_since_grant = 0;
+                        let _ = ctx.send(conn, stream, &grant.encode());
+                    }
+                }
+            }
+            M_STREAM_CREDIT => {
+                if let Some(s) = self.streams.get_mut(&handle) {
+                    s.send_credits += m.seq as u32;
+                    Self::drain_backlog(ctx, handle, s);
+                    let credits = s.send_credits;
+                    if s.ended && s.backlog.is_empty() {
+                        let end = RpcMsg {
+                            kind: M_STREAM_END,
+                            ..Default::default()
+                        };
+                        let _ = ctx.send(conn, stream, &end.encode());
+                        ctx.finish(conn, stream);
+                    } else if credits > 0 {
+                        self.events.push_back(RpcEvent::CreditsAvailable {
+                            handle,
+                            credits,
+                        });
+                    }
+                }
+            }
+            M_STREAM_END => {
+                self.streams.remove(&handle);
+                self.events.push_back(RpcEvent::StreamEnded { handle });
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Tick: expire overdue calls.
+    pub fn tick(&mut self, ctx: &mut Ctx) {
+        let now = ctx.now();
+        let expired: Vec<(u64, u64)> = self
+            .calls
+            .iter()
+            .filter(|(_, c)| c.deadline <= now)
+            .map(|(k, _)| *k)
+            .collect();
+        for key in expired {
+            let call = self.calls.remove(&key).unwrap();
+            ctx.reset(key.0, key.1, "call timeout");
+            self.events.push_back(RpcEvent::CallFailed {
+                call_id: call.call_id,
+                reason: "timeout".into(),
+            });
+        }
+    }
+
+    /// Connection closed: fail its calls and streams.
+    pub fn on_conn_closed(&mut self, conn: u64) {
+        let dead_calls: Vec<(u64, u64)> = self
+            .calls
+            .keys()
+            .filter(|(c, _)| *c == conn)
+            .copied()
+            .collect();
+        for key in dead_calls {
+            let call = self.calls.remove(&key).unwrap();
+            self.events.push_back(RpcEvent::CallFailed {
+                call_id: call.call_id,
+                reason: "connection closed".into(),
+            });
+        }
+        let dead_streams: Vec<StreamHandle> = self
+            .streams
+            .keys()
+            .filter(|h| h.conn == conn)
+            .copied()
+            .collect();
+        for h in dead_streams {
+            self.streams.remove(&h);
+            self.events.push_back(RpcEvent::StreamEnded { handle: h });
+        }
+    }
+
+    pub fn pending_calls(&self) -> usize {
+        self.calls.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_roundtrip() {
+        let m = RpcMsg {
+            kind: M_REQUEST,
+            service: "inference".into(),
+            method: "forward".into(),
+            payload: vec![1, 2, 3],
+            status: 0,
+            seq: 9,
+        };
+        assert_eq!(RpcMsg::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn status_mapping() {
+        assert_eq!(Status::from_u64(0), Status::Ok);
+        assert_eq!(Status::from_u64(1), Status::NotFound);
+        assert_eq!(Status::from_u64(3), Status::Unavailable);
+        assert_eq!(Status::from_u64(99), Status::Error);
+    }
+}

@@ -1,0 +1,229 @@
+//! The execution engine: a PJRT CPU client plus compiled artifacts.
+//!
+//! Each artifact is compiled once at load; `run` feeds tensors and returns
+//! the output tuple as tensors. Execution is synchronous; callers on the
+//! simulated event loop account its wall-clock cost as virtual service
+//! time (see `shard`/`trainer`).
+
+use super::manifest::Manifest;
+use super::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative wall-clock spent executing, per artifact (profiling).
+    pub exec_nanos: HashMap<String, u64>,
+    pub exec_counts: HashMap<String, u64>,
+}
+
+impl Engine {
+    /// Load every artifact in the manifest directory and compile it.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt client: {e:?}"))?;
+        let mut executables = HashMap::new();
+        for (name, spec) in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow::anyhow!("parsing {name}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(Engine {
+            manifest,
+            client,
+            executables,
+            exec_nanos: HashMap::new(),
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute an artifact. Inputs must match the manifest signature.
+    pub fn run(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact {name:?}"))?;
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        );
+        for (i, (t, s)) in inputs.iter().zip(spec.inputs.iter()).enumerate() {
+            anyhow::ensure!(
+                t.shape == s.shape && t.dtype == s.dtype,
+                "{name}: input {i} mismatch: got {:?}/{:?}, want {:?}/{:?}",
+                t.shape,
+                t.dtype,
+                s.shape,
+                s.dtype
+            );
+        }
+        let exe = self.executables.get(name).unwrap();
+        let start = std::time::Instant::now();
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = out_lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {name}: {e:?}"))?;
+        let outs: Vec<Tensor> = parts
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<_>>()?;
+        let dt = start.elapsed().as_nanos() as u64;
+        *self.exec_nanos.entry(name.to_string()).or_default() += dt;
+        *self.exec_counts.entry(name.to_string()).or_default() += 1;
+        Ok(outs)
+    }
+
+    /// Mean execution wall time for an artifact, if measured.
+    pub fn mean_exec_nanos(&self, name: &str) -> Option<u64> {
+        let total = *self.exec_nanos.get(name)?;
+        let count = *self.exec_counts.get(name)?;
+        (count > 0).then(|| total / count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::tensor::DType;
+
+    fn engine() -> Option<Engine> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Engine::load(dir).expect("engine load"))
+    }
+
+    #[test]
+    fn loads_and_reports_platform() {
+        let Some(e) = engine() else { return };
+        assert_eq!(e.platform(), "cpu");
+        assert!(e.has("train_step") && e.has("layer_fwd"));
+    }
+
+    #[test]
+    fn embed_layer_logits_pipeline_runs() {
+        let Some(mut e) = engine() else { return };
+        let cfg = e.manifest.config.clone();
+        let params = e.manifest.load_init_params().unwrap();
+
+        let tokens: Vec<i32> = (0..cfg.seq_len as i32).map(|i| i % cfg.vocab as i32).collect();
+        let tok = Tensor::from_i32(&[1, cfg.seq_len], &tokens);
+        let out = e
+            .run("embed", &[tok, params[0].clone(), params[1].clone()])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let mut hidden = out.into_iter().next().unwrap();
+        assert_eq!(hidden.shape, vec![1, cfg.seq_len, cfg.d_model]);
+
+        for layer in 0..cfg.n_layer {
+            let (a, b) = e.manifest.layer_param_range(layer);
+            let mut inputs = vec![hidden.clone()];
+            inputs.extend(params[a..b].iter().cloned());
+            hidden = e.run("layer_fwd", &inputs).unwrap().into_iter().next().unwrap();
+        }
+        let n = params.len();
+        let out = e
+            .run(
+                "logits",
+                &[
+                    hidden,
+                    params[n - 3].clone(),
+                    params[n - 2].clone(),
+                    params[n - 1].clone(),
+                ],
+            )
+            .unwrap();
+        let logits = &out[0];
+        assert_eq!(logits.shape, vec![1, cfg.vocab]);
+        let vals = logits.as_f32().unwrap();
+        assert!(vals.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn train_step_decreases_loss() {
+        let Some(mut e) = engine() else { return };
+        let cfg = e.manifest.config.clone();
+        let mut params = e.manifest.load_init_params().unwrap();
+        let mut m: Vec<Tensor> = params
+            .iter()
+            .map(|p| Tensor::zeros(DType::F32, &p.shape))
+            .collect();
+        let mut v = m.clone();
+        let mut step = Tensor::scalar_i32(0);
+        let n = params.len();
+
+        let mut rng = crate::util::Rng::new(99);
+        let mut first = None;
+        let mut last = 0.0f32;
+        for _ in 0..12 {
+            // Synthetic arithmetic-sequence batch (same task as the paper
+            // driver): x[t] = (start + delta*t) mod vocab.
+            let mut batch = Vec::with_capacity(cfg.batch * (cfg.seq_len + 1));
+            for _ in 0..cfg.batch {
+                let start = rng.gen_range(cfg.vocab as u64) as i32;
+                let delta = 1 + rng.gen_range(4) as i32;
+                for t in 0..=cfg.seq_len as i32 {
+                    batch.push((start + delta * t).rem_euclid(cfg.vocab as i32));
+                }
+            }
+            let batch_t = Tensor::from_i32(&[cfg.batch, cfg.seq_len + 1], &batch);
+            let mut inputs = Vec::with_capacity(3 * n + 2);
+            inputs.extend(params.iter().cloned());
+            inputs.extend(m.iter().cloned());
+            inputs.extend(v.iter().cloned());
+            inputs.push(step.clone());
+            inputs.push(batch_t);
+            let outs = e.run("train_step", &inputs).unwrap();
+            assert_eq!(outs.len(), 3 * n + 2);
+            params = outs[..n].to_vec();
+            m = outs[n..2 * n].to_vec();
+            v = outs[2 * n..3 * n].to_vec();
+            step = outs[3 * n].clone();
+            let loss = outs[3 * n + 1].as_f32().unwrap()[0];
+            if first.is_none() {
+                first = Some(loss);
+            }
+            last = loss;
+        }
+        assert_eq!(step.as_i32().unwrap()[0], 12);
+        assert!(
+            last < first.unwrap(),
+            "loss did not decrease: {} → {}",
+            first.unwrap(),
+            last
+        );
+        assert!(e.mean_exec_nanos("train_step").unwrap() > 0);
+    }
+}

@@ -1,0 +1,186 @@
+//! `artifacts/manifest.json` parsing: model config, parameter layout and
+//! artifact signatures emitted by `python/compile/aot.py`.
+
+use crate::runtime::tensor::DType;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub n_layer: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub path: PathBuf,
+    pub inputs: Vec<InputSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub params: Vec<ParamSpec>,
+    pub n_layer_params: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text)?;
+        let cfg = j.req("config")?;
+        let get = |k: &str| -> Result<usize> {
+            Ok(cfg.req(k)?.as_u64().context("not a number")? as usize)
+        };
+        let config = ModelConfig {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_head: get("n_head")?,
+            n_layer: get("n_layer")?,
+            d_ff: get("d_ff")?,
+            seq_len: get("seq_len")?,
+            batch: get("batch")?,
+        };
+        let mut params = Vec::new();
+        for p in j.req("params")?.as_arr().context("params not array")? {
+            params.push(ParamSpec {
+                name: p.req("name")?.as_str().context("name")?.to_string(),
+                shape: p
+                    .req("shape")?
+                    .as_arr()
+                    .context("shape")?
+                    .iter()
+                    .map(|v| v.as_u64().unwrap_or(0) as usize)
+                    .collect(),
+            });
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.req("artifacts")?.as_obj().context("artifacts")? {
+            let mut inputs = Vec::new();
+            for i in a.req("inputs")?.as_arr().context("inputs")? {
+                inputs.push(InputSpec {
+                    shape: i
+                        .req("shape")?
+                        .as_arr()
+                        .context("shape")?
+                        .iter()
+                        .map(|v| v.as_u64().unwrap_or(0) as usize)
+                        .collect(),
+                    dtype: DType::parse(i.req("dtype")?.as_str().context("dtype")?)?,
+                });
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    path: dir.join(a.req("path")?.as_str().context("path")?),
+                    inputs,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir,
+            config,
+            params,
+            n_layer_params: j.req("n_layer_params")?.as_u64().context("nlp")? as usize,
+            artifacts,
+        })
+    }
+
+    /// Total parameter element count.
+    pub fn param_elements(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+
+    /// Flat index range of layer `i`'s parameters.
+    pub fn layer_param_range(&self, layer: usize) -> (usize, usize) {
+        let start = 2 + layer * self.n_layer_params;
+        (start, start + self.n_layer_params)
+    }
+
+    /// Load the initial parameters written by aot.py as tensors.
+    pub fn load_init_params(&self) -> Result<Vec<crate::runtime::Tensor>> {
+        let blob = std::fs::read(self.dir.join("init_params.bin"))
+            .context("reading init_params.bin")?;
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut pos = 0usize;
+        for p in &self.params {
+            let bytes = p.len() * 4;
+            anyhow::ensure!(pos + bytes <= blob.len(), "init_params.bin truncated");
+            out.push(crate::runtime::Tensor {
+                dtype: DType::F32,
+                shape: p.shape.clone(),
+                data: blob[pos..pos + bytes].to_vec(),
+            });
+            pos += bytes;
+        }
+        anyhow::ensure!(pos == blob.len(), "init_params.bin has trailing bytes");
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn load_real_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.config.n_layer >= 1);
+        assert_eq!(m.params.len(), 2 + m.config.n_layer * m.n_layer_params + 3);
+        assert_eq!(m.params[0].name, "wte");
+        assert_eq!(m.params[0].shape, vec![m.config.vocab, m.config.d_model]);
+        for name in ["embed", "layer_fwd", "logits", "train_step", "eval_loss"] {
+            let a = m.artifacts.get(name).expect(name);
+            assert!(a.path.exists(), "{:?} missing", a.path);
+        }
+        // train_step signature: 3 * params + step + batch.
+        let ts = &m.artifacts["train_step"];
+        assert_eq!(ts.inputs.len(), 3 * m.params.len() + 2);
+        // Initial params blob parses and matches shapes.
+        let init = m.load_init_params().unwrap();
+        assert_eq!(init.len(), m.params.len());
+        assert_eq!(init[0].shape, m.params[0].shape);
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! This is the only bridge between the Rust request path and the Python
+//! build path: `make artifacts` lowers the L2 JAX model (with its L1 Pallas
+//! kernels) to `artifacts/*.hlo.txt`, and [`Engine`] compiles each once on
+//! the PJRT CPU client. Python never runs at request time.
+//!
+//! [`Tensor`] is the in-network representation of array data (it is what
+//! travels inside content blocks and RPC messages); conversions to/from
+//! `xla::Literal` happen only at the execution boundary.
+
+pub mod tensor;
+pub mod manifest;
+pub mod engine;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactSpec, Manifest};
+pub use tensor::{DType, Tensor};

@@ -1,0 +1,236 @@
+//! Network-portable tensors: shape + dtype + little-endian bytes.
+//!
+//! The serialized form is what model publication chunks into CID-addressed
+//! blocks and what RPC streams carry between inference shards:
+//!
+//! ```text
+//! [dtype: u8][rank: varint][dims: varint*...][data: raw little-endian]
+//! ```
+
+use crate::util::varint;
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32 = 1,
+    I32 = 2,
+}
+
+impl DType {
+    pub fn size(&self) -> usize {
+        4
+    }
+
+    fn from_u8(v: u8) -> Result<DType> {
+        Ok(match v {
+            1 => DType::F32,
+            2 => DType::I32,
+            _ => bail!("unknown dtype {v}"),
+        })
+    }
+
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "float32" | "f32" => DType::F32,
+            "int32" | "i32" => DType::I32,
+            _ => bail!("unsupported dtype {s:?}"),
+        })
+    }
+}
+
+/// A dense tensor in host memory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    /// Raw little-endian element bytes.
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            dtype,
+            shape: shape.to_vec(),
+            data: vec![0u8; n * dtype.size()],
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], values: &[f32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor {
+            dtype: DType::F32,
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn from_i32(shape: &[usize], values: &[i32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor {
+            dtype: DType::I32,
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::from_i32(&[], &[v])
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::from_f32(&[], &[v])
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        anyhow::ensure!(self.dtype == DType::F32, "tensor is not f32");
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        anyhow::ensure!(self.dtype == DType::I32, "tensor is not i32");
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Serialize for transport/storage.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() + 16);
+        out.push(self.dtype as u8);
+        varint::put_uvarint(&mut out, self.shape.len() as u64);
+        for &d in &self.shape {
+            varint::put_uvarint(&mut out, d as u64);
+        }
+        out.extend_from_slice(&self.data);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Tensor> {
+        let mut r = varint::Reader::new(buf);
+        let dt = DType::from_u8(*buf.first().context("empty tensor buffer")?)?;
+        r.pos = 1;
+        let rank = r.uvarint()? as usize;
+        anyhow::ensure!(rank <= 8, "rank {rank} too large");
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(r.uvarint()? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let data = r.take(n * dt.size())?.to_vec();
+        anyhow::ensure!(r.is_empty(), "trailing bytes in tensor");
+        Ok(Tensor {
+            dtype: dt,
+            shape,
+            data,
+        })
+    }
+
+    /// Convert to an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match self.dtype {
+            DType::F32 => {
+                let v = self.as_f32()?;
+                xla::Literal::vec1(&v)
+            }
+            DType::I32 => {
+                let v = self.as_i32()?;
+                xla::Literal::vec1(&v)
+            }
+        };
+        lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+
+    /// Convert from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                Ok(Tensor::from_f32(&dims, &v))
+            }
+            xla::ElementType::S32 => {
+                let v: Vec<i32> = lit.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                Ok(Tensor::from_i32(&dims, &v))
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = Tensor::from_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.5]);
+        let enc = t.encode();
+        assert_eq!(Tensor::decode(&enc).unwrap(), t);
+        let t = Tensor::from_i32(&[4], &[-1, 0, 7, i32::MAX]);
+        assert_eq!(Tensor::decode(&t.encode()).unwrap(), t);
+        let t = Tensor::scalar_f32(3.25);
+        assert_eq!(Tensor::decode(&t.encode()).unwrap(), t);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Tensor::decode(&[]).is_err());
+        assert!(Tensor::decode(&[9, 1, 4]).is_err()); // bad dtype
+        let t = Tensor::from_f32(&[4], &[0.0; 4]);
+        let enc = t.encode();
+        assert!(Tensor::decode(&enc[..enc.len() - 1]).is_err()); // truncated
+        let mut extra = enc.clone();
+        extra.push(0);
+        assert!(Tensor::decode(&extra).is_err()); // trailing
+    }
+
+    #[test]
+    fn accessors() {
+        let t = Tensor::from_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.byte_len(), 16);
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::from_f32(&[2, 3], &[1.0, -2.0, 3.5, 0.0, 9.0, -0.25]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+        let t = Tensor::from_i32(&[1, 4], &[5, 6, 7, 8]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+}

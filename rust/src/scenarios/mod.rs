@@ -1,0 +1,186 @@
+//! Reusable experiment scenarios shared by `benches/` and `examples/`.
+//!
+//! Each function builds a deterministic deployment matching one of the
+//! paper's evaluation settings (DESIGN.md §6) and returns the handles the
+//! harness needs.
+
+use crate::identity::PeerId;
+use crate::netsim::link::PathProfile;
+use crate::netsim::nat::NatType;
+use crate::netsim::topology::{LinkProfile, TopologyBuilder};
+use crate::netsim::{Net, World, MICRO, MILLI, SECOND};
+use crate::node::{App, LatticaNode, NodeConfig, NodeEvent};
+use crate::protocols::Ctx;
+use crate::rpc::{RpcEvent, Status};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+pub type Node = Rc<RefCell<LatticaNode>>;
+
+/// The paper's Table 1 network scenarios.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetScenario {
+    /// Client and server colocated on one host.
+    Local,
+    /// Same rack/LAN: 0.25 ms one-way, 10 Gbps.
+    SameRegionLan,
+    /// Same region across the metro: 10 ms one-way.
+    SameRegionWan,
+    /// Across continents: 75 ms one-way, 1 Gbps.
+    InterContinent,
+}
+
+impl NetScenario {
+    pub fn label(&self) -> &'static str {
+        match self {
+            NetScenario::Local => "Local (same host)",
+            NetScenario::SameRegionLan => "Same region (LAN)",
+            NetScenario::SameRegionWan => "Same region (WAN)",
+            NetScenario::InterContinent => "Inter-continent (WAN)",
+        }
+    }
+
+    pub const ALL: [NetScenario; 4] = [
+        NetScenario::Local,
+        NetScenario::SameRegionLan,
+        NetScenario::SameRegionWan,
+        NetScenario::InterContinent,
+    ];
+}
+
+/// Two public nodes (client, server) under a Table 1 scenario.
+/// The paper's testbed: 4-core, 8 GB machines on 10 Gbps networks.
+pub fn table1_world(s: NetScenario, seed: u64) -> (World, Node, Node) {
+    let mut t = TopologyBuilder::new(2);
+    match s {
+        NetScenario::Local => {
+            // Loopback: sub-50 µs RTT; the per-call cost is stack overhead.
+            t.set_loopback(PathProfile::new(15 * MICRO, 5 * MICRO, 0.0));
+        }
+        NetScenario::SameRegionLan => {
+            t.intra(0, PathProfile::new(250 * MICRO, 50 * MICRO, 0.0));
+        }
+        NetScenario::SameRegionWan => {
+            t.intra(0, PathProfile::new(10 * MILLI, MILLI, 0.0001));
+        }
+        NetScenario::InterContinent => {
+            t.path(0, 1, PathProfile::new(75 * MILLI, 3 * MILLI, 0.001));
+        }
+    }
+    let link = match s {
+        NetScenario::InterContinent => LinkProfile::FIBER, // 1 Gbps WAN egress
+        _ => LinkProfile::DATACENTER,                      // 10 Gbps
+    };
+    let h_server = t.public_host(0, link);
+    let (h_client, same_host) = match s {
+        NetScenario::Local => (h_server, true),
+        NetScenario::InterContinent => (t.public_host(1, link), false),
+        _ => (t.public_host(0, link), false),
+    };
+    let mut world = World::new(t.build(seed));
+    let server = LatticaNode::spawn(&mut world, h_server, {
+        let mut c = NodeConfig::with_seed(seed * 10 + 1);
+        c.label = "server".into();
+        c
+    });
+    let client = LatticaNode::spawn(&mut world, h_client, {
+        let mut c = NodeConfig::with_seed(seed * 10 + 2);
+        c.port = if same_host { 4002 } else { 4001 };
+        c.label = "client".into();
+        c
+    });
+    let server_ma = server.borrow().listen_addr();
+    client.borrow_mut().dial(&mut world.net, &server_ma).unwrap();
+    world.run_for(2 * SECOND);
+    assert!(
+        client.borrow().swarm.is_connected(&server.borrow().peer_id()),
+        "scenario setup failed to connect"
+    );
+    (world, client, server)
+}
+
+/// Echo RPC app: responds to `bench` service with a payload of
+/// `response_size` bytes.
+pub struct EchoApp {
+    pub response_size: usize,
+}
+
+impl App for EchoApp {
+    fn handle(
+        &mut self,
+        node: &mut LatticaNode,
+        net: &mut Net,
+        ev: NodeEvent,
+    ) -> Option<NodeEvent> {
+        match ev {
+            NodeEvent::Rpc(RpcEvent::Request { service, reply, .. }) if service == "bench" => {
+                let mut ctx = Ctx::new(&mut node.swarm, net);
+                let body = vec![0xA5u8; self.response_size];
+                let _ = node.rpc.respond(&mut ctx, reply, Status::Ok, &body);
+                None
+            }
+            other => Some(other),
+        }
+    }
+}
+
+/// Measured NAT-type distribution for the traversal experiment. Mirrors
+/// published measurements of consumer NAT behaviour (cone-heavy with a
+/// substantial symmetric share) and is chosen so the *emergent* direct
+/// success rate lands near the paper's ~70 %.
+pub const NAT_DISTRIBUTION: [(Option<NatType>, f64); 5] = [
+    (None, 0.08),                               // publicly reachable
+    (Some(NatType::FullCone), 0.12),
+    (Some(NatType::RestrictedCone), 0.13),
+    (Some(NatType::PortRestrictedCone), 0.37),
+    (Some(NatType::Symmetric), 0.30),
+];
+
+/// Sample a NAT type from the distribution.
+pub fn sample_nat(rng: &mut crate::util::Rng) -> Option<NatType> {
+    let weights: Vec<f64> = NAT_DISTRIBUTION.iter().map(|(_, w)| *w).collect();
+    NAT_DISTRIBUTION[rng.choose_weighted(&weights)].0
+}
+
+/// Expected punch success for a sampled pair (the Ford-matrix oracle used
+/// to sanity-check the measured rate).
+pub fn oracle_pair_success(a: Option<NatType>, b: Option<NatType>) -> bool {
+    match (a, b) {
+        (None, _) | (_, None) => true,
+        (Some(x), Some(y)) => NatType::punch_compatible(x, y),
+    }
+}
+
+/// A mesh of `n` public nodes in one region bootstrapped through node 0.
+pub fn bootstrap_mesh(n: usize, seed: u64, link: LinkProfile) -> (World, Vec<Node>) {
+    let mut t = TopologyBuilder::paper_regions();
+    let hosts: Vec<u32> = (0..n).map(|_| t.public_host(0, link)).collect();
+    let mut world = World::new(t.build(seed));
+    let nodes: Vec<Node> = hosts
+        .iter()
+        .enumerate()
+        .map(|(i, &h)| {
+            LatticaNode::spawn(&mut world, h, NodeConfig::with_seed(seed * 1000 + i as u64))
+        })
+        .collect();
+    let entry0 = crate::protocols::kad::PeerEntry {
+        id: nodes[0].borrow().peer_id(),
+        host: hosts[0],
+        port: 4001,
+    };
+    for node in nodes.iter().skip(1) {
+        node.borrow_mut().bootstrap(&mut world.net, entry0.clone());
+    }
+    world.run_for(3 * SECOND);
+    (world, nodes)
+}
+
+/// Drain a node's events, returning them.
+pub fn drain(node: &Node) -> Vec<NodeEvent> {
+    node.borrow_mut().drain_events()
+}
+
+/// Find the peer id of a node.
+pub fn peer_of(node: &Node) -> PeerId {
+    node.borrow().peer_id()
+}

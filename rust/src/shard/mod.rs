@@ -1,0 +1,360 @@
+//! Sharded inference: shard servers hosting layer ranges, and a
+//! shard-aware pipeline client with DHT-based failover (Fig. 1(4)).
+//!
+//! A request enters at shard 0 (embed + first layers); activations hop
+//! between shards as RPC tensor payloads; the last shard applies the
+//! logits head and the next-token distribution returns to the caller.
+//! Shards are replicated: the client stub retries a failed hop on an
+//! alternate replica resolved from its provider table.
+
+use crate::identity::PeerId;
+use crate::netsim::Net;
+use crate::node::{App, LatticaNode, NodeEvent};
+use crate::protocols::Ctx;
+use crate::rpc::{ReplyHandle, RpcEvent, Status};
+use crate::runtime::{Engine, Tensor};
+use crate::util::varint;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+pub const SHARD_SERVICE: &str = "shard";
+
+/// Request payload for the `forward` method.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardRequest {
+    /// Request id assigned by the entry client (for tracing).
+    pub request_id: u64,
+    /// Tokens (only shard 0 uses this) or empty.
+    pub tokens: Vec<i32>,
+    /// Hidden activation (shards > 0), empty for shard 0.
+    pub hidden: Option<Tensor>,
+}
+
+impl ShardRequest {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        varint::put_uvarint(&mut out, self.request_id);
+        varint::put_uvarint(&mut out, self.tokens.len() as u64);
+        for &t in &self.tokens {
+            varint::put_uvarint(&mut out, t as u64);
+        }
+        match &self.hidden {
+            Some(h) => {
+                out.push(1);
+                out.extend_from_slice(&h.encode());
+            }
+            None => out.push(0),
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ShardRequest> {
+        let mut r = varint::Reader::new(buf);
+        let request_id = r.uvarint()?;
+        let n = r.uvarint()? as usize;
+        let mut tokens = Vec::with_capacity(n);
+        for _ in 0..n {
+            tokens.push(r.uvarint()? as i32);
+        }
+        let flag = r.take(1)?[0];
+        let hidden = if flag == 1 {
+            Some(Tensor::decode(&buf[r.pos..])?)
+        } else {
+            None
+        };
+        Ok(ShardRequest {
+            request_id,
+            tokens,
+            hidden,
+        })
+    }
+}
+
+/// A shard server app: owns a layer range and (for the edge shards) the
+/// embedding/logits heads. Parameters are the node's local copy (fetched
+/// via Bitswap in the full pipeline).
+pub struct ShardServer {
+    pub engine: Rc<RefCell<Engine>>,
+    /// Layer range [start, end).
+    pub layers: (usize, usize),
+    pub is_first: bool,
+    pub is_last: bool,
+    /// Full parameter list (only the owned slices are used).
+    pub params: Vec<Tensor>,
+    pub served: u64,
+}
+
+impl ShardServer {
+    pub fn new(
+        engine: Rc<RefCell<Engine>>,
+        layers: (usize, usize),
+        is_first: bool,
+        is_last: bool,
+        params: Vec<Tensor>,
+    ) -> ShardServer {
+        ShardServer {
+            engine,
+            layers,
+            is_first,
+            is_last,
+            params,
+            served: 0,
+        }
+    }
+
+    /// Run this shard's portion: (optional embed) → layers → (optional head).
+    pub fn forward(&mut self, req: &ShardRequest) -> Result<Tensor> {
+        let mut engine = self.engine.borrow_mut();
+        let cfg = engine.manifest.config.clone();
+        let n = self.params.len();
+        let mut hidden = if self.is_first {
+            anyhow::ensure!(
+                req.tokens.len() == cfg.seq_len,
+                "expected {} tokens, got {}",
+                cfg.seq_len,
+                req.tokens.len()
+            );
+            let tok = Tensor::from_i32(&[1, cfg.seq_len], &req.tokens);
+            engine
+                .run(
+                    "embed",
+                    &[tok, self.params[0].clone(), self.params[1].clone()],
+                )?
+                .into_iter()
+                .next()
+                .context("embed output")?
+        } else {
+            req.hidden.clone().context("missing hidden activation")?
+        };
+        for layer in self.layers.0..self.layers.1 {
+            let (a, b) = engine.manifest.layer_param_range(layer);
+            let mut inputs = vec![hidden];
+            inputs.extend(self.params[a..b].iter().cloned());
+            hidden = engine
+                .run("layer_fwd", &inputs)?
+                .into_iter()
+                .next()
+                .context("layer output")?;
+        }
+        if self.is_last {
+            hidden = engine
+                .run(
+                    "logits",
+                    &[
+                        hidden,
+                        self.params[n - 3].clone(),
+                        self.params[n - 2].clone(),
+                        self.params[n - 1].clone(),
+                    ],
+                )?
+                .into_iter()
+                .next()
+                .context("logits output")?;
+        }
+        self.served += 1;
+        Ok(hidden)
+    }
+
+    /// Hot-swap parameters (model sync scenario).
+    pub fn swap_params(&mut self, params: Vec<Tensor>) {
+        self.params = params;
+    }
+}
+
+impl App for ShardServer {
+    fn handle(
+        &mut self,
+        node: &mut LatticaNode,
+        net: &mut Net,
+        ev: NodeEvent,
+    ) -> Option<NodeEvent> {
+        match ev {
+            NodeEvent::Rpc(RpcEvent::Request {
+                service,
+                method,
+                payload,
+                reply,
+                ..
+            }) if service == SHARD_SERVICE => {
+                let mut ctx = Ctx::new(&mut node.swarm, net);
+                match method.as_str() {
+                    "forward" => match ShardRequest::decode(&payload).and_then(|r| self.forward(&r)) {
+                        Ok(out) => {
+                            let _ = node.rpc.respond(&mut ctx, reply, Status::Ok, &out.encode());
+                        }
+                        Err(e) => {
+                            let _ = node.rpc.respond(
+                                &mut ctx,
+                                reply,
+                                Status::Error,
+                                e.to_string().as_bytes(),
+                            );
+                        }
+                    },
+                    "health" => {
+                        let _ = node.rpc.respond(&mut ctx, reply, Status::Ok, b"ok");
+                    }
+                    _ => {
+                        let _ = node.rpc.respond(&mut ctx, reply, Status::NotFound, b"");
+                    }
+                }
+                None
+            }
+            other => Some(other),
+        }
+    }
+}
+
+/// Reply handle re-export for apps.
+pub type Reply = ReplyHandle;
+
+/// Client-side pipeline: ordered shard stages, each with replica peers.
+/// Retries a failed hop on the next replica (the shard-aware stub).
+pub struct PipelineClient {
+    /// stages[i] = replica PeerIds for shard i, in preference order.
+    pub stages: Vec<Vec<PeerId>>,
+    pub next_request_id: u64,
+    /// In-flight pipeline runs: call_id → run state.
+    runs: std::collections::HashMap<u64, RunState>,
+    pub completed: Vec<(u64, Tensor, crate::netsim::Time)>, // (request, logits, started_at)
+    pub failed: Vec<(u64, String)>,
+}
+
+struct RunState {
+    request_id: u64,
+    stage: usize,
+    replica: usize,
+    tokens: Vec<i32>,
+    hidden: Option<Tensor>,
+    started_at: crate::netsim::Time,
+}
+
+impl PipelineClient {
+    pub fn new(stages: Vec<Vec<PeerId>>) -> PipelineClient {
+        PipelineClient {
+            stages,
+            next_request_id: 1,
+            runs: std::collections::HashMap::new(),
+            completed: Vec::new(),
+            failed: Vec::new(),
+        }
+    }
+
+    /// Start a pipeline run over `tokens`; returns the request id.
+    pub fn infer(&mut self, node: &mut LatticaNode, net: &mut Net, tokens: Vec<i32>) -> Result<u64> {
+        let request_id = self.next_request_id;
+        self.next_request_id += 1;
+        let run = RunState {
+            request_id,
+            stage: 0,
+            replica: 0,
+            tokens,
+            hidden: None,
+            started_at: net.now(),
+        };
+        self.dispatch(node, net, run)?;
+        Ok(request_id)
+    }
+
+    fn dispatch(&mut self, node: &mut LatticaNode, net: &mut Net, run: RunState) -> Result<()> {
+        let replicas = &self.stages[run.stage];
+        anyhow::ensure!(
+            run.replica < replicas.len(),
+            "request {}: all replicas of stage {} failed",
+            run.request_id,
+            run.stage
+        );
+        let peer = replicas[run.replica];
+        let req = ShardRequest {
+            request_id: run.request_id,
+            tokens: if run.stage == 0 { run.tokens.clone() } else { vec![] },
+            hidden: run.hidden.clone(),
+        };
+        let mut ctx = Ctx::new(&mut node.swarm, net);
+        let call_id = node
+            .rpc
+            .call(&mut ctx, &peer, SHARD_SERVICE, "forward", &req.encode())?;
+        self.runs.insert(call_id, run);
+        Ok(())
+    }
+
+    /// Feed RPC events; returns true if the event was consumed.
+    pub fn on_rpc_event(&mut self, node: &mut LatticaNode, net: &mut Net, ev: &RpcEvent) -> bool {
+        match ev {
+            RpcEvent::Response {
+                call_id,
+                status,
+                payload,
+                ..
+            } => {
+                let Some(mut run) = self.runs.remove(call_id) else {
+                    return false;
+                };
+                if *status != Status::Ok {
+                    // Failover: try the next replica of this stage.
+                    run.replica += 1;
+                    let rid = run.request_id;
+                    if let Err(e) = self.dispatch(node, net, run) {
+                        // Exhausted replicas.
+                        self.failed.push((rid, e.to_string()));
+                    }
+                    return true;
+                }
+                let Ok(t) = Tensor::decode(payload) else {
+                    self.failed.push((run.request_id, "bad tensor".into()));
+                    return true;
+                };
+                if run.stage + 1 == self.stages.len() {
+                    self.completed.push((run.request_id, t, run.started_at));
+                } else {
+                    run.stage += 1;
+                    run.replica = 0;
+                    run.hidden = Some(t);
+                    let rid = run.request_id;
+                    if let Err(e) = self.dispatch(node, net, run) {
+                        self.failed.push((rid, e.to_string()));
+                    }
+                }
+                true
+            }
+            RpcEvent::CallFailed { call_id, .. } => {
+                let Some(mut run) = self.runs.remove(call_id) else {
+                    return false;
+                };
+                run.replica += 1;
+                let rid = run.request_id;
+                if let Err(e) = self.dispatch(node, net, run) {
+                    self.failed.push((rid, e.to_string()));
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.runs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_request_roundtrip() {
+        let r = ShardRequest {
+            request_id: 9,
+            tokens: vec![1, 2, 3],
+            hidden: None,
+        };
+        assert_eq!(ShardRequest::decode(&r.encode()).unwrap(), r);
+        let r = ShardRequest {
+            request_id: 10,
+            tokens: vec![],
+            hidden: Some(Tensor::from_f32(&[1, 2, 2], &[1.0, 2.0, 3.0, 4.0])),
+        };
+        assert_eq!(ShardRequest::decode(&r.encode()).unwrap(), r);
+    }
+}

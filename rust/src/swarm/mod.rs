@@ -1,0 +1,1088 @@
+//! The swarm: connection management, listening/dialing, protocol routing,
+//! relay circuits and hole-punch path migration.
+//!
+//! One [`Swarm`] per node. It owns every [`Connection`], routes datagrams by
+//! destination connection id, runs the circuit-relay protocol (both as
+//! client and as relay server), performs DCUtR-style path migration, and
+//! surfaces [`SwarmEvent`]s to the node layer where application protocols
+//! (DHT, Bitswap, RPC, gossip…) live.
+//!
+//! Stream protocol routing follows multistream-select in spirit: the opener
+//! attaches a protocol name to the STREAM_OPEN frame; the responder's node
+//! layer dispatches on it.
+
+pub mod relay_msg;
+pub mod peerstore;
+
+use crate::identity::{Keypair, PeerId};
+use crate::multiaddr::{Multiaddr, Proto, SimAddr};
+use crate::netsim::{EndpointId, Net, Time, MILLI};
+use crate::transport::connection::{ConnEvent, Connection, ConnectionConfig, Role, RxInfo};
+use crate::transport::packet::Packet;
+use crate::transport::TransportProfile;
+use crate::util::Rng;
+use crate::wire::Message;
+use anyhow::{bail, Context, Result};
+use relay_msg::{RelayMsg, RELAY_PROTO};
+use std::collections::{HashMap, VecDeque};
+
+pub use peerstore::Peerstore;
+
+/// How a connection currently reaches its peer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Path {
+    Direct(SimAddr),
+    /// Tunnelled through a relay connection (`relay_cid`) on `circuit`.
+    Relayed { relay_cid: u64, circuit: u64 },
+}
+
+/// Events surfaced to the node layer.
+#[derive(Debug)]
+pub enum SwarmEvent {
+    ConnEstablished {
+        cid: u64,
+        peer: PeerId,
+        role: Role,
+        relayed: bool,
+        /// Remote address (direct) or relay address (relayed).
+        remote_addr: SimAddr,
+    },
+    ConnClosed {
+        cid: u64,
+        peer: Option<PeerId>,
+        reason: String,
+    },
+    DialFailed {
+        cid: u64,
+        reason: String,
+    },
+    /// Remote opened a stream; the node dispatches on `proto`.
+    InboundStream {
+        cid: u64,
+        peer: PeerId,
+        stream: u64,
+        proto: String,
+    },
+    /// Message on a stream (either direction).
+    StreamMsg {
+        cid: u64,
+        stream: u64,
+        msg: Vec<u8>,
+    },
+    StreamFinished {
+        cid: u64,
+        stream: u64,
+    },
+    StreamReset {
+        cid: u64,
+        stream: u64,
+        error: String,
+    },
+    /// A relay told us our public address (from RESERVE_OK).
+    ObservedAddr {
+        addr: SimAddr,
+    },
+    /// Hole punch finished: the connection migrated to a direct path (or
+    /// failed and stays relayed).
+    PunchResult {
+        cid: u64,
+        peer: PeerId,
+        success: bool,
+    },
+}
+
+struct PunchState {
+    target: SimAddr,
+    token: u64,
+    attempts_left: u32,
+    deadline: Time,
+    /// After the last probe, wait this long for a late response before
+    /// declaring failure (responses cross two NATs and a WAN).
+    in_grace: bool,
+}
+
+struct ConnState {
+    conn: Connection,
+    path: Path,
+    proto: Proto,
+    /// Stream id → protocol (both directions).
+    stream_protos: HashMap<u64, String>,
+    /// Control stream to speak relay protocol on (when this conn is to a
+    /// relay and we are the client).
+    relay_ctrl_stream: Option<u64>,
+    /// Outstanding CONNECT requests (targets in request order).
+    pending_connects: VecDeque<PeerId>,
+    punch: Option<PunchState>,
+    /// True once this conn was reported established to the node layer.
+    reported: bool,
+}
+
+/// Relay-server side state for one circuit.
+struct Circuit {
+    a_cid: u64,
+    a_stream: u64,
+    a_circuit_id: u64,
+    b_cid: u64,
+    b_stream: u64,
+    b_circuit_id: u64,
+}
+
+/// A pending dial that first needs a relay connection to establish.
+struct PendingCircuitDial {
+    relay_cid: u64,
+    target: PeerId,
+    #[allow(dead_code)] // retained: the inner conn inherits this profile
+    proto: Proto,
+}
+
+/// Swarm configuration.
+#[derive(Clone, Debug)]
+pub struct SwarmConfig {
+    pub conn: ConnectionConfig,
+    /// Accept inbound direct connections.
+    pub accept_inbound: bool,
+    /// Act as a relay for others.
+    pub relay_enabled: bool,
+    /// Max circuits when acting as a relay.
+    pub max_circuits: usize,
+    /// Hole-punch probe schedule: attempts and spacing.
+    pub punch_attempts: u32,
+    pub punch_interval: Time,
+}
+
+impl Default for SwarmConfig {
+    fn default() -> Self {
+        SwarmConfig {
+            conn: ConnectionConfig::default(),
+            accept_inbound: true,
+            relay_enabled: false,
+            max_circuits: 1024,
+            punch_attempts: 5,
+            punch_interval: 50 * MILLI,
+        }
+    }
+}
+
+/// Timer tokens the node layer must route to [`Swarm::on_timer`].
+pub const TIMER_SWARM_TICK: u64 = 1;
+
+/// See module docs.
+pub struct Swarm {
+    pub keypair: Keypair,
+    pub local_peer: PeerId,
+    pub endpoint_id: EndpointId,
+    pub local_addr: SimAddr,
+    pub cfg: SwarmConfig,
+    pub peerstore: Peerstore,
+    rng: Rng,
+
+    conns: HashMap<u64, ConnState>,
+    /// (remote addr, remote cid) → local cid, for initial-packet dedup.
+    initial_index: HashMap<(SimAddr, u64), u64>,
+    peer_conns: HashMap<PeerId, Vec<u64>>,
+
+    // Relay server state.
+    reservations: HashMap<PeerId, (u64, u64)>, // peer → (cid, ctrl stream)
+    circuits: HashMap<u64, Circuit>,
+    next_circuit_id: u64,
+
+    // Relay client: pending circuit dials keyed by relay cid.
+    pending_circuit_dials: Vec<PendingCircuitDial>,
+    /// Inner connections by (relay_cid, circuit_id).
+    circuit_conns: HashMap<(u64, u64), u64>,
+
+    events: VecDeque<SwarmEvent>,
+    /// Next scheduled tick (so we arm at most one timer).
+    tick_armed_until: Time,
+
+    /// Addresses this node believes it is reachable at (observed + bound).
+    pub external_addrs: Vec<SimAddr>,
+}
+
+impl Swarm {
+    /// Create a swarm; the caller must already have bound `local_addr` to
+    /// this node's endpoint id in the simulator.
+    pub fn new(
+        keypair: Keypair,
+        endpoint_id: EndpointId,
+        local_addr: SimAddr,
+        cfg: SwarmConfig,
+        rng: Rng,
+    ) -> Swarm {
+        let local_peer = keypair.peer_id();
+        Swarm {
+            keypair,
+            local_peer,
+            endpoint_id,
+            local_addr,
+            cfg,
+            peerstore: Peerstore::new(),
+            rng,
+            conns: HashMap::new(),
+            initial_index: HashMap::new(),
+            peer_conns: HashMap::new(),
+            reservations: HashMap::new(),
+            circuits: HashMap::new(),
+            next_circuit_id: 1,
+            pending_circuit_dials: Vec::new(),
+            circuit_conns: HashMap::new(),
+            events: VecDeque::new(),
+            tick_armed_until: 0,
+            external_addrs: Vec::new(),
+        }
+    }
+
+    pub fn poll_event(&mut self) -> Option<SwarmEvent> {
+        self.events.pop_front()
+    }
+
+    /// Established connections to `peer`, direct paths first.
+    pub fn conns_to(&self, peer: &PeerId) -> Vec<u64> {
+        let mut v: Vec<u64> = self
+            .peer_conns
+            .get(peer)
+            .map(|x| {
+                x.iter()
+                    .copied()
+                    .filter(|cid| {
+                        self.conns
+                            .get(cid)
+                            .map_or(false, |c| c.conn.is_established() && !c.conn.is_closed())
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        v.sort_by_key(|cid| match self.conns[cid].path {
+            Path::Direct(_) => 0,
+            Path::Relayed { .. } => 1,
+        });
+        v
+    }
+
+    pub fn is_connected(&self, peer: &PeerId) -> bool {
+        !self.conns_to(peer).is_empty()
+    }
+
+    pub fn connection_path(&self, cid: u64) -> Option<Path> {
+        self.conns.get(&cid).map(|c| c.path)
+    }
+
+    pub fn connection_peer(&self, cid: u64) -> Option<PeerId> {
+        self.conns.get(&cid).and_then(|c| c.conn.peer)
+    }
+
+    /// Protocol negotiated for a stream (either direction).
+    pub fn stream_proto(&self, cid: u64, stream: u64) -> Option<String> {
+        self.conns
+            .get(&cid)
+            .and_then(|c| c.stream_protos.get(&stream).cloned())
+    }
+
+    pub fn connection_srtt(&self, cid: u64) -> Option<Time> {
+        self.conns.get(&cid).map(|c| c.conn.srtt())
+    }
+
+    pub fn connection_backlog(&self, cid: u64) -> u64 {
+        self.conns.get(&cid).map_or(0, |c| c.conn.backlog())
+    }
+
+    pub fn connection_count(&self) -> usize {
+        self.conns.len()
+    }
+
+    // ------------------------------------------------------------------
+    // Dialing
+    // ------------------------------------------------------------------
+
+    /// Dial a multiaddr. Returns the new connection's cid (circuit dials
+    /// return the *inner* connection's cid once created; before that, the
+    /// returned id refers to the pending dial and resolves on success).
+    pub fn dial(&mut self, net: &mut Net, ma: &Multiaddr) -> Result<u64> {
+        if let Some(target) = ma.circuit_target {
+            // Need an established conn to the relay first.
+            let relay_peer = ma.peer.context("circuit dial requires relay peer id")?;
+            let relay_cid = match self.conns_to(&relay_peer).first() {
+                Some(&cid) => cid,
+                None => {
+                    let direct = Multiaddr::direct(ma.addr, ma.proto).with_peer(relay_peer);
+                    self.dial(net, &direct)?
+                }
+            };
+            self.pending_circuit_dials.push(PendingCircuitDial {
+                relay_cid,
+                target,
+                proto: ma.proto,
+            });
+            // If the relay conn is already up, fire the CONNECT now.
+            self.try_fire_circuit_dials(net);
+            return Ok(relay_cid);
+        }
+        let mut cfg = self.cfg.conn.clone();
+        cfg.profile = TransportProfile::for_proto(ma.proto);
+        cfg.mtu = net.mtu;
+        let conn = Connection::new(Role::Client, cfg, self.keypair.clone(), net.now(), &mut self.rng);
+        let cid = conn.local_cid;
+        self.conns.insert(
+            cid,
+            ConnState {
+                conn,
+                path: Path::Direct(ma.addr),
+                proto: ma.proto,
+                stream_protos: HashMap::new(),
+                relay_ctrl_stream: None,
+                pending_connects: VecDeque::new(),
+                punch: None,
+                reported: false,
+            },
+        );
+        self.flush_conn(net, cid);
+        self.arm_tick(net);
+        Ok(cid)
+    }
+
+    /// Open a stream to `peer` on the best available connection.
+    pub fn open_stream(&mut self, net: &mut Net, peer: &PeerId, proto: &str) -> Result<(u64, u64)> {
+        let cid = *self
+            .conns_to(peer)
+            .first()
+            .with_context(|| format!("no connection to {peer}"))?;
+        let stream = self.open_stream_on(net, cid, proto)?;
+        Ok((cid, stream))
+    }
+
+    /// Open a stream on a specific connection.
+    pub fn open_stream_on(&mut self, net: &mut Net, cid: u64, proto: &str) -> Result<u64> {
+        let c = self.conns.get_mut(&cid).context("unknown connection")?;
+        let stream = c.conn.open_stream(proto);
+        c.stream_protos.insert(stream, proto.to_string());
+        self.flush_conn(net, cid);
+        Ok(stream)
+    }
+
+    /// Send a message on a stream.
+    pub fn send_msg(&mut self, net: &mut Net, cid: u64, stream: u64, msg: &[u8]) -> Result<()> {
+        let c = self.conns.get_mut(&cid).context("unknown connection")?;
+        c.conn.send_msg(stream, msg)?;
+        self.flush_conn(net, cid);
+        Ok(())
+    }
+
+    pub fn finish_stream(&mut self, net: &mut Net, cid: u64, stream: u64) {
+        if let Some(c) = self.conns.get_mut(&cid) {
+            c.conn.finish_stream(stream);
+            self.flush_conn(net, cid);
+        }
+    }
+
+    pub fn reset_stream(&mut self, net: &mut Net, cid: u64, stream: u64, error: &str) {
+        if let Some(c) = self.conns.get_mut(&cid) {
+            c.conn.reset_stream(stream, error);
+            self.flush_conn(net, cid);
+        }
+    }
+
+    pub fn close_conn(&mut self, net: &mut Net, cid: u64, reason: &str) {
+        if let Some(c) = self.conns.get_mut(&cid) {
+            c.conn.close(reason);
+            self.flush_conn(net, cid);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Relay client operations
+    // ------------------------------------------------------------------
+
+    /// Reserve a slot on a connected relay so peers can reach us through it.
+    pub fn relay_reserve(&mut self, net: &mut Net, relay_peer: &PeerId) -> Result<()> {
+        let cid = *self
+            .conns_to(relay_peer)
+            .first()
+            .context("not connected to relay")?;
+        let stream = self.ensure_relay_ctrl(net, cid)?;
+        self.send_msg(net, cid, stream, &RelayMsg::reserve().encode())
+    }
+
+    fn ensure_relay_ctrl(&mut self, net: &mut Net, cid: u64) -> Result<u64> {
+        if let Some(s) = self.conns.get(&cid).and_then(|c| c.relay_ctrl_stream) {
+            return Ok(s);
+        }
+        let stream = self.open_stream_on(net, cid, RELAY_PROTO)?;
+        self.conns.get_mut(&cid).unwrap().relay_ctrl_stream = Some(stream);
+        Ok(stream)
+    }
+
+    fn try_fire_circuit_dials(&mut self, net: &mut Net) {
+        let ready: Vec<usize> = self
+            .pending_circuit_dials
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| {
+                self.conns
+                    .get(&d.relay_cid)
+                    .map_or(false, |c| c.conn.is_established())
+            })
+            .map(|(i, _)| i)
+            .collect();
+        for i in ready.into_iter().rev() {
+            let d = self.pending_circuit_dials.remove(i);
+            if let Ok(stream) = self.ensure_relay_ctrl(net, d.relay_cid) {
+                if let Some(c) = self.conns.get_mut(&d.relay_cid) {
+                    c.pending_connects.push_back(d.target);
+                }
+                let _ = self.send_msg(
+                    net,
+                    d.relay_cid,
+                    stream,
+                    &RelayMsg::connect(d.target).encode(),
+                );
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Hole punching (DCUtR)
+    // ------------------------------------------------------------------
+
+    /// Start a hole punch on a relayed connection toward `remote_addr`
+    /// (the peer's observed public address, exchanged via the dcutr
+    /// protocol at the node layer).
+    pub fn start_punch(&mut self, net: &mut Net, cid: u64, remote_addr: SimAddr) -> Result<()> {
+        let token = self.rng.next_u64();
+        let c = self.conns.get_mut(&cid).context("unknown connection")?;
+        if !matches!(c.path, Path::Relayed { .. }) {
+            bail!("punch only applies to relayed connections");
+        }
+        c.punch = Some(PunchState {
+            target: remote_addr,
+            token,
+            attempts_left: self.cfg.punch_attempts,
+            deadline: net.now(),
+            in_grace: false,
+        });
+        self.drive_punch(net, cid);
+        self.arm_tick(net);
+        Ok(())
+    }
+
+    fn drive_punch(&mut self, net: &mut Net, cid: u64) {
+        let local_addr = self.local_addr;
+        let Some(c) = self.conns.get_mut(&cid) else { return };
+        let Some(p) = c.punch.as_mut() else { return };
+        if p.attempts_left == 0 {
+            if !p.in_grace {
+                // Last probe is out; give late responses one more window
+                // (they cross two NATs and possibly a WAN) before failing.
+                p.in_grace = true;
+                p.deadline = net.now() + 6 * self.cfg.punch_interval;
+                return;
+            }
+            if net.now() < p.deadline {
+                return;
+            }
+            let peer = c.conn.peer.unwrap_or(PeerId([0; 32]));
+            c.punch = None;
+            self.events.push_back(SwarmEvent::PunchResult {
+                cid,
+                peer,
+                success: false,
+            });
+            return;
+        }
+        if net.now() >= p.deadline {
+            p.attempts_left -= 1;
+            p.deadline = net.now() + self.cfg.punch_interval;
+            let target = p.target;
+            let probe = c.conn.make_path_challenge(p.token);
+            net.send(local_addr, target, probe);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Datagram input
+    // ------------------------------------------------------------------
+
+    /// Feed a datagram from the simulator.
+    pub fn handle_datagram(&mut self, net: &mut Net, from: SimAddr, _to: SimAddr, payload: Vec<u8>) {
+        let Ok(pkt) = Packet::decode(&payload) else {
+            return;
+        };
+        let cid = if pkt.dst_cid != 0 && self.conns.contains_key(&pkt.dst_cid) {
+            pkt.dst_cid
+        } else if pkt.dst_cid == 0 {
+            // Initial packet: find or create a server connection.
+            match self.initial_index.get(&(from, pkt.src_cid)) {
+                Some(&cid) => cid,
+                None => {
+                    if !self.cfg.accept_inbound {
+                        return;
+                    }
+                    let mut cfg = self.cfg.conn.clone();
+                    cfg.mtu = net.mtu;
+                    // Profile is symmetric; the client's choice dominates
+                    // timing. Server answers with the default profile.
+                    let conn = Connection::new(
+                        Role::Server,
+                        cfg,
+                        self.keypair.clone(),
+                        net.now(),
+                        &mut self.rng,
+                    );
+                    let cid = conn.local_cid;
+                    self.conns.insert(
+                        cid,
+                        ConnState {
+                            conn,
+                            path: Path::Direct(from),
+                            proto: Proto::QuicLike,
+                            stream_protos: HashMap::new(),
+                            relay_ctrl_stream: None,
+                            pending_connects: VecDeque::new(),
+                            punch: None,
+                            reported: false,
+                        },
+                    );
+                    self.initial_index.insert((from, pkt.src_cid), cid);
+                    cid
+                }
+            }
+        } else {
+            // Unknown destination cid: stateless drop.
+            return;
+        };
+
+        let info = {
+            let c = self.conns.get_mut(&cid).unwrap();
+            match c.conn.handle_packet(net.now(), pkt) {
+                Ok(info) => info,
+                Err(e) => {
+                    log::debug!("conn {cid}: packet error: {e}");
+                    RxInfo::default()
+                }
+            }
+        };
+        self.post_rx(net, cid, Some(from), info);
+    }
+
+    /// Shared post-ingest processing (path migration, probe answers,
+    /// event pumping, flush). `from` is None for circuit-delivered packets.
+    fn post_rx(&mut self, net: &mut Net, cid: u64, from: Option<SimAddr>, info: RxInfo) {
+        let local_addr = self.local_addr;
+        if let Some(from) = from {
+            if info.accepted {
+                let c = self.conns.get_mut(&cid).unwrap();
+                // Answer path challenges on the arrival path.
+                for token in &info.path_challenges {
+                    let resp = c.conn.make_path_response(*token);
+                    net.send(local_addr, from, resp);
+                }
+                // A challenge from a new direct address while we are
+                // punching means the peer's true mapping differs from the
+                // observed one (symmetric NAT allocates per-remote ports):
+                // retarget our probes at the address that actually works.
+                if !info.path_challenges.is_empty() {
+                    if let Some(p) = c.punch.as_mut() {
+                        if p.target != from {
+                            p.target = from;
+                            p.attempts_left = p.attempts_left.max(2);
+                            p.in_grace = false;
+                            p.deadline = net.now();
+                        }
+                    }
+                }
+                // Path migration:
+                // * a PATH_RESPONSE from our punch target validates it;
+                // * authenticated app traffic from a new direct address
+                //   follows the peer's migration.
+                let migrate = match (&c.path, &c.punch) {
+                    (Path::Relayed { .. }, Some(p)) if !info.path_responses.is_empty() => {
+                        info.path_responses.contains(&p.token).then_some(from)
+                    }
+                    (Path::Relayed { .. }, _) if info.has_app_frames => Some(from),
+                    (Path::Direct(cur), _) if *cur != from && info.has_app_frames => Some(from),
+                    _ => None,
+                };
+                if let Some(new_addr) = migrate {
+                    let was_relayed = matches!(c.path, Path::Relayed { .. });
+                    c.path = Path::Direct(new_addr);
+                    if was_relayed {
+                        let peer = c.conn.peer.unwrap_or(PeerId([0; 32]));
+                        c.punch = None;
+                        self.events.push_back(SwarmEvent::PunchResult {
+                            cid,
+                            peer,
+                            success: true,
+                        });
+                    }
+                }
+            }
+        }
+        self.pump_conn_events(net, cid);
+        self.flush_conn(net, cid);
+        self.arm_tick(net);
+    }
+
+    // ------------------------------------------------------------------
+    // Event pumping / relay protocol handling
+    // ------------------------------------------------------------------
+
+    fn pump_conn_events(&mut self, net: &mut Net, cid: u64) {
+        loop {
+            let ev = match self.conns.get_mut(&cid) {
+                Some(c) => c.conn.poll_event(),
+                None => return,
+            };
+            let Some(ev) = ev else { break };
+            match ev {
+                ConnEvent::Established { peer, key } => {
+                    self.peerstore.set_key(peer, key);
+                    self.peer_conns.entry(peer).or_default().push(cid);
+                    let c = self.conns.get_mut(&cid).unwrap();
+                    c.reported = true;
+                    let (relayed, remote_addr) = match c.path {
+                        Path::Direct(a) => (false, a),
+                        Path::Relayed { relay_cid, .. } => {
+                            let addr = match self.conns.get(&relay_cid).map(|r| r.path) {
+                                Some(Path::Direct(a)) => a,
+                                _ => SimAddr::new(0, 0),
+                            };
+                            (true, addr)
+                        }
+                    };
+                    let role = self.conns[&cid].conn.role;
+                    self.events.push_back(SwarmEvent::ConnEstablished {
+                        cid,
+                        peer,
+                        role,
+                        relayed,
+                        remote_addr,
+                    });
+                    self.try_fire_circuit_dials(net);
+                }
+                ConnEvent::StreamOpened { stream_id, proto } => {
+                    let peer = self.conns[&cid].conn.peer.unwrap_or(PeerId([0; 32]));
+                    self.conns
+                        .get_mut(&cid)
+                        .unwrap()
+                        .stream_protos
+                        .insert(stream_id, proto.clone());
+                    if proto == RELAY_PROTO {
+                        // Relay control stream opened towards us: nothing to
+                        // do until messages arrive.
+                        if !self.cfg.relay_enabled {
+                            self.reset_stream(net, cid, stream_id, "relay disabled");
+                        }
+                    } else {
+                        self.events.push_back(SwarmEvent::InboundStream {
+                            cid,
+                            peer,
+                            stream: stream_id,
+                            proto,
+                        });
+                    }
+                }
+                ConnEvent::Msg { stream_id, msg } => {
+                    let proto = self
+                        .conns[&cid]
+                        .stream_protos
+                        .get(&stream_id)
+                        .cloned()
+                        .unwrap_or_default();
+                    if proto == RELAY_PROTO {
+                        if let Err(e) = self.handle_relay_msg(net, cid, stream_id, &msg) {
+                            log::debug!("relay msg error on conn {cid}: {e}");
+                        }
+                    } else {
+                        self.events.push_back(SwarmEvent::StreamMsg {
+                            cid,
+                            stream: stream_id,
+                            msg,
+                        });
+                    }
+                }
+                ConnEvent::StreamFinished { stream_id } => {
+                    self.events.push_back(SwarmEvent::StreamFinished {
+                        cid,
+                        stream: stream_id,
+                    });
+                }
+                ConnEvent::StreamReset { stream_id, error } => {
+                    self.events.push_back(SwarmEvent::StreamReset {
+                        cid,
+                        stream: stream_id,
+                        error,
+                    });
+                }
+                ConnEvent::PathValidated { .. } => {
+                    // Handled via RxInfo in post_rx (needs arrival address).
+                }
+                ConnEvent::Closed { error } => {
+                    self.teardown_conn(net, cid, &error);
+                    return;
+                }
+            }
+        }
+    }
+
+    fn teardown_conn(&mut self, net: &mut Net, cid: u64, reason: &str) {
+        let Some(c) = self.conns.get(&cid) else { return };
+        let peer = c.conn.peer;
+        let was_reported = c.reported;
+        // Close circuits riding this connection (relay server side).
+        let dead_circuits: Vec<u64> = self
+            .circuits
+            .iter()
+            .filter(|(_, circ)| circ.a_cid == cid || circ.b_cid == cid)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in dead_circuits {
+            let circ = self.circuits.remove(&id).unwrap();
+            let (other_cid, other_stream, other_circ) = if circ.a_cid == cid {
+                (circ.b_cid, circ.b_stream, circ.b_circuit_id)
+            } else {
+                (circ.a_cid, circ.a_stream, circ.a_circuit_id)
+            };
+            let _ = self.send_msg(
+                net,
+                other_cid,
+                other_stream,
+                &RelayMsg::circuit_closed(other_circ, "relay conn closed").encode(),
+            );
+        }
+        // Close inner connections riding this relay conn (client side).
+        let dead_inner: Vec<u64> = self
+            .circuit_conns
+            .iter()
+            .filter(|((rcid, _), _)| *rcid == cid)
+            .map(|(_, inner)| *inner)
+            .collect();
+        for inner in dead_inner {
+            self.teardown_conn(net, inner, "relay connection lost");
+        }
+        self.circuit_conns.retain(|(rcid, _), _| *rcid != cid);
+        self.reservations.retain(|_, (rcid, _)| *rcid != cid);
+        if let Some(p) = peer {
+            if let Some(v) = self.peer_conns.get_mut(&p) {
+                v.retain(|x| *x != cid);
+            }
+        }
+        self.initial_index.retain(|_, v| *v != cid);
+        self.conns.remove(&cid);
+        if was_reported {
+            self.events.push_back(SwarmEvent::ConnClosed {
+                cid,
+                peer,
+                reason: reason.to_string(),
+            });
+        } else {
+            self.events.push_back(SwarmEvent::DialFailed {
+                cid,
+                reason: reason.to_string(),
+            });
+        }
+    }
+
+    fn handle_relay_msg(&mut self, net: &mut Net, cid: u64, stream: u64, msg: &[u8]) -> Result<()> {
+        let m = RelayMsg::decode(msg)?;
+        match m.kind {
+            relay_msg::M_RESERVE => {
+                anyhow::ensure!(self.cfg.relay_enabled, "relaying disabled");
+                let c = self.conns.get(&cid).context("conn gone")?;
+                let peer = c.conn.peer.context("unidentified peer")?;
+                let observed = match c.path {
+                    Path::Direct(a) => a,
+                    _ => bail!("reservation over relayed conn"),
+                };
+                self.reservations.insert(peer, (cid, stream));
+                self.send_msg(net, cid, stream, &RelayMsg::reserve_ok(observed).encode())?;
+            }
+            relay_msg::M_RESERVE_OK => {
+                let addr = m.observed_addr();
+                if !self.external_addrs.contains(&addr) {
+                    self.external_addrs.push(addr);
+                }
+                self.events.push_back(SwarmEvent::ObservedAddr { addr });
+            }
+            relay_msg::M_CONNECT => {
+                anyhow::ensure!(self.cfg.relay_enabled, "relaying disabled");
+                let target = m.peer.context("CONNECT missing target")?;
+                let reply = match self.reservations.get(&target) {
+                    None => RelayMsg::connect_err("no reservation for target"),
+                    Some(&(t_cid, t_stream)) => {
+                        if self.circuits.len() >= self.cfg.max_circuits {
+                            RelayMsg::connect_err("relay at circuit capacity")
+                        } else {
+                            let from_peer = self
+                                .conns
+                                .get(&cid)
+                                .and_then(|c| c.conn.peer)
+                                .context("unidentified initiator")?;
+                            let circuit_id = self.next_circuit_id;
+                            self.next_circuit_id += 1;
+                            self.circuits.insert(
+                                circuit_id,
+                                Circuit {
+                                    a_cid: cid,
+                                    a_stream: stream,
+                                    a_circuit_id: circuit_id,
+                                    b_cid: t_cid,
+                                    b_stream: t_stream,
+                                    b_circuit_id: circuit_id,
+                                },
+                            );
+                            self.send_msg(
+                                net,
+                                t_cid,
+                                t_stream,
+                                &RelayMsg::incoming(circuit_id, from_peer).encode(),
+                            )?;
+                            RelayMsg::connect_ok(circuit_id)
+                        }
+                    }
+                };
+                self.send_msg(net, cid, stream, &reply.encode())?;
+            }
+            relay_msg::M_CONNECT_OK => {
+                // We are the circuit initiator: create the inner connection.
+                let target = self
+                    .conns
+                    .get_mut(&cid)
+                    .and_then(|c| c.pending_connects.pop_front())
+                    .context("CONNECT_OK without pending connect")?;
+                let _ = target;
+                let proto = self.conns.get(&cid).map(|c| c.proto).unwrap_or(Proto::QuicLike);
+                let mut cfg = self.cfg.conn.clone();
+                cfg.profile = TransportProfile::for_proto(proto);
+                cfg.mtu = net.mtu;
+                let mut inner = Connection::new(
+                    Role::Client,
+                    cfg,
+                    self.keypair.clone(),
+                    net.now(),
+                    &mut self.rng,
+                );
+                inner.tune_for_tunnel();
+                let inner_cid = inner.local_cid;
+                self.conns.insert(
+                    inner_cid,
+                    ConnState {
+                        conn: inner,
+                        path: Path::Relayed {
+                            relay_cid: cid,
+                            circuit: m.circuit,
+                        },
+                        proto,
+                        stream_protos: HashMap::new(),
+                        relay_ctrl_stream: None,
+                        pending_connects: VecDeque::new(),
+                        punch: None,
+                        reported: false,
+                    },
+                );
+                self.circuit_conns.insert((cid, m.circuit), inner_cid);
+                self.flush_conn(net, inner_cid);
+            }
+            relay_msg::M_CONNECT_ERR => {
+                let target = self
+                    .conns
+                    .get_mut(&cid)
+                    .and_then(|c| c.pending_connects.pop_front());
+                log::debug!("circuit dial to {target:?} failed: {}", m.error);
+                self.events.push_back(SwarmEvent::DialFailed {
+                    cid,
+                    reason: format!("relay: {}", m.error),
+                });
+            }
+            relay_msg::M_INCOMING => {
+                // We are the circuit target: accept an inner server conn.
+                let mut cfg = self.cfg.conn.clone();
+                cfg.mtu = net.mtu;
+                let mut inner = Connection::new(
+                    Role::Server,
+                    cfg,
+                    self.keypair.clone(),
+                    net.now(),
+                    &mut self.rng,
+                );
+                inner.tune_for_tunnel();
+                let inner_cid = inner.local_cid;
+                self.conns.insert(
+                    inner_cid,
+                    ConnState {
+                        conn: inner,
+                        path: Path::Relayed {
+                            relay_cid: cid,
+                            circuit: m.circuit,
+                        },
+                        proto: Proto::QuicLike,
+                        stream_protos: HashMap::new(),
+                        relay_ctrl_stream: None,
+                        pending_connects: VecDeque::new(),
+                        punch: None,
+                        reported: false,
+                    },
+                );
+                self.circuit_conns.insert((cid, m.circuit), inner_cid);
+            }
+            relay_msg::M_DATA => {
+                if let Some(circ) = self.circuits.get(&m.circuit) {
+                    // Relay server: forward to the other side.
+                    let (o_cid, o_stream, o_circ) = if circ.a_cid == cid {
+                        (circ.b_cid, circ.b_stream, circ.b_circuit_id)
+                    } else {
+                        (circ.a_cid, circ.a_stream, circ.a_circuit_id)
+                    };
+                    self.send_msg(
+                        net,
+                        o_cid,
+                        o_stream,
+                        &RelayMsg::data(o_circ, m.payload).encode(),
+                    )?;
+                } else if let Some(&inner_cid) = self.circuit_conns.get(&(cid, m.circuit)) {
+                    // Client side: feed the inner connection.
+                    let pkt = Packet::decode(&m.payload)?;
+                    let info = {
+                        let c = self.conns.get_mut(&inner_cid).context("inner conn gone")?;
+                        c.conn.handle_packet(net.now(), pkt).unwrap_or_default()
+                    };
+                    // Path challenges over the circuit are answered over the
+                    // circuit (no address migration).
+                    let responses: Vec<Vec<u8>> = {
+                        let c = self.conns.get_mut(&inner_cid).unwrap();
+                        info.path_challenges
+                            .iter()
+                            .map(|t| c.conn.make_path_response(*t))
+                            .collect()
+                    };
+                    for r in responses {
+                        self.send_circuit_datagram(net, cid, m.circuit, r);
+                    }
+                    self.post_rx(net, inner_cid, None, info);
+                }
+            }
+            relay_msg::M_CIRCUIT_CLOSED => {
+                if let Some(&inner_cid) = self.circuit_conns.get(&(cid, m.circuit)) {
+                    self.teardown_conn(net, inner_cid, "circuit closed by relay");
+                    self.circuit_conns.remove(&(cid, m.circuit));
+                }
+            }
+            other => bail!("unexpected relay message kind {other}"),
+        }
+        Ok(())
+    }
+
+    fn send_circuit_datagram(&mut self, net: &mut Net, relay_cid: u64, circuit: u64, pkt: Vec<u8>) {
+        let Ok(stream) = self.ensure_relay_ctrl(net, relay_cid) else {
+            return;
+        };
+        let _ = self.send_msg(net, relay_cid, stream, &RelayMsg::data(circuit, pkt).encode());
+    }
+
+    // ------------------------------------------------------------------
+    // Output + timers
+    // ------------------------------------------------------------------
+
+    /// Drain a connection's pending packets onto its path.
+    fn flush_conn(&mut self, net: &mut Net, cid: u64) {
+        let local_addr = self.local_addr;
+        loop {
+            let (packets, path) = {
+                let Some(c) = self.conns.get_mut(&cid) else { return };
+                let out = c.conn.poll_output(net.now());
+                (out, c.path)
+            };
+            if packets.is_empty() {
+                break;
+            }
+            match path {
+                Path::Direct(addr) => {
+                    for p in packets {
+                        net.send(local_addr, addr, p);
+                    }
+                }
+                Path::Relayed { relay_cid, circuit } => {
+                    for p in packets {
+                        self.send_circuit_datagram(net, relay_cid, circuit, p);
+                    }
+                }
+            }
+        }
+        // Closed after flush? tear down.
+        let closed = self
+            .conns
+            .get(&cid)
+            .map(|c| c.conn.is_closed())
+            .unwrap_or(false);
+        if closed {
+            let reason = self
+                .conns
+                .get(&cid)
+                .and_then(|c| c.conn.closed_reason.clone())
+                .unwrap_or_else(|| "closed".into());
+            self.teardown_conn(net, cid, &reason);
+        }
+    }
+
+    /// Earliest deadline across connections and punches.
+    pub fn next_deadline(&self, now: Time) -> Option<Time> {
+        let mut t: Option<Time> = None;
+        let mut consider = |x: Time| t = Some(t.map_or(x, |v: Time| v.min(x)));
+        for c in self.conns.values() {
+            if let Some(d) = c.conn.next_timeout(now) {
+                consider(d);
+            }
+            if let Some(p) = &c.punch {
+                consider(p.deadline);
+            }
+        }
+        t
+    }
+
+    /// Arm (or re-arm) the swarm tick timer at the next deadline.
+    pub fn arm_tick(&mut self, net: &mut Net) {
+        let now = net.now();
+        if let Some(d) = self.next_deadline(now) {
+            let d = d.max(now + 100); // clamp: never schedule in the past
+            if self.tick_armed_until == 0 || d < self.tick_armed_until || now >= self.tick_armed_until
+            {
+                net.set_timer(self.endpoint_id, d - now, TIMER_SWARM_TICK);
+                self.tick_armed_until = d;
+            }
+        }
+    }
+
+    /// Timer tick: drive per-connection timers and punches.
+    pub fn on_timer(&mut self, net: &mut Net, token: u64) {
+        if token != TIMER_SWARM_TICK {
+            return;
+        }
+        self.tick_armed_until = 0;
+        let now = net.now();
+        let cids: Vec<u64> = self.conns.keys().copied().collect();
+        for cid in cids {
+            let due = self
+                .conns
+                .get(&cid)
+                .and_then(|c| c.conn.next_timeout(now))
+                .map_or(false, |d| d <= now);
+            if due {
+                if let Some(c) = self.conns.get_mut(&cid) {
+                    c.conn.on_timer(now);
+                }
+                self.pump_conn_events(net, cid);
+                self.flush_conn(net, cid);
+            }
+            let punch_due = self
+                .conns
+                .get(&cid)
+                .and_then(|c| c.punch.as_ref())
+                .map_or(false, |p| p.deadline <= now);
+            if punch_due {
+                self.drive_punch(net, cid);
+            }
+        }
+        self.arm_tick(net);
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,114 @@
+//! The peerstore: known addresses, keys and protocol support per peer.
+
+use crate::crypto::PublicKey;
+use crate::identity::PeerId;
+use crate::multiaddr::Multiaddr;
+use crate::netsim::Time;
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct PeerInfo {
+    pub addrs: Vec<Multiaddr>,
+    pub key: Option<PublicKey>,
+    pub protocols: Vec<String>,
+    pub last_seen: Time,
+}
+
+/// Address book + key cache. Protocols (identify, DHT, rendezvous) feed it;
+/// dial logic and shard-aware RPC stubs read from it.
+#[derive(Default)]
+pub struct Peerstore {
+    peers: HashMap<PeerId, PeerInfo>,
+}
+
+impl Peerstore {
+    pub fn new() -> Peerstore {
+        Peerstore::default()
+    }
+
+    pub fn add_address(&mut self, peer: PeerId, addr: Multiaddr) {
+        let info = self.peers.entry(peer).or_default();
+        if !info.addrs.contains(&addr) {
+            info.addrs.push(addr);
+        }
+    }
+
+    pub fn set_key(&mut self, peer: PeerId, key: PublicKey) {
+        self.peers.entry(peer).or_default().key = Some(key);
+    }
+
+    pub fn set_protocols(&mut self, peer: PeerId, protocols: Vec<String>) {
+        self.peers.entry(peer).or_default().protocols = protocols;
+    }
+
+    pub fn touch(&mut self, peer: PeerId, now: Time) {
+        self.peers.entry(peer).or_default().last_seen = now;
+    }
+
+    pub fn addrs(&self, peer: &PeerId) -> &[Multiaddr] {
+        self.peers.get(peer).map(|p| p.addrs.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn key(&self, peer: &PeerId) -> Option<&PublicKey> {
+        self.peers.get(peer).and_then(|p| p.key.as_ref())
+    }
+
+    pub fn info(&self, peer: &PeerId) -> Option<&PeerInfo> {
+        self.peers.get(peer)
+    }
+
+    pub fn known_peers(&self) -> impl Iterator<Item = &PeerId> {
+        self.peers.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.peers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.peers.is_empty()
+    }
+
+    pub fn remove(&mut self, peer: &PeerId) {
+        self.peers.remove(peer);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::identity::Keypair;
+    use crate::multiaddr::{Proto, SimAddr};
+
+    #[test]
+    fn addresses_dedupe() {
+        let mut ps = Peerstore::new();
+        let pid = Keypair::from_seed(1).peer_id();
+        let ma = Multiaddr::direct(SimAddr::new(1, 2), Proto::QuicLike);
+        ps.add_address(pid, ma.clone());
+        ps.add_address(pid, ma.clone());
+        assert_eq!(ps.addrs(&pid).len(), 1);
+        let ma2 = Multiaddr::direct(SimAddr::new(1, 3), Proto::QuicLike);
+        ps.add_address(pid, ma2);
+        assert_eq!(ps.addrs(&pid).len(), 2);
+    }
+
+    #[test]
+    fn unknown_peer_empty() {
+        let ps = Peerstore::new();
+        let pid = Keypair::from_seed(9).peer_id();
+        assert!(ps.addrs(&pid).is_empty());
+        assert!(ps.key(&pid).is_none());
+    }
+
+    #[test]
+    fn keys_and_protocols() {
+        let mut ps = Peerstore::new();
+        let kp = Keypair::from_seed(2);
+        ps.set_key(kp.peer_id(), kp.public());
+        ps.set_protocols(kp.peer_id(), vec!["/lattica/rpc/1".into()]);
+        assert_eq!(ps.key(&kp.peer_id()), Some(&kp.public()));
+        assert_eq!(ps.info(&kp.peer_id()).unwrap().protocols.len(), 1);
+        assert_eq!(ps.len(), 1);
+    }
+}

@@ -1,0 +1,193 @@
+//! Circuit-relay control messages (the `/lattica/relay/1` protocol).
+//!
+//! A client opens one control stream to each relay it uses. `Reserve`
+//! registers it as a reachable circuit target (and teaches it its observed
+//! public address); `Connect` asks the relay to splice a circuit to a
+//! reserved peer; `Data` carries opaque inner-connection packets in both
+//! directions. The relay enforces per-reservation circuit caps.
+
+use crate::identity::PeerId;
+use crate::multiaddr::SimAddr;
+use crate::wire::{Message, PbReader, PbWriter};
+use anyhow::{bail, Result};
+
+pub const RELAY_PROTO: &str = "/lattica/relay/1";
+
+pub const M_RESERVE: u64 = 1;
+pub const M_RESERVE_OK: u64 = 2;
+pub const M_CONNECT: u64 = 3;
+pub const M_CONNECT_OK: u64 = 4;
+pub const M_CONNECT_ERR: u64 = 5;
+pub const M_INCOMING: u64 = 6;
+pub const M_DATA: u64 = 7;
+pub const M_CIRCUIT_CLOSED: u64 = 8;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RelayMsg {
+    pub kind: u64,
+    /// CONNECT: desired target. INCOMING: the initiating peer.
+    pub peer: Option<PeerId>,
+    /// Circuit id (CONNECT_OK, INCOMING, DATA, CIRCUIT_CLOSED).
+    pub circuit: u64,
+    /// DATA payload (an inner-connection packet).
+    pub payload: Vec<u8>,
+    /// RESERVE_OK: the client's address as observed by the relay.
+    pub observed_host: u32,
+    pub observed_port: u32,
+    /// CONNECT_ERR / CIRCUIT_CLOSED reason.
+    pub error: String,
+}
+
+impl RelayMsg {
+    pub fn reserve() -> RelayMsg {
+        RelayMsg {
+            kind: M_RESERVE,
+            ..Default::default()
+        }
+    }
+
+    pub fn reserve_ok(observed: SimAddr) -> RelayMsg {
+        RelayMsg {
+            kind: M_RESERVE_OK,
+            observed_host: observed.host,
+            observed_port: observed.port as u32,
+            ..Default::default()
+        }
+    }
+
+    pub fn connect(target: PeerId) -> RelayMsg {
+        RelayMsg {
+            kind: M_CONNECT,
+            peer: Some(target),
+            ..Default::default()
+        }
+    }
+
+    pub fn connect_ok(circuit: u64) -> RelayMsg {
+        RelayMsg {
+            kind: M_CONNECT_OK,
+            circuit,
+            ..Default::default()
+        }
+    }
+
+    pub fn connect_err(error: &str) -> RelayMsg {
+        RelayMsg {
+            kind: M_CONNECT_ERR,
+            error: error.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn incoming(circuit: u64, from: PeerId) -> RelayMsg {
+        RelayMsg {
+            kind: M_INCOMING,
+            circuit,
+            peer: Some(from),
+            ..Default::default()
+        }
+    }
+
+    pub fn data(circuit: u64, payload: Vec<u8>) -> RelayMsg {
+        RelayMsg {
+            kind: M_DATA,
+            circuit,
+            payload,
+            ..Default::default()
+        }
+    }
+
+    pub fn circuit_closed(circuit: u64, error: &str) -> RelayMsg {
+        RelayMsg {
+            kind: M_CIRCUIT_CLOSED,
+            circuit,
+            error: error.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn observed_addr(&self) -> SimAddr {
+        SimAddr::new(self.observed_host, self.observed_port as u16)
+    }
+}
+
+impl Message for RelayMsg {
+    fn encode_to(&self, w: &mut PbWriter) {
+        w.uint(1, self.kind);
+        if let Some(p) = &self.peer {
+            w.bytes(2, p.as_bytes());
+        }
+        w.uint(3, self.circuit);
+        w.bytes(4, &self.payload);
+        w.uint(5, self.observed_host as u64);
+        w.uint(6, self.observed_port as u64);
+        w.string(7, &self.error);
+    }
+
+    fn decode(buf: &[u8]) -> Result<RelayMsg> {
+        let mut m = RelayMsg::default();
+        PbReader::new(buf).for_each(|f| {
+            match f.number {
+                1 => m.kind = f.as_u64(),
+                2 => {
+                    let b = f.as_bytes()?;
+                    anyhow::ensure!(b.len() == 32, "bad peer id length");
+                    let mut d = [0u8; 32];
+                    d.copy_from_slice(b);
+                    m.peer = Some(PeerId(d));
+                }
+                3 => m.circuit = f.as_u64(),
+                4 => m.payload = f.as_bytes()?.to_vec(),
+                5 => m.observed_host = f.as_u64() as u32,
+                6 => m.observed_port = f.as_u64() as u32,
+                7 => m.error = f.as_string()?,
+                _ => {}
+            }
+            Ok(())
+        })?;
+        if m.kind == 0 || m.kind > M_CIRCUIT_CLOSED {
+            bail!("invalid relay message kind {}", m.kind);
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::identity::Keypair;
+
+    #[test]
+    fn roundtrip_all_kinds() {
+        let pid = Keypair::from_seed(4).peer_id();
+        let msgs = vec![
+            RelayMsg::reserve(),
+            RelayMsg::reserve_ok(SimAddr::new(9, 1234)),
+            RelayMsg::connect(pid),
+            RelayMsg::connect_ok(77),
+            RelayMsg::connect_err("no reservation"),
+            RelayMsg::incoming(77, pid),
+            RelayMsg::data(77, vec![1, 2, 3]),
+            RelayMsg::circuit_closed(77, "peer gone"),
+        ];
+        for m in msgs {
+            let enc = m.encode();
+            assert_eq!(RelayMsg::decode(&enc).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn observed_addr_roundtrip() {
+        let m = RelayMsg::reserve_ok(SimAddr::new(42, 65_000));
+        assert_eq!(m.observed_addr(), SimAddr::new(42, 65_000));
+    }
+
+    #[test]
+    fn bad_kind_rejected() {
+        let m = RelayMsg {
+            kind: 99,
+            ..Default::default()
+        };
+        assert!(RelayMsg::decode(&m.encode()).is_err());
+    }
+}

@@ -1,0 +1,422 @@
+//! Swarm integration tests: dialing, streams, relay circuits, hole punching.
+
+use super::*;
+use crate::netsim::nat::NatType;
+use crate::netsim::topology::{LinkProfile, TopologyBuilder};
+use crate::netsim::{Endpoint, World, SECOND};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Minimal node: a swarm plus a drained event log.
+pub(crate) struct SwarmNode {
+    pub swarm: Swarm,
+    pub log: Vec<SwarmEvent>,
+}
+
+impl SwarmNode {
+    pub(crate) fn drain(&mut self) {
+        while let Some(e) = self.swarm.poll_event() {
+            self.log.push(e);
+        }
+    }
+}
+
+impl Endpoint for SwarmNode {
+    fn on_datagram(&mut self, net: &mut Net, from: SimAddr, to: SimAddr, payload: Vec<u8>) {
+        self.swarm.handle_datagram(net, from, to, payload);
+        self.drain();
+    }
+
+    fn on_timer(&mut self, net: &mut Net, token: u64) {
+        self.swarm.on_timer(net, token);
+        self.drain();
+    }
+}
+
+/// Create a swarm node on `host`, bound to port 4001.
+pub(crate) fn spawn_node(
+    world: &mut World,
+    host: u32,
+    seed: u64,
+    cfg: SwarmConfig,
+) -> (Rc<RefCell<SwarmNode>>, PeerId, Multiaddr) {
+    let keypair = Keypair::from_seed(seed);
+    let peer = keypair.peer_id();
+    let addr = SimAddr::new(host, 4001);
+    let eid = world.next_endpoint_id();
+    let swarm = Swarm::new(keypair, eid, addr, cfg, world.net.rng.fork());
+    let node = Rc::new(RefCell::new(SwarmNode {
+        swarm,
+        log: Vec::new(),
+    }));
+    let got = world.add_endpoint(node.clone());
+    assert_eq!(got, eid);
+    world.net.bind(eid, addr).unwrap();
+    let ma = Multiaddr::direct(addr, Proto::QuicLike).with_peer(peer);
+    (node, peer, ma)
+}
+
+fn two_node_world(proto: Proto) -> (World, Rc<RefCell<SwarmNode>>, Rc<RefCell<SwarmNode>>, Multiaddr) {
+    let mut t = TopologyBuilder::paper_regions();
+    let ha = t.public_host(0, LinkProfile::DATACENTER);
+    let hb = t.public_host(1, LinkProfile::DATACENTER);
+    let mut world = World::new(t.build(11));
+    let (a, _, _) = spawn_node(&mut world, ha, 1, SwarmConfig::default());
+    let (b, _, mut mb) = spawn_node(&mut world, hb, 2, SwarmConfig::default());
+    mb.proto = proto;
+    (world, a, b, mb)
+}
+
+fn established_peers(log: &[SwarmEvent]) -> Vec<PeerId> {
+    log.iter()
+        .filter_map(|e| match e {
+            SwarmEvent::ConnEstablished { peer, .. } => Some(*peer),
+            _ => None,
+        })
+        .collect()
+}
+
+#[test]
+fn dial_establishes_quic_like() {
+    let (mut world, a, b, mb) = two_node_world(Proto::QuicLike);
+    a.borrow_mut().swarm.dial(&mut world.net, &mb).unwrap();
+    world.run_for(SECOND);
+    let b_peer = b.borrow().swarm.local_peer;
+    let a_peer = a.borrow().swarm.local_peer;
+    assert_eq!(established_peers(&a.borrow().log), vec![b_peer]);
+    assert_eq!(established_peers(&b.borrow().log), vec![a_peer]);
+    assert!(a.borrow().swarm.is_connected(&b_peer));
+}
+
+#[test]
+fn dial_establishes_tcp_like() {
+    let (mut world, a, b, mb) = two_node_world(Proto::TcpLike);
+    a.borrow_mut().swarm.dial(&mut world.net, &mb).unwrap();
+    world.run_for(SECOND);
+    let b_peer = b.borrow().swarm.local_peer;
+    assert!(a.borrow().swarm.is_connected(&b_peer));
+    assert!(b.borrow().log.iter().any(
+        |e| matches!(e, SwarmEvent::ConnEstablished { role: Role::Server, .. })
+    ));
+}
+
+#[test]
+fn tcp_like_handshake_slower_than_quic_like() {
+    // Measure virtual time to establishment for both profiles.
+    let mut times = Vec::new();
+    for proto in [Proto::QuicLike, Proto::TcpLike] {
+        let (mut world, a, b, mb) = two_node_world(proto);
+        a.borrow_mut().swarm.dial(&mut world.net, &mb).unwrap();
+        let mut t = None;
+        for step in 1..200 {
+            world.run_until(step * 5 * crate::netsim::MILLI);
+            if !established_peers(&b.borrow().log).is_empty() {
+                t = Some(world.net.now());
+                break;
+            }
+        }
+        times.push(t.expect("established"));
+    }
+    assert!(
+        times[1] > times[0],
+        "tcp-like ({}) must establish slower than quic-like ({})",
+        times[1],
+        times[0]
+    );
+}
+
+#[test]
+fn stream_messages_roundtrip() {
+    let (mut world, a, b, mb) = two_node_world(Proto::QuicLike);
+    let b_peer = b.borrow().swarm.local_peer;
+    a.borrow_mut().swarm.dial(&mut world.net, &mb).unwrap();
+    world.run_for(SECOND);
+
+    let (cid, stream) = a
+        .borrow_mut()
+        .swarm
+        .open_stream(&mut world.net, &b_peer, "/test/echo/1")
+        .unwrap();
+    a.borrow_mut()
+        .swarm
+        .send_msg(&mut world.net, cid, stream, b"hello lattica")
+        .unwrap();
+    world.run_for(SECOND);
+
+    // B got the inbound stream + message; reply.
+    let (b_cid, b_stream) = {
+        let b_ref = b.borrow();
+        let open = b_ref
+            .log
+            .iter()
+            .find_map(|e| match e {
+                SwarmEvent::InboundStream { cid, stream, proto, .. }
+                    if proto == "/test/echo/1" =>
+                {
+                    Some((*cid, *stream))
+                }
+                _ => None,
+            })
+            .expect("inbound stream");
+        assert!(b_ref.log.iter().any(
+            |e| matches!(e, SwarmEvent::StreamMsg { msg, .. } if msg == b"hello lattica")
+        ));
+        open
+    };
+    b.borrow_mut()
+        .swarm
+        .send_msg(&mut world.net, b_cid, b_stream, b"echo!")
+        .unwrap();
+    world.run_for(SECOND);
+    assert!(a
+        .borrow()
+        .log
+        .iter()
+        .any(|e| matches!(e, SwarmEvent::StreamMsg { msg, .. } if msg == b"echo!")));
+}
+
+#[test]
+fn conn_close_surfaces_on_both_sides() {
+    let (mut world, a, b, mb) = two_node_world(Proto::QuicLike);
+    let b_peer = b.borrow().swarm.local_peer;
+    a.borrow_mut().swarm.dial(&mut world.net, &mb).unwrap();
+    world.run_for(SECOND);
+    let cid = a.borrow().swarm.conns_to(&b_peer)[0];
+    a.borrow_mut().swarm.close_conn(&mut world.net, cid, "test over");
+    world.run_for(SECOND);
+    a.borrow_mut().drain();
+    assert!(a
+        .borrow()
+        .log
+        .iter()
+        .any(|e| matches!(e, SwarmEvent::ConnClosed { .. })));
+    assert!(b
+        .borrow()
+        .log
+        .iter()
+        .any(|e| matches!(e, SwarmEvent::ConnClosed { reason, .. } if reason == "test over")));
+}
+
+/// World with a public relay and two NATed nodes.
+/// Returns (world, relay, a, b, relay_ma).
+fn natted_world(
+    nat_a: NatType,
+    nat_b: NatType,
+) -> (
+    World,
+    Rc<RefCell<SwarmNode>>,
+    Rc<RefCell<SwarmNode>>,
+    Rc<RefCell<SwarmNode>>,
+    Multiaddr,
+) {
+    let mut t = TopologyBuilder::paper_regions();
+    let hr = t.public_host(0, LinkProfile::DATACENTER);
+    let na = t.nat(1, nat_a, LinkProfile::FIBER);
+    let ha = t.natted_host(na, LinkProfile::UNLIMITED);
+    let nb = t.nat(2, nat_b, LinkProfile::FIBER);
+    let hb = t.natted_host(nb, LinkProfile::UNLIMITED);
+    let mut world = World::new(t.build(13));
+    let relay_cfg = SwarmConfig {
+        relay_enabled: true,
+        ..SwarmConfig::default()
+    };
+    let (r, _, mr) = spawn_node(&mut world, hr, 10, relay_cfg);
+    let (a, _, _) = spawn_node(&mut world, ha, 11, SwarmConfig::default());
+    let (b, _, _) = spawn_node(&mut world, hb, 12, SwarmConfig::default());
+    (world, r, a, b, mr)
+}
+
+#[test]
+fn relay_circuit_connects_two_natted_peers() {
+    let (mut world, r, a, b, mr) = natted_world(NatType::Symmetric, NatType::Symmetric);
+    let b_peer = b.borrow().swarm.local_peer;
+    let r_peer = r.borrow().swarm.local_peer;
+
+    // Both connect to the relay; B reserves.
+    a.borrow_mut().swarm.dial(&mut world.net, &mr).unwrap();
+    b.borrow_mut().swarm.dial(&mut world.net, &mr).unwrap();
+    world.run_for(SECOND);
+    b.borrow_mut()
+        .swarm
+        .relay_reserve(&mut world.net, &r_peer)
+        .unwrap();
+    world.run_for(SECOND);
+    assert!(b
+        .borrow()
+        .log
+        .iter()
+        .any(|e| matches!(e, SwarmEvent::ObservedAddr { .. })));
+
+    // A dials B through the relay circuit.
+    let circuit_ma = Multiaddr::circuit(mr.clone(), b_peer);
+    a.borrow_mut().swarm.dial(&mut world.net, &circuit_ma).unwrap();
+    world.run_for(2 * SECOND);
+
+    // Inner connection established end-to-end, authenticated as B.
+    assert!(
+        a.borrow().log.iter().any(|e| matches!(
+            e,
+            SwarmEvent::ConnEstablished { peer, relayed: true, .. } if *peer == b_peer
+        )),
+        "a log: {:?}",
+        a.borrow().log
+    );
+    // Messages flow across the circuit.
+    let (cid, stream) = a
+        .borrow_mut()
+        .swarm
+        .open_stream(&mut world.net, &b_peer, "/relay-test/1")
+        .unwrap();
+    a.borrow_mut()
+        .swarm
+        .send_msg(&mut world.net, cid, stream, b"through the relay")
+        .unwrap();
+    world.run_for(2 * SECOND);
+    assert!(b
+        .borrow()
+        .log
+        .iter()
+        .any(|e| matches!(e, SwarmEvent::StreamMsg { msg, .. } if msg == b"through the relay")));
+}
+
+/// Run the full relay + reserve + circuit + punch flow between two NAT types.
+/// Returns whether the connection migrated to a direct path.
+pub(crate) fn punch_outcome(nat_a: NatType, nat_b: NatType, seed: u64) -> bool {
+    let mut t = TopologyBuilder::paper_regions();
+    let hr = t.public_host(0, LinkProfile::DATACENTER);
+    let na = t.nat(1, nat_a, LinkProfile::FIBER);
+    let ha = t.natted_host(na, LinkProfile::UNLIMITED);
+    let nb = t.nat(2, nat_b, LinkProfile::FIBER);
+    let hb = t.natted_host(nb, LinkProfile::UNLIMITED);
+    let mut world = World::new(t.build(seed));
+    let relay_cfg = SwarmConfig {
+        relay_enabled: true,
+        ..SwarmConfig::default()
+    };
+    let (r, _, mr) = spawn_node(&mut world, hr, seed * 100 + 1, relay_cfg);
+    let (a, _, _) = spawn_node(&mut world, ha, seed * 100 + 2, SwarmConfig::default());
+    let (b, _, _) = spawn_node(&mut world, hb, seed * 100 + 3, SwarmConfig::default());
+    let r_peer = r.borrow().swarm.local_peer;
+    let a_peer = a.borrow().swarm.local_peer;
+    let b_peer = b.borrow().swarm.local_peer;
+
+    a.borrow_mut().swarm.dial(&mut world.net, &mr).unwrap();
+    b.borrow_mut().swarm.dial(&mut world.net, &mr).unwrap();
+    world.run_for(SECOND);
+    // Both reserve (this also teaches each its observed address).
+    a.borrow_mut().swarm.relay_reserve(&mut world.net, &r_peer).unwrap();
+    b.borrow_mut().swarm.relay_reserve(&mut world.net, &r_peer).unwrap();
+    world.run_for(SECOND);
+
+    let circuit_ma = Multiaddr::circuit(mr.clone(), b_peer);
+    a.borrow_mut().swarm.dial(&mut world.net, &circuit_ma).unwrap();
+    world.run_for(2 * SECOND);
+
+    let a_obs = a.borrow().swarm.external_addrs.first().copied();
+    let b_obs = b.borrow().swarm.external_addrs.first().copied();
+    let (Some(a_obs), Some(b_obs)) = (a_obs, b_obs) else {
+        return false;
+    };
+    let a_cid = a.borrow().swarm.conns_to(&b_peer).first().copied();
+    let b_cid = b.borrow().swarm.conns_to(&a_peer).first().copied();
+    let (Some(a_cid), Some(b_cid)) = (a_cid, b_cid) else {
+        return false;
+    };
+    // Coordinated simultaneous punch (the dcutr protocol's role).
+    let _ = a.borrow_mut().swarm.start_punch(&mut world.net, a_cid, b_obs);
+    let _ = b.borrow_mut().swarm.start_punch(&mut world.net, b_cid, a_obs);
+    world.run_for(3 * SECOND);
+
+    a.borrow_mut().drain(); b.borrow_mut().drain();
+    if std::env::var("PUNCH_DEBUG").is_ok() {
+        eprintln!("A path: {:?}", a.borrow().swarm.connection_path(a_cid));
+        eprintln!("B path: {:?}", b.borrow().swarm.connection_path(b_cid));
+        eprintln!("A punch evs: {:?}", a.borrow().log.iter().filter(|e| matches!(e, SwarmEvent::PunchResult{..})).collect::<Vec<_>>());
+        eprintln!("B punch evs: {:?}", b.borrow().log.iter().filter(|e| matches!(e, SwarmEvent::PunchResult{..})).collect::<Vec<_>>());
+        eprintln!("A obs {:?} B obs {:?}", a_obs, b_obs);
+    }
+    let a_direct = matches!(
+        a.borrow().swarm.connection_path(a_cid),
+        Some(Path::Direct(_))
+    );
+    let b_direct = matches!(
+        b.borrow().swarm.connection_path(b_cid),
+        Some(Path::Direct(_))
+    );
+    a_direct && b_direct
+}
+
+#[test]
+fn punch_succeeds_full_cone_vs_port_restricted() {
+    assert!(punch_outcome(NatType::FullCone, NatType::PortRestrictedCone, 21));
+}
+
+#[test]
+fn punch_succeeds_restricted_vs_symmetric() {
+    // Address-dependent filtering admits the symmetric NAT's fresh port.
+    assert!(punch_outcome(NatType::RestrictedCone, NatType::Symmetric, 23));
+}
+
+#[test]
+fn punch_fails_symmetric_vs_symmetric() {
+    assert!(!punch_outcome(NatType::Symmetric, NatType::Symmetric, 25));
+}
+
+#[test]
+fn punch_fails_symmetric_vs_port_restricted() {
+    assert!(!punch_outcome(NatType::Symmetric, NatType::PortRestrictedCone, 27));
+}
+
+#[test]
+fn punch_succeeds_port_restricted_pair() {
+    assert!(punch_outcome(
+        NatType::PortRestrictedCone,
+        NatType::PortRestrictedCone,
+        29
+    ));
+}
+
+#[test]
+fn relayed_connection_survives_when_punch_fails() {
+    let (mut world, r, a, b, mr) = natted_world(NatType::Symmetric, NatType::Symmetric);
+    let r_peer = r.borrow().swarm.local_peer;
+    let b_peer = b.borrow().swarm.local_peer;
+    a.borrow_mut().swarm.dial(&mut world.net, &mr).unwrap();
+    b.borrow_mut().swarm.dial(&mut world.net, &mr).unwrap();
+    world.run_for(SECOND);
+    a.borrow_mut().swarm.relay_reserve(&mut world.net, &r_peer).unwrap();
+    b.borrow_mut().swarm.relay_reserve(&mut world.net, &r_peer).unwrap();
+    world.run_for(SECOND);
+    let circuit_ma = Multiaddr::circuit(mr.clone(), b_peer);
+    a.borrow_mut().swarm.dial(&mut world.net, &circuit_ma).unwrap();
+    world.run_for(2 * SECOND);
+    let a_cid = a.borrow().swarm.conns_to(&b_peer)[0];
+    let b_obs = b.borrow().swarm.external_addrs[0];
+    a.borrow_mut()
+        .swarm
+        .start_punch(&mut world.net, a_cid, b_obs)
+        .unwrap();
+    world.run_for(3 * SECOND);
+    // Punch failed…
+    assert!(a
+        .borrow()
+        .log
+        .iter()
+        .any(|e| matches!(e, SwarmEvent::PunchResult { success: false, .. })));
+    // …but the relayed path still carries data.
+    let (cid, stream) = a
+        .borrow_mut()
+        .swarm
+        .open_stream(&mut world.net, &b_peer, "/fallback/1")
+        .unwrap();
+    a.borrow_mut()
+        .swarm
+        .send_msg(&mut world.net, cid, stream, b"still here")
+        .unwrap();
+    world.run_for(2 * SECOND);
+    assert!(b
+        .borrow()
+        .log
+        .iter()
+        .any(|e| matches!(e, SwarmEvent::StreamMsg { msg, .. } if msg == b"still here")));
+}

@@ -1,0 +1,1294 @@
+//! The connection state machine: handshake, reliability, streams.
+//!
+//! Sans-io: callers feed decoded [`Packet`]s and virtual-time ticks, then
+//! drain encoded packets from [`Connection::poll_output`] and semantic
+//! events from [`Connection::poll_event`]. The swarm layer owns address
+//! routing; a connection never touches the network directly, which lets the
+//! same machine run over direct datagrams or a relay circuit.
+
+use super::frame::{self, Frame};
+use super::packet::Packet;
+use super::rtt::RttEstimator;
+use super::streams::{RecvStream, SendStream};
+use super::TransportProfile;
+use crate::crypto::noise::HandshakeState;
+use crate::crypto::{aead, PublicKey};
+use crate::identity::{Keypair, PeerId};
+use crate::netsim::{Time, MILLI};
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+/// Connection role.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Client,
+    Server,
+}
+
+/// Configuration knobs.
+#[derive(Clone, Debug)]
+pub struct ConnectionConfig {
+    pub profile: TransportProfile,
+    /// Maximum datagram payload (from the simulator MTU).
+    pub mtu: usize,
+    /// In-flight byte budget (congestion window stand-in).
+    pub max_inflight: u64,
+    /// Send a PING if idle this long (keeps NAT mappings alive).
+    pub keepalive: Option<Time>,
+    /// Declare the connection dead after this much silence with data
+    /// outstanding.
+    pub idle_timeout: Time,
+}
+
+impl Default for ConnectionConfig {
+    fn default() -> Self {
+        ConnectionConfig {
+            profile: TransportProfile::QUIC_LIKE,
+            mtu: 1400,
+            max_inflight: 16 << 20,
+            keepalive: Some(10 * crate::netsim::SECOND),
+            idle_timeout: 30 * crate::netsim::SECOND,
+        }
+    }
+}
+
+/// Events surfaced to the swarm.
+#[derive(Debug)]
+pub enum ConnEvent {
+    /// Handshake complete; the peer's static key is authenticated.
+    Established { peer: PeerId, key: PublicKey },
+    /// Remote opened a stream with the given protocol.
+    StreamOpened { stream_id: u64, proto: String },
+    /// A complete message arrived on a stream.
+    Msg { stream_id: u64, msg: Vec<u8> },
+    /// Remote finished the stream cleanly (all data delivered).
+    StreamFinished { stream_id: u64 },
+    /// Remote reset the stream.
+    StreamReset { stream_id: u64, error: String },
+    /// A PATH_RESPONSE validated the probed path.
+    PathValidated { token: u64 },
+    /// Connection closed (by peer, error, or idle timeout).
+    Closed { error: String },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    /// TCP-like: waiting for SYN/SYN-ACK exchange.
+    TcpConnect,
+    Handshaking,
+    Established,
+    Closed,
+}
+
+struct SentPacket {
+    frames: Vec<Frame>,
+    size: u64,
+    sent_at: Time,
+    ack_eliciting: bool,
+}
+
+/// What one ingested packet contained — the swarm uses this for path
+/// migration decisions (DCUtR) and for answering path challenges on the
+/// path they arrived from.
+#[derive(Debug, Default)]
+pub struct RxInfo {
+    /// Packet authenticated and was processed.
+    pub accepted: bool,
+    /// PATH_RESPONSE tokens received (our probe succeeded).
+    pub path_responses: Vec<u64>,
+    /// PATH_CHALLENGE tokens received (peer probing us); the swarm answers
+    /// via [`Connection::make_path_response`] on the arrival path.
+    pub path_challenges: Vec<u64>,
+    /// Whether the packet carried anything beyond probes/acks.
+    pub has_app_frames: bool,
+}
+
+/// See module docs.
+pub struct Connection {
+    pub local_cid: u64,
+    pub remote_cid: u64,
+    pub role: Role,
+    cfg: ConnectionConfig,
+    state: State,
+    hs: Option<HandshakeState>,
+    hs_rng: Rng,
+    keypair: Keypair,
+    tx_key: Option<[u8; 32]>,
+    rx_key: Option<[u8; 32]>,
+    /// Peer identity, known after handshake.
+    pub peer: Option<PeerId>,
+    pub peer_key: Option<PublicKey>,
+
+    next_pkt_num: u64,
+    sent: BTreeMap<u64, SentPacket>,
+    inflight: u64,
+    rtt: RttEstimator,
+    rto_backoff: u32,
+
+    /// Received packet-number ranges (sorted, merged) for ACK generation.
+    recv_ranges: Vec<(u64, u64)>,
+    ack_eliciting_unacked: u32,
+    /// Deadline for a delayed ACK (max_ack_delay after first unacked).
+    ack_deadline: Option<Time>,
+
+    send_streams: HashMap<u64, SendStream>,
+    recv_streams: HashMap<u64, RecvStream>,
+    /// Remote-opened streams whose STREAM_OPEN we have processed.
+    remote_opened: std::collections::HashSet<u64>,
+    /// Messages that arrived before the stream's STREAM_OPEN (reordering).
+    early_msgs: HashMap<u64, Vec<Vec<u8>>>,
+    /// Streams with pending data, round-robin order.
+    active_streams: VecDeque<u64>,
+    next_stream_id: u64,
+
+    /// Control frames waiting to go out (handshake, opens, windows...).
+    ctrl: VecDeque<Frame>,
+    /// Encrypted packets that arrived before keys were ready.
+    early_packets: Vec<Packet>,
+    events: VecDeque<ConnEvent>,
+
+    pub last_recv: Time,
+    pub last_send: Time,
+    created_at: Time,
+    pub closed_reason: Option<String>,
+
+    /// Stats for metrics/backpressure.
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+    pub packets_retransmitted: u64,
+}
+
+impl Connection {
+    pub fn new(
+        role: Role,
+        cfg: ConnectionConfig,
+        keypair: Keypair,
+        now: Time,
+        rng: &mut Rng,
+    ) -> Connection {
+        let local_cid = loop {
+            let c = rng.next_u64();
+            if c != 0 {
+                break c;
+            }
+        };
+        let hs_rng = rng.fork();
+        let mut conn = Connection {
+            local_cid,
+            remote_cid: 0,
+            role,
+            state: if role == Role::Client && cfg.profile.extra_handshake_rtts > 0 {
+                State::TcpConnect
+            } else {
+                State::Handshaking
+            },
+            cfg,
+            hs: None,
+            hs_rng,
+            keypair,
+            tx_key: None,
+            rx_key: None,
+            peer: None,
+            peer_key: None,
+            next_pkt_num: 0,
+            sent: BTreeMap::new(),
+            inflight: 0,
+            rtt: RttEstimator::new(),
+            rto_backoff: 0,
+            recv_ranges: Vec::new(),
+            ack_eliciting_unacked: 0,
+            ack_deadline: None,
+            send_streams: HashMap::new(),
+            recv_streams: HashMap::new(),
+            remote_opened: std::collections::HashSet::new(),
+            early_msgs: HashMap::new(),
+            active_streams: VecDeque::new(),
+            next_stream_id: if role == Role::Client { 1 } else { 2 },
+            ctrl: VecDeque::new(),
+            early_packets: Vec::new(),
+            events: VecDeque::new(),
+            last_recv: now,
+            last_send: now,
+            created_at: now,
+            closed_reason: None,
+            bytes_sent: 0,
+            bytes_received: 0,
+            packets_retransmitted: 0,
+        };
+        match (role, conn.state) {
+            (Role::Client, State::TcpConnect) => conn.ctrl.push_back(Frame::syn()),
+            (Role::Client, State::Handshaking) => conn.start_noise(),
+            _ => {}
+        }
+        conn
+    }
+
+    fn start_noise(&mut self) {
+        let mut hs = HandshakeState::initiator(self.keypair.secret().clone(), &mut self.hs_rng);
+        let msg1 = hs.write_message(&[]).expect("noise msg1");
+        self.hs = Some(hs);
+        self.ctrl.push_back(Frame::handshake(1, msg1));
+    }
+
+    pub fn is_established(&self) -> bool {
+        self.state == State::Established
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state == State::Closed
+    }
+
+    /// Application backlog across all streams (backpressure signal).
+    pub fn backlog(&self) -> u64 {
+        self.send_streams.values().map(|s| s.backlog()).sum::<u64>() + self.inflight
+    }
+
+    pub fn srtt(&self) -> Time {
+        self.rtt.srtt()
+    }
+
+    /// Tune for running inside a reliable tunnel (relay circuit): small
+    /// window (the carrier has its own), long RTO floor (carrier queueing
+    /// delay must not look like loss).
+    pub fn tune_for_tunnel(&mut self) {
+        self.cfg.max_inflight = 256 << 10;
+        self.rtt.initial_rto = 1_000 * MILLI;
+        self.rtt.min_rto = 500 * MILLI;
+    }
+
+    // ------------------------------------------------------------------
+    // Stream API
+    // ------------------------------------------------------------------
+
+    /// Open an outbound stream for `proto`; usable immediately (frames queue
+    /// until the handshake completes).
+    pub fn open_stream(&mut self, proto: &str) -> u64 {
+        let id = self.next_stream_id;
+        self.next_stream_id += 2;
+        self.send_streams.insert(id, SendStream::new());
+        self.recv_streams.insert(id, RecvStream::new());
+        self.ctrl.push_back(Frame::stream_open(id, proto));
+        id
+    }
+
+    /// Queue a message on a stream.
+    pub fn send_msg(&mut self, stream_id: u64, msg: &[u8]) -> Result<()> {
+        let s = self
+            .send_streams
+            .get_mut(&stream_id)
+            .with_context(|| format!("unknown stream {stream_id}"))?;
+        if s.closed || s.fin_queued {
+            bail!("stream {stream_id} is closed for sending");
+        }
+        s.write_msg(msg);
+        if !self.active_streams.contains(&stream_id) {
+            self.active_streams.push_back(stream_id);
+        }
+        Ok(())
+    }
+
+    /// Half-close: no more sends after queued data drains.
+    pub fn finish_stream(&mut self, stream_id: u64) {
+        if let Some(s) = self.send_streams.get_mut(&stream_id) {
+            s.finish();
+            if !self.active_streams.contains(&stream_id) {
+                self.active_streams.push_back(stream_id);
+            }
+        }
+    }
+
+    /// Abort a stream in both directions.
+    pub fn reset_stream(&mut self, stream_id: u64, error: &str) {
+        if let Some(s) = self.send_streams.get_mut(&stream_id) {
+            s.closed = true;
+            s.pending.clear();
+        }
+        if let Some(r) = self.recv_streams.get_mut(&stream_id) {
+            r.reset = true;
+        }
+        self.ctrl.push_back(Frame::stream_reset(stream_id, error));
+    }
+
+    /// Initiate connection close.
+    pub fn close(&mut self, error: &str) {
+        if self.state != State::Closed {
+            self.ctrl.push_back(Frame::conn_close(error));
+            self.closed_reason = Some(error.to_string());
+            // State flips to Closed after the close frame is flushed.
+        }
+    }
+
+    /// Send a PATH_CHALLENGE (the swarm routes it via the probe path).
+    pub fn make_path_challenge(&mut self, token: u64) -> Vec<u8> {
+        let f = Frame::path_challenge(token);
+        self.seal_packet(vec![f], true)
+    }
+
+    /// Answer a PATH_CHALLENGE (the swarm sends it on the arrival path).
+    pub fn make_path_response(&mut self, token: u64) -> Vec<u8> {
+        let f = Frame::path_response(token);
+        self.seal_packet(vec![f], true)
+    }
+
+    pub fn send_ping(&mut self) {
+        self.ctrl.push_back(Frame::ping());
+    }
+
+    // ------------------------------------------------------------------
+    // Packet processing
+    // ------------------------------------------------------------------
+
+    /// Ingest one packet. Events/outputs are collected via the poll methods.
+    pub fn handle_packet(&mut self, now: Time, pkt: Packet) -> Result<RxInfo> {
+        let mut info = RxInfo::default();
+        if self.state == State::Closed {
+            return Ok(info);
+        }
+        self.last_recv = now;
+        if self.remote_cid == 0 && pkt.src_cid != 0 {
+            self.remote_cid = pkt.src_cid;
+        }
+        let payload = if pkt.encrypted {
+            match &self.rx_key {
+                Some(k) => {
+                    let ad = pkt.header_bytes();
+                    match aead::open(k, &pkt.nonce(), &ad, &pkt.payload) {
+                        Ok(p) => p,
+                        Err(_) => {
+                            // Unauthenticated packet: drop silently (could be
+                            // a stale path probe or an attacker).
+                            return Ok(info);
+                        }
+                    }
+                }
+                None => {
+                    // Keys not ready (data raced ahead of handshake): stash.
+                    if self.early_packets.len() < 64 {
+                        self.early_packets.push(pkt);
+                    }
+                    return Ok(info);
+                }
+            }
+        } else {
+            if self.state == State::Established {
+                // Plaintext after establishment is not acceptable (downgrade).
+                return Ok(info);
+            }
+            pkt.payload.clone()
+        };
+        info.accepted = true;
+        self.bytes_received += payload.len() as u64;
+        self.note_received(pkt.pkt_num);
+        let frames = frame::decode_frames(&payload)?;
+        let mut ack_eliciting = false;
+        for f in frames {
+            if f.is_ack_eliciting() {
+                ack_eliciting = true;
+            }
+            match f.kind {
+                frame::K_PATH_CHALLENGE => info.path_challenges.push(f.seq),
+                frame::K_PATH_RESPONSE => info.path_responses.push(f.seq),
+                frame::K_ACK | frame::K_PONG => {}
+                _ => info.has_app_frames = true,
+            }
+            self.handle_frame(now, f)?;
+        }
+        if ack_eliciting {
+            self.ack_eliciting_unacked += 1;
+            if self.ack_deadline.is_none() {
+                self.ack_deadline = Some(now + MILLI);
+            }
+        }
+        // Drain early packets if keys just became available.
+        if self.rx_key.is_some() && !self.early_packets.is_empty() {
+            let early = std::mem::take(&mut self.early_packets);
+            for p in early {
+                let sub = self.handle_packet(now, p)?;
+                info.path_responses.extend(sub.path_responses);
+                info.path_challenges.extend(sub.path_challenges);
+                info.has_app_frames |= sub.has_app_frames;
+            }
+        }
+        Ok(info)
+    }
+
+    fn handle_frame(&mut self, now: Time, f: Frame) -> Result<()> {
+        match f.kind {
+            frame::K_SYN => {
+                if self.role == Role::Server && self.state == State::TcpConnect
+                    || self.state == State::Handshaking && self.hs.is_none()
+                {
+                    self.ctrl.push_back(Frame::syn_ack());
+                }
+            }
+            frame::K_SYN_ACK => {
+                if self.role == Role::Client && self.state == State::TcpConnect {
+                    self.state = State::Handshaking;
+                    self.start_noise();
+                }
+            }
+            frame::K_HANDSHAKE => self.handle_handshake(f.seq, &f.data)?,
+            frame::K_ACK => self.handle_ack(now, f.largest_ack, &f.ack_ranges),
+            frame::K_STREAM_OPEN => {
+                if !self.remote_opened.contains(&f.stream_id) {
+                    self.remote_opened.insert(f.stream_id);
+                    self.recv_streams.entry(f.stream_id).or_insert_with(RecvStream::new);
+                    self.send_streams.entry(f.stream_id).or_insert_with(SendStream::new);
+                    self.events.push_back(ConnEvent::StreamOpened {
+                        stream_id: f.stream_id,
+                        proto: f.proto,
+                    });
+                    // Flush messages that raced ahead of the OPEN.
+                    if let Some(buf) = self.early_msgs.remove(&f.stream_id) {
+                        for m in buf {
+                            self.events.push_back(ConnEvent::Msg {
+                                stream_id: f.stream_id,
+                                msg: m,
+                            });
+                        }
+                    }
+                }
+            }
+            frame::K_STREAM_DATA => {
+                let r = self
+                    .recv_streams
+                    .entry(f.stream_id)
+                    .or_insert_with(RecvStream::new);
+                let (msgs, finished) = r.on_data(f.offset, f.data, f.fin)?;
+                if let Some(limit) = r.credit_update() {
+                    self.ctrl.push_back(Frame::stream_window(f.stream_id, limit));
+                }
+                // A locally opened stream has our id parity; a remote stream
+                // must wait for its STREAM_OPEN before messages surface (the
+                // OPEN carries the protocol name).
+                let local_parity = (self.next_stream_id % 2) == 1;
+                let is_local = (f.stream_id % 2 == 1) == local_parity;
+                let open_known = is_local || self.remote_opened.contains(&f.stream_id);
+                for m in msgs {
+                    if open_known {
+                        self.events.push_back(ConnEvent::Msg {
+                            stream_id: f.stream_id,
+                            msg: m,
+                        });
+                    } else {
+                        self.early_msgs.entry(f.stream_id).or_default().push(m);
+                    }
+                }
+                if finished {
+                    self.events
+                        .push_back(ConnEvent::StreamFinished { stream_id: f.stream_id });
+                }
+            }
+            frame::K_STREAM_WINDOW => {
+                if let Some(s) = self.send_streams.get_mut(&f.stream_id) {
+                    s.credit_limit = s.credit_limit.max(f.credit);
+                    if s.can_send() && !self.active_streams.contains(&f.stream_id) {
+                        self.active_streams.push_back(f.stream_id);
+                    }
+                }
+            }
+            frame::K_STREAM_RESET => {
+                if let Some(r) = self.recv_streams.get_mut(&f.stream_id) {
+                    r.reset = true;
+                }
+                if let Some(s) = self.send_streams.get_mut(&f.stream_id) {
+                    s.closed = true;
+                    s.pending.clear();
+                }
+                self.events.push_back(ConnEvent::StreamReset {
+                    stream_id: f.stream_id,
+                    error: f.error,
+                });
+            }
+            frame::K_CONN_CLOSE => {
+                self.state = State::Closed;
+                self.closed_reason = Some(f.error.clone());
+                self.events.push_back(ConnEvent::Closed { error: f.error });
+            }
+            frame::K_PING => self.ctrl.push_back(Frame::pong()),
+            frame::K_PONG => {}
+            frame::K_PATH_CHALLENGE => {
+                // Answered by the swarm via make_path_response on the path
+                // the challenge arrived from (see RxInfo).
+            }
+            frame::K_PATH_RESPONSE => {
+                self.events.push_back(ConnEvent::PathValidated { token: f.seq });
+            }
+            _ => bail!("unhandled frame kind {}", f.kind),
+        }
+        Ok(())
+    }
+
+    fn handle_handshake(&mut self, idx: u64, data: &[u8]) -> Result<()> {
+        match (self.role, idx) {
+            (Role::Server, 1) => {
+                if self.hs.is_some() || self.state == State::Established {
+                    return Ok(()); // duplicate msg1 (retransmission)
+                }
+                let mut hs =
+                    HandshakeState::responder(self.keypair.secret().clone(), &mut self.hs_rng);
+                hs.read_message(data)?;
+                let msg2 = hs.write_message(&[])?;
+                self.hs = Some(hs);
+                self.state = State::Handshaking;
+                self.ctrl.push_back(Frame::handshake(2, msg2));
+            }
+            (Role::Client, 2) => {
+                let Some(hs) = self.hs.as_mut() else {
+                    return Ok(());
+                };
+                if hs.is_done() {
+                    return Ok(()); // duplicate
+                }
+                hs.read_message(data)?;
+                let msg3 = hs.write_message(&[])?;
+                self.ctrl.push_back(Frame::handshake(3, msg3));
+                self.finish_handshake()?;
+            }
+            (Role::Server, 3) => {
+                let Some(hs) = self.hs.as_mut() else {
+                    return Ok(());
+                };
+                if hs.is_done() {
+                    return Ok(());
+                }
+                hs.read_message(data)?;
+                self.finish_handshake()?;
+            }
+            _ => {} // stale/duplicate handshake frame
+        }
+        Ok(())
+    }
+
+    fn finish_handshake(&mut self) -> Result<()> {
+        let hs = self.hs.take().context("no handshake state")?;
+        let t = hs.into_transport()?;
+        self.tx_key = Some(t.tx_key);
+        self.rx_key = Some(t.rx_key);
+        let peer = PeerId::from_public_key(&t.remote_static);
+        self.peer = Some(peer);
+        self.peer_key = Some(t.remote_static);
+        self.state = State::Established;
+        self.events.push_back(ConnEvent::Established {
+            peer,
+            key: t.remote_static,
+        });
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // ACK bookkeeping
+    // ------------------------------------------------------------------
+
+    fn note_received(&mut self, num: u64) {
+        // Insert into merged ranges.
+        let pos = self.recv_ranges.partition_point(|&(_, e)| e + 1 < num);
+        if pos < self.recv_ranges.len() {
+            let (s, e) = self.recv_ranges[pos];
+            if num >= s && num <= e {
+                return; // duplicate
+            }
+            if num + 1 == s {
+                self.recv_ranges[pos].0 = num;
+                self.merge_at(pos);
+                return;
+            }
+            if num == e + 1 {
+                self.recv_ranges[pos].1 = num;
+                self.merge_at(pos);
+                return;
+            }
+        }
+        self.recv_ranges.insert(pos, (num, num));
+        self.merge_at(pos);
+        // Bound memory.
+        if self.recv_ranges.len() > 32 {
+            self.recv_ranges.remove(0);
+        }
+    }
+
+    fn merge_at(&mut self, pos: usize) {
+        if pos + 1 < self.recv_ranges.len() {
+            let (s2, e2) = self.recv_ranges[pos + 1];
+            let (_, e1) = self.recv_ranges[pos];
+            if e1 + 1 >= s2 {
+                self.recv_ranges[pos].1 = e1.max(e2);
+                self.recv_ranges.remove(pos + 1);
+            }
+        }
+        if pos > 0 {
+            let (s1, e1) = self.recv_ranges[pos - 1];
+            let (s2, e2) = self.recv_ranges[pos];
+            if e1 + 1 >= s2 {
+                self.recv_ranges[pos - 1] = (s1, e1.max(e2));
+                self.recv_ranges.remove(pos);
+            }
+        }
+    }
+
+    /// Build an ACK frame from received ranges.
+    fn make_ack(&self) -> Option<Frame> {
+        let &(_, largest) = self.recv_ranges.last()?;
+        // Encode alternating (run, gap) descending from largest.
+        let mut ranges = Vec::with_capacity(self.recv_ranges.len() * 2);
+        let mut prev_start = 0u64;
+        for (i, &(s, e)) in self.recv_ranges.iter().rev().enumerate() {
+            if i > 0 {
+                ranges.push(prev_start - e - 1); // gap
+            }
+            ranges.push(e - s + 1); // run
+            prev_start = s;
+        }
+        Some(Frame::ack(largest, ranges))
+    }
+
+    fn handle_ack(&mut self, now: Time, largest: u64, ranges: &[u64]) {
+        // Decode ranges into (start, end) pairs descending.
+        let mut acked_ranges: Vec<(u64, u64)> = Vec::new();
+        let mut hi = largest;
+        let mut it = ranges.iter();
+        loop {
+            let Some(&run) = it.next() else { break };
+            let lo = hi.saturating_sub(run.saturating_sub(1));
+            acked_ranges.push((lo, hi));
+            let Some(&gap) = it.next() else { break };
+            if lo < gap + 1 {
+                break;
+            }
+            hi = lo - gap - 1;
+        }
+        if acked_ranges.is_empty() {
+            acked_ranges.push((largest, largest));
+        }
+        let mut newly_acked = Vec::new();
+        for &(lo, hi) in &acked_ranges {
+            let keys: Vec<u64> = self.sent.range(lo..=hi).map(|(k, _)| *k).collect();
+            for k in keys {
+                if let Some(sp) = self.sent.remove(&k) {
+                    self.inflight = self.inflight.saturating_sub(sp.size);
+                    newly_acked.push((k, sp));
+                }
+            }
+        }
+        if let Some((num, sp)) = newly_acked.iter().max_by_key(|(k, _)| *k) {
+            if *num == largest && sp.ack_eliciting {
+                self.rtt.on_sample(now.saturating_sub(sp.sent_at));
+            }
+        }
+        if !newly_acked.is_empty() {
+            self.rto_backoff = 0;
+        }
+        // Loss detection: packet threshold + time threshold. Large flushes
+        // put hundreds of packets on the wire in the same instant and the
+        // network delivers them with independent jitter, so a small packet
+        // threshold (QUIC's 3) misfires badly here — gate on both a deep
+        // reorder window and elapsed time ≥ srtt.
+        let lost_below = largest.saturating_sub(64);
+        let min_age = self.rtt.srtt();
+        let lost: Vec<u64> = self
+            .sent
+            .range(..lost_below)
+            .filter(|(_, sp)| now.saturating_sub(sp.sent_at) >= min_age)
+            .map(|(k, _)| *k)
+            .collect();
+        for k in lost {
+            if let Some(sp) = self.sent.remove(&k) {
+                self.inflight = self.inflight.saturating_sub(sp.size);
+                self.retransmit_frames(sp.frames);
+                self.packets_retransmitted += 1;
+            }
+        }
+    }
+
+    fn retransmit_frames(&mut self, frames: Vec<Frame>) {
+        for f in frames {
+            if !f.is_retransmittable() {
+                continue;
+            }
+            // Handshake-class frames are implicitly acknowledged by the
+            // handshake completing; retransmitting them afterwards would
+            // force a plaintext packet that an established peer rejects.
+            if matches!(f.kind, frame::K_HANDSHAKE | frame::K_SYN | frame::K_SYN_ACK)
+                && self.state == State::Established
+            {
+                continue;
+            }
+            match f.kind {
+                frame::K_STREAM_DATA => {
+                    if let Some(s) = self.send_streams.get_mut(&f.stream_id) {
+                        s.requeue(f.offset, f.data, f.fin);
+                        if !self.active_streams.contains(&f.stream_id) {
+                            self.active_streams.push_back(f.stream_id);
+                        }
+                    }
+                }
+                _ => self.ctrl.push_back(f),
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Output
+    // ------------------------------------------------------------------
+
+    /// Whether the handshake allows sending encrypted app data.
+    fn can_send_app(&self) -> bool {
+        self.state == State::Established
+    }
+
+    /// Budget for frame payload per packet.
+    fn frame_budget(&self) -> usize {
+        self.cfg.mtu
+            - 20 // packet header
+            - aead::TAG_LEN
+            - self.cfg.profile.per_packet_overhead
+            - 40 // frame encoding headroom
+    }
+
+    /// Produce encoded packets ready to send on the current path.
+    pub fn poll_output(&mut self, now: Time) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        if self.state == State::Closed && self.ctrl.is_empty() {
+            return out;
+        }
+        let budget = self.frame_budget();
+        let mut first = true;
+        loop {
+            let mut frames: Vec<Frame> = Vec::new();
+            let mut used = 0usize;
+            // 1. ACK: piggyback whenever other frames go out, send alone
+            //    when 2+ packets are unacked or the delayed-ACK timer is due.
+            let have_other = !self.ctrl.is_empty()
+                || (self.can_send_app() && !self.active_streams.is_empty());
+            let ack_due = self.ack_eliciting_unacked >= 2
+                || self.ack_deadline.map_or(false, |d| now >= d)
+                || have_other;
+            if first && self.ack_eliciting_unacked > 0 && ack_due {
+                if let Some(ack) = self.make_ack() {
+                    used += ack.wire_size_hint();
+                    frames.push(ack);
+                    self.ack_eliciting_unacked = 0;
+                    self.ack_deadline = None;
+                }
+            }
+            first = false;
+            // 2. Control frames. Handshake-class frames (sent in plaintext)
+            //    never share a packet with encrypted app frames; ACKs may
+            //    ride with either class.
+            let is_hs_class =
+                |k: u64| matches!(k, frame::K_HANDSHAKE | frame::K_SYN | frame::K_SYN_ACK);
+            while used < budget {
+                let Some(f) = self.ctrl.front() else { break };
+                let sz = f.wire_size_hint();
+                if used + sz > budget && !frames.is_empty() {
+                    break;
+                }
+                let have_hs = frames.iter().any(|q| is_hs_class(q.kind));
+                let have_app = frames.iter().any(|q| q.kind != frame::K_ACK && !is_hs_class(q.kind));
+                if (is_hs_class(f.kind) && have_app) || (!is_hs_class(f.kind) && have_hs) {
+                    break; // class boundary: flush current packet first
+                }
+                let f = self.ctrl.pop_front().unwrap();
+                if f.kind == frame::K_CONN_CLOSE {
+                    self.state = State::Closed;
+                }
+                used += sz;
+                frames.push(f);
+            }
+            // A handshake-class packet carries no stream data.
+            if frames.iter().any(|f| is_hs_class(f.kind)) {
+                let pkt_bytes = self.seal_frames(now, &frames, false);
+                out.push(pkt_bytes);
+                continue;
+            }
+            // 3. Stream data (only after establishment, inflight-limited).
+            if self.can_send_app() {
+                let mut visited = 0;
+                while used + 64 < budget
+                    && self.inflight + (used as u64) < self.cfg.max_inflight
+                    && visited < self.active_streams.len().max(1)
+                {
+                    let Some(&sid) = self.active_streams.front() else { break };
+                    let room = budget - used;
+                    let take = self
+                        .send_streams
+                        .get_mut(&sid)
+                        .and_then(|s| s.take_chunk(room.saturating_sub(48)));
+                    match take {
+                        Some((off, data, fin)) => {
+                            used += data.len() + 48;
+                            frames.push(Frame::stream_data(sid, off, data, fin));
+                            // Rotate for fairness.
+                            self.active_streams.rotate_left(1);
+                            visited = 0;
+                        }
+                        None => {
+                            self.active_streams.pop_front();
+                            visited += 1;
+                        }
+                    }
+                }
+            }
+            if frames.is_empty() {
+                break;
+            }
+            let encrypt = self.tx_key.is_some()
+                && frames
+                    .iter()
+                    .all(|f| !matches!(f.kind, frame::K_HANDSHAKE | frame::K_SYN | frame::K_SYN_ACK));
+            let pkt_bytes = self.seal_frames(now, &frames, encrypt);
+            out.push(pkt_bytes);
+            if self.state == State::Closed {
+                break;
+            }
+        }
+        out
+    }
+
+    fn seal_frames(&mut self, now: Time, frames: &[Frame], encrypt: bool) -> Vec<u8> {
+        let num = self.next_pkt_num;
+        self.next_pkt_num += 1;
+        let payload_plain = frame::encode_frames(frames);
+        let mut pkt = Packet {
+            dst_cid: self.remote_cid,
+            src_cid: self.local_cid,
+            pkt_num: num,
+            encrypted: encrypt,
+            payload: Vec::new(),
+        };
+        pkt.payload = if encrypt {
+            let ad = pkt.header_bytes();
+            aead::seal(self.tx_key.as_ref().unwrap(), &pkt.nonce(), &ad, &payload_plain)
+        } else {
+            payload_plain
+        };
+        let size = pkt.payload.len() as u64 + 20;
+        let ack_eliciting = frames.iter().any(|f| f.is_ack_eliciting());
+        let retrans: Vec<Frame> = frames
+            .iter()
+            .filter(|f| f.is_retransmittable())
+            .cloned()
+            .collect();
+        if !retrans.is_empty() {
+            self.sent.insert(
+                num,
+                SentPacket {
+                    frames: retrans,
+                    size,
+                    sent_at: now,
+                    ack_eliciting,
+                },
+            );
+            self.inflight += size;
+        }
+        self.bytes_sent += size;
+        self.last_send = now;
+        pkt.encode()
+    }
+
+    /// Encode a one-off packet outside the normal flow (path probes).
+    fn seal_packet(&mut self, frames: Vec<Frame>, encrypt: bool) -> Vec<u8> {
+        let now = self.last_send;
+        self.seal_frames(now, &frames, encrypt && self.tx_key.is_some())
+    }
+
+    /// Earliest deadline at which [`Connection::on_timer`] must run.
+    pub fn next_timeout(&self, _now: Time) -> Option<Time> {
+        if self.state == State::Closed {
+            return None;
+        }
+        let mut t: Option<Time> = None;
+        let mut consider = |x: Time| {
+            t = Some(t.map_or(x, |v: Time| v.min(x)));
+        };
+        if let Some((_, sp)) = self.sent.iter().next() {
+            let rto = self.rtt.rto() << self.rto_backoff.min(6);
+            consider(sp.sent_at + rto);
+        }
+        if let Some(d) = self.ack_deadline {
+            consider(d);
+        }
+        if let Some(ka) = self.cfg.keepalive {
+            if self.state == State::Established {
+                consider(self.last_send + ka);
+            }
+        }
+        consider(self.last_recv + self.cfg.idle_timeout);
+        // Handshake stall guard.
+        if self.state != State::Established {
+            consider(self.created_at + self.cfg.idle_timeout / 2);
+        }
+        t
+    }
+
+    /// Timer tick: retransmissions, keepalive, idle teardown.
+    pub fn on_timer(&mut self, now: Time) {
+        if self.state == State::Closed {
+            return;
+        }
+        // Idle timeout.
+        if now.saturating_sub(self.last_recv) >= self.cfg.idle_timeout {
+            self.state = State::Closed;
+            self.closed_reason = Some("idle timeout".into());
+            self.events.push_back(ConnEvent::Closed {
+                error: "idle timeout".into(),
+            });
+            return;
+        }
+        // Handshake stall.
+        if self.state != State::Established
+            && now.saturating_sub(self.created_at) >= self.cfg.idle_timeout / 2
+        {
+            self.state = State::Closed;
+            self.closed_reason = Some("handshake timeout".into());
+            self.events.push_back(ConnEvent::Closed {
+                error: "handshake timeout".into(),
+            });
+            return;
+        }
+        // RTO.
+        let rto = self.rtt.rto() << self.rto_backoff.min(6);
+        let expired: Vec<u64> = self
+            .sent
+            .iter()
+            .filter(|(_, sp)| now.saturating_sub(sp.sent_at) >= rto)
+            .map(|(k, _)| *k)
+            .collect();
+        if !expired.is_empty() {
+            self.rto_backoff += 1;
+            for k in expired {
+                if let Some(sp) = self.sent.remove(&k) {
+                    self.inflight = self.inflight.saturating_sub(sp.size);
+                    self.retransmit_frames(sp.frames);
+                    self.packets_retransmitted += 1;
+                }
+            }
+        }
+        // Keepalive.
+        if let Some(ka) = self.cfg.keepalive {
+            if self.state == State::Established && now.saturating_sub(self.last_send) >= ka {
+                self.ctrl.push_back(Frame::ping());
+            }
+        }
+    }
+
+    pub fn poll_event(&mut self) -> Option<ConnEvent> {
+        self.events.pop_front()
+    }
+
+    /// Whether any output is pending (data, ctrl, acks).
+    pub fn wants_send(&self) -> bool {
+        !self.ctrl.is_empty()
+            || self.ack_eliciting_unacked >= 2
+            || (self.can_send_app()
+                && self
+                    .active_streams
+                    .iter()
+                    .any(|sid| self.send_streams.get(sid).map_or(false, |s| s.can_send() || s.fin_pending())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::SECOND;
+
+    struct Pair {
+        a: Connection,
+        b: Connection,
+        now: Time,
+    }
+
+    impl Pair {
+        fn new(profile: TransportProfile) -> Pair {
+            let mut rng = Rng::new(42);
+            let cfg = ConnectionConfig {
+                profile,
+                ..ConnectionConfig::default()
+            };
+            let ka = Keypair::from_seed(1);
+            let kb = Keypair::from_seed(2);
+            let a = Connection::new(Role::Client, cfg.clone(), ka, 0, &mut rng);
+            let b = Connection::new(Role::Server, cfg, kb, 0, &mut rng);
+            Pair { a, b, now: 0 }
+        }
+
+        /// Shuttle packets until both sides go quiet. Returns round count.
+        fn pump(&mut self) -> usize {
+            let mut rounds = 0;
+            loop {
+                self.now += MILLI;
+                let out_a = self.a.poll_output(self.now);
+                let out_b = self.b.poll_output(self.now);
+                if out_a.is_empty() && out_b.is_empty() {
+                    break;
+                }
+                rounds += 1;
+                for p in out_a {
+                    let pkt = Packet::decode(&p).unwrap();
+                    self.b.handle_packet(self.now, pkt).unwrap();
+                }
+                for p in out_b {
+                    let pkt = Packet::decode(&p).unwrap();
+                    self.a.handle_packet(self.now, pkt).unwrap();
+                }
+                assert!(rounds < 1000, "pump did not converge");
+            }
+            rounds
+        }
+
+        fn events(conn: &mut Connection) -> Vec<ConnEvent> {
+            let mut v = Vec::new();
+            while let Some(e) = conn.poll_event() {
+                v.push(e);
+            }
+            v
+        }
+    }
+
+    #[test]
+    fn quic_like_establishes() {
+        let mut p = Pair::new(TransportProfile::QUIC_LIKE);
+        p.pump();
+        assert!(p.a.is_established());
+        assert!(p.b.is_established());
+        assert_eq!(p.a.peer, Some(Keypair::from_seed(2).peer_id()));
+        assert_eq!(p.b.peer, Some(Keypair::from_seed(1).peer_id()));
+        let evs = Pair::events(&mut p.a);
+        assert!(matches!(evs[0], ConnEvent::Established { .. }));
+    }
+
+    #[test]
+    fn tcp_like_establishes_with_extra_rtt() {
+        let mut pq = Pair::new(TransportProfile::QUIC_LIKE);
+        let rq = pq.pump();
+        let mut pt = Pair::new(TransportProfile::TCP_LIKE);
+        let rt = pt.pump();
+        assert!(pt.a.is_established() && pt.b.is_established());
+        assert!(rt > rq, "TCP-like must need more round trips ({rt} vs {rq})");
+    }
+
+    #[test]
+    fn stream_messages_flow_both_ways() {
+        let mut p = Pair::new(TransportProfile::QUIC_LIKE);
+        p.pump();
+        let sid = p.a.open_stream("/test/1");
+        p.a.send_msg(sid, b"request").unwrap();
+        p.pump();
+        let evs = Pair::events(&mut p.b);
+        let mut opened = None;
+        let mut msg = None;
+        for e in evs {
+            match e {
+                ConnEvent::StreamOpened { stream_id, proto } => opened = Some((stream_id, proto)),
+                ConnEvent::Msg { stream_id, msg: m } => msg = Some((stream_id, m)),
+                _ => {}
+            }
+        }
+        let (osid, oproto) = opened.expect("stream opened");
+        assert_eq!(osid, sid);
+        assert_eq!(oproto, "/test/1");
+        assert_eq!(msg.unwrap(), (sid, b"request".to_vec()));
+
+        // Reply on the same stream.
+        p.b.send_msg(sid, b"response").unwrap();
+        p.pump();
+        let evs = Pair::events(&mut p.a);
+        assert!(evs
+            .iter()
+            .any(|e| matches!(e, ConnEvent::Msg { msg, .. } if msg == b"response")));
+    }
+
+    #[test]
+    fn large_message_fragments() {
+        let mut p = Pair::new(TransportProfile::QUIC_LIKE);
+        p.pump();
+        let sid = p.a.open_stream("/big/1");
+        let big: Vec<u8> = (0..300_000).map(|i| (i % 251) as u8).collect();
+        p.a.send_msg(sid, &big).unwrap();
+        p.pump();
+        let evs = Pair::events(&mut p.b);
+        let got: Vec<&Vec<u8>> = evs
+            .iter()
+            .filter_map(|e| match e {
+                ConnEvent::Msg { msg, .. } => Some(msg),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0], &big);
+    }
+
+    #[test]
+    fn data_before_handshake_queues() {
+        let mut p = Pair::new(TransportProfile::QUIC_LIKE);
+        // Open + send immediately, before any packet exchange.
+        let sid = p.a.open_stream("/early/1");
+        p.a.send_msg(sid, b"early-data").unwrap();
+        p.pump();
+        assert!(p.a.is_established());
+        let evs = Pair::events(&mut p.b);
+        assert!(evs
+            .iter()
+            .any(|e| matches!(e, ConnEvent::Msg { msg, .. } if msg == b"early-data")));
+    }
+
+    #[test]
+    fn loss_recovered_by_rto() {
+        let mut p = Pair::new(TransportProfile::QUIC_LIKE);
+        p.pump();
+        let sid = p.a.open_stream("/lossy/1");
+        p.a.send_msg(sid, b"will-be-lost").unwrap();
+        // Drop A's first flight.
+        let lost = p.a.poll_output(p.now + MILLI);
+        assert!(!lost.is_empty());
+        drop(lost);
+        // Fire RTO.
+        let deadline = p.a.next_timeout(p.now).unwrap();
+        p.a.on_timer(deadline);
+        p.now = deadline;
+        p.pump();
+        let evs = Pair::events(&mut p.b);
+        assert!(
+            evs.iter()
+                .any(|e| matches!(e, ConnEvent::Msg { msg, .. } if msg == b"will-be-lost")),
+            "retransmission must deliver the message"
+        );
+        assert!(p.a.packets_retransmitted > 0);
+    }
+
+    #[test]
+    fn fin_closes_stream() {
+        let mut p = Pair::new(TransportProfile::QUIC_LIKE);
+        p.pump();
+        let sid = p.a.open_stream("/fin/1");
+        p.a.send_msg(sid, b"last").unwrap();
+        p.a.finish_stream(sid);
+        p.pump();
+        let evs = Pair::events(&mut p.b);
+        assert!(evs
+            .iter()
+            .any(|e| matches!(e, ConnEvent::StreamFinished { stream_id } if *stream_id == sid)));
+        // Sending after finish fails.
+        assert!(p.a.send_msg(sid, b"more").is_err());
+    }
+
+    #[test]
+    fn reset_surfaces_remotely() {
+        let mut p = Pair::new(TransportProfile::QUIC_LIKE);
+        p.pump();
+        let sid = p.a.open_stream("/rst/1");
+        p.a.send_msg(sid, b"x").unwrap();
+        p.pump();
+        Pair::events(&mut p.b);
+        p.a.reset_stream(sid, "cancelled");
+        p.pump();
+        let evs = Pair::events(&mut p.b);
+        assert!(evs.iter().any(
+            |e| matches!(e, ConnEvent::StreamReset { stream_id, error } if *stream_id == sid && error == "cancelled")
+        ));
+    }
+
+    #[test]
+    fn close_propagates() {
+        let mut p = Pair::new(TransportProfile::QUIC_LIKE);
+        p.pump();
+        p.a.close("done");
+        p.pump();
+        assert!(p.a.is_closed());
+        assert!(p.b.is_closed());
+        let evs = Pair::events(&mut p.b);
+        assert!(evs
+            .iter()
+            .any(|e| matches!(e, ConnEvent::Closed { error } if error == "done")));
+    }
+
+    #[test]
+    fn idle_timeout_fires() {
+        let mut p = Pair::new(TransportProfile::QUIC_LIKE);
+        p.pump();
+        let t = p.now + 31 * SECOND;
+        p.a.on_timer(t);
+        assert!(p.a.is_closed());
+        let evs = Pair::events(&mut p.a);
+        assert!(evs
+            .iter()
+            .any(|e| matches!(e, ConnEvent::Closed { error } if error.contains("idle"))));
+    }
+
+    #[test]
+    fn path_challenge_response() {
+        let mut p = Pair::new(TransportProfile::QUIC_LIKE);
+        p.pump();
+        let probe = p.a.make_path_challenge(0xBEEF);
+        let pkt = Packet::decode(&probe).unwrap();
+        let info = p.b.handle_packet(p.now, pkt).unwrap();
+        assert!(info.accepted);
+        assert_eq!(info.path_challenges, vec![0xBEEF]);
+        // The swarm answers on the arrival path:
+        let resp = p.b.make_path_response(0xBEEF);
+        let info = p
+            .a
+            .handle_packet(p.now, Packet::decode(&resp).unwrap())
+            .unwrap();
+        assert_eq!(info.path_responses, vec![0xBEEF]);
+        let evs = Pair::events(&mut p.a);
+        assert!(evs
+            .iter()
+            .any(|e| matches!(e, ConnEvent::PathValidated { token } if *token == 0xBEEF)));
+    }
+
+    #[test]
+    fn tampered_packet_dropped_silently() {
+        let mut p = Pair::new(TransportProfile::QUIC_LIKE);
+        p.pump();
+        let sid = p.a.open_stream("/t/1");
+        p.a.send_msg(sid, b"payload").unwrap();
+        let mut pkts = p.a.poll_output(p.now + MILLI);
+        for pkt in &mut pkts {
+            let n = pkt.len();
+            pkt[n - 1] ^= 0xFF; // corrupt ciphertext
+        }
+        for pb in pkts {
+            let pkt = Packet::decode(&pb).unwrap();
+            p.b.handle_packet(p.now, pkt).unwrap();
+        }
+        let evs = Pair::events(&mut p.b);
+        assert!(
+            !evs.iter().any(|e| matches!(e, ConnEvent::Msg { .. })),
+            "corrupted packets must not deliver data"
+        );
+    }
+
+    #[test]
+    fn many_concurrent_streams_interleave_fairly() {
+        let mut p = Pair::new(TransportProfile::QUIC_LIKE);
+        p.pump();
+        let mut sids = Vec::new();
+        for i in 0..20 {
+            let sid = p.a.open_stream("/multi/1");
+            p.a.send_msg(sid, format!("stream-{i}").as_bytes()).unwrap();
+            sids.push(sid);
+        }
+        p.pump();
+        let evs = Pair::events(&mut p.b);
+        let msgs: Vec<_> = evs
+            .iter()
+            .filter(|e| matches!(e, ConnEvent::Msg { .. }))
+            .collect();
+        assert_eq!(msgs.len(), 20);
+    }
+
+    #[test]
+    fn rtt_estimated_from_acks() {
+        let mut p = Pair::new(TransportProfile::QUIC_LIKE);
+        p.pump();
+        let sid = p.a.open_stream("/rtt/1");
+        for _ in 0..5 {
+            p.a.send_msg(sid, b"ping-data").unwrap();
+            p.pump();
+        }
+        assert!(p.a.rtt.has_sample());
+    }
+}

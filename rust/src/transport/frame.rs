@@ -1,0 +1,289 @@
+//! Connection frames (the unit of retransmission), protobuf-encoded.
+
+use crate::wire::{Message, PbReader, PbWriter};
+use anyhow::{bail, Result};
+
+/// Frame kinds.
+pub const K_HANDSHAKE: u64 = 1;
+pub const K_ACK: u64 = 2;
+pub const K_STREAM_OPEN: u64 = 3;
+pub const K_STREAM_DATA: u64 = 4;
+pub const K_STREAM_WINDOW: u64 = 5;
+pub const K_STREAM_RESET: u64 = 6;
+pub const K_CONN_CLOSE: u64 = 7;
+pub const K_PING: u64 = 8;
+pub const K_PONG: u64 = 9;
+pub const K_PATH_CHALLENGE: u64 = 10;
+pub const K_PATH_RESPONSE: u64 = 11;
+pub const K_SYN: u64 = 12;
+pub const K_SYN_ACK: u64 = 13;
+
+/// A connection frame. One struct with kind-dependent fields (proto3 style).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Frame {
+    pub kind: u64,
+    /// HANDSHAKE: message index (1..=3). PATH_*: challenge token.
+    pub seq: u64,
+    /// Stream frames: stream id.
+    pub stream_id: u64,
+    /// STREAM_DATA: byte offset.
+    pub offset: u64,
+    /// HANDSHAKE / STREAM_DATA payload.
+    pub data: Vec<u8>,
+    /// STREAM_DATA: sender finished after this segment.
+    pub fin: bool,
+    /// ACK: largest packet number seen.
+    pub largest_ack: u64,
+    /// ACK: alternating (gap, run) lengths descending from `largest_ack`,
+    /// QUIC-style. First run includes `largest_ack` itself.
+    pub ack_ranges: Vec<u64>,
+    /// STREAM_WINDOW: additional credit in bytes.
+    pub credit: u64,
+    /// STREAM_OPEN: protocol name.
+    pub proto: String,
+    /// CONN_CLOSE / STREAM_RESET: reason.
+    pub error: String,
+}
+
+impl Frame {
+    pub fn handshake(idx: u64, data: Vec<u8>) -> Frame {
+        Frame {
+            kind: K_HANDSHAKE,
+            seq: idx,
+            data,
+            ..Frame::default()
+        }
+    }
+
+    pub fn stream_open(stream_id: u64, proto: &str) -> Frame {
+        Frame {
+            kind: K_STREAM_OPEN,
+            stream_id,
+            proto: proto.to_string(),
+            ..Frame::default()
+        }
+    }
+
+    pub fn stream_data(stream_id: u64, offset: u64, data: Vec<u8>, fin: bool) -> Frame {
+        Frame {
+            kind: K_STREAM_DATA,
+            stream_id,
+            offset,
+            data,
+            fin,
+            ..Frame::default()
+        }
+    }
+
+    pub fn stream_window(stream_id: u64, credit: u64) -> Frame {
+        Frame {
+            kind: K_STREAM_WINDOW,
+            stream_id,
+            credit,
+            ..Frame::default()
+        }
+    }
+
+    pub fn stream_reset(stream_id: u64, error: &str) -> Frame {
+        Frame {
+            kind: K_STREAM_RESET,
+            stream_id,
+            error: error.to_string(),
+            ..Frame::default()
+        }
+    }
+
+    pub fn conn_close(error: &str) -> Frame {
+        Frame {
+            kind: K_CONN_CLOSE,
+            error: error.to_string(),
+            ..Frame::default()
+        }
+    }
+
+    pub fn ping() -> Frame {
+        Frame {
+            kind: K_PING,
+            ..Frame::default()
+        }
+    }
+
+    pub fn pong() -> Frame {
+        Frame {
+            kind: K_PONG,
+            ..Frame::default()
+        }
+    }
+
+    pub fn ack(largest: u64, ranges: Vec<u64>) -> Frame {
+        Frame {
+            kind: K_ACK,
+            largest_ack: largest,
+            ack_ranges: ranges,
+            ..Frame::default()
+        }
+    }
+
+    pub fn path_challenge(token: u64) -> Frame {
+        Frame {
+            kind: K_PATH_CHALLENGE,
+            seq: token,
+            ..Frame::default()
+        }
+    }
+
+    pub fn path_response(token: u64) -> Frame {
+        Frame {
+            kind: K_PATH_RESPONSE,
+            seq: token,
+            ..Frame::default()
+        }
+    }
+
+    pub fn syn() -> Frame {
+        Frame {
+            kind: K_SYN,
+            ..Frame::default()
+        }
+    }
+
+    pub fn syn_ack() -> Frame {
+        Frame {
+            kind: K_SYN_ACK,
+            ..Frame::default()
+        }
+    }
+
+    /// Whether loss of this frame requires retransmission.
+    pub fn is_retransmittable(&self) -> bool {
+        !matches!(self.kind, K_ACK | K_PONG | K_PATH_RESPONSE)
+    }
+
+    /// Whether receipt of this frame elicits an acknowledgment.
+    pub fn is_ack_eliciting(&self) -> bool {
+        !matches!(self.kind, K_ACK)
+    }
+
+    /// Approximate encoded size without encoding (hot-path budgeting).
+    pub fn wire_size_hint(&self) -> usize {
+        24 + self.data.len() + self.proto.len() + self.error.len() + self.ack_ranges.len() * 3
+    }
+}
+
+impl Message for Frame {
+    fn encode_to(&self, w: &mut PbWriter) {
+        w.uint(1, self.kind);
+        w.uint(2, self.seq);
+        w.uint(3, self.stream_id);
+        w.uint(4, self.offset);
+        w.bytes(5, &self.data);
+        w.boolean(6, self.fin);
+        w.uint(7, self.largest_ack);
+        w.packed_uints(8, &self.ack_ranges);
+        w.uint(9, self.credit);
+        w.string(10, &self.proto);
+        w.string(11, &self.error);
+    }
+
+    fn decode(buf: &[u8]) -> Result<Frame> {
+        let mut f = Frame::default();
+        PbReader::new(buf).for_each(|fld| {
+            match fld.number {
+                1 => f.kind = fld.as_u64(),
+                2 => f.seq = fld.as_u64(),
+                3 => f.stream_id = fld.as_u64(),
+                4 => f.offset = fld.as_u64(),
+                5 => f.data = fld.as_bytes()?.to_vec(),
+                6 => f.fin = fld.as_bool(),
+                7 => f.largest_ack = fld.as_u64(),
+                8 => f.ack_ranges = fld.packed_uints()?,
+                9 => f.credit = fld.as_u64(),
+                10 => f.proto = fld.as_string()?,
+                11 => f.error = fld.as_string()?,
+                _ => {}
+            }
+            Ok(())
+        })?;
+        if f.kind == 0 || f.kind > K_SYN_ACK {
+            bail!("invalid frame kind {}", f.kind);
+        }
+        Ok(f)
+    }
+}
+
+/// Encode a sequence of frames into a packet payload.
+pub fn encode_frames(frames: &[Frame]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(frames.iter().map(|f| f.wire_size_hint()).sum());
+    for f in frames {
+        let body = f.encode();
+        crate::util::varint::put_length_prefixed(&mut out, &body);
+    }
+    out
+}
+
+/// Decode a packet payload into frames.
+pub fn decode_frames(buf: &[u8]) -> Result<Vec<Frame>> {
+    let mut r = crate::util::varint::Reader::new(buf);
+    let mut out = Vec::new();
+    while !r.is_empty() {
+        let body = r.length_prefixed()?;
+        out.push(Frame::decode(body)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrips() {
+        let frames = vec![
+            Frame::handshake(1, vec![1, 2, 3]),
+            Frame::stream_open(7, "/lattica/rpc/1"),
+            Frame::stream_data(7, 1000, vec![9; 100], true),
+            Frame::stream_window(7, 65536),
+            Frame::stream_reset(7, "cancelled"),
+            Frame::conn_close("bye"),
+            Frame::ping(),
+            Frame::pong(),
+            Frame::ack(42, vec![3, 2, 5]),
+            Frame::path_challenge(0xDEAD),
+            Frame::path_response(0xDEAD),
+            Frame::syn(),
+            Frame::syn_ack(),
+        ];
+        for f in &frames {
+            let enc = f.encode();
+            assert_eq!(&Frame::decode(&enc).unwrap(), f, "frame {f:?}");
+        }
+        // Batch roundtrip.
+        let payload = encode_frames(&frames);
+        assert_eq!(decode_frames(&payload).unwrap(), frames);
+    }
+
+    #[test]
+    fn invalid_kind_rejected() {
+        let f = Frame {
+            kind: 99,
+            ..Frame::default()
+        };
+        assert!(Frame::decode(&f.encode()).is_err());
+        assert!(Frame::decode(&[]).is_err()); // kind 0
+    }
+
+    #[test]
+    fn ack_properties() {
+        assert!(!Frame::ack(1, vec![]).is_retransmittable());
+        assert!(!Frame::ack(1, vec![]).is_ack_eliciting());
+        assert!(Frame::stream_data(1, 0, vec![], false).is_ack_eliciting());
+        assert!(Frame::ping().is_retransmittable());
+        assert!(!Frame::pong().is_retransmittable());
+    }
+
+    #[test]
+    fn truncated_batch_fails() {
+        let payload = encode_frames(&[Frame::ping(), Frame::pong()]);
+        assert!(decode_frames(&payload[..payload.len() - 1]).is_err());
+    }
+}

@@ -1,0 +1,59 @@
+//! Reliable, encrypted, multiplexed connections over simulated datagrams.
+//!
+//! One engine implements both of the paper's transports:
+//!
+//! * **QUIC-like** (`Proto::QuicLike`): handshake frames ride the first
+//!   packets, so application data flows after ~1 RTT.
+//! * **TCP-like** (`Proto::TcpLike`): an extra SYN/SYN-ACK round trip runs
+//!   before the Noise handshake (modelling TCP connect + security upgrade +
+//!   mux negotiation), and every frame pays a small extra header tax.
+//!
+//! The engine is *sans-io*: [`connection::Connection`] consumes packets and
+//! timer ticks and produces packets plus [`ConnEvent`]s; the swarm layer
+//! moves bytes between connections and the simulator (or a relay circuit —
+//! connections are path-agnostic, which is what lets DCUtR migrate a relayed
+//! connection onto a punched direct path without disturbing open streams).
+//!
+//! Reliability: QUIC-style frame-level retransmission with packet-number
+//! acks (gap ranges), an RTT-adaptive RTO, a fixed in-flight byte window,
+//! and per-stream credit flow control (the paper's "adaptive backpressure":
+//! writers observe acknowledgments/queue depth, readers grant credit).
+
+pub mod frame;
+pub mod packet;
+pub mod rtt;
+pub mod streams;
+pub mod connection;
+
+pub use connection::{ConnEvent, Connection, ConnectionConfig, Role};
+pub use frame::Frame;
+
+/// Transport profile: the observable differences between the two transports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransportProfile {
+    /// Extra round trips before the Noise handshake may start.
+    pub extra_handshake_rtts: u8,
+    /// Additional per-packet byte overhead (framing tax).
+    pub per_packet_overhead: usize,
+}
+
+impl TransportProfile {
+    pub const QUIC_LIKE: TransportProfile = TransportProfile {
+        extra_handshake_rtts: 0,
+        per_packet_overhead: 0,
+    };
+
+    /// TCP connect (1 RTT) before security; ~20 B/packet extra headers
+    /// (TCP header vs UDP + mux framing).
+    pub const TCP_LIKE: TransportProfile = TransportProfile {
+        extra_handshake_rtts: 1,
+        per_packet_overhead: 20,
+    };
+
+    pub fn for_proto(p: crate::multiaddr::Proto) -> TransportProfile {
+        match p {
+            crate::multiaddr::Proto::QuicLike => Self::QUIC_LIKE,
+            crate::multiaddr::Proto::TcpLike => Self::TCP_LIKE,
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Packet header: plaintext connection routing + packet number, with the
+//! frame section optionally AEAD-sealed (header as associated data).
+//!
+//! ```text
+//! [dst_cid: u64 LE][src_cid: u64 LE][pkt_num: varint][flags: u8][payload]
+//! ```
+//!
+//! `dst_cid == 0` marks the very first packet of a connection (the server
+//! has not yet assigned its local id). Demultiplexing is by `dst_cid`, so a
+//! connection survives source-address changes — this is what lets DCUtR
+//! migrate a relayed connection to a punched direct path.
+
+use anyhow::{bail, Result};
+
+/// Header flags.
+pub const F_ENCRYPTED: u8 = 0x01;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Packet {
+    /// Receiver's connection id (0 = initial).
+    pub dst_cid: u64,
+    /// Sender's connection id (so the receiver learns where to reply).
+    pub src_cid: u64,
+    pub pkt_num: u64,
+    pub encrypted: bool,
+    pub payload: Vec<u8>,
+}
+
+impl Packet {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(18 + self.payload.len());
+        out.extend_from_slice(&self.dst_cid.to_le_bytes());
+        out.extend_from_slice(&self.src_cid.to_le_bytes());
+        crate::util::varint::put_uvarint(&mut out, self.pkt_num);
+        out.push(if self.encrypted { F_ENCRYPTED } else { 0 });
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Packet> {
+        if buf.len() < 18 {
+            bail!("packet too short: {} bytes", buf.len());
+        }
+        let dst_cid = u64::from_le_bytes(buf[0..8].try_into()?);
+        let src_cid = u64::from_le_bytes(buf[8..16].try_into()?);
+        let (pkt_num, n) = crate::util::varint::get_uvarint(&buf[16..])?;
+        let fpos = 16 + n;
+        let Some(&flags) = buf.get(fpos) else {
+            bail!("packet missing flags byte");
+        };
+        Ok(Packet {
+            dst_cid,
+            src_cid,
+            pkt_num,
+            encrypted: flags & F_ENCRYPTED != 0,
+            payload: buf[fpos + 1..].to_vec(),
+        })
+    }
+
+    /// The associated data for AEAD: everything before the payload.
+    pub fn header_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(18);
+        out.extend_from_slice(&self.dst_cid.to_le_bytes());
+        out.extend_from_slice(&self.src_cid.to_le_bytes());
+        crate::util::varint::put_uvarint(&mut out, self.pkt_num);
+        out.push(if self.encrypted { F_ENCRYPTED } else { 0 });
+        out
+    }
+
+    /// AEAD nonce derived from the packet number.
+    pub fn nonce(&self) -> [u8; 12] {
+        let mut n = [0u8; 12];
+        n[4..].copy_from_slice(&self.pkt_num.to_be_bytes());
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let p = Packet {
+            dst_cid: 0xAABBCCDD_11223344,
+            src_cid: 7,
+            pkt_num: 123_456,
+            encrypted: true,
+            payload: vec![1, 2, 3],
+        };
+        let enc = p.encode();
+        assert_eq!(Packet::decode(&enc).unwrap(), p);
+    }
+
+    #[test]
+    fn initial_packet_zero_dst() {
+        let p = Packet {
+            dst_cid: 0,
+            src_cid: 9,
+            pkt_num: 0,
+            encrypted: false,
+            payload: vec![],
+        };
+        let d = Packet::decode(&p.encode()).unwrap();
+        assert_eq!(d.dst_cid, 0);
+        assert!(!d.encrypted);
+    }
+
+    #[test]
+    fn short_packets_rejected() {
+        assert!(Packet::decode(&[0u8; 10]).is_err());
+        assert!(Packet::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn header_bytes_match_prefix() {
+        let p = Packet {
+            dst_cid: 5,
+            src_cid: 6,
+            pkt_num: 300,
+            encrypted: true,
+            payload: vec![9, 9],
+        };
+        let enc = p.encode();
+        let hdr = p.header_bytes();
+        assert_eq!(&enc[..hdr.len()], &hdr[..]);
+    }
+
+    #[test]
+    fn nonce_unique_per_pkt_num() {
+        let mk = |n| Packet {
+            dst_cid: 1,
+            src_cid: 2,
+            pkt_num: n,
+            encrypted: true,
+            payload: vec![],
+        };
+        assert_ne!(mk(1).nonce(), mk(2).nonce());
+    }
+}

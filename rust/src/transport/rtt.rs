@@ -1,0 +1,124 @@
+//! RTT estimation and retransmission timeout (RFC 6298-style smoothing).
+
+use crate::netsim::{Time, MILLI};
+
+#[derive(Clone, Debug)]
+pub struct RttEstimator {
+    srtt: Option<Time>,
+    rttvar: Time,
+    /// Minimum observed RTT (path floor).
+    pub min_rtt: Time,
+    latest: Time,
+    /// RTO before any sample, and the adaptive floor afterwards. Tunneled
+    /// (relayed) connections set this high: the carrier already
+    /// retransmits, and queueing delay would otherwise trigger spurious
+    /// inner retransmissions (the TCP-over-TCP meltdown).
+    pub initial_rto: Time,
+    pub min_rto: Time,
+}
+
+impl Default for RttEstimator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RttEstimator {
+    pub fn new() -> RttEstimator {
+        RttEstimator {
+            srtt: None,
+            rttvar: 0,
+            min_rtt: Time::MAX,
+            latest: 0,
+            initial_rto: 100 * MILLI,
+            min_rto: 2 * MILLI,
+        }
+    }
+
+    /// Record a sample from an acked packet.
+    pub fn on_sample(&mut self, rtt: Time) {
+        self.latest = rtt;
+        self.min_rtt = self.min_rtt.min(rtt);
+        match self.srtt {
+            None => {
+                self.srtt = Some(rtt);
+                self.rttvar = rtt / 2;
+            }
+            Some(srtt) => {
+                let diff = srtt.abs_diff(rtt);
+                self.rttvar = (3 * self.rttvar + diff) / 4;
+                self.srtt = Some((7 * srtt + rtt) / 8);
+            }
+        }
+    }
+
+    pub fn srtt(&self) -> Time {
+        self.srtt.unwrap_or(100 * MILLI)
+    }
+
+    pub fn latest(&self) -> Time {
+        self.latest
+    }
+
+    /// Retransmission timeout: srtt + 4·rttvar with a configurable floor,
+    /// and `initial_rto` before any sample.
+    pub fn rto(&self) -> Time {
+        match self.srtt {
+            None => self.initial_rto,
+            Some(srtt) => (srtt + 4 * self.rttvar).max(self.min_rto),
+        }
+    }
+
+    pub fn has_sample(&self) -> bool {
+        self.srtt.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_rto_before_samples() {
+        let r = RttEstimator::new();
+        assert_eq!(r.rto(), 100 * MILLI);
+        assert!(!r.has_sample());
+        let mut t = RttEstimator::new();
+        t.initial_rto = 1_000 * MILLI;
+        t.min_rto = 200 * MILLI;
+        assert_eq!(t.rto(), 1_000 * MILLI);
+        t.on_sample(10 * MILLI);
+        assert_eq!(t.rto(), 200 * MILLI);
+    }
+
+    #[test]
+    fn converges_to_stable_rtt() {
+        let mut r = RttEstimator::new();
+        for _ in 0..50 {
+            r.on_sample(20 * MILLI);
+        }
+        assert_eq!(r.srtt(), 20 * MILLI);
+        assert!(r.rto() >= 20 * MILLI && r.rto() <= 30 * MILLI, "rto={}", r.rto());
+        assert_eq!(r.min_rtt, 20 * MILLI);
+    }
+
+    #[test]
+    fn variance_raises_rto() {
+        let mut stable = RttEstimator::new();
+        let mut jittery = RttEstimator::new();
+        for i in 0..50 {
+            stable.on_sample(20 * MILLI);
+            jittery.on_sample(if i % 2 == 0 { 10 * MILLI } else { 30 * MILLI });
+        }
+        assert!(jittery.rto() > stable.rto());
+    }
+
+    #[test]
+    fn rto_floor() {
+        let mut r = RttEstimator::new();
+        for _ in 0..10 {
+            r.on_sample(10_000); // 10 µs loopback
+        }
+        assert!(r.rto() >= 2 * MILLI);
+    }
+}

@@ -1,0 +1,511 @@
+//! Per-stream send/receive state: ordered byte delivery with offset-based
+//! reassembly, credit flow control, and length-prefixed message framing.
+//!
+//! Upper layers exchange discrete *messages*; the stream layer length-
+//! prefixes them into the byte stream and re-parses on the receive side, so
+//! protocols never see fragmentation.
+
+use anyhow::Result;
+use std::collections::{BTreeMap, VecDeque};
+
+/// Default per-stream receive window (credit granted to the peer).
+pub const DEFAULT_WINDOW: u64 = 1 << 20; // 1 MiB
+
+/// Grant more credit when consumed beyond this fraction of the window.
+pub const CREDIT_REFRESH_FRACTION: f64 = 0.5;
+
+/// Sending half.
+#[derive(Debug)]
+pub struct SendStream {
+    /// Next offset to assign to new data.
+    pub write_offset: u64,
+    /// Data accepted from the application but not yet packetized,
+    /// as (offset, bytes).
+    pub pending: VecDeque<(u64, Vec<u8>)>,
+    /// Cursor into `pending.front()` — lets take_chunk slice the front
+    /// buffer without repeatedly memmoving the remainder (O(n²) otherwise
+    /// for multi-hundred-KB messages).
+    front_pos: usize,
+    /// Peer-granted credit limit (absolute offset we may send up to).
+    pub credit_limit: u64,
+    /// Highest offset handed to the packetizer.
+    pub sent_offset: u64,
+    /// FIN queued / sent.
+    pub fin_queued: bool,
+    pub fin_sent: bool,
+    /// Stream reset/closed.
+    pub closed: bool,
+}
+
+impl SendStream {
+    pub fn new() -> SendStream {
+        SendStream {
+            write_offset: 0,
+            pending: VecDeque::new(),
+            front_pos: 0,
+            credit_limit: DEFAULT_WINDOW,
+            sent_offset: 0,
+            fin_queued: false,
+            fin_sent: false,
+            closed: false,
+        }
+    }
+
+    /// Queue a message (length-prefixed into the byte stream).
+    pub fn write_msg(&mut self, msg: &[u8]) {
+        debug_assert!(!self.fin_queued && !self.closed);
+        let mut framed = Vec::with_capacity(msg.len() + 5);
+        crate::util::varint::put_length_prefixed(&mut framed, msg);
+        let off = self.write_offset;
+        self.write_offset += framed.len() as u64;
+        self.pending.push_back((off, framed));
+    }
+
+    /// Queue raw bytes (no framing) — used by tests.
+    pub fn write_raw(&mut self, data: &[u8]) {
+        let off = self.write_offset;
+        self.write_offset += data.len() as u64;
+        self.pending.push_back((off, data.to_vec()));
+    }
+
+    /// Mark the stream finished once pending data drains.
+    pub fn finish(&mut self) {
+        self.fin_queued = true;
+    }
+
+    /// Bytes currently waiting (application backlog — the backpressure
+    /// signal surfaced to RPC writers).
+    pub fn backlog(&self) -> u64 {
+        self.pending.iter().map(|(_, d)| d.len() as u64).sum::<u64>()
+            - self.front_pos as u64
+    }
+
+    /// Whether flow-control credit allows sending more.
+    pub fn can_send(&self) -> bool {
+        !self.closed && self.sent_offset < self.credit_limit && !self.pending.is_empty()
+    }
+
+    /// Whether a FIN still needs to go out.
+    pub fn fin_pending(&self) -> bool {
+        self.fin_queued && !self.fin_sent && self.pending.is_empty() && !self.closed
+    }
+
+    /// Take up to `max_bytes` of sendable data respecting credit.
+    /// Returns (offset, data, fin).
+    pub fn take_chunk(&mut self, max_bytes: usize) -> Option<(u64, Vec<u8>, bool)> {
+        if self.closed {
+            return None;
+        }
+        if self.pending.is_empty() {
+            if self.fin_pending() {
+                self.fin_sent = true;
+                return Some((self.sent_offset, Vec::new(), true));
+            }
+            return None;
+        }
+        let credit_room = self.credit_limit.saturating_sub(self.sent_offset);
+        if credit_room == 0 {
+            return None;
+        }
+        let budget = (max_bytes as u64).min(credit_room) as usize;
+        let (front_off, front_len) = {
+            let (o, d) = self.pending.front().unwrap();
+            (*o, d.len())
+        };
+        let avail = front_len - self.front_pos;
+        let take = avail.min(budget);
+        let off = front_off + self.front_pos as u64;
+        let data = {
+            let (_, d) = self.pending.front().unwrap();
+            d[self.front_pos..self.front_pos + take].to_vec()
+        };
+        self.front_pos += take;
+        if self.front_pos == front_len {
+            self.pending.pop_front();
+            self.front_pos = 0;
+        }
+        // `pending` may be non-contiguous after retransmission gaps, so
+        // sent_offset tracks the high-water mark for credit accounting.
+        self.sent_offset = self.sent_offset.max(off + data.len() as u64);
+        let fin = self.pending.is_empty() && self.fin_queued && self.sent_offset == self.write_offset;
+        if fin {
+            self.fin_sent = true;
+        }
+        Some((off, data, fin))
+    }
+
+    /// Re-queue data after loss (frame-level retransmission).
+    pub fn requeue(&mut self, offset: u64, data: Vec<u8>, fin: bool) {
+        if self.closed {
+            return;
+        }
+        if fin {
+            self.fin_sent = false;
+            self.fin_queued = true;
+        }
+        if data.is_empty() && !fin {
+            return;
+        }
+        if !data.is_empty() {
+            // Materialize the front cursor first: the insertion below may
+            // displace the front element the cursor refers to.
+            if self.front_pos > 0 {
+                if let Some((off0, data0)) = self.pending.pop_front() {
+                    let rest = data0[self.front_pos..].to_vec();
+                    if !rest.is_empty() {
+                        self.pending.push_front((off0 + self.front_pos as u64, rest));
+                    }
+                }
+                self.front_pos = 0;
+            }
+            // Fast path: non-overlapping insert at the tail or head (the
+            // overwhelmingly common retransmission patterns) skips the
+            // full normalize rebuild.
+            let end = offset + data.len() as u64;
+            let tail_ok = self
+                .pending
+                .back()
+                .map_or(true, |(o, d)| o + d.len() as u64 <= offset);
+            let head_ok = self
+                .pending
+                .front()
+                .map_or(false, |(o, _)| end <= *o && self.front_pos == 0);
+            if tail_ok {
+                self.pending.push_back((offset, data));
+                self.sent_offset = self.sent_offset.min(offset);
+            } else if head_ok {
+                self.pending.push_front((offset, data));
+                self.sent_offset = self.sent_offset.min(offset);
+            } else {
+                let pos = self
+                    .pending
+                    .iter()
+                    .position(|(o, _)| *o > offset)
+                    .unwrap_or(self.pending.len());
+                self.pending.insert(pos, (offset, data));
+                self.sent_offset = self.sent_offset.min(offset);
+                // Rebuild contiguity: merge overlapping spans.
+                self.normalize();
+            }
+        }
+    }
+
+    fn normalize(&mut self) {
+        debug_assert_eq!(self.front_pos, 0, "cursor materialized by requeue");
+        // Ensure pending is sorted and non-overlapping (drop duplicate spans).
+        let mut items: Vec<(u64, Vec<u8>)> = self.pending.drain(..).collect();
+        items.sort_by_key(|(o, _)| *o);
+        let mut out: VecDeque<(u64, Vec<u8>)> = VecDeque::with_capacity(items.len());
+        let mut covered = self.sent_offset;
+        for (off, data) in items {
+            let end = off + data.len() as u64;
+            if end <= covered {
+                continue; // fully duplicate
+            }
+            if off >= covered {
+                covered = end;
+                out.push_back((off, data));
+            } else {
+                // Partial overlap: trim the front.
+                let skip = (covered - off) as usize;
+                let trimmed = data[skip..].to_vec();
+                let new_off = covered;
+                covered = end;
+                out.push_back((new_off, trimmed));
+            }
+        }
+        self.pending = out;
+    }
+}
+
+/// Receiving half.
+#[derive(Debug)]
+pub struct RecvStream {
+    /// Contiguous bytes delivered to the message parser.
+    pub read_offset: u64,
+    /// Out-of-order segments: offset → bytes.
+    segments: BTreeMap<u64, Vec<u8>>,
+    /// Assembled-but-unparsed bytes (partial message at the head).
+    buffer: Vec<u8>,
+    /// Absolute credit limit we granted the peer.
+    pub credit_granted: u64,
+    /// FIN offset when known.
+    pub fin_offset: Option<u64>,
+    pub finished: bool,
+    pub reset: bool,
+}
+
+impl RecvStream {
+    pub fn new() -> RecvStream {
+        RecvStream {
+            read_offset: 0,
+            segments: BTreeMap::new(),
+            buffer: Vec::new(),
+            credit_granted: DEFAULT_WINDOW,
+            fin_offset: None,
+            finished: false,
+            reset: false,
+        }
+    }
+
+    /// Ingest a STREAM_DATA segment; returns complete messages, plus whether
+    /// the stream finished cleanly.
+    pub fn on_data(
+        &mut self,
+        offset: u64,
+        data: Vec<u8>,
+        fin: bool,
+    ) -> Result<(Vec<Vec<u8>>, bool)> {
+        if self.reset {
+            return Ok((Vec::new(), false));
+        }
+        if fin {
+            let fo = offset + data.len() as u64;
+            if let Some(prev) = self.fin_offset {
+                anyhow::ensure!(prev == fo, "conflicting FIN offsets");
+            }
+            self.fin_offset = Some(fo);
+        }
+        if !data.is_empty() {
+            let end = offset + data.len() as u64;
+            if end > self.read_offset {
+                // Trim already-delivered prefix.
+                let (off, dat) = if offset < self.read_offset {
+                    let skip = (self.read_offset - offset) as usize;
+                    (self.read_offset, data[skip..].to_vec())
+                } else {
+                    (offset, data)
+                };
+                // Keep the longer of duplicates at the same offset.
+                match self.segments.get(&off) {
+                    Some(existing) if existing.len() >= dat.len() => {}
+                    _ => {
+                        self.segments.insert(off, dat);
+                    }
+                }
+            }
+        }
+        // Drain contiguous segments into the parse buffer.
+        loop {
+            let Some((&off, _)) = self.segments.iter().next() else {
+                break;
+            };
+            if off > self.read_offset {
+                break;
+            }
+            let (off, seg) = self.segments.pop_first().unwrap();
+            let end = off + seg.len() as u64;
+            if end <= self.read_offset {
+                continue; // fully duplicate
+            }
+            let skip = (self.read_offset - off) as usize;
+            self.buffer.extend_from_slice(&seg[skip..]);
+            self.read_offset = end;
+        }
+        // Parse length-prefixed messages.
+        let mut msgs = Vec::new();
+        let mut pos = 0usize;
+        loop {
+            match crate::util::varint::get_uvarint(&self.buffer[pos..]) {
+                Ok((len, n)) => {
+                    let total = n + len as usize;
+                    if self.buffer.len() - pos >= total {
+                        msgs.push(self.buffer[pos + n..pos + total].to_vec());
+                        pos += total;
+                    } else {
+                        break;
+                    }
+                }
+                Err(_) => break, // need more bytes for the varint itself
+            }
+        }
+        if pos > 0 {
+            self.buffer.drain(..pos);
+        }
+        let finished_now = if let Some(fo) = self.fin_offset {
+            if self.read_offset == fo && !self.finished {
+                self.finished = true;
+                anyhow::ensure!(
+                    self.buffer.is_empty(),
+                    "stream finished with partial message"
+                );
+                true
+            } else {
+                false
+            }
+        } else {
+            false
+        };
+        Ok((msgs, finished_now))
+    }
+
+    /// Whether we should grant more credit, and the new absolute limit.
+    pub fn credit_update(&mut self) -> Option<u64> {
+        let consumed_beyond = self
+            .credit_granted
+            .saturating_sub(self.read_offset);
+        if (consumed_beyond as f64) < DEFAULT_WINDOW as f64 * CREDIT_REFRESH_FRACTION {
+            self.credit_granted = self.read_offset + DEFAULT_WINDOW;
+            Some(self.credit_granted)
+        } else {
+            None
+        }
+    }
+
+    /// Buffered byte count (receive-side pressure).
+    pub fn buffered(&self) -> usize {
+        self.buffer.len() + self.segments.values().map(|v| v.len()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_roundtrip_in_order() {
+        let mut tx = SendStream::new();
+        let mut rx = RecvStream::new();
+        tx.write_msg(b"hello");
+        tx.write_msg(b"world");
+        let mut msgs = Vec::new();
+        while let Some((off, data, fin)) = tx.take_chunk(1400) {
+            let (m, _) = rx.on_data(off, data, fin).unwrap();
+            msgs.extend(m);
+        }
+        assert_eq!(msgs, vec![b"hello".to_vec(), b"world".to_vec()]);
+    }
+
+    #[test]
+    fn fragmentation_and_reassembly() {
+        let mut tx = SendStream::new();
+        let mut rx = RecvStream::new();
+        let big: Vec<u8> = (0..10_000).map(|i| (i % 256) as u8).collect();
+        tx.write_msg(&big);
+        let mut chunks = Vec::new();
+        while let Some(c) = tx.take_chunk(1000) {
+            chunks.push(c);
+        }
+        assert!(chunks.len() >= 10);
+        // Deliver out of order.
+        chunks.reverse();
+        let mut got = Vec::new();
+        for (off, data, fin) in chunks {
+            let (m, _) = rx.on_data(off, data, fin).unwrap();
+            got.extend(m);
+        }
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0], big);
+    }
+
+    #[test]
+    fn duplicates_ignored() {
+        let mut tx = SendStream::new();
+        let mut rx = RecvStream::new();
+        tx.write_msg(b"abcdef");
+        let (off, data, fin) = tx.take_chunk(1400).unwrap();
+        let (m1, _) = rx.on_data(off, data.clone(), fin).unwrap();
+        let (m2, _) = rx.on_data(off, data, fin).unwrap();
+        assert_eq!(m1.len(), 1);
+        assert!(m2.is_empty());
+    }
+
+    #[test]
+    fn flow_control_blocks_and_credit_unblocks() {
+        let mut tx = SendStream::new();
+        tx.credit_limit = 10;
+        tx.write_raw(&[0u8; 100]);
+        let (_, d1, _) = tx.take_chunk(1400).unwrap();
+        assert_eq!(d1.len(), 10);
+        assert!(tx.take_chunk(1400).is_none(), "credit exhausted");
+        tx.credit_limit = 50;
+        let (_, d2, _) = tx.take_chunk(1400).unwrap();
+        assert_eq!(d2.len(), 40);
+    }
+
+    #[test]
+    fn fin_delivered_once_data_complete() {
+        let mut tx = SendStream::new();
+        let mut rx = RecvStream::new();
+        tx.write_msg(b"bye");
+        tx.finish();
+        let (off, data, fin) = tx.take_chunk(1400).unwrap();
+        assert!(fin);
+        let (msgs, finished) = rx.on_data(off, data, fin).unwrap();
+        assert_eq!(msgs.len(), 1);
+        assert!(finished);
+        assert!(rx.finished);
+    }
+
+    #[test]
+    fn fin_out_of_order() {
+        let mut rx = RecvStream::new();
+        // FIN segment arrives before the middle data.
+        let mut framed = Vec::new();
+        crate::util::varint::put_length_prefixed(&mut framed, b"xyz");
+        let (a, b) = framed.split_at(2);
+        let (_, fin1) = rx.on_data(2, b.to_vec(), true).unwrap();
+        assert!(!fin1);
+        let (msgs, fin2) = rx.on_data(0, a.to_vec(), false).unwrap();
+        assert!(fin2);
+        assert_eq!(msgs, vec![b"xyz".to_vec()]);
+    }
+
+    #[test]
+    fn requeue_after_loss() {
+        let mut tx = SendStream::new();
+        let mut rx = RecvStream::new();
+        tx.write_msg(&vec![7u8; 3000]);
+        let c1 = tx.take_chunk(1000).unwrap();
+        let c2 = tx.take_chunk(1000).unwrap();
+        let c3 = tx.take_chunk(1000).unwrap();
+        let c4 = tx.take_chunk(1000).unwrap();
+        assert!(tx.take_chunk(1000).is_none());
+        // c2 "lost": requeue and retransmit.
+        tx.requeue(c2.0, c2.1.clone(), c2.2);
+        let c2r = tx.take_chunk(1000).unwrap();
+        assert_eq!(c2r.0, c2.0);
+        assert_eq!(c2r.1, c2.1);
+        for (off, data, fin) in [c1, c2r, c3, c4] {
+            let _ = rx.on_data(off, data, fin).unwrap();
+        }
+        assert_eq!(rx.buffered(), 0);
+        assert_eq!(rx.read_offset, 3000 + 2); // 2-byte varint length prefix
+    }
+
+    #[test]
+    fn credit_update_fires_after_consumption() {
+        let mut rx = RecvStream::new();
+        assert!(
+            rx.credit_update().is_none(),
+            "full window outstanding: no refresh needed"
+        );
+        // Consume most of the window.
+        let data = vec![0u8; (DEFAULT_WINDOW / 2 + 100) as usize];
+        let mut framed = Vec::new();
+        crate::util::varint::put_length_prefixed(&mut framed, &data);
+        let _ = rx.on_data(0, framed, false).unwrap();
+        let update = rx.credit_update();
+        assert!(update.is_some());
+        assert!(update.unwrap() > DEFAULT_WINDOW);
+    }
+
+    #[test]
+    fn partial_message_at_fin_errors() {
+        let mut rx = RecvStream::new();
+        let mut framed = Vec::new();
+        crate::util::varint::put_length_prefixed(&mut framed, b"hello");
+        framed.truncate(3); // cut mid-message
+        assert!(rx.on_data(0, framed, true).is_err());
+    }
+
+    #[test]
+    fn backlog_reflects_pending() {
+        let mut tx = SendStream::new();
+        assert_eq!(tx.backlog(), 0);
+        tx.write_msg(&vec![0u8; 500]);
+        assert!(tx.backlog() >= 500);
+        let _ = tx.take_chunk(10_000);
+        assert_eq!(tx.backlog(), 0);
+    }
+}

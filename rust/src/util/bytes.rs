@@ -1,0 +1,81 @@
+//! Byte-buffer helpers: big-endian integer read/write used by framing
+//! layers (mux, transport, rpc).
+
+use anyhow::{bail, Result};
+
+pub fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+pub fn get_u16(buf: &[u8], pos: usize) -> Result<u16> {
+    match buf.get(pos..pos + 2) {
+        Some(s) => Ok(u16::from_be_bytes([s[0], s[1]])),
+        None => bail!("short buffer reading u16 at {pos}"),
+    }
+}
+
+pub fn get_u32(buf: &[u8], pos: usize) -> Result<u32> {
+    match buf.get(pos..pos + 4) {
+        Some(s) => Ok(u32::from_be_bytes([s[0], s[1], s[2], s[3]])),
+        None => bail!("short buffer reading u32 at {pos}"),
+    }
+}
+
+pub fn get_u64(buf: &[u8], pos: usize) -> Result<u64> {
+    match buf.get(pos..pos + 8) {
+        Some(s) => Ok(u64::from_be_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ])),
+        None => bail!("short buffer reading u64 at {pos}"),
+    }
+}
+
+/// Constant-time equality (for MAC verification).
+pub fn ct_eq(a: &[u8], b: &[u8]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    let mut acc = 0u8;
+    for (x, y) in a.iter().zip(b.iter()) {
+        acc |= x ^ y;
+    }
+    acc == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips() {
+        let mut b = Vec::new();
+        put_u16(&mut b, 0xBEEF);
+        put_u32(&mut b, 0xDEADBEEF);
+        put_u64(&mut b, 0x0123456789ABCDEF);
+        assert_eq!(get_u16(&b, 0).unwrap(), 0xBEEF);
+        assert_eq!(get_u32(&b, 2).unwrap(), 0xDEADBEEF);
+        assert_eq!(get_u64(&b, 6).unwrap(), 0x0123456789ABCDEF);
+    }
+
+    #[test]
+    fn short_reads_fail() {
+        assert!(get_u32(&[1, 2, 3], 0).is_err());
+        assert!(get_u16(&[1, 2], 1).is_err());
+    }
+
+    #[test]
+    fn ct_eq_works() {
+        assert!(ct_eq(b"abc", b"abc"));
+        assert!(!ct_eq(b"abc", b"abd"));
+        assert!(!ct_eq(b"abc", b"ab"));
+        assert!(ct_eq(b"", b""));
+    }
+}

@@ -1,0 +1,127 @@
+//! Tiny argument parser for the `lattica` binary, examples and benches.
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an iterator of arguments.
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map_or(false, |n| !n.starts_with("--"))
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} must be an integer, got {s:?}")),
+        }
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.opt_u64(name, default as u64)? as usize)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} must be a number, got {s:?}")),
+        }
+    }
+
+    /// First positional arg (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn require_subcommand(&self, usage: &str) -> Result<&str> {
+        match self.subcommand() {
+            Some(s) => Ok(s),
+            None => bail!("missing subcommand\nusage: {usage}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("node extra --seed 42 --role=trainer --verbose");
+        assert_eq!(a.subcommand(), Some("node"));
+        assert_eq!(a.opt("seed"), Some("42"));
+        assert_eq!(a.opt("role"), Some("trainer"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["node", "extra"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("--n 100 --p 0.5");
+        assert_eq!(a.opt_u64("n", 1).unwrap(), 100);
+        assert_eq!(a.opt_f64("p", 0.0).unwrap(), 0.5);
+        assert_eq!(a.opt_u64("missing", 7).unwrap(), 7);
+        assert!(parse("--n abc").opt_u64("n", 1).is_err());
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = parse("--a --b");
+        assert!(a.flag("a") && a.flag("b"));
+    }
+
+    #[test]
+    fn option_consumes_next_nonflag() {
+        let a = parse("--out file.txt --quiet");
+        assert_eq!(a.opt("out"), Some("file.txt"));
+        assert!(a.flag("quiet"));
+    }
+}

@@ -1,0 +1,83 @@
+//! Hex encoding/decoding for CIDs, PeerIds and debug output.
+
+use anyhow::{bail, Result};
+
+const TABLE: &[u8; 16] = b"0123456789abcdef";
+
+/// Encode bytes to lowercase hex.
+pub fn encode(data: &[u8]) -> String {
+    let mut s = String::with_capacity(data.len() * 2);
+    for &b in data {
+        s.push(TABLE[(b >> 4) as usize] as char);
+        s.push(TABLE[(b & 0xf) as usize] as char);
+    }
+    s
+}
+
+/// Short prefix for display (`deadbeef…`).
+pub fn encode_prefix(data: &[u8], n: usize) -> String {
+    let full = encode(data);
+    if full.len() > n {
+        format!("{}..", &full[..n])
+    } else {
+        full
+    }
+}
+
+fn nibble(c: u8) -> Result<u8> {
+    match c {
+        b'0'..=b'9' => Ok(c - b'0'),
+        b'a'..=b'f' => Ok(c - b'a' + 10),
+        b'A'..=b'F' => Ok(c - b'A' + 10),
+        _ => bail!("invalid hex character {:?}", c as char),
+    }
+}
+
+/// Decode a hex string (case-insensitive, even length).
+pub fn decode(s: &str) -> Result<Vec<u8>> {
+    let b = s.as_bytes();
+    if b.len() % 2 != 0 {
+        bail!("odd hex length {}", b.len());
+    }
+    let mut out = Vec::with_capacity(b.len() / 2);
+    for pair in b.chunks_exact(2) {
+        out.push((nibble(pair[0])? << 4) | nibble(pair[1])?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let data = [0x00, 0x01, 0x7f, 0x80, 0xff, 0xde, 0xad];
+        let s = encode(&data);
+        assert_eq!(s, "00017f80ffdead");
+        assert_eq!(decode(&s).unwrap(), data);
+    }
+
+    #[test]
+    fn uppercase_accepted() {
+        assert_eq!(decode("DEADBEEF").unwrap(), [0xde, 0xad, 0xbe, 0xef]);
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        assert!(decode("0g").is_err());
+        assert!(decode("abc").is_err());
+    }
+
+    #[test]
+    fn empty_ok() {
+        assert_eq!(encode(&[]), "");
+        assert_eq!(decode("").unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn prefix_display() {
+        assert_eq!(encode_prefix(&[0xde, 0xad, 0xbe, 0xef], 4), "dead..");
+        assert_eq!(encode_prefix(&[0xde], 4), "de");
+    }
+}

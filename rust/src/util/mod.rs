@@ -1,0 +1,16 @@
+//! Small self-contained utilities shared by every layer.
+//!
+//! The offline build environment provides no `rand`, `serde`, `clap` or
+//! `criterion`, so this module carries from-scratch equivalents: a fast
+//! seedable RNG, varint/hex/json codecs, an argument parser and a logger.
+
+pub mod rng;
+pub mod varint;
+pub mod hex;
+pub mod json;
+pub mod cli;
+pub mod logging;
+pub mod bytes;
+pub mod timefmt;
+
+pub use rng::Rng;

@@ -1,0 +1,205 @@
+//! LEB128 unsigned varints — the integer encoding used by the Protobuf wire
+//! format (`wire`), multiaddr/multihash framing (`multiaddr`, `content`) and
+//! length-prefixed stream messages.
+
+use anyhow::{bail, Result};
+
+/// Append `v` as an unsigned LEB128 varint.
+#[inline]
+pub fn put_uvarint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Encoded size in bytes of `v`.
+#[inline]
+pub fn uvarint_len(v: u64) -> usize {
+    if v == 0 {
+        1
+    } else {
+        (64 - v.leading_zeros() as usize + 6) / 7
+    }
+}
+
+/// Decode a varint from the front of `buf`, returning `(value, bytes_read)`.
+#[inline]
+pub fn get_uvarint(buf: &[u8]) -> Result<(u64, usize)> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    for (i, &b) in buf.iter().enumerate() {
+        if shift >= 64 {
+            bail!("varint overflows u64");
+        }
+        // Reject bits that would be shifted out of range.
+        if shift == 63 && (b & 0x7e) != 0 {
+            bail!("varint overflows u64");
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            if i >= 10 {
+                bail!("varint too long");
+            }
+            return Ok((v, i + 1));
+        }
+        shift += 7;
+    }
+    bail!("varint truncated ({} bytes)", buf.len());
+}
+
+/// ZigZag encoding for signed integers (Protobuf `sint64`).
+#[inline]
+pub fn zigzag_encode(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// ZigZag decoding.
+#[inline]
+pub fn zigzag_decode(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// A cursor for reading varint-framed data.
+pub struct Reader<'a> {
+    pub buf: &'a [u8],
+    pub pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    pub fn uvarint(&mut self) -> Result<u64> {
+        let (v, n) = get_uvarint(&self.buf[self.pos..])?;
+        self.pos += n;
+        Ok(v)
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("short read: want {n}, have {}", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read a varint length prefix then that many bytes.
+    pub fn length_prefixed(&mut self) -> Result<&'a [u8]> {
+        let n = self.uvarint()? as usize;
+        self.take(n)
+    }
+}
+
+/// Append a varint length prefix followed by `data`.
+pub fn put_length_prefixed(out: &mut Vec<u8>, data: &[u8]) {
+    put_uvarint(out, data.len() as u64);
+    out.extend_from_slice(data);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exhaustive_boundaries() {
+        let cases = [
+            0u64,
+            1,
+            127,
+            128,
+            129,
+            16_383,
+            16_384,
+            u32::MAX as u64,
+            u64::MAX - 1,
+            u64::MAX,
+        ];
+        for &v in &cases {
+            let mut buf = Vec::new();
+            put_uvarint(&mut buf, v);
+            assert_eq!(buf.len(), uvarint_len(v), "len mismatch for {v}");
+            let (got, n) = get_uvarint(&buf).unwrap();
+            assert_eq!(got, v);
+            assert_eq!(n, buf.len());
+        }
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        let mut r = crate::util::Rng::new(17);
+        for _ in 0..10_000 {
+            let shift = r.gen_range(64) as u32;
+            let v = r.next_u64() >> shift;
+            let mut buf = Vec::new();
+            put_uvarint(&mut buf, v);
+            let (got, _) = get_uvarint(&buf).unwrap();
+            assert_eq!(got, v);
+        }
+    }
+
+    #[test]
+    fn truncated_fails() {
+        let mut buf = Vec::new();
+        put_uvarint(&mut buf, 300);
+        assert!(get_uvarint(&buf[..1]).is_err());
+        assert!(get_uvarint(&[]).is_err());
+    }
+
+    #[test]
+    fn overlong_fails() {
+        // 11 continuation bytes is always invalid for u64.
+        let buf = [0x80u8; 11];
+        assert!(get_uvarint(&buf).is_err());
+        // Value with bit 64+ set.
+        let buf = [0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0x7f];
+        assert!(get_uvarint(&buf).is_err());
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for v in [-1i64, 0, 1, -64, 63, i64::MIN, i64::MAX, -123_456_789] {
+            assert_eq!(zigzag_decode(zigzag_encode(v)), v);
+        }
+        assert_eq!(zigzag_encode(0), 0);
+        assert_eq!(zigzag_encode(-1), 1);
+        assert_eq!(zigzag_encode(1), 2);
+    }
+
+    #[test]
+    fn reader_length_prefixed() {
+        let mut buf = Vec::new();
+        put_length_prefixed(&mut buf, b"hello");
+        put_length_prefixed(&mut buf, b"");
+        put_length_prefixed(&mut buf, b"world!");
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.length_prefixed().unwrap(), b"hello");
+        assert_eq!(r.length_prefixed().unwrap(), b"");
+        assert_eq!(r.length_prefixed().unwrap(), b"world!");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn reader_short_read_fails() {
+        let mut buf = Vec::new();
+        put_uvarint(&mut buf, 100);
+        buf.extend_from_slice(&[0u8; 10]);
+        let mut r = Reader::new(&buf);
+        assert!(r.length_prefixed().is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Protobuf wire format (proto3 subset), hand-rolled.
+//!
+//! The paper specifies a "Protobuf-based RPC mechanism" (§2); with no codegen
+//! available offline we implement the wire format directly: varint (type 0),
+//! 64-bit (type 1), length-delimited (type 2) and 32-bit (type 5) fields.
+//! Message structs throughout the codebase implement [`Message`] with
+//! hand-written field mappings, which keeps the on-wire cost model identical
+//! to real protobuf.
+
+pub mod pb;
+
+pub use pb::{Message, PbReader, PbWriter, WireType};

@@ -1,0 +1,446 @@
+//! Protobuf wire-format encoder/decoder.
+
+use crate::util::varint;
+use anyhow::{bail, Result};
+
+/// Protobuf wire types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireType {
+    Varint = 0,
+    Fixed64 = 1,
+    Len = 2,
+    Fixed32 = 5,
+}
+
+impl WireType {
+    fn from_u8(v: u8) -> Result<WireType> {
+        Ok(match v {
+            0 => WireType::Varint,
+            1 => WireType::Fixed64,
+            2 => WireType::Len,
+            5 => WireType::Fixed32,
+            _ => bail!("unsupported wire type {v}"),
+        })
+    }
+}
+
+/// Streaming encoder. Fields must be written in any order; callers use
+/// ascending field numbers by convention (canonical form for digests).
+#[derive(Default)]
+pub struct PbWriter {
+    pub buf: Vec<u8>,
+}
+
+impl PbWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reuse an existing buffer (hot-path allocation avoidance).
+    pub fn with_buf(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        PbWriter { buf }
+    }
+
+    #[inline]
+    fn tag(&mut self, field: u32, wt: WireType) {
+        varint::put_uvarint(&mut self.buf, ((field as u64) << 3) | wt as u64);
+    }
+
+    /// `uint64` / `uint32` / `bool` / enum field. Zero is skipped (proto3 default).
+    #[inline]
+    pub fn uint(&mut self, field: u32, v: u64) {
+        if v != 0 {
+            self.tag(field, WireType::Varint);
+            varint::put_uvarint(&mut self.buf, v);
+        }
+    }
+
+    /// Like [`uint`] but always emitted, even when zero.
+    #[inline]
+    pub fn uint_always(&mut self, field: u32, v: u64) {
+        self.tag(field, WireType::Varint);
+        varint::put_uvarint(&mut self.buf, v);
+    }
+
+    /// `sint64` (zigzag).
+    #[inline]
+    pub fn sint(&mut self, field: u32, v: i64) {
+        if v != 0 {
+            self.tag(field, WireType::Varint);
+            varint::put_uvarint(&mut self.buf, varint::zigzag_encode(v));
+        }
+    }
+
+    /// `bool`.
+    #[inline]
+    pub fn boolean(&mut self, field: u32, v: bool) {
+        self.uint(field, v as u64);
+    }
+
+    /// `bytes` / `string`. Empty is skipped.
+    #[inline]
+    pub fn bytes(&mut self, field: u32, v: &[u8]) {
+        if !v.is_empty() {
+            self.tag(field, WireType::Len);
+            varint::put_length_prefixed(&mut self.buf, v);
+        }
+    }
+
+    /// Like [`bytes`] but always emitted, even when empty.
+    #[inline]
+    pub fn bytes_always(&mut self, field: u32, v: &[u8]) {
+        self.tag(field, WireType::Len);
+        varint::put_length_prefixed(&mut self.buf, v);
+    }
+
+    /// `string`.
+    #[inline]
+    pub fn string(&mut self, field: u32, v: &str) {
+        self.bytes(field, v.as_bytes());
+    }
+
+    /// `double`.
+    #[inline]
+    pub fn double(&mut self, field: u32, v: f64) {
+        if v != 0.0 {
+            self.tag(field, WireType::Fixed64);
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// `fixed32`.
+    #[inline]
+    pub fn fixed32(&mut self, field: u32, v: u32) {
+        if v != 0 {
+            self.tag(field, WireType::Fixed32);
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Embedded message.
+    pub fn message<M: Message>(&mut self, field: u32, m: &M) {
+        let inner = m.encode();
+        self.tag(field, WireType::Len);
+        varint::put_length_prefixed(&mut self.buf, &inner);
+    }
+
+    /// Repeated embedded messages.
+    pub fn messages<M: Message>(&mut self, field: u32, ms: &[M]) {
+        for m in ms {
+            self.message(field, m);
+        }
+    }
+
+    /// Repeated bytes/strings.
+    pub fn bytes_list<T: AsRef<[u8]>>(&mut self, field: u32, vs: &[T]) {
+        for v in vs {
+            self.tag(field, WireType::Len);
+            varint::put_length_prefixed(&mut self.buf, v.as_ref());
+        }
+    }
+
+    /// Packed repeated uint64.
+    pub fn packed_uints(&mut self, field: u32, vs: &[u64]) {
+        if vs.is_empty() {
+            return;
+        }
+        let mut tmp = Vec::with_capacity(vs.len() * 2);
+        for &v in vs {
+            varint::put_uvarint(&mut tmp, v);
+        }
+        self.tag(field, WireType::Len);
+        varint::put_length_prefixed(&mut self.buf, &tmp);
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// One decoded field.
+pub struct Field<'a> {
+    pub number: u32,
+    pub wire_type: WireType,
+    pub varint: u64,
+    pub data: &'a [u8],
+}
+
+impl<'a> Field<'a> {
+    pub fn as_u64(&self) -> u64 {
+        self.varint
+    }
+
+    pub fn as_u32(&self) -> u32 {
+        self.varint as u32
+    }
+
+    pub fn as_bool(&self) -> bool {
+        self.varint != 0
+    }
+
+    pub fn as_sint(&self) -> i64 {
+        varint::zigzag_decode(self.varint)
+    }
+
+    pub fn as_bytes(&self) -> Result<&'a [u8]> {
+        if self.wire_type != WireType::Len {
+            bail!("field {} is not length-delimited", self.number);
+        }
+        Ok(self.data)
+    }
+
+    pub fn as_string(&self) -> Result<String> {
+        Ok(std::str::from_utf8(self.as_bytes()?)?.to_string())
+    }
+
+    pub fn as_double(&self) -> Result<f64> {
+        if self.wire_type != WireType::Fixed64 {
+            bail!("field {} is not fixed64", self.number);
+        }
+        Ok(f64::from_le_bytes(self.data.try_into()?))
+    }
+
+    pub fn as_message<M: Message>(&self) -> Result<M> {
+        M::decode(self.as_bytes()?)
+    }
+
+    pub fn packed_uints(&self) -> Result<Vec<u64>> {
+        let mut r = varint::Reader::new(self.as_bytes()?);
+        let mut out = Vec::new();
+        while !r.is_empty() {
+            out.push(r.uvarint()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Field-iterating decoder.
+pub struct PbReader<'a> {
+    r: varint::Reader<'a>,
+}
+
+impl<'a> PbReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        PbReader {
+            r: varint::Reader::new(buf),
+        }
+    }
+
+    /// Next field, or None at end.
+    pub fn next_field(&mut self) -> Result<Option<Field<'a>>> {
+        if self.r.is_empty() {
+            return Ok(None);
+        }
+        let key = self.r.uvarint()?;
+        let number = (key >> 3) as u32;
+        if number == 0 {
+            bail!("field number 0 is invalid");
+        }
+        let wire_type = WireType::from_u8((key & 7) as u8)?;
+        let (varint_val, data): (u64, &[u8]) = match wire_type {
+            WireType::Varint => (self.r.uvarint()?, &[]),
+            WireType::Fixed64 => {
+                let d = self.r.take(8)?;
+                (u64::from_le_bytes(d.try_into()?), d)
+            }
+            WireType::Fixed32 => {
+                let d = self.r.take(4)?;
+                (u32::from_le_bytes(d.try_into()?) as u64, d)
+            }
+            WireType::Len => {
+                let d = self.r.length_prefixed()?;
+                (0, d)
+            }
+        };
+        Ok(Some(Field {
+            number,
+            wire_type,
+            varint: varint_val,
+            data,
+        }))
+    }
+
+    /// Drive a closure over every field.
+    pub fn for_each(mut self, mut f: impl FnMut(Field<'a>) -> Result<()>) -> Result<()> {
+        while let Some(field) = self.next_field()? {
+            f(field)?;
+        }
+        Ok(())
+    }
+}
+
+/// A protobuf-style message.
+pub trait Message: Sized {
+    fn encode_to(&self, w: &mut PbWriter);
+
+    fn decode(buf: &[u8]) -> Result<Self>;
+
+    fn encode(&self) -> Vec<u8> {
+        let mut w = PbWriter::new();
+        self.encode_to(&mut w);
+        w.finish()
+    }
+
+    /// Encode with a varint length prefix (stream framing).
+    fn encode_framed(&self) -> Vec<u8> {
+        let body = self.encode();
+        let mut out = Vec::with_capacity(body.len() + 5);
+        varint::put_length_prefixed(&mut out, &body);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, Default, PartialEq, Clone)]
+    struct Inner {
+        id: u64,
+        tag: String,
+    }
+
+    impl Message for Inner {
+        fn encode_to(&self, w: &mut PbWriter) {
+            w.uint(1, self.id);
+            w.string(2, &self.tag);
+        }
+
+        fn decode(buf: &[u8]) -> Result<Self> {
+            let mut m = Inner::default();
+            PbReader::new(buf).for_each(|f| {
+                match f.number {
+                    1 => m.id = f.as_u64(),
+                    2 => m.tag = f.as_string()?,
+                    _ => {}
+                }
+                Ok(())
+            })?;
+            Ok(m)
+        }
+    }
+
+    #[derive(Debug, Default, PartialEq)]
+    struct Outer {
+        kind: u64,
+        neg: i64,
+        flag: bool,
+        payload: Vec<u8>,
+        score: f64,
+        inners: Vec<Inner>,
+        ids: Vec<u64>,
+        names: Vec<String>,
+    }
+
+    impl Message for Outer {
+        fn encode_to(&self, w: &mut PbWriter) {
+            w.uint(1, self.kind);
+            w.sint(2, self.neg);
+            w.boolean(3, self.flag);
+            w.bytes(4, &self.payload);
+            w.double(5, self.score);
+            w.messages(6, &self.inners);
+            w.packed_uints(7, &self.ids);
+            w.bytes_list(8, &self.names);
+        }
+
+        fn decode(buf: &[u8]) -> Result<Self> {
+            let mut m = Outer::default();
+            PbReader::new(buf).for_each(|f| {
+                match f.number {
+                    1 => m.kind = f.as_u64(),
+                    2 => m.neg = f.as_sint(),
+                    3 => m.flag = f.as_bool(),
+                    4 => m.payload = f.as_bytes()?.to_vec(),
+                    5 => m.score = f.as_double()?,
+                    6 => m.inners.push(f.as_message()?),
+                    7 => m.ids = f.packed_uints()?,
+                    8 => m.names.push(f.as_string()?),
+                    _ => {}
+                }
+                Ok(())
+            })?;
+            Ok(m)
+        }
+    }
+
+    #[test]
+    fn roundtrip_full() {
+        let m = Outer {
+            kind: 7,
+            neg: -12345,
+            flag: true,
+            payload: vec![1, 2, 3, 0, 255],
+            score: 0.25,
+            inners: vec![
+                Inner { id: 1, tag: "a".into() },
+                Inner { id: 2, tag: "b".into() },
+            ],
+            ids: vec![0, 1, 300, u64::MAX],
+            names: vec!["x".into(), "yz".into()],
+        };
+        let enc = m.encode();
+        assert_eq!(Outer::decode(&enc).unwrap(), m);
+    }
+
+    #[test]
+    fn defaults_encode_empty() {
+        let m = Outer::default();
+        assert!(m.encode().is_empty());
+        assert_eq!(Outer::decode(&[]).unwrap(), m);
+    }
+
+    #[test]
+    fn unknown_fields_skipped() {
+        // Encode with extra field 99, decode as Inner.
+        let mut w = PbWriter::new();
+        w.uint(1, 5);
+        w.string(99, "future");
+        w.double(98, 1.5);
+        w.string(2, "t");
+        let m = Inner::decode(&w.finish()).unwrap();
+        assert_eq!(m, Inner { id: 5, tag: "t".into() });
+    }
+
+    #[test]
+    fn wire_compat_manual_bytes() {
+        // field 1 varint 150 == 08 96 01 (canonical protobuf example)
+        let mut w = PbWriter::new();
+        w.uint(1, 150);
+        assert_eq!(w.finish(), vec![0x08, 0x96, 0x01]);
+        // field 2 string "testing" == 12 07 74 65 73 74 69 6e 67
+        let mut w = PbWriter::new();
+        w.string(2, "testing");
+        assert_eq!(
+            w.finish(),
+            vec![0x12, 0x07, 0x74, 0x65, 0x73, 0x74, 0x69, 0x6e, 0x67]
+        );
+    }
+
+    #[test]
+    fn truncated_message_fails() {
+        let m = Inner { id: 300, tag: "hello".into() };
+        let enc = m.encode();
+        assert!(Inner::decode(&enc[..enc.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn framed_roundtrip() {
+        let m = Inner { id: 9, tag: "fr".into() };
+        let framed = m.encode_framed();
+        let mut r = varint::Reader::new(&framed);
+        let body = r.length_prefixed().unwrap();
+        assert_eq!(Inner::decode(body).unwrap(), m);
+    }
+
+    #[test]
+    fn wrong_wire_type_rejected() {
+        let mut w = PbWriter::new();
+        w.uint(4, 1); // field 4 expected Len in Outer::payload accessor
+        let buf = w.finish();
+        let mut r = PbReader::new(&buf);
+        let f = r.next_field().unwrap().unwrap();
+        assert!(f.as_bytes().is_err());
+    }
+}

@@ -1,0 +1,435 @@
+//! End-to-end integration tests over the full node stack: DHT bootstrap and
+//! lookup, content publish/fetch via Bitswap, unary + streaming RPC, gossip
+//! propagation, CRDT anti-entropy, and rendezvous discovery — all on the
+//! deterministic simulator.
+
+use lattica::content::Cid;
+use lattica::identity::PeerId;
+use lattica::multiaddr::Proto;
+use lattica::netsim::nat::NatType;
+use lattica::netsim::topology::{LinkProfile, TopologyBuilder};
+use lattica::netsim::{World, SECOND};
+use lattica::node::{run_until, LatticaNode, NodeConfig, NodeEvent};
+use lattica::protocols::bitswap::BitswapEvent;
+use lattica::protocols::kad::{KadEvent, PeerEntry, QueryKind};
+use lattica::protocols::Ctx;
+use lattica::rpc::{RpcEvent, Status};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+type Node = Rc<RefCell<LatticaNode>>;
+
+/// N public nodes in one region, all bootstrapped through node 0.
+fn mesh(n: usize, seed: u64) -> (World, Vec<Node>) {
+    let mut t = TopologyBuilder::paper_regions();
+    let hosts: Vec<u32> = (0..n).map(|_| t.public_host(0, LinkProfile::DATACENTER)).collect();
+    let mut world = World::new(t.build(seed));
+    let nodes: Vec<Node> = hosts
+        .iter()
+        .enumerate()
+        .map(|(i, &h)| {
+            LatticaNode::spawn(&mut world, h, NodeConfig::with_seed(seed * 1000 + i as u64))
+        })
+        .collect();
+    // Bootstrap everyone through node 0.
+    let entry0 = PeerEntry {
+        id: nodes[0].borrow().peer_id(),
+        host: hosts[0],
+        port: 4001,
+    };
+    for node in nodes.iter().skip(1) {
+        node.borrow_mut().bootstrap(&mut world.net, entry0.clone());
+    }
+    world.run_for(3 * SECOND);
+    (world, nodes)
+}
+
+fn find_event<T>(node: &Node, f: impl Fn(&NodeEvent) -> Option<T>) -> Option<T> {
+    let mut n = node.borrow_mut();
+    let evs = n.drain_events();
+    let mut found = None;
+    for e in evs {
+        if found.is_none() {
+            if let Some(v) = f(&e) {
+                found = Some(v);
+            }
+        }
+    }
+    found
+}
+
+#[test]
+fn dht_bootstrap_populates_routing_tables() {
+    let (_world, nodes) = mesh(8, 31);
+    for (i, n) in nodes.iter().enumerate() {
+        let len = n.borrow().kad.table.len();
+        assert!(len >= 3, "node {i} routing table only has {len} entries");
+    }
+}
+
+#[test]
+fn dht_iterative_lookup_finds_closest() {
+    let (mut world, nodes) = mesh(10, 33);
+    let target = *nodes[7].borrow().peer_id().as_bytes();
+    {
+        let n1 = &nodes[1];
+        let mut n = n1.borrow_mut();
+        let LatticaNode { swarm, kad, .. } = &mut *n;
+        let mut ctx = Ctx::new(swarm, &mut world.net);
+        kad.find_node(&mut ctx, target);
+    }
+    let ok = run_until(&mut world, 10 * SECOND, || {
+        find_event(&nodes[1], |e| match e {
+            NodeEvent::Kad(KadEvent::QueryFinished { kind, closest, .. })
+                if *kind == QueryKind::FindNode =>
+            {
+                Some(closest.first().map(|e| e.id))
+            }
+            _ => None,
+        })
+        .flatten()
+        .map(|id| id == nodes[7].borrow().peer_id())
+        .unwrap_or(false)
+    });
+    assert!(ok, "lookup did not converge on the target peer");
+}
+
+#[test]
+fn publish_and_fetch_blob_via_dht_providers() {
+    let (mut world, nodes) = mesh(6, 35);
+    let data: Vec<u8> = (0..300_000u32).map(|i| (i % 251) as u8).collect();
+    let root = nodes[2]
+        .borrow_mut()
+        .publish_blob(&mut world.net, "asset/test", 1, &data, 64 * 1024);
+    world.run_for(2 * SECOND);
+
+    // Node 5 resolves providers via the DHT…
+    {
+        let mut n = nodes[5].borrow_mut();
+        let LatticaNode { swarm, kad, .. } = &mut *n;
+        let mut ctx = Ctx::new(swarm, &mut world.net);
+        kad.get_providers(&mut ctx, root.to_key());
+    }
+    let provider: Option<PeerId> = {
+        let mut found = None;
+        run_until(&mut world, 10 * SECOND, || {
+            if found.is_none() {
+                found = find_event(&nodes[5], |e| match e {
+                    NodeEvent::Kad(KadEvent::QueryFinished { providers, .. }) => {
+                        providers.first().map(|p| p.id)
+                    }
+                    _ => None,
+                });
+            }
+            found.is_some()
+        });
+        found
+    };
+    let provider = provider.expect("provider found via DHT");
+    assert_eq!(provider, nodes[2].borrow().peer_id());
+
+    // …then Bitswaps the manifest + chunks.
+    nodes[5]
+        .borrow_mut()
+        .fetch_blob(&mut world.net, root, vec![provider]);
+    run_until(&mut world, 10 * SECOND, || {
+        nodes[5].borrow().blockstore.has(&root)
+    });
+    nodes[5]
+        .borrow_mut()
+        .fetch_manifest_chunks(&mut world.net, &root, vec![provider])
+        .unwrap();
+    let ok = run_until(&mut world, 20 * SECOND, || {
+        let n = nodes[5].borrow();
+        lattica::content::DagManifest::load(&n.blockstore, &root)
+            .map(|m| m.is_complete(&n.blockstore))
+            .unwrap_or(false)
+    });
+    assert!(ok, "chunks did not arrive");
+    let n = nodes[5].borrow();
+    let m = lattica::content::DagManifest::load(&n.blockstore, &root).unwrap();
+    assert_eq!(m.assemble(&n.blockstore).unwrap(), data);
+}
+
+#[test]
+fn bitswap_rejects_corrupt_blocks() {
+    // A forged CID→data pair can't enter the store (verified in unit tests);
+    // here we check end-to-end that only verified data lands.
+    let (mut world, nodes) = mesh(3, 37);
+    let data = vec![9u8; 10_000];
+    let root = nodes[0]
+        .borrow_mut()
+        .publish_blob(&mut world.net, "x", 1, &data, 4096);
+    world.run_for(SECOND);
+    let provider = nodes[0].borrow().peer_id();
+    nodes[1]
+        .borrow_mut()
+        .fetch_blob(&mut world.net, root, vec![provider]);
+    run_until(&mut world, 5 * SECOND, || nodes[1].borrow().blockstore.has(&root));
+    let n = nodes[1].borrow();
+    let stored = n.blockstore.get(&root).unwrap();
+    assert!(root.verify(&stored));
+}
+
+#[test]
+fn unary_rpc_roundtrip_and_timeout() {
+    let (mut world, nodes) = mesh(2, 39);
+    let server_peer = nodes[0].borrow().peer_id();
+
+    // Attach an echo app to node 0.
+    struct Echo;
+    impl lattica::node::App for Echo {
+        fn handle(
+            &mut self,
+            node: &mut LatticaNode,
+            net: &mut lattica::netsim::Net,
+            ev: NodeEvent,
+        ) -> Option<NodeEvent> {
+            match ev {
+                NodeEvent::Rpc(RpcEvent::Request {
+                    service,
+                    payload,
+                    reply,
+                    ..
+                }) if service == "echo" => {
+                    let mut ctx = Ctx::new(&mut node.swarm, net);
+                    let mut out = b"echo:".to_vec();
+                    out.extend_from_slice(&payload);
+                    let _ = node.rpc.respond(&mut ctx, reply, Status::Ok, &out);
+                    None
+                }
+                other => Some(other),
+            }
+        }
+    }
+    nodes[0].borrow_mut().app = Some(Box::new(Echo));
+
+    let call_id = {
+        let mut n = nodes[1].borrow_mut();
+        let LatticaNode { swarm, rpc, .. } = &mut *n;
+        let mut ctx = Ctx::new(swarm, &mut world.net);
+        rpc.call(&mut ctx, &server_peer, "echo", "say", b"hello").unwrap()
+    };
+    let ok = run_until(&mut world, 5 * SECOND, || {
+        find_event(&nodes[1], |e| match e {
+            NodeEvent::Rpc(RpcEvent::Response {
+                call_id: id,
+                status,
+                payload,
+                ..
+            }) if *id == call_id => Some(*status == Status::Ok && payload == b"echo:hello"),
+            _ => None,
+        })
+        .unwrap_or(false)
+    });
+    assert!(ok, "echo response missing");
+}
+
+#[test]
+fn streaming_rpc_backpressure_delivers_in_order() {
+    let (mut world, nodes) = mesh(2, 41);
+    let server_peer = nodes[0].borrow().peer_id();
+    let handle = {
+        let mut n = nodes[1].borrow_mut();
+        let LatticaNode { swarm, rpc, .. } = &mut *n;
+        let mut ctx = Ctx::new(swarm, &mut world.net);
+        rpc.open_rpc_stream(&mut ctx, &server_peer, "tensor-flow").unwrap()
+    };
+    // Send 50 items (more than the 16-credit initial window).
+    for i in 0..50u32 {
+        let mut n = nodes[1].borrow_mut();
+        let LatticaNode { swarm, rpc, .. } = &mut *n;
+        let mut ctx = Ctx::new(swarm, &mut world.net);
+        rpc.send_item(&mut ctx, handle, format!("item-{i}").into_bytes());
+    }
+    {
+        let mut n = nodes[1].borrow_mut();
+        let LatticaNode { swarm, rpc, .. } = &mut *n;
+        let mut ctx = Ctx::new(swarm, &mut world.net);
+        rpc.end_stream(&mut ctx, handle);
+    }
+    world.run_for(5 * SECOND);
+    // Server saw all 50 items in order.
+    let mut seqs = Vec::new();
+    let mut ended = false;
+    {
+        let mut n = nodes[0].borrow_mut();
+        for e in n.drain_events() {
+            match e {
+                NodeEvent::Rpc(RpcEvent::StreamItem { seq, payload, .. }) => {
+                    assert_eq!(payload, format!("item-{}", seq).into_bytes());
+                    seqs.push(seq);
+                }
+                NodeEvent::Rpc(RpcEvent::StreamEnded { .. }) => ended = true,
+                _ => {}
+            }
+        }
+    }
+    assert_eq!(seqs, (0..50).collect::<Vec<u64>>());
+    assert!(ended, "stream end not delivered");
+}
+
+#[test]
+fn gossip_reaches_all_subscribers() {
+    let (mut world, nodes) = mesh(6, 43);
+    for n in &nodes {
+        let mut nd = n.borrow_mut();
+        let LatticaNode { swarm, gossip, .. } = &mut *nd;
+        let mut ctx = Ctx::new(swarm, &mut world.net);
+        gossip.subscribe(&mut ctx, "news");
+    }
+    world.run_for(SECOND);
+    {
+        let mut nd = nodes[3].borrow_mut();
+        let LatticaNode { swarm, gossip, .. } = &mut *nd;
+        let mut ctx = Ctx::new(swarm, &mut world.net);
+        gossip.publish(&mut ctx, "news", b"model v7 available".to_vec());
+    }
+    world.run_for(3 * SECOND);
+    let mut received = 0;
+    for (i, n) in nodes.iter().enumerate() {
+        if i == 3 {
+            continue;
+        }
+        let got = find_event(n, |e| match e {
+            NodeEvent::Gossip(lattica::protocols::gossip::GossipEvent::Received {
+                data, ..
+            }) => Some(data == b"model v7 available"),
+            _ => None,
+        })
+        .unwrap_or(false);
+        if got {
+            received += 1;
+        }
+    }
+    assert_eq!(received, 5, "gossip must reach all subscribers");
+}
+
+#[test]
+fn crdt_anti_entropy_converges() {
+    let (mut world, nodes) = mesh(3, 45);
+    // Divergent updates.
+    nodes[0].borrow_mut().crdt.gcounter("steps").increment(1, 5);
+    nodes[1].borrow_mut().crdt.gcounter("steps").increment(2, 7);
+    nodes[2].borrow_mut().crdt.orset("members").add(3, b"n2");
+    // Ring sync: 0→1, 1→2, 2→0, then once more.
+    for _ in 0..2 {
+        for (a, b) in [(0, 1), (1, 2), (2, 0)] {
+            let peer = nodes[b].borrow().peer_id();
+            nodes[a]
+                .borrow_mut()
+                .crdt_sync_with(&mut world.net, &peer)
+                .unwrap();
+            world.run_for(SECOND);
+        }
+    }
+    let d0 = nodes[0].borrow().crdt.digest();
+    let d1 = nodes[1].borrow().crdt.digest();
+    let d2 = nodes[2].borrow().crdt.digest();
+    assert_eq!(d0, d1);
+    assert_eq!(d1, d2);
+    assert_eq!(nodes[0].borrow_mut().crdt.gcounter("steps").value(), 12);
+}
+
+#[test]
+fn rendezvous_register_and_discover() {
+    let mut t = TopologyBuilder::paper_regions();
+    let hs = t.public_host(0, LinkProfile::DATACENTER);
+    let ha = t.public_host(1, LinkProfile::FIBER);
+    let hb = t.public_host(2, LinkProfile::FIBER);
+    let mut world = World::new(t.build(47));
+    let server = LatticaNode::spawn(&mut world, hs, {
+        let mut c = NodeConfig::with_seed(100);
+        c.rendezvous_server = true;
+        c
+    });
+    let a = LatticaNode::spawn(&mut world, ha, NodeConfig::with_seed(101));
+    let b = LatticaNode::spawn(&mut world, hb, NodeConfig::with_seed(102));
+    let server_ma = server.borrow().listen_addr();
+    let server_peer = server.borrow().peer_id();
+    a.borrow_mut().dial(&mut world.net, &server_ma).unwrap();
+    b.borrow_mut().dial(&mut world.net, &server_ma).unwrap();
+    world.run_for(2 * SECOND);
+    {
+        let mut n = a.borrow_mut();
+        let LatticaNode { swarm, rendezvous, .. } = &mut *n;
+        let mut ctx = Ctx::new(swarm, &mut world.net);
+        rendezvous.register(&mut ctx, &server_peer, "shard-cluster").unwrap();
+    }
+    world.run_for(SECOND);
+    {
+        let mut n = b.borrow_mut();
+        let LatticaNode { swarm, rendezvous, .. } = &mut *n;
+        let mut ctx = Ctx::new(swarm, &mut world.net);
+        rendezvous.discover(&mut ctx, &server_peer, "shard-cluster").unwrap();
+    }
+    let a_peer = a.borrow().peer_id();
+    let ok = run_until(&mut world, 5 * SECOND, || {
+        find_event(&b, |e| match e {
+            NodeEvent::Rendezvous(
+                lattica::protocols::rendezvous::RendezvousEvent::Discovered { peers, .. },
+            ) => Some(peers.iter().any(|p| p.id == a_peer)),
+            _ => None,
+        })
+        .unwrap_or(false)
+    });
+    assert!(ok, "rendezvous discovery failed");
+}
+
+#[test]
+fn natted_fetch_through_relay_after_traversal() {
+    // Edge node behind symmetric NAT fetches content from another NATed
+    // node via the relay (the fallback path of Fig. 1(1)).
+    let mut t = TopologyBuilder::paper_regions();
+    let hr = t.public_host(0, LinkProfile::DATACENTER);
+    let na = t.nat(1, NatType::Symmetric, LinkProfile::FIBER);
+    let ha = t.natted_host(na, LinkProfile::UNLIMITED);
+    let nb = t.nat(2, NatType::Symmetric, LinkProfile::FIBER);
+    let hb = t.natted_host(nb, LinkProfile::UNLIMITED);
+    let mut world = World::new(t.build(49));
+    let relay = LatticaNode::spawn(&mut world, hr, NodeConfig::relay(200));
+    let a = LatticaNode::spawn(&mut world, ha, NodeConfig::with_seed(201));
+    let b = LatticaNode::spawn(&mut world, hb, NodeConfig::with_seed(202));
+    let relay_ma = relay.borrow().listen_addr();
+    let relay_peer = relay.borrow().peer_id();
+    a.borrow_mut().dial(&mut world.net, &relay_ma).unwrap();
+    b.borrow_mut().dial(&mut world.net, &relay_ma).unwrap();
+    world.run_for(2 * SECOND);
+    // B reserves; A publishes content; A dials B via circuit; B fetches.
+    {
+        let mut n = b.borrow_mut();
+        let LatticaNode { swarm, .. } = &mut *n;
+        swarm.relay_reserve(&mut world.net, &relay_peer).unwrap();
+    }
+    world.run_for(SECOND);
+    let data = vec![5u8; 50_000];
+    let root = a
+        .borrow_mut()
+        .publish_blob(&mut world.net, "edge-data", 1, &data, 16 * 1024);
+    let b_peer = b.borrow().peer_id();
+    let circuit = lattica::multiaddr::Multiaddr::circuit(relay_ma.clone(), b_peer);
+    a.borrow_mut().dial(&mut world.net, &circuit).unwrap();
+    let connected = run_until(&mut world, 10 * SECOND, || {
+        a.borrow().swarm.is_connected(&b_peer)
+    });
+    assert!(connected, "relayed connection failed");
+    // B fetches from A across the circuit.
+    let a_peer = a.borrow().peer_id();
+    b.borrow_mut().fetch_blob(&mut world.net, root, vec![a_peer]);
+    let got_manifest = run_until(&mut world, 15 * SECOND, || {
+        b.borrow().blockstore.has(&root)
+    });
+    assert!(got_manifest, "manifest fetch over relay failed");
+    b.borrow_mut()
+        .fetch_manifest_chunks(&mut world.net, &root, vec![a_peer])
+        .unwrap();
+    let ok = run_until(&mut world, 30 * SECOND, || {
+        let n = b.borrow();
+        lattica::content::DagManifest::load(&n.blockstore, &root)
+            .map(|m| m.is_complete(&n.blockstore))
+            .unwrap_or(false)
+    });
+    assert!(ok, "chunk fetch over relay failed");
+    let _ = Cid::of(b"unused");
+    let _ = Proto::QuicLike;
+}
