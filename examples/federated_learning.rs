@@ -155,7 +155,7 @@ fn main() -> anyhow::Result<()> {
         assert!(ok, "round {round}: updates did not replicate");
         let dt = (world.net.now() - t0) as f64 / 1e9;
         // 5. Fold: everyone hashes the same update set → identical digests.
-        use sha2::{Digest, Sha256};
+        use lattica::crypto::sha256::Sha256;
         let mut digests = Vec::new();
         for h in &hospitals {
             let n = h.borrow();

@@ -14,6 +14,7 @@ use lattica::node::{run_until, NodeEvent};
 use lattica::protocols::gossip::GossipEvent;
 use lattica::scenarios::bootstrap_mesh;
 use lattica::util::cli::Args;
+use lattica::util::json::Json;
 use lattica::util::timefmt;
 
 fn main() {
@@ -36,7 +37,9 @@ fn main() {
         timefmt::fmt_bytes(blob.len() as u64)
     );
 
+    let mut json_rows: Vec<Json> = Vec::new();
     for p2p in [true, false] {
+        let wall_start = std::time::Instant::now();
         let (mut world, nodes) = bootstrap_mesh(clusters + 1, if p2p { 41 } else { 42 }, LinkProfile::FIBER);
         let trainer = nodes[0].clone();
         let trainer_peer = trainer.borrow().peer_id();
@@ -129,6 +132,24 @@ fn main() {
             if p2p { "lattica p2p   " } else { "central server" },
             timefmt::fmt_bytes(egress)
         );
+        json_rows.push(Json::obj(vec![
+            ("mode", Json::str(if p2p { "p2p" } else { "central" })),
+            ("mean_sync_secs", Json::num(mean)),
+            ("trainer_egress_bytes", Json::num(egress as f64)),
+            ("checkpoints", Json::num(checkpoints as f64)),
+            ("clusters", Json::num(clusters as f64)),
+            ("wall_secs", Json::num(wall_start.elapsed().as_secs_f64())),
+        ]));
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("model_sync")),
+        ("blob_bytes", Json::num(blob.len() as f64)),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_model_sync.json");
+    match std::fs::write(path, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
     println!("done (lower trainer egress in p2p mode = the decentralized-CDN effect)");
 }

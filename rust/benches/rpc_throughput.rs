@@ -4,7 +4,12 @@
 //! QPS is measured in virtual time over the full stack (protobuf framing,
 //! Noise-style AEAD, reliability, NAT-free paths); the Local row is also
 //! bounded by per-host CPU/stack cost which the simulator models as link
-//! serialization on loopback.
+//! serialization on loopback. Wall-clock throughput (how fast the real
+//! stack pushes calls through one core) is reported alongside — that is
+//! the number the zero-copy data path moves.
+//!
+//! Emits `BENCH_rpc_throughput.json` at the repo root so the perf
+//! trajectory is tracked across PRs.
 //!
 //! Usage: cargo bench --bench rpc_throughput [-- --calls N --payload small|large|both]
 
@@ -15,13 +20,24 @@ use lattica::rpc::RpcEvent;
 use lattica::scenarios::{table1_world, EchoApp, NetScenario};
 use lattica::netsim::SECOND;
 use lattica::util::cli::Args;
+use lattica::util::json::Json;
 
-fn run_scenario(s: NetScenario, payload: usize, response: usize, calls: usize, concurrency: usize) -> (f64, Histogram) {
+struct ScenarioResult {
+    qps: f64,
+    lat: Histogram,
+    /// Wall-clock seconds spent driving the scenario.
+    wall_secs: f64,
+    calls: usize,
+}
+
+fn run_scenario(s: NetScenario, payload: usize, response: usize, calls: usize, concurrency: usize) -> ScenarioResult {
     let (mut world, client, server) = table1_world(s, 77);
     server.borrow_mut().app = Some(Box::new(EchoApp { response_size: response }));
     let server_peer = server.borrow().peer_id();
 
-    let body = vec![0x5Au8; payload];
+    // Shared payload: each call bumps a refcount instead of copying.
+    let body: lattica::util::Buf = vec![0x5Au8; payload].into();
+    let wall_start = std::time::Instant::now();
     let mut meter = QpsMeter::start(world.net.now());
     let mut lat = Histogram::new();
     let mut issued = 0usize;
@@ -34,7 +50,7 @@ fn run_scenario(s: NetScenario, payload: usize, response: usize, calls: usize, c
             let mut n = client.borrow_mut();
             let LatticaNode { swarm, rpc, .. } = &mut *n;
             let mut ctx = Ctx::new(swarm, &mut world.net);
-            if rpc.call(&mut ctx, &server_peer, "bench", "echo", &body).is_ok() {
+            if rpc.call(&mut ctx, &server_peer, "bench", "echo", body.clone()).is_ok() {
                 issued += 1;
                 in_flight += 1;
             } else {
@@ -57,7 +73,12 @@ fn run_scenario(s: NetScenario, payload: usize, response: usize, calls: usize, c
             break; // safety
         }
     }
-    (meter.qps(), lat)
+    ScenarioResult {
+        qps: meter.qps(),
+        lat,
+        wall_secs: wall_start.elapsed().as_secs_f64(),
+        calls: done,
+    }
 }
 
 fn main() {
@@ -78,33 +99,65 @@ fn main() {
     ];
     let mut rows = Vec::new();
     for (s, _, _) in paper {
-        let (qps_s, mut lat_s) = run_scenario(s, small, small, calls, concurrency);
-        let (qps_l, mut lat_l) = run_scenario(s, large, 128, calls / 4, concurrency);
-        println!("{:<24} {:>14.0} {:>14.0}", s.label(), qps_s, qps_l);
-        println!("    small: {}", lat_s.summary());
-        println!("    large: {}", lat_l.summary());
-        rows.push((s, qps_s, qps_l));
+        let mut rs = run_scenario(s, small, small, calls, concurrency);
+        let mut rl = run_scenario(s, large, 128, calls / 4, concurrency);
+        println!("{:<24} {:>14.0} {:>14.0}", s.label(), rs.qps, rl.qps);
+        println!("    small: {}  [wall {:.2}s, {:.0} calls/wall-s]",
+            rs.lat.summary(), rs.wall_secs, rs.calls as f64 / rs.wall_secs.max(1e-9));
+        println!("    large: {}  [wall {:.2}s, {:.0} calls/wall-s]",
+            rl.lat.summary(), rl.wall_secs, rl.calls as f64 / rl.wall_secs.max(1e-9));
+        rows.push((s, rs, rl));
     }
     println!();
     println!("Paper reference:");
     for (s, ps, pl) in paper {
         println!("{:<24} {:>14.0} {:>14.0}", s.label(), ps, pl);
     }
+
+    // Machine-readable result for cross-PR tracking.
+    let json_rows: Vec<Json> = rows
+        .iter_mut()
+        .map(|(s, rs, rl)| {
+            Json::obj(vec![
+                ("scenario", Json::str(s.label())),
+                ("qps_small", Json::num(rs.qps)),
+                ("qps_large", Json::num(rl.qps)),
+                ("p50_small_ns", Json::num(rs.lat.percentile(50.0) as f64)),
+                ("p99_small_ns", Json::num(rs.lat.percentile(99.0) as f64)),
+                ("wall_secs_small", Json::num(rs.wall_secs)),
+                ("wall_secs_large", Json::num(rl.wall_secs)),
+                ("calls_per_wall_sec_small", Json::num(rs.calls as f64 / rs.wall_secs.max(1e-9))),
+                ("calls_per_wall_sec_large", Json::num(rl.calls as f64 / rl.wall_secs.max(1e-9))),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("rpc_throughput")),
+        ("calls", Json::num(calls as f64)),
+        ("concurrency", Json::num(concurrency as f64)),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_rpc_throughput.json");
+    match std::fs::write(path, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
     // Shape checks across the three networked rows (LAN → WAN → inter-
     // continent must degrade in both payload classes). The Local row is
     // asserted only to be within the paper's order for small payloads:
     // its relation to LAN depends on whether per-host stack budgets are
     // shared (one machine) or independent (two) — see EXPERIMENTS.md.
     assert!(
-        rows[1].1 > rows[2].1 && rows[2].1 > rows[3].1,
+        rows[1].1.qps > rows[2].1.qps && rows[2].1.qps > rows[3].1.qps,
         "128B QPS must degrade with network distance"
     );
     assert!(
-        rows[1].2 > rows[3].2,
+        rows[1].2.qps > rows[3].2.qps,
         "256KB QPS must degrade with network distance"
     );
     assert!(
-        rows[0].1 > 1000.0,
+        rows[0].1.qps > 1000.0,
         "Local small-payload QPS must be in the paper's order (>1k)"
     );
     println!("\nshape check OK: QPS degrades with network distance in both payload classes");

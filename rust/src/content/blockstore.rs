@@ -1,14 +1,16 @@
 //! In-memory verified blockstore with size accounting and LRU-ish pruning.
 
 use super::cid::Cid;
+use crate::util::buf::Buf;
 use anyhow::Result;
 use std::collections::HashMap;
-use std::rc::Rc;
 
 /// Block storage keyed by CID. Every `put` verifies the hash; blocks are
-/// reference-counted (`Rc`) so Bitswap can serve them without copying.
+/// stored as reference-counted [`Buf`]s, so Bitswap serves them to N peers
+/// with refcount bumps instead of N copies, and a block received off the
+/// wire is retained as a slice of the receive buffer.
 pub struct Blockstore {
-    blocks: HashMap<Cid, Rc<Vec<u8>>>,
+    blocks: HashMap<Cid, Buf>,
     total_bytes: usize,
     /// Optional cap; inserting beyond it evicts in insertion order.
     pub capacity_bytes: Option<usize>,
@@ -32,20 +34,22 @@ impl Blockstore {
     }
 
     /// Store a block; returns its CID.
-    pub fn put(&mut self, data: Vec<u8>) -> Cid {
+    pub fn put(&mut self, data: impl Into<Buf>) -> Cid {
+        let data = data.into();
         let cid = Cid::of(&data);
         self.put_verified(cid, data).expect("hash just computed");
         cid
     }
 
     /// Store a block claimed to have `cid`; fails if the hash mismatches.
-    pub fn put_verified(&mut self, cid: Cid, data: Vec<u8>) -> Result<()> {
+    pub fn put_verified(&mut self, cid: Cid, data: impl Into<Buf>) -> Result<()> {
+        let data = data.into();
         anyhow::ensure!(cid.verify(&data), "block does not match CID {cid}");
         if self.blocks.contains_key(&cid) {
             return Ok(());
         }
         self.total_bytes += data.len();
-        self.blocks.insert(cid, Rc::new(data));
+        self.blocks.insert(cid, data);
         self.insertion_order.push(cid);
         if let Some(cap) = self.capacity_bytes {
             while self.total_bytes > cap && self.insertion_order.len() > 1 {
@@ -62,7 +66,8 @@ impl Blockstore {
         Ok(())
     }
 
-    pub fn get(&self, cid: &Cid) -> Option<Rc<Vec<u8>>> {
+    /// Fetch a block (reference-count bump, no copy).
+    pub fn get(&self, cid: &Cid) -> Option<Buf> {
         self.blocks.get(cid).cloned()
     }
 
@@ -103,9 +108,19 @@ mod tests {
         let mut bs = Blockstore::new();
         let cid = bs.put(b"hello world".to_vec());
         assert!(bs.has(&cid));
-        assert_eq!(&**bs.get(&cid).unwrap(), b"hello world");
+        assert_eq!(bs.get(&cid).unwrap(), b"hello world");
         assert_eq!(bs.len(), 1);
         assert_eq!(bs.total_bytes(), 11);
+    }
+
+    #[test]
+    fn get_is_refcounted_not_copied() {
+        let mut bs = Blockstore::new();
+        let cid = bs.put(vec![9u8; 1000]);
+        let a = bs.get(&cid).unwrap();
+        let b = bs.get(&cid).unwrap();
+        assert_eq!(a.ref_count(), 3, "store + two readers share one allocation");
+        assert_eq!(a, b);
     }
 
     #[test]

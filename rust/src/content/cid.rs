@@ -1,8 +1,8 @@
 //! Content identifiers: SHA-256 multihash of the block bytes.
 
+use crate::crypto::sha256::Sha256;
 use crate::util::hex;
 use anyhow::Result;
-use sha2::{Digest, Sha256};
 use std::fmt;
 
 /// A content identifier (multihash code 0x12, length 32).

@@ -4,9 +4,9 @@ use super::counter::{GCounter, PnCounter};
 use super::lww::LwwRegister;
 use super::orset::OrSet;
 use super::Crdt;
+use crate::crypto::sha256::Sha256;
 use crate::wire::{Message, PbReader, PbWriter};
 use anyhow::{bail, Result};
-use sha2::{Digest, Sha256};
 use std::collections::BTreeMap;
 
 /// A value in the store.

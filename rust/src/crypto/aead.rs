@@ -3,103 +3,74 @@
 //! Interface mirrors an AEAD (96-bit nonce, associated data, 16-byte tag).
 //! Used by the Noise transport ([`CipherState`]) with a counter nonce per
 //! direction, giving replay protection and in-order integrity.
+//!
+//! The hot path is the in-place pair [`seal_in_place`] / [`open_in_place`]:
+//! the transport builds a packet in one buffer and encrypts the frame
+//! section where it sits, so sealing adds no copy beyond the keystream XOR
+//! (see DESIGN.md §Buffer ownership).
 
+use super::aes128::Aes128;
 use crate::util::bytes::ct_eq;
-use aes::cipher::{KeyIvInit, StreamCipher};
 use anyhow::{bail, Result};
 
-type Aes128Ctr = ctr_impl::Ctr128BE;
+/// AES-128 in CTR mode with a big-endian 128-bit counter.
+struct Ctr128 {
+    cipher: Aes128,
+    counter: [u8; 16],
+    keystream: [u8; 16],
+    /// Bytes of `keystream` already consumed (16 = exhausted).
+    used: usize,
+}
 
-mod ctr_impl {
-    //! AES-128 in CTR mode built from the block cipher (the `ctr` crate is
-    //! not vendored, so we implement the big-endian 128-bit counter mode).
-    use aes::cipher::{BlockEncrypt, KeyInit};
-    use aes::Aes128;
-
-    pub struct Ctr128BE {
-        cipher: Aes128,
-        counter: [u8; 16],
-        keystream: [u8; 16],
-        used: usize,
+impl Ctr128 {
+    fn new(key: &[u8; 16], iv: [u8; 16]) -> Ctr128 {
+        Ctr128 {
+            cipher: Aes128::new(key),
+            counter: iv,
+            keystream: [0u8; 16],
+            used: 16,
+        }
     }
 
-    impl aes::cipher::KeyIvInit for Ctr128BE {
-        fn new(key: &aes::cipher::Key<Self>, iv: &aes::cipher::Iv<Self>) -> Self {
-            let mut counter = [0u8; 16];
-            counter.copy_from_slice(iv);
-            Ctr128BE {
-                cipher: Aes128::new(key),
-                counter,
-                keystream: [0u8; 16],
-                used: 16,
+    fn refill(&mut self) {
+        self.keystream = self.counter;
+        self.cipher.encrypt_block(&mut self.keystream);
+        self.used = 0;
+        // Increment the 128-bit big-endian counter.
+        for i in (0..16).rev() {
+            self.counter[i] = self.counter[i].wrapping_add(1);
+            if self.counter[i] != 0 {
+                break;
             }
         }
     }
 
-    impl aes::cipher::AlgorithmName for Ctr128BE {
-        fn write_alg_name(f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
-            f.write_str("AES-128-CTR-BE")
+    fn apply_keystream(&mut self, data: &mut [u8]) {
+        let mut i = 0usize;
+        // Finish a partially used keystream block.
+        while self.used < 16 && i < data.len() {
+            data[i] ^= self.keystream[self.used];
+            self.used += 1;
+            i += 1;
         }
-    }
-
-    impl aes::cipher::IvSizeUser for Ctr128BE {
-        type IvSize = aes::cipher::consts::U16;
-    }
-
-    impl aes::cipher::KeySizeUser for Ctr128BE {
-        type KeySize = aes::cipher::consts::U16;
-    }
-
-    impl Ctr128BE {
-        fn refill(&mut self) {
-            let mut block = aes::cipher::generic_array::GenericArray::clone_from_slice(&self.counter);
-            self.cipher.encrypt_block(&mut block);
-            self.keystream.copy_from_slice(&block);
-            self.used = 0;
-            // Increment 128-bit big-endian counter.
-            for i in (0..16).rev() {
-                self.counter[i] = self.counter[i].wrapping_add(1);
-                if self.counter[i] != 0 {
-                    break;
-                }
-            }
+        // Whole blocks: generate keystream per 16 B and XOR as u128.
+        while data.len() - i >= 16 {
+            self.refill();
+            self.used = 16;
+            let ks = u128::from_le_bytes(self.keystream);
+            let chunk: &mut [u8] = &mut data[i..i + 16];
+            let v = u128::from_le_bytes(chunk.try_into().unwrap()) ^ ks;
+            chunk.copy_from_slice(&v.to_le_bytes());
+            i += 16;
         }
-    }
-
-    impl aes::cipher::StreamCipher for Ctr128BE {
-        fn try_apply_keystream_inout(
-            &mut self,
-            mut buf: aes::cipher::inout::InOutBuf<'_, '_, u8>,
-        ) -> Result<(), aes::cipher::StreamCipherError> {
-            let data = buf.get_out();
-            let mut i = 0usize;
-            // Finish a partially used keystream block.
-            while self.used < 16 && i < data.len() {
+        // Tail.
+        if i < data.len() {
+            self.refill();
+            while i < data.len() {
                 data[i] ^= self.keystream[self.used];
                 self.used += 1;
                 i += 1;
             }
-            // Whole blocks: generate keystream per 16B and XOR as u128.
-            while data.len() - i >= 16 {
-                self.refill();
-                self.used = 16;
-                let ks = u128::from_le_bytes(self.keystream);
-                let chunk: &mut [u8] = &mut data[i..i + 16];
-                let v = u128::from_le_bytes(chunk.try_into().unwrap()) ^ ks;
-                chunk.copy_from_slice(&v.to_le_bytes());
-                i += 16;
-            }
-            // Tail.
-            if i < data.len() {
-                self.refill();
-                self.used = 0;
-                while i < data.len() {
-                    data[i] ^= self.keystream[self.used];
-                    self.used += 1;
-                    i += 1;
-                }
-            }
-            Ok(())
         }
     }
 }
@@ -107,47 +78,72 @@ mod ctr_impl {
 /// Tag length in bytes.
 pub const TAG_LEN: usize = 16;
 
+fn ctr_for(key_enc: &[u8], nonce: &[u8; 12]) -> Ctr128 {
+    let mut iv = [0u8; 16];
+    iv[..12].copy_from_slice(nonce);
+    let mut ek = [0u8; 16];
+    ek.copy_from_slice(key_enc);
+    Ctr128::new(&ek, iv)
+}
+
+/// Encrypt `buf[from..]` in place with `key` (32 bytes: 16 enc || 16 mac)
+/// and append the 16-byte tag. The caller's buffer becomes ciphertext || tag
+/// with no intermediate allocation.
+pub fn seal_in_place(key: &[u8; 32], nonce: &[u8; 12], ad: &[u8], buf: &mut Vec<u8>, from: usize) {
+    debug_assert!(from <= buf.len());
+    let (ek, mk) = key.split_at(16);
+    ctr_for(ek, nonce).apply_keystream(&mut buf[from..]);
+    let tag = mac(mk, nonce, ad, &buf[from..]);
+    buf.extend_from_slice(&tag[..TAG_LEN]);
+}
+
+/// Verify and decrypt a ciphertext || tag slice in place; returns the
+/// plaintext length (`buf.len() - TAG_LEN`). Fails on MAC mismatch (buffer
+/// left unmodified). The caller narrows its view to the returned length.
+pub fn open_in_place_slice(key: &[u8; 32], nonce: &[u8; 12], ad: &[u8], buf: &mut [u8]) -> Result<usize> {
+    if buf.len() < TAG_LEN {
+        bail!("ciphertext shorter than tag");
+    }
+    let ct_len = buf.len() - TAG_LEN;
+    let (ek, mk) = key.split_at(16);
+    let (ct, tag) = buf.split_at_mut(ct_len);
+    let want = mac(mk, nonce, ad, ct);
+    if !ct_eq(&want[..TAG_LEN], tag) {
+        bail!("authentication tag mismatch");
+    }
+    ctr_for(ek, nonce).apply_keystream(ct);
+    Ok(ct_len)
+}
+
+/// Verify and decrypt `buf[from..]` (ciphertext || tag) in place. On success
+/// the buffer is truncated to end at the plaintext. Fails on MAC mismatch
+/// (buffer left unmodified).
+pub fn open_in_place(key: &[u8; 32], nonce: &[u8; 12], ad: &[u8], buf: &mut Vec<u8>, from: usize) -> Result<()> {
+    debug_assert!(from <= buf.len());
+    let n = open_in_place_slice(key, nonce, ad, &mut buf[from..])?;
+    buf.truncate(from + n);
+    Ok(())
+}
+
 /// Encrypt `plaintext` with `key` (32 bytes: 16 enc || 16 mac), 12-byte
 /// nonce, and associated data. Output is ciphertext || tag.
 pub fn seal(key: &[u8; 32], nonce: &[u8; 12], ad: &[u8], plaintext: &[u8]) -> Vec<u8> {
-    let (ek, mk) = key.split_at(16);
-    let mut iv = [0u8; 16];
-    iv[..12].copy_from_slice(nonce);
-    let mut out = plaintext.to_vec();
-    let mut c = Aes128Ctr::new(ek.into(), &iv.into());
-    c.apply_keystream(&mut out);
-    let tag = mac(mk, nonce, ad, &out);
-    out.extend_from_slice(&tag[..TAG_LEN]);
+    let mut out = Vec::with_capacity(plaintext.len() + TAG_LEN);
+    out.extend_from_slice(plaintext);
+    seal_in_place(key, nonce, ad, &mut out, 0);
     out
 }
 
 /// Open ciphertext || tag. Fails on MAC mismatch.
 pub fn open(key: &[u8; 32], nonce: &[u8; 12], ad: &[u8], sealed: &[u8]) -> Result<Vec<u8>> {
-    if sealed.len() < TAG_LEN {
-        bail!("ciphertext shorter than tag");
-    }
-    let (ct, tag) = sealed.split_at(sealed.len() - TAG_LEN);
-    let (ek, mk) = key.split_at(16);
-    let want = mac(mk, nonce, ad, ct);
-    if !ct_eq(&want[..TAG_LEN], tag) {
-        bail!("authentication tag mismatch");
-    }
-    let mut iv = [0u8; 16];
-    iv[..12].copy_from_slice(nonce);
-    let mut out = ct.to_vec();
-    let mut c = Aes128Ctr::new(ek.into(), &iv.into());
-    c.apply_keystream(&mut out);
-    Ok(out)
+    let mut buf = sealed.to_vec();
+    open_in_place(key, nonce, ad, &mut buf, 0)?;
+    Ok(buf)
 }
 
 fn mac(mk: &[u8], nonce: &[u8; 12], ad: &[u8], ct: &[u8]) -> [u8; 32] {
     // MAC over len(ad) || ad || nonce || ct to prevent boundary ambiguity.
-    let mut data = Vec::with_capacity(8 + ad.len() + 12 + ct.len());
-    data.extend_from_slice(&(ad.len() as u64).to_be_bytes());
-    data.extend_from_slice(ad);
-    data.extend_from_slice(nonce);
-    data.extend_from_slice(ct);
-    super::hkdf::hmac_sha256(mk, &data)
+    super::hkdf::hmac_sha256_parts(mk, &[&(ad.len() as u64).to_be_bytes(), ad, nonce, ct])
 }
 
 /// Per-direction transport cipher with a counter nonce (Noise CipherState).
@@ -188,6 +184,7 @@ impl CipherState {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::hex;
 
     #[test]
     fn seal_open_roundtrip() {
@@ -197,6 +194,61 @@ mod tests {
         assert_eq!(sealed.len(), 11 + TAG_LEN);
         let opened = open(&key, &nonce, b"ad", &sealed).unwrap();
         assert_eq!(opened, b"hello world");
+    }
+
+    #[test]
+    fn known_answer_vector() {
+        // Cross-checked against an independent AES-128-CTR + HMAC-SHA256
+        // implementation (keys 00..1f, nonce 00..0b).
+        let key: [u8; 32] = core::array::from_fn(|i| i as u8);
+        let nonce: [u8; 12] = core::array::from_fn(|i| i as u8);
+        let sealed = seal(&key, &nonce, b"ad", b"hello world, hello lattica!!");
+        assert_eq!(
+            hex::encode(&sealed),
+            "9e0210fb9da0b26ecd135ffccbc8cac52f34bbcd4c01d0d7e9f65f8200ad415bfd1e89b2b6e84ecc4cc51dbb"
+        );
+    }
+
+    #[test]
+    fn ctr_keystream_vector() {
+        // Keystream = AES-128(counter) with a big-endian counter starting at
+        // nonce || 0^4; checked against an independent implementation.
+        let key: [u8; 16] = core::array::from_fn(|i| i as u8);
+        let nonce: [u8; 12] = core::array::from_fn(|i| i as u8);
+        let mut data = vec![0u8; 33];
+        ctr_for(&key, &nonce).apply_keystream(&mut data);
+        assert_eq!(
+            hex::encode(&data),
+            "f6677c97f280c501bf7f3bd0eba0afa9435b9ba12d75a4be8a977ea3cd01189093"
+        );
+    }
+
+    #[test]
+    fn in_place_matches_copying_api() {
+        let key = [9u8; 32];
+        let nonce = [3u8; 12];
+        let pt: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        // Seal in place after a 7-byte header; the header is the AD.
+        let header = b"pkt-hdr";
+        let mut buf = header.to_vec();
+        buf.extend_from_slice(&pt);
+        seal_in_place(&key, &nonce, header, &mut buf, header.len());
+        assert_eq!(&buf[header.len()..], &seal(&key, &nonce, header, &pt)[..]);
+        // Open in place restores the plaintext.
+        open_in_place(&key, &nonce, header, &mut buf, header.len()).unwrap();
+        assert_eq!(&buf[..header.len()], header);
+        assert_eq!(&buf[header.len()..], &pt[..]);
+    }
+
+    #[test]
+    fn open_in_place_rejects_tamper_without_modifying() {
+        let key = [5u8; 32];
+        let nonce = [0u8; 12];
+        let mut buf = seal(&key, &nonce, b"", b"payload");
+        buf[0] ^= 1;
+        let before = buf.clone();
+        assert!(open_in_place(&key, &nonce, b"", &mut buf, 0).is_err());
+        assert_eq!(buf, before, "failed open must not modify the buffer");
     }
 
     #[test]

@@ -1,18 +1,44 @@
-//! HKDF-SHA256 (RFC 5869) built on the `hmac` + `sha2` crates.
+//! HMAC-SHA256 (RFC 2104) and HKDF-SHA256 (RFC 5869), built on the in-tree
+//! [`super::sha256`] implementation.
 
-use hmac::{Hmac, Mac};
-use sha2::Sha256;
+use super::sha256::Sha256;
 
-type HmacSha256 = Hmac<Sha256>;
+const BLOCK: usize = 64;
+
+fn hmac_pads(key: &[u8]) -> ([u8; BLOCK], [u8; BLOCK]) {
+    let mut k = [0u8; BLOCK];
+    if key.len() > BLOCK {
+        k[..32].copy_from_slice(&super::sha256::digest(key));
+    } else {
+        k[..key.len()].copy_from_slice(key);
+    }
+    let mut ipad = [0x36u8; BLOCK];
+    let mut opad = [0x5cu8; BLOCK];
+    for i in 0..BLOCK {
+        ipad[i] ^= k[i];
+        opad[i] ^= k[i];
+    }
+    (ipad, opad)
+}
+
+/// HMAC-SHA256 over the concatenation of `parts` (no intermediate copy).
+pub fn hmac_sha256_parts(key: &[u8], parts: &[&[u8]]) -> [u8; 32] {
+    let (ipad, opad) = hmac_pads(key);
+    let mut inner = Sha256::new();
+    inner.update(ipad);
+    for p in parts {
+        inner.update(p);
+    }
+    let inner = inner.finalize();
+    let mut outer = Sha256::new();
+    outer.update(opad);
+    outer.update(inner);
+    outer.finalize()
+}
 
 /// HMAC-SHA256 convenience.
 pub fn hmac_sha256(key: &[u8], data: &[u8]) -> [u8; 32] {
-    let mut mac = HmacSha256::new_from_slice(key).expect("hmac accepts any key length");
-    mac.update(data);
-    let out = mac.finalize().into_bytes();
-    let mut a = [0u8; 32];
-    a.copy_from_slice(&out);
-    a
+    hmac_sha256_parts(key, &[data])
 }
 
 /// HKDF-Extract.
@@ -23,17 +49,17 @@ pub fn extract(salt: &[u8], ikm: &[u8]) -> [u8; 32] {
 /// HKDF-Expand to `out.len()` bytes (≤ 255*32).
 pub fn expand(prk: &[u8; 32], info: &[u8], out: &mut [u8]) {
     assert!(out.len() <= 255 * 32);
-    let mut t: Vec<u8> = Vec::new();
+    let mut prev = [0u8; 32];
+    let mut have_prev = false;
     let mut pos = 0;
     let mut counter = 1u8;
     while pos < out.len() {
-        let mut mac = HmacSha256::new_from_slice(prk).unwrap();
-        mac.update(&t);
-        mac.update(info);
-        mac.update(&[counter]);
-        t = mac.finalize().into_bytes().to_vec();
+        let t: &[u8] = if have_prev { &prev } else { &[] };
+        let block = hmac_sha256_parts(prk, &[t, info, &[counter]]);
+        prev = block;
+        have_prev = true;
         let n = (out.len() - pos).min(32);
-        out[pos..pos + n].copy_from_slice(&t[..n]);
+        out[pos..pos + n].copy_from_slice(&prev[..n]);
         pos += n;
         counter += 1;
     }
@@ -61,6 +87,29 @@ pub fn hkdf2(chaining_key: &[u8; 32], ikm: &[u8]) -> ([u8; 32], [u8; 32]) {
 mod tests {
     use super::*;
     use crate::util::hex;
+
+    #[test]
+    fn hmac_known_vector() {
+        // hmac_sha256(key="key", data="abc"), cross-checked with hashlib.
+        assert_eq!(
+            hex::encode(&hmac_sha256(b"key", b"abc")),
+            "9c196e32dc0175f86f4b1cb89289d6619de6bee699e4c378e68309ed97a1a6ab"
+        );
+    }
+
+    #[test]
+    fn hmac_parts_equal_concat() {
+        let key = b"some-key";
+        let whole = hmac_sha256(key, b"abcdefghij");
+        let parts = hmac_sha256_parts(key, &[b"abc", b"", b"defg", b"hij"]);
+        assert_eq!(whole, parts);
+        // Long keys are hashed first.
+        let long_key = vec![7u8; 100];
+        assert_eq!(
+            hmac_sha256(&long_key, b"x"),
+            hmac_sha256_parts(&long_key, &[b"x"])
+        );
+    }
 
     #[test]
     fn rfc5869_case_1() {

@@ -7,9 +7,14 @@
 //!
 //! * [`x25519`] — RFC 7748 Curve25519 Diffie–Hellman (from scratch, 51-bit
 //!   limb field arithmetic, Montgomery ladder).
-//! * [`hkdf`] — HKDF-SHA256 (RFC 5869) over the `hmac`/`sha2` crates.
+//! * [`sha256`] — FIPS 180-4 SHA-256 (from scratch; validated against the
+//!   NIST vectors).
+//! * [`aes128`] — FIPS 197 AES-128 block encryption (from scratch; validated
+//!   against the FIPS appendix vectors).
+//! * [`hkdf`] — HMAC-SHA256 and HKDF-SHA256 (RFC 5869) over [`sha256`].
 //! * [`aead`] — AES-128-CTR + HMAC-SHA256 encrypt-then-MAC AEAD with a
-//!   Poly1305-style interface (nonce, associated data, 16-byte tag).
+//!   Poly1305-style interface (nonce, associated data, 16-byte tag) and
+//!   in-place seal/open for the zero-copy packet path.
 //! * [`noise`] — a Noise-XX-shaped 3-message handshake providing mutual
 //!   static-key authentication and forward secrecy, producing a pair of
 //!   [`aead::CipherState`]s for transport encryption.
@@ -18,6 +23,8 @@
 //! [`crate::identity`]; channel authentication binds static x25519 keys.
 
 pub mod x25519;
+pub mod sha256;
+pub mod aes128;
 pub mod hkdf;
 pub mod aead;
 pub mod noise;

@@ -16,9 +16,9 @@
 
 use super::aead::{self, CipherState};
 use super::hkdf;
+use super::sha256::Sha256;
 use super::x25519::{PublicKey, StaticSecret};
 use anyhow::{bail, Context, Result};
-use sha2::{Digest, Sha256};
 
 const PROTOCOL_NAME: &[u8] = b"Noise_XX_25519_AESCTRHMAC_SHA256/lattica";
 

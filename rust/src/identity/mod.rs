@@ -12,10 +12,10 @@
 //! security notes in DESIGN.md §3 cover why this preserves the evaluated
 //! behaviour (integrity + attribution among connected, handshaked peers).
 
+use crate::crypto::sha256::Sha256;
 use crate::crypto::{PublicKey, StaticSecret};
 use crate::util::hex;
 use anyhow::Result;
-use sha2::{Digest, Sha256};
 use std::fmt;
 
 /// SHA-256 multihash prefix: code 0x12, length 32.

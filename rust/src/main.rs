@@ -34,7 +34,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         Some("selftest") => {
-            let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            let client = lattica::runtime::pjrt::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
             println!(
                 "PJRT ok: platform={} devices={}",
                 client.platform_name(),

@@ -403,7 +403,7 @@ impl LatticaNode {
             }
             SwarmEvent::DialFailed { cid, reason } => {
                 self.rpc.on_conn_closed(cid);
-                log::debug!("dial failed: {reason}");
+                crate::log_debug!("dial failed: {reason}");
             }
             SwarmEvent::InboundStream { .. } => {
                 // Streams materialize on first message; nothing to do here.
@@ -421,7 +421,7 @@ impl LatticaNode {
         }
     }
 
-    fn dispatch_stream_msg(&mut self, net: &mut Net, cid: u64, stream: u64, msg: Vec<u8>) {
+    fn dispatch_stream_msg(&mut self, net: &mut Net, cid: u64, stream: u64, msg: crate::util::Buf) {
         let Some(peer) = self.swarm.connection_peer(cid) else { return };
         let proto = self
             .swarm
@@ -463,12 +463,12 @@ impl LatticaNode {
             // CRDT anti-entropy (see crdt_sync below).
             CRDT_PROTO => self.handle_crdt_msg(net, peer, cid, stream, &msg),
             other => {
-                log::debug!("unrouted protocol {other:?}");
+                crate::log_debug!("unrouted protocol {other:?}");
                 Ok(())
             }
         };
         if let Err(e) = res {
-            log::debug!("protocol {proto} error from {peer}: {e}");
+            crate::log_debug!("protocol {proto} error from {peer}: {e}");
         }
     }
 

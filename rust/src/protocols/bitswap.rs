@@ -10,7 +10,8 @@ use super::Ctx;
 use crate::content::{Blockstore, Cid};
 use crate::identity::PeerId;
 use crate::netsim::{Time, SECOND};
-use crate::wire::{Message, PbReader, PbWriter};
+use crate::util::buf::Buf;
+use crate::wire::{encode_pooled, Message, PbReader, PbWriter};
 use anyhow::Result;
 use std::collections::{HashMap, HashSet, VecDeque};
 
@@ -29,8 +30,10 @@ const M_CANCEL: u64 = 5;
 pub struct BitswapMsg {
     pub kind: u64,
     pub cids: Vec<Cid>,
-    /// BLOCK: payload (one per message keeps frames small).
-    pub block: Vec<u8>,
+    /// BLOCK: payload (one per message keeps frames small). Shared
+    /// zero-copy with the blockstore — serving a block to N peers bumps a
+    /// reference count N times instead of cloning the bytes.
+    pub block: Buf,
 }
 
 impl Message for BitswapMsg {
@@ -48,7 +51,26 @@ impl Message for BitswapMsg {
             match f.number {
                 1 => m.kind = f.as_u64(),
                 2 => m.cids.push(Cid::from_bytes(f.as_bytes()?)?),
-                3 => m.block = f.as_bytes()?.to_vec(),
+                3 => m.block = Buf::copy_from_slice(f.as_bytes()?),
+                _ => {}
+            }
+            Ok(())
+        })?;
+        Ok(m)
+    }
+
+    /// Zero-copy decode: the block becomes a slice of `buf`, which the
+    /// blockstore can retain without another copy.
+    fn decode_buf(buf: &Buf) -> Result<BitswapMsg> {
+        let mut m = BitswapMsg::default();
+        PbReader::new(buf.as_slice()).for_each(|f| {
+            match f.number {
+                1 => m.kind = f.as_u64(),
+                2 => m.cids.push(Cid::from_bytes(f.as_bytes()?)?),
+                3 => {
+                    f.as_bytes()?; // wire-type check
+                    m.block = buf.slice(f.data_start..f.data_start + f.data.len());
+                }
                 _ => {}
             }
             Ok(())
@@ -227,9 +249,9 @@ impl Bitswap {
                     let msg = BitswapMsg {
                         kind: M_WANT,
                         cids,
-                        block: Vec::new(),
+                        block: Buf::new(),
                     };
-                    let _ = ctx.send(cid, stream, &msg.encode());
+                    let _ = encode_pooled(&msg, |b| ctx.send(cid, stream, b));
                 }
                 Err(_) => {
                     // Not connected (yet): roll the asks back so the next
@@ -251,7 +273,8 @@ impl Bitswap {
         }
     }
 
-    /// Node hook: message on a bitswap stream.
+    /// Node hook: message on a bitswap stream. Blocks are sliced zero-copy
+    /// out of `msg` and stored without another copy.
     pub fn handle_msg(
         &mut self,
         ctx: &mut Ctx,
@@ -259,32 +282,34 @@ impl Bitswap {
         peer: PeerId,
         conn: u64,
         stream: u64,
-        msg: &[u8],
+        msg: &Buf,
     ) -> Result<()> {
         // Remember the stream for replies.
         self.streams.entry(peer).or_insert((conn, stream));
-        let m = BitswapMsg::decode(msg)?;
+        let m = BitswapMsg::decode_buf(msg)?;
         match m.kind {
             M_WANT => {
                 for c in m.cids {
                     match store.get(&c) {
                         Some(block) => {
+                            // Serving N peers bumps the refcount N times;
+                            // the block bytes are never cloned.
+                            self.ledgers.entry(peer).or_default().bytes_sent +=
+                                block.len() as u64;
                             let reply = BitswapMsg {
                                 kind: M_BLOCK,
                                 cids: vec![c],
-                                block: (*block).clone(),
+                                block,
                             };
-                            self.ledgers.entry(peer).or_default().bytes_sent +=
-                                block.len() as u64;
-                            let _ = ctx.send(conn, stream, &reply.encode());
+                            let _ = ctx.send_buf(conn, stream, reply.encode_buf());
                         }
                         None => {
                             let reply = BitswapMsg {
                                 kind: M_DONT_HAVE,
                                 cids: vec![c],
-                                block: Vec::new(),
+                                block: Buf::new(),
                             };
-                            let _ = ctx.send(conn, stream, &reply.encode());
+                            let _ = encode_pooled(&reply, |b| ctx.send(conn, stream, b));
                         }
                     }
                 }
@@ -292,7 +317,7 @@ impl Bitswap {
             M_BLOCK => {
                 let Some(&c) = m.cids.first() else { return Ok(()) };
                 if store.put_verified(c, m.block.clone()).is_err() {
-                    log::warn!("peer {peer} sent corrupt block for {c}");
+                    crate::log_warn!("peer {peer} sent corrupt block for {c}");
                     return Ok(());
                 }
                 self.ledgers.entry(peer).or_default().bytes_received += m.block.len() as u64;
@@ -400,15 +425,28 @@ mod tests {
         let m = BitswapMsg {
             kind: M_WANT,
             cids: vec![Cid::of(b"a"), Cid::of(b"b")],
-            block: vec![],
+            block: Buf::new(),
         };
         assert_eq!(BitswapMsg::decode(&m.encode()).unwrap(), m);
         let m = BitswapMsg {
             kind: M_BLOCK,
             cids: vec![Cid::of(b"xyz")],
-            block: b"xyz".to_vec(),
+            block: b"xyz".into(),
         };
         assert_eq!(BitswapMsg::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn decode_buf_block_is_zero_copy() {
+        let m = BitswapMsg {
+            kind: M_BLOCK,
+            cids: vec![Cid::of(b"big")],
+            block: vec![6u8; 64 * 1024].into(),
+        };
+        let wire = m.encode_buf();
+        let d = BitswapMsg::decode_buf(&wire).unwrap();
+        assert_eq!(d, m);
+        assert_eq!(wire.ref_count(), 2, "block shares the wire buffer");
     }
 
     #[test]

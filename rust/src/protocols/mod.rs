@@ -42,8 +42,14 @@ impl<'a> Ctx<'a> {
         self.swarm.open_stream(self.net, peer, proto)
     }
 
+    /// Send a message (copied into the stream framing).
     pub fn send(&mut self, cid: u64, stream: u64, msg: &[u8]) -> anyhow::Result<()> {
         self.swarm.send_msg(self.net, cid, stream, msg)
+    }
+
+    /// Send an owned message; large payloads ride zero-copy to the packetizer.
+    pub fn send_buf(&mut self, cid: u64, stream: u64, msg: crate::util::Buf) -> anyhow::Result<()> {
+        self.swarm.send_msg_buf(self.net, cid, stream, msg)
     }
 
     pub fn finish(&mut self, cid: u64, stream: u64) {

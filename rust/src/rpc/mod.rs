@@ -12,9 +12,11 @@
 use crate::identity::PeerId;
 use crate::netsim::{Time, SECOND};
 use crate::protocols::Ctx;
-use crate::wire::{Message, PbReader, PbWriter};
+use crate::util::buf::Buf;
+use crate::wire::{encode_pooled, Message, PbReader, PbWriter};
 use anyhow::Result;
-use std::collections::{HashMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 pub const RPC_PROTO: &str = "/lattica/rpc/1";
 pub const RPC_STREAM_PROTO: &str = "/lattica/rpc-stream/1";
@@ -58,7 +60,9 @@ pub struct RpcMsg {
     pub kind: u64,
     pub service: String,
     pub method: String,
-    pub payload: Vec<u8>,
+    /// Payload bytes, shared zero-copy between the caller, the encoder and
+    /// (on receive) the transport's decrypted packet buffer.
+    pub payload: Buf,
     pub status: u64,
     /// STREAM_*: item sequence or credit count.
     pub seq: u64,
@@ -78,17 +82,58 @@ impl Message for RpcMsg {
         let mut m = RpcMsg::default();
         PbReader::new(buf).for_each(|f| {
             match f.number {
-                1 => m.kind = f.as_u64(),
-                2 => m.service = f.as_string()?,
-                3 => m.method = f.as_string()?,
-                4 => m.payload = f.as_bytes()?.to_vec(),
-                5 => m.status = f.as_u64(),
-                6 => m.seq = f.as_u64(),
-                _ => {}
+                4 => m.payload = Buf::copy_from_slice(f.as_bytes()?),
+                other => decode_common_field(&mut m, other, &f)?,
             }
             Ok(())
         })?;
         Ok(m)
+    }
+
+    /// Zero-copy decode: the payload becomes a slice of `buf` instead of a
+    /// fresh allocation (the per-call copy the paper's QPS table is most
+    /// sensitive to).
+    fn decode_buf(buf: &Buf) -> Result<RpcMsg> {
+        let mut m = RpcMsg::default();
+        PbReader::new(buf.as_slice()).for_each(|f| {
+            match f.number {
+                4 => {
+                    f.as_bytes()?; // wire-type check
+                    m.payload = buf.slice(f.data_start..f.data_start + f.data.len());
+                }
+                other => decode_common_field(&mut m, other, &f)?,
+            }
+            Ok(())
+        })?;
+        Ok(m)
+    }
+}
+
+/// Shared decode arms for every field except 4 (`payload`).
+fn decode_common_field(m: &mut RpcMsg, number: u32, f: &crate::wire::pb::Field<'_>) -> Result<()> {
+    match number {
+        1 => m.kind = f.as_u64(),
+        2 => m.service = f.as_string()?,
+        3 => m.method = f.as_string()?,
+        5 => m.status = f.as_u64(),
+        6 => m.seq = f.as_u64(),
+        _ => {}
+    }
+    Ok(())
+}
+
+/// Messages whose encoded form exceeds this ride the zero-copy send path
+/// (`Ctx::send_buf`); smaller ones use the pooled encoder + framing copy,
+/// which is cheaper than two queue entries.
+const LARGE_MSG: usize = 512;
+
+/// Encode and send an RPC message, choosing pooled-copy or shared-buffer
+/// transport according to payload size.
+fn send_rpc_msg(ctx: &mut Ctx, conn: u64, stream: u64, msg: &RpcMsg) -> Result<()> {
+    if msg.payload.len() > LARGE_MSG {
+        ctx.send_buf(conn, stream, msg.encode_buf())
+    } else {
+        encode_pooled(msg, |b| ctx.send(conn, stream, b))
     }
 }
 
@@ -113,14 +158,14 @@ pub enum RpcEvent {
         peer: PeerId,
         service: String,
         method: String,
-        payload: Vec<u8>,
+        payload: Buf,
         reply: ReplyHandle,
     },
     /// Client side: a unary call finished.
     Response {
         call_id: u64,
         status: Status,
-        payload: Vec<u8>,
+        payload: Buf,
         /// Round-trip time of this call.
         rtt: Time,
     },
@@ -136,7 +181,7 @@ pub enum RpcEvent {
     StreamItem {
         handle: StreamHandle,
         seq: u64,
-        payload: Vec<u8>,
+        payload: Buf,
     },
     /// Stream finished cleanly.
     StreamEnded { handle: StreamHandle },
@@ -156,7 +201,7 @@ struct StreamState {
     /// Items received since the last credit grant.
     recv_since_grant: u32,
     /// Outbound items waiting for credits.
-    backlog: VecDeque<Vec<u8>>,
+    backlog: VecDeque<Buf>,
     next_seq: u64,
     ended: bool,
 }
@@ -165,6 +210,11 @@ struct StreamState {
 pub struct RpcNode {
     /// (conn, stream) → pending unary call.
     calls: HashMap<(u64, u64), PendingCall>,
+    /// Min-heap of call deadlines: (deadline, conn, stream). Entries are
+    /// lazily invalidated — a popped entry whose call already completed (or
+    /// whose deadline no longer matches) is skipped — so `tick` is
+    /// O(expired · log n) instead of a linear scan of every pending call.
+    deadlines: BinaryHeap<Reverse<(Time, u64, u64)>>,
     next_call_id: u64,
     streams: HashMap<StreamHandle, StreamState>,
     events: VecDeque<RpcEvent>,
@@ -183,6 +233,7 @@ impl RpcNode {
     pub fn new() -> RpcNode {
         RpcNode {
             calls: HashMap::new(),
+            deadlines: BinaryHeap::new(),
             next_call_id: 1,
             streams: HashMap::new(),
             events: VecDeque::new(),
@@ -199,34 +250,38 @@ impl RpcNode {
     // Unary plane
     // ------------------------------------------------------------------
 
-    /// Issue a unary call to a connected peer. Returns the call id.
+    /// Issue a unary call to a connected peer. Returns the call id. The
+    /// payload is owned zero-copy: pass a `Vec<u8>` or [`Buf`] to avoid
+    /// copying (a `&[u8]` is copied once at this boundary).
     pub fn call(
         &mut self,
         ctx: &mut Ctx,
         peer: &PeerId,
         service: &str,
         method: &str,
-        payload: &[u8],
+        payload: impl Into<Buf>,
     ) -> Result<u64> {
         let (conn, stream) = ctx.open_stream(peer, RPC_PROTO)?;
         let msg = RpcMsg {
             kind: M_REQUEST,
             service: service.to_string(),
             method: method.to_string(),
-            payload: payload.to_vec(),
+            payload: payload.into(),
             ..Default::default()
         };
-        ctx.send(conn, stream, &msg.encode())?;
+        send_rpc_msg(ctx, conn, stream, &msg)?;
         let call_id = self.next_call_id;
         self.next_call_id += 1;
+        let deadline = ctx.now() + CALL_TIMEOUT;
         self.calls.insert(
             (conn, stream),
             PendingCall {
                 call_id,
-                deadline: ctx.now() + CALL_TIMEOUT,
+                deadline,
                 sent_at: ctx.now(),
             },
         );
+        self.deadlines.push(Reverse((deadline, conn, stream)));
         self.calls_sent += 1;
         Ok(call_id)
     }
@@ -237,15 +292,15 @@ impl RpcNode {
         ctx: &mut Ctx,
         reply: ReplyHandle,
         status: Status,
-        payload: &[u8],
+        payload: impl Into<Buf>,
     ) -> Result<()> {
         let msg = RpcMsg {
             kind: M_RESPONSE,
             status: status as u64,
-            payload: payload.to_vec(),
+            payload: payload.into(),
             ..Default::default()
         };
-        ctx.send(reply.conn, reply.stream, &msg.encode())?;
+        send_rpc_msg(ctx, reply.conn, reply.stream, &msg)?;
         ctx.finish(reply.conn, reply.stream);
         self.calls_served += 1;
         Ok(())
@@ -268,7 +323,7 @@ impl RpcNode {
             service: service.to_string(),
             ..Default::default()
         };
-        ctx.send(conn, stream, &msg.encode())?;
+        send_rpc_msg(ctx, conn, stream, &msg)?;
         let handle = StreamHandle { conn, stream };
         self.streams.insert(
             handle,
@@ -285,9 +340,11 @@ impl RpcNode {
 
     /// Send an item; queued if out of credits. Returns the backlog depth
     /// (the producer's backpressure signal — "writers monitor queue depth").
-    pub fn send_item(&mut self, ctx: &mut Ctx, handle: StreamHandle, payload: Vec<u8>) -> usize {
+    /// The payload is owned zero-copy end-to-end: a queued or sent item
+    /// shares the caller's buffer.
+    pub fn send_item(&mut self, ctx: &mut Ctx, handle: StreamHandle, payload: impl Into<Buf>) -> usize {
         let Some(s) = self.streams.get_mut(&handle) else { return 0 };
-        s.backlog.push_back(payload);
+        s.backlog.push_back(payload.into());
         Self::drain_backlog(ctx, handle, s);
         s.backlog.len()
     }
@@ -303,7 +360,7 @@ impl RpcNode {
             };
             s.next_seq += 1;
             s.send_credits -= 1;
-            let _ = ctx.send(handle.conn, handle.stream, &msg.encode());
+            let _ = send_rpc_msg(ctx, handle.conn, handle.stream, &msg);
         }
     }
 
@@ -316,7 +373,7 @@ impl RpcNode {
                     kind: M_STREAM_END,
                     ..Default::default()
                 };
-                let _ = ctx.send(handle.conn, handle.stream, &msg.encode());
+                let _ = send_rpc_msg(ctx, handle.conn, handle.stream, &msg);
                 ctx.finish(handle.conn, handle.stream);
             }
         }
@@ -331,16 +388,17 @@ impl RpcNode {
     // Node hooks
     // ------------------------------------------------------------------
 
-    /// Inbound message on an `/lattica/rpc/1` stream.
+    /// Inbound message on an `/lattica/rpc/1` stream. The payload is sliced
+    /// zero-copy out of `msg`.
     pub fn handle_unary_msg(
         &mut self,
         ctx: &mut Ctx,
         peer: PeerId,
         conn: u64,
         stream: u64,
-        msg: &[u8],
+        msg: &Buf,
     ) -> Result<()> {
-        let m = RpcMsg::decode(msg)?;
+        let m = RpcMsg::decode_buf(msg)?;
         match m.kind {
             M_REQUEST => {
                 self.events.push_back(RpcEvent::Request {
@@ -373,10 +431,10 @@ impl RpcNode {
         peer: PeerId,
         conn: u64,
         stream: u64,
-        msg: &[u8],
+        msg: &Buf,
     ) -> Result<()> {
         let handle = StreamHandle { conn, stream };
-        let m = RpcMsg::decode(msg)?;
+        let m = RpcMsg::decode_buf(msg)?;
         match m.kind {
             M_STREAM_OPEN => {
                 self.streams.insert(
@@ -412,7 +470,7 @@ impl RpcNode {
                             ..Default::default()
                         };
                         s.recv_since_grant = 0;
-                        let _ = ctx.send(conn, stream, &grant.encode());
+                        let _ = encode_pooled(&grant, |b| ctx.send(conn, stream, b));
                     }
                 }
             }
@@ -426,7 +484,7 @@ impl RpcNode {
                             kind: M_STREAM_END,
                             ..Default::default()
                         };
-                        let _ = ctx.send(conn, stream, &end.encode());
+                        let _ = encode_pooled(&end, |b| ctx.send(conn, stream, b));
                         ctx.finish(conn, stream);
                     } else if credits > 0 {
                         self.events.push_back(RpcEvent::CreditsAvailable {
@@ -445,18 +503,27 @@ impl RpcNode {
         Ok(())
     }
 
-    /// Tick: expire overdue calls.
+    /// Tick: expire overdue calls. Pops the deadline min-heap instead of
+    /// scanning every pending call; entries for completed calls are
+    /// discarded lazily.
     pub fn tick(&mut self, ctx: &mut Ctx) {
         let now = ctx.now();
-        let expired: Vec<(u64, u64)> = self
-            .calls
-            .iter()
-            .filter(|(_, c)| c.deadline <= now)
-            .map(|(k, _)| *k)
-            .collect();
-        for key in expired {
-            let call = self.calls.remove(&key).unwrap();
-            ctx.reset(key.0, key.1, "call timeout");
+        while let Some(&Reverse((deadline, conn, stream))) = self.deadlines.peek() {
+            if deadline > now {
+                break;
+            }
+            self.deadlines.pop();
+            // Stale heap entry: the call completed (or this slot was reused
+            // with a different deadline) — skip.
+            let live = self
+                .calls
+                .get(&(conn, stream))
+                .map_or(false, |c| c.deadline == deadline);
+            if !live {
+                continue;
+            }
+            let call = self.calls.remove(&(conn, stream)).unwrap();
+            ctx.reset(conn, stream, "call timeout");
             self.events.push_back(RpcEvent::CallFailed {
                 call_id: call.call_id,
                 reason: "timeout".into(),
@@ -506,11 +573,24 @@ mod tests {
             kind: M_REQUEST,
             service: "inference".into(),
             method: "forward".into(),
-            payload: vec![1, 2, 3],
+            payload: vec![1, 2, 3].into(),
             status: 0,
             seq: 9,
         };
         assert_eq!(RpcMsg::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn decode_buf_payload_is_zero_copy() {
+        let m = RpcMsg {
+            kind: M_RESPONSE,
+            payload: vec![0xA5u8; 4096].into(),
+            ..Default::default()
+        };
+        let wire = m.encode_buf();
+        let d = RpcMsg::decode_buf(&wire).unwrap();
+        assert_eq!(d, m);
+        assert_eq!(wire.ref_count(), 2, "payload shares the wire buffer");
     }
 
     #[test]

@@ -6,14 +6,15 @@
 //! time (see `shard`/`trainer`).
 
 use super::manifest::Manifest;
+use super::pjrt;
 use super::tensor::Tensor;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 
 pub struct Engine {
     pub manifest: Manifest,
-    client: xla::PjRtClient,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    client: pjrt::PjRtClient,
+    executables: HashMap<String, pjrt::PjRtLoadedExecutable>,
     /// Cumulative wall-clock spent executing, per artifact (profiling).
     pub exec_nanos: HashMap<String, u64>,
     pub exec_counts: HashMap<String, u64>,
@@ -24,14 +25,14 @@ impl Engine {
     pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
         let manifest = Manifest::load(dir)?;
         let client =
-            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt client: {e:?}"))?;
+            pjrt::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt client: {e:?}"))?;
         let mut executables = HashMap::new();
         for (name, spec) in &manifest.artifacts {
-            let proto = xla::HloModuleProto::from_text_file(
+            let proto = pjrt::HloModuleProto::from_text_file(
                 spec.path.to_str().context("artifact path not utf-8")?,
             )
             .map_err(|e| anyhow::anyhow!("parsing {name}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
+            let comp = pjrt::XlaComputation::from_proto(&proto);
             let exe = client
                 .compile(&comp)
                 .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
@@ -79,12 +80,12 @@ impl Engine {
         }
         let exe = self.executables.get(name).unwrap();
         let start = std::time::Instant::now();
-        let lits: Vec<xla::Literal> = inputs
+        let lits: Vec<pjrt::Literal> = inputs
             .iter()
             .map(|t| t.to_literal())
             .collect::<Result<_>>()?;
         let result = exe
-            .execute::<xla::Literal>(&lits)
+            .execute::<pjrt::Literal>(&lits)
             .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
         let out_lit = result[0][0]
             .to_literal_sync()

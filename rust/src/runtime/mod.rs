@@ -7,8 +7,11 @@
 //!
 //! [`Tensor`] is the in-network representation of array data (it is what
 //! travels inside content blocks and RPC messages); conversions to/from
-//! `xla::Literal` happen only at the execution boundary.
+//! [`pjrt::Literal`] happen only at the execution boundary. The `pjrt`
+//! module is a host-side facade: literals are fully functional, while
+//! compile/execute report unavailability until an XLA runtime is vendored.
 
+pub mod pjrt;
 pub mod tensor;
 pub mod manifest;
 pub mod engine;

@@ -1,0 +1,235 @@
+//! Host-side PJRT facade.
+//!
+//! The offline build has no XLA/PJRT runtime, so this module provides the
+//! same API shape the engine codes against: [`Literal`] is a fully
+//! functional host tensor container (used by [`super::tensor::Tensor`] for
+//! conversions), while compilation/execution entry points return a runtime
+//! error. Artifacts are absent in this environment, so `Engine::load` fails
+//! cleanly before any execution is attempted; when a real PJRT backend is
+//! vendored it can replace this module without touching the engine.
+
+use std::fmt;
+
+/// Error type mirroring the PJRT binding's debug-printable errors.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PjRtError({})", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+fn unavailable<T>(what: &str) -> Result<T, Error> {
+    Err(Error(format!(
+        "{what}: XLA/PJRT runtime not available in this offline build"
+    )))
+}
+
+/// Element types the engine exchanges with the runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    F64,
+    S64,
+    U8,
+    Pred,
+}
+
+/// Marker for element types storable in a [`Literal`].
+pub trait Element: Copy {
+    const TY: ElementType;
+    fn write_le(&self, out: &mut Vec<u8>);
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl Element for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn write_le(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> f32 {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl Element for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn write_le(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> i32 {
+        i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+/// Array shape: element type + dimensions.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A host tensor (dense, little-endian 4-byte elements).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: Element>(values: &[T]) -> Literal {
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            v.write_le(&mut data);
+        }
+        Literal {
+            ty: T::TY,
+            dims: vec![values.len() as i64],
+            data,
+        }
+    }
+
+    /// Reshape without changing the element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let want: i64 = dims.iter().product();
+        let have: i64 = self.dims.iter().product();
+        if want != have {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?}: element count {} != {}",
+                self.dims, dims, have, want
+            )));
+        }
+        Ok(Literal {
+            ty: self.ty,
+            dims: dims.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        Ok(ArrayShape {
+            ty: self.ty,
+            dims: self.dims.clone(),
+        })
+    }
+
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>, Error> {
+        if self.ty != T::TY {
+            return Err(Error(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self.data.chunks_exact(4).map(T::read_le).collect())
+    }
+
+    /// Unpack a tuple literal (stub: execution never produces one offline).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        unavailable("to_tuple")
+    }
+}
+
+/// A compiled-module handle (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// A computation wrapping an HLO module (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle returned by execution (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A loaded executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// The PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_container_roundtrip() {
+        let lit = Literal::vec1(&[1.0f32, -2.5, 3.0, 0.0, 9.0, 4.5]);
+        let lit = lit.reshape(&[2, 3]).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.0, 0.0, 9.0, 4.5]);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert!(lit.reshape(&[5]).is_err());
+    }
+
+    #[test]
+    fn execution_unavailable_offline() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "cpu");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        assert!(client.compile(&XlaComputation).is_err());
+    }
+}

@@ -7,6 +7,7 @@
 //! [dtype: u8][rank: varint][dims: varint*...][data: raw little-endian]
 //! ```
 
+use super::pjrt;
 use crate::util::varint;
 use anyhow::{bail, Context, Result};
 
@@ -154,31 +155,31 @@ impl Tensor {
     }
 
     /// Convert to an XLA literal.
-    pub fn to_literal(&self) -> Result<xla::Literal> {
+    pub fn to_literal(&self) -> Result<pjrt::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match self.dtype {
             DType::F32 => {
                 let v = self.as_f32()?;
-                xla::Literal::vec1(&v)
+                pjrt::Literal::vec1(&v)
             }
             DType::I32 => {
                 let v = self.as_i32()?;
-                xla::Literal::vec1(&v)
+                pjrt::Literal::vec1(&v)
             }
         };
         lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
     }
 
     /// Convert from an XLA literal.
-    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    pub fn from_literal(lit: &pjrt::Literal) -> Result<Tensor> {
         let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("{e:?}"))?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
         match shape.ty() {
-            xla::ElementType::F32 => {
+            pjrt::ElementType::F32 => {
                 let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
                 Ok(Tensor::from_f32(&dims, &v))
             }
-            xla::ElementType::S32 => {
+            pjrt::ElementType::S32 => {
                 let v: Vec<i32> = lit.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
                 Ok(Tensor::from_i32(&dims, &v))
             }

@@ -116,7 +116,7 @@ impl App for EchoApp {
             NodeEvent::Rpc(RpcEvent::Request { service, reply, .. }) if service == "bench" => {
                 let mut ctx = Ctx::new(&mut node.swarm, net);
                 let body = vec![0xA5u8; self.response_size];
-                let _ = node.rpc.respond(&mut ctx, reply, Status::Ok, &body);
+                let _ = node.rpc.respond(&mut ctx, reply, Status::Ok, body);
                 None
             }
             other => Some(other),

@@ -181,7 +181,7 @@ impl App for ShardServer {
                 match method.as_str() {
                     "forward" => match ShardRequest::decode(&payload).and_then(|r| self.forward(&r)) {
                         Ok(out) => {
-                            let _ = node.rpc.respond(&mut ctx, reply, Status::Ok, &out.encode());
+                            let _ = node.rpc.respond(&mut ctx, reply, Status::Ok, out.encode());
                         }
                         Err(e) => {
                             let _ = node.rpc.respond(
@@ -274,7 +274,7 @@ impl PipelineClient {
         let mut ctx = Ctx::new(&mut node.swarm, net);
         let call_id = node
             .rpc
-            .call(&mut ctx, &peer, SHARD_SERVICE, "forward", &req.encode())?;
+            .call(&mut ctx, &peer, SHARD_SERVICE, "forward", req.encode())?;
         self.runs.insert(call_id, run);
         Ok(())
     }

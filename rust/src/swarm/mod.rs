@@ -20,6 +20,7 @@ use crate::netsim::{EndpointId, Net, Time, MILLI};
 use crate::transport::connection::{ConnEvent, Connection, ConnectionConfig, Role, RxInfo};
 use crate::transport::packet::Packet;
 use crate::transport::TransportProfile;
+use crate::util::buf::Buf;
 use crate::util::Rng;
 use crate::wire::Message;
 use anyhow::{bail, Context, Result};
@@ -63,11 +64,12 @@ pub enum SwarmEvent {
         stream: u64,
         proto: String,
     },
-    /// Message on a stream (either direction).
+    /// Message on a stream (either direction). The payload is a zero-copy
+    /// [`Buf`] view of the transport receive path.
     StreamMsg {
         cid: u64,
         stream: u64,
-        msg: Vec<u8>,
+        msg: Buf,
     },
     StreamFinished {
         cid: u64,
@@ -359,10 +361,19 @@ impl Swarm {
         Ok(stream)
     }
 
-    /// Send a message on a stream.
+    /// Send a message on a stream (copies into the stream framing).
     pub fn send_msg(&mut self, net: &mut Net, cid: u64, stream: u64, msg: &[u8]) -> Result<()> {
         let c = self.conns.get_mut(&cid).context("unknown connection")?;
         c.conn.send_msg(stream, msg)?;
+        self.flush_conn(net, cid);
+        Ok(())
+    }
+
+    /// Send an owned message on a stream; large messages are queued
+    /// zero-copy all the way to packetization.
+    pub fn send_msg_buf(&mut self, net: &mut Net, cid: u64, stream: u64, msg: Buf) -> Result<()> {
+        let c = self.conns.get_mut(&cid).context("unknown connection")?;
+        c.conn.send_msg_buf(stream, msg)?;
         self.flush_conn(net, cid);
         Ok(())
     }
@@ -501,9 +512,12 @@ impl Swarm {
     // Datagram input
     // ------------------------------------------------------------------
 
-    /// Feed a datagram from the simulator.
+    /// Feed a datagram from the simulator. The packet payload stays a
+    /// zero-copy slice of the datagram buffer — and, as the sole reference
+    /// to it, is decrypted in place by the connection.
     pub fn handle_datagram(&mut self, net: &mut Net, from: SimAddr, _to: SimAddr, payload: Vec<u8>) {
-        let Ok(pkt) = Packet::decode(&payload) else {
+        // The temporary wrapper drops here, so `pkt.payload` is unique.
+        let Ok(pkt) = Packet::decode_buf(&Buf::from_vec(payload)) else {
             return;
         };
         let cid = if pkt.dst_cid != 0 && self.conns.contains_key(&pkt.dst_cid) {
@@ -555,7 +569,7 @@ impl Swarm {
             match c.conn.handle_packet(net.now(), pkt) {
                 Ok(info) => info,
                 Err(e) => {
-                    log::debug!("conn {cid}: packet error: {e}");
+                    crate::log_debug!("conn {cid}: packet error: {e}");
                     RxInfo::default()
                 }
             }
@@ -689,7 +703,7 @@ impl Swarm {
                         .unwrap_or_default();
                     if proto == RELAY_PROTO {
                         if let Err(e) = self.handle_relay_msg(net, cid, stream_id, &msg) {
-                            log::debug!("relay msg error on conn {cid}: {e}");
+                            crate::log_debug!("relay msg error on conn {cid}: {e}");
                         }
                     } else {
                         self.events.push_back(SwarmEvent::StreamMsg {
@@ -781,8 +795,8 @@ impl Swarm {
         }
     }
 
-    fn handle_relay_msg(&mut self, net: &mut Net, cid: u64, stream: u64, msg: &[u8]) -> Result<()> {
-        let m = RelayMsg::decode(msg)?;
+    fn handle_relay_msg(&mut self, net: &mut Net, cid: u64, stream: u64, msg: &Buf) -> Result<()> {
+        let m = RelayMsg::decode_buf(msg)?;
         match m.kind {
             relay_msg::M_RESERVE => {
                 anyhow::ensure!(self.cfg.relay_enabled, "relaying disabled");
@@ -886,7 +900,7 @@ impl Swarm {
                     .conns
                     .get_mut(&cid)
                     .and_then(|c| c.pending_connects.pop_front());
-                log::debug!("circuit dial to {target:?} failed: {}", m.error);
+                crate::log_debug!("circuit dial to {target:?} failed: {}", m.error);
                 self.events.push_back(SwarmEvent::DialFailed {
                     cid,
                     reason: format!("relay: {}", m.error),
@@ -931,15 +945,16 @@ impl Swarm {
                     } else {
                         (circ.a_cid, circ.a_stream, circ.a_circuit_id)
                     };
-                    self.send_msg(
+                    self.send_msg_buf(
                         net,
                         o_cid,
                         o_stream,
-                        &RelayMsg::data(o_circ, m.payload).encode(),
+                        RelayMsg::data(o_circ, m.payload).encode_buf(),
                     )?;
                 } else if let Some(&inner_cid) = self.circuit_conns.get(&(cid, m.circuit)) {
-                    // Client side: feed the inner connection.
-                    let pkt = Packet::decode(&m.payload)?;
+                    // Client side: feed the inner connection (zero-copy view
+                    // of the relay message payload).
+                    let pkt = Packet::decode_buf(&m.payload)?;
                     let info = {
                         let c = self.conns.get_mut(&inner_cid).context("inner conn gone")?;
                         c.conn.handle_packet(net.now(), pkt).unwrap_or_default()
@@ -974,7 +989,7 @@ impl Swarm {
         let Ok(stream) = self.ensure_relay_ctrl(net, relay_cid) else {
             return;
         };
-        let _ = self.send_msg(net, relay_cid, stream, &RelayMsg::data(circuit, pkt).encode());
+        let _ = self.send_msg_buf(net, relay_cid, stream, RelayMsg::data(circuit, pkt).encode_buf());
     }
 
     // ------------------------------------------------------------------

@@ -8,6 +8,7 @@
 
 use crate::identity::PeerId;
 use crate::multiaddr::SimAddr;
+use crate::util::buf::Buf;
 use crate::wire::{Message, PbReader, PbWriter};
 use anyhow::{bail, Result};
 
@@ -29,8 +30,8 @@ pub struct RelayMsg {
     pub peer: Option<PeerId>,
     /// Circuit id (CONNECT_OK, INCOMING, DATA, CIRCUIT_CLOSED).
     pub circuit: u64,
-    /// DATA payload (an inner-connection packet).
-    pub payload: Vec<u8>,
+    /// DATA payload (an inner-connection packet), shared zero-copy.
+    pub payload: Buf,
     /// RESERVE_OK: the client's address as observed by the relay.
     pub observed_host: u32,
     pub observed_port: u32,
@@ -88,11 +89,11 @@ impl RelayMsg {
         }
     }
 
-    pub fn data(circuit: u64, payload: Vec<u8>) -> RelayMsg {
+    pub fn data(circuit: u64, payload: impl Into<Buf>) -> RelayMsg {
         RelayMsg {
             kind: M_DATA,
             circuit,
-            payload,
+            payload: payload.into(),
             ..Default::default()
         }
     }
@@ -128,28 +129,59 @@ impl Message for RelayMsg {
         let mut m = RelayMsg::default();
         PbReader::new(buf).for_each(|f| {
             match f.number {
-                1 => m.kind = f.as_u64(),
-                2 => {
-                    let b = f.as_bytes()?;
-                    anyhow::ensure!(b.len() == 32, "bad peer id length");
-                    let mut d = [0u8; 32];
-                    d.copy_from_slice(b);
-                    m.peer = Some(PeerId(d));
-                }
-                3 => m.circuit = f.as_u64(),
-                4 => m.payload = f.as_bytes()?.to_vec(),
-                5 => m.observed_host = f.as_u64() as u32,
-                6 => m.observed_port = f.as_u64() as u32,
-                7 => m.error = f.as_string()?,
-                _ => {}
+                4 => m.payload = Buf::copy_from_slice(f.as_bytes()?),
+                other => decode_common_field(&mut m, other, &f)?,
             }
             Ok(())
         })?;
-        if m.kind == 0 || m.kind > M_CIRCUIT_CLOSED {
-            bail!("invalid relay message kind {}", m.kind);
-        }
+        check_kind(&m)?;
         Ok(m)
     }
+
+    /// Zero-copy decode: the DATA payload becomes a slice of `buf` (the
+    /// relay data path forwards packets without copying them out).
+    fn decode_buf(buf: &Buf) -> Result<RelayMsg> {
+        let mut m = RelayMsg::default();
+        PbReader::new(buf.as_slice()).for_each(|f| {
+            match f.number {
+                4 => {
+                    f.as_bytes()?; // wire-type check
+                    m.payload = buf.slice(f.data_start..f.data_start + f.data.len());
+                }
+                other => decode_common_field(&mut m, other, &f)?,
+            }
+            Ok(())
+        })?;
+        check_kind(&m)?;
+        Ok(m)
+    }
+}
+
+/// Shared decode arms for every field except 4 (`payload`).
+fn decode_common_field(m: &mut RelayMsg, number: u32, f: &crate::wire::pb::Field<'_>) -> Result<()> {
+    match number {
+        1 => m.kind = f.as_u64(),
+        2 => {
+            let b = f.as_bytes()?;
+            anyhow::ensure!(b.len() == 32, "bad peer id length");
+            let mut d = [0u8; 32];
+            d.copy_from_slice(b);
+            m.peer = Some(PeerId(d));
+        }
+        3 => m.circuit = f.as_u64(),
+        5 => m.observed_host = f.as_u64() as u32,
+        6 => m.observed_port = f.as_u64() as u32,
+        7 => m.error = f.as_string()?,
+        _ => {}
+    }
+    Ok(())
+}
+
+fn check_kind(m: &RelayMsg) -> Result<()> {
+    if m.kind == 0 || m.kind > M_CIRCUIT_CLOSED {
+        bail!("invalid relay message kind {}", m.kind);
+    }
+    Ok(())
 }
 
 #[cfg(test)]

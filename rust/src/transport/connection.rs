@@ -15,6 +15,7 @@ use crate::crypto::noise::HandshakeState;
 use crate::crypto::{aead, PublicKey};
 use crate::identity::{Keypair, PeerId};
 use crate::netsim::{Time, MILLI};
+use crate::util::buf::Buf;
 use crate::util::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeMap, HashMap, VecDeque};
@@ -60,8 +61,9 @@ pub enum ConnEvent {
     Established { peer: PeerId, key: PublicKey },
     /// Remote opened a stream with the given protocol.
     StreamOpened { stream_id: u64, proto: String },
-    /// A complete message arrived on a stream.
-    Msg { stream_id: u64, msg: Vec<u8> },
+    /// A complete message arrived on a stream (zero-copy slice of the
+    /// decrypted packet whenever the message fit in one segment).
+    Msg { stream_id: u64, msg: Buf },
     /// Remote finished the stream cleanly (all data delivered).
     StreamFinished { stream_id: u64 },
     /// Remote reset the stream.
@@ -137,7 +139,7 @@ pub struct Connection {
     /// Remote-opened streams whose STREAM_OPEN we have processed.
     remote_opened: std::collections::HashSet<u64>,
     /// Messages that arrived before the stream's STREAM_OPEN (reordering).
-    early_msgs: HashMap<u64, Vec<Vec<u8>>>,
+    early_msgs: HashMap<u64, Vec<Buf>>,
     /// Streams with pending data, round-robin order.
     active_streams: VecDeque<u64>,
     next_stream_id: u64,
@@ -272,7 +274,7 @@ impl Connection {
         id
     }
 
-    /// Queue a message on a stream.
+    /// Queue a message on a stream (copies `msg` into the stream framing).
     pub fn send_msg(&mut self, stream_id: u64, msg: &[u8]) -> Result<()> {
         let s = self
             .send_streams
@@ -282,6 +284,23 @@ impl Connection {
             bail!("stream {stream_id} is closed for sending");
         }
         s.write_msg(msg);
+        if !self.active_streams.contains(&stream_id) {
+            self.active_streams.push_back(stream_id);
+        }
+        Ok(())
+    }
+
+    /// Queue an owned message on a stream; large messages are queued
+    /// zero-copy (the stream shares the buffer instead of copying it).
+    pub fn send_msg_buf(&mut self, stream_id: u64, msg: Buf) -> Result<()> {
+        let s = self
+            .send_streams
+            .get_mut(&stream_id)
+            .with_context(|| format!("unknown stream {stream_id}"))?;
+        if s.closed || s.fin_queued {
+            bail!("stream {stream_id} is closed for sending");
+        }
+        s.write_msg_buf(msg);
         if !self.active_streams.contains(&stream_id) {
             self.active_streams.push_back(stream_id);
         }
@@ -349,25 +368,39 @@ impl Connection {
         if self.remote_cid == 0 && pkt.src_cid != 0 {
             self.remote_cid = pkt.src_cid;
         }
-        let payload = if pkt.encrypted {
-            match &self.rx_key {
-                Some(k) => {
-                    let ad = pkt.header_bytes();
-                    match aead::open(k, &pkt.nonce(), &ad, &pkt.payload) {
-                        Ok(p) => p,
-                        Err(_) => {
-                            // Unauthenticated packet: drop silently (could be
-                            // a stale path probe or an attacker).
-                            return Ok(info);
-                        }
+        let pkt_num = pkt.pkt_num;
+        let payload: Buf = if pkt.encrypted {
+            if self.rx_key.is_none() {
+                // Keys not ready (data raced ahead of handshake): stash.
+                if self.early_packets.len() < 64 {
+                    self.early_packets.push(pkt);
+                }
+                return Ok(info);
+            }
+            let k = self.rx_key.as_ref().unwrap();
+            let ad = pkt.header_bytes();
+            let nonce = pkt.nonce();
+            let mut ct = pkt.payload;
+            if ct.is_unique() {
+                // Sole view of the datagram buffer: decrypt where the
+                // bytes sit — no plaintext allocation or copy.
+                let buf = ct.make_mut().expect("unique view");
+                match aead::open_in_place_slice(k, &nonce, &ad, buf) {
+                    Ok(n) => {
+                        ct.truncate(n);
+                        ct
+                    }
+                    Err(_) => {
+                        // Unauthenticated packet: drop silently (could be
+                        // a stale path probe or an attacker).
+                        return Ok(info);
                     }
                 }
-                None => {
-                    // Keys not ready (data raced ahead of handshake): stash.
-                    if self.early_packets.len() < 64 {
-                        self.early_packets.push(pkt);
-                    }
-                    return Ok(info);
+            } else {
+                // Shared view (relay-delivered): decrypt into a fresh buffer.
+                match aead::open(k, &nonce, &ad, &ct) {
+                    Ok(p) => Buf::from_vec(p),
+                    Err(_) => return Ok(info),
                 }
             }
         } else {
@@ -375,11 +408,12 @@ impl Connection {
                 // Plaintext after establishment is not acceptable (downgrade).
                 return Ok(info);
             }
+            // Reference-count bump, no copy.
             pkt.payload.clone()
         };
         info.accepted = true;
         self.bytes_received += payload.len() as u64;
-        self.note_received(pkt.pkt_num);
+        self.note_received(pkt_num);
         let frames = frame::decode_frames(&payload)?;
         let mut ack_eliciting = false;
         for f in frames {
@@ -846,24 +880,37 @@ impl Connection {
         out
     }
 
+    /// Build the datagram in one buffer: header, then frames encoded in
+    /// place, then (optionally) the frame section encrypted where it sits
+    /// with the header as associated data. No intermediate payload
+    /// allocation or ciphertext copy (see DESIGN.md §Buffer ownership).
     fn seal_frames(&mut self, now: Time, frames: &[Frame], encrypt: bool) -> Vec<u8> {
         let num = self.next_pkt_num;
         self.next_pkt_num += 1;
-        let payload_plain = frame::encode_frames(frames);
-        let mut pkt = Packet {
-            dst_cid: self.remote_cid,
-            src_cid: self.local_cid,
-            pkt_num: num,
-            encrypted: encrypt,
-            payload: Vec::new(),
-        };
-        pkt.payload = if encrypt {
-            let ad = pkt.header_bytes();
-            aead::seal(self.tx_key.as_ref().unwrap(), &pkt.nonce(), &ad, &payload_plain)
-        } else {
-            payload_plain
-        };
-        let size = pkt.payload.len() as u64 + 20;
+        let hint: usize = frames.iter().map(|f| f.wire_size_hint()).sum();
+        let mut out = Vec::with_capacity(27 + hint + aead::TAG_LEN);
+        out.extend_from_slice(&self.remote_cid.to_le_bytes());
+        out.extend_from_slice(&self.local_cid.to_le_bytes());
+        crate::util::varint::put_uvarint(&mut out, num);
+        out.push(if encrypt { crate::transport::packet::F_ENCRYPTED } else { 0 });
+        let header_len = out.len();
+        frame::encode_frames_into(&mut out, frames);
+        if encrypt {
+            // The wire header doubles as the AEAD associated data; it must
+            // match Packet::header_bytes on the receive side.
+            let mut nonce = [0u8; 12];
+            nonce[4..].copy_from_slice(&num.to_be_bytes());
+            let mut hdr = [0u8; 27]; // 16 cids + ≤10 varint + 1 flag
+            hdr[..header_len].copy_from_slice(&out[..header_len]);
+            aead::seal_in_place(
+                self.tx_key.as_ref().unwrap(),
+                &nonce,
+                &hdr[..header_len],
+                &mut out,
+                header_len,
+            );
+        }
+        let size = (out.len() - header_len) as u64 + 20;
         let ack_eliciting = frames.iter().any(|f| f.is_ack_eliciting());
         let retrans: Vec<Frame> = frames
             .iter()
@@ -884,7 +931,7 @@ impl Connection {
         }
         self.bytes_sent += size;
         self.last_send = now;
-        pkt.encode()
+        out
     }
 
     /// Encode a one-off packet outside the normal flow (path probes).
@@ -1089,7 +1136,9 @@ mod tests {
         let (osid, oproto) = opened.expect("stream opened");
         assert_eq!(osid, sid);
         assert_eq!(oproto, "/test/1");
-        assert_eq!(msg.unwrap(), (sid, b"request".to_vec()));
+        let (msid, mbody) = msg.unwrap();
+        assert_eq!(msid, sid);
+        assert_eq!(mbody, b"request");
 
         // Reply on the same stream.
         p.b.send_msg(sid, b"response").unwrap();
@@ -1109,7 +1158,7 @@ mod tests {
         p.a.send_msg(sid, &big).unwrap();
         p.pump();
         let evs = Pair::events(&mut p.b);
-        let got: Vec<&Vec<u8>> = evs
+        let got: Vec<&Buf> = evs
             .iter()
             .filter_map(|e| match e {
                 ConnEvent::Msg { msg, .. } => Some(msg),

@@ -1,5 +1,10 @@
 //! Connection frames (the unit of retransmission), protobuf-encoded.
+//!
+//! `Frame::data` is a [`Buf`]: on receive it is a zero-copy slice of the
+//! decrypted packet payload, and on retransmit bookkeeping a frame clone is
+//! a reference-count bump instead of a payload copy.
 
+use crate::util::buf::Buf;
 use crate::wire::{Message, PbReader, PbWriter};
 use anyhow::{bail, Result};
 
@@ -29,7 +34,7 @@ pub struct Frame {
     /// STREAM_DATA: byte offset.
     pub offset: u64,
     /// HANDSHAKE / STREAM_DATA payload.
-    pub data: Vec<u8>,
+    pub data: Buf,
     /// STREAM_DATA: sender finished after this segment.
     pub fin: bool,
     /// ACK: largest packet number seen.
@@ -50,7 +55,7 @@ impl Frame {
         Frame {
             kind: K_HANDSHAKE,
             seq: idx,
-            data,
+            data: data.into(),
             ..Frame::default()
         }
     }
@@ -64,7 +69,7 @@ impl Frame {
         }
     }
 
-    pub fn stream_data(stream_id: u64, offset: u64, data: Vec<u8>, fin: bool) -> Frame {
+    pub fn stream_data(stream_id: u64, offset: u64, data: Buf, fin: bool) -> Frame {
         Frame {
             kind: K_STREAM_DATA,
             stream_id,
@@ -189,45 +194,84 @@ impl Message for Frame {
         let mut f = Frame::default();
         PbReader::new(buf).for_each(|fld| {
             match fld.number {
-                1 => f.kind = fld.as_u64(),
-                2 => f.seq = fld.as_u64(),
-                3 => f.stream_id = fld.as_u64(),
-                4 => f.offset = fld.as_u64(),
-                5 => f.data = fld.as_bytes()?.to_vec(),
-                6 => f.fin = fld.as_bool(),
-                7 => f.largest_ack = fld.as_u64(),
-                8 => f.ack_ranges = fld.packed_uints()?,
-                9 => f.credit = fld.as_u64(),
-                10 => f.proto = fld.as_string()?,
-                11 => f.error = fld.as_string()?,
-                _ => {}
+                5 => f.data = Buf::copy_from_slice(fld.as_bytes()?),
+                other => decode_common_field(&mut f, other, &fld)?,
             }
             Ok(())
         })?;
-        if f.kind == 0 || f.kind > K_SYN_ACK {
-            bail!("invalid frame kind {}", f.kind);
-        }
+        check_kind(&f)?;
         Ok(f)
+    }
+
+    /// Zero-copy decode: `data` becomes a slice of `buf`.
+    fn decode_buf(buf: &Buf) -> Result<Frame> {
+        let mut f = Frame::default();
+        PbReader::new(buf.as_slice()).for_each(|fld| {
+            match fld.number {
+                5 => {
+                    fld.as_bytes()?; // wire-type check
+                    f.data = buf.slice(fld.data_start..fld.data_start + fld.data.len());
+                }
+                other => decode_common_field(&mut f, other, &fld)?,
+            }
+            Ok(())
+        })?;
+        check_kind(&f)?;
+        Ok(f)
+    }
+}
+
+/// Shared decode arms for every field except 5 (`data`).
+fn decode_common_field(f: &mut Frame, number: u32, fld: &crate::wire::pb::Field<'_>) -> Result<()> {
+    match number {
+        1 => f.kind = fld.as_u64(),
+        2 => f.seq = fld.as_u64(),
+        3 => f.stream_id = fld.as_u64(),
+        4 => f.offset = fld.as_u64(),
+        6 => f.fin = fld.as_bool(),
+        7 => f.largest_ack = fld.as_u64(),
+        8 => f.ack_ranges = fld.packed_uints()?,
+        9 => f.credit = fld.as_u64(),
+        10 => f.proto = fld.as_string()?,
+        11 => f.error = fld.as_string()?,
+        _ => {}
+    }
+    Ok(())
+}
+
+fn check_kind(f: &Frame) -> Result<()> {
+    if f.kind == 0 || f.kind > K_SYN_ACK {
+        bail!("invalid frame kind {}", f.kind);
+    }
+    Ok(())
+}
+
+/// Encode a sequence of frames onto the end of `out` (the packet build path:
+/// frames go straight into the datagram buffer, no intermediate payload).
+pub fn encode_frames_into(out: &mut Vec<u8>, frames: &[Frame]) {
+    for f in frames {
+        crate::wire::encode_pooled(f, |body| {
+            crate::util::varint::put_length_prefixed(out, body);
+        });
     }
 }
 
 /// Encode a sequence of frames into a packet payload.
 pub fn encode_frames(frames: &[Frame]) -> Vec<u8> {
     let mut out = Vec::with_capacity(frames.iter().map(|f| f.wire_size_hint()).sum());
-    for f in frames {
-        let body = f.encode();
-        crate::util::varint::put_length_prefixed(&mut out, &body);
-    }
+    encode_frames_into(&mut out, frames);
     out
 }
 
-/// Decode a packet payload into frames.
-pub fn decode_frames(buf: &[u8]) -> Result<Vec<Frame>> {
-    let mut r = crate::util::varint::Reader::new(buf);
+/// Decode a packet payload into frames; `data` fields are zero-copy slices
+/// of `buf`.
+pub fn decode_frames(buf: &Buf) -> Result<Vec<Frame>> {
+    let mut r = crate::util::varint::Reader::new(buf.as_slice());
     let mut out = Vec::new();
     while !r.is_empty() {
         let body = r.length_prefixed()?;
-        out.push(Frame::decode(body)?);
+        let start = r.pos - body.len();
+        out.push(Frame::decode_buf(&buf.slice(start..r.pos))?);
     }
     Ok(out)
 }
@@ -241,7 +285,7 @@ mod tests {
         let frames = vec![
             Frame::handshake(1, vec![1, 2, 3]),
             Frame::stream_open(7, "/lattica/rpc/1"),
-            Frame::stream_data(7, 1000, vec![9; 100], true),
+            Frame::stream_data(7, 1000, vec![9; 100].into(), true),
             Frame::stream_window(7, 65536),
             Frame::stream_reset(7, "cancelled"),
             Frame::conn_close("bye"),
@@ -258,8 +302,21 @@ mod tests {
             assert_eq!(&Frame::decode(&enc).unwrap(), f, "frame {f:?}");
         }
         // Batch roundtrip.
-        let payload = encode_frames(&frames);
+        let payload = Buf::from_vec(encode_frames(&frames));
         assert_eq!(decode_frames(&payload).unwrap(), frames);
+    }
+
+    #[test]
+    fn decode_frames_data_is_zero_copy() {
+        let frames = vec![
+            Frame::stream_data(1, 0, vec![7u8; 200].into(), false),
+            Frame::stream_data(1, 200, vec![8u8; 100].into(), true),
+        ];
+        let payload = Buf::from_vec(encode_frames(&frames));
+        let decoded = decode_frames(&payload).unwrap();
+        assert_eq!(decoded, frames);
+        // Both data fields share the payload allocation (2 slices + payload).
+        assert_eq!(payload.ref_count(), 3);
     }
 
     #[test]
@@ -276,7 +333,7 @@ mod tests {
     fn ack_properties() {
         assert!(!Frame::ack(1, vec![]).is_retransmittable());
         assert!(!Frame::ack(1, vec![]).is_ack_eliciting());
-        assert!(Frame::stream_data(1, 0, vec![], false).is_ack_eliciting());
+        assert!(Frame::stream_data(1, 0, Buf::new(), false).is_ack_eliciting());
         assert!(Frame::ping().is_retransmittable());
         assert!(!Frame::pong().is_retransmittable());
     }
@@ -284,6 +341,7 @@ mod tests {
     #[test]
     fn truncated_batch_fails() {
         let payload = encode_frames(&[Frame::ping(), Frame::pong()]);
-        assert!(decode_frames(&payload[..payload.len() - 1]).is_err());
+        let truncated = Buf::from_vec(payload[..payload.len() - 1].to_vec());
+        assert!(decode_frames(&truncated).is_err());
     }
 }

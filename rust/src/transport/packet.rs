@@ -9,7 +9,12 @@
 //! has not yet assigned its local id). Demultiplexing is by `dst_cid`, so a
 //! connection survives source-address changes — this is what lets DCUtR
 //! migrate a relayed connection to a punched direct path.
+//!
+//! The payload is a [`Buf`]: [`Packet::decode_buf`] slices the incoming
+//! datagram instead of copying it, and the send side builds header +
+//! payload in one buffer (see `Connection::seal_frames`).
 
+use crate::util::buf::Buf;
 use anyhow::{bail, Result};
 
 /// Header flags.
@@ -23,7 +28,7 @@ pub struct Packet {
     pub src_cid: u64,
     pub pkt_num: u64,
     pub encrypted: bool,
-    pub payload: Vec<u8>,
+    pub payload: Buf,
 }
 
 impl Packet {
@@ -37,15 +42,17 @@ impl Packet {
         out
     }
 
-    pub fn decode(buf: &[u8]) -> Result<Packet> {
-        if buf.len() < 18 {
-            bail!("packet too short: {} bytes", buf.len());
+    /// Decode, keeping the payload as a zero-copy slice of `buf`.
+    pub fn decode_buf(buf: &Buf) -> Result<Packet> {
+        let b = buf.as_slice();
+        if b.len() < 18 {
+            bail!("packet too short: {} bytes", b.len());
         }
-        let dst_cid = u64::from_le_bytes(buf[0..8].try_into()?);
-        let src_cid = u64::from_le_bytes(buf[8..16].try_into()?);
-        let (pkt_num, n) = crate::util::varint::get_uvarint(&buf[16..])?;
+        let dst_cid = u64::from_le_bytes(b[0..8].try_into()?);
+        let src_cid = u64::from_le_bytes(b[8..16].try_into()?);
+        let (pkt_num, n) = crate::util::varint::get_uvarint(&b[16..])?;
         let fpos = 16 + n;
-        let Some(&flags) = buf.get(fpos) else {
+        let Some(&flags) = b.get(fpos) else {
             bail!("packet missing flags byte");
         };
         Ok(Packet {
@@ -53,8 +60,14 @@ impl Packet {
             src_cid,
             pkt_num,
             encrypted: flags & F_ENCRYPTED != 0,
-            payload: buf[fpos + 1..].to_vec(),
+            payload: buf.slice(fpos + 1..),
         })
+    }
+
+    /// Decode from a plain slice (copies the payload; prefer
+    /// [`Packet::decode_buf`] on the datagram path).
+    pub fn decode(buf: &[u8]) -> Result<Packet> {
+        Self::decode_buf(&Buf::copy_from_slice(buf))
     }
 
     /// The associated data for AEAD: everything before the payload.
@@ -86,10 +99,25 @@ mod tests {
             src_cid: 7,
             pkt_num: 123_456,
             encrypted: true,
-            payload: vec![1, 2, 3],
+            payload: vec![1, 2, 3].into(),
         };
         let enc = p.encode();
         assert_eq!(Packet::decode(&enc).unwrap(), p);
+    }
+
+    #[test]
+    fn decode_buf_payload_is_zero_copy() {
+        let p = Packet {
+            dst_cid: 1,
+            src_cid: 2,
+            pkt_num: 3,
+            encrypted: false,
+            payload: vec![9u8; 100].into(),
+        };
+        let datagram = Buf::from_vec(p.encode());
+        let d = Packet::decode_buf(&datagram).unwrap();
+        assert_eq!(d, p);
+        assert_eq!(datagram.ref_count(), 2, "payload shares the datagram allocation");
     }
 
     #[test]
@@ -99,7 +127,7 @@ mod tests {
             src_cid: 9,
             pkt_num: 0,
             encrypted: false,
-            payload: vec![],
+            payload: Buf::new(),
         };
         let d = Packet::decode(&p.encode()).unwrap();
         assert_eq!(d.dst_cid, 0);
@@ -119,7 +147,7 @@ mod tests {
             src_cid: 6,
             pkt_num: 300,
             encrypted: true,
-            payload: vec![9, 9],
+            payload: vec![9, 9].into(),
         };
         let enc = p.encode();
         let hdr = p.header_bytes();
@@ -133,7 +161,7 @@ mod tests {
             src_cid: 2,
             pkt_num: n,
             encrypted: true,
-            payload: vec![],
+            payload: Buf::new(),
         };
         assert_ne!(mk(1).nonce(), mk(2).nonce());
     }

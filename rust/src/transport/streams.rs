@@ -4,7 +4,15 @@
 //! Upper layers exchange discrete *messages*; the stream layer length-
 //! prefixes them into the byte stream and re-parses on the receive side, so
 //! protocols never see fragmentation.
+//!
+//! Zero-copy: queued data, in-flight chunks and reassembly segments are all
+//! [`Buf`] views. `take_chunk` slices the front buffer, retransmission
+//! requeues slices, and the receive side returns messages as slices of the
+//! decrypted packet payload whenever a message does not span segments; only
+//! a partial message at the head of the stream is ever copied (into the
+//! spill buffer).
 
+use crate::util::buf::Buf;
 use anyhow::Result;
 use std::collections::{BTreeMap, VecDeque};
 
@@ -14,6 +22,11 @@ pub const DEFAULT_WINDOW: u64 = 1 << 20; // 1 MiB
 /// Grant more credit when consumed beyond this fraction of the window.
 pub const CREDIT_REFRESH_FRACTION: f64 = 0.5;
 
+/// Messages at or below this size are copied into one framed buffer on
+/// write (two tiny queue entries would cost more than the copy); larger
+/// messages are queued as a shared [`Buf`] behind their length prefix.
+pub const SHARE_THRESHOLD: usize = 512;
+
 /// Sending half.
 #[derive(Debug)]
 pub struct SendStream {
@@ -21,10 +34,9 @@ pub struct SendStream {
     pub write_offset: u64,
     /// Data accepted from the application but not yet packetized,
     /// as (offset, bytes).
-    pub pending: VecDeque<(u64, Vec<u8>)>,
+    pub pending: VecDeque<(u64, Buf)>,
     /// Cursor into `pending.front()` — lets take_chunk slice the front
-    /// buffer without repeatedly memmoving the remainder (O(n²) otherwise
-    /// for multi-hundred-KB messages).
+    /// buffer without popping it until fully consumed.
     front_pos: usize,
     /// Peer-granted credit limit (absolute offset we may send up to).
     pub credit_limit: u64,
@@ -51,21 +63,42 @@ impl SendStream {
         }
     }
 
-    /// Queue a message (length-prefixed into the byte stream).
+    /// Queue a message (length-prefixed into the byte stream, one copy).
     pub fn write_msg(&mut self, msg: &[u8]) {
         debug_assert!(!self.fin_queued && !self.closed);
         let mut framed = Vec::with_capacity(msg.len() + 5);
         crate::util::varint::put_length_prefixed(&mut framed, msg);
         let off = self.write_offset;
         self.write_offset += framed.len() as u64;
-        self.pending.push_back((off, framed));
+        self.pending.push_back((off, Buf::from_vec(framed)));
+    }
+
+    /// Queue an owned message. Large messages are queued zero-copy (the
+    /// length prefix and the payload become adjacent queue entries); small
+    /// ones take the [`write_msg`] copy path.
+    ///
+    /// [`write_msg`]: SendStream::write_msg
+    pub fn write_msg_buf(&mut self, msg: Buf) {
+        debug_assert!(!self.fin_queued && !self.closed);
+        if msg.len() <= SHARE_THRESHOLD {
+            self.write_msg(&msg);
+            return;
+        }
+        let mut prefix = Vec::with_capacity(5);
+        crate::util::varint::put_uvarint(&mut prefix, msg.len() as u64);
+        let off = self.write_offset;
+        self.write_offset += prefix.len() as u64;
+        self.pending.push_back((off, Buf::from_vec(prefix)));
+        let off = self.write_offset;
+        self.write_offset += msg.len() as u64;
+        self.pending.push_back((off, msg));
     }
 
     /// Queue raw bytes (no framing) — used by tests.
     pub fn write_raw(&mut self, data: &[u8]) {
         let off = self.write_offset;
         self.write_offset += data.len() as u64;
-        self.pending.push_back((off, data.to_vec()));
+        self.pending.push_back((off, Buf::copy_from_slice(data)));
     }
 
     /// Mark the stream finished once pending data drains.
@@ -91,15 +124,16 @@ impl SendStream {
     }
 
     /// Take up to `max_bytes` of sendable data respecting credit.
-    /// Returns (offset, data, fin).
-    pub fn take_chunk(&mut self, max_bytes: usize) -> Option<(u64, Vec<u8>, bool)> {
+    /// Returns (offset, data, fin). The data is a zero-copy slice of the
+    /// queued buffer.
+    pub fn take_chunk(&mut self, max_bytes: usize) -> Option<(u64, Buf, bool)> {
         if self.closed {
             return None;
         }
         if self.pending.is_empty() {
             if self.fin_pending() {
                 self.fin_sent = true;
-                return Some((self.sent_offset, Vec::new(), true));
+                return Some((self.sent_offset, Buf::new(), true));
             }
             return None;
         }
@@ -117,7 +151,7 @@ impl SendStream {
         let off = front_off + self.front_pos as u64;
         let data = {
             let (_, d) = self.pending.front().unwrap();
-            d[self.front_pos..self.front_pos + take].to_vec()
+            d.slice(self.front_pos..self.front_pos + take)
         };
         self.front_pos += take;
         if self.front_pos == front_len {
@@ -135,7 +169,7 @@ impl SendStream {
     }
 
     /// Re-queue data after loss (frame-level retransmission).
-    pub fn requeue(&mut self, offset: u64, data: Vec<u8>, fin: bool) {
+    pub fn requeue(&mut self, offset: u64, data: Buf, fin: bool) {
         if self.closed {
             return;
         }
@@ -151,7 +185,7 @@ impl SendStream {
             // displace the front element the cursor refers to.
             if self.front_pos > 0 {
                 if let Some((off0, data0)) = self.pending.pop_front() {
-                    let rest = data0[self.front_pos..].to_vec();
+                    let rest = data0.slice(self.front_pos..);
                     if !rest.is_empty() {
                         self.pending.push_front((off0 + self.front_pos as u64, rest));
                     }
@@ -193,9 +227,9 @@ impl SendStream {
     fn normalize(&mut self) {
         debug_assert_eq!(self.front_pos, 0, "cursor materialized by requeue");
         // Ensure pending is sorted and non-overlapping (drop duplicate spans).
-        let mut items: Vec<(u64, Vec<u8>)> = self.pending.drain(..).collect();
+        let mut items: Vec<(u64, Buf)> = self.pending.drain(..).collect();
         items.sort_by_key(|(o, _)| *o);
-        let mut out: VecDeque<(u64, Vec<u8>)> = VecDeque::with_capacity(items.len());
+        let mut out: VecDeque<(u64, Buf)> = VecDeque::with_capacity(items.len());
         let mut covered = self.sent_offset;
         for (off, data) in items {
             let end = off + data.len() as u64;
@@ -206,9 +240,9 @@ impl SendStream {
                 covered = end;
                 out.push_back((off, data));
             } else {
-                // Partial overlap: trim the front.
+                // Partial overlap: trim the front (zero-copy slice).
                 let skip = (covered - off) as usize;
-                let trimmed = data[skip..].to_vec();
+                let trimmed = data.slice(skip..);
                 let new_off = covered;
                 covered = end;
                 out.push_back((new_off, trimmed));
@@ -223,9 +257,10 @@ impl SendStream {
 pub struct RecvStream {
     /// Contiguous bytes delivered to the message parser.
     pub read_offset: u64,
-    /// Out-of-order segments: offset → bytes.
-    segments: BTreeMap<u64, Vec<u8>>,
-    /// Assembled-but-unparsed bytes (partial message at the head).
+    /// Out-of-order segments: offset → bytes (zero-copy packet slices).
+    segments: BTreeMap<u64, Buf>,
+    /// Spill buffer: a partial message at the head of the stream, or bytes
+    /// of a message that spans segments. Empty on the hot path.
     buffer: Vec<u8>,
     /// Absolute credit limit we granted the peer.
     pub credit_granted: u64,
@@ -249,13 +284,14 @@ impl RecvStream {
     }
 
     /// Ingest a STREAM_DATA segment; returns complete messages, plus whether
-    /// the stream finished cleanly.
+    /// the stream finished cleanly. Messages contained in one segment are
+    /// zero-copy slices of it.
     pub fn on_data(
         &mut self,
         offset: u64,
-        data: Vec<u8>,
+        data: Buf,
         fin: bool,
-    ) -> Result<(Vec<Vec<u8>>, bool)> {
+    ) -> Result<(Vec<Buf>, bool)> {
         if self.reset {
             return Ok((Vec::new(), false));
         }
@@ -269,10 +305,10 @@ impl RecvStream {
         if !data.is_empty() {
             let end = offset + data.len() as u64;
             if end > self.read_offset {
-                // Trim already-delivered prefix.
+                // Trim already-delivered prefix (zero-copy).
                 let (off, dat) = if offset < self.read_offset {
                     let skip = (self.read_offset - offset) as usize;
-                    (self.read_offset, data[skip..].to_vec())
+                    (self.read_offset, data.slice(skip..))
                 } else {
                     (offset, data)
                 };
@@ -285,7 +321,10 @@ impl RecvStream {
                 }
             }
         }
-        // Drain contiguous segments into the parse buffer.
+        let mut msgs: Vec<Buf> = Vec::new();
+        // Drain contiguous segments. While the spill buffer is empty, parse
+        // complete messages straight out of each segment (zero-copy); only a
+        // trailing partial message spills.
         loop {
             let Some((&off, _)) = self.segments.iter().next() else {
                 break;
@@ -299,18 +338,40 @@ impl RecvStream {
                 continue; // fully duplicate
             }
             let skip = (self.read_offset - off) as usize;
-            self.buffer.extend_from_slice(&seg[skip..]);
+            let seg = seg.slice(skip..);
             self.read_offset = end;
+            if self.buffer.is_empty() {
+                let mut pos = 0usize;
+                loop {
+                    match crate::util::varint::get_uvarint(&seg[pos..]) {
+                        Ok((len, n)) => {
+                            let total = n + len as usize;
+                            if seg.len() - pos >= total {
+                                msgs.push(seg.slice(pos + n..pos + total));
+                                pos += total;
+                            } else {
+                                break;
+                            }
+                        }
+                        Err(_) => break, // need more bytes (or empty)
+                    }
+                }
+                if pos < seg.len() {
+                    self.buffer.extend_from_slice(&seg[pos..]);
+                }
+            } else {
+                self.buffer.extend_from_slice(&seg);
+            }
         }
-        // Parse length-prefixed messages.
-        let mut msgs = Vec::new();
+        // Cold path: messages spanning segment boundaries sit in the spill
+        // buffer; parse and copy them out.
         let mut pos = 0usize;
         loop {
             match crate::util::varint::get_uvarint(&self.buffer[pos..]) {
                 Ok((len, n)) => {
                     let total = n + len as usize;
                     if self.buffer.len() - pos >= total {
-                        msgs.push(self.buffer[pos + n..pos + total].to_vec());
+                        msgs.push(Buf::copy_from_slice(&self.buffer[pos + n..pos + total]));
                         pos += total;
                     } else {
                         break;
@@ -374,6 +435,49 @@ mod tests {
             msgs.extend(m);
         }
         assert_eq!(msgs, vec![b"hello".to_vec(), b"world".to_vec()]);
+    }
+
+    #[test]
+    fn single_segment_messages_are_zero_copy() {
+        let mut rx = RecvStream::new();
+        let mut framed = Vec::new();
+        crate::util::varint::put_length_prefixed(&mut framed, b"alpha");
+        crate::util::varint::put_length_prefixed(&mut framed, b"beta");
+        let seg = Buf::from_vec(framed);
+        let (msgs, _) = rx.on_data(0, seg.clone(), false).unwrap();
+        assert_eq!(msgs, vec![b"alpha".to_vec(), b"beta".to_vec()]);
+        // Both messages are slices of the ingested segment.
+        assert_eq!(seg.ref_count(), 3);
+        assert_eq!(rx.buffered(), 0);
+    }
+
+    #[test]
+    fn large_write_is_shared_not_copied() {
+        let mut tx = SendStream::new();
+        let mut rx = RecvStream::new();
+        let payload = Buf::from_vec(vec![3u8; 4 * SHARE_THRESHOLD]);
+        tx.write_msg_buf(payload.clone());
+        // The payload entry in the queue shares our allocation.
+        assert_eq!(payload.ref_count(), 2);
+        let mut got = Vec::new();
+        while let Some((off, data, fin)) = tx.take_chunk(1000) {
+            let (m, _) = rx.on_data(off, data, fin).unwrap();
+            got.extend(m);
+        }
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0], payload);
+    }
+
+    #[test]
+    fn small_write_buf_takes_copy_path() {
+        let mut tx = SendStream::new();
+        tx.write_msg_buf(Buf::from_vec(vec![1u8; 8]));
+        assert_eq!(tx.pending.len(), 1, "prefix and payload share one buffer");
+        let mut tx2 = SendStream::new();
+        tx2.write_msg_buf(Buf::from_vec(vec![1u8; SHARE_THRESHOLD + 1]));
+        assert_eq!(tx2.pending.len(), 2, "large payload queued zero-copy");
+        // Offsets are contiguous across the split entries.
+        assert_eq!(tx2.pending[0].0 + tx2.pending[0].1.len() as u64, tx2.pending[1].0);
     }
 
     #[test]
@@ -444,9 +548,9 @@ mod tests {
         let mut framed = Vec::new();
         crate::util::varint::put_length_prefixed(&mut framed, b"xyz");
         let (a, b) = framed.split_at(2);
-        let (_, fin1) = rx.on_data(2, b.to_vec(), true).unwrap();
+        let (_, fin1) = rx.on_data(2, b.into(), true).unwrap();
         assert!(!fin1);
-        let (msgs, fin2) = rx.on_data(0, a.to_vec(), false).unwrap();
+        let (msgs, fin2) = rx.on_data(0, a.into(), false).unwrap();
         assert!(fin2);
         assert_eq!(msgs, vec![b"xyz".to_vec()]);
     }
@@ -473,6 +577,99 @@ mod tests {
         assert_eq!(rx.read_offset, 3000 + 2); // 2-byte varint length prefix
     }
 
+    /// Regression: requeued spans that partially overlap live pending data
+    /// must be trimmed byte-for-byte (normalize path, `streams.rs` overlap
+    /// trimming). The receiver must see exactly the original byte stream.
+    #[test]
+    fn requeue_partial_overlap_trims_exactly() {
+        let mut tx = SendStream::new();
+        let mut rx = RecvStream::new();
+        let msg: Vec<u8> = (0..5000u32).map(|i| (i % 251) as u8).collect();
+        tx.write_msg(&msg);
+        let c1 = tx.take_chunk(1000).unwrap();
+        let c2 = tx.take_chunk(1000).unwrap();
+        let c3 = tx.take_chunk(1000).unwrap();
+        // Deliver c1 only; "lose" c2 and c3.
+        let _ = rx.on_data(c1.0, c1.1.clone(), c1.2).unwrap();
+        // Requeue out of order and overlapping: c3 first, then a span that
+        // overlaps both c2's range and the front of c3's range.
+        tx.requeue(c3.0, c3.1.clone(), c3.2);
+        let mut overlap = c2.1.to_vec();
+        overlap.extend_from_slice(&c3.1[..500]);
+        tx.requeue(c2.0, Buf::from_vec(overlap), false);
+        // Drain everything that's left and feed it to the receiver.
+        let mut got = Vec::new();
+        while let Some((off, data, fin)) = tx.take_chunk(1000) {
+            let (m, _) = rx.on_data(off, data, fin).unwrap();
+            got.extend(m);
+        }
+        // The full message must reassemble exactly once, byte-for-byte.
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0], msg);
+        assert_eq!(rx.read_offset, tx.write_offset);
+        assert_eq!(rx.buffered(), 0);
+    }
+
+    /// Regression: the requeue path after a partially-consumed front buffer
+    /// (front_pos > 0) must materialize the cursor without losing bytes.
+    #[test]
+    fn requeue_with_partial_front_cursor() {
+        let mut tx = SendStream::new();
+        let mut rx = RecvStream::new();
+        let msg: Vec<u8> = (0..4000u32).map(|i| (i * 7 % 256) as u8).collect();
+        tx.write_msg(&msg);
+        let c1 = tx.take_chunk(1500).unwrap();
+        // Partially consume the front buffer so the cursor is mid-buffer.
+        let c2 = tx.take_chunk(700).unwrap();
+        // Now requeue c1 (head insert) while front_pos > 0.
+        tx.requeue(c1.0, c1.1.clone(), c1.2);
+        let mut delivered = vec![c2];
+        while let Some(c) = tx.take_chunk(1500) {
+            delivered.push(c);
+        }
+        let mut got = Vec::new();
+        for (off, data, fin) in delivered {
+            let (m, _) = rx.on_data(off, data, fin).unwrap();
+            got.extend(m);
+        }
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0], msg);
+    }
+
+    /// Regression: out-of-order delivery where segments overlap the
+    /// already-delivered prefix and each other (`on_data` skip/trim logic)
+    /// must reproduce the byte stream exactly.
+    #[test]
+    fn out_of_order_overlapping_segments_trim_exactly() {
+        let mut rx = RecvStream::new();
+        let mut stream = Vec::new();
+        let m1: Vec<u8> = (0..900u32).map(|i| (i % 199) as u8).collect();
+        let m2: Vec<u8> = (0..700u32).map(|i| (i % 83) as u8).collect();
+        crate::util::varint::put_length_prefixed(&mut stream, &m1);
+        crate::util::varint::put_length_prefixed(&mut stream, &m2);
+        let whole = Buf::from_vec(stream);
+        let n = whole.len();
+        // Segment plan (all ranges overlap a neighbour):
+        //   [300..700) arrives first (buffered out of order)
+        //   [0..400)   delivers 0..700 once contiguous
+        //   [250..650) fully duplicate after delivery
+        //   [600..n)   overlaps the delivered prefix by 100 bytes
+        let mut msgs = Vec::new();
+        let (m, _) = rx.on_data(300, whole.slice(300..700), false).unwrap();
+        msgs.extend(m);
+        assert_eq!(rx.read_offset, 0, "gap: nothing contiguous yet");
+        let (m, _) = rx.on_data(0, whole.slice(..400), false).unwrap();
+        msgs.extend(m);
+        assert_eq!(rx.read_offset, 700);
+        let (m, _) = rx.on_data(250, whole.slice(250..650), false).unwrap();
+        assert!(m.is_empty(), "fully duplicate segment delivers nothing");
+        let (m, _) = rx.on_data(600, whole.slice(600..), false).unwrap();
+        msgs.extend(m);
+        assert_eq!(rx.read_offset, n as u64);
+        assert_eq!(msgs, vec![m1, m2]);
+        assert_eq!(rx.buffered(), 0);
+    }
+
     #[test]
     fn credit_update_fires_after_consumption() {
         let mut rx = RecvStream::new();
@@ -484,7 +681,7 @@ mod tests {
         let data = vec![0u8; (DEFAULT_WINDOW / 2 + 100) as usize];
         let mut framed = Vec::new();
         crate::util::varint::put_length_prefixed(&mut framed, &data);
-        let _ = rx.on_data(0, framed, false).unwrap();
+        let _ = rx.on_data(0, framed.into(), false).unwrap();
         let update = rx.credit_update();
         assert!(update.is_some());
         assert!(update.unwrap() > DEFAULT_WINDOW);
@@ -496,7 +693,7 @@ mod tests {
         let mut framed = Vec::new();
         crate::util::varint::put_length_prefixed(&mut framed, b"hello");
         framed.truncate(3); // cut mid-message
-        assert!(rx.on_data(0, framed, true).is_err());
+        assert!(rx.on_data(0, framed.into(), true).is_err());
     }
 
     #[test]

@@ -1,0 +1,357 @@
+//! `Buf`: a cheaply cloneable, sliceable, immutable byte buffer — the unit
+//! of payload ownership on the data path (an `Arc`-backed `bytes::Bytes`
+//! analogue with no external dependency).
+//!
+//! Every layer that moves payload bytes (wire decode, stream reassembly,
+//! RPC events, Bitswap block serving) hands out `Buf` slices instead of
+//! copying sub-ranges into fresh `Vec`s: a clone or slice is a reference
+//! count bump plus two integers. See DESIGN.md §Buffer ownership for the
+//! layer-by-layer contract.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::ops::{Bound, Deref, RangeBounds};
+use std::sync::{Arc, OnceLock};
+
+/// Shared, immutable view into reference-counted bytes.
+#[derive(Clone)]
+pub struct Buf {
+    data: Arc<Vec<u8>>,
+    off: usize,
+    len: usize,
+}
+
+fn shared_empty() -> Arc<Vec<u8>> {
+    static EMPTY: OnceLock<Arc<Vec<u8>>> = OnceLock::new();
+    EMPTY.get_or_init(|| Arc::new(Vec::new())).clone()
+}
+
+impl Buf {
+    /// The empty buffer (no allocation; a shared static).
+    pub fn new() -> Buf {
+        Buf {
+            data: shared_empty(),
+            off: 0,
+            len: 0,
+        }
+    }
+
+    /// Take ownership of a `Vec` without copying its contents.
+    pub fn from_vec(v: Vec<u8>) -> Buf {
+        let len = v.len();
+        Buf {
+            data: Arc::new(v),
+            off: 0,
+            len,
+        }
+    }
+
+    /// Copy a slice into a new buffer (the one copy at an ownership
+    /// boundary; everything downstream is zero-copy).
+    pub fn copy_from_slice(s: &[u8]) -> Buf {
+        Buf::from_vec(s.to_vec())
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data[self.off..self.off + self.len]
+    }
+
+    /// Zero-copy sub-view: bumps the reference count, never copies.
+    ///
+    /// Panics if the range is out of bounds (mirroring slice indexing).
+    pub fn slice(&self, range: impl RangeBounds<usize>) -> Buf {
+        let start = match range.start_bound() {
+            Bound::Included(&n) => n,
+            Bound::Excluded(&n) => n + 1,
+            Bound::Unbounded => 0,
+        };
+        let end = match range.end_bound() {
+            Bound::Included(&n) => n + 1,
+            Bound::Excluded(&n) => n,
+            Bound::Unbounded => self.len,
+        };
+        assert!(
+            start <= end && end <= self.len,
+            "slice {start}..{end} out of range for Buf of len {}",
+            self.len
+        );
+        Buf {
+            data: self.data.clone(),
+            off: self.off + start,
+            len: end - start,
+        }
+    }
+
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.as_slice().to_vec()
+    }
+
+    /// Recover the backing `Vec` without copying when this view covers the
+    /// whole allocation and holds the only reference; copies otherwise.
+    pub fn into_vec(self) -> Vec<u8> {
+        if self.off == 0 && self.len == self.data.len() {
+            match Arc::try_unwrap(self.data) {
+                Ok(v) => v,
+                Err(arc) => arc[..].to_vec(),
+            }
+        } else {
+            self.as_slice().to_vec()
+        }
+    }
+
+    /// Number of live references to the backing allocation (diagnostics).
+    pub fn ref_count(&self) -> usize {
+        Arc::strong_count(&self.data)
+    }
+
+    /// Whether this view holds the only reference to the backing allocation
+    /// (in-place mutation via [`Buf::make_mut`] is then possible).
+    pub fn is_unique(&self) -> bool {
+        Arc::strong_count(&self.data) == 1
+    }
+
+    /// Mutable access to this view's bytes, available only when the backing
+    /// allocation is uniquely owned (the in-place AEAD decrypt path).
+    pub fn make_mut(&mut self) -> Option<&mut [u8]> {
+        let (off, len) = (self.off, self.len);
+        Arc::get_mut(&mut self.data).map(move |v| &mut v[off..off + len])
+    }
+
+    /// Shrink this view to its first `len` bytes in place.
+    pub fn truncate(&mut self, len: usize) {
+        assert!(len <= self.len, "truncate {len} beyond Buf of len {}", self.len);
+        self.len = len;
+    }
+}
+
+impl Default for Buf {
+    fn default() -> Buf {
+        Buf::new()
+    }
+}
+
+impl Deref for Buf {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Buf {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl Borrow<[u8]> for Buf {
+    fn borrow(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl fmt::Debug for Buf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Buf({} B: ", self.len)?;
+        for (i, b) in self.as_slice().iter().take(16).enumerate() {
+            if i > 0 {
+                write!(f, " ")?;
+            }
+            write!(f, "{b:02x}")?;
+        }
+        if self.len > 16 {
+            write!(f, " …")?;
+        }
+        write!(f, ")")
+    }
+}
+
+impl From<Vec<u8>> for Buf {
+    fn from(v: Vec<u8>) -> Buf {
+        Buf::from_vec(v)
+    }
+}
+
+impl From<&[u8]> for Buf {
+    fn from(s: &[u8]) -> Buf {
+        Buf::copy_from_slice(s)
+    }
+}
+
+impl From<&Vec<u8>> for Buf {
+    fn from(v: &Vec<u8>) -> Buf {
+        Buf::copy_from_slice(v)
+    }
+}
+
+impl<const N: usize> From<&[u8; N]> for Buf {
+    fn from(a: &[u8; N]) -> Buf {
+        Buf::copy_from_slice(a)
+    }
+}
+
+impl PartialEq for Buf {
+    fn eq(&self, other: &Buf) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Buf {}
+
+impl Hash for Buf {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        self.as_slice().hash(state);
+    }
+}
+
+impl PartialEq<[u8]> for Buf {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<&[u8]> for Buf {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl PartialEq<Vec<u8>> for Buf {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Buf> for Vec<u8> {
+    fn eq(&self, other: &Buf) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<const N: usize> PartialEq<[u8; N]> for Buf {
+    fn eq(&self, other: &[u8; N]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl<const N: usize> PartialEq<&[u8; N]> for Buf {
+    fn eq(&self, other: &&[u8; N]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_default() {
+        let b = Buf::new();
+        assert!(b.is_empty());
+        assert_eq!(b.len(), 0);
+        assert_eq!(b.as_slice(), b"");
+        assert_eq!(Buf::default(), b);
+    }
+
+    #[test]
+    fn from_vec_and_slice() {
+        let b = Buf::from_vec(vec![1, 2, 3]);
+        assert_eq!(b, [1u8, 2, 3]);
+        let c: Buf = (&[4u8, 5][..]).into();
+        assert_eq!(c.to_vec(), vec![4, 5]);
+        let d: Buf = b"xy".into();
+        assert_eq!(d, b"xy");
+    }
+
+    #[test]
+    fn slicing_is_zero_copy() {
+        let b = Buf::from_vec((0..100u8).collect());
+        let s = b.slice(10..20);
+        assert_eq!(s.len(), 10);
+        assert_eq!(s[0], 10);
+        assert_eq!(b.ref_count(), 2, "slice shares the allocation");
+        let s2 = s.slice(5..);
+        assert_eq!(s2.as_slice(), &[15, 16, 17, 18, 19]);
+        assert_eq!(b.ref_count(), 3);
+        drop((s, s2));
+        assert_eq!(b.ref_count(), 1);
+    }
+
+    #[test]
+    fn slice_bounds() {
+        let b = Buf::from_vec(vec![1, 2, 3]);
+        assert_eq!(b.slice(..), b);
+        assert_eq!(b.slice(3..).len(), 0);
+        assert_eq!(b.slice(..=1), [1u8, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn slice_oob_panics() {
+        Buf::from_vec(vec![1]).slice(..2);
+    }
+
+    #[test]
+    fn into_vec_reclaims_unique_allocation() {
+        let v = vec![7u8; 32];
+        let ptr = v.as_ptr();
+        let b = Buf::from_vec(v);
+        let back = b.into_vec();
+        assert_eq!(back.as_ptr(), ptr, "unique full view moves, not copies");
+        // A shared view copies (the original stays intact).
+        let b = Buf::from_vec(back);
+        let keep = b.clone();
+        let copied = b.into_vec();
+        assert_eq!(copied, keep.to_vec());
+        assert_eq!(keep.ref_count(), 1);
+    }
+
+    #[test]
+    fn make_mut_only_when_unique() {
+        let mut b = Buf::from_vec(vec![1, 2, 3, 4]).slice(1..);
+        assert!(b.is_unique());
+        b.make_mut().unwrap()[0] = 9;
+        assert_eq!(b, [9u8, 3, 4]);
+        b.truncate(2);
+        assert_eq!(b, [9u8, 3]);
+        let keep = b.clone();
+        assert!(!b.is_unique());
+        assert!(b.make_mut().is_none(), "shared view must not be mutable");
+        assert_eq!(keep, [9u8, 3]);
+    }
+
+    #[test]
+    fn equality_and_hash() {
+        use std::collections::HashSet;
+        let a = Buf::from_vec(vec![1, 2, 3]);
+        let b = Buf::from_vec(vec![0, 1, 2, 3, 4]).slice(1..4);
+        assert_eq!(a, b);
+        assert_eq!(a, vec![1u8, 2, 3]);
+        assert_eq!(vec![1u8, 2, 3], a);
+        assert_eq!(a, [1u8, 2, 3]);
+        assert_eq!(a, &[1u8, 2, 3]);
+        let mut set = HashSet::new();
+        set.insert(a);
+        assert!(set.contains(&b));
+    }
+
+    #[test]
+    fn deref_and_indexing() {
+        let b = Buf::from_vec(vec![9, 8, 7]);
+        assert_eq!(&b[1..], &[8, 7]);
+        assert_eq!(b.iter().sum::<u8>(), 24);
+        fn takes_slice(s: &[u8]) -> usize {
+            s.len()
+        }
+        assert_eq!(takes_slice(&b), 3);
+    }
+}

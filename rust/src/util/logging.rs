@@ -1,54 +1,132 @@
-//! Minimal `log`-crate backend writing to stderr, with a level filter from
-//! `LATTICA_LOG` (error|warn|info|debug|trace). Install with [`init`].
+//! Minimal stderr logger with a level filter from `LATTICA_LOG`
+//! (error|warn|info|debug|trace). Self-contained (no `log` crate): use the
+//! crate-level `log_error!` … `log_trace!` macros, installed via [`init`].
 
-use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::atomic::{AtomicU8, Ordering};
 
-struct StderrLogger;
+/// Log severity, most severe first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
 
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let lvl = match record.level() {
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
-        };
-        eprintln!("[{lvl}] {}: {}", record.target(), record.args());
+        }
     }
-
-    fn flush(&self) {}
 }
 
-static LOGGER: StderrLogger = StderrLogger;
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
 
-/// Install the logger (idempotent). Level from `LATTICA_LOG`, default `warn`.
+/// Set the maximum level that will be emitted.
+pub fn set_max_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Whether a record at `level` would be emitted.
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record (used by the `log_*!` macros; not called directly).
+pub fn write(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{}] {}: {}", level.label(), target, args);
+    }
+}
+
+/// Configure the level filter from `LATTICA_LOG` (idempotent, default `warn`).
 pub fn init() {
     let level = match std::env::var("LATTICA_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("info") => LevelFilter::Info,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Warn,
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("info") => Level::Info,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Warn,
     };
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(level);
+    set_max_level(level);
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::write(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::write(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::write(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::write(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::logging::write(
+            $crate::util::logging::Level::Trace,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
-    fn init_idempotent() {
-        super::init();
-        super::init();
-        log::warn!("logging smoke test");
+    fn init_idempotent_and_filters() {
+        init();
+        init();
+        crate::log_warn!("logging smoke test");
+        assert!(enabled(Level::Error));
+        set_max_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        assert!(!enabled(Level::Trace));
+        set_max_level(Level::Warn);
     }
 }

@@ -10,7 +10,9 @@ pub mod hex;
 pub mod json;
 pub mod cli;
 pub mod logging;
+pub mod buf;
 pub mod bytes;
 pub mod timefmt;
 
+pub use buf::Buf;
 pub use rng::Rng;

@@ -6,7 +6,11 @@
 //! Message structs throughout the codebase implement [`Message`] with
 //! hand-written field mappings, which keeps the on-wire cost model identical
 //! to real protobuf.
+//!
+//! Hot paths encode through the thread-local buffer pool ([`encode_pooled`])
+//! and decode payload-bearing fields as zero-copy [`crate::util::Buf`]
+//! slices via [`Message::decode_buf`].
 
 pub mod pb;
 
-pub use pb::{Message, PbReader, PbWriter, WireType};
+pub use pb::{encode_pooled, Message, PbReader, PbWriter, WireType};

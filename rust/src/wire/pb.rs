@@ -1,7 +1,18 @@
 //! Protobuf wire-format encoder/decoder.
+//!
+//! Two hot-path mechanisms keep encode/decode allocation-free:
+//!
+//! * a thread-local pool of encode buffers ([`PbWriter::pooled`] /
+//!   [`encode_pooled`]) so steady-state message encoding reuses capacity
+//!   instead of allocating a fresh `Vec` per message, and
+//! * offset-carrying decode ([`Field::data_start`] + [`Message::decode_buf`])
+//!   so length-delimited fields can be returned as zero-copy [`Buf`] slices
+//!   of the receive buffer instead of `to_vec()` copies.
 
+use crate::util::buf::Buf;
 use crate::util::varint;
 use anyhow::{bail, Result};
+use std::cell::RefCell;
 
 /// Protobuf wire types.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -31,6 +42,44 @@ pub struct PbWriter {
     pub buf: Vec<u8>,
 }
 
+/// Thread-local pool of encode buffers. Buffers enter via
+/// [`PbWriter::recycle`] and are reused by [`PbWriter::pooled`]; capacity is
+/// bounded so one huge message cannot pin memory forever.
+const POOL_MAX_BUFFERS: usize = 16;
+const POOL_MAX_CAPACITY: usize = 1 << 20;
+
+thread_local! {
+    static ENCODE_POOL: RefCell<Vec<Vec<u8>>> = RefCell::new(Vec::new());
+}
+
+fn pool_take() -> Vec<u8> {
+    ENCODE_POOL.with(|p| p.borrow_mut().pop()).unwrap_or_default()
+}
+
+fn pool_put(buf: Vec<u8>) {
+    if buf.capacity() == 0 || buf.capacity() > POOL_MAX_CAPACITY {
+        return;
+    }
+    ENCODE_POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        if p.len() < POOL_MAX_BUFFERS {
+            p.push(buf);
+        }
+    });
+}
+
+/// Encode `m` into a pooled buffer, hand the bytes to `f`, then return the
+/// buffer to the pool. Steady-state cost: zero allocations. The bytes are
+/// only valid inside `f`; callers that need to keep them must copy (or
+/// encode into an owned [`Buf`] instead).
+pub fn encode_pooled<M: Message, R>(m: &M, f: impl FnOnce(&[u8]) -> R) -> R {
+    let mut w = PbWriter::pooled();
+    m.encode_to(&mut w);
+    let r = f(&w.buf);
+    w.recycle();
+    r
+}
+
 impl PbWriter {
     pub fn new() -> Self {
         Self::default()
@@ -40,6 +89,17 @@ impl PbWriter {
     pub fn with_buf(mut buf: Vec<u8>) -> Self {
         buf.clear();
         PbWriter { buf }
+    }
+
+    /// Writer backed by a recycled thread-local buffer; pair with
+    /// [`PbWriter::recycle`] (or use [`encode_pooled`]).
+    pub fn pooled() -> Self {
+        PbWriter::with_buf(pool_take())
+    }
+
+    /// Return this writer's buffer to the thread-local pool.
+    pub fn recycle(self) {
+        pool_put(self.buf);
     }
 
     #[inline]
@@ -164,6 +224,10 @@ pub struct Field<'a> {
     pub wire_type: WireType,
     pub varint: u64,
     pub data: &'a [u8],
+    /// Byte offset of `data` within the buffer the reader was built over.
+    /// Lets [`Message::decode_buf`] implementations turn length-delimited
+    /// fields into zero-copy [`Buf`] slices: `buf.slice(f.data_start..f.data_start + f.data.len())`.
+    pub data_start: usize,
 }
 
 impl<'a> Field<'a> {
@@ -258,6 +322,7 @@ impl<'a> PbReader<'a> {
             wire_type,
             varint: varint_val,
             data,
+            data_start: self.r.pos - data.len(),
         }))
     }
 
@@ -276,10 +341,26 @@ pub trait Message: Sized {
 
     fn decode(buf: &[u8]) -> Result<Self>;
 
+    /// Decode from a shared buffer. The default delegates to [`decode`];
+    /// messages with large payload fields override this to keep those
+    /// fields as zero-copy slices of `buf` (see `RpcMsg`, `BitswapMsg`,
+    /// `Frame`).
+    ///
+    /// [`decode`]: Message::decode
+    fn decode_buf(buf: &Buf) -> Result<Self> {
+        Self::decode(buf.as_slice())
+    }
+
     fn encode(&self) -> Vec<u8> {
         let mut w = PbWriter::new();
         self.encode_to(&mut w);
         w.finish()
+    }
+
+    /// Encode into an owned shared buffer (for zero-copy send paths that
+    /// hold onto the encoded bytes).
+    fn encode_buf(&self) -> Buf {
+        Buf::from_vec(self.encode())
     }
 
     /// Encode with a varint length prefix (stream framing).
@@ -432,6 +513,46 @@ mod tests {
         let mut r = varint::Reader::new(&framed);
         let body = r.length_prefixed().unwrap();
         assert_eq!(Inner::decode(body).unwrap(), m);
+    }
+
+    #[test]
+    fn pooled_encoding_matches_and_reuses() {
+        let m = Inner { id: 300, tag: "pooled".into() };
+        let plain = m.encode();
+        let pooled = encode_pooled(&m, |b| b.to_vec());
+        assert_eq!(plain, pooled);
+        // Second pooled encode reuses the recycled buffer (behavioral check:
+        // output identical; capacity reuse is observable via no growth).
+        let again = encode_pooled(&m, |b| b.to_vec());
+        assert_eq!(plain, again);
+        assert_eq!(m.encode_buf(), plain);
+    }
+
+    #[test]
+    fn field_data_start_locates_payload() {
+        let mut w = PbWriter::new();
+        w.uint(1, 7);
+        w.bytes(4, b"payload-bytes");
+        let enc = w.finish();
+        let buf = Buf::from_vec(enc);
+        let mut r = PbReader::new(buf.as_slice());
+        let mut found = false;
+        while let Some(f) = r.next_field().unwrap() {
+            if f.number == 4 {
+                let z = buf.slice(f.data_start..f.data_start + f.data.len());
+                assert_eq!(z, b"payload-bytes");
+                assert_eq!(z.as_slice(), f.data);
+                found = true;
+            }
+        }
+        assert!(found);
+    }
+
+    #[test]
+    fn decode_buf_default_matches_decode() {
+        let m = Inner { id: 12, tag: "x".into() };
+        let buf = m.encode_buf();
+        assert_eq!(Inner::decode_buf(&buf).unwrap(), m);
     }
 
     #[test]
