@@ -8,11 +8,12 @@
 //! `make artifacts`), or a synthetic 3.5 MB blob otherwise.
 
 use lattica::content::DagManifest;
+use lattica::netsim::link::PathProfile;
 use lattica::netsim::topology::LinkProfile;
-use lattica::netsim::SECOND;
+use lattica::netsim::{MILLI, SECOND};
 use lattica::node::{run_until, NodeEvent};
 use lattica::protocols::gossip::GossipEvent;
-use lattica::scenarios::bootstrap_mesh;
+use lattica::scenarios::bootstrap_mesh_on;
 use lattica::util::cli::Args;
 use lattica::util::json::Json;
 use lattica::util::timefmt;
@@ -37,10 +38,20 @@ fn main() {
         timefmt::fmt_bytes(blob.len() as u64)
     );
 
+    // Network scenarios: the clean 1 Gbps mesh, and the same mesh across
+    // a lossy 75 ms WAN (what the CC subsystem + RACK recovery is for).
+    let lossy = Some(PathProfile::new(75 * MILLI, 3 * MILLI, 0.02));
+    let runs: [(&str, Option<PathProfile>, bool); 4] = [
+        ("lan", None, true),
+        ("lan", None, false),
+        ("lossy_wan", lossy, true),
+        ("lossy_wan", lossy, false),
+    ];
     let mut json_rows: Vec<Json> = Vec::new();
-    for p2p in [true, false] {
+    for (scenario, path, p2p) in runs {
         let wall_start = std::time::Instant::now();
-        let (mut world, nodes) = bootstrap_mesh(clusters + 1, if p2p { 41 } else { 42 }, LinkProfile::FIBER);
+        let (mut world, nodes) =
+            bootstrap_mesh_on(clusters + 1, if p2p { 41 } else { 42 }, LinkProfile::FIBER, path);
         let trainer = nodes[0].clone();
         let trainer_peer = trainer.borrow().peer_id();
         // Everyone subscribes to the model topic.
@@ -95,7 +106,8 @@ fn main() {
                 c.borrow_mut().fetch_blob(&mut world.net, root, vec![trainer_peer]);
                 let _ = providers;
             }
-            run_until(&mut world, 30 * SECOND, || {
+            let manifest_timeout = if path.is_some() { 120 * SECOND } else { 30 * SECOND };
+            run_until(&mut world, manifest_timeout, || {
                 nodes[1..].iter().all(|c| c.borrow().blockstore.has(&root))
             });
             for c in &nodes[1..] {
@@ -108,7 +120,8 @@ fn main() {
                     .fetch_manifest_chunks(&mut world.net, &root, providers)
                     .unwrap();
             }
-            let ok = run_until(&mut world, 120 * SECOND, || {
+            let chunk_timeout = if path.is_some() { 600 * SECOND } else { 120 * SECOND };
+            let ok = run_until(&mut world, chunk_timeout, || {
                 nodes[1..].iter().all(|c| {
                     let n = c.borrow();
                     DagManifest::load(&n.blockstore, &root)
@@ -127,18 +140,26 @@ fn main() {
             .map(|l| l.bytes_sent)
             .sum();
         let mean = sync_times.iter().sum::<f64>() / sync_times.len() as f64;
+        let health = trainer.borrow().swarm.transport_health();
         println!(
-            "  {}: mean sync {mean:.2}s/checkpoint, trainer egress {}",
+            "  [{scenario}] {}: mean sync {mean:.2}s/checkpoint, trainer egress {}, retx {}",
             if p2p { "lattica p2p   " } else { "central server" },
-            timefmt::fmt_bytes(egress)
+            timefmt::fmt_bytes(egress),
+            timefmt::fmt_bytes(health.bytes_retransmitted)
         );
         json_rows.push(Json::obj(vec![
+            ("scenario", Json::str(scenario)),
             ("mode", Json::str(if p2p { "p2p" } else { "central" })),
             ("mean_sync_secs", Json::num(mean)),
             ("trainer_egress_bytes", Json::num(egress as f64)),
             ("checkpoints", Json::num(checkpoints as f64)),
             ("clusters", Json::num(clusters as f64)),
             ("wall_secs", Json::num(wall_start.elapsed().as_secs_f64())),
+            ("cwnd", Json::num(health.mean_cwnd() as f64)),
+            ("srtt_ns", Json::num(health.mean_srtt() as f64)),
+            ("retx_bytes", Json::num(health.bytes_retransmitted as f64)),
+            ("loss_events", Json::num(health.loss_events as f64)),
+            ("pacer_utilization", Json::num(health.mean_pacer_utilization())),
         ]));
     }
     let doc = Json::obj(vec![

@@ -1,24 +1,28 @@
 //! Table 1: RPC throughput at 1000 concurrent calls (queries per second).
 //!
-//! Reproduces the paper's four network scenarios × two payload sizes.
-//! QPS is measured in virtual time over the full stack (protobuf framing,
-//! Noise-style AEAD, reliability, NAT-free paths); the Local row is also
-//! bounded by per-host CPU/stack cost which the simulator models as link
-//! serialization on loopback. Wall-clock throughput (how fast the real
-//! stack pushes calls through one core) is reported alongside — that is
-//! the number the zero-copy data path moves.
+//! Reproduces the paper's four network scenarios × two payload sizes,
+//! plus two WAN stress rows (LossyWan, Bufferbloat) that exercise the
+//! congestion-control subsystem: CUBIC and NewReno are compared against
+//! the seed's fixed 16 MB window, and each row exports transport health
+//! (cwnd, srtt, retransmitted bytes, loss events, pacer pressure).
+//!
+//! A priority-scheduler check runs on the lossy WAN: ping p99 is measured
+//! idle and again under a concurrent bulk Bitswap sync — the bulk class
+//! must not starve control traffic.
 //!
 //! Emits `BENCH_rpc_throughput.json` at the repo root so the perf
 //! trajectory is tracked across PRs.
 //!
-//! Usage: cargo bench --bench rpc_throughput [-- --calls N --payload small|large|both]
+//! Usage: cargo bench --bench rpc_throughput [-- --calls N]
 
-use lattica::metrics::{Histogram, QpsMeter};
+use lattica::metrics::{Histogram, QpsMeter, TransportHealth};
+use lattica::netsim::{MILLI, SECOND};
 use lattica::node::{LatticaNode, NodeEvent};
+use lattica::protocols::ping::PingEvent;
 use lattica::protocols::Ctx;
 use lattica::rpc::RpcEvent;
-use lattica::scenarios::{table1_world, EchoApp, NetScenario};
-use lattica::netsim::SECOND;
+use lattica::scenarios::{table1_world_cc, EchoApp, NetScenario};
+use lattica::transport::CcAlgorithm;
 use lattica::util::cli::Args;
 use lattica::util::json::Json;
 
@@ -28,10 +32,19 @@ struct ScenarioResult {
     /// Wall-clock seconds spent driving the scenario.
     wall_secs: f64,
     calls: usize,
+    /// Client-side transport health at the end of the run.
+    health: TransportHealth,
 }
 
-fn run_scenario(s: NetScenario, payload: usize, response: usize, calls: usize, concurrency: usize) -> ScenarioResult {
-    let (mut world, client, server) = table1_world(s, 77);
+fn run_scenario(
+    s: NetScenario,
+    cc: CcAlgorithm,
+    payload: usize,
+    response: usize,
+    calls: usize,
+    concurrency: usize,
+) -> ScenarioResult {
+    let (mut world, client, server) = table1_world_cc(s, 77, cc);
     server.borrow_mut().app = Some(Box::new(EchoApp { response_size: response }));
     let server_peer = server.borrow().peer_id();
 
@@ -73,12 +86,69 @@ fn run_scenario(s: NetScenario, payload: usize, response: usize, calls: usize, c
             break; // safety
         }
     }
+    let health = client.borrow().swarm.transport_health();
     ScenarioResult {
         qps: meter.qps(),
         lat,
         wall_secs: wall_start.elapsed().as_secs_f64(),
         calls: done,
+        health,
     }
+}
+
+/// Ping p99 on the lossy WAN, optionally under a concurrent bulk Bitswap
+/// sync (an 8 MB blob). Exercises the priority-aware stream scheduler:
+/// bulk must not starve the control class.
+fn ping_p99_lossy(with_bulk: bool) -> u64 {
+    let (mut world, client, server) =
+        table1_world_cc(NetScenario::LossyWan, 91, CcAlgorithm::Cubic);
+    let server_peer = server.borrow().peer_id();
+    let root = if with_bulk {
+        let blob: Vec<u8> = (0..8_000_000u32).map(|i| (i % 241) as u8).collect();
+        Some(server.borrow_mut().publish_blob(&mut world.net, "bulk", 1, &blob, 256 * 1024))
+    } else {
+        None
+    };
+    let mut lat = Histogram::new();
+    let mut next_ping = world.net.now();
+    let deadline = world.net.now() + 30 * SECOND;
+    while world.net.now() < deadline {
+        if let Some(root) = root {
+            client.borrow_mut().sync_blob(&mut world.net, root, &[server_peer]);
+        }
+        if world.net.now() >= next_ping {
+            let mut n = client.borrow_mut();
+            let LatticaNode { swarm, ping, .. } = &mut *n;
+            let mut ctx = Ctx::new(swarm, &mut world.net);
+            let _ = ping.ping(&mut ctx, &server_peer);
+            next_ping = world.net.now() + 250 * MILLI;
+        }
+        world.run_for(20 * MILLI);
+        for e in client.borrow_mut().drain_events() {
+            if let NodeEvent::Ping(PingEvent::Rtt { rtt, .. }) = e {
+                lat.record(rtt);
+            }
+        }
+    }
+    // Total starvation must fail loudly, not report p99 = 0.
+    assert!(
+        lat.len() >= 30,
+        "only {} ping RTTs measured (with_bulk={with_bulk}) — pings starved?",
+        lat.len()
+    );
+    lat.percentile(99.0)
+}
+
+fn health_fields(h: &TransportHealth) -> Vec<(&'static str, Json)> {
+    vec![
+        ("cwnd", Json::num(h.mean_cwnd() as f64)),
+        ("srtt_ns", Json::num(h.mean_srtt() as f64)),
+        ("retx_bytes", Json::num(h.bytes_retransmitted as f64)),
+        ("loss_events", Json::num(h.loss_events as f64)),
+        ("fast_retransmits", Json::num(h.fast_retransmits as f64)),
+        ("rto_events", Json::num(h.rto_events as f64)),
+        ("pacer_utilization", Json::num(h.mean_pacer_utilization())),
+    ]
 }
 
 fn main() {
@@ -99,8 +169,8 @@ fn main() {
     ];
     let mut rows = Vec::new();
     for (s, _, _) in paper {
-        let mut rs = run_scenario(s, small, small, calls, concurrency);
-        let mut rl = run_scenario(s, large, 128, calls / 4, concurrency);
+        let mut rs = run_scenario(s, CcAlgorithm::Cubic, small, small, calls, concurrency);
+        let mut rl = run_scenario(s, CcAlgorithm::Cubic, large, 128, calls / 4, concurrency);
         println!("{:<24} {:>14.0} {:>14.0}", s.label(), rs.qps, rl.qps);
         println!("    small: {}  [wall {:.2}s, {:.0} calls/wall-s]",
             rs.lat.summary(), rs.wall_secs, rs.calls as f64 / rs.wall_secs.max(1e-9));
@@ -114,12 +184,49 @@ fn main() {
         println!("{:<24} {:>14.0} {:>14.0}", s.label(), ps, pl);
     }
 
+    // WAN stress: congestion control comparison, 256 KB payloads.
+    println!();
+    println!("WAN stress (256 KB payload QPS by congestion controller):");
+    println!("{:<28} {:>10} {:>10} {:>10}", "Scenario", "fixed", "newreno", "cubic");
+    let mut stress_rows: Vec<Json> = Vec::new();
+    for s in [NetScenario::LossyWan, NetScenario::Bufferbloat] {
+        let mut qps = Vec::new();
+        for cc in [CcAlgorithm::Fixed, CcAlgorithm::NewReno, CcAlgorithm::Cubic] {
+            let mut r = run_scenario(s, cc, large, 128, (calls / 8).max(50), concurrency.min(128));
+            qps.push(r.qps);
+            let mut fields = vec![
+                ("scenario", Json::str(s.label())),
+                ("cc", Json::str(cc.name())),
+                ("qps_large", Json::num(r.qps)),
+                ("p50_large_ns", Json::num(r.lat.percentile(50.0) as f64)),
+                ("p99_large_ns", Json::num(r.lat.percentile(99.0) as f64)),
+                ("wall_secs", Json::num(r.wall_secs)),
+            ];
+            fields.extend(health_fields(&r.health));
+            stress_rows.push(Json::obj(fields));
+        }
+        println!("{:<28} {:>10.1} {:>10.1} {:>10.1}", s.label(), qps[0], qps[1], qps[2]);
+    }
+
+    // Priority scheduler: bulk Bitswap must not starve pings.
+    let ping_idle = ping_p99_lossy(false);
+    let ping_bulk = ping_p99_lossy(true);
+    let ping_ratio = ping_bulk as f64 / ping_idle.max(1) as f64;
+    println!();
+    println!(
+        "Priority check (LossyWan): ping p99 idle {} vs under bulk sync {} ({:.2}x)",
+        lattica::util::timefmt::fmt_ns(ping_idle),
+        lattica::util::timefmt::fmt_ns(ping_bulk),
+        ping_ratio
+    );
+
     // Machine-readable result for cross-PR tracking.
     let json_rows: Vec<Json> = rows
         .iter_mut()
         .map(|(s, rs, rl)| {
-            Json::obj(vec![
+            let mut fields = vec![
                 ("scenario", Json::str(s.label())),
+                ("cc", Json::str("cubic")),
                 ("qps_small", Json::num(rs.qps)),
                 ("qps_large", Json::num(rl.qps)),
                 ("p50_small_ns", Json::num(rs.lat.percentile(50.0) as f64)),
@@ -128,7 +235,9 @@ fn main() {
                 ("wall_secs_large", Json::num(rl.wall_secs)),
                 ("calls_per_wall_sec_small", Json::num(rs.calls as f64 / rs.wall_secs.max(1e-9))),
                 ("calls_per_wall_sec_large", Json::num(rl.calls as f64 / rl.wall_secs.max(1e-9))),
-            ])
+            ];
+            fields.extend(health_fields(&rl.health));
+            Json::obj(fields)
         })
         .collect();
     let doc = Json::obj(vec![
@@ -136,6 +245,10 @@ fn main() {
         ("calls", Json::num(calls as f64)),
         ("concurrency", Json::num(concurrency as f64)),
         ("rows", Json::Arr(json_rows)),
+        ("wan_stress_rows", Json::Arr(stress_rows)),
+        ("ping_p99_idle_ns", Json::num(ping_idle as f64)),
+        ("ping_p99_under_bulk_ns", Json::num(ping_bulk as f64)),
+        ("ping_p99_bulk_ratio", Json::num(ping_ratio)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_rpc_throughput.json");
     match std::fs::write(path, format!("{doc}\n")) {
@@ -159,6 +272,10 @@ fn main() {
     assert!(
         rows[0].1.qps > 1000.0,
         "Local small-payload QPS must be in the paper's order (>1k)"
+    );
+    assert!(
+        ping_ratio <= 2.0,
+        "bulk sync must not more than double ping p99 (got {ping_ratio:.2}x)"
     );
     println!("\nshape check OK: QPS degrades with network distance in both payload classes");
 }

@@ -79,6 +79,88 @@ impl Histogram {
     }
 }
 
+/// Snapshot of one connection's transport health (congestion control,
+/// loss recovery, pacing). Produced by `Connection::stats`, aggregated by
+/// [`TransportHealth`], and surfaced in the bench JSON so the perf
+/// trajectory can attribute regressions to the transport.
+#[derive(Clone, Copy, Debug)]
+pub struct TransportStats {
+    /// Congestion-controller name ("fixed" | "newreno" | "cubic").
+    pub cc: &'static str,
+    /// Effective congestion window in bytes.
+    pub cwnd: u64,
+    /// Smoothed RTT.
+    pub srtt: Time,
+    /// Bytes currently in flight.
+    pub inflight: u64,
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+    pub bytes_retransmitted: u64,
+    pub packets_retransmitted: u64,
+    /// Loss rounds (fast retransmit + RTO).
+    pub loss_events: u64,
+    pub fast_retransmits: u64,
+    pub rto_events: u64,
+    /// Share of send opportunities delayed by the pacer (0..1).
+    pub pacer_utilization: f64,
+}
+
+/// Aggregate of [`TransportStats`] across a node's connections.
+#[derive(Clone, Debug, Default)]
+pub struct TransportHealth {
+    pub conns: usize,
+    cwnd_sum: u64,
+    srtt_sum: Time,
+    pacer_util_sum: f64,
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+    pub bytes_retransmitted: u64,
+    pub packets_retransmitted: u64,
+    pub loss_events: u64,
+    pub fast_retransmits: u64,
+    pub rto_events: u64,
+}
+
+impl TransportHealth {
+    pub fn record(&mut self, s: &TransportStats) {
+        self.conns += 1;
+        self.cwnd_sum += s.cwnd;
+        self.srtt_sum += s.srtt;
+        self.pacer_util_sum += s.pacer_utilization;
+        self.bytes_sent += s.bytes_sent;
+        self.bytes_received += s.bytes_received;
+        self.bytes_retransmitted += s.bytes_retransmitted;
+        self.packets_retransmitted += s.packets_retransmitted;
+        self.loss_events += s.loss_events;
+        self.fast_retransmits += s.fast_retransmits;
+        self.rto_events += s.rto_events;
+    }
+
+    pub fn mean_cwnd(&self) -> u64 {
+        if self.conns == 0 {
+            0
+        } else {
+            self.cwnd_sum / self.conns as u64
+        }
+    }
+
+    pub fn mean_srtt(&self) -> Time {
+        if self.conns == 0 {
+            0
+        } else {
+            self.srtt_sum / self.conns as u64
+        }
+    }
+
+    pub fn mean_pacer_utilization(&self) -> f64 {
+        if self.conns == 0 {
+            0.0
+        } else {
+            self.pacer_util_sum / self.conns as f64
+        }
+    }
+}
+
 /// Completed-ops counter over a virtual-time window → QPS.
 #[derive(Clone, Debug, Default)]
 pub struct QpsMeter {
@@ -128,6 +210,34 @@ mod tests {
         assert!((99..=100).contains(&p99), "p99={p99}");
         assert_eq!(h.max(), 100);
         assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transport_health_aggregates() {
+        let mut h = TransportHealth::default();
+        assert_eq!(h.mean_cwnd(), 0);
+        let s = TransportStats {
+            cc: "cubic",
+            cwnd: 1000,
+            srtt: 10,
+            inflight: 0,
+            bytes_sent: 5,
+            bytes_received: 6,
+            bytes_retransmitted: 7,
+            packets_retransmitted: 1,
+            loss_events: 2,
+            fast_retransmits: 1,
+            rto_events: 1,
+            pacer_utilization: 0.5,
+        };
+        h.record(&s);
+        h.record(&TransportStats { cwnd: 3000, pacer_utilization: 0.0, ..s });
+        assert_eq!(h.conns, 2);
+        assert_eq!(h.mean_cwnd(), 2000);
+        assert_eq!(h.mean_srtt(), 10);
+        assert_eq!(h.bytes_retransmitted, 14);
+        assert_eq!(h.loss_events, 4);
+        assert!((h.mean_pacer_utilization() - 0.25).abs() < 1e-9);
     }
 
     #[test]

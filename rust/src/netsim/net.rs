@@ -373,6 +373,7 @@ mod tests {
         let slow = LinkProfile {
             up_bps: 1_000_000,
             down_bps: 0,
+            ..LinkProfile::UNLIMITED
         };
         let a = t.public_host(0, slow);
         let b = t.public_host(0, LinkProfile::UNLIMITED);

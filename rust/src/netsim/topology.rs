@@ -12,6 +12,9 @@ use super::{Time, MICRO, MILLI};
 /// Region index into the path matrix.
 pub type Region = usize;
 
+/// Default access-link queue: ~50 ms of buffering (a shallow router).
+pub const DEFAULT_QUEUE_NS: Time = 50 * MILLI;
+
 /// Link profile presets for access links.
 #[derive(Clone, Copy, Debug)]
 pub struct LinkProfile {
@@ -19,6 +22,9 @@ pub struct LinkProfile {
     pub up_bps: u64,
     /// Downlink bytes/sec (0 = unlimited).
     pub down_bps: u64,
+    /// Queue depth (ns of serialization) before drop-tail; deep values
+    /// model bufferbloat.
+    pub queue_ns: Time,
 }
 
 impl LinkProfile {
@@ -26,22 +32,35 @@ impl LinkProfile {
     pub const DATACENTER: LinkProfile = LinkProfile {
         up_bps: 1_250_000_000,
         down_bps: 1_250_000_000,
+        queue_ns: DEFAULT_QUEUE_NS,
     };
 
     /// 1 Gbps symmetric (well-connected edge).
     pub const FIBER: LinkProfile = LinkProfile {
         up_bps: 125_000_000,
         down_bps: 125_000_000,
+        queue_ns: DEFAULT_QUEUE_NS,
     };
 
     /// 100/40 Mbps consumer broadband.
     pub const BROADBAND: LinkProfile = LinkProfile {
         up_bps: 5_000_000,
         down_bps: 12_500_000,
+        queue_ns: DEFAULT_QUEUE_NS,
     };
 
     /// Unlimited (control experiments).
-    pub const UNLIMITED: LinkProfile = LinkProfile { up_bps: 0, down_bps: 0 };
+    pub const UNLIMITED: LinkProfile = LinkProfile {
+        up_bps: 0,
+        down_bps: 0,
+        queue_ns: DEFAULT_QUEUE_NS,
+    };
+
+    /// Same rates, different queue depth (e.g. a bufferbloated CPE).
+    pub fn with_queue(mut self, queue_ns: Time) -> LinkProfile {
+        self.queue_ns = queue_ns;
+        self
+    }
 }
 
 /// Per-host configuration.
@@ -120,6 +139,13 @@ impl TopologyBuilder {
         t
     }
 
+    /// Shaper for one direction of an access link.
+    fn shaper(bps: u64, queue_ns: Time) -> Shaper {
+        let mut s = Shaper::new(bps);
+        s.max_queue_ns = queue_ns;
+        s
+    }
+
     /// Add a publicly reachable host; returns its host id.
     pub fn public_host(&mut self, region: Region, link: LinkProfile) -> u32 {
         let id = self.hosts.len() as u32;
@@ -129,8 +155,8 @@ impl TopologyBuilder {
                 link,
                 nat: None,
             },
-            uplink: Shaper::new(link.up_bps),
-            downlink: Shaper::new(link.down_bps),
+            uplink: Self::shaper(link.up_bps, link.queue_ns),
+            downlink: Self::shaper(link.down_bps, link.queue_ns),
             lo: {
                 let mut s = Shaper::new(self.loopback_bps);
                 s.per_pkt_overhead = 12 * 1024;
@@ -165,8 +191,8 @@ impl TopologyBuilder {
                 link,
                 nat: Some(nat_id),
             },
-            uplink: Shaper::new(link.up_bps),
-            downlink: Shaper::new(link.down_bps),
+            uplink: Self::shaper(link.up_bps, link.queue_ns),
+            downlink: Self::shaper(link.down_bps, link.queue_ns),
             lo: {
                 let mut s = Shaper::new(self.loopback_bps);
                 s.per_pkt_overhead = 12 * 1024;

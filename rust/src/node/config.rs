@@ -6,6 +6,7 @@
 //! to `section.key`), `#` comments, string/integer/bool/float values.
 
 use crate::multiaddr::Proto;
+use crate::transport::CcAlgorithm;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
@@ -18,6 +19,10 @@ pub struct NodeConfig {
     pub port: u16,
     /// Preferred transport.
     pub proto: Proto,
+    /// Congestion control for this node's connections (per-role: a
+    /// trainer pushing checkpoints across continents wants CUBIC; a
+    /// config can pin "newreno" or the "fixed" seed baseline).
+    pub cc: CcAlgorithm,
     /// Serve as a circuit relay.
     pub relay_enabled: bool,
     /// Serve as a rendezvous registry.
@@ -32,6 +37,7 @@ impl Default for NodeConfig {
             seed: 1,
             port: 4001,
             proto: Proto::QuicLike,
+            cc: CcAlgorithm::Cubic,
             relay_enabled: false,
             rendezvous_server: false,
             label: String::new(),
@@ -78,6 +84,11 @@ impl NodeConfig {
         }
         if let Some(v) = get("transport").and_then(|v| v.as_str()) {
             c.proto = if v == "tcp" { Proto::TcpLike } else { Proto::QuicLike };
+        }
+        if let Some(v) = get("cc").and_then(|v| v.as_str()) {
+            if let Some(algo) = CcAlgorithm::parse(v) {
+                c.cc = algo;
+            }
         }
         c
     }
@@ -181,6 +192,7 @@ global_seed = 42
 seed = 7
 port = 4002
 relay = true
+cc = "newreno"
 label = "edge-1"  # trailing comment
 lr = 0.5
 "#;
@@ -196,6 +208,7 @@ lr = 0.5
         assert_eq!(c.port, 4002);
         assert!(c.relay_enabled);
         assert_eq!(c.label, "edge-1");
+        assert_eq!(c.cc, CcAlgorithm::NewReno);
     }
 
     #[test]
@@ -208,6 +221,7 @@ lr = 0.5
         let c = NodeConfig::default();
         assert_eq!(c.port, 4001);
         assert!(!c.relay_enabled);
+        assert_eq!(c.cc, CcAlgorithm::Cubic);
         let r = NodeConfig::relay(9);
         assert!(r.relay_enabled && r.rendezvous_server);
     }

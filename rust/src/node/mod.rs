@@ -19,7 +19,7 @@ use crate::protocols::dcutr::{Dcutr, DCUTR_PROTO};
 use crate::protocols::gossip::{Gossip, GossipEvent, GOSSIP_PROTO};
 use crate::protocols::identify::{Identify, IDENTIFY_PROTO};
 use crate::protocols::kad::{Kademlia, KadEvent, PeerEntry, KAD_PROTO};
-use crate::protocols::ping::{Ping, PING_PROTO};
+use crate::protocols::ping::{Ping, PingEvent, PING_PROTO};
 use crate::protocols::rendezvous::{Rendezvous, RendezvousEvent, RENDEZVOUS_PROTO};
 use crate::protocols::Ctx;
 use crate::rpc::{RpcEvent, RpcNode, RPC_PROTO, RPC_STREAM_PROTO};
@@ -47,6 +47,7 @@ pub enum NodeEvent {
     Gossip(GossipEvent),
     Rpc(RpcEvent),
     Rendezvous(RendezvousEvent),
+    Ping(PingEvent),
     PunchResult { peer: PeerId, success: bool },
     ObservedAddr { addr: SimAddr },
 }
@@ -112,10 +113,11 @@ impl LatticaNode {
         let local_peer = keypair.peer_id();
         let addr = SimAddr::new(host, cfg.port);
         let eid = world.next_endpoint_id();
-        let swarm_cfg = SwarmConfig {
+        let mut swarm_cfg = SwarmConfig {
             relay_enabled: cfg.relay_enabled,
             ..SwarmConfig::default()
         };
+        swarm_cfg.conn.cc = cfg.cc;
         let rng = world.net.rng.fork();
         let swarm = Swarm::new(keypair, eid, addr, swarm_cfg, rng);
         let protocols: Vec<String> = [
@@ -344,7 +346,9 @@ impl LatticaNode {
         while let Some(e) = self.rendezvous.poll_event() {
             self.events.push_back(NodeEvent::Rendezvous(e));
         }
-        while let Some(_e) = self.ping.poll_event() {}
+        while let Some(e) = self.ping.poll_event() {
+            self.events.push_back(NodeEvent::Ping(e));
+        }
         while let Some(_e) = self.identify.poll_event() {}
         while let Some(_e) = self.autonat.poll_event() {}
         while let Some(_e) = self.dcutr.poll_event() {}
@@ -481,7 +485,9 @@ impl LatticaNode {
     pub fn crdt_sync_with(&mut self, net: &mut Net, peer: &PeerId) -> Result<()> {
         let state = self.crdt.encode();
         let mut ctx = Ctx::new(&mut self.swarm, net);
-        let (cid, stream) = ctx.open_stream(peer, CRDT_PROTO)?;
+        // Full-state anti-entropy can be large: background class.
+        let (cid, stream) =
+            ctx.open_stream_class(peer, CRDT_PROTO, crate::transport::TrafficClass::Bulk)?;
         ctx.send(cid, stream, &state)?;
         ctx.finish(cid, stream);
         Ok(())

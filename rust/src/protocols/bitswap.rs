@@ -155,7 +155,11 @@ impl Bitswap {
         if let Some(&(cid, stream)) = self.streams.get(peer) {
             return Ok((cid, stream));
         }
-        let (cid, stream) = ctx.open_stream(peer, BITSWAP_PROTO)?;
+        // Block transfer is background traffic: the bulk class keeps
+        // model sync from starving pings, DCUtR and gossip on a
+        // congested uplink.
+        let (cid, stream) =
+            ctx.open_stream_class(peer, BITSWAP_PROTO, crate::transport::TrafficClass::Bulk)?;
         self.streams.insert(*peer, (cid, stream));
         Ok((cid, stream))
     }

@@ -37,9 +37,20 @@ impl<'a> Ctx<'a> {
         self.net.now()
     }
 
-    /// Open a stream to a connected peer.
+    /// Open a stream to a connected peer (class derived from the proto).
     pub fn open_stream(&mut self, peer: &PeerId, proto: &str) -> anyhow::Result<(u64, u64)> {
         self.swarm.open_stream(self.net, peer, proto)
+    }
+
+    /// Open a stream with an explicit scheduling class (control > unary
+    /// RPC > streaming > bulk; see `transport/sched.rs`).
+    pub fn open_stream_class(
+        &mut self,
+        peer: &PeerId,
+        proto: &str,
+        class: crate::transport::TrafficClass,
+    ) -> anyhow::Result<(u64, u64)> {
+        self.swarm.open_stream_class(self.net, peer, proto, class)
     }
 
     /// Send a message (copied into the stream framing).

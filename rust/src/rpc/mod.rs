@@ -12,6 +12,7 @@
 use crate::identity::PeerId;
 use crate::netsim::{Time, SECOND};
 use crate::protocols::Ctx;
+use crate::transport::TrafficClass;
 use crate::util::buf::Buf;
 use crate::wire::{encode_pooled, Message, PbReader, PbWriter};
 use anyhow::Result;
@@ -261,7 +262,7 @@ impl RpcNode {
         method: &str,
         payload: impl Into<Buf>,
     ) -> Result<u64> {
-        let (conn, stream) = ctx.open_stream(peer, RPC_PROTO)?;
+        let (conn, stream) = ctx.open_stream_class(peer, RPC_PROTO, TrafficClass::Unary)?;
         let msg = RpcMsg {
             kind: M_REQUEST,
             service: service.to_string(),
@@ -317,7 +318,7 @@ impl RpcNode {
         peer: &PeerId,
         service: &str,
     ) -> Result<StreamHandle> {
-        let (conn, stream) = ctx.open_stream(peer, RPC_STREAM_PROTO)?;
+        let (conn, stream) = ctx.open_stream_class(peer, RPC_STREAM_PROTO, TrafficClass::Streaming)?;
         let msg = RpcMsg {
             kind: M_STREAM_OPEN,
             service: service.to_string(),

@@ -17,7 +17,9 @@ use std::rc::Rc;
 
 pub type Node = Rc<RefCell<LatticaNode>>;
 
-/// The paper's Table 1 network scenarios.
+/// The paper's Table 1 network scenarios, plus two WAN stress scenarios
+/// that exercise the congestion-control subsystem (the netsim's loss and
+/// bounded-queue modeling).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum NetScenario {
     /// Client and server colocated on one host.
@@ -28,6 +30,12 @@ pub enum NetScenario {
     SameRegionWan,
     /// Across continents: 75 ms one-way, 1 Gbps.
     InterContinent,
+    /// Lossy inter-continent path: 75 ms one-way, 1 Gbps, 2 % random
+    /// loss. RTO-driven recovery collapses here; RACK + CC is the axis.
+    LossyWan,
+    /// Bufferbloat: 1 Gbps metro path behind a 250 ms drop-tail queue,
+    /// with a trace of random loss — the high-BDP congestion scenario.
+    Bufferbloat,
 }
 
 impl NetScenario {
@@ -37,20 +45,35 @@ impl NetScenario {
             NetScenario::SameRegionLan => "Same region (LAN)",
             NetScenario::SameRegionWan => "Same region (WAN)",
             NetScenario::InterContinent => "Inter-continent (WAN)",
+            NetScenario::LossyWan => "Lossy WAN (2% loss)",
+            NetScenario::Bufferbloat => "Bufferbloat (250ms queue)",
         }
     }
 
-    pub const ALL: [NetScenario; 4] = [
+    pub const ALL: [NetScenario; 6] = [
         NetScenario::Local,
         NetScenario::SameRegionLan,
         NetScenario::SameRegionWan,
         NetScenario::InterContinent,
+        NetScenario::LossyWan,
+        NetScenario::Bufferbloat,
     ];
 }
 
 /// Two public nodes (client, server) under a Table 1 scenario.
 /// The paper's testbed: 4-core, 8 GB machines on 10 Gbps networks.
 pub fn table1_world(s: NetScenario, seed: u64) -> (World, Node, Node) {
+    table1_world_cc(s, seed, crate::transport::CcAlgorithm::Cubic)
+}
+
+/// [`table1_world`] with an explicit congestion-control algorithm on both
+/// nodes (the benches compare CUBIC/NewReno against the seed's fixed
+/// window on the WAN stress scenarios).
+pub fn table1_world_cc(
+    s: NetScenario,
+    seed: u64,
+    cc: crate::transport::CcAlgorithm,
+) -> (World, Node, Node) {
     let mut t = TopologyBuilder::new(2);
     match s {
         NetScenario::Local => {
@@ -66,27 +89,38 @@ pub fn table1_world(s: NetScenario, seed: u64) -> (World, Node, Node) {
         NetScenario::InterContinent => {
             t.path(0, 1, PathProfile::new(75 * MILLI, 3 * MILLI, 0.001));
         }
+        NetScenario::LossyWan => {
+            t.path(0, 1, PathProfile::new(75 * MILLI, 3 * MILLI, 0.02));
+        }
+        NetScenario::Bufferbloat => {
+            t.intra(0, PathProfile::new(10 * MILLI, MILLI, 0.0005));
+        }
     }
     let link = match s {
-        NetScenario::InterContinent => LinkProfile::FIBER, // 1 Gbps WAN egress
-        _ => LinkProfile::DATACENTER,                      // 10 Gbps
+        // 1 Gbps WAN egress.
+        NetScenario::InterContinent | NetScenario::LossyWan => LinkProfile::FIBER,
+        // 1 Gbps behind a deep drop-tail queue.
+        NetScenario::Bufferbloat => LinkProfile::FIBER.with_queue(250 * MILLI),
+        _ => LinkProfile::DATACENTER, // 10 Gbps
     };
     let h_server = t.public_host(0, link);
     let (h_client, same_host) = match s {
         NetScenario::Local => (h_server, true),
-        NetScenario::InterContinent => (t.public_host(1, link), false),
+        NetScenario::InterContinent | NetScenario::LossyWan => (t.public_host(1, link), false),
         _ => (t.public_host(0, link), false),
     };
     let mut world = World::new(t.build(seed));
     let server = LatticaNode::spawn(&mut world, h_server, {
         let mut c = NodeConfig::with_seed(seed * 10 + 1);
         c.label = "server".into();
+        c.cc = cc;
         c
     });
     let client = LatticaNode::spawn(&mut world, h_client, {
         let mut c = NodeConfig::with_seed(seed * 10 + 2);
         c.port = if same_host { 4002 } else { 4001 };
         c.label = "client".into();
+        c.cc = cc;
         c
     });
     let server_ma = server.borrow().listen_addr();
@@ -153,7 +187,21 @@ pub fn oracle_pair_success(a: Option<NatType>, b: Option<NatType>) -> bool {
 
 /// A mesh of `n` public nodes in one region bootstrapped through node 0.
 pub fn bootstrap_mesh(n: usize, seed: u64, link: LinkProfile) -> (World, Vec<Node>) {
+    bootstrap_mesh_on(n, seed, link, None)
+}
+
+/// [`bootstrap_mesh`] with an optional override of the intra-region path
+/// (e.g. a lossy WAN between geo-distributed clusters).
+pub fn bootstrap_mesh_on(
+    n: usize,
+    seed: u64,
+    link: LinkProfile,
+    path: Option<PathProfile>,
+) -> (World, Vec<Node>) {
     let mut t = TopologyBuilder::paper_regions();
+    if let Some(p) = path {
+        t.intra(0, p);
+    }
     let hosts: Vec<u32> = (0..n).map(|_| t.public_host(0, link)).collect();
     let mut world = World::new(t.build(seed));
     let nodes: Vec<Node> = hosts

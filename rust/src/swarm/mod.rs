@@ -19,7 +19,7 @@ use crate::multiaddr::{Multiaddr, Proto, SimAddr};
 use crate::netsim::{EndpointId, Net, Time, MILLI};
 use crate::transport::connection::{ConnEvent, Connection, ConnectionConfig, Role, RxInfo};
 use crate::transport::packet::Packet;
-use crate::transport::TransportProfile;
+use crate::transport::{TrafficClass, TransportProfile};
 use crate::util::buf::Buf;
 use crate::util::Rng;
 use crate::wire::Message;
@@ -284,6 +284,21 @@ impl Swarm {
         self.conns.get(&cid).map(|c| c.conn.srtt())
     }
 
+    /// Transport-health snapshot for one connection.
+    pub fn connection_stats(&self, cid: u64) -> Option<crate::metrics::TransportStats> {
+        self.conns.get(&cid).map(|c| c.conn.stats())
+    }
+
+    /// Aggregate transport health across all connections (cwnd, srtt,
+    /// retransmissions, loss events, pacer pressure).
+    pub fn transport_health(&self) -> crate::metrics::TransportHealth {
+        let mut h = crate::metrics::TransportHealth::default();
+        for c in self.conns.values() {
+            h.record(&c.conn.stats());
+        }
+        h
+    }
+
     pub fn connection_backlog(&self, cid: u64) -> u64 {
         self.conns.get(&cid).map_or(0, |c| c.conn.backlog())
     }
@@ -342,20 +357,43 @@ impl Swarm {
         Ok(cid)
     }
 
-    /// Open a stream to `peer` on the best available connection.
+    /// Open a stream to `peer` on the best available connection. The
+    /// scheduling class defaults from the protocol name.
     pub fn open_stream(&mut self, net: &mut Net, peer: &PeerId, proto: &str) -> Result<(u64, u64)> {
+        self.open_stream_class(net, peer, proto, TrafficClass::for_proto(proto))
+    }
+
+    /// Open a stream to `peer` with an explicit traffic class.
+    pub fn open_stream_class(
+        &mut self,
+        net: &mut Net,
+        peer: &PeerId,
+        proto: &str,
+        class: TrafficClass,
+    ) -> Result<(u64, u64)> {
         let cid = *self
             .conns_to(peer)
             .first()
             .with_context(|| format!("no connection to {peer}"))?;
-        let stream = self.open_stream_on(net, cid, proto)?;
+        let stream = self.open_stream_on_class(net, cid, proto, class)?;
         Ok((cid, stream))
     }
 
     /// Open a stream on a specific connection.
     pub fn open_stream_on(&mut self, net: &mut Net, cid: u64, proto: &str) -> Result<u64> {
+        self.open_stream_on_class(net, cid, proto, TrafficClass::for_proto(proto))
+    }
+
+    /// Open a stream on a specific connection with an explicit class.
+    pub fn open_stream_on_class(
+        &mut self,
+        net: &mut Net,
+        cid: u64,
+        proto: &str,
+        class: TrafficClass,
+    ) -> Result<u64> {
         let c = self.conns.get_mut(&cid).context("unknown connection")?;
-        let stream = c.conn.open_stream(proto);
+        let stream = c.conn.open_stream_class(proto, class);
         c.stream_protos.insert(stream, proto.to_string());
         self.flush_conn(net, cid);
         Ok(stream)
@@ -366,6 +404,8 @@ impl Swarm {
         let c = self.conns.get_mut(&cid).context("unknown connection")?;
         c.conn.send_msg(stream, msg)?;
         self.flush_conn(net, cid);
+        // The flush may be pacer-throttled: arm the refill deadline.
+        self.arm_tick_for(net, cid);
         Ok(())
     }
 
@@ -375,6 +415,7 @@ impl Swarm {
         let c = self.conns.get_mut(&cid).context("unknown connection")?;
         c.conn.send_msg_buf(stream, msg)?;
         self.flush_conn(net, cid);
+        self.arm_tick_for(net, cid);
         Ok(())
     }
 
@@ -382,6 +423,7 @@ impl Swarm {
         if let Some(c) = self.conns.get_mut(&cid) {
             c.conn.finish_stream(stream);
             self.flush_conn(net, cid);
+            self.arm_tick_for(net, cid);
         }
     }
 
@@ -1056,12 +1098,26 @@ impl Swarm {
     pub fn arm_tick(&mut self, net: &mut Net) {
         let now = net.now();
         if let Some(d) = self.next_deadline(now) {
-            let d = d.max(now + 100); // clamp: never schedule in the past
-            if self.tick_armed_until == 0 || d < self.tick_armed_until || now >= self.tick_armed_until
-            {
-                net.set_timer(self.endpoint_id, d - now, TIMER_SWARM_TICK);
-                self.tick_armed_until = d;
-            }
+            self.arm_at(net, now, d);
+        }
+    }
+
+    /// Arm the tick for one connection's deadline only — the hot send
+    /// paths use this to avoid rescanning every connection per message.
+    fn arm_tick_for(&mut self, net: &mut Net, cid: u64) {
+        let now = net.now();
+        let d = self.conns.get(&cid).and_then(|c| c.conn.next_timeout(now));
+        if let Some(d) = d {
+            self.arm_at(net, now, d);
+        }
+    }
+
+    fn arm_at(&mut self, net: &mut Net, now: Time, d: Time) {
+        let d = d.max(now + 100); // clamp: never schedule in the past
+        if self.tick_armed_until == 0 || d < self.tick_armed_until || now >= self.tick_armed_until
+        {
+            net.set_timer(self.endpoint_id, d - now, TIMER_SWARM_TICK);
+            self.tick_armed_until = d;
         }
     }
 

@@ -1,0 +1,517 @@
+//! Pluggable congestion control for the connection machine.
+//!
+//! The connection used to cap in-flight bytes with a fixed budget
+//! (`max_inflight`, a congestion-window stand-in). This module replaces it
+//! with a real [`CongestionController`]: the controller owns the window,
+//! grows it on acknowledgments and shrinks it on loss rounds, and the
+//! connection clamps the result with `max_inflight` (which survives as a
+//! hard upper bound — relay tunnels still pin it low).
+//!
+//! Two real controllers are provided — **NewReno** (RFC 6582 shape: slow
+//! start + AIMD) and **CUBIC** (RFC 8312: cubic window recovery toward the
+//! pre-loss plateau, beta 0.7, TCP-friendly floor) — plus a **fixed**
+//! window that reproduces the seed's behaviour for baselines and tunnels.
+//!
+//! Controllers respond to a *loss round*, not every lost packet: a loss
+//! whose packet was sent before the current recovery episode started is
+//! part of the same round and must not shrink the window again (standard
+//! once-per-RTT reduction). Both implementations enforce this with a
+//! `recovery_start` timestamp compared against the lost packet's send time.
+
+use super::rtt::RttEstimator;
+use crate::netsim::Time;
+
+/// Nominal segment size used for window arithmetic (datagram payload minus
+/// packet/AEAD/frame overhead; the simulator MTU is 1400).
+pub const MSS: u64 = 1200;
+
+/// Initial congestion window (generous: the paper's testbed is datacenter
+/// links; lossy paths shrink it within one round trip).
+pub const INITIAL_CWND: u64 = 32 * MSS;
+
+/// Floor: never close the window below two segments.
+pub const MIN_CWND: u64 = 2 * MSS;
+
+/// Congestion-control algorithm selector (per role via `NodeConfig`, per
+/// connection via `ConnectionConfig`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CcAlgorithm {
+    /// Seed behaviour: a constant window (`max_inflight` clamps it).
+    Fixed,
+    /// Slow start + AIMD with once-per-round halving.
+    NewReno,
+    /// RFC 8312 cubic growth with fast convergence.
+    Cubic,
+}
+
+impl CcAlgorithm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CcAlgorithm::Fixed => "fixed",
+            CcAlgorithm::NewReno => "newreno",
+            CcAlgorithm::Cubic => "cubic",
+        }
+    }
+
+    /// Parse a config-file value ("fixed" | "newreno" | "cubic").
+    pub fn parse(s: &str) -> Option<CcAlgorithm> {
+        match s.to_ascii_lowercase().as_str() {
+            "fixed" => Some(CcAlgorithm::Fixed),
+            "newreno" | "reno" => Some(CcAlgorithm::NewReno),
+            "cubic" => Some(CcAlgorithm::Cubic),
+            _ => None,
+        }
+    }
+
+    /// Build a controller whose window never grows past `max_cwnd` (the
+    /// connection's `max_inflight` ceiling). Without the cap the internal
+    /// window could inflate ~2× past the clamp on a clean path, making
+    /// the first loss round's multiplicative decrease a no-op and (for
+    /// CUBIC) recording a plateau the path never carried.
+    pub fn build(&self, max_cwnd: u64) -> Box<dyn CongestionController> {
+        match self {
+            CcAlgorithm::Fixed => Box::new(FixedWindow::new(u64::MAX)),
+            CcAlgorithm::NewReno => {
+                let mut c = NewReno::new();
+                c.max_cwnd = max_cwnd;
+                Box::new(c)
+            }
+            CcAlgorithm::Cubic => {
+                let mut c = Cubic::new();
+                c.max_cwnd = max_cwnd;
+                Box::new(c)
+            }
+        }
+    }
+}
+
+/// The congestion-controller contract (see DESIGN.md §Congestion control).
+///
+/// * `on_ack` is called once per newly acknowledged packet, with the
+///   in-flight byte count *before* this ACK was processed so controllers
+///   can skip growth while application-limited.
+/// * `on_loss` is called once per lost packet; `sent_at` lets the
+///   controller collapse a burst of losses into one round. `persistent`
+///   marks RTO-driven loss (no ack clock left): collapse to the minimum
+///   window instead of the multiplicative decrease.
+/// * `cwnd` returns the current window in bytes; the connection clamps it
+///   to `[MIN_CWND, max_inflight]`.
+pub trait CongestionController {
+    fn on_ack(
+        &mut self,
+        now: Time,
+        sent_at: Time,
+        bytes: u64,
+        prior_inflight: u64,
+        rtt: &RttEstimator,
+    );
+    fn on_loss(&mut self, now: Time, sent_at: Time, persistent: bool, rtt: &RttEstimator);
+    fn cwnd(&self) -> u64;
+    fn name(&self) -> &'static str;
+}
+
+/// Whether an ACK should grow the window: growth is earned only while the
+/// sender is actually window-limited, otherwise idle periods inflate cwnd
+/// far past what the path ever carried.
+fn cwnd_limited(prior_inflight: u64, bytes: u64, cwnd: u64) -> bool {
+    prior_inflight + bytes >= cwnd / 2
+}
+
+// ---------------------------------------------------------------------
+// Fixed window (seed baseline)
+// ---------------------------------------------------------------------
+
+/// Constant window: the seed's `max_inflight` budget as a controller.
+#[derive(Debug)]
+pub struct FixedWindow {
+    window: u64,
+}
+
+impl FixedWindow {
+    pub fn new(window: u64) -> FixedWindow {
+        FixedWindow { window }
+    }
+}
+
+impl CongestionController for FixedWindow {
+    fn on_ack(&mut self, _: Time, _: Time, _: u64, _: u64, _: &RttEstimator) {}
+    fn on_loss(&mut self, _: Time, _: Time, _: bool, _: &RttEstimator) {}
+
+    fn cwnd(&self) -> u64 {
+        self.window
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+}
+
+// ---------------------------------------------------------------------
+// NewReno
+// ---------------------------------------------------------------------
+
+/// Slow start to `ssthresh`, then one MSS per window of acknowledged bytes;
+/// halve once per loss round.
+#[derive(Debug)]
+pub struct NewReno {
+    cwnd: u64,
+    ssthresh: u64,
+    /// Growth ceiling (the connection's clamp; see `CcAlgorithm::build`).
+    max_cwnd: u64,
+    /// Packets sent at or before this instant belong to an already-handled
+    /// loss round (and their ACKs must not grow the post-reduction window).
+    recovery_start: Time,
+    /// Acked-byte accumulator for congestion avoidance.
+    acked: u64,
+}
+
+impl NewReno {
+    pub fn new() -> NewReno {
+        NewReno {
+            cwnd: INITIAL_CWND,
+            ssthresh: u64::MAX,
+            max_cwnd: u64::MAX,
+            recovery_start: 0,
+            acked: 0,
+        }
+    }
+}
+
+impl Default for NewReno {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CongestionController for NewReno {
+    fn on_ack(
+        &mut self,
+        _now: Time,
+        sent_at: Time,
+        bytes: u64,
+        prior_inflight: u64,
+        _rtt: &RttEstimator,
+    ) {
+        if sent_at <= self.recovery_start || !cwnd_limited(prior_inflight, bytes, self.cwnd) {
+            return;
+        }
+        if self.cwnd < self.ssthresh {
+            self.cwnd += bytes; // slow start: one MSS per MSS acked
+        } else {
+            self.acked += bytes;
+            if self.acked >= self.cwnd {
+                self.acked -= self.cwnd;
+                self.cwnd += MSS;
+            }
+        }
+        self.cwnd = self.cwnd.min(self.max_cwnd);
+    }
+
+    fn on_loss(&mut self, now: Time, sent_at: Time, persistent: bool, _rtt: &RttEstimator) {
+        if sent_at <= self.recovery_start && !persistent {
+            return; // same loss round
+        }
+        self.recovery_start = now;
+        self.acked = 0;
+        if persistent {
+            self.ssthresh = (self.cwnd / 2).max(MIN_CWND);
+            self.cwnd = MIN_CWND;
+        } else {
+            self.cwnd = (self.cwnd / 2).max(MIN_CWND);
+            self.ssthresh = self.cwnd;
+        }
+    }
+
+    fn cwnd(&self) -> u64 {
+        self.cwnd
+    }
+
+    fn name(&self) -> &'static str {
+        "newreno"
+    }
+}
+
+// ---------------------------------------------------------------------
+// CUBIC (RFC 8312)
+// ---------------------------------------------------------------------
+
+/// Cube scaling constant (windows in MSS units, time in seconds).
+const CUBIC_C: f64 = 0.4;
+/// Multiplicative decrease factor.
+const CUBIC_BETA: f64 = 0.7;
+
+/// Window recovers along `W(t) = C·(t-K)³ + W_max`: concave approach to
+/// the pre-loss plateau, then convex probing beyond it — far faster back
+/// to a high-BDP operating point than NewReno's one-MSS-per-RTT crawl.
+#[derive(Debug)]
+pub struct Cubic {
+    cwnd: u64,
+    ssthresh: u64,
+    /// Growth ceiling (the connection's clamp; see `CcAlgorithm::build`).
+    max_cwnd: u64,
+    recovery_start: Time,
+    /// Pre-loss plateau, in MSS units.
+    w_max: f64,
+    /// Time (s) for `W(t)` to return to `w_max`.
+    k: f64,
+    /// Start of the current growth epoch (None until the first CA ack
+    /// after a reduction).
+    epoch_start: Option<Time>,
+    /// Reno-friendly window estimate (RFC 8312 §4.2), in MSS units.
+    w_est: f64,
+}
+
+impl Cubic {
+    pub fn new() -> Cubic {
+        Cubic {
+            cwnd: INITIAL_CWND,
+            ssthresh: u64::MAX,
+            max_cwnd: u64::MAX,
+            recovery_start: 0,
+            w_max: INITIAL_CWND as f64 / MSS as f64,
+            k: 0.0,
+            epoch_start: None,
+            w_est: 0.0,
+        }
+    }
+}
+
+impl Default for Cubic {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CongestionController for Cubic {
+    fn on_ack(
+        &mut self,
+        now: Time,
+        sent_at: Time,
+        bytes: u64,
+        prior_inflight: u64,
+        rtt: &RttEstimator,
+    ) {
+        if sent_at <= self.recovery_start || !cwnd_limited(prior_inflight, bytes, self.cwnd) {
+            return;
+        }
+        if self.cwnd < self.ssthresh {
+            self.cwnd = (self.cwnd + bytes).min(self.max_cwnd);
+            return;
+        }
+        let mss = MSS as f64;
+        let cw = self.cwnd as f64 / mss;
+        if self.epoch_start.is_none() {
+            self.epoch_start = Some(now);
+            let wmax = self.w_max.max(cw);
+            self.k = ((wmax - cw) / CUBIC_C).cbrt();
+            self.w_est = cw;
+        }
+        let t = now.saturating_sub(self.epoch_start.unwrap()) as f64 / 1e9;
+        let rtt_s = (rtt.srtt() as f64 / 1e9).max(1e-6);
+        // Target the cubic curve one RTT ahead.
+        let w_cubic = CUBIC_C * (t + rtt_s - self.k).powi(3) + self.w_max;
+        // TCP-friendly floor: what AIMD with the same beta would reach.
+        self.w_est += 3.0 * (1.0 - CUBIC_BETA) / (1.0 + CUBIC_BETA) * bytes as f64 / (cw * mss);
+        let target = w_cubic.max(self.w_est);
+        if target > cw {
+            // Standard per-ack increment: (target - cwnd)/cwnd segments
+            // per segment acknowledged.
+            let inc = (target - cw) / cw * bytes as f64;
+            self.cwnd = (self.cwnd + inc as u64).min(self.max_cwnd);
+        }
+    }
+
+    fn on_loss(&mut self, now: Time, sent_at: Time, persistent: bool, _rtt: &RttEstimator) {
+        if sent_at <= self.recovery_start && !persistent {
+            return;
+        }
+        self.recovery_start = now;
+        self.epoch_start = None;
+        let mss = MSS as f64;
+        let cw = self.cwnd as f64 / mss;
+        // Fast convergence: a shrinking flow releases bandwidth early.
+        self.w_max = if cw < self.w_max {
+            cw * (1.0 + CUBIC_BETA) / 2.0
+        } else {
+            cw
+        };
+        if persistent {
+            self.ssthresh = ((cw * CUBIC_BETA * mss) as u64).max(MIN_CWND);
+            self.cwnd = MIN_CWND;
+        } else {
+            self.cwnd = ((cw * CUBIC_BETA * mss) as u64).max(MIN_CWND);
+            self.ssthresh = self.cwnd;
+        }
+    }
+
+    fn cwnd(&self) -> u64 {
+        self.cwnd
+    }
+
+    fn name(&self) -> &'static str {
+        "cubic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::MILLI;
+
+    fn rtt_at(ms: u64) -> RttEstimator {
+        let mut r = RttEstimator::new();
+        for _ in 0..20 {
+            r.on_sample(ms * MILLI);
+        }
+        r
+    }
+
+    #[test]
+    fn parse_and_names() {
+        assert_eq!(CcAlgorithm::parse("cubic"), Some(CcAlgorithm::Cubic));
+        assert_eq!(CcAlgorithm::parse("NewReno"), Some(CcAlgorithm::NewReno));
+        assert_eq!(CcAlgorithm::parse("fixed"), Some(CcAlgorithm::Fixed));
+        assert_eq!(CcAlgorithm::parse("bbr"), None);
+        assert_eq!(CcAlgorithm::Cubic.build(1 << 20).name(), "cubic");
+        assert_eq!(CcAlgorithm::NewReno.build(1 << 20).name(), "newreno");
+    }
+
+    #[test]
+    fn growth_respects_ceiling() {
+        let rtt = rtt_at(10);
+        let cap = 4 * INITIAL_CWND;
+        let mut cc = CcAlgorithm::Cubic.build(cap);
+        for i in 1..64 {
+            let w = cc.cwnd();
+            cc.on_ack(i * MILLI, i * MILLI, w, w, &rtt);
+        }
+        assert_eq!(cc.cwnd(), cap, "slow start must stop at the ceiling");
+        // The first loss after a capped plateau still shrinks the window.
+        cc.on_loss(100 * MILLI, 99 * MILLI, false, &rtt);
+        assert!(cc.cwnd() < cap, "loss at the ceiling must reduce: {}", cc.cwnd());
+    }
+
+    #[test]
+    fn fixed_window_is_inert() {
+        let mut f = FixedWindow::new(12345);
+        let rtt = rtt_at(10);
+        f.on_ack(0, 0, 1000, 12345, &rtt);
+        f.on_loss(MILLI, 0, false, &rtt);
+        assert_eq!(f.cwnd(), 12345);
+    }
+
+    #[test]
+    fn newreno_slow_start_doubles_then_linear() {
+        let mut cc = NewReno::new();
+        let rtt = rtt_at(10);
+        let w0 = cc.cwnd();
+        // One window of acks in slow start doubles the window.
+        cc.on_ack(MILLI, MILLI, w0, w0, &rtt);
+        assert_eq!(cc.cwnd(), 2 * w0);
+        // Leave slow start, then one window of acks adds ~1 MSS.
+        cc.on_loss(2 * MILLI, 2 * MILLI, false, &rtt);
+        let w1 = cc.cwnd();
+        cc.on_ack(3 * MILLI, 3 * MILLI, w1, w1, &rtt);
+        assert!(cc.cwnd() >= w1 + MSS && cc.cwnd() <= w1 + 2 * MSS, "cwnd={}", cc.cwnd());
+    }
+
+    #[test]
+    fn newreno_halves_once_per_round() {
+        let mut cc = NewReno::new();
+        let rtt = rtt_at(10);
+        let w0 = cc.cwnd();
+        // Three losses from the same flight (all sent at t=5ms).
+        cc.on_loss(10 * MILLI, 5 * MILLI, false, &rtt);
+        cc.on_loss(10 * MILLI, 5 * MILLI, false, &rtt);
+        cc.on_loss(11 * MILLI, 5 * MILLI, false, &rtt);
+        assert_eq!(cc.cwnd(), w0 / 2, "one reduction per loss round");
+        // A loss from a packet sent after the reduction opens a new round.
+        cc.on_loss(30 * MILLI, 20 * MILLI, false, &rtt);
+        assert_eq!(cc.cwnd(), w0 / 4);
+    }
+
+    #[test]
+    fn persistent_loss_collapses_to_min() {
+        let mut cc = NewReno::new();
+        let rtt = rtt_at(10);
+        cc.on_loss(MILLI, MILLI, true, &rtt);
+        assert_eq!(cc.cwnd(), MIN_CWND);
+        let mut cu = Cubic::new();
+        cu.on_loss(MILLI, MILLI, true, &rtt);
+        assert_eq!(cu.cwnd(), MIN_CWND);
+    }
+
+    #[test]
+    fn app_limited_acks_do_not_grow() {
+        let mut cc = NewReno::new();
+        let rtt = rtt_at(10);
+        let w0 = cc.cwnd();
+        // Tiny inflight: acks must not inflate the window.
+        cc.on_ack(MILLI, MILLI, MSS, MSS, &rtt);
+        assert_eq!(cc.cwnd(), w0);
+    }
+
+    #[test]
+    fn cubic_reduces_by_beta_and_recovers_toward_wmax() {
+        let rtt = rtt_at(50);
+        let mut cc = Cubic::new();
+        // Grow to a plateau via slow start.
+        for i in 1..8 {
+            let w = cc.cwnd();
+            cc.on_ack(i * 10 * MILLI, i * 10 * MILLI, w, w, &rtt);
+        }
+        let plateau = cc.cwnd();
+        cc.on_loss(100 * MILLI, 99 * MILLI, false, &rtt);
+        let floor = cc.cwnd();
+        assert!(
+            (floor as f64) < 0.75 * plateau as f64 && (floor as f64) > 0.6 * plateau as f64,
+            "beta reduction: {floor} vs plateau {plateau}"
+        );
+        // Ack steadily for several virtual seconds: the window climbs back
+        // toward the pre-loss plateau along the cubic curve.
+        let mut now = 200 * MILLI;
+        for _ in 0..3000 {
+            let w = cc.cwnd();
+            cc.on_ack(now, now, 8 * MSS, w, &rtt);
+            now += 2 * MILLI;
+        }
+        assert!(
+            cc.cwnd() > plateau * 85 / 100,
+            "cubic must recover toward w_max: {} vs {plateau}",
+            cc.cwnd()
+        );
+    }
+
+    #[test]
+    fn cubic_recovers_faster_than_newreno_at_high_bdp() {
+        let rtt = rtt_at(75);
+        let mut cu = Cubic::new();
+        let mut nr = NewReno::new();
+        // Both at a 4 MB plateau, both lose.
+        let plateau = 4 << 20;
+        while cu.cwnd() < plateau {
+            let w = cu.cwnd();
+            cu.on_ack(MILLI, MILLI, w, w, &rtt);
+        }
+        while nr.cwnd() < plateau {
+            let w = nr.cwnd();
+            nr.on_ack(MILLI, MILLI, w, w, &rtt);
+        }
+        cu.on_loss(10 * MILLI, 9 * MILLI, false, &rtt);
+        nr.on_loss(10 * MILLI, 9 * MILLI, false, &rtt);
+        // One simulated second of full-window ack clocking.
+        let mut now = 20 * MILLI;
+        for _ in 0..1000 {
+            let (wc, wn) = (cu.cwnd(), nr.cwnd());
+            cu.on_ack(now, now, MSS * 8, wc, &rtt);
+            nr.on_ack(now, now, MSS * 8, wn, &rtt);
+            now += MILLI;
+        }
+        assert!(
+            cu.cwnd() > nr.cwnd(),
+            "cubic {} must out-recover newreno {}",
+            cu.cwnd(),
+            nr.cwnd()
+        );
+    }
+}

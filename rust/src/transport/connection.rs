@@ -6,19 +6,28 @@
 //! routing; a connection never touches the network directly, which lets the
 //! same machine run over direct datagrams or a relay circuit.
 
+use super::cc::{CcAlgorithm, CongestionController};
 use super::frame::{self, Frame};
 use super::packet::Packet;
+use super::pacer::Pacer;
 use super::rtt::RttEstimator;
+use super::sched::{StreamScheduler, TrafficClass};
 use super::streams::{RecvStream, SendStream};
 use super::TransportProfile;
 use crate::crypto::noise::HandshakeState;
 use crate::crypto::{aead, PublicKey};
 use crate::identity::{Keypair, PeerId};
+use crate::metrics::TransportStats;
 use crate::netsim::{Time, MILLI};
 use crate::util::buf::Buf;
 use crate::util::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeMap, HashMap, VecDeque};
+
+/// A packet this many below the delivery front is lost regardless of
+/// timing (large flushes still share timestamps; this deep window cannot
+/// be reordering).
+const DEEP_REORDER_PACKETS: u64 = 64;
 
 /// Connection role.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -33,8 +42,16 @@ pub struct ConnectionConfig {
     pub profile: TransportProfile,
     /// Maximum datagram payload (from the simulator MTU).
     pub mtu: usize,
-    /// In-flight byte budget (congestion window stand-in).
+    /// Hard upper bound on in-flight bytes; the congestion controller's
+    /// window is clamped to this (relay tunnels pin it low).
     pub max_inflight: u64,
+    /// Congestion-control algorithm.
+    pub cc: CcAlgorithm,
+    /// Token-bucket pacing of data packets (see [`super::pacer`]).
+    pub pacing: bool,
+    /// Fast-retransmit packet threshold: a packet this many below the
+    /// delivery front (with a time margin) is declared lost.
+    pub reorder_packets: u64,
     /// Send a PING if idle this long (keeps NAT mappings alive).
     pub keepalive: Option<Time>,
     /// Declare the connection dead after this much silence with data
@@ -48,6 +65,9 @@ impl Default for ConnectionConfig {
             profile: TransportProfile::QUIC_LIKE,
             mtu: 1400,
             max_inflight: 16 << 20,
+            cc: CcAlgorithm::Cubic,
+            pacing: true,
+            reorder_packets: 3,
             keepalive: Some(10 * crate::netsim::SECOND),
             idle_timeout: 30 * crate::netsim::SECOND,
         }
@@ -127,6 +147,16 @@ pub struct Connection {
     inflight: u64,
     rtt: RttEstimator,
     rto_backoff: u32,
+    /// Congestion controller (owns the window; see `transport/cc.rs`).
+    cc: Box<dyn CongestionController>,
+    /// Token-bucket pacer for data packets.
+    pacer: Pacer,
+    /// RACK state: the newest delivered packet and when it was sent.
+    largest_acked: Option<u64>,
+    largest_acked_sent_at: Time,
+    /// Start of the current loss round (counter bookkeeping mirrors the
+    /// controller's once-per-round reduction rule).
+    loss_round_start: Time,
 
     /// Received packet-number ranges (sorted, merged) for ACK generation.
     recv_ranges: Vec<(u64, u64)>,
@@ -140,8 +170,10 @@ pub struct Connection {
     remote_opened: std::collections::HashSet<u64>,
     /// Messages that arrived before the stream's STREAM_OPEN (reordering).
     early_msgs: HashMap<u64, Vec<Buf>>,
-    /// Streams with pending data, round-robin order.
-    active_streams: VecDeque<u64>,
+    /// Streams with pending data: per-class priority queues.
+    scheduler: StreamScheduler,
+    /// Stream id → traffic class (set at open on both sides).
+    stream_classes: HashMap<u64, TrafficClass>,
     next_stream_id: u64,
 
     /// Control frames waiting to go out (handshake, opens, windows...).
@@ -159,6 +191,11 @@ pub struct Connection {
     pub bytes_sent: u64,
     pub bytes_received: u64,
     pub packets_retransmitted: u64,
+    pub bytes_retransmitted: u64,
+    /// Loss rounds (any recovery), fast-retransmit rounds, RTO rounds.
+    pub loss_events: u64,
+    pub fast_retransmits: u64,
+    pub rto_events: u64,
 }
 
 impl Connection {
@@ -176,6 +213,10 @@ impl Connection {
             }
         };
         let hs_rng = rng.fork();
+        let cc = cfg.cc.build(cfg.max_inflight);
+        // Seed the bucket from the clamped window (the fixed controller
+        // reports u64::MAX and relies on the max_inflight ceiling).
+        let pacer = Pacer::new(now, cc.cwnd().clamp(super::cc::MIN_CWND, cfg.max_inflight));
         let mut conn = Connection {
             local_cid,
             remote_cid: 0,
@@ -198,6 +239,11 @@ impl Connection {
             inflight: 0,
             rtt: RttEstimator::new(),
             rto_backoff: 0,
+            cc,
+            pacer,
+            largest_acked: None,
+            largest_acked_sent_at: 0,
+            loss_round_start: 0,
             recv_ranges: Vec::new(),
             ack_eliciting_unacked: 0,
             ack_deadline: None,
@@ -205,7 +251,8 @@ impl Connection {
             recv_streams: HashMap::new(),
             remote_opened: std::collections::HashSet::new(),
             early_msgs: HashMap::new(),
-            active_streams: VecDeque::new(),
+            scheduler: StreamScheduler::new(),
+            stream_classes: HashMap::new(),
             next_stream_id: if role == Role::Client { 1 } else { 2 },
             ctrl: VecDeque::new(),
             early_packets: Vec::new(),
@@ -217,6 +264,10 @@ impl Connection {
             bytes_sent: 0,
             bytes_received: 0,
             packets_retransmitted: 0,
+            bytes_retransmitted: 0,
+            loss_events: 0,
+            fast_retransmits: 0,
+            rto_events: 0,
         };
         match (role, conn.state) {
             (Role::Client, State::TcpConnect) => conn.ctrl.push_back(Frame::syn()),
@@ -250,13 +301,55 @@ impl Connection {
         self.rtt.srtt()
     }
 
+    /// Effective send window: the congestion controller's window clamped
+    /// to the configured hard ceiling.
+    pub fn window(&self) -> u64 {
+        self.cc.cwnd().clamp(super::cc::MIN_CWND, self.cfg.max_inflight)
+    }
+
+    /// Transport-health snapshot for metrics export.
+    pub fn stats(&self) -> TransportStats {
+        TransportStats {
+            cc: self.cc.name(),
+            cwnd: self.window(),
+            srtt: self.rtt.srtt(),
+            inflight: self.inflight,
+            bytes_sent: self.bytes_sent,
+            bytes_received: self.bytes_received,
+            bytes_retransmitted: self.bytes_retransmitted,
+            packets_retransmitted: self.packets_retransmitted,
+            loss_events: self.loss_events,
+            fast_retransmits: self.fast_retransmits,
+            rto_events: self.rto_events,
+            pacer_utilization: self.pacer.utilization(),
+        }
+    }
+
     /// Tune for running inside a reliable tunnel (relay circuit): small
     /// window (the carrier has its own), long RTO floor (carrier queueing
-    /// delay must not look like loss).
+    /// delay must not look like loss), and a deep reorder threshold so the
+    /// carrier's own retransmissions never look like inner-path loss.
     pub fn tune_for_tunnel(&mut self) {
         self.cfg.max_inflight = 256 << 10;
+        self.cfg.reorder_packets = DEEP_REORDER_PACKETS;
+        // Rebuild the controller so its growth ceiling matches the new
+        // clamp (called right after construction, before any traffic).
+        self.cc = self.cfg.cc.build(self.cfg.max_inflight);
         self.rtt.initial_rto = 1_000 * MILLI;
         self.rtt.min_rto = 500 * MILLI;
+    }
+
+    /// Traffic class of a stream (default: best-effort streaming).
+    fn class_of(&self, stream_id: u64) -> TrafficClass {
+        self.stream_classes
+            .get(&stream_id)
+            .copied()
+            .unwrap_or(TrafficClass::Streaming)
+    }
+
+    fn activate_stream(&mut self, stream_id: u64) {
+        let class = self.class_of(stream_id);
+        self.scheduler.activate(stream_id, class);
     }
 
     // ------------------------------------------------------------------
@@ -264,12 +357,19 @@ impl Connection {
     // ------------------------------------------------------------------
 
     /// Open an outbound stream for `proto`; usable immediately (frames queue
-    /// until the handshake completes).
+    /// until the handshake completes). The traffic class defaults from the
+    /// protocol name.
     pub fn open_stream(&mut self, proto: &str) -> u64 {
+        self.open_stream_class(proto, TrafficClass::for_proto(proto))
+    }
+
+    /// Open an outbound stream with an explicit scheduling class.
+    pub fn open_stream_class(&mut self, proto: &str, class: TrafficClass) -> u64 {
         let id = self.next_stream_id;
         self.next_stream_id += 2;
         self.send_streams.insert(id, SendStream::new());
         self.recv_streams.insert(id, RecvStream::new());
+        self.stream_classes.insert(id, class);
         self.ctrl.push_back(Frame::stream_open(id, proto));
         id
     }
@@ -284,9 +384,7 @@ impl Connection {
             bail!("stream {stream_id} is closed for sending");
         }
         s.write_msg(msg);
-        if !self.active_streams.contains(&stream_id) {
-            self.active_streams.push_back(stream_id);
-        }
+        self.activate_stream(stream_id);
         Ok(())
     }
 
@@ -301,9 +399,7 @@ impl Connection {
             bail!("stream {stream_id} is closed for sending");
         }
         s.write_msg_buf(msg);
-        if !self.active_streams.contains(&stream_id) {
-            self.active_streams.push_back(stream_id);
-        }
+        self.activate_stream(stream_id);
         Ok(())
     }
 
@@ -311,9 +407,7 @@ impl Connection {
     pub fn finish_stream(&mut self, stream_id: u64) {
         if let Some(s) = self.send_streams.get_mut(&stream_id) {
             s.finish();
-            if !self.active_streams.contains(&stream_id) {
-                self.active_streams.push_back(stream_id);
-            }
+            self.activate_stream(stream_id);
         }
     }
 
@@ -469,6 +563,10 @@ impl Connection {
                     self.remote_opened.insert(f.stream_id);
                     self.recv_streams.entry(f.stream_id).or_insert_with(RecvStream::new);
                     self.send_streams.entry(f.stream_id).or_insert_with(SendStream::new);
+                    // Replies on this stream inherit the opener's class.
+                    self.stream_classes
+                        .entry(f.stream_id)
+                        .or_insert_with(|| TrafficClass::for_proto(&f.proto));
                     self.events.push_back(ConnEvent::StreamOpened {
                         stream_id: f.stream_id,
                         proto: f.proto,
@@ -517,8 +615,8 @@ impl Connection {
             frame::K_STREAM_WINDOW => {
                 if let Some(s) = self.send_streams.get_mut(&f.stream_id) {
                     s.credit_limit = s.credit_limit.max(f.credit);
-                    if s.can_send() && !self.active_streams.contains(&f.stream_id) {
-                        self.active_streams.push_back(f.stream_id);
+                    if s.can_send() {
+                        self.activate_stream(f.stream_id);
                     }
                 }
             }
@@ -695,6 +793,7 @@ impl Connection {
         if acked_ranges.is_empty() {
             acked_ranges.push((largest, largest));
         }
+        let prior_inflight = self.inflight;
         let mut newly_acked = Vec::new();
         for &(lo, hi) in &acked_ranges {
             let keys: Vec<u64> = self.sent.range(lo..=hi).map(|(k, _)| *k).collect();
@@ -709,29 +808,108 @@ impl Connection {
             if *num == largest && sp.ack_eliciting {
                 self.rtt.on_sample(now.saturating_sub(sp.sent_at));
             }
+            // Advance the RACK delivery front.
+            if self.largest_acked.map_or(true, |l| *num > l) {
+                self.largest_acked = Some(*num);
+                self.largest_acked_sent_at = sp.sent_at;
+            }
         }
         if !newly_acked.is_empty() {
             self.rto_backoff = 0;
         }
-        // Loss detection: packet threshold + time threshold. Large flushes
-        // put hundreds of packets on the wire in the same instant and the
-        // network delivers them with independent jitter, so a small packet
-        // threshold (QUIC's 3) misfires badly here — gate on both a deep
-        // reorder window and elapsed time ≥ srtt.
-        let lost_below = largest.saturating_sub(64);
-        let min_age = self.rtt.srtt();
-        let lost: Vec<u64> = self
-            .sent
-            .range(..lost_below)
-            .filter(|(_, sp)| now.saturating_sub(sp.sent_at) >= min_age)
-            .map(|(k, _)| *k)
-            .collect();
-        for k in lost {
-            if let Some(sp) = self.sent.remove(&k) {
-                self.inflight = self.inflight.saturating_sub(sp.size);
-                self.retransmit_frames(sp.frames);
-                self.packets_retransmitted += 1;
+        for (_, sp) in &newly_acked {
+            self.cc.on_ack(now, sp.sent_at, sp.size, prior_inflight, &self.rtt);
+        }
+        self.detect_lost(now);
+    }
+
+    /// RACK-style loss detection, run on every ACK and timer tick. A
+    /// packet behind the delivery front is lost when any of:
+    ///
+    /// * **deep gap** — `DEEP_REORDER_PACKETS` newer packets delivered
+    ///   and a full srtt elapsed (at high send rates jitter alone reorders
+    ///   hundreds of packets deep, so even this arm needs a time guard);
+    /// * **spaced gap** — at least `reorder_packets` newer packets
+    ///   delivered *and* the front was sent a reorder window after it
+    ///   (the dup-ack fast-retransmit path, jitter-hardened: packets that
+    ///   left in the same burst never trip it);
+    /// * **tail time** — 9/8·srtt elapsed since it was sent while newer
+    ///   packets were delivered (catches losses at the end of a flight
+    ///   that no later packet can dup-ack). Floored at `min_rto` so relay
+    ///   tunnels (which raise it) never mistake carrier queueing for loss.
+    ///
+    /// Recovery here never touches the RTO backoff: the ack clock is
+    /// alive. The RTO in [`Connection::on_timer`] is the last resort for
+    /// flights with no delivered successor at all.
+    ///
+    /// Every arm is monotone in packet number (the gap shrinks and
+    /// `sent_at` is non-decreasing), so lost packets form a prefix of the
+    /// range and the scan stops at the first survivor — a no-loss ACK
+    /// inspects one packet.
+    /// RACK tail-loss threshold; `next_timeout` arms a timer at exactly
+    /// this delay past a packet's send time.
+    fn tail_delay(&self) -> Time {
+        let srtt = self.rtt.srtt();
+        (srtt + srtt / 8).max(self.rtt.min_rto)
+    }
+
+    /// The backed-off retransmission timeout.
+    fn backed_off_rto(&self) -> Time {
+        self.rtt.rto() << self.rto_backoff.min(6)
+    }
+
+    fn detect_lost(&mut self, now: Time) {
+        let Some(largest) = self.largest_acked else { return };
+        let srtt = self.rtt.srtt();
+        let reorder_time = srtt / 4;
+        let tail_delay = self.tail_delay();
+        let mut lost = Vec::new();
+        for (&k, sp) in self.sent.range(..largest) {
+            let gap = largest - k;
+            let is_lost = (gap >= DEEP_REORDER_PACKETS
+                && now.saturating_sub(sp.sent_at) >= srtt)
+                || (gap >= self.cfg.reorder_packets
+                    && self.largest_acked_sent_at >= sp.sent_at + reorder_time)
+                || now >= sp.sent_at + tail_delay;
+            if is_lost {
+                lost.push(k);
+            } else {
+                break;
             }
+        }
+        if !lost.is_empty() {
+            self.mark_lost(now, lost, false);
+        }
+    }
+
+    /// Remove lost packets, requeue their frames, and notify the
+    /// congestion controller once (it collapses a burst into one round).
+    fn mark_lost(&mut self, now: Time, keys: Vec<u64>, persistent: bool) {
+        let mut newest_sent = 0;
+        let mut any = false;
+        for k in keys {
+            if let Some(sp) = self.sent.remove(&k) {
+                any = true;
+                newest_sent = newest_sent.max(sp.sent_at);
+                self.inflight = self.inflight.saturating_sub(sp.size);
+                self.bytes_retransmitted += sp.size;
+                self.packets_retransmitted += 1;
+                self.retransmit_frames(sp.frames);
+            }
+        }
+        if any {
+            // Losses of packets sent before the current round began are
+            // the same round: count (and let the controller reduce) once.
+            if persistent || newest_sent > self.loss_round_start {
+                self.loss_round_start = now;
+                self.loss_events += 1;
+                if persistent {
+                    self.rto_events += 1;
+                } else {
+                    self.fast_retransmits += 1;
+                }
+            }
+            self.cc.on_loss(now, newest_sent, persistent, &self.rtt);
         }
     }
 
@@ -750,11 +928,10 @@ impl Connection {
             }
             match f.kind {
                 frame::K_STREAM_DATA => {
-                    if let Some(s) = self.send_streams.get_mut(&f.stream_id) {
+                    let sid = f.stream_id;
+                    if let Some(s) = self.send_streams.get_mut(&sid) {
                         s.requeue(f.offset, f.data, f.fin);
-                        if !self.active_streams.contains(&f.stream_id) {
-                            self.active_streams.push_back(f.stream_id);
-                        }
+                        self.activate_stream(sid);
                     }
                 }
                 _ => self.ctrl.push_back(f),
@@ -794,7 +971,7 @@ impl Connection {
             // 1. ACK: piggyback whenever other frames go out, send alone
             //    when 2+ packets are unacked or the delayed-ACK timer is due.
             let have_other = !self.ctrl.is_empty()
-                || (self.can_send_app() && !self.active_streams.is_empty());
+                || (self.can_send_app() && !self.scheduler.is_empty());
             let ack_due = self.ack_eliciting_unacked >= 2
                 || self.ack_deadline.map_or(false, |d| now >= d)
                 || have_other;
@@ -836,14 +1013,17 @@ impl Connection {
                 out.push(pkt_bytes);
                 continue;
             }
-            // 3. Stream data (only after establishment, inflight-limited).
-            if self.can_send_app() {
-                let mut visited = 0;
-                while used + 64 < budget
-                    && self.inflight + (used as u64) < self.cfg.max_inflight
-                    && visited < self.active_streams.len().max(1)
-                {
-                    let Some(&sid) = self.active_streams.front() else { break };
+            // 3. Stream data (only after establishment; congestion-window
+            //    and pacer limited). The scheduler drains classes in
+            //    priority order and round-robins within the winning class.
+            let window = self.window();
+            if self.can_send_app()
+                && self.scheduler.current().is_some()
+                && self.inflight + (used as u64) < window
+                && (!self.cfg.pacing || self.pacer.try_send(now, window, self.rtt.srtt()))
+            {
+                while used + 64 < budget && self.inflight + (used as u64) < window {
+                    let Some(sid) = self.scheduler.current() else { break };
                     let room = budget - used;
                     let take = self
                         .send_streams
@@ -853,14 +1033,10 @@ impl Connection {
                         Some((off, data, fin)) => {
                             used += data.len() + 48;
                             frames.push(Frame::stream_data(sid, off, data, fin));
-                            // Rotate for fairness.
-                            self.active_streams.rotate_left(1);
-                            visited = 0;
+                            // Rotate for fairness within the class.
+                            self.scheduler.rotate();
                         }
-                        None => {
-                            self.active_streams.pop_front();
-                            visited += 1;
-                        }
+                        None => self.scheduler.remove_current(),
                     }
                 }
             }
@@ -911,6 +1087,11 @@ impl Connection {
             );
         }
         let size = (out.len() - header_len) as u64 + 20;
+        // Only data packets consume pacing budget (ACKs and control must
+        // never be delayed — they are the peer's clock).
+        if self.cfg.pacing && frames.iter().any(|f| f.kind == frame::K_STREAM_DATA) {
+            self.pacer.on_sent(size);
+        }
         let ack_eliciting = frames.iter().any(|f| f.is_ack_eliciting());
         let retrans: Vec<Frame> = frames
             .iter()
@@ -940,8 +1121,18 @@ impl Connection {
         self.seal_frames(now, &frames, encrypt && self.tx_key.is_some())
     }
 
+    /// Whether a sendable chunk is waiting (credit available, FIN pending);
+    /// used to decide if the pacer's refill deadline matters.
+    fn has_sendable_data(&self) -> bool {
+        self.scheduler.active_ids().any(|sid| {
+            self.send_streams
+                .get(sid)
+                .map_or(false, |s| s.can_send() || s.fin_pending())
+        })
+    }
+
     /// Earliest deadline at which [`Connection::on_timer`] must run.
-    pub fn next_timeout(&self, _now: Time) -> Option<Time> {
+    pub fn next_timeout(&self, now: Time) -> Option<Time> {
         if self.state == State::Closed {
             return None;
         }
@@ -949,9 +1140,27 @@ impl Connection {
         let mut consider = |x: Time| {
             t = Some(t.map_or(x, |v: Time| v.min(x)));
         };
-        if let Some((_, sp)) = self.sent.iter().next() {
-            let rto = self.rtt.rto() << self.rto_backoff.min(6);
+        let rto = self.backed_off_rto();
+        if let Some(l) = self.largest_acked {
+            // Packets behind the delivery front: RACK tail-loss deadline
+            // (same expression as detect_lost's tail arm).
+            if let Some((_, sp)) = self.sent.range(..l).next() {
+                consider(sp.sent_at + self.tail_delay());
+            }
+            // Packets with no delivered successor: the RTO last resort.
+            if let Some((_, sp)) = self.sent.range(l..).next() {
+                consider(sp.sent_at + rto);
+            }
+        } else if let Some((_, sp)) = self.sent.iter().next() {
             consider(sp.sent_at + rto);
+        }
+        // Pacer refill, when data is waiting on tokens (not on cwnd).
+        if self.cfg.pacing
+            && self.can_send_app()
+            && self.inflight < self.window()
+            && self.has_sendable_data()
+        {
+            consider(self.pacer.next_ready(now, self.window(), self.rtt.srtt()));
         }
         if let Some(d) = self.ack_deadline {
             consider(d);
@@ -994,23 +1203,28 @@ impl Connection {
             });
             return;
         }
-        // RTO.
-        let rto = self.rtt.rto() << self.rto_backoff.min(6);
-        let expired: Vec<u64> = self
-            .sent
-            .iter()
-            .filter(|(_, sp)| now.saturating_sub(sp.sent_at) >= rto)
-            .map(|(k, _)| *k)
-            .collect();
+        // RACK tail-loss: packets behind the delivery front whose time
+        // threshold elapsed recover here without touching the RTO backoff.
+        self.detect_lost(now);
+        // RTO last resort, only for packets with no delivered successor
+        // (the ack clock is gone). `sent` is ordered by packet number and
+        // timestamps are non-decreasing, so expired packets form a prefix
+        // of the candidate range — walk from the earliest deadline (the
+        // same computation `next_timeout` uses) and stop at the first
+        // unexpired packet instead of rescanning every sent packet.
+        let rto = self.backed_off_rto();
+        let from = self.largest_acked.unwrap_or(0);
+        let mut expired = Vec::new();
+        for (&k, sp) in self.sent.range(from..) {
+            if now.saturating_sub(sp.sent_at) >= rto {
+                expired.push(k);
+            } else {
+                break;
+            }
+        }
         if !expired.is_empty() {
             self.rto_backoff += 1;
-            for k in expired {
-                if let Some(sp) = self.sent.remove(&k) {
-                    self.inflight = self.inflight.saturating_sub(sp.size);
-                    self.retransmit_frames(sp.frames);
-                    self.packets_retransmitted += 1;
-                }
-            }
+            self.mark_lost(now, expired, true);
         }
         // Keepalive.
         if let Some(ka) = self.cfg.keepalive {
@@ -1028,11 +1242,7 @@ impl Connection {
     pub fn wants_send(&self) -> bool {
         !self.ctrl.is_empty()
             || self.ack_eliciting_unacked >= 2
-            || (self.can_send_app()
-                && self
-                    .active_streams
-                    .iter()
-                    .any(|sid| self.send_streams.get(sid).map_or(false, |s| s.can_send() || s.fin_pending())))
+            || (self.can_send_app() && self.has_sendable_data())
     }
 }
 

@@ -15,18 +15,26 @@
 //! connection onto a punched direct path without disturbing open streams).
 //!
 //! Reliability: QUIC-style frame-level retransmission with packet-number
-//! acks (gap ranges), an RTT-adaptive RTO, a fixed in-flight byte window,
-//! and per-stream credit flow control (the paper's "adaptive backpressure":
-//! writers observe acknowledgments/queue depth, readers grant credit).
+//! acks (gap ranges), RACK-style loss detection (packet + time thresholds,
+//! RTO as last resort), pluggable congestion control (NewReno / CUBIC /
+//! fixed-window, see [`cc`]), token-bucket pacing ([`pacer`]), a
+//! priority-aware stream scheduler ([`sched`]), and per-stream credit flow
+//! control (the paper's "adaptive backpressure": writers observe
+//! acknowledgments/queue depth, readers grant credit).
 
+pub mod cc;
 pub mod frame;
 pub mod packet;
+pub mod pacer;
 pub mod rtt;
+pub mod sched;
 pub mod streams;
 pub mod connection;
 
+pub use cc::CcAlgorithm;
 pub use connection::{ConnEvent, Connection, ConnectionConfig, Role};
 pub use frame::Frame;
+pub use sched::TrafficClass;
 
 /// Transport profile: the observable differences between the two transports.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

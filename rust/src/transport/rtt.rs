@@ -2,6 +2,10 @@
 
 use crate::netsim::{Time, MILLI};
 
+/// How long a receiver may sit on a delayed ACK (the connection arms its
+/// ACK deadline at 1 ms; keep a little slack on top).
+pub const MAX_ACK_DELAY: Time = 2 * MILLI;
+
 #[derive(Clone, Debug)]
 pub struct RttEstimator {
     srtt: Option<Time>,
@@ -60,12 +64,15 @@ impl RttEstimator {
         self.latest
     }
 
-    /// Retransmission timeout: srtt + 4·rttvar with a configurable floor,
-    /// and `initial_rto` before any sample.
+    /// Retransmission timeout: srtt + 4·rttvar + a delayed-ACK allowance,
+    /// with a configurable floor, and `initial_rto` before any sample.
+    /// The allowance keeps a stable path's RTO strictly above the RACK
+    /// tail-loss threshold (9/8·srtt), so the timeout stays the last
+    /// resort even when rttvar converges to zero.
     pub fn rto(&self) -> Time {
         match self.srtt {
             None => self.initial_rto,
-            Some(srtt) => (srtt + 4 * self.rttvar).max(self.min_rto),
+            Some(srtt) => (srtt + 4 * self.rttvar + MAX_ACK_DELAY).max(self.min_rto),
         }
     }
 

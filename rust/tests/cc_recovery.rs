@@ -1,0 +1,273 @@
+//! Deterministic loss-recovery traces for the congestion-control
+//! subsystem: fast retransmit on dup-ack ranges (no RTO), NewReno AIMD
+//! window shape, pacing of `poll_output`, priority scheduling, and the
+//! CUBIC-vs-NewReno throughput comparison on the high-BDP scenario.
+//!
+//! Run in CI as `cargo test --release --test cc_recovery`.
+
+use lattica::identity::Keypair;
+use lattica::netsim::{Time, MILLI, SECOND};
+use lattica::node::{LatticaNode, NodeEvent};
+use lattica::protocols::Ctx;
+use lattica::rpc::RpcEvent;
+use lattica::scenarios::{table1_world_cc, EchoApp, NetScenario};
+use lattica::transport::cc::{CcAlgorithm, INITIAL_CWND, MSS};
+use lattica::transport::connection::{ConnEvent, Connection, ConnectionConfig, Role};
+use lattica::transport::packet::Packet;
+use lattica::transport::TrafficClass;
+use lattica::util::buf::Buf;
+use lattica::util::Rng;
+
+/// Two connections driven directly with a hand-held clock (no simulator):
+/// every packet drop, delivery time and ACK is explicit.
+struct Pair {
+    a: Connection,
+    b: Connection,
+    now: Time,
+}
+
+impl Pair {
+    fn new(cc: CcAlgorithm, pacing: bool) -> Pair {
+        let mut rng = Rng::new(42);
+        let cfg = ConnectionConfig {
+            cc,
+            pacing,
+            ..ConnectionConfig::default()
+        };
+        let a = Connection::new(Role::Client, cfg.clone(), Keypair::from_seed(1), 0, &mut rng);
+        let b = Connection::new(Role::Server, cfg, Keypair::from_seed(2), 0, &mut rng);
+        Pair { a, b, now: 0 }
+    }
+
+    /// Lockstep exchange advancing `step` per round until quiescent.
+    fn pump(&mut self, step: Time) {
+        let mut rounds = 0;
+        loop {
+            self.now += step;
+            let out_a = self.a.poll_output(self.now);
+            let out_b = self.b.poll_output(self.now);
+            if out_a.is_empty() && out_b.is_empty() {
+                break;
+            }
+            for p in out_a {
+                self.b.handle_packet(self.now, Packet::decode(&p).unwrap()).unwrap();
+            }
+            for p in out_b {
+                self.a.handle_packet(self.now, Packet::decode(&p).unwrap()).unwrap();
+            }
+            rounds += 1;
+            assert!(rounds < 5000, "pump did not converge");
+        }
+    }
+
+    fn msgs(conn: &mut Connection) -> Vec<Buf> {
+        let mut out = Vec::new();
+        while let Some(ev) = conn.poll_event() {
+            if let ConnEvent::Msg { msg, .. } = ev {
+                out.push(msg);
+            }
+        }
+        out
+    }
+}
+
+/// (a) Fast retransmit fires on 3 dup-ack-ranges without waiting for RTO.
+#[test]
+fn fast_retransmit_on_three_dup_ack_ranges() {
+    // Establish over a ~8 ms round trip so the reorder window (srtt/4) is
+    // well above the 1 ms send spacing used below.
+    let mut p = Pair::new(CcAlgorithm::NewReno, false);
+    p.pump(4 * MILLI);
+    assert!(p.a.is_established() && p.b.is_established());
+    Pair::msgs(&mut p.b);
+
+    let sid = p.a.open_stream("/cc/fast/1");
+    // Five spaced sends; the first flight is dropped on the floor.
+    let mut flights: Vec<Vec<Vec<u8>>> = Vec::new();
+    for i in 0..5u8 {
+        p.now += MILLI;
+        p.a.send_msg(sid, &[i; 64]).unwrap();
+        flights.push(p.a.poll_output(p.now));
+    }
+    assert!(!flights[0].is_empty(), "first flight must exist to be droppable");
+    drop(flights.remove(0));
+    // Deliver the surviving flights; ACK each individually (the delayed-ACK
+    // deadline is 1 ms), producing dup-ack ranges with a growing gap.
+    for flight in flights {
+        for pkt in flight {
+            p.b.handle_packet(p.now, Packet::decode(&pkt).unwrap()).unwrap();
+        }
+        p.now += MILLI;
+        for ack in p.b.poll_output(p.now) {
+            p.a.handle_packet(p.now, Packet::decode(&ack).unwrap()).unwrap();
+        }
+    }
+    assert_eq!(p.a.fast_retransmits, 1, "3 dup-ack ranges must trigger fast retransmit");
+    assert_eq!(p.a.rto_events, 0, "recovery must not wait for (or count as) an RTO");
+    assert!(p.a.packets_retransmitted >= 1);
+    // The retransmission completes delivery.
+    p.pump(MILLI);
+    let got = Pair::msgs(&mut p.b);
+    assert_eq!(got.len(), 5, "all five messages must arrive, got {}", got.len());
+}
+
+/// (b) cwnd halves on loss and grows again — the NewReno AIMD shape.
+#[test]
+fn newreno_cwnd_halves_on_loss_and_regrows() {
+    let mut p = Pair::new(CcAlgorithm::NewReno, false);
+    p.pump(MILLI);
+    let cwnd0 = p.a.stats().cwnd;
+    assert_eq!(cwnd0, INITIAL_CWND);
+
+    // Phase 1: a window-limited transfer grows the window (slow start).
+    let sid = p.a.open_stream("/cc/aimd/1");
+    p.a.send_msg(sid, &vec![1u8; 200_000]).unwrap();
+    p.pump(MILLI);
+    let grown = p.a.stats().cwnd;
+    assert!(grown > cwnd0, "slow start must grow cwnd: {grown} vs {cwnd0}");
+    Pair::msgs(&mut p.b);
+
+    // Phase 2: drop one spaced flight → fast retransmit → halving.
+    let mut flights = Vec::new();
+    for i in 0..5u8 {
+        p.now += MILLI;
+        p.a.send_msg(sid, &[i; 64]).unwrap();
+        flights.push(p.a.poll_output(p.now));
+    }
+    flights.remove(0); // lost
+    for flight in flights {
+        for pkt in flight {
+            p.b.handle_packet(p.now, Packet::decode(&pkt).unwrap()).unwrap();
+        }
+        p.now += MILLI;
+        for ack in p.b.poll_output(p.now) {
+            p.a.handle_packet(p.now, Packet::decode(&ack).unwrap()).unwrap();
+        }
+    }
+    assert!(p.a.fast_retransmits >= 1, "loss must be recovered without RTO");
+    let halved = p.a.stats().cwnd;
+    assert!(
+        halved <= grown * 6 / 10 && halved >= grown * 4 / 10,
+        "cwnd must roughly halve on loss: {halved} vs {grown}"
+    );
+    p.pump(MILLI);
+
+    // Phase 3: congestion avoidance grows the window again, slowly
+    // (several windows of data earn several MSS of growth).
+    p.a.send_msg(sid, &vec![2u8; 1_000_000]).unwrap();
+    p.pump(MILLI);
+    let regrown = p.a.stats().cwnd;
+    assert!(
+        regrown >= halved + 2 * MSS,
+        "AIMD must grow cwnd again: {regrown} vs {halved}"
+    );
+    assert!(
+        regrown < grown * 2,
+        "post-loss growth must be additive, not slow-start: {regrown} vs {grown}"
+    );
+}
+
+/// Pacing: one `poll_output` call emits a bounded burst, exposes a refill
+/// deadline, and the transfer still completes as time advances.
+#[test]
+fn pacer_bounds_burst_and_schedules_refill() {
+    let mut p = Pair::new(CcAlgorithm::Cubic, true);
+    p.pump(MILLI);
+    let sid = p.a.open_stream("/cc/paced/1");
+    p.a.send_msg(sid, &vec![7u8; 200_000]).unwrap();
+    p.now += MILLI;
+    let first: usize = p.a.poll_output(p.now).iter().map(|x| x.len()).sum();
+    assert!(first > 0, "pacer must admit an initial burst");
+    assert!(
+        first < 40_000,
+        "one instant must not flush the whole message: {first} bytes"
+    );
+    // The connection reports when the bucket refills.
+    let deadline = p.a.next_timeout(p.now).expect("pacer deadline");
+    assert!(
+        deadline > p.now && deadline <= p.now + 20 * MILLI,
+        "refill deadline must be near: {} vs now {}",
+        deadline,
+        p.now
+    );
+    p.pump(MILLI);
+    let got = Pair::msgs(&mut p.b);
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].len(), 200_000);
+}
+
+/// Priority scheduler: a control-class stream preempts a bulk backlog.
+#[test]
+fn control_stream_preempts_bulk_backlog() {
+    let mut p = Pair::new(CcAlgorithm::Cubic, false);
+    p.pump(MILLI);
+    let bulk = p.a.open_stream_class("/cc/bulk/1", TrafficClass::Bulk);
+    let ctl = p.a.open_stream_class("/cc/ctl/1", TrafficClass::Control);
+    // Deep bulk backlog first, then a small control message.
+    p.a.send_msg(bulk, &vec![9u8; 500_000]).unwrap();
+    p.a.send_msg(ctl, b"urgent").unwrap();
+    p.now += MILLI;
+    let out = p.a.poll_output(p.now);
+    assert!(!out.is_empty());
+    // Deliver only the first packet: the control message must already be
+    // in it (strict priority), despite the bulk stream queueing first.
+    p.b.handle_packet(p.now, Packet::decode(&out[0]).unwrap()).unwrap();
+    let got = Pair::msgs(&mut p.b);
+    assert!(
+        got.iter().any(|m| m == b"urgent"),
+        "control message must ride the first packet ahead of bulk data"
+    );
+}
+
+/// (c) CUBIC sustains higher throughput than NewReno on the high-BDP
+/// bufferbloat scenario (1 Gbps, deep queue, trace loss): after each loss
+/// CUBIC climbs back along the cubic curve while NewReno crawls at one
+/// MSS per RTT.
+#[test]
+fn cubic_outperforms_newreno_on_high_bdp() {
+    /// Virtual time to push `calls` 256 KB echoes through the bufferbloat
+    /// path (bounded work, so the debug-mode crypto cost stays sane).
+    fn finish_time(cc: CcAlgorithm, calls: usize) -> Time {
+        let (mut world, client, server) = table1_world_cc(NetScenario::Bufferbloat, 7, cc);
+        server.borrow_mut().app = Some(Box::new(EchoApp { response_size: 128 }));
+        let server_peer = server.borrow().peer_id();
+        let body: Buf = vec![0xA7u8; 256 * 1024].into();
+        let start = world.net.now();
+        let deadline = start + 120 * SECOND;
+        let (mut issued, mut done, mut in_flight) = (0usize, 0usize, 0usize);
+        while done < calls && world.net.now() < deadline {
+            while in_flight < 16 && issued < calls {
+                let mut n = client.borrow_mut();
+                let LatticaNode { swarm, rpc, .. } = &mut *n;
+                let mut ctx = Ctx::new(swarm, &mut world.net);
+                if rpc.call(&mut ctx, &server_peer, "bench", "echo", body.clone()).is_ok() {
+                    issued += 1;
+                    in_flight += 1;
+                } else {
+                    break;
+                }
+            }
+            world.run_for(5 * MILLI);
+            for e in client.borrow_mut().drain_events() {
+                match e {
+                    NodeEvent::Rpc(RpcEvent::Response { .. }) => {
+                        done += 1;
+                        in_flight -= 1;
+                    }
+                    NodeEvent::Rpc(RpcEvent::CallFailed { .. }) => in_flight -= 1,
+                    _ => {}
+                }
+            }
+        }
+        assert!(done >= calls * 9 / 10, "{}: only {done}/{calls} completed", cc.name());
+        world.net.now() - start
+    }
+    let cubic = finish_time(CcAlgorithm::Cubic, 48);
+    let newreno = finish_time(CcAlgorithm::NewReno, 48);
+    assert!(
+        cubic < newreno,
+        "CUBIC must out-recover NewReno at high BDP: cubic={}ms newreno={}ms",
+        cubic / MILLI,
+        newreno / MILLI
+    );
+}
