@@ -1,5 +1,11 @@
-//! DHT scaling: Kademlia lookup hops and latency vs network size
-//! (the architecture's O(log N) claim, §2).
+//! DHT scaling and churn resilience.
+//!
+//! Phase 1 — lookup hops/latency vs network size (the architecture's
+//! O(log N) claim, §2). Phase 2 — the `bootstrap_mesh` churn scenario:
+//! nodes join/leave/crash on a seeded Poisson schedule (median session
+//! half-life 60 s virtual) while `get_providers` lookups for live content
+//! run continuously; success-rate / hop-count / staleness land in
+//! `BENCH_dht_churn.json`.
 
 use lattica::metrics::Histogram;
 use lattica::netsim::topology::LinkProfile;
@@ -7,8 +13,9 @@ use lattica::netsim::SECOND;
 use lattica::node::{run_until, LatticaNode, NodeEvent};
 use lattica::protocols::kad::KadEvent;
 use lattica::protocols::Ctx;
-use lattica::scenarios::bootstrap_mesh;
+use lattica::scenarios::{bootstrap_mesh, churn_scenario, ChurnLookupOutcome};
 use lattica::util::cli::Args;
+use lattica::util::json::Json;
 use lattica::util::Rng;
 
 fn run(n: usize, lookups: usize, seed: u64) -> (f64, Histogram) {
@@ -26,19 +33,23 @@ fn run(n: usize, lookups: usize, seed: u64) -> (f64, Histogram) {
         // Clear any leftover events from previous lookups.
         let _ = nodes[src].borrow_mut().drain_events();
         let t0 = world.net.now();
-        {
+        let qid = {
             let mut nd = nodes[src].borrow_mut();
             let LatticaNode { swarm, kad, .. } = &mut *nd;
             let mut ctx = Ctx::new(swarm, &mut world.net);
-            kad.find_node(&mut ctx, target);
-        }
+            kad.find_node(&mut ctx, target)
+        };
         let mut hops = None;
         run_until(&mut world, 20 * SECOND, || {
             if hops.is_none() {
                 let mut nd = nodes[src].borrow_mut();
                 for e in nd.drain_events() {
-                    if let NodeEvent::Kad(KadEvent::QueryFinished { hops: h, .. }) = e {
-                        hops = Some(h);
+                    // Match the query id: maintenance refresh lookups also
+                    // emit QueryFinished and must not pollute the sample.
+                    if let NodeEvent::Kad(KadEvent::QueryFinished { query_id, hops: h, .. }) = e {
+                        if query_id == qid {
+                            hops = Some(h);
+                        }
                     }
                 }
             }
@@ -53,9 +64,43 @@ fn run(n: usize, lookups: usize, seed: u64) -> (f64, Histogram) {
     (hops_total as f64 / finished.max(1) as f64, lat)
 }
 
+/// One churn arm over the canonical shared scenario (the same harness
+/// the acceptance test gates on). `half_life == 0` disables churn.
+fn churn_arm(n: usize, half_life: u64, seed: u64) -> ChurnLookupOutcome {
+    churn_scenario(n, half_life, 90, seed)
+}
+
+fn arm_row(label: &str, n: usize, half_life: u64, o: &mut ChurnLookupOutcome) -> Json {
+    Json::obj(vec![
+        ("arm", Json::str(label)),
+        ("nodes", Json::num(n as f64)),
+        ("session_half_life_secs", Json::num(half_life as f64)),
+        ("lookups", Json::num(o.stats.attempted as f64)),
+        ("aborted", Json::num(o.stats.aborted as f64)),
+        ("success_rate", Json::num(o.stats.success_rate())),
+        ("mean_hops", Json::num(o.stats.mean_hops())),
+        ("p95_hops", Json::num(o.stats.hops.percentile(95.0) as f64)),
+        ("p95_latency_ns", Json::num(o.stats.latency.percentile(95.0) as f64)),
+        ("staleness", Json::num(o.stats.staleness())),
+        ("requests_tracked", Json::num(o.kad.requests_tracked as f64)),
+        ("requests_sent", Json::num(o.kad.requests_sent as f64)),
+        ("requests_timed_out", Json::num(o.kad.requests_timed_out as f64)),
+        ("requests_failed", Json::num(o.kad.requests_failed as f64)),
+        ("probes_evicted", Json::num(o.kad.probes_evicted as f64)),
+        ("refreshes", Json::num(o.kad.refreshes as f64)),
+        ("republish_rounds", Json::num(o.kad.republish_rounds as f64)),
+        ("joins", Json::num(o.joins as f64)),
+        ("leaves", Json::num(o.leaves as f64)),
+        ("crashes", Json::num(o.crashes as f64)),
+        ("live_at_end", Json::num(o.live_at_end as f64)),
+    ])
+}
+
 fn main() {
     let args = Args::from_env();
     let lookups = args.opt_usize("lookups", 20).unwrap();
+    let churn_nodes = args.opt_usize("nodes", 200).unwrap();
+
     println!("Kademlia lookup scaling (α=3, k=20): expect ~O(log N) request rounds");
     println!("{:<8} {:>12} {:>14} {:>10}", "N", "mean reqs", "p95 latency", "log2(N)");
     let mut means = Vec::new();
@@ -78,4 +123,62 @@ fn main() {
         "lookup cost must grow sub-linearly: {means:?}"
     );
     println!("\nshape check OK: requests grow sub-linearly with N (~K + a*log N)");
+
+    // ------------------------------------------------------------------
+    // Churn scenario: control (no churn) vs 60 s median session half-life.
+    // ------------------------------------------------------------------
+    println!("\nChurn scenario: {churn_nodes} nodes, get_providers for live content");
+    let mut control = churn_arm(churn_nodes, 0, 9001);
+    println!("  no churn : {}", control.stats.summary());
+    let mut churned = churn_arm(churn_nodes, 60, 9001);
+    println!(
+        "  churn 60s: {} (joins={} leaves={} crashes={} live_at_end={})",
+        churned.stats.summary(),
+        churned.joins,
+        churned.leaves,
+        churned.crashes,
+        churned.live_at_end
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("dht_churn")),
+        ("scenario", Json::str("bootstrap_mesh")),
+        ("lookup_interval_secs", Json::num(1.0)),
+        ("duration_secs", Json::num(90.0)),
+        (
+            "rows",
+            Json::Arr(vec![
+                arm_row("no_churn", churn_nodes, 0, &mut control),
+                arm_row("churn_60s", churn_nodes, 60, &mut churned),
+            ]),
+        ),
+        (
+            "scaling_mean_requests",
+            Json::Arr(means.iter().map(|m| Json::num(*m)).collect()),
+        ),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_dht_churn.json");
+    match std::fs::write(path, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    // Shape checks: the control arm must be essentially lossless, and the
+    // churned arm must stay above the paper-grade 95% bar.
+    assert!(
+        control.stats.success_rate() >= 0.99,
+        "no-churn lookups must succeed (got {:.3})",
+        control.stats.success_rate()
+    );
+    assert!(
+        churned.stats.success_rate() >= 0.95,
+        "churned lookups must stay >= 95% (got {:.3})",
+        churned.stats.success_rate()
+    );
+    assert!(
+        control.stats.mean_hops() <= 12.0,
+        "no-churn get_providers should early-exit quickly (mean hops {:.1})",
+        control.stats.mean_hops()
+    );
+    println!("shape check OK: >=95% success under 60s-half-life churn");
 }

@@ -161,6 +161,77 @@ impl TransportHealth {
     }
 }
 
+/// Aggregated DHT lookup outcomes under (optional) churn: success rate,
+/// hop counts, latency and routing-staleness. Filled by the churn harness
+/// in `benches/dht_lookup` / `tests/dht_churn` and emitted as a
+/// `BENCH_dht_churn.json` row.
+#[derive(Clone, Debug, Default)]
+pub struct DhtLookupStats {
+    pub attempted: u64,
+    pub succeeded: u64,
+    /// Lookups that finished (success or not) vs timed out entirely.
+    pub finished: u64,
+    /// Lookups whose issuing node left/crashed mid-query; excluded from
+    /// the success rate (there is no one left to consume the result).
+    pub aborted: u64,
+    /// Answered requests per finished lookup.
+    pub hops: Histogram,
+    /// Virtual-time latency per finished lookup.
+    pub latency: Histogram,
+    /// Requests tracked (sent or dial-pending) across all nodes — the
+    /// staleness denominator (from `kad::KadStats::requests_tracked`).
+    pub requests_sent: u64,
+    /// Requests that hit a dead/stale routing entry (timeout or failed
+    /// dial) across all nodes.
+    pub requests_stale: u64,
+}
+
+impl DhtLookupStats {
+    pub fn record_lookup(&mut self, success: bool, hops: u32, latency: Time) {
+        self.finished += 1;
+        if success {
+            self.succeeded += 1;
+        }
+        self.hops.record(hops as u64);
+        self.latency.record(latency);
+    }
+
+    /// Fraction of non-aborted lookups that succeeded.
+    pub fn success_rate(&self) -> f64 {
+        let denom = self.attempted.saturating_sub(self.aborted);
+        if denom == 0 {
+            return 0.0;
+        }
+        self.succeeded as f64 / denom as f64
+    }
+
+    /// Fraction of issued requests that hit stale routing state.
+    pub fn staleness(&self) -> f64 {
+        if self.requests_sent == 0 {
+            return 0.0;
+        }
+        self.requests_stale as f64 / self.requests_sent as f64
+    }
+
+    pub fn mean_hops(&self) -> f64 {
+        self.hops.mean()
+    }
+
+    pub fn summary(&mut self) -> String {
+        format!(
+            "lookups={}/{} ({:.1}%, {} aborted) hops mean={:.1} p95={} lat p95={} staleness={:.1}%",
+            self.succeeded,
+            self.attempted.saturating_sub(self.aborted),
+            self.success_rate() * 100.0,
+            self.aborted,
+            self.mean_hops(),
+            self.hops.percentile(95.0),
+            crate::util::timefmt::fmt_ns(self.latency.percentile(95.0)),
+            self.staleness() * 100.0,
+        )
+    }
+}
+
 /// Completed-ops counter over a virtual-time window → QPS.
 #[derive(Clone, Debug, Default)]
 pub struct QpsMeter {
@@ -238,6 +309,23 @@ mod tests {
         assert_eq!(h.bytes_retransmitted, 14);
         assert_eq!(h.loss_events, 4);
         assert!((h.mean_pacer_utilization() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dht_lookup_stats_rates() {
+        let mut s = DhtLookupStats::default();
+        assert_eq!(s.success_rate(), 0.0);
+        assert_eq!(s.staleness(), 0.0);
+        s.attempted = 4;
+        s.record_lookup(true, 3, 1000);
+        s.record_lookup(true, 5, 3000);
+        s.record_lookup(false, 9, 9000);
+        s.requests_sent = 20;
+        s.requests_stale = 5;
+        assert!((s.success_rate() - 0.5).abs() < 1e-9);
+        assert!((s.staleness() - 0.25).abs() < 1e-9);
+        assert!((s.mean_hops() - 17.0 / 3.0).abs() < 1e-9);
+        assert!(!s.summary().is_empty());
     }
 
     #[test]

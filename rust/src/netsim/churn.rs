@@ -1,0 +1,274 @@
+//! Scripted node churn: seeded Poisson join/leave/crash schedules.
+//!
+//! A [`ChurnPlan`] is generated *entirely up front* from a seed and a
+//! [`ChurnConfig`]: per-node alternating up/down sessions with
+//! exponentially distributed lengths (median up-session =
+//! `session_half_life`), each departure being a clean leave or a crash
+//! (no goodbye). Because the whole trace is a pure function of the seed,
+//! the determinism contract is simple: **same seed ⇒ same event trace**,
+//! byte for byte — verified by `tests/dht_churn.rs`.
+//!
+//! The plan is applied from the simulation loop
+//! ([`crate::netsim::World::run_with_churn`]): the world runs to each
+//! event's exact virtual time, the action is applied, and the run resumes
+//! — so churn interleaves with packet delivery deterministically.
+
+use super::{Time, MILLI};
+use crate::util::Rng;
+
+/// What happens to a node at a churn event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnAction {
+    /// (Re)start the node and re-bootstrap it.
+    Join,
+    /// Clean stop: connections are closed with a goodbye before the node
+    /// goes away.
+    Leave,
+    /// Crash: the node vanishes mid-flight; peers find out via timeouts.
+    Crash,
+}
+
+/// One scheduled churn event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChurnEvent {
+    pub at: Time,
+    /// Scenario-level node index (not an endpoint id).
+    pub node: usize,
+    pub action: ChurnAction,
+}
+
+/// Parameters for [`ChurnPlan::poisson`].
+#[derive(Clone, Debug)]
+pub struct ChurnConfig {
+    /// Total node count in the scenario.
+    pub nodes: usize,
+    /// Nodes `[0, protected)` never churn (bootstrap peers, publishers).
+    pub protected: usize,
+    /// First event no earlier than this (lets the mesh settle).
+    pub start: Time,
+    /// No events at or after this time.
+    pub end: Time,
+    /// Median up-session length (exponential sessions: mean = h / ln 2).
+    pub session_half_life: Time,
+    /// Mean downtime before a node rejoins.
+    pub downtime_mean: Time,
+    /// Probability a departure is a crash rather than a clean leave.
+    pub crash_fraction: f64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        ChurnConfig {
+            nodes: 0,
+            protected: 1,
+            start: 10 * super::SECOND,
+            end: 110 * super::SECOND,
+            session_half_life: 60 * super::SECOND,
+            downtime_mean: 10 * super::SECOND,
+            crash_fraction: 0.5,
+        }
+    }
+}
+
+/// A fully materialized, time-ordered churn schedule.
+#[derive(Clone, Debug, Default)]
+pub struct ChurnPlan {
+    events: Vec<ChurnEvent>,
+    pos: usize,
+}
+
+impl ChurnPlan {
+    /// No churn (the control arm of the bench/test harness).
+    pub fn empty() -> ChurnPlan {
+        ChurnPlan::default()
+    }
+
+    /// Generate a schedule of Poisson (exponential-session) churn. Pure
+    /// function of `(cfg, seed)`.
+    pub fn poisson(cfg: &ChurnConfig, seed: u64) -> ChurnPlan {
+        let mut rng = Rng::new(seed ^ 0xC4_12_4E_5E_ED_00_01);
+        let mean_up = cfg.session_half_life as f64 / std::f64::consts::LN_2;
+        let mut events = Vec::new();
+        for node in cfg.protected..cfg.nodes {
+            let mut t = cfg.start;
+            loop {
+                // Up-session, then a departure…
+                let up = rng.gen_exp(mean_up) as Time;
+                t = t.saturating_add(up.max(MILLI));
+                if t >= cfg.end {
+                    break;
+                }
+                let action = if rng.gen_bool(cfg.crash_fraction) {
+                    ChurnAction::Crash
+                } else {
+                    ChurnAction::Leave
+                };
+                events.push(ChurnEvent { at: t, node, action });
+                // …then downtime and a rejoin.
+                let down = rng.gen_exp(cfg.downtime_mean as f64) as Time;
+                t = t.saturating_add(down.max(MILLI));
+                if t >= cfg.end {
+                    break;
+                }
+                events.push(ChurnEvent { at: t, node, action: ChurnAction::Join });
+            }
+        }
+        events.sort_by_key(|e| (e.at, e.node));
+        ChurnPlan { events, pos: 0 }
+    }
+
+    /// The full trace (determinism checks, debugging).
+    pub fn events(&self) -> &[ChurnEvent] {
+        &self.events
+    }
+
+    /// Next event not yet consumed.
+    pub fn peek(&self) -> Option<&ChurnEvent> {
+        self.events.get(self.pos)
+    }
+
+    /// Consume the next event if it is due at or before `now`.
+    pub fn pop_due(&mut self, now: Time) -> Option<ChurnEvent> {
+        match self.events.get(self.pos) {
+            Some(e) if e.at <= now => {
+                self.pos += 1;
+                Some(*e)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.events.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// FNV-1a fingerprint of the trace — a cheap equality witness for the
+    /// "same seed ⇒ same trace" contract.
+    pub fn trace_digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        for e in &self.events {
+            mix(e.at);
+            mix(e.node as u64);
+            mix(match e.action {
+                ChurnAction::Join => 1,
+                ChurnAction::Leave => 2,
+                ChurnAction::Crash => 3,
+            });
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::SECOND;
+
+    fn cfg(n: usize) -> ChurnConfig {
+        ChurnConfig {
+            nodes: n,
+            protected: 1,
+            start: 5 * SECOND,
+            end: 120 * SECOND,
+            session_half_life: 30 * SECOND,
+            downtime_mean: 8 * SECOND,
+            crash_fraction: 0.5,
+        }
+    }
+
+    #[test]
+    fn same_seed_same_trace() {
+        let a = ChurnPlan::poisson(&cfg(40), 7);
+        let b = ChurnPlan::poisson(&cfg(40), 7);
+        assert_eq!(a.events(), b.events());
+        assert_eq!(a.trace_digest(), b.trace_digest());
+        let c = ChurnPlan::poisson(&cfg(40), 8);
+        assert_ne!(a.trace_digest(), c.trace_digest());
+    }
+
+    #[test]
+    fn trace_is_time_ordered_and_alternating() {
+        let plan = ChurnPlan::poisson(&cfg(30), 11);
+        assert!(!plan.is_empty());
+        let mut last = 0;
+        for e in plan.events() {
+            assert!(e.at >= last, "events must be time-ordered");
+            last = e.at;
+            assert!(e.node >= 1 && e.node < 30, "protected node churned");
+        }
+        // Per node: strictly alternating Leave/Crash → Join → Leave/Crash…
+        for node in 1..30 {
+            let mut up = true;
+            for e in plan.events().iter().filter(|e| e.node == node) {
+                match e.action {
+                    ChurnAction::Join => {
+                        assert!(!up, "join while up");
+                        up = true;
+                    }
+                    ChurnAction::Leave | ChurnAction::Crash => {
+                        assert!(up, "departure while down");
+                        up = false;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn session_half_life_is_respected() {
+        // Median of the generated up-session lengths ≈ configured half-life.
+        let c = ChurnConfig {
+            nodes: 400,
+            end: 1000 * SECOND,
+            ..cfg(400)
+        };
+        let plan = ChurnPlan::poisson(&c, 3);
+        let mut sessions: Vec<Time> = Vec::new();
+        for node in c.protected..c.nodes {
+            let mut session_start = c.start;
+            for e in plan.events().iter().filter(|e| e.node == node) {
+                match e.action {
+                    ChurnAction::Join => session_start = e.at,
+                    _ => sessions.push(e.at - session_start),
+                }
+            }
+        }
+        assert!(sessions.len() > 1000, "need a large sample");
+        sessions.sort_unstable();
+        let median = sessions[sessions.len() / 2] as f64;
+        let want = c.session_half_life as f64;
+        assert!(
+            (median - want).abs() / want < 0.1,
+            "median session {median} vs half-life {want}"
+        );
+    }
+
+    #[test]
+    fn pop_due_consumes_in_order() {
+        let mut plan = ChurnPlan::poisson(&cfg(20), 5);
+        let total = plan.len();
+        let mut got = 0;
+        while let Some(next) = plan.peek().copied() {
+            assert!(plan.pop_due(next.at.saturating_sub(1)).is_none());
+            let e = plan.pop_due(next.at).unwrap();
+            assert_eq!(e, next);
+            got += 1;
+        }
+        assert_eq!(got, total);
+        assert_eq!(plan.remaining(), 0);
+    }
+}

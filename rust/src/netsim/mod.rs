@@ -22,7 +22,9 @@ pub mod link;
 pub mod topology;
 pub mod net;
 pub mod world;
+pub mod churn;
 
+pub use churn::{ChurnAction, ChurnConfig, ChurnEvent, ChurnPlan};
 pub use net::{EndpointId, Net, Timer};
 pub use topology::{HostCfg, LinkProfile, Region, TopologyBuilder};
 pub use world::{Endpoint, World};

@@ -90,6 +90,16 @@ impl Net {
         self.host_nat(host).map(|n| self.nats[n].nat_type)
     }
 
+    /// Whether `host` is a NAT's public face. Protocols use this as the
+    /// sim stand-in for an AutoNAT dial-back verdict: an address observed
+    /// from behind a NAT is a translated mapping, not a dialable listen
+    /// address.
+    pub fn is_nat_face(&self, host: u32) -> bool {
+        self.hosts
+            .get(host as usize)
+            .is_some_and(|h| h.nat_face.is_some())
+    }
+
     /// Bind an endpoint to a concrete port on a host.
     pub fn bind(&mut self, endpoint: EndpointId, addr: SimAddr) -> anyhow::Result<()> {
         anyhow::ensure!(

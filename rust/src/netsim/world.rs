@@ -102,6 +102,37 @@ impl World {
         self.run_until(self.net.now() + d)
     }
 
+    /// Run until `deadline`, applying scheduled churn events at their exact
+    /// virtual times. The world advances to each due event's timestamp,
+    /// `apply` mutates the deployment (stop/crash/restart a node), and the
+    /// run resumes — so churn interleaves with packet delivery
+    /// deterministically (same plan ⇒ same trace).
+    pub fn run_with_churn<F>(
+        &mut self,
+        plan: &mut super::churn::ChurnPlan,
+        deadline: Time,
+        mut apply: F,
+    ) -> u64
+    where
+        F: FnMut(&mut World, &super::churn::ChurnEvent),
+    {
+        let mut n = 0;
+        loop {
+            match plan.peek().map(|e| e.at) {
+                Some(at) if at <= deadline => {
+                    n += self.run_until(at);
+                    while let Some(ev) = plan.pop_due(self.net.now()) {
+                        apply(self, &ev);
+                    }
+                }
+                _ => {
+                    n += self.run_until(deadline);
+                    return n;
+                }
+            }
+        }
+    }
+
     /// Run until the queue drains completely (use with care: keepalive
     /// timers can make this unbounded — prefer `run_until`).
     pub fn run_to_quiescence(&mut self, max_events: u64) -> u64 {
@@ -249,5 +280,37 @@ mod tests {
         let mut world = World::new(t.build(8));
         world.run_until(5 * SECOND);
         assert_eq!(world.net.now(), 5 * SECOND);
+    }
+
+    #[test]
+    fn run_with_churn_applies_events_at_exact_times() {
+        use crate::netsim::churn::{ChurnAction, ChurnConfig, ChurnPlan};
+        let t = TopologyBuilder::new(1);
+        let mut world = World::new(t.build(9));
+        let mut plan = ChurnPlan::poisson(
+            &ChurnConfig {
+                nodes: 10,
+                protected: 1,
+                start: 100 * MILLI,
+                end: 4 * SECOND,
+                session_half_life: 500 * MILLI,
+                downtime_mean: 200 * MILLI,
+                crash_fraction: 0.5,
+            },
+            13,
+        );
+        let total = plan.len();
+        assert!(total > 0);
+        let mut applied: Vec<(crate::netsim::Time, usize, ChurnAction)> = Vec::new();
+        world.run_with_churn(&mut plan, 10 * SECOND, |w, ev| {
+            // The world clock sits exactly on the event's timestamp.
+            assert_eq!(w.net.now(), ev.at);
+            applied.push((ev.at, ev.node, ev.action));
+        });
+        assert_eq!(applied.len(), total, "every due event must be applied");
+        assert_eq!(plan.remaining(), 0);
+        assert!(applied.windows(2).all(|w| w[0].0 <= w[1].0));
+        // The run still advances to the deadline afterwards.
+        assert_eq!(world.net.now(), 10 * SECOND);
     }
 }

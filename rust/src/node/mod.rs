@@ -209,6 +209,23 @@ impl LatticaNode {
         self.kad.find_node(&mut ctx, key);
     }
 
+    /// Take this node off the network (the churn engine's stop path).
+    ///
+    /// `clean == true` is a graceful leave: every connection is closed with
+    /// a "node shutdown" goodbye that peers observe immediately (and use to
+    /// drop us from their routing tables). `clean == false` models a crash:
+    /// nothing is sent, peers discover the loss via request timeouts and
+    /// idle teardown. Either way the port is unbound so a later restart can
+    /// re-bind it; the caller must also remove the endpoint from the world.
+    pub fn shutdown(&mut self, net: &mut Net, clean: bool) {
+        if clean {
+            for cid in self.swarm.connection_ids() {
+                self.swarm.close_conn(net, cid, "node shutdown");
+            }
+        }
+        net.unbind(self.swarm.local_addr);
+    }
+
     /// Publish a blob: chunk + store + announce provider records on the DHT.
     /// Returns the root CID.
     pub fn publish_blob(
@@ -226,8 +243,10 @@ impl LatticaNode {
         for c in &manifest.chunks {
             // Providing the root is usually enough (fetchers ask the same
             // provider set for chunks), but announcing chunks too lets
-            // partial caches serve.
-            self.kad.provide(&mut ctx, c.to_key());
+            // partial caches serve. One-shot: only the root is enrolled
+            // for periodic republish, so publishing many chunks doesn't
+            // accumulate permanent background query load.
+            self.kad.provide_once(&mut ctx, c.to_key());
         }
         root
     }
@@ -394,8 +413,14 @@ impl LatticaNode {
                 self.events
                     .push_back(NodeEvent::PeerConnected { peer, relayed });
             }
-            SwarmEvent::ConnClosed { cid, peer, .. } => {
+            SwarmEvent::ConnClosed { cid, peer, reason } => {
                 self.rpc.on_conn_closed(cid);
+                {
+                    // Fail over kad requests that were in flight on this
+                    // connection's streams (churn resilience).
+                    let mut ctx = Ctx::new(&mut self.swarm, net);
+                    self.kad.on_conn_closed(&mut ctx, cid, peer, &reason);
+                }
                 if let Some(p) = peer {
                     let mut ctx = Ctx::new(&mut self.swarm, net);
                     self.bitswap.on_peer_disconnected(&mut ctx, p);
@@ -405,8 +430,14 @@ impl LatticaNode {
                     }
                 }
             }
-            SwarmEvent::DialFailed { cid, reason } => {
+            SwarmEvent::DialFailed { cid, peer, reason } => {
                 self.rpc.on_conn_closed(cid);
+                if let Some(p) = peer {
+                    // Queries waiting on this dial fail over to the
+                    // next-closest candidate instead of stalling.
+                    let mut ctx = Ctx::new(&mut self.swarm, net);
+                    self.kad.on_peer_unreachable(&mut ctx, p);
+                }
                 crate::log_debug!("dial failed: {reason}");
             }
             SwarmEvent::InboundStream { .. } => {

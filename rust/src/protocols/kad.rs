@@ -1,10 +1,25 @@
-//! Kademlia DHT: XOR-metric routing table, iterative lookups, provider
-//! records and a replicated key→value record store.
+//! Kademlia DHT: maintenance-complete k-bucket routing, iterative lookups,
+//! provider records and a replicated key→value record store.
 //!
 //! Protocol `/lattica/kad/1`: one stream per request; the responder answers
 //! on the same stream and finishes it. Queries run `ALPHA` probes in
 //! parallel over the k-closest candidate set, converging in O(log N) hops
 //! (measured by `benches/dht_lookup`).
+//!
+//! Churn hardening (DESIGN.md §Discovery & churn):
+//! * 256 k-buckets (k = [`K`]) in least-recently-seen order. A full bucket
+//!   never drops a live entry for a new one: the oldest entry is
+//!   liveness-probed first and only evicted if it fails to answer
+//!   (Maymounkov–Mazières eviction rule). Entries that already failed a
+//!   request are evicted preferentially.
+//! * Stale buckets are refreshed by lookups of random keys in their range,
+//!   plus a periodic self-lookup.
+//! * Provider/record stores expire by TTL; locally-published keys are
+//!   republished to the *current* k-closest peers every
+//!   [`REPUBLISH_INTERVAL`], so records follow the live topology.
+//! * In-flight requests time out per-peer and fail over to the
+//!   next-closest candidate; dial failures and closed connections fail
+//!   waiting queries immediately instead of stalling to the timeout.
 
 use super::Ctx;
 use crate::identity::PeerId;
@@ -12,7 +27,7 @@ use crate::multiaddr::{Multiaddr, Proto, SimAddr};
 use crate::netsim::{Time, SECOND};
 use crate::wire::{Message, PbReader, PbWriter};
 use anyhow::Result;
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 pub const KAD_PROTO: &str = "/lattica/kad/1";
 
@@ -20,8 +35,22 @@ pub const KAD_PROTO: &str = "/lattica/kad/1";
 pub const K: usize = 20;
 /// Lookup parallelism.
 pub const ALPHA: usize = 3;
-/// Per-request timeout.
+/// Per-request timeout (also the liveness-probe timeout).
 pub const REQUEST_TIMEOUT: Time = 5 * SECOND;
+/// Request failures before a routing entry is dropped outright.
+pub const MAX_FAILS: u32 = 2;
+/// Default TTL for provider records.
+pub const PROVIDER_TTL: Time = 60 * SECOND;
+/// Default TTL for key→value records.
+pub const RECORD_TTL: Time = 60 * SECOND;
+/// Default republish period for locally-published keys.
+pub const REPUBLISH_INTERVAL: Time = 12 * SECOND;
+/// Default stale-bucket refresh period (also the self-lookup period).
+pub const BUCKET_REFRESH_INTERVAL: Time = 30 * SECOND;
+/// Stale-bucket refresh lookups started per tick at most.
+const MAX_REFRESH_PER_TICK: usize = 2;
+/// Maintenance refreshes pause above this many concurrent queries.
+const MAX_MAINTENANCE_QUERIES: usize = 8;
 
 const M_FIND_NODE: u64 = 1;
 const M_GET_PROVIDERS: u64 = 2;
@@ -127,48 +156,135 @@ impl Message for KadMsg {
 // Routing table
 // ---------------------------------------------------------------------------
 
-/// 256-bucket XOR routing table with k-sized buckets (LRU eviction of
-/// stale entries is approximated by replace-oldest).
+/// One routing entry with liveness bookkeeping.
+#[derive(Clone, Debug)]
+pub struct BucketEntry {
+    pub entry: PeerEntry,
+    /// Virtual time of the last direct evidence of liveness.
+    pub last_seen: Time,
+    /// Consecutive request failures since `last_seen`.
+    pub fails: u32,
+}
+
+#[derive(Clone, Debug, Default)]
+struct Bucket {
+    /// Least-recently-seen first (index 0 is the LRU eviction candidate).
+    entries: Vec<BucketEntry>,
+    /// Last time a lookup landed in this bucket's key range.
+    last_refresh: Time,
+}
+
+/// What [`RoutingTable::insert`] did with a new contact.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InsertOutcome {
+    /// New entry added (a failed entry may have been evicted to make room).
+    Added,
+    /// Known peer: address/liveness refreshed, moved to MRU position.
+    Refreshed,
+    /// Self or un-indexable: dropped.
+    Ignored,
+    /// Bucket full of apparently-live entries. The caller should liveness-
+    /// probe `oldest` and only evict it if the probe fails.
+    Full { bucket: usize, oldest: PeerEntry },
+}
+
+/// 256-bucket XOR routing table with k-sized buckets in LRU order.
 pub struct RoutingTable {
     pub local: PeerId,
-    buckets: Vec<Vec<PeerEntry>>,
+    buckets: Vec<Bucket>,
 }
 
 impl RoutingTable {
     pub fn new(local: PeerId) -> RoutingTable {
         RoutingTable {
             local,
-            buckets: vec![Vec::new(); 256],
+            buckets: vec![Bucket::default(); 256],
         }
     }
 
-    pub fn insert(&mut self, entry: PeerEntry) {
+    /// Offer a contact. Never inserts the local peer and never silently
+    /// drops a live entry: a full bucket reports `Full` so the caller can
+    /// gate eviction on a liveness probe of the oldest entry.
+    pub fn insert(&mut self, entry: PeerEntry, now: Time) -> InsertOutcome {
         if entry.id == self.local {
-            return;
+            return InsertOutcome::Ignored;
         }
         let Some(idx) = self.local.bucket_index(&entry.id) else {
-            return;
+            return InsertOutcome::Ignored;
         };
-        let bucket = &mut self.buckets[idx];
-        if let Some(pos) = bucket.iter().position(|e| e.id == entry.id) {
-            let e = bucket.remove(pos);
-            bucket.push(PeerEntry { host: entry.host, port: entry.port, ..e });
-            return;
+        let b = &mut self.buckets[idx].entries;
+        if let Some(pos) = b.iter().position(|e| e.entry.id == entry.id) {
+            let mut e = b.remove(pos);
+            e.entry.host = entry.host;
+            e.entry.port = entry.port;
+            e.last_seen = now;
+            e.fails = 0;
+            b.push(e);
+            return InsertOutcome::Refreshed;
         }
-        if bucket.len() >= K {
-            bucket.remove(0);
+        if b.len() < K {
+            b.push(BucketEntry { entry, last_seen: now, fails: 0 });
+            return InsertOutcome::Added;
         }
-        bucket.push(entry);
+        // Full bucket: prefer evicting an entry that already failed a
+        // request over probing — dead peers go before fresh ones.
+        let mut worst: Option<(u32, usize)> = None;
+        for (i, e) in b.iter().enumerate() {
+            let better = match worst {
+                None => e.fails > 0,
+                Some((f, _)) => e.fails > f,
+            };
+            if better {
+                worst = Some((e.fails, i));
+            }
+        }
+        if let Some((_, w)) = worst {
+            b.remove(w);
+            b.push(BucketEntry { entry, last_seen: now, fails: 0 });
+            return InsertOutcome::Added;
+        }
+        InsertOutcome::Full {
+            bucket: idx,
+            oldest: b[0].entry.clone(),
+        }
     }
 
     pub fn remove(&mut self, id: &PeerId) {
         if let Some(idx) = self.local.bucket_index(id) {
-            self.buckets[idx].retain(|e| e.id != *id);
+            self.buckets[idx].entries.retain(|e| e.entry.id != *id);
         }
     }
 
+    /// Direct evidence the peer is alive: reset fails, move to MRU.
+    pub fn mark_alive(&mut self, id: &PeerId, now: Time) {
+        if let Some(idx) = self.local.bucket_index(id) {
+            let b = &mut self.buckets[idx].entries;
+            if let Some(pos) = b.iter().position(|e| e.entry.id == *id) {
+                let mut e = b.remove(pos);
+                e.last_seen = now;
+                e.fails = 0;
+                b.push(e);
+            }
+        }
+    }
+
+    /// A request to the peer failed; drop it after [`MAX_FAILS`] strikes.
+    /// Returns true if the entry was removed.
+    pub fn mark_failed(&mut self, id: &PeerId) -> bool {
+        let Some(idx) = self.local.bucket_index(id) else { return false };
+        let b = &mut self.buckets[idx].entries;
+        if let Some(pos) = b.iter().position(|e| e.entry.id == *id) {
+            b[pos].fails += 1;
+            if b[pos].fails >= MAX_FAILS {
+                b.remove(pos);
+                return true;
+            }
+        }
+        false
+    }
+
     pub fn len(&self) -> usize {
-        self.buckets.iter().map(|b| b.len()).sum()
+        self.buckets.iter().map(|b| b.entries.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -177,13 +293,61 @@ impl RoutingTable {
 
     /// The `n` entries closest to `key` by XOR distance.
     pub fn closest(&self, key: &[u8; 32], n: usize) -> Vec<PeerEntry> {
-        let mut all: Vec<&PeerEntry> = self.buckets.iter().flatten().collect();
+        let mut all: Vec<&PeerEntry> = self.entries().map(|e| &e.entry).collect();
         all.sort_by_key(|e| xor_distance(e.id.as_bytes(), key));
         all.into_iter().take(n).cloned().collect()
     }
 
     pub fn iter(&self) -> impl Iterator<Item = &PeerEntry> {
-        self.buckets.iter().flatten()
+        self.entries().map(|e| &e.entry)
+    }
+
+    /// All entries with their liveness bookkeeping.
+    pub fn entries(&self) -> impl Iterator<Item = &BucketEntry> {
+        self.buckets.iter().flat_map(|b| b.entries.iter())
+    }
+
+    /// Number of entries in bucket `idx`.
+    pub fn bucket_len(&self, idx: usize) -> usize {
+        self.buckets[idx].entries.len()
+    }
+
+    /// Bucket a key falls into relative to the local id (None = own key).
+    pub fn bucket_of(&self, key: &[u8; 32]) -> Option<usize> {
+        self.local.bucket_index(&PeerId(*key))
+    }
+
+    /// Record that a lookup landed in bucket `idx` (refresh bookkeeping).
+    pub fn touch_refresh(&mut self, idx: usize, now: Time) {
+        self.buckets[idx].last_refresh = now;
+    }
+
+    /// Non-empty buckets whose key range has not seen a lookup within
+    /// `interval`.
+    pub fn stale_buckets(&self, now: Time, interval: Time) -> Vec<usize> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| {
+                !b.entries.is_empty() && now.saturating_sub(b.last_refresh) >= interval
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// A uniformly random key whose XOR distance to the local id falls in
+    /// bucket `idx` (used for stale-bucket refresh lookups).
+    pub fn random_key_in_bucket(&self, idx: usize, rng: &mut crate::util::Rng) -> [u8; 32] {
+        let mut key = *self.local.as_bytes();
+        let byte = (255 - idx) / 8;
+        let bit = 7 - ((255 - idx) % 8); // bit position within the byte, LSB = 0
+        key[byte] ^= 1 << bit;
+        let low_mask: u8 = if bit == 0 { 0 } else { (1u8 << bit) - 1 };
+        key[byte] = (key[byte] & !low_mask) | ((rng.next_u32() as u8) & low_mask);
+        for b in key.iter_mut().skip(byte + 1) {
+            *b = rng.next_u32() as u8;
+        }
+        key
     }
 }
 
@@ -216,42 +380,169 @@ pub enum KadEvent {
         closest: Vec<PeerEntry>,
         providers: Vec<PeerEntry>,
         record: Option<Vec<u8>>,
-        /// Hops = number of request rounds taken (O(log N) check).
+        /// Hops = number of answered requests (O(log N) check).
         hops: u32,
     },
     /// Routing table learned a new peer.
     RoutingUpdated { peer: PeerId },
 }
 
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum CandState {
+    /// Not yet contacted.
+    Fresh,
+    /// Request in flight (or waiting behind a dial).
+    Waiting,
+    Responded,
+    Failed,
+}
+
+/// One tracked request within a query.
+#[derive(Clone, Copy, Debug)]
+struct InflightReq {
+    /// Stream carrying the request once the connection is up.
+    stream: Option<(u64, u64)>,
+    deadline: Time,
+}
+
+/// Payload pushed to the k-closest peers when an announce query finishes.
+#[derive(Clone, Debug)]
+enum Announce {
+    Provider,
+    Record(Vec<u8>),
+}
+
 struct Query {
-    #[allow(dead_code)]
-    id: u64,
     kind: QueryKind,
     key: [u8; 32],
-    /// Candidates sorted by distance; bool = queried.
-    candidates: Vec<(PeerEntry, bool)>,
-    inflight: HashMap<(u64, u64), (PeerId, Time)>, // (cid,stream) → peer,deadline
+    /// Candidates sorted by XOR distance to `key`.
+    candidates: Vec<(PeerEntry, CandState)>,
+    /// Per-peer in-flight requests (covers dial-pending sends too, so a
+    /// request waiting on a dead dial still times out and fails over).
+    inflight: BTreeMap<PeerId, InflightReq>,
     providers: Vec<PeerEntry>,
     record: Option<Vec<u8>>,
-    responded: HashSet<PeerId>,
     hops: u32,
     /// Stop early once providers/record found.
     early_exit: bool,
+    /// Publish this to the discovered k-closest set on completion
+    /// (provide/put_record run as FIND_NODE + announce, so records land on
+    /// the *current* closest peers even as the topology churns).
+    announce: Option<Announce>,
+}
+
+/// A liveness probe of a full bucket's oldest entry, gating LRU eviction.
+struct Probe {
+    bucket: usize,
+    target: PeerId,
+    /// The contact that wants the slot if `target` turns out dead.
+    candidate: PeerEntry,
+    stream: Option<(u64, u64)>,
+    deadline: Time,
+}
+
+/// What a queued/in-flight request belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SendRef {
+    /// Fire-and-forget (ADD_PROVIDER / PUT_RECORD).
+    Free,
+    Query(u64),
+    Probe(u64),
+}
+
+/// Maintenance and traffic counters (aggregated by the churn bench).
+#[derive(Clone, Debug, Default)]
+pub struct KadStats {
+    /// Query requests registered for tracking (sent or dial-pending) —
+    /// the staleness denominator.
+    pub requests_tracked: u64,
+    /// Requests actually written to a stream (includes liveness probes).
+    pub requests_sent: u64,
+    pub replies: u64,
+    pub requests_timed_out: u64,
+    pub requests_failed: u64,
+    pub probes_sent: u64,
+    pub probes_ok: u64,
+    pub probes_evicted: u64,
+    pub refreshes: u64,
+    pub republish_rounds: u64,
+    pub providers_expired: u64,
+    pub records_expired: u64,
+}
+
+impl KadStats {
+    /// Accumulate another node's counters (scenario-wide aggregation).
+    pub fn merge(&mut self, o: &KadStats) {
+        self.requests_tracked += o.requests_tracked;
+        self.requests_sent += o.requests_sent;
+        self.replies += o.replies;
+        self.requests_timed_out += o.requests_timed_out;
+        self.requests_failed += o.requests_failed;
+        self.probes_sent += o.probes_sent;
+        self.probes_ok += o.probes_ok;
+        self.probes_evicted += o.probes_evicted;
+        self.refreshes += o.refreshes;
+        self.republish_rounds += o.republish_rounds;
+        self.providers_expired += o.providers_expired;
+        self.records_expired += o.records_expired;
+    }
+
+    /// Share of tracked requests that hit a dead/stale peer (timed out or
+    /// failed before delivery).
+    pub fn staleness(&self) -> f64 {
+        let bad = self.requests_timed_out + self.requests_failed;
+        if self.requests_tracked == 0 {
+            0.0
+        } else {
+            bad as f64 / self.requests_tracked as f64
+        }
+    }
+}
+
+/// A provider record with expiry.
+#[derive(Clone, Debug)]
+pub struct ProviderRecord {
+    pub entry: PeerEntry,
+    pub expires: Time,
+}
+
+/// A stored key→value record with expiry.
+#[derive(Clone, Debug)]
+pub struct StoredRecord {
+    pub value: Vec<u8>,
+    pub expires: Time,
 }
 
 /// The Kademlia behaviour.
 pub struct Kademlia {
     pub table: RoutingTable,
-    /// Local provider records: key → providers.
-    pub provider_store: HashMap<[u8; 32], Vec<PeerEntry>>,
-    /// Local record store.
-    pub record_store: HashMap<[u8; 32], Vec<u8>>,
+    /// Local provider records: key → providers (TTL-expired).
+    pub provider_store: BTreeMap<[u8; 32], Vec<ProviderRecord>>,
+    /// Local record store (TTL-expired).
+    pub record_store: BTreeMap<[u8; 32], StoredRecord>,
     /// This node's advertised endpoint.
     pub local_entry: PeerEntry,
-    queries: HashMap<u64, Query>,
+    /// Maintenance tuning (defaults from the module consts; benches and
+    /// tests tighten these for short virtual-time runs).
+    pub provider_ttl: Time,
+    pub record_ttl: Time,
+    pub republish_interval: Time,
+    pub refresh_interval: Time,
+    pub stats: KadStats,
+    queries: BTreeMap<u64, Query>,
     next_query_id: u64,
-    /// Requests awaiting a connection to `peer`.
-    pending_sends: Vec<(PeerId, KadMsg, Option<(u64, u64)>)>, // (target, msg, query ref)
+    probes: BTreeMap<u64, Probe>,
+    next_probe_id: u64,
+    /// Bucket index → outstanding probe id (one eviction probe per bucket).
+    probe_by_bucket: BTreeMap<usize, u64>,
+    /// Keys we provide and must republish.
+    published_provides: BTreeSet<[u8; 32]>,
+    /// Keys whose records we published and must republish.
+    published_records: BTreeSet<[u8; 32]>,
+    next_republish: Time,
+    next_self_refresh: Time,
+    /// Requests awaiting a connection to the peer.
+    pending_sends: Vec<(PeerId, KadMsg, SendRef)>,
     events: VecDeque<KadEvent>,
 }
 
@@ -259,15 +550,23 @@ impl Kademlia {
     pub fn new(local: PeerId, host: u32, port: u16) -> Kademlia {
         Kademlia {
             table: RoutingTable::new(local),
-            provider_store: HashMap::new(),
-            record_store: HashMap::new(),
-            local_entry: PeerEntry {
-                id: local,
-                host,
-                port,
-            },
-            queries: HashMap::new(),
+            provider_store: BTreeMap::new(),
+            record_store: BTreeMap::new(),
+            local_entry: PeerEntry { id: local, host, port },
+            provider_ttl: PROVIDER_TTL,
+            record_ttl: RECORD_TTL,
+            republish_interval: REPUBLISH_INTERVAL,
+            refresh_interval: BUCKET_REFRESH_INTERVAL,
+            stats: KadStats::default(),
+            queries: BTreeMap::new(),
             next_query_id: 1,
+            probes: BTreeMap::new(),
+            next_probe_id: 1,
+            probe_by_bucket: BTreeMap::new(),
+            published_provides: BTreeSet::new(),
+            published_records: BTreeSet::new(),
+            next_republish: REPUBLISH_INTERVAL,
+            next_self_refresh: BUCKET_REFRESH_INTERVAL,
             pending_sends: Vec::new(),
             events: VecDeque::new(),
         }
@@ -277,95 +576,207 @@ impl Kademlia {
         self.events.pop_front()
     }
 
+    /// Change the republish period; the next republish round becomes due
+    /// immediately (next tick) so the new cadence takes effect promptly.
+    pub fn set_republish_interval(&mut self, interval: Time) {
+        self.republish_interval = interval;
+        self.next_republish = 0;
+    }
+
+    pub fn active_queries(&self) -> usize {
+        self.queries.len()
+    }
+
     /// Add a bootstrap/learned peer.
     pub fn add_address(&mut self, ctx: &mut Ctx, entry: PeerEntry) {
         ctx.swarm
             .peerstore
             .add_address(entry.id, entry.to_multiaddr());
-        self.table.insert(entry.clone());
-        self.events
-            .push_back(KadEvent::RoutingUpdated { peer: entry.id });
+        self.observe(ctx, entry);
+    }
+
+    /// Offer a contact to the routing table, gating full-bucket eviction on
+    /// a liveness probe of the bucket's oldest entry.
+    fn observe(&mut self, ctx: &mut Ctx, entry: PeerEntry) {
+        if entry.id == self.table.local {
+            return;
+        }
+        let now = ctx.now();
+        match self.table.insert(entry.clone(), now) {
+            InsertOutcome::Added => {
+                self.events
+                    .push_back(KadEvent::RoutingUpdated { peer: entry.id });
+            }
+            InsertOutcome::Refreshed | InsertOutcome::Ignored => {}
+            InsertOutcome::Full { bucket, oldest } => {
+                if let Some(&pid) = self.probe_by_bucket.get(&bucket) {
+                    // Probe already running: remember the freshest candidate.
+                    if let Some(p) = self.probes.get_mut(&pid) {
+                        p.candidate = entry;
+                    }
+                } else {
+                    self.start_probe(ctx, bucket, oldest, entry);
+                }
+            }
+        }
+    }
+
+    fn start_probe(&mut self, ctx: &mut Ctx, bucket: usize, oldest: PeerEntry, candidate: PeerEntry) {
+        let pid = self.next_probe_id;
+        self.next_probe_id += 1;
+        self.stats.probes_sent += 1;
+        self.probes.insert(
+            pid,
+            Probe {
+                bucket,
+                target: oldest.id,
+                candidate,
+                stream: None,
+                deadline: ctx.now() + REQUEST_TIMEOUT,
+            },
+        );
+        self.probe_by_bucket.insert(bucket, pid);
+        let key = *self.table.local.as_bytes();
+        let msg = Self::request_msg(QueryKind::FindNode, &key);
+        self.send_request(ctx, oldest.id, msg, SendRef::Probe(pid));
+    }
+
+    /// Probe came back: the oldest entry is alive — keep it, drop candidate.
+    fn probe_succeeded(&mut self, ctx: &mut Ctx, pid: u64) {
+        let Some(p) = self.probes.remove(&pid) else { return };
+        self.probe_by_bucket.remove(&p.bucket);
+        self.stats.probes_ok += 1;
+        self.table.mark_alive(&p.target, ctx.now());
+    }
+
+    /// Probe failed: evict the dead oldest entry, admit the candidate.
+    fn probe_failed(&mut self, ctx: &mut Ctx, pid: u64) {
+        let Some(p) = self.probes.remove(&pid) else { return };
+        self.probe_by_bucket.remove(&p.bucket);
+        self.stats.probes_evicted += 1;
+        self.table.remove(&p.target);
+        if let InsertOutcome::Added = self.table.insert(p.candidate.clone(), ctx.now()) {
+            self.events
+                .push_back(KadEvent::RoutingUpdated { peer: p.candidate.id });
+        }
     }
 
     /// Start an iterative FIND_NODE (also used for table refresh).
     pub fn find_node(&mut self, ctx: &mut Ctx, key: [u8; 32]) -> u64 {
-        self.start_query(ctx, QueryKind::FindNode, key, false)
+        self.start_query(ctx, QueryKind::FindNode, key, false, None)
     }
 
     /// Find providers for a CID key.
     pub fn get_providers(&mut self, ctx: &mut Ctx, key: [u8; 32]) -> u64 {
-        self.start_query(ctx, QueryKind::GetProviders, key, true)
+        self.start_query(ctx, QueryKind::GetProviders, key, true, None)
     }
 
     /// Fetch a record.
     pub fn get_record(&mut self, ctx: &mut Ctx, key: [u8; 32]) -> u64 {
-        self.start_query(ctx, QueryKind::GetRecord, key, true)
+        self.start_query(ctx, QueryKind::GetRecord, key, true, None)
     }
 
-    /// Announce ourselves as a provider to the k closest peers.
+    /// Announce ourselves as a provider: locate the current k-closest peers
+    /// with a lookup, push ADD_PROVIDER to them, and keep re-announcing
+    /// every [`Kademlia::republish_interval`].
     pub fn provide(&mut self, ctx: &mut Ctx, key: [u8; 32]) {
-        // Store locally, then push ADD_PROVIDER to closest known peers.
+        self.published_provides.insert(key);
+        self.announce_provider(ctx, key);
+    }
+
+    /// One-shot provider announce that is NOT enrolled for periodic
+    /// republish — bulk keys (blob chunks) use this so a publish doesn't
+    /// accumulate unbounded background republish load; the record simply
+    /// expires at TTL unless re-announced.
+    pub fn provide_once(&mut self, ctx: &mut Ctx, key: [u8; 32]) {
+        self.announce_provider(ctx, key);
+    }
+
+    /// Stop republishing `key` and drop our own local provider record.
+    pub fn stop_providing(&mut self, key: [u8; 32]) {
+        self.published_provides.remove(&key);
+        let local = self.local_entry.id;
+        if let Some(list) = self.provider_store.get_mut(&key) {
+            list.retain(|r| r.entry.id != local);
+            if list.is_empty() {
+                self.provider_store.remove(&key);
+            }
+        }
+    }
+
+    fn announce_provider(&mut self, ctx: &mut Ctx, key: [u8; 32]) {
+        let now = ctx.now();
         let me = self.local_entry.clone();
-        self.provider_store
-            .entry(key)
-            .or_default()
-            .retain(|e| e.id != me.id);
-        self.provider_store.entry(key).or_default().push(me.clone());
-        let msg = KadMsg {
-            kind: M_ADD_PROVIDER,
-            key: key.to_vec(),
-            provider: Some(me),
-            ..Default::default()
-        };
-        for target in self.table.closest(&key, K) {
-            self.send_to(ctx, target.id, msg.clone(), None);
-        }
+        let ttl = self.provider_ttl;
+        let list = self.provider_store.entry(key).or_default();
+        list.retain(|r| r.entry.id != me.id);
+        list.push(ProviderRecord { entry: me, expires: now + ttl });
+        self.start_query(ctx, QueryKind::FindNode, key, false, Some(Announce::Provider));
     }
 
-    /// Store a record on the k closest peers (and locally).
+    /// Store a record on the k closest peers (and locally), republishing
+    /// every [`Kademlia::republish_interval`].
     pub fn put_record(&mut self, ctx: &mut Ctx, key: [u8; 32], value: Vec<u8>) {
-        self.record_store.insert(key, value.clone());
-        let msg = KadMsg {
-            kind: M_PUT_RECORD,
-            key: key.to_vec(),
-            value,
-            ..Default::default()
-        };
-        for target in self.table.closest(&key, K) {
-            self.send_to(ctx, target.id, msg.clone(), None);
-        }
+        self.published_records.insert(key);
+        self.announce_record(ctx, key, value);
     }
 
-    fn start_query(&mut self, ctx: &mut Ctx, kind: QueryKind, key: [u8; 32], early: bool) -> u64 {
+    fn announce_record(&mut self, ctx: &mut Ctx, key: [u8; 32], value: Vec<u8>) {
+        let now = ctx.now();
+        self.record_store.insert(
+            key,
+            StoredRecord {
+                value: value.clone(),
+                expires: now + self.record_ttl,
+            },
+        );
+        self.start_query(ctx, QueryKind::FindNode, key, false, Some(Announce::Record(value)));
+    }
+
+    fn start_query(
+        &mut self,
+        ctx: &mut Ctx,
+        kind: QueryKind,
+        key: [u8; 32],
+        early: bool,
+        announce: Option<Announce>,
+    ) -> u64 {
         let id = self.next_query_id;
         self.next_query_id += 1;
-        let mut candidates: Vec<(PeerEntry, bool)> = self
+        if let Some(b) = self.table.bucket_of(&key) {
+            self.table.touch_refresh(b, ctx.now());
+        }
+        let candidates: Vec<(PeerEntry, CandState)> = self
             .table
             .closest(&key, K)
             .into_iter()
-            .map(|e| (e, false))
+            .map(|e| (e, CandState::Fresh))
             .collect();
-        candidates.sort_by_key(|(e, _)| xor_distance(e.id.as_bytes(), &key));
         let mut q = Query {
-            id,
             kind,
             key,
             candidates,
-            inflight: HashMap::new(),
+            inflight: BTreeMap::new(),
             providers: Vec::new(),
             record: None,
-            responded: HashSet::new(),
             hops: 0,
             early_exit: early,
+            announce,
         };
         // Check the local stores first.
+        let now = ctx.now();
         if kind == QueryKind::GetProviders {
             if let Some(p) = self.provider_store.get(&key) {
-                q.providers.extend(p.iter().cloned());
+                q.providers
+                    .extend(p.iter().filter(|r| r.expires > now).map(|r| r.entry.clone()));
             }
         }
         if kind == QueryKind::GetRecord {
-            q.record = self.record_store.get(&key).cloned();
+            q.record = self
+                .record_store
+                .get(&key)
+                .filter(|r| r.expires > now)
+                .map(|r| r.value.clone());
         }
         self.queries.insert(id, q);
         self.advance_query(ctx, id);
@@ -384,34 +795,87 @@ impl Kademlia {
         }
     }
 
+    /// Drive a query: issue up to α requests over the closest K non-failed
+    /// candidates; finish when they have all answered (or the early-exit
+    /// condition hit) and nothing is in flight.
     fn advance_query(&mut self, ctx: &mut Ctx, qid: u64) {
         let now = ctx.now();
         let Some(q) = self.queries.get_mut(&qid) else { return };
-        // Early exit?
         let done_early =
             q.early_exit && (!q.providers.is_empty() || q.record.is_some()) && q.hops > 0;
-        // Next unqueried candidates while under parallelism.
         let mut to_send: Vec<PeerEntry> = Vec::new();
         if !done_early {
-            for (e, queried) in q.candidates.iter_mut() {
-                if q.inflight.len() + to_send.len() >= ALPHA {
+            let mut within_k = 0usize;
+            for (e, st) in q.candidates.iter_mut() {
+                if within_k >= K {
                     break;
                 }
-                if !*queried {
-                    *queried = true;
-                    to_send.push(e.clone());
+                match st {
+                    CandState::Failed => continue,
+                    CandState::Responded | CandState::Waiting => within_k += 1,
+                    CandState::Fresh => {
+                        within_k += 1;
+                        if q.inflight.len() + to_send.len() < ALPHA {
+                            *st = CandState::Waiting;
+                            to_send.push(e.clone());
+                        }
+                    }
                 }
             }
+            // Register in-flight state up front so re-entrant failures
+            // during the sends below can't mis-detect completion.
+            for e in &to_send {
+                q.inflight.insert(
+                    e.id,
+                    InflightReq {
+                        stream: None,
+                        deadline: now + REQUEST_TIMEOUT,
+                    },
+                );
+            }
+            self.stats.requests_tracked += to_send.len() as u64;
         }
-        let finished = q.inflight.is_empty() && to_send.is_empty();
+        // An early-exit hit finishes at once: outstanding requests are
+        // abandoned (late replies to a dead query are ignored), so a
+        // provider lookup is never held hostage by one slow/dead peer.
+        let finished = done_early || (q.inflight.is_empty() && to_send.is_empty());
         let kind = q.kind;
         let key = q.key;
         if finished {
-            let q = self.queries.remove(&qid).unwrap();
-            let mut closest: Vec<PeerEntry> =
-                q.candidates.into_iter().map(|(e, _)| e).collect();
+            // Drop any dial-pending sends still referencing this query so
+            // a late ConnEstablished doesn't replay an orphaned request.
+            self.pending_sends
+                .retain(|(_, _, r)| *r != SendRef::Query(qid));
+            let mut q = self.queries.remove(&qid).unwrap();
+            let mut closest: Vec<PeerEntry> = q
+                .candidates
+                .into_iter()
+                .filter(|(_, st)| *st != CandState::Failed)
+                .map(|(e, _)| e)
+                .collect();
             closest.sort_by_key(|e| xor_distance(e.id.as_bytes(), &key));
             closest.truncate(K);
+            // Announce queries: push the record to the freshly-discovered
+            // k-closest set.
+            if let Some(a) = q.announce.take() {
+                let msg = match a {
+                    Announce::Provider => KadMsg {
+                        kind: M_ADD_PROVIDER,
+                        key: key.to_vec(),
+                        provider: Some(self.local_entry.clone()),
+                        ..Default::default()
+                    },
+                    Announce::Record(value) => KadMsg {
+                        kind: M_PUT_RECORD,
+                        key: key.to_vec(),
+                        value,
+                        ..Default::default()
+                    },
+                };
+                for target in &closest {
+                    self.send_request(ctx, target.id, msg.clone(), SendRef::Free);
+                }
+            }
             self.events.push_back(KadEvent::QueryFinished {
                 query_id: qid,
                 key,
@@ -423,58 +887,87 @@ impl Kademlia {
             });
             return;
         }
-        let _ = now;
         for e in to_send {
             let msg = Self::request_msg(kind, &key);
-            self.send_to(ctx, e.id, msg, Some((qid, 0)));
+            self.send_request(ctx, e.id, msg, SendRef::Query(qid));
         }
     }
 
-    /// Send a request, dialing first if necessary.
-    fn send_to(&mut self, ctx: &mut Ctx, peer: PeerId, msg: KadMsg, query: Option<(u64, u64)>) {
+    /// Send a request, dialing first if necessary. Tracked requests
+    /// (queries/probes) must already hold their deadline state; this only
+    /// attaches the stream or reports failure.
+    fn send_request(&mut self, ctx: &mut Ctx, peer: PeerId, msg: KadMsg, sref: SendRef) {
         if peer == self.table.local {
+            self.fail_ref(ctx, sref, peer);
             return;
         }
+        let oneway = matches!(msg.kind, M_ADD_PROVIDER | M_PUT_RECORD);
         match ctx.ensure_connected(&peer) {
-            Ok(true) => {
-                if let Ok((cid, stream)) = ctx.open_stream(&peer, KAD_PROTO) {
+            Ok(true) => match ctx.open_stream(&peer, KAD_PROTO) {
+                Ok((cid, stream)) => {
                     let _ = ctx.send(cid, stream, &msg.encode());
-                    if !matches!(
-                        msg.kind,
-                        M_ADD_PROVIDER | M_PUT_RECORD
-                    ) {
-                        if let Some((qid, _)) = query {
-                            if let Some(q) = self.queries.get_mut(&qid) {
-                                q.inflight
-                                    .insert((cid, stream), (peer, ctx.now() + REQUEST_TIMEOUT));
-                            }
-                        }
-                    } else {
+                    if oneway {
                         ctx.finish(cid, stream);
+                    } else {
+                        self.stats.requests_sent += 1;
+                        self.attach_stream(sref, peer, cid, stream);
                     }
-                } else if let Some((qid, _)) = query {
-                    self.fail_inflight_peer(ctx, qid, peer);
                 }
-            }
+                Err(_) => self.fail_ref(ctx, sref, peer),
+            },
             Ok(false) => {
-                // Dial in flight: queue for ConnEstablished.
-                self.pending_sends.push((peer, msg, query));
+                // Dial in flight: queue for ConnEstablished / DialFailed.
+                self.pending_sends.push((peer, msg, sref));
             }
-            Err(_) => {
-                if let Some((qid, _)) = query {
-                    self.fail_inflight_peer(ctx, qid, peer);
-                }
-            }
+            Err(_) => self.fail_ref(ctx, sref, peer),
         }
     }
 
-    fn fail_inflight_peer(&mut self, ctx: &mut Ctx, qid: u64, _peer: PeerId) {
+    fn attach_stream(&mut self, sref: SendRef, peer: PeerId, cid: u64, stream: u64) {
+        match sref {
+            SendRef::Query(qid) => {
+                if let Some(i) = self
+                    .queries
+                    .get_mut(&qid)
+                    .and_then(|q| q.inflight.get_mut(&peer))
+                {
+                    i.stream = Some((cid, stream));
+                }
+            }
+            SendRef::Probe(pid) => {
+                if let Some(p) = self.probes.get_mut(&pid) {
+                    p.stream = Some((cid, stream));
+                }
+            }
+            SendRef::Free => {}
+        }
+    }
+
+    /// A tracked request can't be delivered: fail over immediately.
+    fn fail_ref(&mut self, ctx: &mut Ctx, sref: SendRef, peer: PeerId) {
+        match sref {
+            SendRef::Free => {}
+            SendRef::Query(qid) => self.fail_query_peer(ctx, qid, peer),
+            SendRef::Probe(pid) => self.probe_failed(ctx, pid),
+        }
+    }
+
+    /// Mark a query's candidate failed and re-issue to the next-closest
+    /// candidate (the churn failover path).
+    fn fail_query_peer(&mut self, ctx: &mut Ctx, qid: u64, peer: PeerId) {
+        let Some(q) = self.queries.get_mut(&qid) else { return };
+        if q.inflight.remove(&peer).is_some() {
+            self.stats.requests_failed += 1;
+        }
+        if let Some(c) = q.candidates.iter_mut().find(|(e, _)| e.id == peer) {
+            c.1 = CandState::Failed;
+        }
         self.advance_query(ctx, qid);
     }
 
     /// Node hook: a connection to `peer` is up — flush queued requests.
     pub fn on_peer_connected(&mut self, ctx: &mut Ctx, peer: PeerId) {
-        let pending: Vec<(PeerId, KadMsg, Option<(u64, u64)>)> = {
+        let ready: Vec<(PeerId, KadMsg, SendRef)> = {
             let (ready, rest): (Vec<_>, Vec<_>) = self
                 .pending_sends
                 .drain(..)
@@ -482,25 +975,70 @@ impl Kademlia {
             self.pending_sends = rest;
             ready
         };
-        for (p, msg, query) in pending {
-            self.send_to(ctx, p, msg, query);
+        for (p, msg, sref) in ready {
+            self.send_request(ctx, p, msg, sref);
         }
     }
 
-    /// Node hook: dial failed or conn closed — fail pending sends to peer.
+    /// Node hook: dialing `peer` failed (or its connection died before the
+    /// request went out). Drops queued sends, soft-fails the routing entry,
+    /// and — crucially under churn — fails over every in-flight query
+    /// request that was waiting on that peer instead of letting the query
+    /// stall until its timeout.
     pub fn on_peer_unreachable(&mut self, ctx: &mut Ctx, peer: PeerId) {
-        let failed: Vec<(PeerId, KadMsg, Option<(u64, u64)>)> = {
-            let (bad, rest): (Vec<_>, Vec<_>) = self
-                .pending_sends
-                .drain(..)
-                .partition(|(p, _, _)| *p == peer);
-            self.pending_sends = rest;
-            bad
-        };
-        self.table.remove(&peer);
-        for (_, _, query) in failed {
-            if let Some((qid, _)) = query {
-                self.advance_query(ctx, qid);
+        self.pending_sends.retain(|(p, _, _)| *p != peer);
+        self.table.mark_failed(&peer);
+        let qids: Vec<u64> = self
+            .queries
+            .iter()
+            .filter(|(_, q)| q.inflight.contains_key(&peer))
+            .map(|(id, _)| *id)
+            .collect();
+        for qid in qids {
+            self.fail_query_peer(ctx, qid, peer);
+        }
+        let pids: Vec<u64> = self
+            .probes
+            .iter()
+            .filter(|(_, p)| p.target == peer)
+            .map(|(id, _)| *id)
+            .collect();
+        for pid in pids {
+            self.probe_failed(ctx, pid);
+        }
+    }
+
+    /// Node hook: a connection closed. Requests in flight on its streams
+    /// fail over; peers that announced a shutdown are dropped from the
+    /// table, timeouts count as a liveness strike.
+    pub fn on_conn_closed(&mut self, ctx: &mut Ctx, cid: u64, peer: Option<PeerId>, reason: &str) {
+        let victims: Vec<(u64, PeerId)> = self
+            .queries
+            .iter()
+            .flat_map(|(qid, q)| {
+                q.inflight
+                    .iter()
+                    .filter(move |(_, i)| matches!(i.stream, Some((c, _)) if c == cid))
+                    .map(move |(p, _)| (*qid, *p))
+            })
+            .collect();
+        for (qid, p) in victims {
+            self.fail_query_peer(ctx, qid, p);
+        }
+        let pids: Vec<u64> = self
+            .probes
+            .iter()
+            .filter(|(_, p)| matches!(p.stream, Some((c, _)) if c == cid))
+            .map(|(id, _)| *id)
+            .collect();
+        for pid in pids {
+            self.probe_failed(ctx, pid);
+        }
+        if let Some(p) = peer {
+            if reason.contains("shutdown") {
+                self.table.remove(&p);
+            } else if reason.contains("timeout") {
+                self.table.mark_failed(&p);
             }
         }
     }
@@ -515,6 +1053,25 @@ impl Kademlia {
         msg: &[u8],
     ) -> Result<()> {
         let m = KadMsg::decode(msg)?;
+        let now = ctx.now();
+        // Any authenticated kad traffic is liveness evidence: admit the
+        // requester into the routing table — but only when its observed
+        // source address is a real listen address. A NAT'd peer's source
+        // is a translated mapping that third parties cannot dial, so
+        // admitting it would seed unreachable routing entries
+        // (is_nat_face stands in for an AutoNAT dial-back verdict).
+        if matches!(
+            m.kind,
+            M_FIND_NODE | M_GET_PROVIDERS | M_GET_RECORD | M_ADD_PROVIDER | M_PUT_RECORD
+        ) {
+            if let Some(crate::swarm::Path::Direct(a)) = ctx.swarm.connection_path(cid) {
+                if !ctx.net.is_nat_face(a.host) {
+                    let entry = PeerEntry { id: peer, host: a.host, port: a.port };
+                    ctx.swarm.peerstore.add_address(peer, entry.to_multiaddr());
+                    self.observe(ctx, entry);
+                }
+            }
+        }
         match m.kind {
             M_FIND_NODE | M_GET_PROVIDERS | M_GET_RECORD => {
                 let mut key = [0u8; 32];
@@ -529,13 +1086,19 @@ impl Kademlia {
                 };
                 if m.kind == M_GET_PROVIDERS {
                     if let Some(p) = self.provider_store.get(&key) {
-                        reply.providers = p.clone();
+                        reply.providers = p
+                            .iter()
+                            .filter(|r| r.expires > now)
+                            .map(|r| r.entry.clone())
+                            .collect();
                     }
                 }
                 if m.kind == M_GET_RECORD {
-                    if let Some(v) = self.record_store.get(&key) {
-                        reply.value = v.clone();
-                        reply.found = true;
+                    if let Some(r) = self.record_store.get(&key) {
+                        if r.expires > now {
+                            reply.value = r.value.clone();
+                            reply.found = true;
+                        }
                     }
                 }
                 ctx.send(cid, stream, &reply.encode())?;
@@ -550,9 +1113,10 @@ impl Kademlia {
                     // Only accept provider records attributed to the
                     // authenticated sender (Castro et al. secure routing).
                     if p.id == peer {
+                        let ttl = self.provider_ttl;
                         let list = self.provider_store.entry(key).or_default();
-                        list.retain(|e| e.id != p.id);
-                        list.push(p);
+                        list.retain(|e| e.entry.id != p.id);
+                        list.push(ProviderRecord { entry: p, expires: now + ttl });
                         if list.len() > 2 * K {
                             list.remove(0);
                         }
@@ -564,7 +1128,10 @@ impl Kademlia {
                 if m.key.len() == 32 {
                     key.copy_from_slice(&m.key);
                 }
-                self.record_store.insert(key, m.value);
+                self.record_store.insert(
+                    key,
+                    StoredRecord { value: m.value, expires: now + self.record_ttl },
+                );
             }
             _ => {}
         }
@@ -577,17 +1144,40 @@ impl Kademlia {
         if m.kind != M_REPLY {
             return;
         }
-        // Find the owning query.
+        let now = ctx.now();
+        // Liveness probe reply: oldest entry lives, keep it.
+        if let Some(pid) = self
+            .probes
+            .iter()
+            .find(|(_, p)| p.stream == Some((cid, stream)))
+            .map(|(id, _)| *id)
+        {
+            self.probe_succeeded(ctx, pid);
+            return;
+        }
+        // Find the owning query by stream.
         let qid = self
             .queries
             .iter()
-            .find(|(_, q)| q.inflight.contains_key(&(cid, stream)))
+            .find(|(_, q)| {
+                q.inflight
+                    .values()
+                    .any(|i| i.stream == Some((cid, stream)))
+            })
             .map(|(id, _)| *id);
         let Some(qid) = qid else { return };
         {
             let q = self.queries.get_mut(&qid).unwrap();
-            let (peer, _) = q.inflight.remove(&(cid, stream)).unwrap();
-            q.responded.insert(peer);
+            let peer = q
+                .inflight
+                .iter()
+                .find(|(_, i)| i.stream == Some((cid, stream)))
+                .map(|(p, _)| *p)
+                .unwrap();
+            q.inflight.remove(&peer);
+            if let Some(c) = q.candidates.iter_mut().find(|(e, _)| e.id == peer) {
+                c.1 = CandState::Responded;
+            }
             q.hops += 1;
             for p in &m.providers {
                 if !q.providers.iter().any(|e| e.id == p.id) {
@@ -597,54 +1187,141 @@ impl Kademlia {
             if m.found && q.record.is_none() {
                 q.record = Some(m.value.clone());
             }
+            self.stats.replies += 1;
+            self.table.mark_alive(&peer, now);
         }
         // Learn closer peers (update table + candidates).
         for e in &m.closer {
-            self.table.insert(e.clone());
+            if e.id == self.table.local {
+                continue;
+            }
             ctx.swarm.peerstore.add_address(e.id, e.to_multiaddr());
+            self.observe(ctx, e.clone());
             let q = self.queries.get_mut(&qid).unwrap();
-            if !q.candidates.iter().any(|(c, _)| c.id == e.id) && e.id != self.table.local {
-                q.candidates.push((e.clone(), false));
+            if !q.candidates.iter().any(|(c, _)| c.id == e.id) {
+                q.candidates.push((e.clone(), CandState::Fresh));
             }
         }
-        let key = self.queries[&qid].key;
         let q = self.queries.get_mut(&qid).unwrap();
+        let key = q.key;
         q.candidates
             .sort_by_key(|(e, _)| xor_distance(e.id.as_bytes(), &key));
-        q.candidates.truncate(3 * K);
+        if q.candidates.len() > 3 * K {
+            // Trim the tail but never drop a tracked (waiting) candidate.
+            let mut kept = 0usize;
+            q.candidates.retain(|(_, st)| {
+                kept += 1;
+                kept <= 3 * K || *st == CandState::Waiting
+            });
+        }
         self.advance_query(ctx, qid);
     }
 
-    /// Periodic tick: expire stalled requests.
+    /// Periodic tick: expire stalled requests and probes, expire stores,
+    /// republish own keys, refresh stale buckets.
     pub fn tick(&mut self, ctx: &mut Ctx) {
         let now = ctx.now();
-        let qids: Vec<u64> = self.queries.keys().copied().collect();
-        for qid in qids {
-            let expired: Vec<(u64, u64)> = self
-                .queries
-                .get(&qid)
-                .map(|q| {
-                    q.inflight
-                        .iter()
-                        .filter(|(_, (_, dl))| *dl <= now)
-                        .map(|(k, _)| *k)
-                        .collect()
-                })
-                .unwrap_or_default();
-            if !expired.is_empty() {
-                for k in expired {
-                    if let Some(q) = self.queries.get_mut(&qid) {
-                        q.inflight.remove(&k);
-                        let _ = ctx; // stream will be reset by peer or idle out
-                    }
+        // 1. Per-request timeouts → candidate failover.
+        let expired: Vec<(u64, PeerId)> = self
+            .queries
+            .iter()
+            .flat_map(|(qid, q)| {
+                q.inflight
+                    .iter()
+                    .filter(|(_, i)| i.deadline <= now)
+                    .map(move |(p, _)| (*qid, *p))
+            })
+            .collect();
+        // One liveness strike per peer per tick, however many concurrent
+        // queries timed out on it — a single outage episode must not burn
+        // through MAX_FAILS and evict a long-lived peer outright.
+        let mut struck: BTreeSet<PeerId> = BTreeSet::new();
+        for (qid, peer) in expired {
+            self.stats.requests_timed_out += 1;
+            if struck.insert(peer) {
+                self.table.mark_failed(&peer);
+            }
+            self.pending_sends
+                .retain(|(p, _, r)| !(*p == peer && *r == SendRef::Query(qid)));
+            // Remove the inflight entry first so fail_query_peer doesn't
+            // also count this as a delivery failure.
+            if let Some(q) = self.queries.get_mut(&qid) {
+                q.inflight.remove(&peer);
+            }
+            self.fail_query_peer(ctx, qid, peer);
+        }
+        // 2. Probe timeouts → eviction.
+        let pexp: Vec<u64> = self
+            .probes
+            .iter()
+            .filter(|(_, p)| p.deadline <= now)
+            .map(|(id, _)| *id)
+            .collect();
+        for pid in pexp {
+            if let Some(t) = self.probes.get(&pid).map(|p| p.target) {
+                self.pending_sends
+                    .retain(|(p, _, r)| !(*p == t && *r == SendRef::Probe(pid)));
+            }
+            self.probe_failed(ctx, pid);
+        }
+        // 3. Store expiry. Our own published keys never expire locally:
+        // the publisher is the source of truth that republish re-seeds
+        // from, even when the TTL is shorter than the republish period.
+        let local_id = self.local_entry.id;
+        let mut dropped = 0u64;
+        {
+            let published = &self.published_provides;
+            self.provider_store.retain(|k, list| {
+                let keep_own = published.contains(k);
+                let before = list.len();
+                list.retain(|r| r.expires > now || (keep_own && r.entry.id == local_id));
+                dropped += (before - list.len()) as u64;
+                !list.is_empty()
+            });
+        }
+        self.stats.providers_expired += dropped;
+        let expired_records;
+        {
+            let published = &self.published_records;
+            let before = self.record_store.len();
+            self.record_store
+                .retain(|k, r| r.expires > now || published.contains(k));
+            expired_records = (before - self.record_store.len()) as u64;
+        }
+        self.stats.records_expired += expired_records;
+        // 4. Republish own keys to the current k-closest peers.
+        if now >= self.next_republish {
+            self.next_republish = now + self.republish_interval;
+            let pkeys: Vec<[u8; 32]> = self.published_provides.iter().copied().collect();
+            let rkeys: Vec<[u8; 32]> = self.published_records.iter().copied().collect();
+            if !pkeys.is_empty() || !rkeys.is_empty() {
+                self.stats.republish_rounds += 1;
+            }
+            for k in pkeys {
+                self.announce_provider(ctx, k);
+            }
+            for k in rkeys {
+                if let Some(v) = self.record_store.get(&k).map(|r| r.value.clone()) {
+                    self.announce_record(ctx, k, v);
                 }
-                self.advance_query(ctx, qid);
             }
         }
-    }
-
-    pub fn active_queries(&self) -> usize {
-        self.queries.len()
+        // 5. Periodic self-lookup + stale-bucket refresh.
+        if now >= self.next_self_refresh && !self.table.is_empty() {
+            self.next_self_refresh = now + self.refresh_interval;
+            self.stats.refreshes += 1;
+            let key = *self.table.local.as_bytes();
+            self.start_query(ctx, QueryKind::FindNode, key, false, None);
+        }
+        if self.queries.len() < MAX_MAINTENANCE_QUERIES {
+            let stale = self.table.stale_buckets(now, self.refresh_interval);
+            for idx in stale.into_iter().take(MAX_REFRESH_PER_TICK) {
+                let key = self.table.random_key_in_bucket(idx, &mut ctx.net.rng);
+                self.table.touch_refresh(idx, now);
+                self.stats.refreshes += 1;
+                self.start_query(ctx, QueryKind::FindNode, key, false, None);
+            }
+        }
     }
 }
 
@@ -680,18 +1357,17 @@ mod tests {
         let local = Keypair::from_seed(0).peer_id();
         let mut rt = RoutingTable::new(local);
         for s in 1..=50u64 {
-            rt.insert(entry(s));
+            let _ = rt.insert(entry(s), s);
         }
-        // Random ids concentrate in the top buckets; K-bucket eviction may
-        // drop a few, but most survive.
+        // Random ids concentrate in the top buckets; full buckets report
+        // Full instead of silently evicting, so everything that fit stays.
         let before = rt.len();
         assert!((40..=50).contains(&before), "len={before}");
         // Self never inserted.
-        rt.insert(PeerEntry {
-            id: local,
-            host: 9,
-            port: 9,
-        });
+        assert_eq!(
+            rt.insert(PeerEntry { id: local, host: 9, port: 9 }, 99),
+            InsertOutcome::Ignored
+        );
         assert_eq!(rt.len(), before);
         let key = *Keypair::from_seed(99).peer_id().as_bytes();
         let closest = rt.closest(&key, 10);
@@ -702,7 +1378,7 @@ mod tests {
                 xor_distance(w[0].id.as_bytes(), &key) <= xor_distance(w[1].id.as_bytes(), &key)
             );
         }
-        // And that they really are the 10 closest of all 50.
+        // And that they really are the 10 closest of all entries.
         let mut all: Vec<PeerEntry> = rt.iter().cloned().collect();
         all.sort_by_key(|e| xor_distance(e.id.as_bytes(), &key));
         assert_eq!(
@@ -712,30 +1388,121 @@ mod tests {
     }
 
     #[test]
-    fn routing_table_update_refreshes_addr() {
+    fn routing_table_update_refreshes_addr_and_lru() {
         let mut rt = RoutingTable::new(Keypair::from_seed(0).peer_id());
         let mut e = entry(5);
-        rt.insert(e.clone());
+        assert_eq!(rt.insert(e.clone(), 1), InsertOutcome::Added);
         e.port = 9999;
-        rt.insert(e.clone());
+        assert_eq!(rt.insert(e.clone(), 2), InsertOutcome::Refreshed);
         assert_eq!(rt.len(), 1);
-        assert_eq!(rt.iter().next().unwrap().port, 9999);
+        let got = rt.entries().next().unwrap();
+        assert_eq!(got.entry.port, 9999);
+        assert_eq!(got.last_seen, 2);
+        assert_eq!(got.fails, 0);
+    }
+
+    #[test]
+    fn full_bucket_reports_oldest_for_probe() {
+        let local = Keypair::from_seed(0).peer_id();
+        let mut rt = RoutingTable::new(local);
+        // Find many seeds landing in one bucket.
+        let mut in_bucket: Vec<(u64, usize)> = Vec::new();
+        for s in 1..=600u64 {
+            let id = Keypair::from_seed(s).peer_id();
+            if let Some(b) = local.bucket_index(&id) {
+                in_bucket.push((s, b));
+            }
+        }
+        // Pick the most common bucket.
+        let mut counts = std::collections::HashMap::new();
+        for (_, b) in &in_bucket {
+            *counts.entry(*b).or_insert(0usize) += 1;
+        }
+        let (&bucket, &n) = counts.iter().max_by_key(|(_, n)| **n).unwrap();
+        assert!(n > K, "need an overfull bucket for this test");
+        let seeds: Vec<u64> = in_bucket
+            .iter()
+            .filter(|(_, b)| *b == bucket)
+            .map(|(s, _)| *s)
+            .collect();
+        for (i, s) in seeds.iter().take(K).enumerate() {
+            assert_eq!(rt.insert(entry(*s), i as Time), InsertOutcome::Added);
+        }
+        // Bucket is full of live entries: insert reports Full with the LRU.
+        let oldest_id = Keypair::from_seed(seeds[0]).peer_id();
+        match rt.insert(entry(seeds[K]), 99) {
+            InsertOutcome::Full { bucket: b, oldest } => {
+                assert_eq!(b, bucket);
+                assert_eq!(oldest.id, oldest_id);
+            }
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(rt.bucket_len(bucket), K);
+        // A failed entry is evicted preferentially, without a probe.
+        let dead = Keypair::from_seed(seeds[3]).peer_id();
+        assert!(!rt.mark_failed(&dead)); // one strike: still present
+        assert_eq!(rt.insert(entry(seeds[K]), 100), InsertOutcome::Added);
+        assert!(rt.iter().all(|e| e.id != dead), "dead peer evicted first");
+        assert_eq!(rt.bucket_len(bucket), K);
+    }
+
+    #[test]
+    fn mark_failed_removes_after_max_fails() {
+        let mut rt = RoutingTable::new(Keypair::from_seed(0).peer_id());
+        let e = entry(7);
+        let _ = rt.insert(e.clone(), 1);
+        assert!(!rt.mark_failed(&e.id));
+        assert_eq!(rt.len(), 1);
+        assert!(rt.mark_failed(&e.id));
+        assert_eq!(rt.len(), 0);
+        // mark_alive resets the strike counter.
+        let _ = rt.insert(e.clone(), 2);
+        assert!(!rt.mark_failed(&e.id));
+        rt.mark_alive(&e.id, 3);
+        assert!(!rt.mark_failed(&e.id), "fails were reset by mark_alive");
+        assert_eq!(rt.len(), 1);
     }
 
     #[test]
     fn bucket_bounded_at_k() {
-        // Many peers in the same far bucket: stays ≤ K.
         let local = Keypair::from_seed(0).peer_id();
         let mut rt = RoutingTable::new(local);
         for s in 1..=200u64 {
-            rt.insert(entry(s));
+            let _ = rt.insert(entry(s), s);
         }
-        let key = *local.as_bytes();
-        let _ = key;
         for b in 0..256 {
-            let count = rt.iter().filter(|e| local.bucket_index(&e.id) == Some(b)).count();
-            assert!(count <= K, "bucket {b} has {count}");
+            assert!(rt.bucket_len(b) <= K, "bucket {b} has {}", rt.bucket_len(b));
         }
+    }
+
+    #[test]
+    fn random_key_lands_in_requested_bucket() {
+        let local = Keypair::from_seed(0).peer_id();
+        let rt = RoutingTable::new(local);
+        let mut rng = crate::util::Rng::new(17);
+        for idx in [255usize, 254, 250, 248, 247, 200, 128, 8, 1, 0] {
+            for _ in 0..10 {
+                let key = rt.random_key_in_bucket(idx, &mut rng);
+                assert_eq!(
+                    local.bucket_index(&PeerId(key)),
+                    Some(idx),
+                    "key for bucket {idx} landed elsewhere"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stale_bucket_tracking() {
+        let local = Keypair::from_seed(0).peer_id();
+        let mut rt = RoutingTable::new(local);
+        let e = entry(3);
+        let bucket = local.bucket_index(&e.id).unwrap();
+        let _ = rt.insert(e, 0);
+        assert_eq!(rt.stale_buckets(10 * SECOND, 5 * SECOND), vec![bucket]);
+        rt.touch_refresh(bucket, 10 * SECOND);
+        assert!(rt.stale_buckets(12 * SECOND, 5 * SECOND).is_empty());
+        assert_eq!(rt.stale_buckets(15 * SECOND, 5 * SECOND), vec![bucket]);
     }
 
     #[test]

@@ -223,6 +223,328 @@ pub fn bootstrap_mesh_on(
     (world, nodes)
 }
 
+// ---------------------------------------------------------------------------
+// Churn scenarios
+// ---------------------------------------------------------------------------
+
+/// A [`bootstrap_mesh`]-style deployment that can stop, crash and restart
+/// nodes mid-run under a [`ChurnPlan`] — the harness behind the
+/// `dht_churn` hardening suite and `BENCH_dht_churn.json`.
+pub struct ChurnMesh {
+    pub world: World,
+    pub hosts: Vec<u32>,
+    /// Index-aligned with `hosts`; `None` while a node is down.
+    pub nodes: Vec<Option<Node>>,
+    /// Per-node restart count — bumped on every rejoin so callers can
+    /// tell a respawned instance from the one that issued earlier work
+    /// (query ids restart from 1 on respawn).
+    pub incarnation: Vec<u64>,
+    bootstrap_entry: crate::protocols::kad::PeerEntry,
+    seed: u64,
+    /// Kad counters of nodes that have been stopped (so scenario-wide
+    /// aggregation doesn't lose their traffic history).
+    graveyard_stats: crate::protocols::kad::KadStats,
+    pub joins: u64,
+    pub leaves: u64,
+    pub crashes: u64,
+}
+
+/// Build an `n`-node single-region mesh bootstrapped through node 0 (the
+/// same deployment as [`bootstrap_mesh`]), with churn-management handles.
+/// Node identities are deterministic in `(seed, index)`, so a restarted
+/// node keeps its PeerId and address.
+pub fn churn_mesh(n: usize, seed: u64, link: LinkProfile) -> ChurnMesh {
+    let (world, nodes) = bootstrap_mesh(n, seed, link);
+    let hosts: Vec<u32> = nodes
+        .iter()
+        .map(|nd| nd.borrow().swarm.local_addr.host)
+        .collect();
+    let bootstrap_entry = crate::protocols::kad::PeerEntry {
+        id: nodes[0].borrow().peer_id(),
+        host: hosts[0],
+        port: 4001,
+    };
+    ChurnMesh {
+        world,
+        hosts,
+        incarnation: vec![0; n],
+        nodes: nodes.into_iter().map(Some).collect(),
+        bootstrap_entry,
+        seed,
+        graveyard_stats: crate::protocols::kad::KadStats::default(),
+        joins: 0,
+        leaves: 0,
+        crashes: 0,
+    }
+}
+
+impl ChurnMesh {
+    /// Indices of nodes currently up.
+    pub fn live(&self) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.is_some())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn is_up(&self, i: usize) -> bool {
+        self.nodes[i].is_some()
+    }
+
+    /// Apply one churn event: clean leave, crash, or (re)join.
+    pub fn apply(&mut self, ev: &crate::netsim::ChurnEvent) {
+        use crate::netsim::ChurnAction;
+        match ev.action {
+            ChurnAction::Leave | ChurnAction::Crash => {
+                if let Some(node) = self.nodes[ev.node].take() {
+                    let clean = ev.action == ChurnAction::Leave;
+                    let eid = {
+                        let mut n = node.borrow_mut();
+                        self.graveyard_stats.merge(&n.kad.stats);
+                        n.shutdown(&mut self.world.net, clean);
+                        n.endpoint_id()
+                    };
+                    self.world.remove_endpoint(eid);
+                    if clean {
+                        self.leaves += 1;
+                    } else {
+                        self.crashes += 1;
+                    }
+                }
+            }
+            ChurnAction::Join => {
+                if self.nodes[ev.node].is_none() {
+                    let cfg = NodeConfig::with_seed(self.seed * 1000 + ev.node as u64);
+                    let node =
+                        LatticaNode::spawn(&mut self.world, self.hosts[ev.node], cfg);
+                    node.borrow_mut()
+                        .bootstrap(&mut self.world.net, self.bootstrap_entry.clone());
+                    self.nodes[ev.node] = Some(node);
+                    self.incarnation[ev.node] += 1;
+                    self.joins += 1;
+                }
+            }
+        }
+    }
+
+    /// Run to `deadline`, applying due churn events at their exact virtual
+    /// times (deterministic: same plan + same seed ⇒ same trace).
+    pub fn run_with_churn(
+        &mut self,
+        plan: &mut crate::netsim::ChurnPlan,
+        deadline: crate::netsim::Time,
+    ) {
+        loop {
+            match plan.peek().map(|e| e.at) {
+                Some(at) if at <= deadline => {
+                    self.world.run_until(at);
+                    while let Some(ev) = plan.pop_due(self.world.net.now()) {
+                        self.apply(&ev);
+                    }
+                }
+                _ => {
+                    self.world.run_until(deadline);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Scenario-wide kad counters: live nodes plus everything already
+    /// stopped.
+    pub fn kad_stats(&self) -> crate::protocols::kad::KadStats {
+        let mut s = self.graveyard_stats.clone();
+        for node in self.nodes.iter().flatten() {
+            s.merge(&node.borrow().kad.stats);
+        }
+        s
+    }
+}
+
+/// Result of [`run_churn_lookups`].
+pub struct ChurnLookupOutcome {
+    pub stats: crate::metrics::DhtLookupStats,
+    pub kad: crate::protocols::kad::KadStats,
+    pub joins: u64,
+    pub leaves: u64,
+    pub crashes: u64,
+    pub live_at_end: usize,
+}
+
+/// Drive a `get_providers` workload over a churning mesh.
+///
+/// Nodes `1..=publishers` each publish one provider key (they must be
+/// within the plan's protected prefix so the content stays live), then for
+/// `duration` virtual time a random live node looks up a random published
+/// key every `lookup_interval`, while `plan` stops/crashes/restarts the
+/// unprotected nodes. A lookup succeeds if it returns at least one live
+/// publisher. Fully deterministic in `(mesh seed, plan, seed)`.
+pub fn run_churn_lookups(
+    mesh: &mut ChurnMesh,
+    plan: &mut crate::netsim::ChurnPlan,
+    publishers: usize,
+    lookup_interval: crate::netsim::Time,
+    duration: crate::netsim::Time,
+    seed: u64,
+) -> ChurnLookupOutcome {
+    use std::collections::HashMap;
+    let mut rng = crate::util::Rng::new(seed ^ 0x10_0C_AB_5E);
+    // Deterministic content keys, one per publisher.
+    let keys: Vec<[u8; 32]> = (0..publishers)
+        .map(|_| {
+            let mut k = [0u8; 32];
+            rng.fill_bytes(&mut k);
+            k
+        })
+        .collect();
+    let publisher_ids: Vec<PeerId> = (1..=publishers)
+        .map(|i| mesh.nodes[i].as_ref().expect("publisher down at start").borrow().peer_id())
+        .collect();
+    for (i, key) in keys.iter().enumerate() {
+        let node = mesh.nodes[1 + i].as_ref().unwrap().clone();
+        let mut nd = node.borrow_mut();
+        let LatticaNode { swarm, kad, .. } = &mut *nd;
+        let mut ctx = Ctx::new(swarm, &mut mesh.world.net);
+        kad.provide(&mut ctx, *key);
+    }
+    // Let the announce queries land before measuring.
+    let settle_until = mesh.world.net.now() + 3 * SECOND;
+    mesh.run_with_churn(plan, settle_until);
+
+    let mut stats = crate::metrics::DhtLookupStats::default();
+    // (node index, query id) → (issue time, node incarnation at issue).
+    // The incarnation guards against a respawned node's fresh query ids
+    // colliding with a dead instance's outstanding lookups.
+    let mut outstanding: HashMap<(usize, u64), (crate::netsim::Time, u64)> = HashMap::new();
+    let collect = |mesh: &mut ChurnMesh,
+                   outstanding: &mut HashMap<(usize, u64), (crate::netsim::Time, u64)>,
+                   stats: &mut crate::metrics::DhtLookupStats| {
+        let now = mesh.world.net.now();
+        for i in mesh.live() {
+            let node = mesh.nodes[i].as_ref().unwrap().clone();
+            for ev in node.borrow_mut().drain_events() {
+                if let NodeEvent::Kad(crate::protocols::kad::KadEvent::QueryFinished {
+                    query_id,
+                    providers,
+                    hops,
+                    ..
+                }) = ev
+                {
+                    let matches_issue = outstanding
+                        .get(&(i, query_id))
+                        .is_some_and(|&(_, inc)| inc == mesh.incarnation[i]);
+                    if matches_issue {
+                        let (t0, _) = outstanding.remove(&(i, query_id)).unwrap();
+                        let success =
+                            providers.iter().any(|p| publisher_ids.contains(&p.id));
+                        stats.record_lookup(success, hops, now - t0);
+                    }
+                }
+            }
+        }
+    };
+
+    // Completions are only observable at drain time, so poll in sub-steps
+    // much finer than the lookup cadence — this bounds the latency
+    // measurement error to `collect_step` instead of `lookup_interval`.
+    let collect_step = (lookup_interval / 10).max(crate::netsim::MILLI);
+    let end = mesh.world.net.now() + duration;
+    while mesh.world.net.now() < end {
+        let issue_at = (mesh.world.net.now() + lookup_interval).min(end);
+        while mesh.world.net.now() < issue_at {
+            let sub = (mesh.world.net.now() + collect_step).min(issue_at);
+            mesh.run_with_churn(plan, sub);
+            // Lookups issued by a node that has since gone down (or been
+            // replaced by a respawned instance) can't finish: count them
+            // aborted rather than failed.
+            let before = outstanding.len();
+            outstanding.retain(|&(i, _), &mut (_, inc)| {
+                mesh.is_up(i) && mesh.incarnation[i] == inc
+            });
+            stats.aborted += (before - outstanding.len()) as u64;
+            collect(mesh, &mut outstanding, &mut stats);
+        }
+        let live = mesh.live();
+        if !live.is_empty() {
+            let src = live[rng.gen_index(live.len())];
+            let key = keys[rng.gen_index(keys.len())];
+            let node = mesh.nodes[src].as_ref().unwrap().clone();
+            let qid = {
+                let mut nd = node.borrow_mut();
+                let LatticaNode { swarm, kad, .. } = &mut *nd;
+                let mut ctx = Ctx::new(swarm, &mut mesh.world.net);
+                kad.get_providers(&mut ctx, key)
+            };
+            stats.attempted += 1;
+            outstanding.insert((src, qid), (mesh.world.net.now(), mesh.incarnation[src]));
+        }
+    }
+    // Grace period: let stragglers finish (their failover timeouts are
+    // bounded), still under churn.
+    let grace_end = mesh.world.net.now() + 15 * SECOND;
+    while mesh.world.net.now() < grace_end && !outstanding.is_empty() {
+        let step_to = (mesh.world.net.now() + collect_step).min(grace_end);
+        mesh.run_with_churn(plan, step_to);
+        let before = outstanding.len();
+        outstanding.retain(|&(i, _), &mut (_, inc)| {
+            mesh.is_up(i) && mesh.incarnation[i] == inc
+        });
+        stats.aborted += (before - outstanding.len()) as u64;
+        collect(mesh, &mut outstanding, &mut stats);
+    }
+    let kad = mesh.kad_stats();
+    // Tracked (registered) requests are the staleness denominator: a
+    // dial-failed request never reached a stream but still hit a stale
+    // routing entry.
+    stats.requests_sent = kad.requests_tracked;
+    stats.requests_stale = kad.requests_timed_out + kad.requests_failed;
+    ChurnLookupOutcome {
+        stats,
+        kad,
+        joins: mesh.joins,
+        leaves: mesh.leaves,
+        crashes: mesh.crashes,
+        live_at_end: mesh.live().len(),
+    }
+}
+
+/// The canonical churn scenario, shared by the acceptance test
+/// (`tests/dht_churn.rs`) and the bench emitting `BENCH_dht_churn.json`
+/// so the CI-gated ≥95% bar and the published rows measure the same
+/// deployment: an `n`-node mesh with 4 protected publishers, one
+/// `get_providers` lookup per virtual second for `duration_secs`, churn
+/// starting after a 5 s lead-in. `half_life_secs == 0` disables churn
+/// (the control arm).
+pub fn churn_scenario(
+    n: usize,
+    half_life_secs: u64,
+    duration_secs: u64,
+    seed: u64,
+) -> ChurnLookupOutcome {
+    const PUBLISHERS: usize = 4;
+    let mut mesh = churn_mesh(n, seed, LinkProfile::FIBER);
+    let duration = duration_secs * SECOND;
+    let mut plan = if half_life_secs == 0 {
+        crate::netsim::ChurnPlan::empty()
+    } else {
+        crate::netsim::ChurnPlan::poisson(
+            &crate::netsim::ChurnConfig {
+                nodes: n,
+                protected: 1 + PUBLISHERS,
+                start: mesh.world.net.now() + 5 * SECOND,
+                end: mesh.world.net.now() + 5 * SECOND + duration,
+                session_half_life: half_life_secs * SECOND,
+                downtime_mean: 10 * SECOND,
+                crash_fraction: 0.5,
+            },
+            seed,
+        )
+    };
+    run_churn_lookups(&mut mesh, &mut plan, PUBLISHERS, SECOND, duration, seed)
+}
+
 /// Drain a node's events, returning them.
 pub fn drain(node: &Node) -> Vec<NodeEvent> {
     node.borrow_mut().drain_events()

@@ -25,7 +25,7 @@ use crate::util::Rng;
 use crate::wire::Message;
 use anyhow::{bail, Context, Result};
 use relay_msg::{RelayMsg, RELAY_PROTO};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 pub use peerstore::Peerstore;
 
@@ -55,6 +55,9 @@ pub enum SwarmEvent {
     },
     DialFailed {
         cid: u64,
+        /// The peer the dial targeted, when known (from the multiaddr or a
+        /// circuit CONNECT) — lets protocols fail over routing state.
+        peer: Option<PeerId>,
         reason: String,
     },
     /// Remote opened a stream; the node dispatches on `proto`.
@@ -107,6 +110,9 @@ struct ConnState {
     conn: Connection,
     path: Path,
     proto: Proto,
+    /// Peer we intended to reach (set on outbound dials before the
+    /// handshake confirms `conn.peer`; used for DialFailed attribution).
+    expected_peer: Option<PeerId>,
     /// Stream id → protocol (both directions).
     stream_protos: HashMap<u64, String>,
     /// Control stream to speak relay protocol on (when this conn is to a
@@ -178,7 +184,10 @@ pub struct Swarm {
     pub peerstore: Peerstore,
     rng: Rng,
 
-    conns: HashMap<u64, ConnState>,
+    /// BTreeMap (not HashMap) so per-tick iteration and shutdown order are
+    /// independent of process-random hashing — keeps simulated runs
+    /// reproducible across processes for a given seed.
+    conns: BTreeMap<u64, ConnState>,
     /// (remote addr, remote cid) → local cid, for initial-packet dedup.
     initial_index: HashMap<(SimAddr, u64), u64>,
     peer_conns: HashMap<PeerId, Vec<u64>>,
@@ -220,7 +229,7 @@ impl Swarm {
             cfg,
             peerstore: Peerstore::new(),
             rng,
-            conns: HashMap::new(),
+            conns: BTreeMap::new(),
             initial_index: HashMap::new(),
             peer_conns: HashMap::new(),
             reservations: HashMap::new(),
@@ -307,6 +316,11 @@ impl Swarm {
         self.conns.len()
     }
 
+    /// Ids of every live connection (used for clean node shutdown).
+    pub fn connection_ids(&self) -> Vec<u64> {
+        self.conns.keys().copied().collect()
+    }
+
     // ------------------------------------------------------------------
     // Dialing
     // ------------------------------------------------------------------
@@ -345,6 +359,7 @@ impl Swarm {
                 conn,
                 path: Path::Direct(ma.addr),
                 proto: ma.proto,
+                expected_peer: ma.peer,
                 stream_protos: HashMap::new(),
                 relay_ctrl_stream: None,
                 pending_connects: VecDeque::new(),
@@ -590,6 +605,7 @@ impl Swarm {
                             conn,
                             path: Path::Direct(from),
                             proto: Proto::QuicLike,
+                            expected_peer: None,
                             stream_protos: HashMap::new(),
                             relay_ctrl_stream: None,
                             pending_connects: VecDeque::new(),
@@ -782,6 +798,7 @@ impl Swarm {
     fn teardown_conn(&mut self, net: &mut Net, cid: u64, reason: &str) {
         let Some(c) = self.conns.get(&cid) else { return };
         let peer = c.conn.peer;
+        let dial_target = c.expected_peer.or(peer);
         let was_reported = c.reported;
         // Close circuits riding this connection (relay server side).
         let dead_circuits: Vec<u64> = self
@@ -832,6 +849,7 @@ impl Swarm {
         } else {
             self.events.push_back(SwarmEvent::DialFailed {
                 cid,
+                peer: dial_target,
                 reason: reason.to_string(),
             });
         }
@@ -904,7 +922,6 @@ impl Swarm {
                     .get_mut(&cid)
                     .and_then(|c| c.pending_connects.pop_front())
                     .context("CONNECT_OK without pending connect")?;
-                let _ = target;
                 let proto = self.conns.get(&cid).map(|c| c.proto).unwrap_or(Proto::QuicLike);
                 let mut cfg = self.cfg.conn.clone();
                 cfg.profile = TransportProfile::for_proto(proto);
@@ -927,6 +944,7 @@ impl Swarm {
                             circuit: m.circuit,
                         },
                         proto,
+                        expected_peer: Some(target),
                         stream_protos: HashMap::new(),
                         relay_ctrl_stream: None,
                         pending_connects: VecDeque::new(),
@@ -945,6 +963,7 @@ impl Swarm {
                 crate::log_debug!("circuit dial to {target:?} failed: {}", m.error);
                 self.events.push_back(SwarmEvent::DialFailed {
                     cid,
+                    peer: target,
                     reason: format!("relay: {}", m.error),
                 });
             }
@@ -970,6 +989,7 @@ impl Swarm {
                             circuit: m.circuit,
                         },
                         proto: Proto::QuicLike,
+                        expected_peer: None,
                         stream_protos: HashMap::new(),
                         relay_ctrl_stream: None,
                         pending_connects: VecDeque::new(),

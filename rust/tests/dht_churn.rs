@@ -1,0 +1,459 @@
+//! Churn-resilience hardening suite: routing-table invariants, churn-plan
+//! determinism, query failover around dead peers, TTL/republish behaviour,
+//! CRDT convergence under randomized churn, and the 200-node
+//! `bootstrap_mesh` churn scenario from the acceptance criteria.
+//!
+//! Everything here is seeded and deterministic; the heavyweight 200-node
+//! scenario is ignored under debug builds and runs in CI's release pass.
+
+use lattica::crdt::CrdtStore;
+use lattica::identity::Keypair;
+use lattica::netsim::topology::LinkProfile;
+use lattica::netsim::{ChurnAction, ChurnConfig, ChurnEvent, ChurnPlan, SECOND};
+use lattica::node::{run_until, LatticaNode, NodeEvent};
+use lattica::protocols::kad::{
+    xor_distance, InsertOutcome, KadEvent, PeerEntry, RoutingTable, K,
+};
+use lattica::protocols::Ctx;
+use lattica::scenarios::{bootstrap_mesh, churn_scenario};
+use lattica::util::Rng;
+use lattica::wire::Message;
+
+fn entry(seed: u64) -> PeerEntry {
+    PeerEntry {
+        id: Keypair::from_seed(seed).peer_id(),
+        host: seed as u32,
+        port: 4001,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Routing-table invariants (deterministic seeded cases)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn invariant_bucket_size_never_exceeds_k() {
+    for seed in [1u64, 2, 3] {
+        let local = Keypair::from_seed(seed * 1000).peer_id();
+        let mut rt = RoutingTable::new(local);
+        let mut rng = Rng::new(seed);
+        for i in 0..500u64 {
+            let _ = rt.insert(entry(rng.gen_range(10_000)), i);
+            // Interleave churn-ish operations.
+            if rng.gen_bool(0.2) {
+                let victim = entry(rng.gen_range(10_000)).id;
+                rt.mark_failed(&victim);
+            }
+            if rng.gen_bool(0.1) {
+                rt.mark_alive(&entry(rng.gen_range(10_000)).id, i);
+            }
+        }
+        for b in 0..256 {
+            assert!(rt.bucket_len(b) <= K, "seed {seed}: bucket {b} exceeds K");
+        }
+    }
+}
+
+#[test]
+fn invariant_local_peer_never_inserted() {
+    let local = Keypair::from_seed(42).peer_id();
+    let mut rt = RoutingTable::new(local);
+    for i in 1..=100u64 {
+        let _ = rt.insert(entry(i), i);
+    }
+    assert_eq!(
+        rt.insert(PeerEntry { id: local, host: 1, port: 1 }, 999),
+        InsertOutcome::Ignored
+    );
+    assert!(rt.iter().all(|e| e.id != local));
+}
+
+#[test]
+fn invariant_closest_sorted_by_xor_distance() {
+    let local = Keypair::from_seed(0).peer_id();
+    let mut rt = RoutingTable::new(local);
+    for i in 1..=120u64 {
+        let _ = rt.insert(entry(i), i);
+    }
+    for key_seed in [5u64, 77, 901, 4096] {
+        let key = *Keypair::from_seed(key_seed).peer_id().as_bytes();
+        let closest = rt.closest(&key, K);
+        for w in closest.windows(2) {
+            assert!(
+                xor_distance(w[0].id.as_bytes(), &key) <= xor_distance(w[1].id.as_bytes(), &key),
+                "closest() must be sorted by XOR distance"
+            );
+        }
+        // They must be the true closest over the whole table.
+        let mut all: Vec<PeerEntry> = rt.iter().cloned().collect();
+        all.sort_by_key(|e| xor_distance(e.id.as_bytes(), &key));
+        let want: Vec<_> = all.iter().take(closest.len()).map(|e| e.id).collect();
+        let got: Vec<_> = closest.iter().map(|e| e.id).collect();
+        assert_eq!(got, want);
+    }
+}
+
+#[test]
+fn invariant_eviction_prefers_dead_over_fresh() {
+    let local = Keypair::from_seed(0).peer_id();
+    // Collect seeds that land in one shared bucket (255 holds half of all
+    // random ids, so it overfills quickly).
+    let mut seeds_in_bucket: Vec<u64> = Vec::new();
+    for s in 1..=600u64 {
+        let id = Keypair::from_seed(s).peer_id();
+        if local.bucket_index(&id) == Some(255) {
+            seeds_in_bucket.push(s);
+        }
+    }
+    assert!(seeds_in_bucket.len() > K + 1);
+    let mut rt = RoutingTable::new(local);
+    for (i, s) in seeds_in_bucket.iter().take(K).enumerate() {
+        assert_eq!(rt.insert(entry(*s), i as u64), InsertOutcome::Added);
+    }
+    // All live: the table refuses to evict silently.
+    let newcomer = entry(seeds_in_bucket[K]);
+    assert!(matches!(
+        rt.insert(newcomer.clone(), 50),
+        InsertOutcome::Full { .. }
+    ));
+    // One entry goes dead (a single failed request — not yet removed).
+    let dead = entry(seeds_in_bucket[7]).id;
+    assert!(!rt.mark_failed(&dead));
+    assert!(rt.iter().any(|e| e.id == dead));
+    // Now the newcomer displaces the dead entry, not a fresh one.
+    assert_eq!(rt.insert(newcomer.clone(), 51), InsertOutcome::Added);
+    assert!(rt.iter().all(|e| e.id != dead), "dead peer must go first");
+    assert!(rt.iter().any(|e| e.id == newcomer.id));
+    assert_eq!(rt.bucket_len(255), K);
+}
+
+// ---------------------------------------------------------------------------
+// Churn-plan determinism contract
+// ---------------------------------------------------------------------------
+
+#[test]
+fn churn_plan_same_seed_same_trace() {
+    let cfg = ChurnConfig {
+        nodes: 60,
+        protected: 3,
+        start: 10 * SECOND,
+        end: 100 * SECOND,
+        session_half_life: 60 * SECOND,
+        downtime_mean: 10 * SECOND,
+        crash_fraction: 0.5,
+    };
+    let a = ChurnPlan::poisson(&cfg, 12345);
+    let b = ChurnPlan::poisson(&cfg, 12345);
+    assert_eq!(a.events(), b.events(), "same seed must give the same trace");
+    assert_eq!(a.trace_digest(), b.trace_digest());
+    assert_ne!(
+        a.trace_digest(),
+        ChurnPlan::poisson(&cfg, 12346).trace_digest(),
+        "different seeds must diverge"
+    );
+    // Protected nodes never appear; both leave kinds occur.
+    assert!(a.events().iter().all(|e| e.node >= 3 && e.node < 60));
+    assert!(a.events().iter().any(|e| e.action == ChurnAction::Crash));
+    assert!(a.events().iter().any(|e| e.action == ChurnAction::Leave));
+    assert!(a.events().iter().any(|e| e.action == ChurnAction::Join));
+}
+
+// ---------------------------------------------------------------------------
+// Query failover around dead peers (the on_peer_unreachable fix)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lookup_fails_over_instead_of_stalling_on_crashed_peer() {
+    let (mut world, nodes) = bootstrap_mesh(6, 501, LinkProfile::DATACENTER);
+    // Crash node 5 without a goodbye: peers still have it in their tables.
+    let crashed_peer = nodes[5].borrow().peer_id();
+    let target = *crashed_peer.as_bytes();
+    {
+        let eid = nodes[5].borrow().endpoint_id();
+        nodes[5].borrow_mut().shutdown(&mut world.net, false);
+        world.remove_endpoint(eid);
+    }
+    // A lookup towards the crashed node's key must still complete: the
+    // request to the dead peer times out (or its dial fails) and the query
+    // re-issues to the next-closest candidates.
+    let t0 = world.net.now();
+    let qid = {
+        let mut nd = nodes[1].borrow_mut();
+        let LatticaNode { swarm, kad, .. } = &mut *nd;
+        let mut ctx = Ctx::new(swarm, &mut world.net);
+        kad.find_node(&mut ctx, target)
+    };
+    let mut finished = false;
+    run_until(&mut world, 12 * SECOND, || {
+        if !finished {
+            let mut nd = nodes[1].borrow_mut();
+            for e in nd.drain_events() {
+                if let NodeEvent::Kad(KadEvent::QueryFinished { query_id, .. }) = e {
+                    if query_id == qid {
+                        finished = true;
+                    }
+                }
+            }
+        }
+        finished
+    });
+    assert!(finished, "query stalled on the crashed peer");
+    // Well under the no-failover worst case (handshake timeout ≫ this).
+    let elapsed = world.net.now() - t0;
+    assert!(
+        elapsed < 9 * SECOND,
+        "failover took too long: {} ns",
+        elapsed
+    );
+}
+
+#[test]
+fn clean_leave_prunes_peer_tables() {
+    let (mut world, nodes) = bootstrap_mesh(6, 503, LinkProfile::DATACENTER);
+    let leaver = nodes[3].borrow().peer_id();
+    assert!(nodes[0].borrow().kad.table.iter().any(|e| e.id == leaver));
+    {
+        let eid = nodes[3].borrow().endpoint_id();
+        nodes[3].borrow_mut().shutdown(&mut world.net, true);
+        world.remove_endpoint(eid);
+    }
+    // The goodbye reaches connected peers, which drop the leaver.
+    run_until(&mut world, 5 * SECOND, || {
+        nodes[0].borrow().kad.table.iter().all(|e| e.id != leaver)
+    });
+    assert!(
+        nodes[0].borrow().kad.table.iter().all(|e| e.id != leaver),
+        "bootstrap node must drop a cleanly-leaving peer"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Provider TTL expiry + republish keep-alive
+// ---------------------------------------------------------------------------
+
+#[test]
+fn provider_records_expire_without_republish_and_survive_with_it() {
+    let (mut world, nodes) = bootstrap_mesh(8, 505, LinkProfile::DATACENTER);
+    // Tight TTL, republish effectively off.
+    for n in &nodes {
+        let mut nd = n.borrow_mut();
+        nd.kad.provider_ttl = 2 * SECOND;
+        nd.kad.set_republish_interval(1000 * SECOND);
+    }
+    let key = *Keypair::from_seed(4242).peer_id().as_bytes();
+    {
+        let mut nd = nodes[1].borrow_mut();
+        let LatticaNode { swarm, kad, .. } = &mut *nd;
+        let mut ctx = Ctx::new(swarm, &mut world.net);
+        kad.provide(&mut ctx, key);
+    }
+    world.run_for(SECOND);
+    let lookup = |world: &mut lattica::netsim::World,
+                  nodes: &[lattica::scenarios::Node],
+                  src: usize| {
+        let qid = {
+            let mut nd = nodes[src].borrow_mut();
+            let LatticaNode { swarm, kad, .. } = &mut *nd;
+            let mut ctx = Ctx::new(swarm, &mut world.net);
+            kad.get_providers(&mut ctx, key)
+        };
+        let mut found = None;
+        run_until(world, 10 * SECOND, || {
+            if found.is_none() {
+                let mut nd = nodes[src].borrow_mut();
+                for e in nd.drain_events() {
+                    if let NodeEvent::Kad(KadEvent::QueryFinished {
+                        query_id, providers, ..
+                    }) = e
+                    {
+                        if query_id == qid {
+                            found = Some(!providers.is_empty());
+                        }
+                    }
+                }
+            }
+            found.is_some()
+        });
+        found.unwrap_or(false)
+    };
+    assert!(lookup(&mut world, &nodes, 5), "fresh record must resolve");
+    // TTL passes with republish disabled: the record disappears everywhere.
+    world.run_for(4 * SECOND);
+    assert!(
+        !lookup(&mut world, &nodes, 6),
+        "expired record must not resolve"
+    );
+    // Re-enable republish: the provider re-announces and stays resolvable
+    // across several TTL windows.
+    nodes[1].borrow_mut().kad.set_republish_interval(SECOND);
+    world.run_for(3 * SECOND);
+    assert!(
+        lookup(&mut world, &nodes, 7),
+        "republish must keep the record alive"
+    );
+    world.run_for(6 * SECOND);
+    assert!(
+        lookup(&mut world, &nodes, 2),
+        "record must survive multiple TTL windows under republish"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// CRDT convergence under randomized churn (partition + rejoin)
+// ---------------------------------------------------------------------------
+
+/// One randomized interleaving: `replicas` stores apply `ops` seeded
+/// operations with a partition across the first half of the run, partial
+/// syncs inside partitions, then full anti-entropy. Convergence must be
+/// byte-identical (equal digests AND equal encodings). Returns the failure
+/// description if the case fails.
+fn crdt_churn_case(seed: u64, replicas: usize, ops: usize) -> Result<(), String> {
+    let mut rng = Rng::new(seed);
+    let mut stores: Vec<CrdtStore> = (0..replicas).map(|_| CrdtStore::new()).collect();
+    let half = replicas / 2;
+    for i in 0..ops {
+        let r = rng.gen_index(replicas);
+        match rng.gen_index(5) {
+            0 => stores[r].gcounter("train/steps").increment(r as u64, 1 + rng.gen_range(4)),
+            1 => {
+                if rng.gen_bool(0.5) {
+                    stores[r].pncounter("credits").increment(r as u64, rng.gen_range(9) + 1);
+                } else {
+                    stores[r].pncounter("credits").decrement(r as u64, rng.gen_range(3) + 1);
+                }
+            }
+            2 => {
+                let member = format!("peer-{}", rng.gen_index(replicas * 3));
+                stores[r].orset("members").add(r as u64, member.as_bytes());
+            }
+            3 => {
+                let member = format!("peer-{}", rng.gen_index(replicas * 3));
+                stores[r].orset("members").remove(member.as_bytes());
+            }
+            _ => {
+                let v = format!("ckpt-{i}");
+                stores[r].lww("model/latest").set(v.into_bytes(), i as u64, r as u64);
+            }
+        }
+        // Random partial sync — during the partition phase only within the
+        // same side; afterwards (rejoin) anywhere.
+        if rng.gen_bool(0.3) {
+            let a = rng.gen_index(replicas);
+            let b = rng.gen_index(replicas);
+            let partitioned = i < ops / 2;
+            if a != b && (!partitioned || (a < half) == (b < half)) {
+                let other = stores[b].clone();
+                stores[a].merge(&other).map_err(|e| format!("merge failed: {e}"))?;
+            }
+        }
+    }
+    // Heal: two rounds of full-mesh anti-entropy.
+    for _ in 0..2 {
+        for a in 0..replicas {
+            for b in 0..replicas {
+                if a != b {
+                    let other = stores[b].clone();
+                    stores[a].merge(&other).map_err(|e| format!("merge failed: {e}"))?;
+                }
+            }
+        }
+    }
+    let d0 = stores[0].digest();
+    let e0 = stores[0].encode();
+    for (i, s) in stores.iter().enumerate().skip(1) {
+        if s.digest() != d0 {
+            return Err(format!("replica {i} digest diverged"));
+        }
+        if s.encode() != e0 {
+            return Err(format!("replica {i} encoding diverged (not byte-identical)"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn crdt_converges_byte_identically_under_churn() {
+    // Many seeded interleavings across 3..5 replicas. On failure, shrink
+    // the op count for the failing seed so the panic message carries a
+    // minimal replay (`crdt_churn_case(seed, replicas, ops)`).
+    for seed in 1..=25u64 {
+        let replicas = 3 + (seed as usize % 3);
+        let ops = 300;
+        if let Err(err) = crdt_churn_case(seed, replicas, ops) {
+            let mut min_ops = ops;
+            while min_ops > 1 && crdt_churn_case(seed, replicas, min_ops - 1).is_err() {
+                min_ops -= 1;
+            }
+            panic!(
+                "CRDT divergence: {err}\n  replay: crdt_churn_case({seed}, {replicas}, {min_ops})"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The churn scenario itself
+// ---------------------------------------------------------------------------
+
+/// Debug-friendly scenario: 30 nodes, aggressive 20 s half-life.
+#[test]
+fn churn_scenario_small_mesh_keeps_lookups_alive() {
+    let o = churn_scenario(30, 20, 40, 77);
+    assert!(o.leaves + o.crashes > 0, "plan must actually churn nodes");
+    assert!(o.joins > 0, "nodes must rejoin");
+    assert!(
+        o.stats.success_rate() >= 0.90,
+        "small-mesh churn success too low: {:.3} ({})",
+        o.stats.success_rate(),
+        o.stats.clone().summary()
+    );
+}
+
+/// The acceptance scenario: 200 nodes, 60 s median session half-life.
+/// Heavy — ignored in debug builds, exercised by CI's release run.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-mode scenario; run via CI or --include-ignored")]
+fn churn_scenario_200_nodes_95pct_success() {
+    // Control arm: churn disabled, the same harness — lookups must be
+    // essentially lossless and early-exit quickly (no hop regression).
+    let control = churn_scenario(200, 0, 60, 90001);
+    assert!(
+        control.stats.success_rate() >= 0.99,
+        "no-churn control must succeed: {:.3}",
+        control.stats.success_rate()
+    );
+    assert!(
+        control.stats.mean_hops() <= 12.0,
+        "no-churn hop count regressed: {:.1}",
+        control.stats.mean_hops()
+    );
+    // Churn arm: 60 s median session half-life.
+    let o = churn_scenario(200, 60, 90, 90001);
+    assert!(o.leaves + o.crashes >= 20, "expected substantial churn");
+    assert!(
+        o.stats.success_rate() >= 0.95,
+        "churned success rate below the 95% bar: {:.3} ({:?})",
+        o.stats.success_rate(),
+        o.kad
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Determinism of the full simulated scenario
+// ---------------------------------------------------------------------------
+
+#[test]
+fn churn_application_is_deterministic() {
+    // The ChurnPlan contract (same seed ⇒ same trace) extends through plan
+    // application: churn counts and the lookup schedule are pure functions
+    // of the seeds. (Packet-level traces additionally depend on process-
+    // local hash ordering in the swarm, so they are not asserted here.)
+    let a = churn_scenario(20, 15, 20, 31337);
+    let b = churn_scenario(20, 15, 20, 31337);
+    assert_eq!(a.stats.attempted, b.stats.attempted);
+    assert_eq!(a.joins, b.joins);
+    assert_eq!(a.leaves, b.leaves);
+    assert_eq!(a.crashes, b.crashes);
+    let e = ChurnEvent { at: 5, node: 2, action: ChurnAction::Crash };
+    assert_eq!(e, ChurnEvent { at: 5, node: 2, action: ChurnAction::Crash });
+}
