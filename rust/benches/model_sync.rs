@@ -1,19 +1,23 @@
-//! Fig. 1(3): RL pipeline — the training cluster publishes model chunks;
-//! inference clusters A–C synchronize via gossip announcements + Bitswap,
-//! compared against a central parameter-server baseline (every cluster
-//! pulls the full blob from the trainer).
+//! Fig. 1(3): RL pipeline — the training cluster publishes checkpoint
+//! versions; inference replicas synchronize. Four arms compare
+//! {parameter-server vs swarm} × {full re-pull vs delta}:
 //!
-//! Reports per-checkpoint sync latency and trainer egress. The model blob
-//! is the real parameter set from `artifacts/` when present (run
-//! `make artifacts`), or a synthetic 3.5 MB blob otherwise.
+//! - `central/full`: every replica pulls the whole blob from the trainer
+//!   each version (the classic parameter-server worst case).
+//! - `central/delta`: replicas keep the previous version's chunks, so
+//!   content addressing already skips unchanged chunks — but all traffic
+//!   still originates at the trainer.
+//! - `swarm/full` and `swarm/delta`: replicas announce themselves as
+//!   seeders mid-download, discover each other via the DHT and the
+//!   connected-mesh overlay, and the choked publisher's egress stays
+//!   ~O(1) in the replica count.
+//!
+//! Reports per-version trainer egress, p50/p99 replica sync latency and
+//! the fraction of full demand actually moved (the delta evidence), and
+//! asserts the headline: swarm-delta beats central-full on BOTH trainer
+//! egress and p99 sync latency.
 
-use lattica::content::DagManifest;
-use lattica::netsim::link::PathProfile;
-use lattica::netsim::topology::LinkProfile;
-use lattica::netsim::{MILLI, SECOND};
-use lattica::node::{run_until, NodeEvent};
-use lattica::protocols::gossip::GossipEvent;
-use lattica::scenarios::bootstrap_mesh_on;
+use lattica::scenarios::{model_sync_scenario, ModelSyncConfig, SyncMode};
 use lattica::util::cli::Args;
 use lattica::util::json::Json;
 use lattica::util::timefmt;
@@ -21,156 +25,91 @@ use lattica::util::timefmt;
 fn main() {
     let args = Args::from_env();
     let checkpoints = args.opt_usize("checkpoints", 3).unwrap();
-    let clusters = args.opt_usize("clusters", 3).unwrap();
+    let replicas = args.opt_usize("replicas", 8).unwrap();
+    let blob_bytes = args.opt_usize("blob-kb", 3 * 1024).unwrap() * 1024;
 
-    // Model blob: real init params if available.
-    let blob: Vec<u8> = {
-        let p = std::path::Path::new("artifacts/init_params.bin");
-        if p.exists() {
-            std::fs::read(p).unwrap()
-        } else {
-            let mut rng = lattica::util::Rng::new(5);
-            rng.gen_bytes(3_500_000)
-        }
-    };
     println!(
-        "Fig 1(3): model sync — {} checkpoint blob, {clusters} inference clusters",
-        timefmt::fmt_bytes(blob.len() as u64)
+        "Fig 1(3): model sync — {} blob, {replicas} replicas, {checkpoints} checkpoints, ~10% churn/version",
+        timefmt::fmt_bytes(blob_bytes as u64)
     );
 
-    // Network scenarios: the clean 1 Gbps mesh, and the same mesh across
-    // a lossy 75 ms WAN (what the CC subsystem + RACK recovery is for).
-    let lossy = Some(PathProfile::new(75 * MILLI, 3 * MILLI, 0.02));
-    let runs: [(&str, Option<PathProfile>, bool); 4] = [
-        ("lan", None, true),
-        ("lan", None, false),
-        ("lossy_wan", lossy, true),
-        ("lossy_wan", lossy, false),
+    let arms: [(&str, SyncMode, bool); 4] = [
+        ("central/full", SyncMode::Central, false),
+        ("central/delta", SyncMode::Central, true),
+        ("swarm/full", SyncMode::Swarm, false),
+        ("swarm/delta", SyncMode::Swarm, true),
     ];
-    let mut json_rows: Vec<Json> = Vec::new();
-    for (scenario, path, p2p) in runs {
+    let mut rows: Vec<Json> = Vec::new();
+    // (egress per ckpt, p99 secs) for the headline comparison.
+    let mut headline: Vec<(f64, f64)> = Vec::new();
+    for (label, mode, delta) in arms {
         let wall_start = std::time::Instant::now();
-        let (mut world, nodes) =
-            bootstrap_mesh_on(clusters + 1, if p2p { 41 } else { 42 }, LinkProfile::FIBER, path);
-        let trainer = nodes[0].clone();
-        let trainer_peer = trainer.borrow().peer_id();
-        // Everyone subscribes to the model topic.
-        for nd in &nodes {
-            let mut n = nd.borrow_mut();
-            let lattica::node::LatticaNode { swarm, gossip, .. } = &mut *n;
-            let mut ctx = lattica::protocols::Ctx::new(swarm, &mut world.net);
-            gossip.subscribe(&mut ctx, &lattica::model::model_topic("policy"));
-        }
-        world.run_for(SECOND);
-
-        let mut sync_times = Vec::new();
-        for v in 1..=checkpoints {
-            // Trainer publishes checkpoint v (content + DHT + gossip).
-            let t0 = world.net.now();
-            let root = {
-                let mut tr = trainer.borrow_mut();
-                // Vary the blob per version so chunks differ.
-                let mut data = blob.clone();
-                data[0] = v as u8;
-                let root = tr.publish_blob(&mut world.net, "policy-blob", v as u64, &data, 256 * 1024);
-                // Gossip the announcement (what publish_checkpoint does for
-                // real tensor checkpoints — see examples/collaborative_rl).
-                let ann = lattica::model::ModelAnnouncement {
-                    name: "policy".into(),
-                    version: v as u64,
-                    root,
-                };
-                let lattica::node::LatticaNode { swarm, gossip, .. } = &mut *tr;
-                let mut ctx = lattica::protocols::Ctx::new(swarm, &mut world.net);
-                gossip.publish(&mut ctx, &lattica::model::model_topic("policy"), ann.encode());
-                root
-            };
-            world.run_for(SECOND / 2);
-            // Clusters hear the announcement (or poll, in the baseline) and fetch.
-            for c in &nodes[1..] {
-                // Drain gossip to emulate reacting to the announcement.
-                let _ann = c
-                    .borrow_mut()
-                    .drain_events()
-                    .into_iter()
-                    .filter_map(|e| match e {
-                        NodeEvent::Gossip(GossipEvent::Received { data, .. }) => Some(data),
-                        _ => None,
-                    })
-                    .last();
-                let providers = if p2p {
-                    nodes.iter().map(|n| n.borrow().peer_id()).collect()
-                } else {
-                    vec![trainer_peer]
-                };
-                c.borrow_mut().fetch_blob(&mut world.net, root, vec![trainer_peer]);
-                let _ = providers;
-            }
-            let manifest_timeout = if path.is_some() { 120 * SECOND } else { 30 * SECOND };
-            run_until(&mut world, manifest_timeout, || {
-                nodes[1..].iter().all(|c| c.borrow().blockstore.has(&root))
-            });
-            for c in &nodes[1..] {
-                let providers: Vec<_> = if p2p {
-                    nodes.iter().map(|n| n.borrow().peer_id()).collect()
-                } else {
-                    vec![trainer_peer]
-                };
-                c.borrow_mut()
-                    .fetch_manifest_chunks(&mut world.net, &root, providers)
-                    .unwrap();
-            }
-            let chunk_timeout = if path.is_some() { 600 * SECOND } else { 120 * SECOND };
-            let ok = run_until(&mut world, chunk_timeout, || {
-                nodes[1..].iter().all(|c| {
-                    let n = c.borrow();
-                    DagManifest::load(&n.blockstore, &root)
-                        .map(|m| m.is_complete(&n.blockstore))
-                        .unwrap_or(false)
-                })
-            });
-            assert!(ok, "checkpoint {v} did not propagate");
-            sync_times.push((world.net.now() - t0) as f64 / 1e9);
-        }
-        let egress: u64 = trainer
-            .borrow()
-            .bitswap
-            .ledgers
-            .values()
-            .map(|l| l.bytes_sent)
-            .sum();
-        let mean = sync_times.iter().sum::<f64>() / sync_times.len() as f64;
-        let health = trainer.borrow().swarm.transport_health();
+        let mut out = model_sync_scenario(&ModelSyncConfig {
+            replicas,
+            checkpoints,
+            blob_bytes,
+            churn: 0.10,
+            mode,
+            delta,
+            nat_mixed: false,
+            seed: 61,
+            timeout_secs: 240,
+        });
+        assert!(out.completed, "[{label}] sync did not complete");
+        assert!(out.all_identical, "[{label}] replicas diverged");
+        let p50 = out.stats.latency.percentile(50.0) as f64 / 1e9;
+        let p99 = out.stats.latency.percentile(99.0) as f64 / 1e9;
+        let egress = out.stats.mean_egress();
+        let frac_v2 = if checkpoints > 1 { out.stats.fetched_fraction(1) } else { 1.0 };
         println!(
-            "  [{scenario}] {}: mean sync {mean:.2}s/checkpoint, trainer egress {}, retx {}",
-            if p2p { "lattica p2p   " } else { "central server" },
-            timefmt::fmt_bytes(egress),
-            timefmt::fmt_bytes(health.bytes_retransmitted)
+            "  [{label:<13}] egress/ckpt {} ({:.2}x blob max), sync p50 {p50:.2}s p99 {p99:.2}s, v2 moved {:.0}% of full demand",
+            timefmt::fmt_bytes(egress as u64),
+            out.stats.max_egress_x_blob(),
+            frac_v2 * 100.0
         );
-        json_rows.push(Json::obj(vec![
-            ("scenario", Json::str(scenario)),
-            ("mode", Json::str(if p2p { "p2p" } else { "central" })),
-            ("mean_sync_secs", Json::num(mean)),
-            ("trainer_egress_bytes", Json::num(egress as f64)),
+        headline.push((egress, p99));
+        rows.push(Json::obj(vec![
+            ("mode", Json::str(match mode {
+                SyncMode::Central => "central",
+                SyncMode::Swarm => "swarm",
+            })),
+            ("delta", Json::Bool(delta)),
+            ("replicas", Json::num(replicas as f64)),
             ("checkpoints", Json::num(checkpoints as f64)),
-            ("clusters", Json::num(clusters as f64)),
+            ("blob_bytes", Json::num(blob_bytes as f64)),
+            ("trainer_egress_per_ckpt", Json::num(egress)),
+            ("max_egress_x_blob", Json::num(out.stats.max_egress_x_blob())),
+            ("sync_p50_secs", Json::num(p50)),
+            ("sync_p99_secs", Json::num(p99)),
+            ("fetched_fraction_v2", Json::num(frac_v2)),
+            ("duplicate_blocks", Json::num(out.duplicate_blocks as f64)),
+            (
+                "replica_bytes_served",
+                Json::num(out.replica_bytes_served as f64),
+            ),
             ("wall_secs", Json::num(wall_start.elapsed().as_secs_f64())),
-            ("cwnd", Json::num(health.mean_cwnd() as f64)),
-            ("srtt_ns", Json::num(health.mean_srtt() as f64)),
-            ("retx_bytes", Json::num(health.bytes_retransmitted as f64)),
-            ("loss_events", Json::num(health.loss_events as f64)),
-            ("pacer_utilization", Json::num(health.mean_pacer_utilization())),
         ]));
     }
     let doc = Json::obj(vec![
         ("bench", Json::str("model_sync")),
-        ("blob_bytes", Json::num(blob.len() as f64)),
-        ("rows", Json::Arr(json_rows)),
+        ("blob_bytes", Json::num(blob_bytes as f64)),
+        ("rows", Json::Arr(rows)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_model_sync.json");
     match std::fs::write(path, format!("{doc}\n")) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }
-    println!("done (lower trainer egress in p2p mode = the decentralized-CDN effect)");
+    // Headline: swarm-delta must beat central-full on both axes.
+    let (central_full_egress, central_full_p99) = headline[0];
+    let (swarm_delta_egress, swarm_delta_p99) = headline[3];
+    assert!(
+        swarm_delta_egress < central_full_egress,
+        "swarm-delta egress {swarm_delta_egress} must beat central-full {central_full_egress}"
+    );
+    assert!(
+        swarm_delta_p99 < central_full_p99,
+        "swarm-delta p99 {swarm_delta_p99}s must beat central-full {central_full_p99}s"
+    );
+    println!("shape check OK: swarm-delta beats parameter-server-full on egress and p99");
 }

@@ -102,6 +102,9 @@ fn run_scenario(
 fn ping_p99_lossy(with_bulk: bool) -> u64 {
     let (mut world, client, server) =
         table1_world_cc(NetScenario::LossyWan, 91, CcAlgorithm::Cubic);
+    // Parameter-server fetch only: this measures scheduler priority, so
+    // keep swarm-mode DHT discovery/announce traffic out of the baseline.
+    client.borrow_mut().cfg.swarm_sync = false;
     let server_peer = server.borrow().peer_id();
     let root = if with_bulk {
         let blob: Vec<u8> = (0..8_000_000u32).map(|i| (i % 241) as u8).collect();

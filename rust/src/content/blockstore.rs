@@ -5,6 +5,17 @@ use crate::util::buf::Buf;
 use anyhow::Result;
 use std::collections::HashMap;
 
+/// Write-path counters — the duplicate-suppression evidence used by the
+/// re-stripe regression tests (a late block from a slow provider must not
+/// cause a second store write).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BlockstoreStats {
+    /// Blocks newly written.
+    pub stores: u64,
+    /// `put` calls that found the block already present (no write).
+    pub duplicate_puts: u64,
+}
+
 /// Block storage keyed by CID. Every `put` verifies the hash; blocks are
 /// stored as reference-counted [`Buf`]s, so Bitswap serves them to N peers
 /// with refcount bumps instead of N copies, and a block received off the
@@ -15,6 +26,7 @@ pub struct Blockstore {
     /// Optional cap; inserting beyond it evicts in insertion order.
     pub capacity_bytes: Option<usize>,
     insertion_order: Vec<Cid>,
+    pub stats: BlockstoreStats,
 }
 
 impl Default for Blockstore {
@@ -30,6 +42,7 @@ impl Blockstore {
             total_bytes: 0,
             capacity_bytes: None,
             insertion_order: Vec::new(),
+            stats: BlockstoreStats::default(),
         }
     }
 
@@ -46,8 +59,10 @@ impl Blockstore {
         let data = data.into();
         anyhow::ensure!(cid.verify(&data), "block does not match CID {cid}");
         if self.blocks.contains_key(&cid) {
+            self.stats.duplicate_puts += 1;
             return Ok(());
         }
+        self.stats.stores += 1;
         self.total_bytes += data.len();
         self.blocks.insert(cid, data);
         self.insertion_order.push(cid);
@@ -131,6 +146,8 @@ mod tests {
         assert_eq!(c1, c2);
         assert_eq!(bs.len(), 1);
         assert_eq!(bs.total_bytes(), 4);
+        assert_eq!(bs.stats.stores, 1);
+        assert_eq!(bs.stats.duplicate_puts, 1);
     }
 
     #[test]

@@ -8,6 +8,95 @@
 /// Default chunk size: 256 KiB (matches the paper's large-payload size).
 pub const DEFAULT_CHUNK_SIZE: usize = 256 * 1024;
 
+/// Parameters for FastCDC-style content-defined chunking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CdcParams {
+    /// Never cut before this many bytes (also the hash warm-up skip).
+    pub min: usize,
+    /// Expected chunk size ≈ 2^avg_bits bytes.
+    pub avg_bits: u32,
+    /// Force a cut at this many bytes.
+    pub max: usize,
+}
+
+/// Checkpoint chunking: 4 KiB..64 KiB, ~16 KiB expected. Fine enough that
+/// a localized parameter update dirties few chunks, coarse enough that a
+/// multi-MB blob stays at a few hundred CIDs.
+pub const CDC_CHECKPOINT: CdcParams = CdcParams {
+    min: 4 * 1024,
+    avg_bits: 14,
+    max: 64 * 1024,
+};
+
+/// Gear table for FastCDC (deterministic, distinct from the Buzhash table).
+fn gear_table() -> [u64; 256] {
+    let mut t = [0u64; 256];
+    let mut rng = crate::util::Rng::new(0x6EA2_CDC1_7F);
+    for v in t.iter_mut() {
+        *v = rng.next_u64();
+    }
+    t
+}
+
+/// One FastCDC cut decision: offset of the end of the next chunk.
+///
+/// Normalized chunking: a stricter mask before the expected size and a
+/// looser one after, which tightens the size distribution around
+/// 2^avg_bits while keeping boundaries content-defined (so identical
+/// content reached from different chunk starts re-synchronizes within a
+/// few candidate points).
+fn cdc_cut(data: &[u8], p: CdcParams, table: &[u64; 256]) -> usize {
+    let n = data.len();
+    if n <= p.min {
+        return n;
+    }
+    let max = n.min(p.max);
+    let avg = (1usize << p.avg_bits).min(max);
+    let mask_s = (1u64 << (p.avg_bits + 2)) - 1;
+    let mask_l = (1u64 << (p.avg_bits - 2)) - 1;
+    let mut h: u64 = 0;
+    let mut i = p.min;
+    while i < avg {
+        h = (h << 1).wrapping_add(table[data[i] as usize]);
+        if h & mask_s == 0 {
+            return i + 1;
+        }
+        i += 1;
+    }
+    while i < max {
+        h = (h << 1).wrapping_add(table[data[i] as usize]);
+        if h & mask_l == 0 {
+            return i + 1;
+        }
+        i += 1;
+    }
+    max
+}
+
+/// FastCDC content-defined chunking (Gear rolling hash).
+///
+/// Unlike [`chunk_fixed`], unchanged regions of an edited blob keep their
+/// chunk boundaries, so re-publishing checkpoint v+1 reuses the CIDs of
+/// untouched chunks from v — the basis of delta checkpoint shipping.
+pub fn chunk_cdc(data: &[u8], p: CdcParams) -> Vec<&[u8]> {
+    assert!(p.min >= 64 && p.max > p.min, "degenerate CDC bounds");
+    assert!(
+        (4..=28).contains(&p.avg_bits)
+            && (1usize << p.avg_bits) >= p.min
+            && (1usize << p.avg_bits) <= p.max,
+        "avg must sit between min and max"
+    );
+    let table = gear_table();
+    let mut out = Vec::new();
+    let mut rest = data;
+    while !rest.is_empty() {
+        let cut = cdc_cut(rest, p, &table);
+        out.push(&rest[..cut]);
+        rest = &rest[cut..];
+    }
+    out
+}
+
 /// Split into fixed-size chunks (last chunk may be short).
 pub fn chunk_fixed(data: &[u8], size: usize) -> Vec<&[u8]> {
     assert!(size > 0);
@@ -98,6 +187,98 @@ mod tests {
         }
         // Expected size ≈ 8 KiB ⇒ between ~30 and ~250 chunks for 500 KB.
         assert!(chunks.len() > 20 && chunks.len() < 260, "{}", chunks.len());
+    }
+
+    #[test]
+    fn cdc_reassembles_and_respects_bounds() {
+        let mut rng = Rng::new(7);
+        let data = rng.gen_bytes(900_000);
+        let chunks = chunk_cdc(&data, CDC_CHECKPOINT);
+        let joined: Vec<u8> = chunks.concat();
+        assert_eq!(joined, data);
+        for (i, c) in chunks.iter().enumerate() {
+            assert!(c.len() <= CDC_CHECKPOINT.max);
+            if i + 1 < chunks.len() {
+                assert!(c.len() >= CDC_CHECKPOINT.min, "chunk {i}: {}", c.len());
+            }
+        }
+        // Expected ≈ 16 KiB ⇒ roughly 20..160 chunks for 900 KB.
+        assert!(
+            chunks.len() > 20 && chunks.len() < 160,
+            "{} chunks",
+            chunks.len()
+        );
+        assert!(chunk_cdc(&[], CDC_CHECKPOINT).is_empty());
+        // Sub-min payloads come back as one chunk.
+        assert_eq!(chunk_cdc(&[9u8; 100], CDC_CHECKPOINT), vec![&[9u8; 100][..]]);
+    }
+
+    #[test]
+    fn cdc_deterministic() {
+        let mut rng = Rng::new(8);
+        let data = rng.gen_bytes(300_000);
+        let a: Vec<usize> = chunk_cdc(&data, CDC_CHECKPOINT).iter().map(|c| c.len()).collect();
+        let b: Vec<usize> = chunk_cdc(&data, CDC_CHECKPOINT).iter().map(|c| c.len()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn cdc_reuses_chunks_after_in_place_edit() {
+        // A checkpoint-style update: ~10% of the blob rewritten in place
+        // (two contiguous bands), total length unchanged. Most chunks must
+        // keep their identity so a delta fetch moves only the dirty ones.
+        let mut rng = Rng::new(9);
+        let data = rng.gen_bytes(1_000_000);
+        let mut edited = data.clone();
+        for start in [200_000usize, 700_000] {
+            let patch = rng.gen_bytes(50_000);
+            edited[start..start + 50_000].copy_from_slice(&patch);
+        }
+        use std::collections::HashSet;
+        let c1: HashSet<Vec<u8>> = chunk_cdc(&data, CDC_CHECKPOINT)
+            .iter()
+            .map(|c| c.to_vec())
+            .collect();
+        let c2: Vec<Vec<u8>> = chunk_cdc(&edited, CDC_CHECKPOINT)
+            .iter()
+            .map(|c| c.to_vec())
+            .collect();
+        let shared = c2.iter().filter(|c| c1.contains(*c)).count();
+        assert!(
+            shared * 10 >= c2.len() * 7,
+            "only {shared}/{} chunks survived a 10% in-place edit",
+            c2.len()
+        );
+        let shared_bytes: usize = c2.iter().filter(|c| c1.contains(*c)).map(|c| c.len()).sum();
+        assert!(
+            shared_bytes * 4 >= edited.len() * 3,
+            "shared bytes {shared_bytes} below 75% of {}",
+            edited.len()
+        );
+    }
+
+    #[test]
+    fn cdc_resyncs_after_insertion() {
+        let mut rng = Rng::new(10);
+        let data = rng.gen_bytes(400_000);
+        let mut edited = data.clone();
+        let insert = rng.gen_bytes(777);
+        edited.splice(90_000..90_000, insert.iter().copied());
+        use std::collections::HashSet;
+        let c1: HashSet<Vec<u8>> = chunk_cdc(&data, CDC_CHECKPOINT)
+            .iter()
+            .map(|c| c.to_vec())
+            .collect();
+        let c2: Vec<Vec<u8>> = chunk_cdc(&edited, CDC_CHECKPOINT)
+            .iter()
+            .map(|c| c.to_vec())
+            .collect();
+        let shared = c2.iter().filter(|c| c1.contains(*c)).count();
+        assert!(
+            shared * 10 >= c2.len() * 6,
+            "insertion should shift, not destroy, boundaries: {shared}/{}",
+            c2.len()
+        );
     }
 
     #[test]

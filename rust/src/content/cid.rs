@@ -6,7 +6,9 @@ use anyhow::Result;
 use std::fmt;
 
 /// A content identifier (multihash code 0x12, length 32).
-#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+/// The `Default` value (all zeroes) is a sentinel that no real block
+/// hashes to; decoders use it for "field absent".
+#[derive(Clone, Copy, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Cid(pub [u8; 32]);
 
 impl Cid {

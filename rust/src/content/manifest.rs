@@ -7,9 +7,20 @@
 //! is bound by the manifest, which is bound by the root.
 
 use super::blockstore::Blockstore;
+use super::chunker::CdcParams;
 use super::cid::Cid;
 use crate::wire::{Message, PbReader, PbWriter};
 use anyhow::{Context, Result};
+
+/// How a blob is split into blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Chunking {
+    /// Fixed-size chunks (fast; no cross-version reuse under shifts).
+    Fixed(usize),
+    /// FastCDC content-defined chunks (stable boundaries ⇒ checkpoint
+    /// version v+1 reuses the CIDs of unchanged chunks from v).
+    Cdc(CdcParams),
+}
 
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct DagManifest {
@@ -58,10 +69,22 @@ impl DagManifest {
         data: &[u8],
         chunk_size: usize,
     ) -> (Cid, DagManifest) {
-        let chunks: Vec<Cid> = super::chunker::chunk_fixed(data, chunk_size)
-            .into_iter()
-            .map(|c| store.put(c.to_vec()))
-            .collect();
+        Self::publish_chunked(store, name, version, data, Chunking::Fixed(chunk_size))
+    }
+
+    /// [`DagManifest::publish`] with an explicit chunking policy.
+    pub fn publish_chunked(
+        store: &mut Blockstore,
+        name: &str,
+        version: u64,
+        data: &[u8],
+        chunking: Chunking,
+    ) -> (Cid, DagManifest) {
+        let parts = match chunking {
+            Chunking::Fixed(size) => super::chunker::chunk_fixed(data, size),
+            Chunking::Cdc(p) => super::chunker::chunk_cdc(data, p),
+        };
+        let chunks: Vec<Cid> = parts.into_iter().map(|c| store.put(c.to_vec())).collect();
         let m = DagManifest {
             name: name.to_string(),
             version,
@@ -107,6 +130,100 @@ impl DagManifest {
     }
 }
 
+/// The difference between two versions of a chunked artifact.
+///
+/// Correctness never depends on this message: a subscriber holding the
+/// base version's chunks computes the same "what to fetch" set from the
+/// full manifest's [`DagManifest::missing`] (unchanged chunks share CIDs).
+/// The delta manifest is the explicit contract — it names the base, the
+/// added chunk set and its byte volume, so subscribers can decide delta vs
+/// full up front and harnesses can verify how many bytes a sync *should*
+/// move.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DeltaManifest {
+    pub name: String,
+    pub version: u64,
+    pub base_version: u64,
+    /// Root CID of the base version's manifest.
+    pub base_root: Cid,
+    /// Root CID of this version's full manifest.
+    pub root: Cid,
+    pub total_size: u64,
+    /// Chunk CIDs present in this version but not in the base (deduped,
+    /// manifest order preserved).
+    pub added: Vec<Cid>,
+    /// Total bytes of the added chunks.
+    pub added_bytes: u64,
+}
+
+impl Message for DeltaManifest {
+    fn encode_to(&self, w: &mut PbWriter) {
+        w.string(1, &self.name);
+        w.uint(2, self.version);
+        w.uint(3, self.base_version);
+        w.bytes(4, self.base_root.as_bytes());
+        w.bytes(5, self.root.as_bytes());
+        w.uint(6, self.total_size);
+        for c in &self.added {
+            w.bytes_always(7, c.as_bytes());
+        }
+        w.uint(8, self.added_bytes);
+    }
+
+    fn decode(buf: &[u8]) -> Result<DeltaManifest> {
+        let mut m = DeltaManifest::default();
+        PbReader::new(buf).for_each(|f| {
+            match f.number {
+                1 => m.name = f.as_string()?,
+                2 => m.version = f.as_u64(),
+                3 => m.base_version = f.as_u64(),
+                4 => m.base_root = Cid::from_bytes(f.as_bytes()?)?,
+                5 => m.root = Cid::from_bytes(f.as_bytes()?)?,
+                6 => m.total_size = f.as_u64(),
+                7 => m.added.push(Cid::from_bytes(f.as_bytes()?)?),
+                8 => m.added_bytes = f.as_u64(),
+                _ => {}
+            }
+            Ok(())
+        })?;
+        Ok(m)
+    }
+}
+
+impl DeltaManifest {
+    /// Diff `next` against `base`. Chunk sizes are read from `store`
+    /// (which holds every chunk of `next`, having just published it).
+    pub fn diff(
+        base: &DagManifest,
+        base_root: Cid,
+        next: &DagManifest,
+        next_root: Cid,
+        store: &Blockstore,
+    ) -> DeltaManifest {
+        use std::collections::HashSet;
+        let have: HashSet<Cid> = base.chunks.iter().copied().collect();
+        let mut seen: HashSet<Cid> = HashSet::new();
+        let mut added = Vec::new();
+        let mut added_bytes = 0u64;
+        for c in &next.chunks {
+            if !have.contains(c) && seen.insert(*c) {
+                added.push(*c);
+                added_bytes += store.get(c).map(|b| b.len() as u64).unwrap_or(0);
+            }
+        }
+        DeltaManifest {
+            name: next.name.clone(),
+            version: next.version,
+            base_version: base.version,
+            base_root,
+            root: next_root,
+            total_size: next.total_size,
+            added,
+            added_bytes,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +266,40 @@ mod tests {
         let mut s3 = Blockstore::new();
         let (root3, _) = DagManifest::publish(&mut s3, "a", 2, &[1, 2, 3], 2);
         assert_ne!(root1, root3, "version is part of the root");
+    }
+
+    #[test]
+    fn cdc_publish_shares_chunks_across_versions() {
+        let mut store = Blockstore::new();
+        let mut rng = Rng::new(11);
+        let v1 = rng.gen_bytes(600_000);
+        let mut v2 = v1.clone();
+        let patch = rng.gen_bytes(40_000);
+        v2[100_000..140_000].copy_from_slice(&patch);
+        let cdc = Chunking::Cdc(crate::content::CDC_CHECKPOINT);
+        let (r1, m1) = DagManifest::publish_chunked(&mut store, "m", 1, &v1, cdc);
+        let (r2, m2) = DagManifest::publish_chunked(&mut store, "m", 2, &v2, cdc);
+        assert_ne!(r1, r2);
+        let delta = DeltaManifest::diff(&m1, r1, &m2, r2, &store);
+        assert_eq!(delta.base_root, r1);
+        assert_eq!(delta.root, r2);
+        assert!(!delta.added.is_empty());
+        // A ~7% in-place edit must not dirty more than ~30% of the bytes.
+        assert!(
+            (delta.added_bytes as usize) < v2.len() * 3 / 10,
+            "delta too large: {} of {}",
+            delta.added_bytes,
+            v2.len()
+        );
+        // The delta's added set is exactly what a base-holding store misses.
+        let mut base_store = Blockstore::new();
+        let (_, _) = DagManifest::publish_chunked(&mut base_store, "m", 1, &v1, cdc);
+        let missing = m2.missing(&base_store);
+        let missing_set: std::collections::HashSet<Cid> = missing.into_iter().collect();
+        let added_set: std::collections::HashSet<Cid> = delta.added.iter().copied().collect();
+        assert_eq!(missing_set, added_set);
+        // Wire roundtrip.
+        assert_eq!(DeltaManifest::decode(&delta.encode()).unwrap(), delta);
     }
 
     #[test]

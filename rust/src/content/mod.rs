@@ -11,7 +11,7 @@ pub mod chunker;
 pub mod blockstore;
 pub mod manifest;
 
-pub use blockstore::Blockstore;
+pub use blockstore::{Blockstore, BlockstoreStats};
 pub use cid::Cid;
-pub use chunker::{chunk_fixed, chunk_rolling, DEFAULT_CHUNK_SIZE};
-pub use manifest::DagManifest;
+pub use chunker::{chunk_cdc, chunk_fixed, chunk_rolling, CdcParams, CDC_CHECKPOINT, DEFAULT_CHUNK_SIZE};
+pub use manifest::{Chunking, DagManifest, DeltaManifest};

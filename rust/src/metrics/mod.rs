@@ -232,6 +232,70 @@ impl DhtLookupStats {
     }
 }
 
+/// Aggregated outcome of one model-distribution run (trainer + N
+/// replicas × M checkpoint versions). Shared by `benches/model_sync` and
+/// `tests/model_sync` so the CI-gated bars and the published rows measure
+/// the same quantities: per-version trainer egress, per-replica sync
+/// latency, and per-version bytes actually moved (the delta evidence).
+#[derive(Clone, Debug, Default)]
+pub struct SyncStats {
+    pub replicas: u64,
+    pub blob_bytes: u64,
+    /// Trainer bytes served per checkpoint version.
+    pub egress_per_version: Vec<u64>,
+    /// Sum over replicas of bytes fetched, per checkpoint version.
+    pub fetched_per_version: Vec<u64>,
+    /// Per-replica sync latency samples (ns), all versions pooled.
+    pub latency: Histogram,
+}
+
+impl SyncStats {
+    pub fn record_version(&mut self, egress: u64, fetched: u64) {
+        self.egress_per_version.push(egress);
+        self.fetched_per_version.push(fetched);
+    }
+
+    /// Worst per-version trainer egress as a multiple of the blob size.
+    pub fn max_egress_x_blob(&self) -> f64 {
+        let max = self.egress_per_version.iter().copied().max().unwrap_or(0);
+        if self.blob_bytes == 0 {
+            return 0.0;
+        }
+        max as f64 / self.blob_bytes as f64
+    }
+
+    /// Mean trainer egress per checkpoint (bytes).
+    pub fn mean_egress(&self) -> f64 {
+        if self.egress_per_version.is_empty() {
+            return 0.0;
+        }
+        self.egress_per_version.iter().sum::<u64>() as f64
+            / self.egress_per_version.len() as f64
+    }
+
+    /// Fraction of the full demand (replicas × blob) actually moved for
+    /// version index `v` — <1.0 is the delta savings.
+    pub fn fetched_fraction(&self, v: usize) -> f64 {
+        let demand = self.replicas.saturating_mul(self.blob_bytes);
+        if demand == 0 {
+            return 0.0;
+        }
+        self.fetched_per_version.get(v).copied().unwrap_or(0) as f64 / demand as f64
+    }
+
+    pub fn summary(&mut self) -> String {
+        format!(
+            "replicas={} blob={} egress/ckpt={} (max {:.2}x blob) sync p50={} p99={}",
+            self.replicas,
+            crate::util::timefmt::fmt_bytes(self.blob_bytes),
+            crate::util::timefmt::fmt_bytes(self.mean_egress() as u64),
+            self.max_egress_x_blob(),
+            crate::util::timefmt::fmt_ns(self.latency.percentile(50.0)),
+            crate::util::timefmt::fmt_ns(self.latency.percentile(99.0)),
+        )
+    }
+}
+
 /// Completed-ops counter over a virtual-time window → QPS.
 #[derive(Clone, Debug, Default)]
 pub struct QpsMeter {
@@ -325,6 +389,23 @@ mod tests {
         assert!((s.success_rate() - 0.5).abs() < 1e-9);
         assert!((s.staleness() - 0.25).abs() < 1e-9);
         assert!((s.mean_hops() - 17.0 / 3.0).abs() < 1e-9);
+        assert!(!s.summary().is_empty());
+    }
+
+    #[test]
+    fn sync_stats_ratios() {
+        let mut s = SyncStats {
+            replicas: 4,
+            blob_bytes: 1000,
+            ..SyncStats::default()
+        };
+        s.record_version(1500, 4000);
+        s.record_version(900, 800);
+        assert!((s.max_egress_x_blob() - 1.5).abs() < 1e-9);
+        assert!((s.mean_egress() - 1200.0).abs() < 1e-9);
+        assert!((s.fetched_fraction(0) - 1.0).abs() < 1e-9);
+        assert!((s.fetched_fraction(1) - 0.2).abs() < 1e-9);
+        s.latency.record(5);
         assert!(!s.summary().is_empty());
     }
 

@@ -5,11 +5,13 @@
 //! content-addressed blob; inference clusters hear the announcement on the
 //! gossip topic, resolve providers, Bitswap the chunks and hot-swap.
 
-use crate::content::{Cid, DagManifest, DEFAULT_CHUNK_SIZE};
+use crate::content::{Chunking, Cid, DagManifest, DeltaManifest, CDC_CHECKPOINT, DEFAULT_CHUNK_SIZE};
 use crate::netsim::Net;
 use crate::node::LatticaNode;
+use crate::protocols::Ctx;
 use crate::runtime::{Manifest, Tensor};
 use crate::util::varint;
+use crate::wire::Message;
 use anyhow::{Context, Result};
 
 /// Gossip topic for checkpoint announcements of a named model.
@@ -17,12 +19,24 @@ pub fn model_topic(name: &str) -> String {
     format!("/lattica/models/{name}")
 }
 
-/// Announcement payload: version + root CID.
+/// Delta availability advertised with a checkpoint: subscribers holding
+/// `base_root` complete only need the delta manifest's `added` chunks.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeltaInfo {
+    pub base_version: u64,
+    /// Root of the base version's manifest.
+    pub base_root: Cid,
+    /// CID of the stored [`DeltaManifest`] block.
+    pub delta_block: Cid,
+}
+
+/// Announcement payload: version + root CID (+ optional delta pointer).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelAnnouncement {
     pub name: String,
     pub version: u64,
     pub root: Cid,
+    pub delta: Option<DeltaInfo>,
 }
 
 impl ModelAnnouncement {
@@ -31,6 +45,15 @@ impl ModelAnnouncement {
         varint::put_length_prefixed(&mut out, self.name.as_bytes());
         varint::put_uvarint(&mut out, self.version);
         out.extend_from_slice(self.root.as_bytes());
+        match &self.delta {
+            None => out.push(0),
+            Some(d) => {
+                out.push(1);
+                varint::put_uvarint(&mut out, d.base_version);
+                out.extend_from_slice(d.base_root.as_bytes());
+                out.extend_from_slice(d.delta_block.as_bytes());
+            }
+        }
         out
     }
 
@@ -39,7 +62,21 @@ impl ModelAnnouncement {
         let name = String::from_utf8(r.length_prefixed()?.to_vec())?;
         let version = r.uvarint()?;
         let root = Cid::from_bytes(r.take(32)?)?;
-        Ok(ModelAnnouncement { name, version, root })
+        // The delta flag is optional for compatibility with pre-delta
+        // announcements (a missing byte means "no delta"), but a present
+        // flag must be well-formed — corruption is an error, not a silent
+        // fallback to full fetch.
+        let delta = match r.take(1) {
+            Err(_) => None,
+            Ok(&[0]) => None,
+            Ok(&[1]) => Some(DeltaInfo {
+                base_version: r.uvarint()?,
+                base_root: Cid::from_bytes(r.take(32)?)?,
+                delta_block: Cid::from_bytes(r.take(32)?)?,
+            }),
+            Ok(b) => anyhow::bail!("bad delta flag {b:?}"),
+        };
+        Ok(ModelAnnouncement { name, version, root, delta })
     }
 }
 
@@ -78,8 +115,87 @@ pub fn decode_params(manifest: &Manifest, blob: &[u8]) -> Result<Vec<Tensor>> {
     Ok(out)
 }
 
+/// Versioned checkpoint publisher: CDC-chunks each checkpoint so
+/// unchanged chunks keep their CIDs across versions, stores a
+/// [`DeltaManifest`] naming exactly what changed, and gossips an
+/// announcement carrying both the full root and the delta pointer.
+/// Subscribers that retained version v's chunks automatically fetch only
+/// the delta for v+1 (content addressing makes the reuse implicit; the
+/// delta manifest makes it checkable).
+pub struct CheckpointPublisher {
+    pub name: String,
+    pub chunking: Chunking,
+    /// Last published (version, root) — the delta base.
+    last: Option<(u64, Cid)>,
+}
+
+impl CheckpointPublisher {
+    pub fn new(name: &str) -> CheckpointPublisher {
+        CheckpointPublisher {
+            name: name.to_string(),
+            chunking: Chunking::Cdc(CDC_CHECKPOINT),
+            last: None,
+        }
+    }
+
+    pub fn with_chunking(name: &str, chunking: Chunking) -> CheckpointPublisher {
+        CheckpointPublisher {
+            chunking,
+            ..CheckpointPublisher::new(name)
+        }
+    }
+
+    /// Publish one checkpoint blob: chunk + store + DHT provide + delta
+    /// manifest + gossip announce. Returns (root, announcement).
+    pub fn publish_blob(
+        &mut self,
+        node: &mut LatticaNode,
+        net: &mut Net,
+        version: u64,
+        blob: &[u8],
+    ) -> (Cid, ModelAnnouncement) {
+        let root = node.publish_blob_chunked(net, &self.name, version, blob, self.chunking);
+        let delta = self.last.and_then(|(base_version, base_root)| {
+            let base = DagManifest::load(&node.blockstore, &base_root).ok()?;
+            let next = DagManifest::load(&node.blockstore, &root).ok()?;
+            let d = DeltaManifest::diff(&base, base_root, &next, root, &node.blockstore);
+            let delta_block = node.blockstore.put(d.encode());
+            node.bitswap.choke_exempt.insert(delta_block);
+            Some(DeltaInfo {
+                base_version,
+                base_root,
+                delta_block,
+            })
+        });
+        self.last = Some((version, root));
+        let ann = ModelAnnouncement {
+            name: self.name.clone(),
+            version,
+            root,
+            delta,
+        };
+        let topic = model_topic(&self.name);
+        let mut ctx = Ctx::new(&mut node.swarm, net);
+        node.gossip.publish(&mut ctx, &topic, ann.encode());
+        (root, ann)
+    }
+
+    /// [`CheckpointPublisher::publish_blob`] over a tensor parameter list.
+    pub fn publish_params(
+        &mut self,
+        node: &mut LatticaNode,
+        net: &mut Net,
+        version: u64,
+        params: &[Tensor],
+    ) -> (Cid, ModelAnnouncement) {
+        let blob = encode_params(params);
+        self.publish_blob(node, net, version, &blob)
+    }
+}
+
 /// Publish a checkpoint from a node: chunks + DHT provide + gossip announce.
-/// Returns the root CID.
+/// Returns the root CID. One-shot (no delta base); long-lived trainers
+/// should hold a [`CheckpointPublisher`] instead.
 pub fn publish_checkpoint(
     node: &mut LatticaNode,
     net: &mut Net,
@@ -87,17 +203,9 @@ pub fn publish_checkpoint(
     version: u64,
     params: &[Tensor],
 ) -> Cid {
-    let blob = encode_params(params);
-    let root = node.publish_blob(net, name, version, &blob, DEFAULT_CHUNK_SIZE);
-    let ann = ModelAnnouncement {
-        name: name.to_string(),
-        version,
-        root,
-    };
-    let topic = model_topic(name);
-    let mut ctx = crate::protocols::Ctx::new(&mut node.swarm, net);
-    node.gossip.publish(&mut ctx, &topic, ann.encode());
-    root
+    let mut p =
+        CheckpointPublisher::with_chunking(name, Chunking::Fixed(DEFAULT_CHUNK_SIZE));
+    p.publish_params(node, net, version, params).0
 }
 
 /// Reassemble a fetched checkpoint into tensors.
@@ -122,8 +230,29 @@ mod tests {
             name: "gpt-mini".into(),
             version: 12,
             root: Cid::of(b"manifest"),
+            delta: None,
         };
         assert_eq!(ModelAnnouncement::decode(&a.encode()).unwrap(), a);
+        let with_delta = ModelAnnouncement {
+            delta: Some(DeltaInfo {
+                base_version: 11,
+                base_root: Cid::of(b"base"),
+                delta_block: Cid::of(b"delta"),
+            }),
+            ..a
+        };
+        assert_eq!(
+            ModelAnnouncement::decode(&with_delta.encode()).unwrap(),
+            with_delta
+        );
+        // Pre-delta encodings (no flag byte) still decode.
+        let mut legacy = Vec::new();
+        varint::put_length_prefixed(&mut legacy, b"m");
+        varint::put_uvarint(&mut legacy, 3);
+        legacy.extend_from_slice(Cid::of(b"r").as_bytes());
+        let d = ModelAnnouncement::decode(&legacy).unwrap();
+        assert_eq!(d.version, 3);
+        assert!(d.delta.is_none());
     }
 
     #[test]

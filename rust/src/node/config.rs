@@ -27,6 +27,11 @@ pub struct NodeConfig {
     pub relay_enabled: bool,
     /// Serve as a rendezvous registry.
     pub rendezvous_server: bool,
+    /// Swarm-mode blob sync: discover extra providers on the DHT while a
+    /// fetch runs and announce ourselves as a seeder of blobs we are
+    /// downloading. Off = parameter-server behaviour (fetch only from the
+    /// providers the caller names, never re-serve announcements).
+    pub swarm_sync: bool,
     /// Human label for logs/reports.
     pub label: String,
 }
@@ -40,6 +45,7 @@ impl Default for NodeConfig {
             cc: CcAlgorithm::Cubic,
             relay_enabled: false,
             rendezvous_server: false,
+            swarm_sync: true,
             label: String::new(),
         }
     }
@@ -78,6 +84,9 @@ impl NodeConfig {
         }
         if let Some(v) = get("rendezvous").and_then(|v| v.as_bool()) {
             c.rendezvous_server = v;
+        }
+        if let Some(v) = get("swarm_sync").and_then(|v| v.as_bool()) {
+            c.swarm_sync = v;
         }
         if let Some(v) = get("label").and_then(|v| v.as_str()) {
             c.label = v.to_string();
@@ -221,6 +230,7 @@ lr = 0.5
         let c = NodeConfig::default();
         assert_eq!(c.port, 4001);
         assert!(!c.relay_enabled);
+        assert!(c.swarm_sync);
         assert_eq!(c.cc, CcAlgorithm::Cubic);
         let r = NodeConfig::relay(9);
         assert!(r.relay_enabled && r.rendezvous_server);

@@ -8,7 +8,7 @@
 
 pub mod config;
 
-use crate::content::{Blockstore, Cid, DagManifest};
+use crate::content::{Blockstore, Chunking, Cid, DagManifest};
 use crate::crdt::CrdtStore;
 use crate::identity::{Keypair, PeerId};
 use crate::multiaddr::{Multiaddr, SimAddr};
@@ -84,6 +84,8 @@ pub struct LatticaNode {
     pub app: Option<Box<dyn App>>,
     /// Blob-sync driver state (see [`LatticaNode::sync_blob`]).
     blob_sync: std::collections::HashMap<Cid, BlobSync>,
+    /// Outstanding provider-discovery queries: kad query id → blob root.
+    discovery: std::collections::HashMap<u64, Cid>,
     events: VecDeque<NodeEvent>,
     tick_armed: bool,
 }
@@ -99,11 +101,20 @@ struct BlobSync {
     state: BlobSyncState,
     /// (local block count, virtual time) at the last observed progress.
     progress: (usize, Time),
+    /// Active Bitswap session for the current phase.
+    session: Option<u64>,
+    /// When the last `get_providers` discovery round was issued.
+    last_discovery: Time,
+    /// Whether a discovery query is currently in flight.
+    discovering: bool,
 }
 
 /// Restart a stalled fetch after this much virtual time without progress
 /// (sessions can erode their provider lists across reconnects).
 const BLOB_STALL_RESTART: Time = 10 * SECOND;
+/// How often a syncing node polls the DHT for additional providers
+/// (swarm mode only).
+const DISCOVERY_INTERVAL: Time = 2 * SECOND;
 
 impl LatticaNode {
     /// Construct and register a node on `host` in the world. Binds the
@@ -149,6 +160,7 @@ impl LatticaNode {
             crdt: CrdtStore::new(),
             app: None,
             blob_sync: std::collections::HashMap::new(),
+            discovery: std::collections::HashMap::new(),
             swarm,
             cfg,
             events: VecDeque::new(),
@@ -236,8 +248,23 @@ impl LatticaNode {
         data: &[u8],
         chunk_size: usize,
     ) -> Cid {
+        self.publish_blob_chunked(net, name, version, data, Chunking::Fixed(chunk_size))
+    }
+
+    /// [`LatticaNode::publish_blob`] with an explicit chunking policy
+    /// (checkpoint publishers use CDC so version v+1 reuses v's chunks).
+    pub fn publish_blob_chunked(
+        &mut self,
+        net: &mut Net,
+        name: &str,
+        version: u64,
+        data: &[u8],
+        chunking: Chunking,
+    ) -> Cid {
         let (root, manifest) =
-            DagManifest::publish(&mut self.blockstore, name, version, data, chunk_size);
+            DagManifest::publish_chunked(&mut self.blockstore, name, version, data, chunking);
+        // The manifest is session-startup metadata: never choke it.
+        self.bitswap.choke_exempt.insert(root);
         let mut ctx = Ctx::new(&mut self.swarm, net);
         self.kad.provide(&mut ctx, root.to_key());
         for c in &manifest.chunks {
@@ -277,20 +304,56 @@ impl LatticaNode {
     /// Idempotent blob-sync driver: call repeatedly (e.g. once per poll
     /// loop iteration) until it returns true. Fetches the manifest, then
     /// the chunks, creating each Bitswap session exactly once.
+    ///
+    /// With [`NodeConfig::swarm_sync`] on, the driver additionally
+    /// (a) announces this node as a one-shot provider of `root` as soon as
+    /// the manifest lands (seeder promotion: every replica serves the
+    /// swarm mid-download), and (b) polls `kad::get_providers` every
+    /// [`DISCOVERY_INTERVAL`], feeding discovered seeders into the running
+    /// Bitswap session.
     pub fn sync_blob(&mut self, net: &mut Net, root: Cid, providers: &[PeerId]) -> bool {
         let now = net.now();
         let blocks_now = self.blockstore.len();
+        // Fast path for finished blobs: no provider-list work.
+        if self.blob_sync.get(&root).map(|b| b.state) == Some(BlobSyncState::Complete) {
+            return true;
+        }
+        // Swarm overlay seeding: peers we are already connected to (the
+        // gossip/DHT mesh) are candidate seeders — one WANT_HAVE reveals
+        // the truth, and fellow fetchers push HAVEs as chunks land, so
+        // availability spreads at RTT timescale without waiting on DHT
+        // discovery rounds.
+        let providers: Vec<PeerId> = if self.cfg.swarm_sync {
+            let mut v = providers.to_vec();
+            for p in self.swarm.connected_peers() {
+                if !v.contains(&p) {
+                    v.push(p);
+                }
+            }
+            v
+        } else {
+            providers.to_vec()
+        };
+        let providers = providers.as_slice();
         let state = self
             .blob_sync
             .get(&root)
             .map(|b| b.state)
             .unwrap_or(BlobSyncState::FetchingManifest);
-        let mark = |node: &mut Self, st: BlobSyncState| {
+        let mark = |node: &mut Self, st: BlobSyncState, session: Option<u64>| {
+            let (last_discovery, discovering) = node
+                .blob_sync
+                .get(&root)
+                .map(|b| (b.last_discovery, b.discovering))
+                .unwrap_or((0, false));
             node.blob_sync.insert(
                 root,
                 BlobSync {
                     state: st,
                     progress: (blocks_now, now),
+                    session,
+                    last_discovery,
+                    discovering,
                 },
             );
         };
@@ -299,8 +362,18 @@ impl LatticaNode {
             BlobSyncState::FetchingManifest => {
                 if self.blockstore.has(&root) {
                     // Manifest arrived: move on to chunks.
-                    let _ = self.fetch_manifest_chunks(net, &root, providers.to_vec());
-                    mark(self, BlobSyncState::FetchingChunks);
+                    let sid = self
+                        .fetch_manifest_chunks(net, &root, providers.to_vec())
+                        .ok();
+                    mark(self, BlobSyncState::FetchingChunks, sid);
+                    if self.cfg.swarm_sync {
+                        // Seeder promotion: we hold the manifest (and will
+                        // hold chunks shortly) — become discoverable now so
+                        // later fetchers spread load off the publisher.
+                        let mut ctx = Ctx::new(&mut self.swarm, net);
+                        self.kad.provide_once(&mut ctx, root.to_key());
+                    }
+                    self.discover_providers(net, root);
                     false
                 } else {
                     let restart = match self.blob_sync.get(&root) {
@@ -308,9 +381,10 @@ impl LatticaNode {
                         Some(b) => now.saturating_sub(b.progress.1) > BLOB_STALL_RESTART,
                     };
                     if restart {
-                        self.fetch_blob(net, root, providers.to_vec());
-                        mark(self, BlobSyncState::FetchingManifest);
+                        let sid = self.fetch_blob(net, root, providers.to_vec());
+                        mark(self, BlobSyncState::FetchingManifest, Some(sid));
                     }
+                    self.discover_providers(net, root);
                     false
                 }
             }
@@ -319,23 +393,50 @@ impl LatticaNode {
                     .map(|m| m.is_complete(&self.blockstore))
                     .unwrap_or(false);
                 if complete {
-                    mark(self, BlobSyncState::Complete);
+                    mark(self, BlobSyncState::Complete, None);
                     return true;
                 }
                 // Progress tracking + stalled-session restart.
-                let entry = self.blob_sync.get(&root).map(|b| b.progress);
+                let entry = self.blob_sync.get(&root).map(|b| (b.progress, b.session));
                 match entry {
-                    Some((prev_blocks, _since)) if blocks_now > prev_blocks => {
-                        mark(self, BlobSyncState::FetchingChunks);
+                    Some(((prev_blocks, _since), sid)) if blocks_now > prev_blocks => {
+                        mark(self, BlobSyncState::FetchingChunks, sid);
                     }
-                    Some((_, since)) if now.saturating_sub(since) > BLOB_STALL_RESTART => {
-                        let _ = self.fetch_manifest_chunks(net, &root, providers.to_vec());
-                        mark(self, BlobSyncState::FetchingChunks);
+                    Some(((_, since), _)) if now.saturating_sub(since) > BLOB_STALL_RESTART => {
+                        let sid = self
+                            .fetch_manifest_chunks(net, &root, providers.to_vec())
+                            .ok();
+                        mark(self, BlobSyncState::FetchingChunks, sid);
                     }
                     _ => {}
                 }
+                self.discover_providers(net, root);
                 false
             }
+        }
+    }
+
+    /// Issue a periodic `get_providers(root)` round (swarm mode). Results
+    /// are intercepted in `pump` and fed into the blob's Bitswap session.
+    fn discover_providers(&mut self, net: &mut Net, root: Cid) {
+        if !self.cfg.swarm_sync {
+            return;
+        }
+        let now = net.now();
+        let due = self.blob_sync.get(&root).is_some_and(|b| {
+            !b.discovering && now.saturating_sub(b.last_discovery) >= DISCOVERY_INTERVAL
+        });
+        if !due {
+            return;
+        }
+        let qid = {
+            let mut ctx = Ctx::new(&mut self.swarm, net);
+            self.kad.get_providers(&mut ctx, root.to_key())
+        };
+        self.discovery.insert(qid, root);
+        if let Some(b) = self.blob_sync.get_mut(&root) {
+            b.last_discovery = now;
+            b.discovering = true;
         }
     }
 
@@ -351,6 +452,26 @@ impl LatticaNode {
         }
         // Collect protocol events for the application.
         while let Some(e) = self.kad.poll_event() {
+            // Intercept provider-discovery rounds issued by sync_blob:
+            // feed the seeders into the blob's Bitswap session instead of
+            // surfacing a node-internal query to the app.
+            if let KadEvent::QueryFinished { query_id, providers, .. } = &e {
+                if let Some(root) = self.discovery.remove(query_id) {
+                    for p in providers {
+                        self.swarm.peerstore.add_address(p.id, p.to_multiaddr());
+                    }
+                    let session = self.blob_sync.get_mut(&root).and_then(|b| {
+                        b.discovering = false;
+                        b.session
+                    });
+                    if let Some(sid) = session {
+                        let peers: Vec<PeerId> = providers.iter().map(|p| p.id).collect();
+                        let mut ctx = Ctx::new(&mut self.swarm, net);
+                        self.bitswap.add_providers(&mut ctx, sid, peers);
+                    }
+                    continue;
+                }
+            }
             self.events.push_back(NodeEvent::Kad(e));
         }
         while let Some(e) = self.bitswap.poll_event() {
@@ -398,6 +519,7 @@ impl LatticaNode {
                 let mut ctx = Ctx::new(&mut self.swarm, net);
                 self.kad.on_peer_connected(&mut ctx, peer);
                 self.gossip.on_peer_connected(&mut ctx, peer);
+                self.bitswap.on_peer_connected(&mut ctx, peer);
                 self.identify.on_peer_connected(&mut ctx, peer, remote_addr);
                 // Learn the peer's DHT entry from its observed endpoint.
                 if !relayed {
@@ -434,9 +556,11 @@ impl LatticaNode {
                 self.rpc.on_conn_closed(cid);
                 if let Some(p) = peer {
                     // Queries waiting on this dial fail over to the
-                    // next-closest candidate instead of stalling.
+                    // next-closest candidate instead of stalling; fetch
+                    // sessions drop the unreachable provider.
                     let mut ctx = Ctx::new(&mut self.swarm, net);
                     self.kad.on_peer_unreachable(&mut ctx, p);
+                    self.bitswap.on_peer_unreachable(&mut ctx, p);
                 }
                 crate::log_debug!("dial failed: {reason}");
             }
@@ -561,7 +685,7 @@ impl Endpoint for LatticaNode {
                 {
                     let mut ctx = Ctx::new(&mut self.swarm, net);
                     self.kad.tick(&mut ctx);
-                    self.bitswap.tick(&mut ctx);
+                    self.bitswap.tick(&mut ctx, &self.blockstore);
                     self.rpc.tick(&mut ctx);
                 }
                 self.autonat.tick(net.now());

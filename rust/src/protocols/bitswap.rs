@@ -1,30 +1,72 @@
-//! Bitswap-style block exchange: wantlists, per-peer ledgers and
-//! multi-provider fetch sessions.
+//! Bitswap-style block exchange: wantlists, per-peer ledgers and a
+//! swarm download scheduler for multi-provider fetch sessions.
 //!
 //! Protocol `/lattica/bitswap/1`: one persistent stream per peer pair,
-//! carrying WANT / HAVE / BLOCK / CANCEL messages. A [`Session`] fetches a
-//! set of CIDs by striping wants across providers, re-striping on timeout
-//! or miss — this is the "decentralized CDN" data path of Fig. 1(2/3).
+//! carrying WANT / WANT_HAVE / HAVE / BLOCK / CANCEL messages. A
+//! [`Session`] fetches a set of CIDs with:
+//!
+//! - **HAVE-based availability**: WANT_HAVE queries map which provider
+//!   holds which chunk; peers that lack a chunk remember the interest and
+//!   push a HAVE the moment it lands locally (mid-download re-serving).
+//! - **Rarest-first selection**: the next chunk requested is the one with
+//!   the fewest known holders, hash-diversified per node so a swarm of
+//!   fetchers with identical information spreads over distinct chunks.
+//! - **Per-peer pipelining windows**: AIMD windows bounded by measured
+//!   per-peer delivery rate and by [`Ledger::debt_ratio`]-style politeness
+//!   (deep unreciprocated debt shifts load to other holders).
+//! - **Endgame duplicates**: the last few chunks may be requested from
+//!   more than one holder; the losers get CANCELs and late duplicates are
+//!   dropped without ledger credit or a second store write.
+//!
+//! This is the "decentralized CDN" data path of Fig. 1(2/3).
 
 use super::Ctx;
 use crate::content::{Blockstore, Cid};
 use crate::identity::PeerId;
-use crate::netsim::{Time, SECOND};
+use crate::netsim::{Time, MILLI, SECOND};
 use crate::util::buf::Buf;
 use crate::wire::{encode_pooled, Message, PbReader, PbWriter};
 use anyhow::Result;
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 
 pub const BITSWAP_PROTO: &str = "/lattica/bitswap/1";
 
-/// Re-stripe unanswered wants after this long.
+/// Re-assign an unanswered block request after this long (scaled by the
+/// peer's consecutive-timeout count).
 pub const WANT_TIMEOUT: Time = SECOND;
+
+/// Pipelining window bounds.
+const MIN_WINDOW: usize = 1;
+const START_WINDOW: usize = 2;
+const MAX_WINDOW: usize = 32;
+/// Keep roughly this much measured service time in flight per peer.
+const PIPELINE_TARGET: Time = 500 * MILLI;
+/// Unreciprocated bytes taken from one peer before politeness halves the
+/// window we allow ourselves against it.
+const POLITENESS_BYTES: u64 = 1024 * 1024;
+/// Endgame: how many holders may be asked for the same chunk at once.
+const ENDGAME_DUP: usize = 2;
+/// Re-dial an unestablished provider at most this often.
+const DIAL_RETRY: Time = 5 * SECOND;
+
+/// Upload choking (swarm-mode seeders, e.g. a checkpoint publisher):
+/// superseeding — the FIRST copy of every block always flows (the swarm
+/// cannot replicate what it has never seen), but once a block has been
+/// served somewhere, repeat serves to a peer whose unreciprocated debt
+/// exceeds this many bytes queue behind the optimistic-unchoke drip —
+/// the swarm, which reciprocates, carries the repeat fan-out.
+const CHOKE_BYTES: u64 = 32 * 1024;
+/// Blocks smaller than this (manifests, delta manifests) always serve.
+const CHOKE_EXEMPT_SIZE: usize = 8 * 1024;
+/// Optimistic unchoke: queued WANTs served per tick.
+const UNCHOKE_PER_TICK: usize = 2;
 
 const M_WANT: u64 = 1;
 const M_BLOCK: u64 = 2;
 const M_HAVE: u64 = 3;
 const M_DONT_HAVE: u64 = 4;
 const M_CANCEL: u64 = 5;
+const M_WANT_HAVE: u64 = 6;
 
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct BitswapMsg {
@@ -93,39 +135,145 @@ impl Ledger {
     }
 }
 
+/// Scheduler counters (duplicate suppression, re-serving, endgame).
+#[derive(Clone, Debug, Default)]
+pub struct BitswapStats {
+    pub blocks_received: u64,
+    pub bytes_received: u64,
+    pub blocks_served: u64,
+    pub bytes_served: u64,
+    /// Blocks that arrived after we already held them (late answers from
+    /// slow providers, endgame losers). Not credited to any ledger.
+    pub duplicate_blocks: u64,
+    pub duplicate_bytes: u64,
+    /// Blocks stored without a matching want (opportunistic cache fill).
+    pub unsolicited_blocks: u64,
+    /// WANTs deferred by upload choking.
+    pub wants_choked: u64,
+    /// Choked WANTs eventually served by the optimistic-unchoke drip.
+    pub choked_served: u64,
+    /// HAVEs pushed to peers whose interest we remembered.
+    pub have_pushes: u64,
+    pub want_timeouts: u64,
+    pub endgame_duplicate_wants: u64,
+    pub cancels_sent: u64,
+}
+
 #[derive(Debug)]
 pub enum BitswapEvent {
     /// A wanted block arrived (already stored + verified).
     BlockReceived { cid: Cid, from: PeerId, size: usize },
     /// A fetch session completed (all CIDs present locally).
     SessionComplete { session: u64 },
-    /// A session cannot progress: no provider had some CID.
+    /// A session cannot progress: no reachable provider has these CIDs.
     SessionStalled { session: u64, missing: Vec<Cid> },
 }
 
+/// Per-chunk fetch state, shared across sessions wanting the same CID.
+#[derive(Default)]
 struct WantState {
-    sessions: HashSet<u64>,
-    asked: Vec<PeerId>,
-    current: Option<(PeerId, Time)>, // who we asked last + deadline
+    sessions: BTreeSet<u64>,
+    /// Peers that confirmed holding the chunk (HAVE or pushed HAVE).
+    haves: BTreeSet<PeerId>,
+    /// Peers that answered DONT_HAVE.
+    lacks: BTreeSet<PeerId>,
+    /// Outstanding block requests: peer → deadline. More than one entry
+    /// only during endgame.
+    inflight: BTreeMap<PeerId, Time>,
+    /// Peers already asked for this chunk (preferred-last on re-stripe).
+    tried: BTreeSet<PeerId>,
 }
 
 struct Session {
     #[allow(dead_code)]
     id: u64,
-    wanted: HashSet<Cid>,
-    providers: Vec<PeerId>,
+    /// CIDs still missing locally.
+    wanted: BTreeSet<Cid>,
+    /// Initial want count (endgame threshold base).
+    total: usize,
+    providers: BTreeSet<PeerId>,
+    /// Providers that have received our WANT_HAVE subscription.
+    subscribed: BTreeSet<PeerId>,
+    /// Useful bytes fetched for this session's wants.
+    bytes_fetched: u64,
+    /// A stall has been reported and nothing has changed since (avoids
+    /// one event per tick while truly stuck).
+    stalled_reported: bool,
 }
+
+/// Per-peer scheduler state (windows, measured delivery rate).
+struct PeerState {
+    /// AIMD window: +1 per delivered block, halved on timeout.
+    window: usize,
+    /// Chunks currently requested from this peer.
+    outstanding: BTreeSet<Cid>,
+    /// EWMA delivery rate (bytes/sec) over inter-block gaps.
+    ewma_bps: f64,
+    /// EWMA delivered block size.
+    ewma_block: f64,
+    last_block_at: Time,
+    /// Consecutive timeouts (deadline backoff).
+    timeouts: u64,
+}
+
+impl PeerState {
+    fn new() -> PeerState {
+        PeerState {
+            window: START_WINDOW,
+            outstanding: BTreeSet::new(),
+            ewma_bps: 0.0,
+            ewma_block: 0.0,
+            last_block_at: 0,
+            timeouts: 0,
+        }
+    }
+}
+
+fn id64(b: &[u8; 32]) -> u64 {
+    u64::from_le_bytes(b[..8].try_into().expect("8-byte prefix"))
+}
+
+/// Deterministic tie-break hash over (local peer, remote peer, cid) —
+/// diverse across nodes, stable within one.
+fn mix(parts: &[u64]) -> u64 {
+    parts
+        .iter()
+        .fold(0x5EED_CAFE, |acc, p| crate::util::rng::mix64(acc ^ *p))
+}
+
+/// (connection id, stream id) of an open bitswap stream.
+type StreamRef = (u64, u64);
 
 /// The Bitswap behaviour. The node owns the [`Blockstore`] and passes it in.
 pub struct Bitswap {
-    /// Open bitswap streams per peer: peer → (cid, stream).
-    streams: HashMap<PeerId, (u64, u64)>,
+    /// Open bitswap streams per peer: peer → (conn, stream).
+    streams: HashMap<PeerId, StreamRef>,
     pub ledgers: HashMap<PeerId, Ledger>,
-    wants: HashMap<Cid, WantState>,
-    sessions: HashMap<u64, Session>,
+    /// BTreeMaps keep scheduling order deterministic across processes.
+    wants: BTreeMap<Cid, WantState>,
+    peers: BTreeMap<PeerId, PeerState>,
+    sessions: BTreeMap<u64, Session>,
+    /// Remembered WANT/WANT_HAVE interest in chunks we lack:
+    /// cid → peer → stream for the HAVE push.
+    interest: BTreeMap<Cid, BTreeMap<PeerId, StreamRef>>,
+    /// Providers with a dial in flight (when it was issued) — dedup so a
+    /// pending handshake isn't re-dialed every tick.
+    dialing: BTreeMap<PeerId, Time>,
+    /// Upload choking (off by default; swarm-mode publishers enable it).
+    /// When on, WANTs from deeply-indebted peers are parked here and
+    /// drained at [`UNCHOKE_PER_TICK`].
+    pub serve_choking: bool,
+    choked: VecDeque<(PeerId, Cid)>,
+    choked_set: BTreeSet<(PeerId, Cid)>,
+    /// Blocks this node has served at least once (superseeding: only
+    /// repeats are choke-eligible). Tracked only while choking is on.
+    served_once: BTreeSet<Cid>,
+    /// Metadata blocks (manifests, delta manifests) that must never
+    /// choke regardless of size — publishers register them.
+    pub choke_exempt: BTreeSet<Cid>,
     next_session: u64,
     events: VecDeque<BitswapEvent>,
-    rr_counter: usize,
+    pub stats: BitswapStats,
 }
 
 impl Default for Bitswap {
@@ -139,16 +287,33 @@ impl Bitswap {
         Bitswap {
             streams: HashMap::new(),
             ledgers: HashMap::new(),
-            wants: HashMap::new(),
-            sessions: HashMap::new(),
+            wants: BTreeMap::new(),
+            peers: BTreeMap::new(),
+            sessions: BTreeMap::new(),
+            interest: BTreeMap::new(),
+            dialing: BTreeMap::new(),
+            serve_choking: false,
+            choked: VecDeque::new(),
+            choked_set: BTreeSet::new(),
+            served_once: BTreeSet::new(),
+            choke_exempt: BTreeSet::new(),
             next_session: 1,
             events: VecDeque::new(),
-            rr_counter: 0,
+            stats: BitswapStats::default(),
         }
     }
 
     pub fn poll_event(&mut self) -> Option<BitswapEvent> {
         self.events.pop_front()
+    }
+
+    pub fn active_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Useful bytes fetched so far by a live session.
+    pub fn session_bytes(&self, session: u64) -> Option<u64> {
+        self.sessions.get(&session).map(|s| s.bytes_fetched)
     }
 
     fn stream_to(&mut self, ctx: &mut Ctx, peer: &PeerId) -> Result<(u64, u64)> {
@@ -164,8 +329,9 @@ impl Bitswap {
         Ok((cid, stream))
     }
 
-    /// Start fetching `cids` from `providers` (already-connected or known
-    /// peers). Returns the session id.
+    /// Start fetching `cids` from `providers`. Returns the session id.
+    /// More providers can join later via [`Bitswap::add_providers`] (DHT
+    /// discovery) or by pushing HAVEs.
     pub fn fetch(
         &mut self,
         ctx: &mut Ctx,
@@ -175,105 +341,291 @@ impl Bitswap {
     ) -> u64 {
         let id = self.next_session;
         self.next_session += 1;
-        let wanted: HashSet<Cid> = cids.iter().filter(|c| !store.has(c)).copied().collect();
-        let session = Session {
-            id,
-            wanted: wanted.clone(),
-            providers: providers.clone(),
-        };
-        self.sessions.insert(id, session);
+        let local = ctx.local_peer();
+        let wanted: BTreeSet<Cid> = cids.iter().filter(|c| !store.has(c)).copied().collect();
         if wanted.is_empty() {
             self.events.push_back(BitswapEvent::SessionComplete { session: id });
             return id;
         }
-        for c in wanted {
-            let w = self.wants.entry(c).or_insert_with(|| WantState {
-                sessions: HashSet::new(),
-                asked: Vec::new(),
-                current: None,
-            });
-            w.sessions.insert(id);
+        for c in &wanted {
+            self.wants.entry(*c).or_default().sessions.insert(id);
         }
-        self.dispatch_wants(ctx, id);
+        let total = wanted.len();
+        self.sessions.insert(
+            id,
+            Session {
+                id,
+                wanted,
+                total,
+                providers: providers.into_iter().filter(|p| *p != local).collect(),
+                subscribed: BTreeSet::new(),
+                bytes_fetched: 0,
+                stalled_reported: false,
+            },
+        );
+        self.connect_and_subscribe(ctx, id);
+        self.dispatch(ctx, id);
         id
     }
 
-    /// Stripe pending wants of a session across its providers.
-    fn dispatch_wants(&mut self, ctx: &mut Ctx, session_id: u64) {
-        let now = ctx.now();
-        let Some(s) = self.sessions.get(&session_id) else { return };
-        let providers = s.providers.clone();
-        if providers.is_empty() {
-            let missing: Vec<Cid> = s.wanted.iter().copied().collect();
-            self.events.push_back(BitswapEvent::SessionStalled {
-                session: session_id,
-                missing,
-            });
-            return;
-        }
-        let wanted: Vec<Cid> = s.wanted.iter().copied().collect();
-        // Group assignments per provider to batch WANT messages.
-        let mut batches: HashMap<PeerId, Vec<Cid>> = HashMap::new();
-        let mut stalled = Vec::new();
-        for c in wanted {
-            let w = self.wants.get_mut(&c).expect("want state");
-            if let Some((_, deadline)) = w.current {
-                if deadline > now {
-                    continue; // outstanding ask still fresh
+    /// Add freshly-discovered providers (e.g. from `kad::get_providers`)
+    /// to a running session.
+    pub fn add_providers(&mut self, ctx: &mut Ctx, session: u64, peers: Vec<PeerId>) {
+        let local = ctx.local_peer();
+        let mut added = false;
+        if let Some(s) = self.sessions.get_mut(&session) {
+            for p in peers {
+                if p != local && s.providers.insert(p) {
+                    added = true;
                 }
             }
-            // Pick the next provider we haven't asked for this cid.
-            let next = providers
+            if added {
+                s.stalled_reported = false;
+            }
+        }
+        if added {
+            self.connect_and_subscribe(ctx, session);
+            self.dispatch(ctx, session);
+        }
+    }
+
+    /// Send WANT_HAVE subscriptions to providers we haven't polled yet,
+    /// dialing unconnected ones (completion is picked up on a later tick
+    /// or on `on_peer_connected`).
+    fn connect_and_subscribe(&mut self, ctx: &mut Ctx, sid: u64) {
+        let (pending, want_list) = {
+            let Some(s) = self.sessions.get(&sid) else { return };
+            if s.wanted.is_empty() {
+                return;
+            }
+            let pending: Vec<PeerId> = s
+                .providers
                 .iter()
-                .cycle()
-                .skip(self.rr_counter % providers.len())
-                .take(providers.len())
-                .find(|p| !w.asked.contains(p))
-                .copied();
-            self.rr_counter += 1;
-            match next {
-                Some(p) => {
-                    w.asked.push(p);
-                    w.current = Some((p, now + WANT_TIMEOUT));
-                    batches.entry(p).or_default().push(c);
-                }
-                None => {
-                    // Every provider asked once: start a fresh round next
-                    // tick (providers may come online / reconnect) and tell
-                    // the application we're cycling.
-                    w.asked.clear();
-                    w.current = None;
-                    stalled.push(c);
-                }
-            }
-        }
-        for (peer, cids) in batches {
-            match self.stream_to(ctx, &peer) {
-                Ok((cid, stream)) => {
-                    let msg = BitswapMsg {
-                        kind: M_WANT,
-                        cids,
-                        block: Buf::new(),
-                    };
-                    let _ = encode_pooled(&msg, |b| ctx.send(cid, stream, b));
-                }
-                Err(_) => {
-                    // Not connected (yet): roll the asks back so the next
-                    // tick retries this provider instead of skipping it.
-                    for c in cids {
-                        if let Some(w) = self.wants.get_mut(&c) {
-                            w.asked.retain(|p| p != &peer);
-                            w.current = None;
+                .filter(|p| !s.subscribed.contains(p))
+                .copied()
+                .collect();
+            let want_list: Vec<Cid> = s.wanted.iter().copied().collect();
+            (pending, want_list)
+        };
+        for p in pending {
+            if !ctx.swarm.is_connected(&p) {
+                let now = ctx.now();
+                let due = self
+                    .dialing
+                    .get(&p)
+                    .is_none_or(|&t| now.saturating_sub(t) >= DIAL_RETRY);
+                if due {
+                    match ctx.ensure_connected(&p) {
+                        Ok(_) => {
+                            self.dialing.insert(p, now);
                         }
+                        Err(_) => {
+                            // No route at all: fail over to other providers.
+                            self.on_peer_unreachable(ctx, p);
+                        }
+                    }
+                }
+                continue;
+            }
+            self.dialing.remove(&p);
+            if let Ok((conn, stream)) = self.stream_to(ctx, &p) {
+                let msg = BitswapMsg {
+                    kind: M_WANT_HAVE,
+                    cids: want_list.clone(),
+                    block: Buf::new(),
+                };
+                if encode_pooled(&msg, |b| ctx.send(conn, stream, b)).is_ok() {
+                    if let Some(s) = self.sessions.get_mut(&sid) {
+                        s.subscribed.insert(p);
                     }
                 }
             }
         }
-        if !stalled.is_empty() {
-            self.events.push_back(BitswapEvent::SessionStalled {
-                session: session_id,
-                missing: stalled,
-            });
+    }
+
+    /// Effective pipelining window towards `peer`: the AIMD window bounded
+    /// by the measured delivery rate (keep ~[`PIPELINE_TARGET`] in flight)
+    /// and by ledger politeness (deep one-sided debt halves our appetite,
+    /// steering load towards holders we haven't drained yet).
+    fn effective_window(&self, peer: &PeerId) -> usize {
+        let Some(ps) = self.peers.get(peer) else { return START_WINDOW };
+        let mut w = ps.window;
+        if ps.ewma_bps > 0.0 && ps.ewma_block > 0.0 {
+            let pipelined = ps.ewma_bps * (PIPELINE_TARGET as f64 / 1e9) / ps.ewma_block;
+            let cap = (pipelined.ceil() as usize).max(MIN_WINDOW) * 2;
+            w = w.min(cap);
+        }
+        if let Some(l) = self.ledgers.get(peer) {
+            if l.bytes_received.saturating_sub(l.bytes_sent) > POLITENESS_BYTES {
+                w /= 2;
+            }
+        }
+        w.clamp(MIN_WINDOW, MAX_WINDOW)
+    }
+
+    fn want_deadline(&self, peer: &PeerId) -> Time {
+        let backoff = self.peers.get(peer).map_or(0, |p| p.timeouts.min(3));
+        WANT_TIMEOUT * (1 + backoff)
+    }
+
+    /// The scheduler: assign wanted chunks (rarest first) to holders with
+    /// free window slots, batch the WANTs per peer, and surface a stall if
+    /// nothing can move.
+    fn dispatch(&mut self, ctx: &mut Ctx, sid: u64) {
+        let now = ctx.now();
+        let local = ctx.local_peer();
+        let local_h = id64(local.as_bytes());
+
+        // Phase 0: no providers left at all — surface that once.
+        {
+            let Some(s) = self.sessions.get_mut(&sid) else { return };
+            if s.wanted.is_empty() {
+                return;
+            }
+            if s.providers.is_empty() {
+                if !s.stalled_reported {
+                    s.stalled_reported = true;
+                    let missing: Vec<Cid> = s.wanted.iter().copied().collect();
+                    self.events
+                        .push_back(BitswapEvent::SessionStalled { session: sid, missing });
+                }
+                return;
+            }
+        }
+
+        // Phase 1: plan assignments (read-only).
+        let mut batches: BTreeMap<PeerId, Vec<Cid>> = BTreeMap::new();
+        {
+            let Some(s) = self.sessions.get(&sid) else { return };
+            let providers: Vec<PeerId> = s.providers.iter().copied().collect();
+            let endgame = s.wanted.len() <= (s.total / 16).max(2);
+            let max_dup = if endgame { ENDGAME_DUP } else { 1 };
+
+            // Rarest first: confirmed HAVEs plus providers not known to
+            // lack the chunk; hash-diversified so identical fetchers
+            // start on different chunks.
+            let mut cands: Vec<(usize, u64, Cid)> = Vec::new();
+            for c in &s.wanted {
+                let Some(w) = self.wants.get(c) else { continue };
+                if w.inflight.len() >= max_dup {
+                    continue;
+                }
+                let presumed = providers
+                    .iter()
+                    .filter(|p| !w.lacks.contains(p) && !w.haves.contains(p))
+                    .count();
+                let holders = w.haves.len() + presumed;
+                if holders == 0 {
+                    continue;
+                }
+                cands.push((holders, mix(&[local_h, id64(c.as_bytes())]), *c));
+            }
+            cands.sort_unstable();
+
+            let mut planned: BTreeMap<PeerId, usize> = BTreeMap::new();
+            for (_, _, c) in cands {
+                let w = self.wants.get(&c).expect("want state");
+                let mut pool: Vec<PeerId> = providers
+                    .iter()
+                    .chain(w.haves.iter())
+                    .copied()
+                    .collect();
+                pool.sort_unstable();
+                pool.dedup();
+                pool.retain(|p| {
+                    *p != local && !w.lacks.contains(p) && !w.inflight.contains_key(p)
+                });
+                // Prefer peers not yet tried for this chunk; once everyone
+                // has been tried, allow retries (slow ≠ dead).
+                let fresh: Vec<PeerId> =
+                    pool.iter().filter(|p| !w.tried.contains(p)).copied().collect();
+                let pool = if fresh.is_empty() { pool } else { fresh };
+                let mut best: Option<((u64, u64, u64), PeerId)> = None;
+                for p in pool {
+                    let win = self.effective_window(&p) as u64;
+                    let out = self.peers.get(&p).map_or(0, |ps| ps.outstanding.len())
+                        + planned.get(&p).copied().unwrap_or(0);
+                    if out as u64 >= win {
+                        continue;
+                    }
+                    // Load first, then ledger imbalance in 32 KiB buckets
+                    // (spread away from peers we've already taken a lot
+                    // from — e.g. the original publisher), then hash.
+                    let load = (out as u64 * 1000) / win;
+                    let taken = self
+                        .ledgers
+                        .get(&p)
+                        .map_or(0, |l| l.bytes_received.saturating_sub(l.bytes_sent))
+                        >> 15;
+                    let tie = mix(&[local_h, id64(p.as_bytes()), id64(c.as_bytes())]);
+                    let score = (load, taken, tie);
+                    if best.as_ref().is_none_or(|(b, _)| score < *b) {
+                        best = Some((score, p));
+                    }
+                }
+                if let Some((_, p)) = best {
+                    *planned.entry(p).or_insert(0) += 1;
+                    batches.entry(p).or_default().push(c);
+                }
+            }
+        }
+
+        // Phase 2: send the batched WANTs, then record the bookkeeping
+        // (unsent batches leave no state behind, so the next tick retries).
+        let mut sent_any = false;
+        for (peer, cids) in batches {
+            let Ok((conn, stream)) = self.stream_to(ctx, &peer) else { continue };
+            let msg = BitswapMsg {
+                kind: M_WANT,
+                cids: cids.clone(),
+                block: Buf::new(),
+            };
+            if encode_pooled(&msg, |b| ctx.send(conn, stream, b)).is_err() {
+                continue;
+            }
+            sent_any = true;
+            let deadline = now + self.want_deadline(&peer);
+            {
+                let ps = self.peers.entry(peer).or_insert_with(PeerState::new);
+                for c in &cids {
+                    ps.outstanding.insert(*c);
+                }
+            }
+            for c in cids {
+                if let Some(w) = self.wants.get_mut(&c) {
+                    if !w.inflight.is_empty() {
+                        self.stats.endgame_duplicate_wants += 1;
+                    }
+                    w.inflight.insert(peer, deadline);
+                    w.tried.insert(peer);
+                }
+            }
+        }
+
+        // Stall detection: a session with wants but nothing in flight,
+        // and no pending subscriptions that could still change the
+        // picture (a provider mid-handshake is pending, not stalled).
+        // Reported once per stall episode; progress re-arms it.
+        let stalled_missing: Option<Vec<Cid>> = {
+            let Some(s) = self.sessions.get_mut(&sid) else { return };
+            if sent_any {
+                s.stalled_reported = false;
+            }
+            let all_subscribed = s.providers.iter().all(|p| s.subscribed.contains(p));
+            let any_inflight = s
+                .wanted
+                .iter()
+                .any(|c| self.wants.get(c).is_some_and(|w| !w.inflight.is_empty()));
+            if !any_inflight && !s.wanted.is_empty() && all_subscribed && !s.stalled_reported {
+                s.stalled_reported = true;
+                Some(s.wanted.iter().copied().collect())
+            } else {
+                None
+            }
+        };
+        if let Some(missing) = stalled_missing {
+            self.events
+                .push_back(BitswapEvent::SessionStalled { session: sid, missing });
         }
     }
 
@@ -288,135 +640,392 @@ impl Bitswap {
         stream: u64,
         msg: &Buf,
     ) -> Result<()> {
-        // Remember the stream for replies.
+        // Remember the stream for replies and pushes.
         self.streams.entry(peer).or_insert((conn, stream));
         let m = BitswapMsg::decode_buf(msg)?;
         match m.kind {
             M_WANT => {
+                let mut dont = Vec::new();
                 for c in m.cids {
                     match store.get(&c) {
                         Some(block) => {
-                            // Serving N peers bumps the refcount N times;
-                            // the block bytes are never cloned.
-                            self.ledgers.entry(peer).or_default().bytes_sent +=
-                                block.len() as u64;
-                            let reply = BitswapMsg {
-                                kind: M_BLOCK,
-                                cids: vec![c],
-                                block,
-                            };
-                            let _ = ctx.send_buf(conn, stream, reply.encode_buf());
+                            let debt = self
+                                .ledgers
+                                .get(&peer)
+                                .map_or(0, |l| l.bytes_sent.saturating_sub(l.bytes_received));
+                            if self.serve_choking
+                                && block.len() >= CHOKE_EXEMPT_SIZE
+                                && !self.choke_exempt.contains(&c)
+                                && debt > CHOKE_BYTES
+                                && self.served_once.contains(&c)
+                            {
+                                // Repeat serve to an indebted peer: park
+                                // it behind the unchoke drip; the
+                                // fetcher's timeout re-stripes it to a
+                                // reciprocating seeder meanwhile.
+                                if self.choked_set.insert((peer, c)) {
+                                    self.choked.push_back((peer, c));
+                                    self.stats.wants_choked += 1;
+                                }
+                                continue;
+                            }
+                            self.serve_block(ctx, peer, conn, stream, c, block);
                         }
                         None => {
-                            let reply = BitswapMsg {
-                                kind: M_DONT_HAVE,
-                                cids: vec![c],
-                                block: Buf::new(),
-                            };
-                            let _ = encode_pooled(&reply, |b| ctx.send(conn, stream, b));
+                            // Remember the interest: the moment this block
+                            // lands here we push a HAVE so the peer can
+                            // re-request from a now-nearer holder.
+                            self.interest.entry(c).or_default().insert(peer, (conn, stream));
+                            dont.push(c);
                         }
                     }
+                }
+                if !dont.is_empty() {
+                    let reply = BitswapMsg {
+                        kind: M_DONT_HAVE,
+                        cids: dont,
+                        block: Buf::new(),
+                    };
+                    let _ = encode_pooled(&reply, |b| ctx.send(conn, stream, b));
+                }
+            }
+            M_WANT_HAVE => {
+                let mut have = Vec::new();
+                let mut dont = Vec::new();
+                for c in m.cids {
+                    if store.has(&c) {
+                        have.push(c);
+                    } else {
+                        self.interest.entry(c).or_default().insert(peer, (conn, stream));
+                        dont.push(c);
+                    }
+                }
+                for (kind, cids) in [(M_HAVE, have), (M_DONT_HAVE, dont)] {
+                    if !cids.is_empty() {
+                        let reply = BitswapMsg { kind, cids, block: Buf::new() };
+                        let _ = encode_pooled(&reply, |b| ctx.send(conn, stream, b));
+                    }
+                }
+            }
+            M_HAVE => {
+                let mut affected: BTreeSet<u64> = BTreeSet::new();
+                for c in m.cids {
+                    if let Some(w) = self.wants.get_mut(&c) {
+                        w.lacks.remove(&peer);
+                        if w.haves.insert(peer) {
+                            affected.extend(w.sessions.iter().copied());
+                        }
+                    }
+                }
+                // A pushed HAVE promotes the pusher to session provider
+                // (it is a mid-download seeder we may not know yet).
+                for sid in &affected {
+                    if let Some(s) = self.sessions.get_mut(sid) {
+                        s.providers.insert(peer);
+                    }
+                }
+                for sid in affected {
+                    self.dispatch(ctx, sid);
+                }
+            }
+            M_DONT_HAVE => {
+                let mut affected: BTreeSet<u64> = BTreeSet::new();
+                for c in m.cids {
+                    if let Some(w) = self.wants.get_mut(&c) {
+                        w.haves.remove(&peer);
+                        w.lacks.insert(peer);
+                        if w.inflight.remove(&peer).is_some() {
+                            if let Some(ps) = self.peers.get_mut(&peer) {
+                                ps.outstanding.remove(&c);
+                            }
+                        }
+                        affected.extend(w.sessions.iter().copied());
+                    }
+                }
+                for sid in affected {
+                    self.dispatch(ctx, sid);
+                }
+            }
+            M_CANCEL => {
+                for c in m.cids {
+                    if let Some(int) = self.interest.get_mut(&c) {
+                        int.remove(&peer);
+                        if int.is_empty() {
+                            self.interest.remove(&c);
+                        }
+                    }
+                    // Withdraw any choked serve (queue entries are skipped
+                    // lazily once out of the set).
+                    self.choked_set.remove(&(peer, c));
                 }
             }
             M_BLOCK => {
                 let Some(&c) = m.cids.first() else { return Ok(()) };
+                let size = m.block.len();
+                if store.has(&c) {
+                    // Late duplicate (a slow provider answering after
+                    // re-stripe, or an endgame loser): drop it without
+                    // ledger credit, event, or a second store write.
+                    self.stats.duplicate_blocks += 1;
+                    self.stats.duplicate_bytes += size as u64;
+                    if let Some(w) = self.wants.get_mut(&c) {
+                        w.inflight.remove(&peer);
+                    }
+                    if let Some(ps) = self.peers.get_mut(&peer) {
+                        ps.outstanding.remove(&c);
+                    }
+                    return Ok(());
+                }
                 if store.put_verified(c, m.block.clone()).is_err() {
                     crate::log_warn!("peer {peer} sent corrupt block for {c}");
                     return Ok(());
                 }
-                self.ledgers.entry(peer).or_default().bytes_received += m.block.len() as u64;
+                self.ledgers.entry(peer).or_default().bytes_received += size as u64;
+                self.stats.blocks_received += 1;
+                self.stats.bytes_received += size as u64;
+                if !self.wants.contains_key(&c) {
+                    self.stats.unsolicited_blocks += 1;
+                }
                 self.events.push_back(BitswapEvent::BlockReceived {
                     cid: c,
                     from: peer,
-                    size: m.block.len(),
+                    size,
                 });
-                self.on_block_arrived(ctx, store, c);
+                self.on_block_arrived(ctx, c, peer, size);
             }
-            M_DONT_HAVE => {
-                for c in m.cids {
-                    let sessions: Vec<u64> = if let Some(w) = self.wants.get_mut(&c) {
-                        if let Some((p, _)) = w.current {
-                            if p == peer {
-                                w.current = None; // re-stripe now
-                            }
-                        }
-                        w.sessions.iter().copied().collect()
-                    } else {
-                        Vec::new()
-                    };
-                    for sid in sessions {
-                        self.dispatch_wants(ctx, sid);
-                    }
-                }
-            }
-            M_HAVE | M_CANCEL => {}
             _ => {}
         }
         Ok(())
     }
 
-    fn on_block_arrived(&mut self, ctx: &mut Ctx, store: &Blockstore, c: Cid) {
-        let Some(w) = self.wants.remove(&c) else { return };
-        for sid in w.sessions {
-            let complete = {
-                let Some(s) = self.sessions.get_mut(&sid) else { continue };
-                s.wanted.remove(&c);
-                s.wanted.is_empty()
+    /// Serve one block to a peer (refcount bump, ledger + stats credit).
+    fn serve_block(
+        &mut self,
+        ctx: &mut Ctx,
+        peer: PeerId,
+        conn: u64,
+        stream: u64,
+        c: Cid,
+        block: Buf,
+    ) {
+        let size = block.len() as u64;
+        self.ledgers.entry(peer).or_default().bytes_sent += size;
+        self.stats.blocks_served += 1;
+        self.stats.bytes_served += size;
+        if self.serve_choking {
+            self.served_once.insert(c);
+        }
+        let reply = BitswapMsg {
+            kind: M_BLOCK,
+            cids: vec![c],
+            block,
+        };
+        let _ = ctx.send_buf(conn, stream, reply.encode_buf());
+    }
+
+    fn send_cancel(&mut self, ctx: &mut Ctx, peer: &PeerId, cids: Vec<Cid>) {
+        if let Some(&(conn, stream)) = self.streams.get(peer) {
+            let msg = BitswapMsg {
+                kind: M_CANCEL,
+                cids,
+                block: Buf::new(),
             };
-            if complete {
-                self.sessions.remove(&sid);
-                self.events
-                    .push_back(BitswapEvent::SessionComplete { session: sid });
-            } else {
-                let _ = ctx;
+            if encode_pooled(&msg, |b| ctx.send(conn, stream, b)).is_ok() {
+                self.stats.cancels_sent += 1;
             }
         }
-        let _ = store;
     }
 
-    /// Node hook: periodic tick — retry timed-out and unsent wants
-    /// (a want can be unsent if the provider connection wasn't up yet).
-    pub fn tick(&mut self, ctx: &mut Ctx) {
+    fn on_block_arrived(&mut self, ctx: &mut Ctx, c: Cid, from: PeerId, size: usize) {
         let now = ctx.now();
-        let due: Vec<u64> = self
-            .wants
-            .values()
-            .filter(|w| w.current.map_or(true, |(_, d)| d <= now))
-            .flat_map(|w| w.sessions.iter().copied())
-            .collect();
-        let unique: HashSet<u64> = due.into_iter().collect();
-        for sid in unique {
-            self.dispatch_wants(ctx, sid);
+        // Window growth + measured delivery rate for the serving peer.
+        if let Some(ps) = self.peers.get_mut(&from) {
+            ps.outstanding.remove(&c);
+            if ps.last_block_at > 0 && now > ps.last_block_at {
+                let inst = size as f64 * 1e9 / (now - ps.last_block_at) as f64;
+                ps.ewma_bps = if ps.ewma_bps <= 0.0 {
+                    inst
+                } else {
+                    0.8 * ps.ewma_bps + 0.2 * inst
+                };
+            }
+            ps.last_block_at = now;
+            ps.ewma_block = if ps.ewma_block <= 0.0 {
+                size as f64
+            } else {
+                0.8 * ps.ewma_block + 0.2 * size as f64
+            };
+            ps.window = (ps.window + 1).min(MAX_WINDOW);
+            ps.timeouts = 0;
         }
-    }
-
-    /// Node hook: peer disconnected — drop its stream and re-stripe.
-    pub fn on_peer_disconnected(&mut self, ctx: &mut Ctx, peer: PeerId) {
-        self.streams.remove(&peer);
-        let affected: HashSet<u64> = self
-            .wants
-            .values_mut()
-            .filter_map(|w| {
-                if let Some((p, _)) = w.current {
-                    if p == peer {
-                        w.current = None;
-                        return Some(w.sessions.iter().copied().collect::<Vec<_>>());
+        if let Some(w) = self.wants.remove(&c) {
+            // Withdraw duplicate endgame asks.
+            let mut cancels: Vec<PeerId> = Vec::new();
+            for p in w.inflight.keys() {
+                if *p != from {
+                    cancels.push(*p);
+                    if let Some(ps) = self.peers.get_mut(p) {
+                        ps.outstanding.remove(&c);
                     }
                 }
-                None
-            })
-            .flatten()
-            .collect();
-        for sid in affected {
-            if let Some(s) = self.sessions.get_mut(&sid) {
-                s.providers.retain(|p| *p != peer);
             }
-            self.dispatch_wants(ctx, sid);
+            for p in cancels {
+                self.send_cancel(ctx, &p, vec![c]);
+            }
+            let sids: Vec<u64> = w.sessions.iter().copied().collect();
+            for sid in sids {
+                let complete = {
+                    let Some(s) = self.sessions.get_mut(&sid) else { continue };
+                    s.wanted.remove(&c);
+                    s.bytes_fetched += size as u64;
+                    s.stalled_reported = false;
+                    s.wanted.is_empty()
+                };
+                if complete {
+                    self.sessions.remove(&sid);
+                    self.events
+                        .push_back(BitswapEvent::SessionComplete { session: sid });
+                } else {
+                    self.dispatch(ctx, sid);
+                }
+            }
+        }
+        // Mid-download re-serving: push a HAVE to every peer whose
+        // interest in this chunk we remembered while we lacked it.
+        if let Some(interested) = self.interest.remove(&c) {
+            for (p, (conn, stream)) in interested {
+                if p == from {
+                    continue;
+                }
+                let msg = BitswapMsg {
+                    kind: M_HAVE,
+                    cids: vec![c],
+                    block: Buf::new(),
+                };
+                if encode_pooled(&msg, |b| ctx.send(conn, stream, b)).is_ok() {
+                    self.stats.have_pushes += 1;
+                }
+            }
         }
     }
 
-    pub fn active_sessions(&self) -> usize {
-        self.sessions.len()
+    /// Node hook: periodic tick — drain the optimistic-unchoke drip,
+    /// expire timed-out requests (halving the slow peer's window), retry
+    /// subscriptions blocked on dials, and redispatch every session.
+    pub fn tick(&mut self, ctx: &mut Ctx, store: &Blockstore) {
+        let now = ctx.now();
+        // Optimistic unchoke: serve a bounded number of parked WANTs so a
+        // chunk only the choking seeder holds still spreads.
+        let mut served = 0;
+        while served < UNCHOKE_PER_TICK {
+            let Some((p, c)) = self.choked.pop_front() else { break };
+            if !self.choked_set.remove(&(p, c)) {
+                continue; // canceled while parked
+            }
+            let Some(&(conn, stream)) = self.streams.get(&p) else { continue };
+            let Some(block) = store.get(&c) else { continue };
+            self.serve_block(ctx, p, conn, stream, c, block);
+            self.stats.choked_served += 1;
+            served += 1;
+        }
+        let mut expired: Vec<(Cid, PeerId)> = Vec::new();
+        for (c, w) in &self.wants {
+            for (p, deadline) in &w.inflight {
+                if *deadline <= now {
+                    expired.push((*c, *p));
+                }
+            }
+        }
+        let mut cancels: BTreeMap<PeerId, Vec<Cid>> = BTreeMap::new();
+        // Multiplicative decrease once per (peer, episode): a stall that
+        // expires a whole window must not collapse it 32→1 in one tick
+        // (same once-per-round rule as transport/cc.rs).
+        let mut punished: BTreeSet<PeerId> = BTreeSet::new();
+        for (c, p) in expired {
+            if let Some(w) = self.wants.get_mut(&c) {
+                w.inflight.remove(&p);
+                w.tried.insert(p);
+            }
+            self.stats.want_timeouts += 1;
+            if let Some(ps) = self.peers.get_mut(&p) {
+                ps.outstanding.remove(&c);
+                if punished.insert(p) {
+                    ps.window = (ps.window / 2).max(MIN_WINDOW);
+                    ps.timeouts += 1;
+                }
+            }
+            // Tell the slow peer we've moved on (it may answer anyway;
+            // the duplicate guard in M_BLOCK swallows that).
+            cancels.entry(p).or_default().push(c);
+        }
+        for (p, cids) in cancels {
+            self.send_cancel(ctx, &p, cids);
+        }
+        let sids: Vec<u64> = self.sessions.keys().copied().collect();
+        for sid in sids {
+            self.connect_and_subscribe(ctx, sid);
+            self.dispatch(ctx, sid);
+        }
+    }
+
+    /// Node hook: a connection came up — subscribe any sessions that were
+    /// waiting on a dial to this provider.
+    pub fn on_peer_connected(&mut self, ctx: &mut Ctx, peer: PeerId) {
+        let sids: Vec<u64> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| s.providers.contains(&peer) && !s.subscribed.contains(&peer))
+            .map(|(id, _)| *id)
+            .collect();
+        for sid in sids {
+            self.connect_and_subscribe(ctx, sid);
+            self.dispatch(ctx, sid);
+        }
+    }
+
+    /// Node hook: peer disconnected — drop its stream and fail over.
+    pub fn on_peer_disconnected(&mut self, ctx: &mut Ctx, peer: PeerId) {
+        self.streams.remove(&peer);
+        self.drop_peer(ctx, peer);
+    }
+
+    /// Node hook: a dial to `peer` failed (or it has no usable address) —
+    /// stop treating it as a holder and fail over to other providers.
+    pub fn on_peer_unreachable(&mut self, ctx: &mut Ctx, peer: PeerId) {
+        self.drop_peer(ctx, peer);
+    }
+
+    fn drop_peer(&mut self, ctx: &mut Ctx, peer: PeerId) {
+        self.peers.remove(&peer);
+        self.dialing.remove(&peer);
+        self.choked_set.retain(|(p, _)| *p != peer);
+        for int in self.interest.values_mut() {
+            int.remove(&peer);
+        }
+        self.interest.retain(|_, m| !m.is_empty());
+        let mut affected: BTreeSet<u64> = BTreeSet::new();
+        for w in self.wants.values_mut() {
+            let touched = w.haves.remove(&peer)
+                | w.lacks.remove(&peer)
+                | w.tried.remove(&peer)
+                | w.inflight.remove(&peer).is_some();
+            if touched {
+                affected.extend(w.sessions.iter().copied());
+            }
+        }
+        affected.extend(
+            self.sessions
+                .iter()
+                .filter(|(_, s)| s.providers.contains(&peer))
+                .map(|(id, _)| *id),
+        );
+        for sid in affected {
+            if let Some(s) = self.sessions.get_mut(&sid) {
+                s.providers.remove(&peer);
+                s.subscribed.remove(&peer);
+            }
+            self.dispatch(ctx, sid);
+        }
     }
 }
 
@@ -436,6 +1045,12 @@ mod tests {
             kind: M_BLOCK,
             cids: vec![Cid::of(b"xyz")],
             block: b"xyz".into(),
+        };
+        assert_eq!(BitswapMsg::decode(&m.encode()).unwrap(), m);
+        let m = BitswapMsg {
+            kind: M_WANT_HAVE,
+            cids: vec![Cid::of(b"q"), Cid::of(b"r"), Cid::of(b"s")],
+            block: Buf::new(),
         };
         assert_eq!(BitswapMsg::decode(&m.encode()).unwrap(), m);
     }
@@ -460,5 +1075,25 @@ mod tests {
         l.bytes_sent = 100;
         l.bytes_received = 50;
         assert!(l.debt_ratio() > 1.9 && l.debt_ratio() < 2.1);
+    }
+
+    #[test]
+    fn tiebreak_hash_is_node_diverse() {
+        // Two different local peers must not rank chunks identically —
+        // otherwise every fetcher in a swarm starts on the same chunk.
+        let cids: Vec<Cid> = (0..32u8).map(|i| Cid::of(&[i])).collect();
+        let order = |seed: u64| {
+            let mut v: Vec<(u64, usize)> = cids
+                .iter()
+                .enumerate()
+                .map(|(i, c)| (mix(&[seed, id64(c.as_bytes())]), i))
+                .collect();
+            v.sort_unstable();
+            v.into_iter().map(|(_, i)| i).collect::<Vec<_>>()
+        };
+        let a = order(1);
+        let b = order(2);
+        assert_ne!(a, b);
+        assert_eq!(a, order(1), "stable within one node");
     }
 }

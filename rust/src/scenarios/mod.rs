@@ -545,6 +545,257 @@ pub fn churn_scenario(
     run_churn_lookups(&mut mesh, &mut plan, PUBLISHERS, SECOND, duration, seed)
 }
 
+// ---------------------------------------------------------------------------
+// Model-synchronization scenarios (Fig. 1(3))
+// ---------------------------------------------------------------------------
+
+/// How replicas obtain checkpoints.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncMode {
+    /// Parameter-server baseline: every replica pulls everything from the
+    /// trainer; no DHT discovery, no re-seeding.
+    Central,
+    /// Swarm: replicas announce themselves as seeders mid-download and
+    /// discover each other via `kad::get_providers`.
+    Swarm,
+}
+
+/// Configuration for [`model_sync_scenario`].
+#[derive(Clone, Copy, Debug)]
+pub struct ModelSyncConfig {
+    /// Inference replicas (the mesh is `replicas + 1` nodes with the
+    /// trainer).
+    pub replicas: usize,
+    pub checkpoints: usize,
+    pub blob_bytes: usize,
+    /// Fraction of the blob rewritten in place between versions, applied
+    /// as two contiguous bands (localized layer updates — the realistic
+    /// checkpoint-churn shape).
+    pub churn: f64,
+    pub mode: SyncMode,
+    /// Keep the previous version's chunks as a reuse cache (delta sync).
+    /// Off = replicas flush old blocks first, modelling a system that
+    /// ships whole checkpoints.
+    pub delta: bool,
+    /// Mix NATted replicas into the mesh (2/5 public, 3/5 behind cone /
+    /// port-restricted / symmetric NATs, round-robin).
+    pub nat_mixed: bool,
+    pub seed: u64,
+    /// Per-version sync deadline (virtual seconds).
+    pub timeout_secs: u64,
+}
+
+/// Outcome of a model-distribution run.
+pub struct ModelSyncOutcome {
+    pub stats: crate::metrics::SyncStats,
+    /// Every replica assembled a byte-identical blob for every version.
+    pub all_identical: bool,
+    /// All versions reached all replicas within the deadline.
+    pub completed: bool,
+    /// `DeltaManifest::added_bytes` announced for each version ≥ 2.
+    pub delta_bytes_announced: Vec<u64>,
+    /// Duplicate blocks dropped by replicas (late answers, endgame).
+    pub duplicate_blocks: u64,
+    /// Bytes served by replica nodes (the re-seeding evidence).
+    pub replica_bytes_served: u64,
+}
+
+/// Build the mesh, publish `checkpoints` versions of a churned blob from
+/// the trainer, and drive every replica's `sync_blob` until each version
+/// replicates. Fully deterministic in the config.
+pub fn model_sync_scenario(cfg: &ModelSyncConfig) -> ModelSyncOutcome {
+    use crate::content::{Blockstore, DagManifest, DeltaManifest};
+    use crate::model::{model_topic, CheckpointPublisher};
+    use crate::wire::Message;
+
+    let mut t = TopologyBuilder::paper_regions();
+    // The trainer sits behind a constrained egress (one training site
+    // serving a fleet — the inter-site-bandwidth bottleneck this whole
+    // subsystem exists for); replicas are well-connected edge sites.
+    let trainer_host = t.public_host(0, LinkProfile::BROADBAND);
+    let replica_hosts: Vec<u32> = (0..cfg.replicas)
+        .map(|i| {
+            let region = i % 3;
+            if !cfg.nat_mixed || i % 5 < 2 {
+                t.public_host(region, LinkProfile::FIBER)
+            } else {
+                let nat_type = match i % 5 {
+                    2 => NatType::FullCone,
+                    3 => NatType::PortRestrictedCone,
+                    _ => NatType::Symmetric,
+                };
+                let nat = t.nat(region, nat_type, LinkProfile::FIBER);
+                t.natted_host(nat, LinkProfile::UNLIMITED)
+            }
+        })
+        .collect();
+    let mut world = World::new(t.build(cfg.seed));
+    let trainer = LatticaNode::spawn(&mut world, trainer_host, {
+        let mut c = NodeConfig::with_seed(cfg.seed * 1000);
+        c.label = "trainer".into();
+        c
+    });
+    let replicas: Vec<Node> = replica_hosts
+        .iter()
+        .enumerate()
+        .map(|(i, &h)| {
+            LatticaNode::spawn(&mut world, h, {
+                let mut c = NodeConfig::with_seed(cfg.seed * 1000 + 1 + i as u64);
+                c.swarm_sync = cfg.mode == SyncMode::Swarm;
+                c.label = format!("replica-{i}");
+                c
+            })
+        })
+        .collect();
+    let trainer_peer = trainer.borrow().peer_id();
+    if cfg.mode == SyncMode::Swarm {
+        // Seeder upload policy: the swarm reciprocates, so the publisher
+        // chokes deeply-indebted leechers — its egress stays ~O(1) in the
+        // replica count instead of scaling with demand.
+        trainer.borrow_mut().bitswap.serve_choking = true;
+    }
+    let entry = crate::protocols::kad::PeerEntry {
+        id: trainer_peer,
+        host: trainer_host,
+        port: 4001,
+    };
+    for r in &replicas {
+        r.borrow_mut().bootstrap(&mut world.net, entry.clone());
+    }
+    world.run_for(3 * SECOND);
+    let topic = model_topic("policy");
+    for nd in std::iter::once(&trainer).chain(replicas.iter()) {
+        let mut n = nd.borrow_mut();
+        let LatticaNode { swarm, gossip, .. } = &mut *n;
+        let mut ctx = Ctx::new(swarm, &mut world.net);
+        gossip.subscribe(&mut ctx, &topic);
+    }
+    world.run_for(SECOND);
+
+    let trainer_egress = |trainer: &Node| -> u64 {
+        trainer
+            .borrow()
+            .bitswap
+            .ledgers
+            .values()
+            .map(|l| l.bytes_sent)
+            .sum()
+    };
+    let replica_ingress = |r: &Node| -> u64 {
+        r.borrow()
+            .bitswap
+            .ledgers
+            .values()
+            .map(|l| l.bytes_received)
+            .sum()
+    };
+
+    let mut publisher = CheckpointPublisher::new("policy");
+    let mut rng = crate::util::Rng::new(cfg.seed ^ 0xB10B);
+    let mut blob = rng.gen_bytes(cfg.blob_bytes);
+    let mut stats = crate::metrics::SyncStats {
+        replicas: cfg.replicas as u64,
+        blob_bytes: cfg.blob_bytes as u64,
+        ..Default::default()
+    };
+    let mut all_identical = true;
+    let mut completed = true;
+    let mut delta_bytes_announced = Vec::new();
+
+    for v in 1..=cfg.checkpoints {
+        if v > 1 {
+            // In-place churn: two contiguous bands totalling cfg.churn.
+            let band = ((cfg.blob_bytes as f64 * cfg.churn) / 2.0) as usize;
+            if band > 0 && band < cfg.blob_bytes {
+                for _ in 0..2 {
+                    let start = rng.gen_index(cfg.blob_bytes - band);
+                    let patch = rng.gen_bytes(band);
+                    blob[start..start + band].copy_from_slice(&patch);
+                }
+            }
+            if !cfg.delta {
+                // Full-sync baseline: no chunk reuse across versions.
+                for r in &replicas {
+                    r.borrow_mut().blockstore = Blockstore::new();
+                }
+            }
+        }
+        let egress_before = trainer_egress(&trainer);
+        let ingress_before: Vec<u64> = replicas.iter().map(replica_ingress).collect();
+        let (root, ann) = {
+            let mut tr = trainer.borrow_mut();
+            publisher.publish_blob(&mut tr, &mut world.net, v as u64, &blob)
+        };
+        if v > 1 {
+            let announced = ann
+                .delta
+                .and_then(|d| {
+                    let tr = trainer.borrow();
+                    let block = tr.blockstore.get(&d.delta_block)?;
+                    DeltaManifest::decode(&block).ok()
+                })
+                .map(|d| d.added_bytes)
+                .unwrap_or(cfg.blob_bytes as u64);
+            delta_bytes_announced.push(announced);
+        }
+        let t0 = world.net.now();
+        let deadline = t0 + cfg.timeout_secs * SECOND;
+        let mut done: Vec<bool> = vec![false; cfg.replicas];
+        while world.net.now() < deadline && done.iter().any(|d| !d) {
+            world.run_for(50 * MILLI);
+            for (i, r) in replicas.iter().enumerate() {
+                if done[i] {
+                    continue;
+                }
+                let mut n = r.borrow_mut();
+                n.drain_events();
+                if n.sync_blob(&mut world.net, root, &[trainer_peer]) {
+                    done[i] = true;
+                    stats.latency.record(world.net.now() - t0);
+                }
+            }
+            trainer.borrow_mut().drain_events();
+        }
+        if done.iter().any(|d| !d) {
+            completed = false;
+        }
+        for r in &replicas {
+            let n = r.borrow();
+            let ok = DagManifest::load(&n.blockstore, &root)
+                .and_then(|m| m.assemble(&n.blockstore))
+                .map(|b| b == blob)
+                .unwrap_or(false);
+            all_identical &= ok;
+        }
+        // Let endgame stragglers and announces settle, THEN measure, so
+        // every byte of this version's traffic is attributed to it.
+        world.run_for(SECOND);
+        let egress_v = trainer_egress(&trainer) - egress_before;
+        let fetched_v: u64 = replicas
+            .iter()
+            .zip(&ingress_before)
+            .map(|(r, &before)| replica_ingress(r) - before)
+            .sum();
+        stats.record_version(egress_v, fetched_v);
+    }
+    let duplicate_blocks = replicas
+        .iter()
+        .map(|r| r.borrow().bitswap.stats.duplicate_blocks)
+        .sum();
+    let replica_bytes_served = replicas
+        .iter()
+        .map(|r| r.borrow().bitswap.stats.bytes_served)
+        .sum();
+    ModelSyncOutcome {
+        stats,
+        all_identical,
+        completed,
+        delta_bytes_announced,
+        duplicate_blocks,
+        replica_bytes_served,
+    }
+}
+
 /// Drain a node's events, returning them.
 pub fn drain(node: &Node) -> Vec<NodeEvent> {
     node.borrow_mut().drain_events()

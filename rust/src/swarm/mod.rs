@@ -274,6 +274,18 @@ impl Swarm {
         !self.conns_to(peer).is_empty()
     }
 
+    /// Peers with at least one established connection, in stable order.
+    pub fn connected_peers(&self) -> Vec<PeerId> {
+        let mut v: Vec<PeerId> = self
+            .peer_conns
+            .keys()
+            .filter(|p| self.is_connected(p))
+            .copied()
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
     pub fn connection_path(&self, cid: u64) -> Option<Path> {
         self.conns.get(&cid).map(|c| c.path)
     }

@@ -20,6 +20,14 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// One-shot splitmix64 step: a cheap, well-mixed pure hash of a u64
+/// (used for deterministic tie-breaking, e.g. the Bitswap scheduler).
+#[inline]
+pub(crate) fn mix64(x: u64) -> u64 {
+    let mut state = x;
+    splitmix64(&mut state)
+}
+
 impl Rng {
     /// Create a generator from a 64-bit seed.
     pub fn new(seed: u64) -> Self {

@@ -6,8 +6,10 @@
 //! A peak-tracking global allocator bounds transient memory during decode
 //! of hostile buffers (the "never over-allocate" half of the contract).
 
+use lattica::content::{Cid, DagManifest, DeltaManifest};
 use lattica::crdt::CrdtStore;
 use lattica::identity::Keypair;
+use lattica::protocols::bitswap::BitswapMsg;
 use lattica::protocols::kad::{KadMsg, PeerEntry};
 use lattica::util::buf::Buf;
 use lattica::util::varint;
@@ -72,11 +74,43 @@ fn kad_corpus() -> Vec<Vec<u8>> {
     store.gcounter("steps").increment(1, 5);
     store.orset("members").add(2, b"alice");
     store.lww("leader").set(b"n7".to_vec(), 9, 1);
+    let manifest = DagManifest {
+        name: "model/ckpt-7".into(),
+        version: 7,
+        total_size: 96_000,
+        chunks: (0..6u8).map(|i| Cid::of(&[i])).collect(),
+    };
+    let delta = DeltaManifest {
+        name: "model/ckpt-8".into(),
+        version: 8,
+        base_version: 7,
+        base_root: Cid::of(b"base"),
+        root: Cid::of(b"next"),
+        total_size: 96_000,
+        added: (0..3u8).map(|i| Cid::of(&[0x40 | i])).collect(),
+        added_bytes: 48_000,
+    };
+    let want = BitswapMsg {
+        kind: 6, // WANT_HAVE
+        cids: (0..4u8).map(|i| Cid::of(&[0x80 | i])).collect(),
+        block: Buf::new(),
+    };
+    let block = BitswapMsg {
+        kind: 2, // BLOCK
+        cids: vec![Cid::of(b"payload")],
+        block: vec![0xAB; 400].into(),
+    };
     vec![
         full.encode(),
         small.encode(),
         KadMsg::default().encode(),
         store.encode(),
+        manifest.encode(),
+        DagManifest::default().encode(),
+        delta.encode(),
+        want.encode(),
+        block.encode(),
+        BitswapMsg::default().encode(),
     ]
 }
 
@@ -85,6 +119,11 @@ fn decode_everything(buf: &[u8]) {
     let _ = KadMsg::decode(buf);
     let _ = KadMsg::decode_buf(&Buf::from_vec(buf.to_vec()));
     let _ = CrdtStore::decode(buf);
+    let _ = DagManifest::decode(buf);
+    let _ = DeltaManifest::decode(buf);
+    let _ = BitswapMsg::decode(buf);
+    let _ = BitswapMsg::decode_buf(&Buf::from_vec(buf.to_vec()));
+    let _ = lattica::model::ModelAnnouncement::decode(buf);
     // The raw field reader must also survive anything.
     let mut r = PbReader::new(buf);
     while let Ok(Some(f)) = r.next_field() {
@@ -163,6 +202,9 @@ fn oversized_length_prefix_errors_without_allocating() {
         let before = PEAK.load(Ordering::Relaxed);
         assert!(KadMsg::decode(hostile).is_err());
         assert!(CrdtStore::decode(hostile).is_err());
+        assert!(DagManifest::decode(hostile).is_err());
+        assert!(DeltaManifest::decode(hostile).is_err());
+        assert!(BitswapMsg::decode(hostile).is_err());
         let mut r = PbReader::new(hostile);
         loop {
             match r.next_field() {
@@ -197,6 +239,17 @@ fn corpus_roundtrips_stay_valid() {
     assert_eq!(KadMsg::decode(&full.encode()).unwrap(), full);
     let buf = Buf::from_vec(full.encode());
     assert_eq!(KadMsg::decode_buf(&buf).unwrap(), full);
+    // The new corpus members roundtrip too (so their fuzz arms exercise
+    // real decode paths).
+    for base in kad_corpus().into_iter().skip(4) {
+        if base.is_empty() {
+            continue;
+        }
+        let ok = DagManifest::decode(&base).is_ok()
+            || DeltaManifest::decode(&base).is_ok()
+            || BitswapMsg::decode(&base).is_ok();
+        assert!(ok, "corpus entry decodes under none of its codecs");
+    }
     // Nested hostile bytes inside a *valid* outer frame: a PeerEntry field
     // with a wrong-size id must error, not panic.
     let mut w = PbWriter::new();

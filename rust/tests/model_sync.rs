@@ -1,0 +1,257 @@
+//! Swarm model-distribution suite: delta checkpoints, rarest-first
+//! multi-peer fetch, duplicate-suppression accounting, and the seeded
+//! 30-node NAT-mixed end-to-end scenario from the acceptance criteria.
+//!
+//! Everything here is seeded and deterministic; the heavyweight 30-node
+//! scenario is ignored under debug builds and runs in CI's release pass
+//! (the same gating as `dht_churn`'s 200-node scenario).
+
+use lattica::content::{Chunking, DagManifest};
+use lattica::netsim::link::PathProfile;
+use lattica::netsim::topology::{LinkProfile, TopologyBuilder};
+use lattica::netsim::{World, MILLI, SECOND};
+use lattica::node::{run_until, LatticaNode, NodeConfig};
+use lattica::protocols::Ctx;
+use lattica::scenarios::{model_sync_scenario, ModelSyncConfig, SyncMode};
+use lattica::util::Rng;
+use lattica::wire::Message;
+
+// ---------------------------------------------------------------------------
+// Re-stripe accounting: a slow (not dead) provider answering after the
+// WANT_TIMEOUT re-stripe must not double-count bytes in the ledger or
+// cause a second blockstore write.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn slow_provider_after_restripe_does_not_double_count() {
+    // F (region 0) fetches; S (region 1) is slow-but-alive: 700 ms one-way,
+    // so its BLOCK answers land well after the 1 s want timeout; Q
+    // (region 2) is fast.
+    let mut t = TopologyBuilder::new(3);
+    t.path(0, 1, PathProfile::new(700 * MILLI, 0, 0.0));
+    t.path(0, 2, PathProfile::new(5 * MILLI, 0, 0.0));
+    t.path(1, 2, PathProfile::new(5 * MILLI, 0, 0.0));
+    let hf = t.public_host(0, LinkProfile::FIBER);
+    let hs = t.public_host(1, LinkProfile::FIBER);
+    let hq = t.public_host(2, LinkProfile::FIBER);
+    let mut world = World::new(t.build(71));
+    let f = LatticaNode::spawn(&mut world, hf, NodeConfig::with_seed(711));
+    let s = LatticaNode::spawn(&mut world, hs, NodeConfig::with_seed(712));
+    let q = LatticaNode::spawn(&mut world, hq, NodeConfig::with_seed(713));
+
+    // Both providers hold the identical artifact (same root).
+    let mut rng = Rng::new(72);
+    let data = rng.gen_bytes(256 * 1024);
+    let root_s = s
+        .borrow_mut()
+        .publish_blob(&mut world.net, "ckpt", 1, &data, 16 * 1024);
+    let root_q = q
+        .borrow_mut()
+        .publish_blob(&mut world.net, "ckpt", 1, &data, 16 * 1024);
+    assert_eq!(root_s, root_q, "same artifact must share one root");
+    let root = root_s;
+
+    // Pre-connect (the slow path needs a few RTTs to handshake) and seed
+    // the manifest locally so the test isolates the chunk scheduler.
+    let s_ma = s.borrow().listen_addr();
+    let q_ma = q.borrow().listen_addr();
+    f.borrow_mut().dial(&mut world.net, &s_ma).unwrap();
+    f.borrow_mut().dial(&mut world.net, &q_ma).unwrap();
+    let s_peer = s.borrow().peer_id();
+    let q_peer = q.borrow().peer_id();
+    let connected = run_until(&mut world, 20 * SECOND, || {
+        let n = f.borrow();
+        n.swarm.is_connected(&s_peer) && n.swarm.is_connected(&q_peer)
+    });
+    assert!(connected, "handshakes failed");
+    let manifest = DagManifest::load(&s.borrow().blockstore, &root).unwrap();
+    f.borrow_mut().blockstore.put(manifest.encode());
+
+    // Fetch with the slow provider only; the fast one joins mid-session.
+    let sid = f
+        .borrow_mut()
+        .fetch_manifest_chunks(&mut world.net, &root, vec![s_peer])
+        .unwrap();
+    world.run_for(300 * MILLI);
+    {
+        let mut n = f.borrow_mut();
+        let LatticaNode { swarm, bitswap, .. } = &mut *n;
+        let mut ctx = Ctx::new(swarm, &mut world.net);
+        bitswap.add_providers(&mut ctx, sid, vec![q_peer]);
+    }
+    let ok = run_until(&mut world, 30 * SECOND, || {
+        let n = f.borrow();
+        DagManifest::load(&n.blockstore, &root)
+            .map(|m| m.is_complete(&n.blockstore))
+            .unwrap_or(false)
+    });
+    assert!(ok, "fetch did not complete");
+    // Let S's stale answers trickle in past the re-stripe.
+    world.run_for(3 * SECOND);
+
+    let n = f.borrow();
+    let m = DagManifest::load(&n.blockstore, &root).unwrap();
+    assert_eq!(m.assemble(&n.blockstore).unwrap(), data, "bytes diverged");
+    // Exact ledger accounting: every chunk credited once, late duplicates
+    // not credited at all.
+    let received: u64 = n.bitswap.ledgers.values().map(|l| l.bytes_received).sum();
+    assert_eq!(
+        received,
+        data.len() as u64,
+        "ledger must credit each block exactly once"
+    );
+    assert!(
+        n.bitswap.stats.duplicate_blocks >= 1,
+        "the slow provider's late answer must surface as a duplicate"
+    );
+    assert_eq!(
+        n.blockstore.stats.duplicate_puts, 0,
+        "a late duplicate must not reach the blockstore"
+    );
+    // Local manifest put + one store per chunk, nothing else.
+    assert_eq!(
+        n.blockstore.stats.stores,
+        1 + m.chunks.len() as u64,
+        "every block written exactly once"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Small always-on swarm scenario (debug-friendly)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn swarm_delta_sync_small_mesh() {
+    let mut out = model_sync_scenario(&ModelSyncConfig {
+        replicas: 6,
+        checkpoints: 2,
+        blob_bytes: 512 * 1024,
+        churn: 0.10,
+        mode: SyncMode::Swarm,
+        delta: true,
+        nat_mixed: false,
+        seed: 81,
+        timeout_secs: 120,
+    });
+    assert!(out.completed, "small swarm sync timed out");
+    assert!(out.all_identical, "replicas must assemble identical blobs");
+    assert!(
+        out.replica_bytes_served > 0,
+        "replicas must re-serve chunks (seeder promotion)"
+    );
+    // v2 rides the delta: well under half of full demand moves.
+    assert!(
+        out.stats.fetched_fraction(1) < 0.5,
+        "delta fetch moved {:.0}% of full demand",
+        out.stats.fetched_fraction(1) * 100.0
+    );
+    assert_eq!(out.delta_bytes_announced.len(), 1);
+    assert!(
+        out.delta_bytes_announced[0] < 512 * 1024 / 2,
+        "announced delta must be a fraction of the blob"
+    );
+    assert!(!out.stats.summary().is_empty());
+}
+
+/// Determinism: the scenario is a pure function of its config.
+#[test]
+fn model_sync_scenario_is_deterministic() {
+    let cfg = ModelSyncConfig {
+        replicas: 4,
+        checkpoints: 2,
+        blob_bytes: 256 * 1024,
+        churn: 0.10,
+        mode: SyncMode::Swarm,
+        delta: true,
+        nat_mixed: false,
+        seed: 91,
+        timeout_secs: 120,
+    };
+    let a = model_sync_scenario(&cfg);
+    let b = model_sync_scenario(&cfg);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.all_identical, b.all_identical);
+    assert_eq!(a.delta_bytes_announced, b.delta_bytes_announced);
+    assert_eq!(
+        a.stats.fetched_per_version, b.stats.fetched_per_version,
+        "same config must move the same bytes"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// The acceptance scenario: 30-node NAT-mixed mesh, 3 checkpoint versions
+// with ~10% parameter churn. Heavy — ignored in debug builds, exercised
+// by CI's release run.
+// ---------------------------------------------------------------------------
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-mode scenario; run via CI or --include-ignored")]
+fn swarm_distribution_30_nodes_nat_mixed() {
+    let blob_bytes = 2 * 1024 * 1024;
+    let mut out = model_sync_scenario(&ModelSyncConfig {
+        replicas: 29,
+        checkpoints: 3,
+        blob_bytes,
+        churn: 0.10,
+        mode: SyncMode::Swarm,
+        delta: true,
+        nat_mixed: true,
+        seed: 101,
+        timeout_secs: 180,
+    });
+    assert!(out.completed, "30-node sync timed out");
+    assert!(
+        out.all_identical,
+        "every replica must assemble byte-identical blobs"
+    );
+    // Delta versions (v2, v3) move <25% of the full-blob demand.
+    for v in [1usize, 2] {
+        let frac = out.stats.fetched_fraction(v);
+        assert!(
+            frac < 0.25,
+            "delta fetch for v{} moved {:.0}% of full demand ({})",
+            v + 1,
+            frac * 100.0,
+            out.stats.summary()
+        );
+    }
+    // Trainer egress stays under 2x the blob per checkpoint: the swarm
+    // (every replica a seeder) carries the fan-out, not the publisher.
+    let egress_per_version = out.stats.egress_per_version.clone();
+    for (v, &egress) in egress_per_version.iter().enumerate() {
+        assert!(
+            egress < 2 * blob_bytes as u64,
+            "trainer egress for v{} is {} (>= 2x blob; {})",
+            v + 1,
+            egress,
+            out.stats.summary()
+        );
+    }
+    assert!(
+        out.replica_bytes_served > out.stats.mean_egress() as u64,
+        "replicas must out-serve the trainer"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Chunking interop: fixed and CDC publishes of the same data coexist.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fixed_and_cdc_roots_differ_but_both_fetch() {
+    let mut store = lattica::content::Blockstore::new();
+    let mut rng = Rng::new(111);
+    let data = rng.gen_bytes(200_000);
+    let (root_fixed, mf) =
+        DagManifest::publish_chunked(&mut store, "a", 1, &data, Chunking::Fixed(32 * 1024));
+    let (root_cdc, mc) = DagManifest::publish_chunked(
+        &mut store,
+        "a",
+        1,
+        &data,
+        Chunking::Cdc(lattica::content::CDC_CHECKPOINT),
+    );
+    assert_ne!(root_fixed, root_cdc);
+    assert_eq!(mf.assemble(&store).unwrap(), data);
+    assert_eq!(mc.assemble(&store).unwrap(), data);
+}
