@@ -15,7 +15,8 @@
 //!
 //! Results are recorded in EXPERIMENTS.md.
 
-use lattica::model::{load_checkpoint, publish_checkpoint, ModelAnnouncement};
+use lattica::content::{Chunking, DEFAULT_CHUNK_SIZE};
+use lattica::model::{load_checkpoint, CheckpointPublisher, ModelAnnouncement, MODEL_SERVICE};
 use lattica::multiaddr::Multiaddr;
 use lattica::netsim::nat::NatType;
 use lattica::netsim::topology::{LinkProfile, TopologyBuilder};
@@ -23,8 +24,9 @@ use lattica::netsim::{World, SECOND};
 use lattica::node::{run_until, LatticaNode, NodeConfig, NodeEvent};
 use lattica::protocols::gossip::GossipEvent;
 use lattica::protocols::Ctx;
-use lattica::rpc::RpcEvent;
+use lattica::rpc::{CallOptions, RetryPolicy, Status, Stub};
 use lattica::runtime::Engine;
+use lattica::scenarios::stub_call_blocking;
 use lattica::shard::{ShardRequest, ShardServer, SHARD_SERVICE};
 use lattica::trainer::Trainer;
 use lattica::util::cli::Args;
@@ -102,18 +104,35 @@ fn main() -> anyhow::Result<()> {
     }
     world.run_for(2 * SECOND);
 
-    // ---- Install shard servers (full model per cluster) with init params.
+    // ---- Install shard servers (full model per cluster) with init
+    // params: each cluster registers the `shard` service; the shared
+    // handle hot-swaps parameters in place when a checkpoint syncs.
     let init_params = engine.borrow().manifest.load_init_params()?;
+    let mut shard_handles = Vec::new();
     for n in clusters.iter() {
-        let server = ShardServer::new(
+        let (svc, handle) = ShardServer::new(
             engine.clone(),
             (0, cfg.n_layer),
             true,
             true,
             init_params.clone(),
-        );
-        n.borrow_mut().app = Some(Box::new(server));
+        )
+        .into_service();
+        n.borrow_mut().register_service(svc);
+        shard_handles.push(handle);
     }
+
+    // ---- Model-sync control plane: the trainer holds a long-lived
+    // publisher and serves `model.latest` as a registered service, so
+    // any node can pull the newest checkpoint pointer without waiting
+    // for gossip.
+    let publisher = Rc::new(RefCell::new(CheckpointPublisher::with_chunking(
+        "policy",
+        Chunking::Fixed(DEFAULT_CHUNK_SIZE),
+    )));
+    trainer_node
+        .borrow_mut()
+        .register_service(CheckpointPublisher::service(publisher.clone()));
 
     // ---- Edge client connects to cluster A via circuit + DCUtR upgrade.
     let a_peer = clusters[0].borrow().peer_id();
@@ -144,13 +163,13 @@ fn main() -> anyhow::Result<()> {
         if step % ckpt_every == 0 || step == steps {
             version += 1;
             let t0 = world.net.now();
-            let root = publish_checkpoint(
-                &mut trainer_node.borrow_mut(),
-                &mut world.net,
-                "policy",
-                version,
-                &trainer.params,
-            );
+            let root = {
+                let mut tn = trainer_node.borrow_mut();
+                publisher
+                    .borrow_mut()
+                    .publish_params(&mut tn, &mut world.net, version, &trainer.params)
+                    .0
+            };
             println!("      ↳ published ckpt v{version} ({root})");
             // Clusters: hear announcement → fetch → hot-swap.
             let trainer_peer = trainer_node.borrow().peer_id();
@@ -193,18 +212,10 @@ fn main() -> anyhow::Result<()> {
                                 let n = c.borrow();
                                 load_checkpoint(&n, &engine.borrow().manifest, &root).unwrap()
                             };
-                            let mut n = c.borrow_mut();
-                            if let Some(app) = n.app.as_mut() {
-                                // Downcast via re-box: replace with fresh ShardServer.
-                                let _ = app;
-                            }
-                            n.app = Some(Box::new(ShardServer::new(
-                                engine.clone(),
-                                (0, cfg.n_layer),
-                                true,
-                                true,
-                                params,
-                            )));
+                            // Hot-swap through the service handle: the
+                            // registered `shard` service keeps serving,
+                            // now with the new weights.
+                            shard_handles[i].borrow_mut().swap_params(params);
                             synced[i] = true;
                         } else {
                             let _ = c
@@ -221,32 +232,57 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    // ---- Serve inference from the edge client against cluster A.
+    // ---- Serve inference from the edge client against cluster A,
+    // through a retrying stub (the NAT-traversed path makes `Unavailable`
+    // blips survivable instead of fatal).
     let tokens: Vec<i32> = (0..cfg.seq_len as i32).map(|i| (7 + 2 * i) % cfg.vocab as i32).collect();
     let n_queries = 10;
     let mut latencies = Vec::new();
+    let mut shard_stub = Stub::new(SHARD_SERVICE, vec![a_peer]).with_options(CallOptions {
+        deadline: 20 * SECOND,
+        retry: RetryPolicy::idempotent(),
+        ..CallOptions::default()
+    });
     for q in 0..n_queries {
         let req = ShardRequest { request_id: q, tokens: tokens.clone(), hidden: None };
         let t0 = world.net.now();
-        {
-            let mut e = edge.borrow_mut();
-            let LatticaNode { swarm, rpc, .. } = &mut *e;
-            let mut ctx = Ctx::new(swarm, &mut world.net);
-            rpc.call(&mut ctx, &a_peer, SHARD_SERVICE, "forward", &req.encode())?;
-        }
-        let mut got = None;
-        run_until(&mut world, 20 * SECOND, || {
-            for e in edge.borrow_mut().drain_events() {
-                if let NodeEvent::Rpc(RpcEvent::Response { payload, .. }) = e {
-                    got = Some(payload);
-                }
-            }
-            got.is_some()
-        });
-        let logits = lattica::runtime::Tensor::decode(&got.expect("inference response"))?;
+        let done = stub_call_blocking(
+            &mut world,
+            &edge,
+            &mut shard_stub,
+            "forward",
+            req.encode(),
+            20 * SECOND,
+        )
+        .expect("inference response");
+        anyhow::ensure!(
+            done.status == Status::Ok,
+            "inference failed: {:?} ({})",
+            done.status,
+            done.detail
+        );
+        let logits = lattica::runtime::Tensor::decode(&done.payload)?;
         assert_eq!(logits.shape, vec![1, cfg.vocab]);
         latencies.push((world.net.now() - t0) as f64 / 1e6);
     }
+
+    // ---- Pull path of the model-sync control plane: ask the trainer's
+    // registered `model` service for the latest announcement and check it
+    // matches the final published version.
+    let trainer_ma = trainer_node.borrow().listen_addr();
+    let trainer_peer = trainer_node.borrow().peer_id();
+    edge.borrow_mut().dial(&mut world.net, &trainer_ma)?;
+    run_until(&mut world, 5 * SECOND, || {
+        edge.borrow().swarm.is_connected(&trainer_peer)
+    });
+    let mut model_stub = Stub::new(MODEL_SERVICE, vec![trainer_peer]);
+    let done =
+        stub_call_blocking(&mut world, &edge, &mut model_stub, "latest", b"policy", 10 * SECOND)
+            .expect("model.latest response");
+    anyhow::ensure!(done.status == Status::Ok, "model.latest failed: {}", done.detail);
+    let latest = ModelAnnouncement::decode(&done.payload)?;
+    assert_eq!(latest.version, version, "control plane must serve the newest checkpoint");
+    println!("model.latest → v{} ({})", latest.version, latest.root);
     // The trained model should confidently predict the arithmetic sequence:
     // check the served logits argmax matches the next token.
     let first_loss = trainer.losses.first().copied().unwrap_or(f32::NAN);

@@ -7,9 +7,14 @@
 //! re-providing chunks to each other so the aggregator's uplink is not the
 //! bottleneck — robust even though no node is publicly reachable.
 //!
+//! Every camera also registers a `camera.latest_model` control service:
+//! the pull path for a camera whose gossip subscription lapsed, answered
+//! `Unavailable` until that replica holds the model, so a retrying stub
+//! with multiple camera targets fails over to whoever has it.
+//!
 //! Run: cargo run --release --example edge_intelligence
 
-use lattica::content::DagManifest;
+use lattica::content::{Cid, DagManifest};
 use lattica::multiaddr::Multiaddr;
 use lattica::netsim::nat::NatType;
 use lattica::netsim::topology::{LinkProfile, TopologyBuilder};
@@ -17,7 +22,11 @@ use lattica::netsim::{World, SECOND};
 use lattica::node::{LatticaNode, NodeConfig, NodeEvent};
 use lattica::protocols::gossip::GossipEvent;
 use lattica::protocols::Ctx;
+use lattica::rpc::{CallOptions, Outcome, RetryPolicy, Service, Status, Stub};
+use lattica::scenarios::stub_call_blocking;
 use lattica::util::timefmt;
+use std::cell::RefCell;
+use std::rc::Rc;
 
 fn main() -> anyhow::Result<()> {
     let n_cameras = 6usize;
@@ -91,6 +100,24 @@ fn main() -> anyhow::Result<()> {
         .sum();
     println!("mesh: {n_cameras} NATed cameras, {connected} directed peer links via relay circuits");
 
+    // Every camera serves the model pointer once it holds the model
+    // (`Unavailable` before that, so stub retries fail over elsewhere).
+    let model_cells: Vec<Rc<RefCell<Option<Cid>>>> = cams
+        .iter()
+        .map(|c| {
+            let cell: Rc<RefCell<Option<Cid>>> = Rc::new(RefCell::new(None));
+            let served = cell.clone();
+            c.borrow_mut().register_service(Service::new("camera").unary(
+                "latest_model",
+                move |_node, _net, _ctx, _payload| match *served.borrow() {
+                    Some(root) => Outcome::reply(root.as_bytes().to_vec()),
+                    None => Outcome::fail(Status::Unavailable, "this replica has no model yet"),
+                },
+            ));
+            cell
+        })
+        .collect();
+
     // Camera 0 publishes the new model and announces it.
     let model: Vec<u8> = {
         let mut rng = lattica::util::Rng::new(42);
@@ -99,6 +126,7 @@ fn main() -> anyhow::Result<()> {
     let root = cams[0]
         .borrow_mut()
         .publish_blob(&mut world.net, "traffic-model", 1, &model, 128 * 1024);
+    *model_cells[0].borrow_mut() = Some(root);
     {
         let mut nd = cams[0].borrow_mut();
         let LatticaNode { swarm, gossip, .. } = &mut *nd;
@@ -152,7 +180,35 @@ fn main() -> anyhow::Result<()> {
             .unwrap_or(false)
     });
     assert!(ok, "model did not replicate to all cameras");
+    for cell in model_cells.iter().skip(1) {
+        *cell.borrow_mut() = Some(root);
+    }
     let dt = (world.net.now() - t0) as f64 / 1e9;
+
+    // Control-plane audit: camera 1 resolves the model pointer from its
+    // neighbours (not the origin) through a failover stub — any replica
+    // can answer now that the swarm replicated the model.
+    let mut pointer_stub = Stub::new(
+        "camera",
+        vec![all_peers[2], all_peers[3 % n_cameras]],
+    )
+    .with_options(CallOptions {
+        deadline: 10 * SECOND,
+        retry: RetryPolicy::idempotent(),
+        ..CallOptions::default()
+    });
+    let done = stub_call_blocking(
+        &mut world,
+        &cams[1],
+        &mut pointer_stub,
+        "latest_model",
+        b"",
+        10 * SECOND,
+    )
+    .expect("latest_model query");
+    assert_eq!(done.status, Status::Ok, "{}", done.detail);
+    assert_eq!(done.payload, root.as_bytes(), "pointer must match the published root");
+    println!("camera 1 re-resolved the model pointer from a peer replica (camera.latest_model)");
     // Per-camera serving contribution (swarm effect).
     let served: Vec<u64> = cams
         .iter()

@@ -6,6 +6,9 @@
 //! as a CID blob, and records (round, participant) in the replicated CRDT
 //! store. When the OR-set for a round reaches quorum, every hospital
 //! fetches the updates it is missing and folds them into its model.
+//! After each fold, hospital 0 audits the cohort by pulling every peer's
+//! model digest through the registered `fed` service — a typed unary
+//! call over the NAT-traversed circuits, not an out-of-band assertion.
 //!
 //! Run: cargo run --release --example federated_learning
 
@@ -15,7 +18,11 @@ use lattica::netsim::nat::NatType;
 use lattica::netsim::topology::{LinkProfile, TopologyBuilder};
 use lattica::netsim::{World, SECOND};
 use lattica::node::{LatticaNode, NodeConfig};
+use lattica::rpc::{Outcome, Service, Status, Stub};
+use lattica::scenarios::stub_call_blocking;
 use lattica::util::Rng;
+use std::cell::RefCell;
+use std::rc::Rc;
 
 const HOSPITALS: usize = 4;
 const ROUNDS: usize = 3;
@@ -72,6 +79,28 @@ fn main() -> anyhow::Result<()> {
         world.run_for(2 * SECOND);
     }
     println!("{HOSPITALS} hospitals meshed through the relay (all port-restricted NATs)");
+
+    // Every hospital serves its current model digest over the typed
+    // service layer (Unavailable until the first round folds).
+    let digest_cells: Vec<Rc<RefCell<Vec<u8>>>> = hospitals
+        .iter()
+        .map(|h| {
+            let cell = Rc::new(RefCell::new(Vec::new()));
+            let served = cell.clone();
+            h.borrow_mut().register_service(Service::new("fed").unary(
+                "digest",
+                move |_node, _net, _ctx, _payload| {
+                    let d = served.borrow();
+                    if d.is_empty() {
+                        Outcome::fail(Status::Unavailable, "no round folded yet")
+                    } else {
+                        Outcome::reply(d.clone())
+                    }
+                },
+            ));
+            cell
+        })
+        .collect();
 
     let peers: Vec<_> = hospitals.iter().map(|h| h.borrow().peer_id()).collect();
     let mut rng = Rng::new(7);
@@ -170,9 +199,22 @@ fn main() -> anyhow::Result<()> {
             digests.push(hasher.finalize().to_vec());
         }
         assert!(digests.windows(2).all(|w| w[0] == w[1]), "aggregation must agree");
+        for (cell, d) in digest_cells.iter().zip(&digests) {
+            *cell.borrow_mut() = d.clone();
+        }
         model_digest = digests[0].clone();
+        // Audit over RPC: hospital 0 pulls every peer's digest through the
+        // `fed` service and verifies cohort agreement end-to-end.
+        for (j, peer) in peers.iter().enumerate().skip(1) {
+            let mut stub = Stub::new("fed", vec![*peer]);
+            let done =
+                stub_call_blocking(&mut world, &hospitals[0], &mut stub, "digest", b"", 10 * SECOND)
+                    .expect("digest query");
+            assert_eq!(done.status, Status::Ok, "hospital {j}: {}", done.detail);
+            assert_eq!(done.payload, model_digest, "hospital {j} digest mismatch");
+        }
         println!(
-            "   all {HOSPITALS} hospitals aggregated {} updates in {dt:.2}s (virtual); digest {}",
+            "   all {HOSPITALS} hospitals aggregated {} updates in {dt:.2}s (virtual); digest {} (cross-checked via fed.digest)",
             HOSPITALS,
             lattica::util::hex::encode_prefix(&model_digest, 12)
         );

@@ -1,37 +1,31 @@
 //! Quickstart: the minimal Lattica deployment.
 //!
-//! Boots two nodes on the simulated network, connects them, round-trips a
-//! unary RPC, and publishes + fetches a content-addressed blob — the three
-//! SDK surfaces (connectivity, RPC, content) in ~80 lines.
+//! Boots two nodes on the simulated network, connects them, serves a
+//! unary RPC through the typed service layer, and publishes + fetches a
+//! content-addressed blob — the three SDK surfaces (connectivity,
+//! services, content) in ~80 lines.
+//!
+//! The RPC surface has two halves and no raw event matching:
+//!
+//! * **Server:** [`LatticaNode::register_service`] installs named
+//!   handlers. A handler gets a `RequestCtx` (peer identity, absolute
+//!   deadline as propagated from the wire, traffic class) and returns an
+//!   `Outcome` — reply payload, failure status + detail, or deferred.
+//!   Requests whose deadline already passed are dropped before any
+//!   handler runs.
+//! * **Client:** a [`Stub`] wraps a service + provider list and layers
+//!   per-call deadlines, idempotent retries with backoff + jitter,
+//!   hedged second requests and multi-target failover over the wire
+//!   protocol. Feed it node events and `tick` it from your drive loop
+//!   (or use `scenarios::stub_call_blocking` for linear code like this).
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use lattica::netsim::topology::{LinkProfile, TopologyBuilder};
 use lattica::netsim::{World, SECOND};
-use lattica::node::{run_until, App, LatticaNode, NodeConfig, NodeEvent};
-use lattica::protocols::Ctx;
-use lattica::rpc::{RpcEvent, Status};
-
-struct Greeter;
-
-impl App for Greeter {
-    fn handle(
-        &mut self,
-        node: &mut LatticaNode,
-        net: &mut lattica::netsim::Net,
-        ev: NodeEvent,
-    ) -> Option<NodeEvent> {
-        if let NodeEvent::Rpc(RpcEvent::Request { service, payload, reply, .. }) = &ev {
-            if service == "greeter" {
-                let mut ctx = Ctx::new(&mut node.swarm, net);
-                let msg = format!("hello, {}!", String::from_utf8_lossy(payload));
-                let _ = node.rpc.respond(&mut ctx, *reply, Status::Ok, msg.as_bytes());
-                return None;
-            }
-        }
-        Some(ev)
-    }
-}
+use lattica::node::{run_until, LatticaNode, NodeConfig};
+use lattica::rpc::{Outcome, Service, Status, Stub};
+use lattica::scenarios::stub_call_blocking;
 
 fn main() -> anyhow::Result<()> {
     // 1. A two-host world: one LAN region.
@@ -40,10 +34,17 @@ fn main() -> anyhow::Result<()> {
     let h2 = topo.public_host(0, LinkProfile::DATACENTER);
     let mut world = World::new(topo.build(7));
 
-    // 2. Two nodes; the server runs a Greeter app.
+    // 2. Two nodes; the server registers a greeter service. Handlers are
+    //    dispatched inline by the node's ServiceRouter — no event loop,
+    //    no match on raw RPC events.
     let server = LatticaNode::spawn(&mut world, h1, NodeConfig::with_seed(1));
     let client = LatticaNode::spawn(&mut world, h2, NodeConfig::with_seed(2));
-    server.borrow_mut().app = Some(Box::new(Greeter));
+    server.borrow_mut().register_service(Service::new("greeter").unary(
+        "hello",
+        |_node, _net, _ctx, payload| {
+            Outcome::reply(format!("hello, {}!", String::from_utf8_lossy(&payload)))
+        },
+    ));
 
     // 3. Dial (multiaddr carries transport + expected peer id).
     let server_ma = server.borrow().listen_addr();
@@ -56,24 +57,20 @@ fn main() -> anyhow::Result<()> {
         .is_connected(&server_peer)));
     println!("connected to {server_peer} (Noise-authenticated)");
 
-    // 4. Unary RPC.
-    {
-        let mut c = client.borrow_mut();
-        let LatticaNode { swarm, rpc, .. } = &mut *c;
-        let mut ctx = Ctx::new(swarm, &mut world.net);
-        rpc.call(&mut ctx, &server_peer, "greeter", "hello", b"lattica")?;
-    }
-    let mut response = None;
-    run_until(&mut world, 5 * SECOND, || {
-        for e in client.borrow_mut().drain_events() {
-            if let NodeEvent::Rpc(RpcEvent::Response { payload, rtt, .. }) = e {
-                response = Some((String::from_utf8_lossy(&payload).to_string(), rtt));
-            }
-        }
-        response.is_some()
-    });
-    let (text, rtt) = response.expect("rpc response");
-    println!("rpc response: {text:?} (rtt {})", lattica::util::timefmt::fmt_ns(rtt));
+    // 4. Unary RPC through a stub. The default options give the call a
+    //    10 s budget that rides the wire; see `CallOptions` for retry,
+    //    hedging and failover policies.
+    let mut greeter = Stub::new("greeter", vec![server_peer]);
+    let done =
+        stub_call_blocking(&mut world, &client, &mut greeter, "hello", b"lattica", 5 * SECOND)
+            .expect("rpc response");
+    assert_eq!(done.status, Status::Ok);
+    println!(
+        "rpc response: {:?} (rtt {}, {} attempt)",
+        String::from_utf8_lossy(&done.payload),
+        lattica::util::timefmt::fmt_ns(done.rtt),
+        done.attempts,
+    );
 
     // 5. Content: publish on the server, fetch by CID on the client.
     let asset = b"model weights would go here".repeat(1000);

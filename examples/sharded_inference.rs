@@ -1,7 +1,10 @@
 //! Sharded inference demo (Fig. 1(4)): the transformer split across two
-//! shard stages with replicas, served over RPC with automatic failover.
-//! See `benches/sharded_inference.rs` for the measured version; this
-//! example walks through the moving parts and prints the predictions.
+//! shard stages with replicas, served over the typed service layer with
+//! automatic stub failover — each shard registers the `shard` service
+//! ([`ShardServer::into_service`]) and the client's pipeline drives one
+//! retrying stub per stage. See `benches/sharded_inference.rs` for the
+//! measured version; this example walks through the moving parts and
+//! prints the predictions.
 //!
 //! Requires `make artifacts`.
 //! Run: cargo run --release --example sharded_inference
@@ -9,7 +12,6 @@
 use lattica::netsim::topology::LinkProfile;
 use lattica::netsim::SECOND;
 use lattica::node::NodeEvent;
-use lattica::rpc::RpcEvent;
 use lattica::runtime::Engine;
 use lattica::scenarios::bootstrap_mesh;
 use lattica::shard::{PipelineClient, ShardServer};
@@ -36,13 +38,15 @@ fn main() -> anyhow::Result<()> {
     ];
     for (i, nd) in nodes[1..].iter().enumerate() {
         let stage = i / 2;
-        nd.borrow_mut().app = Some(Box::new(ShardServer::new(
+        let (svc, _handle) = ShardServer::new(
             engine.clone(),
             if stage == 0 { (0, split) } else { (split, cfg.n_layer) },
             stage == 0,
             stage == 1,
             params.clone(),
-        )));
+        )
+        .into_service();
+        nd.borrow_mut().register_service(svc);
     }
     world.run_for(SECOND);
 
@@ -73,6 +77,8 @@ fn main() -> anyhow::Result<()> {
                     pipeline.on_rpc_event(&mut c, &mut world.net, ev);
                 }
             }
+            // Drive the per-stage stubs' retry/failover timers.
+            pipeline.tick(&mut c, &mut world.net);
         }
         let (rid, logits, started) = pipeline.completed.last().expect("completed");
         let vals = logits.as_f32()?;

@@ -10,18 +10,23 @@
 //! idle and again under a concurrent bulk Bitswap sync — the bulk class
 //! must not starve control traffic.
 //!
+//! A retry-policy arm compares no-retry vs retry vs retry+hedging stubs
+//! on the lossy WAN: tail latency (p99) under loss is the paper's
+//! motivation for a real stub layer, and the hedged arm must strictly
+//! beat the no-retry baseline.
+//!
 //! Emits `BENCH_rpc_throughput.json` at the repo root so the perf
 //! trajectory is tracked across PRs.
 //!
 //! Usage: cargo bench --bench rpc_throughput [-- --calls N]
 
-use lattica::metrics::{Histogram, QpsMeter, TransportHealth};
+use lattica::metrics::{Histogram, QpsMeter, StubStats, TransportHealth};
 use lattica::netsim::{MILLI, SECOND};
 use lattica::node::{LatticaNode, NodeEvent};
 use lattica::protocols::ping::PingEvent;
 use lattica::protocols::Ctx;
-use lattica::rpc::RpcEvent;
-use lattica::scenarios::{table1_world_cc, EchoApp, NetScenario};
+use lattica::rpc::{CallOptions, HedgePolicy, RetryPolicy, Status, Stub};
+use lattica::scenarios::{echo_service, table1_world_cc, NetScenario};
 use lattica::transport::CcAlgorithm;
 use lattica::util::cli::Args;
 use lattica::util::json::Json;
@@ -34,19 +39,23 @@ struct ScenarioResult {
     calls: usize,
     /// Client-side transport health at the end of the run.
     health: TransportHealth,
+    /// Client-side stub counters (attempts, retries, hedges…).
+    stub: StubStats,
 }
 
-fn run_scenario(
+fn run_scenario_opts(
     s: NetScenario,
     cc: CcAlgorithm,
     payload: usize,
     response: usize,
     calls: usize,
     concurrency: usize,
+    opts: CallOptions,
 ) -> ScenarioResult {
     let (mut world, client, server) = table1_world_cc(s, 77, cc);
-    server.borrow_mut().app = Some(Box::new(EchoApp { response_size: response }));
+    server.borrow_mut().register_service(echo_service(response));
     let server_peer = server.borrow().peer_id();
+    let mut stub = Stub::new("bench", vec![server_peer]).with_options(opts);
 
     // Shared payload: each call bumps a refcount instead of copying.
     let body: lattica::util::Buf = vec![0x5Au8; payload].into();
@@ -56,30 +65,30 @@ fn run_scenario(
     let mut issued = 0usize;
     let mut done = 0usize;
 
-    // Keep `concurrency` calls in flight until `calls` complete.
+    // Keep `concurrency` logical calls in flight until `calls` complete.
     let mut in_flight = 0usize;
     while done < calls {
         while in_flight < concurrency && issued < calls {
             let mut n = client.borrow_mut();
-            let LatticaNode { swarm, rpc, .. } = &mut *n;
-            let mut ctx = Ctx::new(swarm, &mut world.net);
-            if rpc.call(&mut ctx, &server_peer, "bench", "echo", body.clone()).is_ok() {
-                issued += 1;
-                in_flight += 1;
-            } else {
-                break;
-            }
+            stub.call(&mut n, &mut world.net, "echo", body.clone());
+            issued += 1;
+            in_flight += 1;
         }
         world.run_for(SECOND / 1000);
         let evs = client.borrow_mut().drain_events();
-        for e in evs {
-            if let NodeEvent::Rpc(RpcEvent::Response { rtt, .. }) = e {
+        {
+            let mut n = client.borrow_mut();
+            for e in &evs {
+                stub.on_node_event(&mut n, &mut world.net, e);
+            }
+            stub.tick(&mut n, &mut world.net);
+        }
+        while let Some(d) = stub.poll_done() {
+            in_flight -= 1;
+            if d.status == Status::Ok {
                 done += 1;
-                in_flight -= 1;
                 meter.record(world.net.now());
-                lat.record(rtt);
-            } else if let NodeEvent::Rpc(RpcEvent::CallFailed { .. }) = e {
-                in_flight -= 1;
+                lat.record(d.rtt);
             }
         }
         if world.net.now() > 600 * SECOND {
@@ -93,7 +102,19 @@ fn run_scenario(
         wall_secs: wall_start.elapsed().as_secs_f64(),
         calls: done,
         health,
+        stub: stub.stats,
     }
+}
+
+fn run_scenario(
+    s: NetScenario,
+    cc: CcAlgorithm,
+    payload: usize,
+    response: usize,
+    calls: usize,
+    concurrency: usize,
+) -> ScenarioResult {
+    run_scenario_opts(s, cc, payload, response, calls, concurrency, CallOptions::default())
 }
 
 /// Ping p99 on the lossy WAN, optionally under a concurrent bulk Bitswap
@@ -211,6 +232,84 @@ fn main() {
         println!("{:<28} {:>10.1} {:>10.1} {:>10.1}", s.label(), qps[0], qps[1], qps[2]);
     }
 
+    // Retry-policy arms on the lossy WAN: the stub's no-retry baseline vs
+    // idempotent retries vs retries + hedging. Same seed per arm, so the
+    // loss pattern is identical and only the policy differs.
+    let pcalls = (calls / 4).max(200);
+    println!();
+    println!("LossyWan policy arms (128 B payload, {pcalls} calls, concurrency 32):");
+    println!(
+        "{:<14} {:>10} {:>12} {:>12} {:>9} {:>8}",
+        "policy", "qps", "p50", "p99", "attempts", "hedges"
+    );
+    let retry_policy = RetryPolicy {
+        max_attempts: 4,
+        base_backoff: 50 * MILLI,
+        max_backoff: SECOND,
+        jitter: 0.5,
+        ..RetryPolicy::none()
+    };
+    let policies: Vec<(&str, CallOptions)> = vec![
+        ("none", CallOptions::default()),
+        (
+            "retry",
+            CallOptions {
+                attempt_timeout: Some(500 * MILLI),
+                retry: retry_policy,
+                ..CallOptions::default()
+            },
+        ),
+        (
+            "retry+hedge",
+            CallOptions {
+                attempt_timeout: Some(500 * MILLI),
+                retry: retry_policy,
+                hedge: HedgePolicy::on(),
+                ..CallOptions::default()
+            },
+        ),
+    ];
+    let mut policy_rows: Vec<Json> = Vec::new();
+    let mut policy_p99: Vec<u64> = Vec::new();
+    for (name, opts) in policies {
+        let mut r = run_scenario_opts(
+            NetScenario::LossyWan,
+            CcAlgorithm::Cubic,
+            small,
+            small,
+            pcalls,
+            32,
+            opts,
+        );
+        let p50 = r.lat.percentile(50.0);
+        let p99 = r.lat.percentile(99.0);
+        println!(
+            "{:<14} {:>10.1} {:>12} {:>12} {:>9} {:>8}",
+            name,
+            r.qps,
+            lattica::util::timefmt::fmt_ns(p50),
+            lattica::util::timefmt::fmt_ns(p99),
+            r.stub.attempts,
+            r.stub.hedges
+        );
+        println!("    stub: {}", r.stub.summary());
+        policy_rows.push(Json::obj(vec![
+            ("scenario", Json::str(NetScenario::LossyWan.label())),
+            ("policy", Json::str(name)),
+            ("qps", Json::num(r.qps)),
+            ("p50_ns", Json::num(p50 as f64)),
+            ("p99_ns", Json::num(p99 as f64)),
+            ("ok_calls", Json::num(r.calls as f64)),
+            ("attempts", Json::num(r.stub.attempts as f64)),
+            ("retries", Json::num(r.stub.retries as f64)),
+            ("hedges", Json::num(r.stub.hedges as f64)),
+            ("hedge_wins", Json::num(r.stub.hedge_wins as f64)),
+            ("failovers", Json::num(r.stub.failovers as f64)),
+            ("deadline_expired", Json::num(r.stub.deadline_expired as f64)),
+        ]));
+        policy_p99.push(p99);
+    }
+
     // Priority scheduler: bulk Bitswap must not starve pings.
     let ping_idle = ping_p99_lossy(false);
     let ping_bulk = ping_p99_lossy(true);
@@ -249,6 +348,7 @@ fn main() {
         ("concurrency", Json::num(concurrency as f64)),
         ("rows", Json::Arr(json_rows)),
         ("wan_stress_rows", Json::Arr(stress_rows)),
+        ("policy_rows", Json::Arr(policy_rows)),
         ("ping_p99_idle_ns", Json::num(ping_idle as f64)),
         ("ping_p99_under_bulk_ns", Json::num(ping_bulk as f64)),
         ("ping_p99_bulk_ratio", Json::num(ping_ratio)),
@@ -280,5 +380,16 @@ fn main() {
         ping_ratio <= 2.0,
         "bulk sync must not more than double ping p99 (got {ping_ratio:.2}x)"
     );
+    assert!(
+        policy_p99[2] < policy_p99[0],
+        "retry+hedging must strictly beat the no-retry p99 under loss: hedge {} vs none {}",
+        lattica::util::timefmt::fmt_ns(policy_p99[2]),
+        lattica::util::timefmt::fmt_ns(policy_p99[0]),
+    );
     println!("\nshape check OK: QPS degrades with network distance in both payload classes");
+    println!(
+        "policy check OK: hedged p99 {} < no-retry p99 {} on the lossy WAN",
+        lattica::util::timefmt::fmt_ns(policy_p99[2]),
+        lattica::util::timefmt::fmt_ns(policy_p99[0]),
+    );
 }

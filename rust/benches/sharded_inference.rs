@@ -46,7 +46,8 @@ fn main() {
             stage == 1,
             params.clone(),
         );
-        nd.borrow_mut().app = Some(Box::new(server));
+        let (svc, _handle) = server.into_service();
+        nd.borrow_mut().register_service(svc);
     }
     world.run_for(SECOND);
 
@@ -70,6 +71,7 @@ fn main() {
                 pipeline.on_rpc_event(&mut c, &mut world.net, ev);
             }
         }
+        pipeline.tick(&mut c, &mut world.net);
     }
     let healthy_done = pipeline.completed.len();
     let healthy_virt = (world.net.now() - t0) as f64 / 1e9;
@@ -93,6 +95,7 @@ fn main() {
                 pipeline.on_rpc_event(&mut c, &mut world.net, ev);
             }
         }
+        pipeline.tick(&mut c, &mut world.net);
     }
 
     println!(

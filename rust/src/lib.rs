@@ -12,9 +12,12 @@
 //!    a Kademlia DHT for provider discovery, and a CRDT store for
 //!    eventually-consistent verifiable state.
 //! 3. **Compute** — a dual-plane RPC protocol (unary control plane +
-//!    credit-backpressured streaming data plane) carrying sharded inference
-//!    and collaborative training of an AOT-compiled JAX/Pallas transformer
-//!    executed through PJRT (`runtime`).
+//!    credit-backpressured streaming data plane) with a typed service
+//!    layer on top: servers register named handlers on a `ServiceRouter`,
+//!    clients call through `Stub`s with deadline propagation, retries,
+//!    hedging and failover (`rpc::service`, `rpc::stub`) — carrying
+//!    sharded inference and collaborative training of an AOT-compiled
+//!    JAX/Pallas transformer executed through PJRT (`runtime`).
 //!
 //! The network is a deterministic discrete-event simulation (`netsim`) so
 //! NAT semantics and WAN conditions are exactly reproducible; see

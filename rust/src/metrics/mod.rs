@@ -296,6 +296,83 @@ impl SyncStats {
     }
 }
 
+/// Server-side service-layer counters ([`crate::rpc::ServiceRouter`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RouterStats {
+    /// Unary requests answered `Ok` by a handler.
+    pub served: u64,
+    /// Unary requests a handler answered with a failure status.
+    pub failed: u64,
+    /// Handlers that took the reply handle for a later response.
+    pub deferred: u64,
+    /// Requests for a service nobody registered (answered `NotFound`).
+    pub unknown_service: u64,
+    /// Requests for an unregistered method (answered `NotFound`).
+    pub unknown_method: u64,
+    /// Requests dropped at dispatch because their deadline had passed.
+    pub expired: u64,
+    /// Stream items routed to stream handlers.
+    pub stream_items: u64,
+}
+
+impl RouterStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "served={} failed={} deferred={} unknown={}/{} expired={} stream_items={}",
+            self.served,
+            self.failed,
+            self.deferred,
+            self.unknown_service,
+            self.unknown_method,
+            self.expired,
+            self.stream_items,
+        )
+    }
+}
+
+/// Client-side stub counters ([`crate::rpc::Stub`]): one logical op can
+/// fan out into several attempts via retries, hedges and failover.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StubStats {
+    /// Logical calls issued.
+    pub ops: u64,
+    /// Logical calls that finished `Ok`.
+    pub ok: u64,
+    /// Logical calls that finished with a failure status.
+    pub failed: u64,
+    /// Wire attempts issued (≥ ops).
+    pub attempts: u64,
+    /// Attempts issued by the retry/backoff path.
+    pub retries: u64,
+    /// Speculative second attempts issued by the hedging path.
+    pub hedges: u64,
+    /// Ops won by the hedge attempt rather than the primary.
+    pub hedge_wins: u64,
+    /// Attempts sent to a different target than the previous attempt.
+    pub failovers: u64,
+    /// Attempts cancelled after another attempt won.
+    pub cancelled: u64,
+    /// Ops that exhausted their overall deadline.
+    pub deadline_expired: u64,
+}
+
+impl StubStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "ops={} ok={} failed={} attempts={} retries={} hedges={} (won {}) failovers={} expired={}",
+            self.ops,
+            self.ok,
+            self.failed,
+            self.attempts,
+            self.retries,
+            self.hedges,
+            self.hedge_wins,
+            self.failovers,
+            self.deadline_expired,
+        )
+    }
+}
+
 /// Completed-ops counter over a virtual-time window → QPS.
 #[derive(Clone, Debug, Default)]
 pub struct QpsMeter {

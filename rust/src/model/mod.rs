@@ -9,10 +9,16 @@ use crate::content::{Chunking, Cid, DagManifest, DeltaManifest, CDC_CHECKPOINT, 
 use crate::netsim::Net;
 use crate::node::LatticaNode;
 use crate::protocols::Ctx;
+use crate::rpc::{Outcome, Service, Status};
 use crate::runtime::{Manifest, Tensor};
 use crate::util::varint;
 use crate::wire::Message;
 use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Service name of the model-sync control plane.
+pub const MODEL_SERVICE: &str = "model";
 
 /// Gossip topic for checkpoint announcements of a named model.
 pub fn model_topic(name: &str) -> String {
@@ -127,6 +133,9 @@ pub struct CheckpointPublisher {
     pub chunking: Chunking,
     /// Last published (version, root) — the delta base.
     last: Option<(u64, Cid)>,
+    /// Last announcement gossiped, re-served over the control service so
+    /// replicas that missed the gossip can pull it.
+    pub last_announcement: Option<ModelAnnouncement>,
 }
 
 impl CheckpointPublisher {
@@ -135,6 +144,7 @@ impl CheckpointPublisher {
             name: name.to_string(),
             chunking: Chunking::Cdc(CDC_CHECKPOINT),
             last: None,
+            last_announcement: None,
         }
     }
 
@@ -174,10 +184,40 @@ impl CheckpointPublisher {
             root,
             delta,
         };
+        self.last_announcement = Some(ann.clone());
         let topic = model_topic(&self.name);
         let mut ctx = Ctx::new(&mut node.swarm, net);
         node.gossip.publish(&mut ctx, &topic, ann.encode());
         (root, ann)
+    }
+
+    /// Expose the model-sync control path as a registered [`Service`].
+    ///
+    /// Gossip is the push path for checkpoint announcements; this is the
+    /// pull path: `latest` (payload = model name, or empty for "whatever
+    /// this publisher serves") returns the most recent
+    /// [`ModelAnnouncement`], so a replica that joined after the gossip
+    /// burst — or whose subscription lapsed — can catch up with one unary
+    /// call through a [`crate::rpc::Stub`] instead of waiting for the
+    /// next version.
+    pub fn service(publisher: Rc<RefCell<CheckpointPublisher>>) -> Service {
+        Service::new(MODEL_SERVICE).unary("latest", move |_node, _net, _ctx, payload| {
+            let p = publisher.borrow();
+            let want = String::from_utf8_lossy(&payload);
+            if !payload.is_empty() && want != p.name {
+                return Outcome::fail(
+                    Status::NotFound,
+                    format!("this publisher serves {:?}, not {want:?}", p.name),
+                );
+            }
+            match &p.last_announcement {
+                Some(ann) => Outcome::reply(ann.encode()),
+                None => Outcome::fail(
+                    Status::Unavailable,
+                    format!("no checkpoint of {:?} published yet", p.name),
+                ),
+            }
+        })
     }
 
     /// [`CheckpointPublisher::publish_blob`] over a tensor parameter list.

@@ -22,7 +22,7 @@ use crate::protocols::kad::{Kademlia, KadEvent, PeerEntry, KAD_PROTO};
 use crate::protocols::ping::{Ping, PingEvent, PING_PROTO};
 use crate::protocols::rendezvous::{Rendezvous, RendezvousEvent, RENDEZVOUS_PROTO};
 use crate::protocols::Ctx;
-use crate::rpc::{RpcEvent, RpcNode, RPC_PROTO, RPC_STREAM_PROTO};
+use crate::rpc::{RpcEvent, RpcNode, Service, ServiceRouter, RPC_PROTO, RPC_STREAM_PROTO};
 use crate::swarm::{Swarm, SwarmConfig, SwarmEvent, TIMER_SWARM_TICK};
 use crate::wire::Message;
 use anyhow::Result;
@@ -52,9 +52,13 @@ pub enum NodeEvent {
     ObservedAddr { addr: SimAddr },
 }
 
-/// Application logic attached to a node (shard server, trainer, echo
-/// service…). Events are offered to the app first; returning `None`
-/// consumes the event, returning it back leaves it for external polling.
+/// Raw-event adapter attached to a node. RPC request handling belongs on
+/// the [`ServiceRouter`] (see [`LatticaNode::register_service`]); an
+/// `App` is the thin escape hatch for everything else — reacting to
+/// connectivity changes, gossip, or client-side RPC completions that
+/// must resolve a deferred [`crate::rpc::Reply`]. Events are offered to
+/// the app after router dispatch; returning `None` consumes the event,
+/// returning it back leaves it for external polling.
 pub trait App {
     fn handle(
         &mut self,
@@ -82,6 +86,9 @@ pub struct LatticaNode {
     /// Attached application logic (served inline, so RPC handlers add no
     /// artificial polling latency).
     pub app: Option<Box<dyn App>>,
+    /// Registered RPC services; `Option` so the pump can take it while
+    /// handlers hold `&mut LatticaNode`.
+    router: Option<ServiceRouter>,
     /// Blob-sync driver state (see [`LatticaNode::sync_blob`]).
     blob_sync: std::collections::HashMap<Cid, BlobSync>,
     /// Outstanding provider-discovery queries: kad query id → blob root.
@@ -159,6 +166,7 @@ impl LatticaNode {
             blockstore: Blockstore::new(),
             crdt: CrdtStore::new(),
             app: None,
+            router: None,
             blob_sync: std::collections::HashMap::new(),
             discovery: std::collections::HashMap::new(),
             swarm,
@@ -191,6 +199,19 @@ impl LatticaNode {
 
     pub fn poll_event(&mut self) -> Option<NodeEvent> {
         self.events.pop_front()
+    }
+
+    /// Register an RPC service: its unary methods and stream handler are
+    /// dispatched inline in the node pump, replacing ad-hoc
+    /// `RpcEvent::Request` match arms. Safe to call from inside a running
+    /// handler (the registration is merged after dispatch returns).
+    pub fn register_service(&mut self, svc: Service) {
+        self.router.get_or_insert_with(ServiceRouter::new).register(svc);
+    }
+
+    /// Counters of the service router (zeroes when none is registered).
+    pub fn router_stats(&self) -> crate::metrics::RouterStats {
+        self.router.as_ref().map(|r| r.stats).unwrap_or_default()
     }
 
     pub fn drain_events(&mut self) -> Vec<NodeEvent> {
@@ -481,7 +502,26 @@ impl LatticaNode {
             self.events.push_back(NodeEvent::Gossip(e));
         }
         while let Some(e) = self.rpc.poll_event() {
-            self.events.push_back(NodeEvent::Rpc(e));
+            // Service dispatch runs inline here: registered handlers see
+            // requests with no polling latency, and only unowned events
+            // (client-side completions, unrouted streams) surface. The
+            // router is taken so handlers can hold `&mut LatticaNode`;
+            // services they register meanwhile land in a fresh router and
+            // are merged back.
+            let e = match self.router.take() {
+                Some(mut r) => {
+                    let out = r.dispatch(self, net, e);
+                    if let Some(registered_during_dispatch) = self.router.take() {
+                        r.merge(registered_during_dispatch);
+                    }
+                    self.router = Some(r);
+                    out
+                }
+                None => Some(e),
+            };
+            if let Some(e) = e {
+                self.events.push_back(NodeEvent::Rpc(e));
+            }
         }
         while let Some(e) = self.rendezvous.poll_event() {
             self.events.push_back(NodeEvent::Rendezvous(e));

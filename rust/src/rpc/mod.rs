@@ -2,12 +2,25 @@
 //!
 //! * **Unary plane** (`/lattica/rpc/1`) — request/response for control
 //!   operations (health, shard placement, version queries). One stream per
-//!   call; idempotent retries are driven by the caller (see
-//!   [`crate::shard`] for the shard-aware stub with DHT failover).
+//!   call. Deadlines ride the wire ([`RpcMsg::deadline_ns`]): a server
+//!   drops a request whose deadline already passed instead of doing dead
+//!   work, and handlers propagate the shrunken budget into nested calls.
 //! * **Streaming plane** (`/lattica/rpc-stream/1`) — long-lived flows for
 //!   tensors. Application-level credit grants ride on top of the
 //!   transport's byte-level flow control, so a slow consumer throttles the
 //!   producer at message granularity (the paper's "adaptive backpressure").
+//!
+//! Applications do not speak this layer directly: servers register typed
+//! handlers on a [`ServiceRouter`] (see [`service`]) and clients call
+//! through a [`Stub`] (see [`stub`]) that layers per-call deadlines,
+//! idempotent retries, hedging and multi-target failover on top of the
+//! raw unary plane.
+
+pub mod service;
+pub mod stub;
+
+pub use service::{Outcome, Reply, RequestCtx, Service, ServiceRouter, StreamHandler};
+pub use stub::{CallOptions, HedgePolicy, RetryPolicy, Stub, StubDone};
 
 use crate::identity::PeerId;
 use crate::netsim::{Time, SECOND};
@@ -67,6 +80,16 @@ pub struct RpcMsg {
     pub status: u64,
     /// STREAM_*: item sequence or credit count.
     pub seq: u64,
+    /// REQUEST: absolute virtual-time deadline (ns). 0 = unspecified
+    /// (legacy encodings), which servers widen to [`CALL_TIMEOUT`]. The
+    /// simulator has a global clock, so an absolute deadline is exact; a
+    /// real deployment would carry the remaining budget instead (gRPC's
+    /// `grpc-timeout`) plus a skew bound — the semantics pinned by the
+    /// tests are identical.
+    pub deadline_ns: u64,
+    /// RESPONSE with non-Ok status: human-readable failure detail, so
+    /// errors surface with context instead of a bare status code.
+    pub error_detail: String,
 }
 
 impl Message for RpcMsg {
@@ -77,6 +100,10 @@ impl Message for RpcMsg {
         w.bytes(4, &self.payload);
         w.uint(5, self.status);
         w.uint(6, self.seq);
+        // Fields 7/8 are skipped when default, so pre-deadline peers see
+        // byte-identical encodings for messages that don't use them.
+        w.uint(7, self.deadline_ns);
+        w.string(8, &self.error_detail);
     }
 
     fn decode(buf: &[u8]) -> Result<RpcMsg> {
@@ -118,6 +145,8 @@ fn decode_common_field(m: &mut RpcMsg, number: u32, f: &crate::wire::pb::Field<'
         3 => m.method = f.as_string()?,
         5 => m.status = f.as_u64(),
         6 => m.seq = f.as_u64(),
+        7 => m.deadline_ns = f.as_u64(),
+        8 => m.error_detail = f.as_string()?,
         _ => {}
     }
     Ok(())
@@ -155,11 +184,17 @@ pub struct StreamHandle {
 #[derive(Debug)]
 pub enum RpcEvent {
     /// Server side: a unary request arrived; reply via [`RpcNode::respond`].
+    /// Normally consumed by the node's [`ServiceRouter`]; only surfaces to
+    /// the app/poller for services with no registered handler.
     Request {
         peer: PeerId,
         service: String,
         method: String,
         payload: Buf,
+        /// Absolute deadline propagated from the wire (or the default
+        /// widened locally for legacy requests). Already-expired requests
+        /// are dropped before this event is emitted.
+        deadline: Time,
         reply: ReplyHandle,
     },
     /// Client side: a unary call finished.
@@ -167,6 +202,8 @@ pub enum RpcEvent {
         call_id: u64,
         status: Status,
         payload: Buf,
+        /// Failure detail from the server (empty on Ok).
+        detail: String,
         /// Round-trip time of this call.
         rtt: Time,
     },
@@ -176,6 +213,7 @@ pub enum RpcEvent {
     StreamOpened {
         peer: PeerId,
         service: String,
+        method: String,
         handle: StreamHandle,
     },
     /// An item arrived on an RPC stream.
@@ -211,6 +249,8 @@ struct StreamState {
 pub struct RpcNode {
     /// (conn, stream) → pending unary call.
     calls: HashMap<(u64, u64), PendingCall>,
+    /// call id → (conn, stream), for O(1) cancellation.
+    call_index: HashMap<u64, (u64, u64)>,
     /// Min-heap of call deadlines: (deadline, conn, stream). Entries are
     /// lazily invalidated — a popped entry whose call already completed (or
     /// whose deadline no longer matches) is skipped — so `tick` is
@@ -222,6 +262,9 @@ pub struct RpcNode {
     /// Counters for metrics.
     pub calls_sent: u64,
     pub calls_served: u64,
+    /// Inbound requests dropped because their wire deadline had already
+    /// passed on arrival (no handler was invoked for them).
+    pub expired_dropped: u64,
 }
 
 impl Default for RpcNode {
@@ -234,12 +277,14 @@ impl RpcNode {
     pub fn new() -> RpcNode {
         RpcNode {
             calls: HashMap::new(),
+            call_index: HashMap::new(),
             deadlines: BinaryHeap::new(),
             next_call_id: 1,
             streams: HashMap::new(),
             events: VecDeque::new(),
             calls_sent: 0,
             calls_served: 0,
+            expired_dropped: 0,
         }
     }
 
@@ -251,7 +296,7 @@ impl RpcNode {
     // Unary plane
     // ------------------------------------------------------------------
 
-    /// Issue a unary call to a connected peer. Returns the call id. The
+    /// Issue a unary call with the default [`CALL_TIMEOUT`] budget. The
     /// payload is owned zero-copy: pass a `Vec<u8>` or [`Buf`] to avoid
     /// copying (a `&[u8]` is copied once at this boundary).
     pub fn call(
@@ -262,18 +307,36 @@ impl RpcNode {
         method: &str,
         payload: impl Into<Buf>,
     ) -> Result<u64> {
+        self.call_opts(ctx, peer, service, method, payload, CALL_TIMEOUT)
+    }
+
+    /// Issue a unary call with an explicit time budget. Returns the call
+    /// id. The absolute deadline `now + budget` is armed locally *and*
+    /// stamped on the wire, so the server can drop the request if it
+    /// arrives too late and handlers can propagate the remaining budget
+    /// into nested calls.
+    pub fn call_opts(
+        &mut self,
+        ctx: &mut Ctx,
+        peer: &PeerId,
+        service: &str,
+        method: &str,
+        payload: impl Into<Buf>,
+        budget: Time,
+    ) -> Result<u64> {
         let (conn, stream) = ctx.open_stream_class(peer, RPC_PROTO, TrafficClass::Unary)?;
+        let deadline = ctx.now() + budget;
         let msg = RpcMsg {
             kind: M_REQUEST,
             service: service.to_string(),
             method: method.to_string(),
             payload: payload.into(),
+            deadline_ns: deadline,
             ..Default::default()
         };
         send_rpc_msg(ctx, conn, stream, &msg)?;
         let call_id = self.next_call_id;
         self.next_call_id += 1;
-        let deadline = ctx.now() + CALL_TIMEOUT;
         self.calls.insert(
             (conn, stream),
             PendingCall {
@@ -282,9 +345,22 @@ impl RpcNode {
                 sent_at: ctx.now(),
             },
         );
+        self.call_index.insert(call_id, (conn, stream));
         self.deadlines.push(Reverse((deadline, conn, stream)));
         self.calls_sent += 1;
         Ok(call_id)
+    }
+
+    /// Abandon a pending call without surfacing an event (hedged calls
+    /// cancel the losing attempt on first win). Returns false if the call
+    /// already completed.
+    pub fn cancel(&mut self, ctx: &mut Ctx, call_id: u64) -> bool {
+        let Some(slot) = self.call_index.remove(&call_id) else {
+            return false;
+        };
+        self.calls.remove(&slot);
+        ctx.reset(slot.0, slot.1, "cancelled");
+        true
     }
 
     /// Server side: reply to an inbound request.
@@ -295,10 +371,24 @@ impl RpcNode {
         status: Status,
         payload: impl Into<Buf>,
     ) -> Result<()> {
+        self.respond_detail(ctx, reply, status, payload, "")
+    }
+
+    /// [`RpcNode::respond`] with a failure detail string that rides the
+    /// wire and surfaces in the caller's [`RpcEvent::Response`].
+    pub fn respond_detail(
+        &mut self,
+        ctx: &mut Ctx,
+        reply: ReplyHandle,
+        status: Status,
+        payload: impl Into<Buf>,
+        detail: &str,
+    ) -> Result<()> {
         let msg = RpcMsg {
             kind: M_RESPONSE,
             status: status as u64,
             payload: payload.into(),
+            error_detail: detail.to_string(),
             ..Default::default()
         };
         send_rpc_msg(ctx, reply.conn, reply.stream, &msg)?;
@@ -311,17 +401,31 @@ impl RpcNode {
     // Streaming plane
     // ------------------------------------------------------------------
 
-    /// Open an RPC stream to a peer for `service`.
+    /// Open an RPC stream to a peer for `service` (no method label).
     pub fn open_rpc_stream(
         &mut self,
         ctx: &mut Ctx,
         peer: &PeerId,
         service: &str,
     ) -> Result<StreamHandle> {
+        self.open_rpc_stream_method(ctx, peer, service, "")
+    }
+
+    /// Open an RPC stream to a peer for `service`/`method`. The method
+    /// name rides the STREAM_OPEN frame so the server's router can
+    /// dispatch by method as well as service.
+    pub fn open_rpc_stream_method(
+        &mut self,
+        ctx: &mut Ctx,
+        peer: &PeerId,
+        service: &str,
+        method: &str,
+    ) -> Result<StreamHandle> {
         let (conn, stream) = ctx.open_stream_class(peer, RPC_STREAM_PROTO, TrafficClass::Streaming)?;
         let msg = RpcMsg {
             kind: M_STREAM_OPEN,
             service: service.to_string(),
+            method: method.to_string(),
             ..Default::default()
         };
         send_rpc_msg(ctx, conn, stream, &msg)?;
@@ -402,20 +506,39 @@ impl RpcNode {
         let m = RpcMsg::decode_buf(msg)?;
         match m.kind {
             M_REQUEST => {
+                let now = ctx.now();
+                // Legacy requests (no deadline on the wire) get the
+                // default budget measured from arrival.
+                let deadline = if m.deadline_ns > 0 {
+                    m.deadline_ns
+                } else {
+                    now + CALL_TIMEOUT
+                };
+                if deadline <= now {
+                    // The caller has already given up: doing the work and
+                    // sending a reply nobody reads is pure waste. Drop
+                    // before any handler runs.
+                    self.expired_dropped += 1;
+                    ctx.reset(conn, stream, "deadline expired");
+                    return Ok(());
+                }
                 self.events.push_back(RpcEvent::Request {
                     peer,
                     service: m.service,
                     method: m.method,
                     payload: m.payload,
+                    deadline,
                     reply: ReplyHandle { conn, stream },
                 });
             }
             M_RESPONSE => {
                 if let Some(call) = self.calls.remove(&(conn, stream)) {
+                    self.call_index.remove(&call.call_id);
                     self.events.push_back(RpcEvent::Response {
                         call_id: call.call_id,
                         status: Status::from_u64(m.status),
                         payload: m.payload,
+                        detail: m.error_detail,
                         rtt: ctx.now().saturating_sub(call.sent_at),
                     });
                 }
@@ -451,6 +574,7 @@ impl RpcNode {
                 self.events.push_back(RpcEvent::StreamOpened {
                     peer,
                     service: m.service,
+                    method: m.method,
                     handle,
                 });
             }
@@ -524,6 +648,7 @@ impl RpcNode {
                 continue;
             }
             let call = self.calls.remove(&(conn, stream)).unwrap();
+            self.call_index.remove(&call.call_id);
             ctx.reset(conn, stream, "call timeout");
             self.events.push_back(RpcEvent::CallFailed {
                 call_id: call.call_id,
@@ -542,6 +667,7 @@ impl RpcNode {
             .collect();
         for key in dead_calls {
             let call = self.calls.remove(&key).unwrap();
+            self.call_index.remove(&call.call_id);
             self.events.push_back(RpcEvent::CallFailed {
                 call_id: call.call_id,
                 reason: "connection closed".into(),
@@ -577,8 +703,39 @@ mod tests {
             payload: vec![1, 2, 3].into(),
             status: 0,
             seq: 9,
+            deadline_ns: 123_456_789,
+            error_detail: "shard 2 unavailable".into(),
         };
         assert_eq!(RpcMsg::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn legacy_encoding_without_deadline_fields_decodes() {
+        // A pre-deadline_ns peer encodes only fields 1–6. Decode must
+        // succeed with the new fields at their defaults.
+        let mut w = PbWriter::new();
+        w.uint(1, M_REQUEST);
+        w.string(2, "inference");
+        w.string(3, "forward");
+        w.bytes(4, &[9, 9, 9]);
+        w.uint(5, 0);
+        w.uint(6, 4);
+        let legacy = w.finish();
+        let m = RpcMsg::decode(&legacy).unwrap();
+        assert_eq!(m.service, "inference");
+        assert_eq!(m.deadline_ns, 0, "missing field 7 must default to 0");
+        assert!(m.error_detail.is_empty());
+        // And the reverse: a message that doesn't use the new fields
+        // encodes byte-identically to the legacy form.
+        let modern = RpcMsg {
+            kind: M_REQUEST,
+            service: "inference".into(),
+            method: "forward".into(),
+            payload: vec![9, 9, 9].into(),
+            seq: 4,
+            ..Default::default()
+        };
+        assert_eq!(modern.encode(), legacy);
     }
 
     #[test]

@@ -1,0 +1,402 @@
+//! Server-side service layer: named handlers dispatched inline from the
+//! node pump.
+//!
+//! The paper's central critique of prior systems is that they couple ML
+//! logic with networking code; the seed's `App` trait reproduced exactly
+//! that — every application hand-matched raw `RpcEvent::Request` events.
+//! A [`ServiceRouter`] replaces those match arms with registration:
+//!
+//! ```ignore
+//! node.register_service(
+//!     Service::new("greeter").unary("hello", |_node, _net, _ctx, payload| {
+//!         Outcome::reply(format!("hello, {}!", String::from_utf8_lossy(&payload)))
+//!     }),
+//! );
+//! ```
+//!
+//! Handlers run inline in the node pump (no polling latency) and receive a
+//! [`RequestCtx`] carrying the peer identity, the request's absolute
+//! deadline as propagated from the wire, the traffic class, and a typed
+//! reply handle for deferred responses (server-side proxying / nested
+//! calls). Requests whose deadline passed before dispatch are dropped
+//! without invoking any handler; nested calls made from a handler should
+//! budget with [`RequestCtx::remaining`] so the shrunken deadline is
+//! inherited downstream.
+
+use crate::identity::PeerId;
+use crate::metrics::RouterStats;
+use crate::netsim::{Net, Time};
+use crate::node::LatticaNode;
+use crate::protocols::Ctx;
+use crate::rpc::{ReplyHandle, RpcEvent, Status, StreamHandle};
+use crate::transport::TrafficClass;
+use crate::util::buf::Buf;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Per-request context handed to unary handlers.
+#[derive(Clone, Debug)]
+pub struct RequestCtx {
+    /// Authenticated identity of the caller.
+    pub peer: PeerId,
+    pub service: String,
+    pub method: String,
+    /// Absolute deadline propagated from the wire. Work past this point
+    /// is wasted; nested calls should be budgeted with
+    /// [`RequestCtx::remaining`].
+    pub deadline: Time,
+    /// Scheduling class the request arrived under.
+    pub class: TrafficClass,
+    reply: ReplyHandle,
+    /// Set once [`RequestCtx::reply_handle`] is taken; the router then
+    /// suppresses any inline outcome so the request cannot be answered
+    /// twice.
+    taken: std::cell::Cell<bool>,
+}
+
+impl RequestCtx {
+    /// Budget left before the caller gives up.
+    pub fn remaining(&self, now: Time) -> Time {
+        self.deadline.saturating_sub(now)
+    }
+
+    pub fn expired(&self, now: Time) -> bool {
+        self.deadline <= now
+    }
+
+    /// Take a typed reply handle for a deferred response. Once taken, the
+    /// handle is the single path to a response: the router ignores any
+    /// inline [`Outcome::Reply`]/[`Outcome::Fail`] the handler also
+    /// returns (counted in [`RouterStats::deferred`]), so a request can
+    /// never be answered twice from the server side.
+    pub fn reply_handle(&self) -> Reply {
+        self.taken.set(true);
+        Reply {
+            handle: self.reply,
+            deadline: self.deadline,
+        }
+    }
+
+    /// Whether the reply handle has been taken (deferred response).
+    pub fn reply_taken(&self) -> bool {
+        self.taken.get()
+    }
+}
+
+/// Typed reply handle for deferred responses. Consuming methods take
+/// `self` by value, so the handle sends at most one response; taking it
+/// makes the router skip its inline response (see
+/// [`RequestCtx::reply_handle`]). A handler that takes the handle and
+/// then drops it never answers — the caller's deadline bounds the damage.
+#[derive(Debug)]
+pub struct Reply {
+    handle: ReplyHandle,
+    /// Deadline of the originating request (for budget math when the
+    /// response is produced later).
+    pub deadline: Time,
+}
+
+impl Reply {
+    pub fn ok(self, node: &mut LatticaNode, net: &mut Net, payload: impl Into<Buf>) -> Result<()> {
+        self.send(node, net, Status::Ok, payload, "")
+    }
+
+    pub fn err(
+        self,
+        node: &mut LatticaNode,
+        net: &mut Net,
+        status: Status,
+        detail: &str,
+    ) -> Result<()> {
+        self.send(node, net, status, Buf::new(), detail)
+    }
+
+    pub fn send(
+        self,
+        node: &mut LatticaNode,
+        net: &mut Net,
+        status: Status,
+        payload: impl Into<Buf>,
+        detail: &str,
+    ) -> Result<()> {
+        let LatticaNode { swarm, rpc, .. } = node;
+        let mut ctx = Ctx::new(swarm, net);
+        rpc.respond_detail(&mut ctx, self.handle, status, payload, detail)
+    }
+}
+
+/// What a unary handler decided.
+pub enum Outcome {
+    /// Respond `Ok` with this payload now.
+    Reply(Buf),
+    /// Respond with a failure status + detail now.
+    Fail(Status, String),
+    /// The handler took [`RequestCtx::reply_handle`] and will respond
+    /// later (e.g. after a nested call completes).
+    Deferred,
+}
+
+impl Outcome {
+    pub fn reply(payload: impl Into<Buf>) -> Outcome {
+        Outcome::Reply(payload.into())
+    }
+
+    pub fn fail(status: Status, detail: impl Into<String>) -> Outcome {
+        Outcome::Fail(status, detail.into())
+    }
+}
+
+/// Boxed unary method handler.
+pub type UnaryHandler = Box<dyn FnMut(&mut LatticaNode, &mut Net, &RequestCtx, Buf) -> Outcome>;
+
+/// Handler for a service's inbound RPC streams. Credit-based backpressure
+/// stays at the RPC layer (consuming an item grants credits back to the
+/// sender); the handler just observes the flow.
+pub trait StreamHandler {
+    fn on_open(
+        &mut self,
+        _node: &mut LatticaNode,
+        _net: &mut Net,
+        _peer: PeerId,
+        _method: &str,
+        _handle: StreamHandle,
+    ) {
+    }
+
+    fn on_item(
+        &mut self,
+        node: &mut LatticaNode,
+        net: &mut Net,
+        handle: StreamHandle,
+        seq: u64,
+        payload: Buf,
+    );
+
+    fn on_end(&mut self, _node: &mut LatticaNode, _net: &mut Net, _handle: StreamHandle) {}
+}
+
+/// A named service: unary methods registered by name plus an optional
+/// stream handler. Built fluently and registered with
+/// [`LatticaNode::register_service`].
+pub struct Service {
+    name: String,
+    unary: HashMap<String, UnaryHandler>,
+    stream: Option<Box<dyn StreamHandler>>,
+}
+
+impl Service {
+    pub fn new(name: &str) -> Service {
+        Service {
+            name: name.to_string(),
+            unary: HashMap::new(),
+            stream: None,
+        }
+    }
+
+    /// Register a unary method handler.
+    pub fn unary(
+        mut self,
+        method: &str,
+        h: impl FnMut(&mut LatticaNode, &mut Net, &RequestCtx, Buf) -> Outcome + 'static,
+    ) -> Service {
+        self.unary.insert(method.to_string(), Box::new(h));
+        self
+    }
+
+    /// Attach the handler for this service's inbound streams.
+    pub fn streaming(mut self, h: impl StreamHandler + 'static) -> Service {
+        self.stream = Some(Box::new(h));
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Routes RPC events to registered services. Owned by the node; dispatch
+/// runs inline in the pump, so handlers add no polling latency. Events the
+/// router does not own (client-side responses, streams of unregistered
+/// services) pass through to the app / external poller untouched.
+#[derive(Default)]
+pub struct ServiceRouter {
+    services: HashMap<String, Service>,
+    /// Inbound streams adopted by a registered service.
+    streams: HashMap<StreamHandle, String>,
+    pub stats: RouterStats,
+}
+
+impl ServiceRouter {
+    pub fn new() -> ServiceRouter {
+        ServiceRouter::default()
+    }
+
+    pub fn register(&mut self, svc: Service) {
+        self.services.insert(svc.name.clone(), svc);
+    }
+
+    pub fn has_service(&self, name: &str) -> bool {
+        self.services.contains_key(name)
+    }
+
+    /// Fold another router's registrations into this one (used by the node
+    /// pump when a handler registered services mid-dispatch).
+    pub fn merge(&mut self, other: ServiceRouter) {
+        for (name, svc) in other.services {
+            self.services.insert(name, svc);
+        }
+        for (h, s) in other.streams {
+            self.streams.insert(h, s);
+        }
+    }
+
+    /// Dispatch one RPC event. Returns `None` if consumed, or the event
+    /// back if no registered service owns it.
+    pub fn dispatch(
+        &mut self,
+        node: &mut LatticaNode,
+        net: &mut Net,
+        ev: RpcEvent,
+    ) -> Option<RpcEvent> {
+        match ev {
+            RpcEvent::Request {
+                peer,
+                service,
+                method,
+                payload,
+                deadline,
+                reply,
+            } => {
+                // Belt and braces: the RPC layer already drops requests
+                // that arrive expired; this covers budget exhausted
+                // between decode and dispatch.
+                if deadline <= net.now() {
+                    self.stats.expired += 1;
+                    return None;
+                }
+                let Some(svc) = self.services.get_mut(&service) else {
+                    self.stats.unknown_service += 1;
+                    respond(
+                        node,
+                        net,
+                        reply,
+                        Status::NotFound,
+                        Buf::new(),
+                        &format!("unknown service {service:?}"),
+                    );
+                    return None;
+                };
+                let Some(h) = svc.unary.get_mut(&method) else {
+                    self.stats.unknown_method += 1;
+                    respond(
+                        node,
+                        net,
+                        reply,
+                        Status::NotFound,
+                        Buf::new(),
+                        &format!("unknown method {method:?} on service {service:?}"),
+                    );
+                    return None;
+                };
+                let rctx = RequestCtx {
+                    peer,
+                    service,
+                    method,
+                    deadline,
+                    class: TrafficClass::Unary,
+                    reply,
+                    taken: std::cell::Cell::new(false),
+                };
+                let outcome = h(node, net, &rctx, payload);
+                if rctx.reply_taken() {
+                    // The taken handle is the single response path; an
+                    // inline outcome on top would double-respond, so it
+                    // is dropped.
+                    self.stats.deferred += 1;
+                    return None;
+                }
+                match outcome {
+                    Outcome::Reply(body) => {
+                        self.stats.served += 1;
+                        respond(node, net, reply, Status::Ok, body, "");
+                    }
+                    Outcome::Fail(status, detail) => {
+                        self.stats.failed += 1;
+                        respond(node, net, reply, status, Buf::new(), &detail);
+                    }
+                    Outcome::Deferred => {
+                        self.stats.deferred += 1;
+                    }
+                }
+                None
+            }
+            RpcEvent::StreamOpened {
+                peer,
+                service,
+                method,
+                handle,
+            } => match self.services.get_mut(&service) {
+                Some(svc) if svc.stream.is_some() => {
+                    self.streams.insert(handle, service.clone());
+                    if let Some(h) = svc.stream.as_mut() {
+                        h.on_open(node, net, peer, &method, handle);
+                    }
+                    None
+                }
+                _ => Some(RpcEvent::StreamOpened {
+                    peer,
+                    service,
+                    method,
+                    handle,
+                }),
+            },
+            RpcEvent::StreamItem {
+                handle,
+                seq,
+                payload,
+            } => {
+                // Disjoint-field borrows (streams vs services) keep this
+                // allocation-free: items are the tensor data plane.
+                let Some(owner) = self.streams.get(&handle) else {
+                    return Some(RpcEvent::StreamItem {
+                        handle,
+                        seq,
+                        payload,
+                    });
+                };
+                if let Some(h) = self.services.get_mut(owner).and_then(|s| s.stream.as_mut()) {
+                    self.stats.stream_items += 1;
+                    h.on_item(node, net, handle, seq, payload);
+                }
+                None
+            }
+            RpcEvent::StreamEnded { handle } => {
+                let Some(owner) = self.streams.remove(&handle) else {
+                    return Some(RpcEvent::StreamEnded { handle });
+                };
+                if let Some(h) = self.services.get_mut(&owner).and_then(|s| s.stream.as_mut()) {
+                    h.on_end(node, net, handle);
+                }
+                None
+            }
+            // Client-side events (responses, failures, send credits) are
+            // the stub's business; pass them through.
+            other => Some(other),
+        }
+    }
+}
+
+fn respond(
+    node: &mut LatticaNode,
+    net: &mut Net,
+    reply: ReplyHandle,
+    status: Status,
+    payload: Buf,
+    detail: &str,
+) {
+    let LatticaNode { swarm, rpc, .. } = node;
+    let mut ctx = Ctx::new(swarm, net);
+    if let Err(e) = rpc.respond_detail(&mut ctx, reply, status, payload, detail) {
+        crate::log_debug!("rpc respond failed: {e}");
+    }
+}

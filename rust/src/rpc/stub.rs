@@ -1,0 +1,656 @@
+//! Client-side typed stub: per-call deadlines, idempotent retries with
+//! exponential backoff + jitter, hedged requests after an adaptive p95
+//! delay with cancel-on-first-win, and multi-target failover across a
+//! provider list.
+//!
+//! A [`Stub`] is a client handle to one remote service. One *logical
+//! call* (an "op") can fan out into several *wire attempts*; the stub
+//! tracks them, cancels losers, and surfaces exactly one [`StubDone`]
+//! per op:
+//!
+//! ```ignore
+//! let mut stub = Stub::new("shard", vec![replica_a, replica_b]);
+//! let op = stub.call(&mut node, &mut net, "forward", req.encode());
+//! // drive loop:
+//! for ev in node_events { stub.on_node_event(&mut node, &mut net, &ev); }
+//! stub.tick(&mut node, &mut net);
+//! while let Some(done) = stub.poll_done() { /* done.status, done.payload */ }
+//! ```
+//!
+//! Retry/hedge/failover state machine (per op):
+//!
+//! * the first attempt goes to the stub's *preferred* target (the last
+//!   one that answered `Ok`, so failover is sticky and later ops don't
+//!   re-pay the discovery cost of a dead replica);
+//! * a retryable failure (`Unavailable`, local timeout, connection loss)
+//!   schedules the next attempt on the *next* target after an
+//!   exponential backoff with jitter;
+//! * with hedging enabled, a speculative second attempt is issued after
+//!   an adaptive delay (p95 of recent RTTs; a configured initial delay
+//!   until enough samples exist). First `Ok` wins; every other in-flight
+//!   attempt is cancelled at the RPC layer;
+//! * non-retryable failures (`Error`, `NotFound`) and overall-deadline
+//!   expiry finish the op immediately. Deadline expiry surfaces as
+//!   `Unavailable` with a "deadline exceeded" detail.
+//!
+//! Each attempt's wire deadline is the *remaining* overall budget
+//! (optionally clipped by `attempt_timeout`), so servers — including
+//! nested calls made by their handlers — always observe the shrunken
+//! budget, never a fresh one.
+
+use crate::identity::PeerId;
+use crate::metrics::StubStats;
+use crate::netsim::{Net, Time, MILLI};
+use crate::node::{LatticaNode, NodeEvent};
+use crate::protocols::Ctx;
+use crate::rpc::{RpcEvent, Status, CALL_TIMEOUT};
+use crate::util::buf::Buf;
+use crate::util::Rng;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+/// Retry policy for a logical call. The default ([`RetryPolicy::none`])
+/// never retries — only mark calls retryable when they are idempotent.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total wire attempts allowed through the retry path (≥ 1). Hedged
+    /// attempts are budgeted separately.
+    pub max_attempts: u32,
+    /// First backoff; doubles per retry.
+    pub base_backoff: Time,
+    pub max_backoff: Time,
+    /// Multiplicative jitter fraction in `[0, 1]`: each backoff is scaled
+    /// by a uniform factor from `1 - jitter/2` to `1 + jitter/2`, so
+    /// synchronized callers decorrelate.
+    pub jitter: f64,
+    /// Also fail over on a served [`Status::Error`] response (not just
+    /// `Unavailable`/local failures). For replicated idempotent services
+    /// where one bad replica (stale params, local corruption) should not
+    /// fail the call while a healthy sibling exists. `NotFound` (unknown
+    /// service/method) always fails fast.
+    pub retry_on_error: bool,
+}
+
+impl RetryPolicy {
+    /// No retries (safe for non-idempotent methods).
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 1,
+            base_backoff: 0,
+            max_backoff: 0,
+            jitter: 0.0,
+            retry_on_error: false,
+        }
+    }
+
+    /// Sensible default for idempotent methods: 3 attempts, 50 ms base
+    /// backoff doubling to at most 2 s, 50 % jitter.
+    pub fn idempotent() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 3,
+            base_backoff: 50 * MILLI,
+            max_backoff: 2000 * MILLI,
+            jitter: 0.5,
+            retry_on_error: false,
+        }
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy::none()
+    }
+}
+
+/// Hedging policy: issue one speculative second attempt per op after an
+/// adaptive delay, racing the primary.
+#[derive(Clone, Copy, Debug)]
+pub struct HedgePolicy {
+    pub enabled: bool,
+    /// Lower bound on the adaptive delay (avoid hedging everything on
+    /// fast paths where p95 is tiny).
+    pub min_delay: Time,
+    /// Delay used until enough RTT samples exist for a p95 estimate.
+    pub initial_delay: Time,
+}
+
+impl HedgePolicy {
+    pub fn off() -> HedgePolicy {
+        HedgePolicy {
+            enabled: false,
+            min_delay: 2 * MILLI,
+            initial_delay: 100 * MILLI,
+        }
+    }
+
+    pub fn on() -> HedgePolicy {
+        HedgePolicy {
+            enabled: true,
+            ..HedgePolicy::off()
+        }
+    }
+}
+
+impl Default for HedgePolicy {
+    fn default() -> HedgePolicy {
+        HedgePolicy::off()
+    }
+}
+
+/// Per-call options; [`Stub::call`] uses the stub's defaults.
+#[derive(Clone, Copy, Debug)]
+pub struct CallOptions {
+    /// Overall budget for the logical call (all attempts included).
+    pub deadline: Time,
+    /// Per-attempt budget; `None` = whatever remains of `deadline`. Set
+    /// this smaller than `deadline` so the retry path has room to act.
+    pub attempt_timeout: Option<Time>,
+    pub retry: RetryPolicy,
+    pub hedge: HedgePolicy,
+}
+
+impl Default for CallOptions {
+    fn default() -> CallOptions {
+        CallOptions {
+            deadline: CALL_TIMEOUT,
+            attempt_timeout: None,
+            retry: RetryPolicy::none(),
+            hedge: HedgePolicy::off(),
+        }
+    }
+}
+
+/// Final outcome of one logical call.
+#[derive(Clone, Debug)]
+pub struct StubDone {
+    /// Op id returned by [`Stub::call`].
+    pub op: u64,
+    /// `Ok`, or the final failure status (local deadline expiry and
+    /// connection failures surface as `Unavailable`).
+    pub status: Status,
+    pub payload: Buf,
+    /// Failure detail: the server's `error_detail` when one arrived, or
+    /// a local reason ("deadline exceeded", "connection closed"…).
+    pub detail: String,
+    /// Logical-call latency (first issue → completion).
+    pub rtt: Time,
+    /// Wire attempts this op used.
+    pub attempts: u32,
+    /// The winning response came from a hedged attempt.
+    pub hedge_won: bool,
+}
+
+struct Attempt {
+    call_id: u64,
+    /// Index into `targets`.
+    target: usize,
+    hedge: bool,
+}
+
+struct OpState {
+    method: String,
+    payload: Buf,
+    started: Time,
+    /// Absolute overall deadline.
+    deadline: Time,
+    opts: CallOptions,
+    attempts_issued: u32,
+    retries_done: u32,
+    inflight: Vec<Attempt>,
+    /// Backoff timer for the next retry attempt.
+    retry_at: Option<Time>,
+    hedge_at: Option<Time>,
+    /// Target index the next attempt will use.
+    next_target: usize,
+    /// Target of the most recently issued attempt.
+    last_target: Option<usize>,
+    last_status: Status,
+    last_detail: String,
+}
+
+/// Sliding window of recent op RTTs for the adaptive hedge delay.
+#[derive(Default)]
+struct LatWindow {
+    samples: Vec<Time>,
+    pos: usize,
+}
+
+const LAT_WINDOW: usize = 64;
+/// Minimum samples before the p95 estimate is trusted.
+const LAT_MIN_SAMPLES: usize = 8;
+
+impl LatWindow {
+    fn record(&mut self, t: Time) {
+        if self.samples.len() < LAT_WINDOW {
+            self.samples.push(t);
+        } else {
+            self.samples[self.pos] = t;
+            self.pos = (self.pos + 1) % LAT_WINDOW;
+        }
+    }
+
+    fn p95(&self) -> Option<Time> {
+        if self.samples.len() < LAT_MIN_SAMPLES {
+            return None;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        let idx = (sorted.len() * 95 / 100).min(sorted.len() - 1);
+        Some(sorted[idx])
+    }
+}
+
+/// Client handle to one remote service; see the module docs.
+pub struct Stub {
+    pub service: String,
+    /// Provider list in preference order; attempts fail over across it.
+    targets: Vec<PeerId>,
+    /// Default options for [`Stub::call`].
+    pub opts: CallOptions,
+    /// Index of the target new ops try first (sticky failover).
+    preferred: usize,
+    next_op: u64,
+    ops: BTreeMap<u64, OpState>,
+    /// rpc call id → op id.
+    by_call: HashMap<u64, u64>,
+    lat: LatWindow,
+    done: VecDeque<StubDone>,
+    rng: Rng,
+    pub stats: StubStats,
+}
+
+impl Stub {
+    pub fn new(service: &str, targets: Vec<PeerId>) -> Stub {
+        // Jitter seed derived from (service, targets): deterministic for a
+        // given deployment, but different stubs draw different jitter, so
+        // simultaneous failures don't produce synchronized retry storms.
+        let mut seed = 0xcbf2_9ce4_8422_2325u64; // FNV-1a offset basis
+        for b in service.bytes() {
+            seed = (seed ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        for t in &targets {
+            for &b in t.as_bytes() {
+                seed = (seed ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        Stub {
+            service: service.to_string(),
+            targets,
+            opts: CallOptions::default(),
+            preferred: 0,
+            next_op: 1,
+            ops: BTreeMap::new(),
+            by_call: HashMap::new(),
+            lat: LatWindow::default(),
+            done: VecDeque::new(),
+            rng: Rng::new(seed),
+            stats: StubStats::default(),
+        }
+    }
+
+    pub fn with_options(mut self, opts: CallOptions) -> Stub {
+        self.opts = opts;
+        self
+    }
+
+    /// Replace the provider list (e.g. after fresh DHT discovery).
+    pub fn set_targets(&mut self, targets: Vec<PeerId>) {
+        self.targets = targets;
+        self.preferred = 0;
+    }
+
+    pub fn targets(&self) -> &[PeerId] {
+        &self.targets
+    }
+
+    /// Outstanding logical calls.
+    pub fn in_flight(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Issue a logical call with the stub's default options.
+    pub fn call(
+        &mut self,
+        node: &mut LatticaNode,
+        net: &mut Net,
+        method: &str,
+        payload: impl Into<Buf>,
+    ) -> u64 {
+        let opts = self.opts;
+        self.call_opts(node, net, method, payload, opts)
+    }
+
+    /// Issue a logical call with explicit options; returns the op id.
+    /// The op always completes — success, failure or deadline — via
+    /// [`Stub::poll_done`], provided events are fed and `tick` runs.
+    pub fn call_opts(
+        &mut self,
+        node: &mut LatticaNode,
+        net: &mut Net,
+        method: &str,
+        payload: impl Into<Buf>,
+        opts: CallOptions,
+    ) -> u64 {
+        let op = self.next_op;
+        self.next_op += 1;
+        self.stats.ops += 1;
+        let now = net.now();
+        let mut state = OpState {
+            method: method.to_string(),
+            payload: payload.into(),
+            started: now,
+            deadline: now + opts.deadline,
+            opts,
+            attempts_issued: 0,
+            retries_done: 0,
+            inflight: Vec::new(),
+            retry_at: None,
+            hedge_at: None,
+            next_target: self.preferred.min(self.targets.len().saturating_sub(1)),
+            last_target: None,
+            last_status: Status::Unavailable,
+            last_detail: String::new(),
+        };
+        if self.targets.is_empty() {
+            state.last_detail = "no targets".into();
+            self.ops.insert(op, state);
+            self.finish(node, net, op, Status::Unavailable, Buf::new(), false);
+            return op;
+        }
+        if opts.hedge.enabled {
+            state.hedge_at = Some(now + self.hedge_delay(&opts));
+        }
+        self.ops.insert(op, state);
+        self.issue_attempt(node, net, op, false);
+        op
+    }
+
+    /// Feed a node event; returns true if it belonged to this stub.
+    pub fn on_node_event(&mut self, node: &mut LatticaNode, net: &mut Net, ev: &NodeEvent) -> bool {
+        match ev {
+            NodeEvent::Rpc(e) => self.on_rpc_event(node, net, e),
+            _ => false,
+        }
+    }
+
+    /// Feed an RPC event; returns true if it belonged to this stub.
+    pub fn on_rpc_event(&mut self, node: &mut LatticaNode, net: &mut Net, ev: &RpcEvent) -> bool {
+        match ev {
+            RpcEvent::Response {
+                call_id,
+                status,
+                payload,
+                detail,
+                ..
+            } => {
+                let Some(&op) = self.by_call.get(call_id) else {
+                    return false;
+                };
+                self.by_call.remove(call_id);
+                let Some(state) = self.ops.get_mut(&op) else {
+                    return true;
+                };
+                let attempt_idx = state.inflight.iter().position(|a| a.call_id == *call_id);
+                let (hedge, won_target) = match attempt_idx {
+                    Some(i) => {
+                        let a = state.inflight.remove(i);
+                        (a.hedge, Some(a.target))
+                    }
+                    None => (false, None),
+                };
+                let retry_on_error = state.opts.retry.retry_on_error;
+                match status {
+                    Status::Ok => {
+                        // Sticky preference follows the replica that
+                        // actually answered, not the last one tried.
+                        if let Some(t) = won_target {
+                            state.last_target = Some(t);
+                        }
+                        self.lat.record(net.now().saturating_sub(state.started));
+                        self.finish(node, net, op, Status::Ok, payload.clone(), hedge);
+                    }
+                    Status::Unavailable => {
+                        self.note_failure(node, net, op, Status::Unavailable, detail.clone());
+                    }
+                    Status::Error if retry_on_error => {
+                        // Opt-in replica failover on served errors.
+                        self.note_failure(node, net, op, Status::Error, detail.clone());
+                    }
+                    other => {
+                        // Non-retryable: surface the server's verdict as-is.
+                        let state = self.ops.get_mut(&op).unwrap();
+                        state.last_status = *other;
+                        state.last_detail = detail.clone();
+                        self.finish(node, net, op, *other, payload.clone(), false);
+                    }
+                }
+                true
+            }
+            RpcEvent::CallFailed { call_id, reason } => {
+                let Some(&op) = self.by_call.get(call_id) else {
+                    return false;
+                };
+                self.by_call.remove(call_id);
+                if let Some(state) = self.ops.get_mut(&op) {
+                    state.inflight.retain(|a| a.call_id != *call_id);
+                    self.note_failure(node, net, op, Status::Unavailable, reason.clone());
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Drive timers: overall deadlines, retry backoffs, hedge launches.
+    /// Call once per event-loop iteration.
+    pub fn tick(&mut self, node: &mut LatticaNode, net: &mut Net) {
+        let now = net.now();
+        let op_ids: Vec<u64> = self.ops.keys().copied().collect();
+        for op in op_ids {
+            let Some(state) = self.ops.get(&op) else { continue };
+            if now >= state.deadline {
+                let detail = if state.last_detail.is_empty() {
+                    "deadline exceeded".to_string()
+                } else {
+                    format!("deadline exceeded (last error: {})", state.last_detail)
+                };
+                self.stats.deadline_expired += 1;
+                if let Some(s) = self.ops.get_mut(&op) {
+                    s.last_detail = detail;
+                }
+                self.finish(node, net, op, Status::Unavailable, Buf::new(), false);
+                continue;
+            }
+            if state.retry_at.is_some_and(|t| now >= t) {
+                if let Some(s) = self.ops.get_mut(&op) {
+                    s.retry_at = None;
+                    s.retries_done += 1;
+                }
+                self.stats.retries += 1;
+                self.issue_attempt(node, net, op, false);
+                continue;
+            }
+            let hedge_due = state.hedge_at.is_some_and(|t| now >= t)
+                && state.inflight.len() == 1
+                && !state.inflight[0].hedge;
+            if hedge_due {
+                if let Some(s) = self.ops.get_mut(&op) {
+                    s.hedge_at = None;
+                    // Hedge races a *different* target when one exists.
+                    s.next_target = (s.next_target + 1) % self.targets.len().max(1);
+                }
+                self.stats.hedges += 1;
+                self.issue_attempt(node, net, op, true);
+            }
+        }
+    }
+
+    /// Next completed logical call, if any.
+    pub fn poll_done(&mut self) -> Option<StubDone> {
+        self.done.pop_front()
+    }
+
+    // ------------------------------------------------------------------
+
+    fn hedge_delay(&self, opts: &CallOptions) -> Time {
+        self.lat
+            .p95()
+            .map(|t| t.max(opts.hedge.min_delay))
+            .unwrap_or(opts.hedge.initial_delay)
+    }
+
+    /// Issue one wire attempt for `op` to its current target.
+    fn issue_attempt(&mut self, node: &mut LatticaNode, net: &mut Net, op: u64, hedge: bool) {
+        if self.targets.is_empty() {
+            self.note_failure(node, net, op, Status::Unavailable, "no targets".into());
+            return;
+        }
+        let Some(state) = self.ops.get_mut(&op) else { return };
+        let now = net.now();
+        let target = state.next_target % self.targets.len();
+        let peer = self.targets[target];
+        let remaining = state.deadline.saturating_sub(now);
+        let budget = match state.opts.attempt_timeout {
+            Some(t) => t.min(remaining),
+            None => remaining,
+        };
+        if state.last_target.is_some_and(|t| t != target) {
+            self.stats.failovers += 1;
+        }
+        state.last_target = Some(target);
+        state.attempts_issued += 1;
+        self.stats.attempts += 1;
+        let res = {
+            let LatticaNode { swarm, rpc, .. } = node;
+            let mut ctx = Ctx::new(swarm, net);
+            rpc.call_opts(
+                &mut ctx,
+                &peer,
+                &self.service,
+                &state.method,
+                state.payload.clone(),
+                budget,
+            )
+        };
+        match res {
+            Ok(call_id) => {
+                state.inflight.push(Attempt {
+                    call_id,
+                    target,
+                    hedge,
+                });
+                self.by_call.insert(call_id, op);
+            }
+            Err(e) => {
+                // Could not even send (no route, dial refused): treat as a
+                // retryable failure of this target.
+                self.note_failure(node, net, op, Status::Unavailable, e.to_string());
+            }
+        }
+    }
+
+    /// Record a retryable failure; schedule the next attempt on the next
+    /// target, or finish the op if attempts/budget are exhausted.
+    fn note_failure(
+        &mut self,
+        node: &mut LatticaNode,
+        net: &mut Net,
+        op: u64,
+        status: Status,
+        detail: String,
+    ) {
+        let now = net.now();
+        let Some(state) = self.ops.get_mut(&op) else { return };
+        state.last_status = status;
+        state.last_detail = detail;
+        // Another attempt (e.g. the hedge) is still racing: let it run.
+        if !state.inflight.is_empty() {
+            return;
+        }
+        let retry = state.opts.retry;
+        // `retries_done` counts backoff-path reissues only, so hedged
+        // attempts never consume the retry budget.
+        let deadline_passed = now >= state.deadline;
+        let can_retry = state.retries_done + 1 < retry.max_attempts
+            && !deadline_passed
+            && !self.targets.is_empty();
+        if !can_retry {
+            let status = if deadline_passed {
+                // Normalize budget exhaustion regardless of which timer
+                // observed it first (the RPC layer's coarse proto tick
+                // can beat Stub::tick to the punch): same status, same
+                // detail shape, same counter as the tick path.
+                self.stats.deadline_expired += 1;
+                if let Some(s) = self.ops.get_mut(&op) {
+                    if s.last_detail.is_empty() {
+                        s.last_detail = "deadline exceeded".to_string();
+                    } else if !s.last_detail.contains("deadline exceeded") {
+                        s.last_detail =
+                            format!("deadline exceeded (last error: {})", s.last_detail);
+                    }
+                }
+                Status::Unavailable
+            } else {
+                state.last_status
+            };
+            self.finish(node, net, op, status, Buf::new(), false);
+            return;
+        }
+        // Fail over to the next target for the retry.
+        state.next_target = (state.next_target + 1) % self.targets.len().max(1);
+        let mut backoff = retry
+            .base_backoff
+            .saturating_mul(1u64 << state.retries_done.min(20))
+            .min(retry.max_backoff.max(retry.base_backoff));
+        if retry.jitter > 0.0 && backoff > 0 {
+            let f = 1.0 - retry.jitter / 2.0 + retry.jitter * self.rng.gen_f64();
+            backoff = (backoff as f64 * f) as Time;
+        }
+        state.retry_at = Some(now + backoff);
+    }
+
+    /// Complete an op: cancel losing attempts, emit the `StubDone`.
+    fn finish(
+        &mut self,
+        node: &mut LatticaNode,
+        net: &mut Net,
+        op: u64,
+        status: Status,
+        payload: Buf,
+        hedge_won: bool,
+    ) {
+        let Some(state) = self.ops.remove(&op) else { return };
+        for a in &state.inflight {
+            self.by_call.remove(&a.call_id);
+            let LatticaNode { swarm, rpc, .. } = &mut *node;
+            let mut ctx = Ctx::new(swarm, net);
+            if rpc.cancel(&mut ctx, a.call_id) {
+                self.stats.cancelled += 1;
+            }
+        }
+        match status {
+            Status::Ok => {
+                self.stats.ok += 1;
+                if hedge_won {
+                    self.stats.hedge_wins += 1;
+                }
+                if let Some(t) = state.last_target {
+                    self.preferred = t;
+                }
+            }
+            _ => self.stats.failed += 1,
+        }
+        self.done.push_back(StubDone {
+            op,
+            status,
+            payload,
+            detail: if status == Status::Ok {
+                String::new()
+            } else {
+                state.last_detail.clone()
+            },
+            rtt: net.now().saturating_sub(state.started),
+            attempts: state.attempts_issued,
+            hedge_won,
+        });
+    }
+}

@@ -8,10 +8,11 @@ use crate::identity::PeerId;
 use crate::netsim::link::PathProfile;
 use crate::netsim::nat::NatType;
 use crate::netsim::topology::{LinkProfile, TopologyBuilder};
-use crate::netsim::{Net, World, MICRO, MILLI, SECOND};
-use crate::node::{App, LatticaNode, NodeConfig, NodeEvent};
+use crate::netsim::{Time, World, MICRO, MILLI, SECOND};
+use crate::node::{LatticaNode, NodeConfig, NodeEvent};
 use crate::protocols::Ctx;
-use crate::rpc::{RpcEvent, Status};
+use crate::rpc::{Outcome, Service, Stub, StubDone};
+use crate::util::buf::Buf;
 use std::cell::RefCell;
 use std::rc::Rc;
 
@@ -133,28 +134,53 @@ pub fn table1_world_cc(
     (world, client, server)
 }
 
-/// Echo RPC app: responds to `bench` service with a payload of
-/// `response_size` bytes.
-pub struct EchoApp {
-    pub response_size: usize,
+/// Echo RPC service for benches: every `bench.echo` call answers with a
+/// payload of `response_size` bytes. Register with
+/// [`LatticaNode::register_service`].
+pub fn echo_service(response_size: usize) -> Service {
+    // One shared response buffer: each reply bumps a refcount instead of
+    // allocating (matches the zero-copy send path the bench measures).
+    let body: Buf = vec![0xA5u8; response_size].into();
+    Service::new("bench").unary("echo", move |_node, _net, _ctx, _payload| {
+        Outcome::Reply(body.clone())
+    })
 }
 
-impl App for EchoApp {
-    fn handle(
-        &mut self,
-        node: &mut LatticaNode,
-        net: &mut Net,
-        ev: NodeEvent,
-    ) -> Option<NodeEvent> {
-        match ev {
-            NodeEvent::Rpc(RpcEvent::Request { service, reply, .. }) if service == "bench" => {
-                let mut ctx = Ctx::new(&mut node.swarm, net);
-                let body = vec![0xA5u8; self.response_size];
-                let _ = node.rpc.respond(&mut ctx, reply, Status::Ok, body);
-                None
+/// Drive the world until the stub op issued here completes (or `timeout`
+/// virtual time passes). Convenience for linear example code; events the
+/// stub does not own are discarded, so only use it where no other
+/// consumer is polling this node's events.
+pub fn stub_call_blocking(
+    world: &mut World,
+    node: &Node,
+    stub: &mut Stub,
+    method: &str,
+    payload: impl Into<Buf>,
+    timeout: Time,
+) -> Option<StubDone> {
+    let op = {
+        let mut n = node.borrow_mut();
+        stub.call(&mut n, &mut world.net, method, payload)
+    };
+    let deadline = world.net.now() + timeout;
+    loop {
+        {
+            let evs = node.borrow_mut().drain_events();
+            let mut n = node.borrow_mut();
+            for ev in &evs {
+                stub.on_node_event(&mut n, &mut world.net, ev);
             }
-            other => Some(other),
+            stub.tick(&mut n, &mut world.net);
         }
+        while let Some(done) = stub.poll_done() {
+            if done.op == op {
+                return Some(done);
+            }
+        }
+        if world.net.now() >= deadline {
+            return None;
+        }
+        world.run_for(5 * MILLI);
     }
 }
 
@@ -690,7 +716,13 @@ pub fn model_sync_scenario(cfg: &ModelSyncConfig) -> ModelSyncOutcome {
             .sum()
     };
 
-    let mut publisher = CheckpointPublisher::new("policy");
+    // The trainer's model-sync control plane is a registered service:
+    // replicas that miss the gossip announcement can pull the latest
+    // checkpoint pointer via `model.latest`.
+    let publisher = Rc::new(RefCell::new(CheckpointPublisher::new("policy")));
+    trainer
+        .borrow_mut()
+        .register_service(CheckpointPublisher::service(publisher.clone()));
     let mut rng = crate::util::Rng::new(cfg.seed ^ 0xB10B);
     let mut blob = rng.gen_bytes(cfg.blob_bytes);
     let mut stats = crate::metrics::SyncStats {
@@ -724,7 +756,9 @@ pub fn model_sync_scenario(cfg: &ModelSyncConfig) -> ModelSyncOutcome {
         let ingress_before: Vec<u64> = replicas.iter().map(replica_ingress).collect();
         let (root, ann) = {
             let mut tr = trainer.borrow_mut();
-            publisher.publish_blob(&mut tr, &mut world.net, v as u64, &blob)
+            publisher
+                .borrow_mut()
+                .publish_blob(&mut tr, &mut world.net, v as u64, &blob)
         };
         if v > 1 {
             let announced = ann

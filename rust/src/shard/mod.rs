@@ -1,21 +1,26 @@
 //! Sharded inference: shard servers hosting layer ranges, and a
-//! shard-aware pipeline client with DHT-based failover (Fig. 1(4)).
+//! shard-aware pipeline client with replica failover (Fig. 1(4)).
 //!
 //! A request enters at shard 0 (embed + first layers); activations hop
 //! between shards as RPC tensor payloads; the last shard applies the
 //! logits head and the next-token distribution returns to the caller.
-//! Shards are replicated: the client stub retries a failed hop on an
-//! alternate replica resolved from its provider table.
+//! Shards are replicated: each pipeline stage is a [`Stub`] over its
+//! replica set, so a failed hop retries on an alternate replica (with
+//! backoff, per-hop deadlines and sticky target preference) without any
+//! failover logic in this module.
+//!
+//! The server side is a registered service
+//! ([`ShardServer::into_service`]), not an `App` match arm.
 
 use crate::identity::PeerId;
-use crate::netsim::Net;
-use crate::node::{App, LatticaNode, NodeEvent};
-use crate::protocols::Ctx;
-use crate::rpc::{ReplyHandle, RpcEvent, Status};
+use crate::netsim::{Net, Time, MILLI, SECOND};
+use crate::node::LatticaNode;
+use crate::rpc::{CallOptions, Outcome, RetryPolicy, RpcEvent, Service, Status, Stub};
 use crate::runtime::{Engine, Tensor};
 use crate::util::varint;
 use anyhow::{Context, Result};
 use std::cell::RefCell;
+use std::collections::HashMap;
 use std::rc::Rc;
 
 pub const SHARD_SERVICE: &str = "shard";
@@ -160,176 +165,174 @@ impl ShardServer {
     pub fn swap_params(&mut self, params: Vec<Tensor>) {
         self.params = params;
     }
-}
 
-impl App for ShardServer {
-    fn handle(
-        &mut self,
-        node: &mut LatticaNode,
-        net: &mut Net,
-        ev: NodeEvent,
-    ) -> Option<NodeEvent> {
-        match ev {
-            NodeEvent::Rpc(RpcEvent::Request {
-                service,
-                method,
-                payload,
-                reply,
-                ..
-            }) if service == SHARD_SERVICE => {
-                let mut ctx = Ctx::new(&mut node.swarm, net);
-                match method.as_str() {
-                    "forward" => match ShardRequest::decode(&payload).and_then(|r| self.forward(&r)) {
-                        Ok(out) => {
-                            let _ = node.rpc.respond(&mut ctx, reply, Status::Ok, out.encode());
-                        }
-                        Err(e) => {
-                            let _ = node.rpc.respond(
-                                &mut ctx,
-                                reply,
-                                Status::Error,
-                                e.to_string().as_bytes(),
-                            );
-                        }
-                    },
-                    "health" => {
-                        let _ = node.rpc.respond(&mut ctx, reply, Status::Ok, b"ok");
-                    }
-                    _ => {
-                        let _ = node.rpc.respond(&mut ctx, reply, Status::NotFound, b"");
-                    }
+    /// Turn this server into a registered [`Service`] for
+    /// [`LatticaNode::register_service`]. The returned shared handle
+    /// keeps the server reachable for hot-swapping parameters and
+    /// inspecting the `served` counter while the service runs.
+    pub fn into_service(self) -> (Service, Rc<RefCell<ShardServer>>) {
+        let server = Rc::new(RefCell::new(self));
+        let h = server.clone();
+        let svc = Service::new(SHARD_SERVICE)
+            .unary("forward", move |_node, _net, _ctx, payload| {
+                match ShardRequest::decode(&payload).and_then(|r| h.borrow_mut().forward(&r)) {
+                    Ok(out) => Outcome::reply(out.encode()),
+                    Err(e) => Outcome::fail(Status::Error, e.to_string()),
                 }
-                None
-            }
-            other => Some(other),
-        }
+            })
+            .unary("health", |_node, _net, _ctx, _payload| Outcome::reply(&b"ok"[..]));
+        (svc, server)
     }
 }
 
-/// Reply handle re-export for apps.
-pub type Reply = ReplyHandle;
+/// Per-hop deadline before a stage attempt fails over to the next
+/// replica.
+const STAGE_ATTEMPT_TIMEOUT: Time = 2 * SECOND;
+/// Overall budget for one hop (all replica attempts included).
+const STAGE_DEADLINE: Time = 30 * SECOND;
 
-/// Client-side pipeline: ordered shard stages, each with replica peers.
-/// Retries a failed hop on the next replica (the shard-aware stub).
+/// Client-side pipeline: ordered shard stages, each served by a [`Stub`]
+/// over its replica set. A failed hop (timeout, unreachable replica,
+/// `Unavailable`) fails over to the next replica inside the stub; the
+/// pipeline only sees hops that finally succeeded or exhausted every
+/// replica.
 pub struct PipelineClient {
     /// stages[i] = replica PeerIds for shard i, in preference order.
     pub stages: Vec<Vec<PeerId>>,
+    /// One stub per stage (targets = that stage's replicas).
+    stubs: Vec<Stub>,
     pub next_request_id: u64,
-    /// In-flight pipeline runs: call_id → run state.
-    runs: std::collections::HashMap<u64, RunState>,
-    pub completed: Vec<(u64, Tensor, crate::netsim::Time)>, // (request, logits, started_at)
+    /// In-flight hops: (stage, stub op id) → run state.
+    runs: HashMap<(usize, u64), RunState>,
+    pub completed: Vec<(u64, Tensor, Time)>, // (request, logits, started_at)
     pub failed: Vec<(u64, String)>,
 }
 
 struct RunState {
     request_id: u64,
-    stage: usize,
-    replica: usize,
     tokens: Vec<i32>,
     hidden: Option<Tensor>,
-    started_at: crate::netsim::Time,
+    started_at: Time,
 }
 
 impl PipelineClient {
     pub fn new(stages: Vec<Vec<PeerId>>) -> PipelineClient {
+        let stubs = stages
+            .iter()
+            .map(|replicas| {
+                Stub::new(SHARD_SERVICE, replicas.clone()).with_options(CallOptions {
+                    deadline: STAGE_DEADLINE,
+                    attempt_timeout: Some(STAGE_ATTEMPT_TIMEOUT),
+                    retry: RetryPolicy {
+                        // Enough attempts to visit every replica at least
+                        // once, plus one revisit.
+                        max_attempts: replicas.len().max(1) as u32 + 1,
+                        base_backoff: 25 * MILLI,
+                        max_backoff: 500 * MILLI,
+                        jitter: 0.5,
+                        // One replica serving errors (stale params after a
+                        // bad hot-swap, local corruption) must not fail
+                        // the request while a healthy sibling exists.
+                        retry_on_error: true,
+                    },
+                    ..CallOptions::default()
+                })
+            })
+            .collect();
         PipelineClient {
             stages,
+            stubs,
             next_request_id: 1,
-            runs: std::collections::HashMap::new(),
+            runs: HashMap::new(),
             completed: Vec::new(),
             failed: Vec::new(),
         }
     }
 
+    /// Per-stage stub stats (failovers, retries…), for tests and reports.
+    pub fn stage_stats(&self, stage: usize) -> crate::metrics::StubStats {
+        self.stubs[stage].stats
+    }
+
     /// Start a pipeline run over `tokens`; returns the request id.
     pub fn infer(&mut self, node: &mut LatticaNode, net: &mut Net, tokens: Vec<i32>) -> Result<u64> {
+        anyhow::ensure!(!self.stages.is_empty(), "pipeline has no stages");
         let request_id = self.next_request_id;
         self.next_request_id += 1;
         let run = RunState {
             request_id,
-            stage: 0,
-            replica: 0,
             tokens,
             hidden: None,
             started_at: net.now(),
         };
-        self.dispatch(node, net, run)?;
+        self.dispatch(node, net, 0, run);
         Ok(request_id)
     }
 
-    fn dispatch(&mut self, node: &mut LatticaNode, net: &mut Net, run: RunState) -> Result<()> {
-        let replicas = &self.stages[run.stage];
-        anyhow::ensure!(
-            run.replica < replicas.len(),
-            "request {}: all replicas of stage {} failed",
-            run.request_id,
-            run.stage
-        );
-        let peer = replicas[run.replica];
+    fn dispatch(&mut self, node: &mut LatticaNode, net: &mut Net, stage: usize, run: RunState) {
         let req = ShardRequest {
             request_id: run.request_id,
-            tokens: if run.stage == 0 { run.tokens.clone() } else { vec![] },
+            tokens: if stage == 0 { run.tokens.clone() } else { vec![] },
             hidden: run.hidden.clone(),
         };
-        let mut ctx = Ctx::new(&mut node.swarm, net);
-        let call_id = node
-            .rpc
-            .call(&mut ctx, &peer, SHARD_SERVICE, "forward", req.encode())?;
-        self.runs.insert(call_id, run);
-        Ok(())
+        let op = self.stubs[stage].call(node, net, "forward", req.encode());
+        self.runs.insert((stage, op), run);
     }
 
     /// Feed RPC events; returns true if the event was consumed.
     pub fn on_rpc_event(&mut self, node: &mut LatticaNode, net: &mut Net, ev: &RpcEvent) -> bool {
-        match ev {
-            RpcEvent::Response {
-                call_id,
-                status,
-                payload,
-                ..
-            } => {
-                let Some(mut run) = self.runs.remove(call_id) else {
-                    return false;
+        let mut consumed = false;
+        for stub in &mut self.stubs {
+            if stub.on_rpc_event(node, net, ev) {
+                consumed = true;
+                break;
+            }
+        }
+        self.advance(node, net);
+        consumed
+    }
+
+    /// Drive stub timers (retry backoff, per-hop deadlines). Call once
+    /// per event-loop iteration.
+    pub fn tick(&mut self, node: &mut LatticaNode, net: &mut Net) {
+        for stub in &mut self.stubs {
+            stub.tick(node, net);
+        }
+        self.advance(node, net);
+    }
+
+    /// Collect finished hops and dispatch the next stage.
+    fn advance(&mut self, node: &mut LatticaNode, net: &mut Net) {
+        for stage in 0..self.stubs.len() {
+            while let Some(done) = self.stubs[stage].poll_done() {
+                let Some(mut run) = self.runs.remove(&(stage, done.op)) else {
+                    continue;
                 };
-                if *status != Status::Ok {
-                    // Failover: try the next replica of this stage.
-                    run.replica += 1;
-                    let rid = run.request_id;
-                    if let Err(e) = self.dispatch(node, net, run) {
-                        // Exhausted replicas.
-                        self.failed.push((rid, e.to_string()));
-                    }
-                    return true;
+                if done.status != Status::Ok {
+                    self.failed.push((
+                        run.request_id,
+                        format!(
+                            "stage {stage}: all replicas failed ({:?}: {})",
+                            done.status, done.detail
+                        ),
+                    ));
+                    continue;
                 }
-                let Ok(t) = Tensor::decode(payload) else {
+                let Ok(t) = Tensor::decode(&done.payload) else {
                     self.failed.push((run.request_id, "bad tensor".into()));
-                    return true;
+                    continue;
                 };
-                if run.stage + 1 == self.stages.len() {
+                if stage + 1 == self.stages.len() {
                     self.completed.push((run.request_id, t, run.started_at));
                 } else {
-                    run.stage += 1;
-                    run.replica = 0;
                     run.hidden = Some(t);
-                    let rid = run.request_id;
-                    if let Err(e) = self.dispatch(node, net, run) {
-                        self.failed.push((rid, e.to_string()));
-                    }
+                    let next = RunState {
+                        tokens: Vec::new(),
+                        ..run
+                    };
+                    self.dispatch(node, net, stage + 1, next);
                 }
-                true
             }
-            RpcEvent::CallFailed { call_id, .. } => {
-                let Some(mut run) = self.runs.remove(call_id) else {
-                    return false;
-                };
-                run.replica += 1;
-                let rid = run.request_id;
-                if let Err(e) = self.dispatch(node, net, run) {
-                    self.failed.push((rid, e.to_string()));
-                }
-                true
-            }
-            _ => false,
         }
     }
 

@@ -7,10 +7,8 @@
 
 use lattica::identity::Keypair;
 use lattica::netsim::{Time, MILLI, SECOND};
-use lattica::node::{LatticaNode, NodeEvent};
-use lattica::protocols::Ctx;
-use lattica::rpc::RpcEvent;
-use lattica::scenarios::{table1_world_cc, EchoApp, NetScenario};
+use lattica::rpc::{Status, Stub};
+use lattica::scenarios::{echo_service, table1_world_cc, NetScenario};
 use lattica::transport::cc::{CcAlgorithm, INITIAL_CWND, MSS};
 use lattica::transport::connection::{ConnEvent, Connection, ConnectionConfig, Role};
 use lattica::transport::packet::Packet;
@@ -229,8 +227,11 @@ fn cubic_outperforms_newreno_on_high_bdp() {
     /// path (bounded work, so the debug-mode crypto cost stays sane).
     fn finish_time(cc: CcAlgorithm, calls: usize) -> Time {
         let (mut world, client, server) = table1_world_cc(NetScenario::Bufferbloat, 7, cc);
-        server.borrow_mut().app = Some(Box::new(EchoApp { response_size: 128 }));
+        server.borrow_mut().register_service(echo_service(128));
         let server_peer = server.borrow().peer_id();
+        // No-retry stub: this measures the transport's recovery, so the
+        // RPC layer must not paper over losses.
+        let mut stub = Stub::new("bench", vec![server_peer]);
         let body: Buf = vec![0xA7u8; 256 * 1024].into();
         let start = world.net.now();
         let deadline = start + 120 * SECOND;
@@ -238,24 +239,23 @@ fn cubic_outperforms_newreno_on_high_bdp() {
         while done < calls && world.net.now() < deadline {
             while in_flight < 16 && issued < calls {
                 let mut n = client.borrow_mut();
-                let LatticaNode { swarm, rpc, .. } = &mut *n;
-                let mut ctx = Ctx::new(swarm, &mut world.net);
-                if rpc.call(&mut ctx, &server_peer, "bench", "echo", body.clone()).is_ok() {
-                    issued += 1;
-                    in_flight += 1;
-                } else {
-                    break;
-                }
+                stub.call(&mut n, &mut world.net, "echo", body.clone());
+                issued += 1;
+                in_flight += 1;
             }
             world.run_for(5 * MILLI);
-            for e in client.borrow_mut().drain_events() {
-                match e {
-                    NodeEvent::Rpc(RpcEvent::Response { .. }) => {
-                        done += 1;
-                        in_flight -= 1;
-                    }
-                    NodeEvent::Rpc(RpcEvent::CallFailed { .. }) => in_flight -= 1,
-                    _ => {}
+            let evs = client.borrow_mut().drain_events();
+            {
+                let mut n = client.borrow_mut();
+                for e in &evs {
+                    stub.on_node_event(&mut n, &mut world.net, e);
+                }
+                stub.tick(&mut n, &mut world.net);
+            }
+            while let Some(d) = stub.poll_done() {
+                in_flight -= 1;
+                if d.status == Status::Ok {
+                    done += 1;
                 }
             }
         }

@@ -11,6 +11,7 @@ use lattica::crdt::CrdtStore;
 use lattica::identity::Keypair;
 use lattica::protocols::bitswap::BitswapMsg;
 use lattica::protocols::kad::{KadMsg, PeerEntry};
+use lattica::rpc::RpcMsg;
 use lattica::util::buf::Buf;
 use lattica::util::varint;
 use lattica::util::Rng;
@@ -100,6 +101,29 @@ fn kad_corpus() -> Vec<Vec<u8>> {
         cids: vec![Cid::of(b"payload")],
         block: vec![0xAB; 400].into(),
     };
+    // RPC request with the deadline/detail fields populated…
+    let rpc_req = RpcMsg {
+        kind: 1, // REQUEST
+        service: "shard".into(),
+        method: "forward".into(),
+        payload: vec![0x5A; 300].into(),
+        deadline_ns: 123_456_789_000,
+        ..Default::default()
+    };
+    let rpc_resp = RpcMsg {
+        kind: 2, // RESPONSE
+        status: 3,
+        error_detail: "replica down".into(),
+        ..Default::default()
+    };
+    // …and a legacy pre-`deadline_ns` encoding (fields 1–6 only), exactly
+    // as an old peer would put it on the wire.
+    let mut legacy = PbWriter::new();
+    legacy.uint(1, 1);
+    legacy.string(2, "shard");
+    legacy.string(3, "forward");
+    legacy.bytes(4, &[7u8; 64]);
+    legacy.uint(6, 2);
     vec![
         full.encode(),
         small.encode(),
@@ -111,6 +135,9 @@ fn kad_corpus() -> Vec<Vec<u8>> {
         want.encode(),
         block.encode(),
         BitswapMsg::default().encode(),
+        rpc_req.encode(),
+        rpc_resp.encode(),
+        legacy.finish(),
     ]
 }
 
@@ -123,6 +150,8 @@ fn decode_everything(buf: &[u8]) {
     let _ = DeltaManifest::decode(buf);
     let _ = BitswapMsg::decode(buf);
     let _ = BitswapMsg::decode_buf(&Buf::from_vec(buf.to_vec()));
+    let _ = RpcMsg::decode(buf);
+    let _ = RpcMsg::decode_buf(&Buf::from_vec(buf.to_vec()));
     let _ = lattica::model::ModelAnnouncement::decode(buf);
     // The raw field reader must also survive anything.
     let mut r = PbReader::new(buf);
@@ -205,6 +234,7 @@ fn oversized_length_prefix_errors_without_allocating() {
         assert!(DagManifest::decode(hostile).is_err());
         assert!(DeltaManifest::decode(hostile).is_err());
         assert!(BitswapMsg::decode(hostile).is_err());
+        assert!(RpcMsg::decode(hostile).is_err());
         let mut r = PbReader::new(hostile);
         loop {
             match r.next_field() {
@@ -247,7 +277,8 @@ fn corpus_roundtrips_stay_valid() {
         }
         let ok = DagManifest::decode(&base).is_ok()
             || DeltaManifest::decode(&base).is_ok()
-            || BitswapMsg::decode(&base).is_ok();
+            || BitswapMsg::decode(&base).is_ok()
+            || RpcMsg::decode(&base).is_ok();
         assert!(ok, "corpus entry decodes under none of its codecs");
     }
     // Nested hostile bytes inside a *valid* outer frame: a PeerEntry field

@@ -13,7 +13,7 @@ use lattica::node::{run_until, LatticaNode, NodeConfig, NodeEvent};
 use lattica::protocols::bitswap::BitswapEvent;
 use lattica::protocols::kad::{KadEvent, PeerEntry, QueryKind};
 use lattica::protocols::Ctx;
-use lattica::rpc::{RpcEvent, Status};
+use lattica::rpc::{Outcome, Service, Status, StreamHandler, Stub};
 use std::cell::RefCell;
 use std::rc::Rc;
 
@@ -172,63 +172,77 @@ fn bitswap_rejects_corrupt_blocks() {
 }
 
 #[test]
-fn unary_rpc_roundtrip_and_timeout() {
+fn unary_rpc_roundtrip_via_service_and_stub() {
     let (mut world, nodes) = mesh(2, 39);
     let server_peer = nodes[0].borrow().peer_id();
 
-    // Attach an echo app to node 0.
-    struct Echo;
-    impl lattica::node::App for Echo {
-        fn handle(
-            &mut self,
-            node: &mut LatticaNode,
-            net: &mut lattica::netsim::Net,
-            ev: NodeEvent,
-        ) -> Option<NodeEvent> {
-            match ev {
-                NodeEvent::Rpc(RpcEvent::Request {
-                    service,
-                    payload,
-                    reply,
-                    ..
-                }) if service == "echo" => {
-                    let mut ctx = Ctx::new(&mut node.swarm, net);
-                    let mut out = b"echo:".to_vec();
-                    out.extend_from_slice(&payload);
-                    let _ = node.rpc.respond(&mut ctx, reply, Status::Ok, &out);
-                    None
-                }
-                other => Some(other),
-            }
-        }
-    }
-    nodes[0].borrow_mut().app = Some(Box::new(Echo));
+    // Register an echo service on node 0 (no raw event matching).
+    nodes[0].borrow_mut().register_service(Service::new("echo").unary(
+        "say",
+        |_node, _net, _ctx, payload| {
+            let mut out = b"echo:".to_vec();
+            out.extend_from_slice(&payload);
+            Outcome::reply(out)
+        },
+    ));
 
-    let call_id = {
-        let mut n = nodes[1].borrow_mut();
-        let LatticaNode { swarm, rpc, .. } = &mut *n;
-        let mut ctx = Ctx::new(swarm, &mut world.net);
-        rpc.call(&mut ctx, &server_peer, "echo", "say", b"hello").unwrap()
-    };
-    let ok = run_until(&mut world, 5 * SECOND, || {
-        find_event(&nodes[1], |e| match e {
-            NodeEvent::Rpc(RpcEvent::Response {
-                call_id: id,
-                status,
-                payload,
-                ..
-            }) if *id == call_id => Some(*status == Status::Ok && payload == b"echo:hello"),
-            _ => None,
-        })
-        .unwrap_or(false)
-    });
-    assert!(ok, "echo response missing");
+    let mut stub = Stub::new("echo", vec![server_peer]);
+    let done = lattica::scenarios::stub_call_blocking(
+        &mut world,
+        &nodes[1],
+        &mut stub,
+        "say",
+        b"hello",
+        5 * SECOND,
+    )
+    .expect("echo response missing");
+    assert_eq!(done.status, Status::Ok);
+    assert_eq!(done.payload, b"echo:hello");
+    assert!(done.detail.is_empty());
+    assert_eq!(done.attempts, 1);
+    assert_eq!(nodes[0].borrow().router_stats().served, 1);
 }
 
 #[test]
 fn streaming_rpc_backpressure_delivers_in_order() {
     let (mut world, nodes) = mesh(2, 41);
     let server_peer = nodes[0].borrow().peer_id();
+
+    // The server's stream handler is a registered service too.
+    struct Collector {
+        items: Rc<RefCell<Vec<(u64, Vec<u8>)>>>,
+        ended: Rc<RefCell<bool>>,
+    }
+    impl StreamHandler for Collector {
+        fn on_item(
+            &mut self,
+            _node: &mut LatticaNode,
+            _net: &mut lattica::netsim::Net,
+            _handle: lattica::rpc::StreamHandle,
+            seq: u64,
+            payload: lattica::util::Buf,
+        ) {
+            self.items.borrow_mut().push((seq, payload.to_vec()));
+        }
+
+        fn on_end(
+            &mut self,
+            _node: &mut LatticaNode,
+            _net: &mut lattica::netsim::Net,
+            _handle: lattica::rpc::StreamHandle,
+        ) {
+            *self.ended.borrow_mut() = true;
+        }
+    }
+    let items = Rc::new(RefCell::new(Vec::new()));
+    let ended = Rc::new(RefCell::new(false));
+    nodes[0]
+        .borrow_mut()
+        .register_service(Service::new("tensor-flow").streaming(Collector {
+            items: items.clone(),
+            ended: ended.clone(),
+        }));
+
     let handle = {
         let mut n = nodes[1].borrow_mut();
         let LatticaNode { swarm, rpc, .. } = &mut *n;
@@ -242,6 +256,13 @@ fn streaming_rpc_backpressure_delivers_in_order() {
         let mut ctx = Ctx::new(swarm, &mut world.net);
         rpc.send_item(&mut ctx, handle, format!("item-{i}").into_bytes());
     }
+    // Credit backpressure throttles the sender under the new API: only
+    // the initial credit window is on the wire, the rest is queued.
+    assert_eq!(
+        nodes[1].borrow().rpc.backlog(handle),
+        50 - lattica::rpc::INITIAL_CREDITS as usize,
+        "sender must be throttled to the credit window"
+    );
     {
         let mut n = nodes[1].borrow_mut();
         let LatticaNode { swarm, rpc, .. } = &mut *n;
@@ -249,24 +270,15 @@ fn streaming_rpc_backpressure_delivers_in_order() {
         rpc.end_stream(&mut ctx, handle);
     }
     world.run_for(5 * SECOND);
-    // Server saw all 50 items in order.
-    let mut seqs = Vec::new();
-    let mut ended = false;
-    {
-        let mut n = nodes[0].borrow_mut();
-        for e in n.drain_events() {
-            match e {
-                NodeEvent::Rpc(RpcEvent::StreamItem { seq, payload, .. }) => {
-                    assert_eq!(payload, format!("item-{}", seq).into_bytes());
-                    seqs.push(seq);
-                }
-                NodeEvent::Rpc(RpcEvent::StreamEnded { .. }) => ended = true,
-                _ => {}
-            }
-        }
+    // Server-side handler saw all 50 items in order, then the end.
+    let got = items.borrow();
+    assert_eq!(got.len(), 50);
+    for (i, (seq, payload)) in got.iter().enumerate() {
+        assert_eq!(*seq, i as u64);
+        assert_eq!(payload, &format!("item-{i}").into_bytes());
     }
-    assert_eq!(seqs, (0..50).collect::<Vec<u64>>());
-    assert!(ended, "stream end not delivered");
+    assert!(*ended.borrow(), "stream end not delivered");
+    assert_eq!(nodes[0].borrow().router_stats().stream_items, 50);
 }
 
 #[test]
