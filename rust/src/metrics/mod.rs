@@ -232,6 +232,55 @@ impl DhtLookupStats {
     }
 }
 
+/// Lookup outcomes of one `scenarios::planet` arm: the scaling-curve
+/// sample (nodes → hops / success rate) emitted into
+/// `BENCH_dht_churn.json` alongside the churn rows.
+#[derive(Clone, Debug, Default)]
+pub struct PlanetScaleStats {
+    /// Deployment size (cores + background nodes).
+    pub nodes: u64,
+    pub attempted: u64,
+    pub succeeded: u64,
+    /// Answered requests per finished lookup.
+    pub hops: Histogram,
+    /// Virtual-time latency per finished lookup.
+    pub latency: Histogram,
+}
+
+impl PlanetScaleStats {
+    pub fn record(&mut self, success: bool, hops: u32, latency: Time) {
+        if success {
+            self.succeeded += 1;
+        }
+        self.hops.record(hops as u64);
+        self.latency.record(latency);
+    }
+
+    pub fn success_rate(&self) -> f64 {
+        if self.attempted == 0 {
+            return 0.0;
+        }
+        self.succeeded as f64 / self.attempted as f64
+    }
+
+    pub fn mean_hops(&self) -> f64 {
+        self.hops.mean()
+    }
+
+    pub fn summary(&mut self) -> String {
+        format!(
+            "n={} lookups={}/{} ({:.1}%) hops mean={:.1} p95={} lat p95={}",
+            self.nodes,
+            self.succeeded,
+            self.attempted,
+            self.success_rate() * 100.0,
+            self.mean_hops(),
+            self.hops.percentile(95.0),
+            crate::util::timefmt::fmt_ns(self.latency.percentile(95.0)),
+        )
+    }
+}
+
 /// Aggregated outcome of one model-distribution run (trainer + N
 /// replicas × M checkpoint versions). Shared by `benches/model_sync` and
 /// `tests/model_sync` so the CI-gated bars and the published rows measure

@@ -1,8 +1,25 @@
-//! The event queue: a binary heap ordered by (time, sequence) so ties are
-//! broken deterministically in insertion order.
+//! The event queue.
+//!
+//! Two implementations behind one facade, both ordered by `(time, sequence)`
+//! so ties break deterministically in insertion order:
+//!
+//! * [`TimerWheel`] — the default: a hashed hierarchical timer wheel
+//!   (tokio/Varghese-Lauck style). 11 levels × 64 slots cover the full
+//!   64-bit nanosecond clock; insert and cancel are O(1), and advancing
+//!   coalesces every same-timestamp event into one batch (pacing ticks and
+//!   k-bucket refresh timers dominate the queue at scale, and they land on
+//!   shared deadlines). Slot vectors are recycled through a spare pool so
+//!   steady-state operation does not allocate per event.
+//! * [`HeapQueue`] — the original `BinaryHeap`, kept as the reference
+//!   implementation for the trace-equivalence suite (`tests/dht_churn.rs`
+//!   runs a seeded churn scenario under both and compares dispatch
+//!   digests).
+//!
+//! Determinism contract (identical for both): events pop in strictly
+//! nondecreasing `at`; events with equal `at` pop in push order.
 
 use super::Time;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// Payload of a scheduled event.
 #[derive(Debug)]
@@ -22,11 +39,23 @@ pub enum EventKind {
     Stop,
 }
 
+/// Which queue implementation a [`EventQueue`] runs on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QueueKind {
+    #[default]
+    Wheel,
+    Heap,
+}
+
 struct Entry {
     at: Time,
     seq: u64,
     kind: EventKind,
 }
+
+// ---------------------------------------------------------------------------
+// Reference implementation: binary heap
+// ---------------------------------------------------------------------------
 
 impl PartialEq for Entry {
     fn eq(&self, other: &Self) -> bool {
@@ -51,71 +80,427 @@ impl Ord for Entry {
 
 /// Min-heap of timed events with deterministic tie-breaking.
 #[derive(Default)]
-pub struct EventQueue {
+struct HeapQueue {
     heap: BinaryHeap<Entry>,
+}
+
+impl HeapQueue {
+    fn push(&mut self, e: Entry) {
+        self.heap.push(e);
+    }
+
+    fn pop(&mut self) -> Option<Entry> {
+        self.heap.pop()
+    }
+
+    fn peek_time(&self) -> Option<Time> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hierarchical timer wheel
+// ---------------------------------------------------------------------------
+
+const SLOT_BITS: usize = 6;
+const SLOTS: usize = 1 << SLOT_BITS; // 64
+const SLOT_MASK: u64 = (SLOTS - 1) as u64;
+/// ceil(64 / 6) levels cover every representable deadline.
+const LEVELS: usize = 11;
+/// Cap on recycled slot vectors retained between bursts.
+const SPARE_CAP: usize = 64;
+
+/// Hashed hierarchical timer wheel.
+///
+/// Level `L` buckets deadlines by bits `[6L, 6L+6)` of their absolute time.
+/// An entry lives at the *highest* level where its deadline differs from
+/// the cursor, so each level-0 slot holds exactly one timestamp and a drain
+/// of that slot is already in `(at, seq)` order — no per-slot sorting,
+/// ever. Advancing walks the per-level occupancy bitmaps (one `u64` each)
+/// to the next occupied slot, so an idle region of virtual time costs a
+/// handful of bit-scans rather than per-tick work.
+///
+/// Invariants (maintained by `settle`):
+/// * every wheel entry has `at > cursor`;
+/// * at its level, an entry's slot index is strictly above the cursor's
+///   slot index (higher-level blocks equal the cursor's);
+/// * `due` holds only entries with `at <= cursor`, sorted by `(at, seq)`.
+struct TimerWheel {
+    /// `slots[level * SLOTS + slot]`; entries in push order.
+    slots: Vec<Vec<Entry>>,
+    /// Per-level occupancy bitmap.
+    occupied: [u64; LEVELS],
+    /// Time the wheel has been advanced to (start of the current slot).
+    cursor: Time,
+    /// Entries ready to pop, sorted by `(at, seq)`.
+    due: VecDeque<Entry>,
+    /// Total entries (wheel + due).
+    len: usize,
+    /// Recycled slot vectors: drained slots return their allocation here
+    /// and fresh inserts reuse it — the per-datagram event allocation pool.
+    spare: Vec<Vec<Entry>>,
+}
+
+impl TimerWheel {
+    fn new() -> TimerWheel {
+        TimerWheel {
+            slots: std::iter::repeat_with(Vec::new)
+                .take(LEVELS * SLOTS)
+                .collect(),
+            occupied: [0; LEVELS],
+            cursor: 0,
+            due: VecDeque::new(),
+            len: 0,
+            spare: Vec::new(),
+        }
+    }
+
+    /// Level and slot for a deadline strictly after the cursor.
+    #[inline]
+    fn level_slot(cursor: Time, at: Time) -> (usize, usize) {
+        debug_assert!(at > cursor);
+        let highest_bit = 63 - (at ^ cursor).leading_zeros() as usize;
+        let level = highest_bit / SLOT_BITS;
+        let slot = ((at >> (level * SLOT_BITS)) & SLOT_MASK) as usize;
+        (level, slot)
+    }
+
+    /// Occupancy mask of slots strictly above index `c`.
+    #[inline]
+    fn mask_above(c: u64) -> u64 {
+        if c >= 63 {
+            0
+        } else {
+            !0u64 << (c + 1)
+        }
+    }
+
+    fn insert_wheel(&mut self, e: Entry) {
+        let (level, slot) = Self::level_slot(self.cursor, e.at);
+        let idx = level * SLOTS + slot;
+        if self.slots[idx].capacity() == 0 {
+            if let Some(v) = self.spare.pop() {
+                self.slots[idx] = v;
+            }
+        }
+        self.slots[idx].push(e);
+        self.occupied[level] |= 1u64 << slot;
+    }
+
+    fn push(&mut self, e: Entry) {
+        self.len += 1;
+        if e.at <= self.cursor {
+            // Late push (the world idled past the wheel position, then an
+            // endpoint scheduled something near "now"). Keep `due` sorted;
+            // the insert is stable, so equal timestamps stay in seq order.
+            let i = self.due.partition_point(|d| d.at <= e.at);
+            self.due.insert(i, e);
+        } else {
+            self.insert_wheel(e);
+        }
+    }
+
+    /// Refill `due` from the wheel: advance the cursor to the earliest
+    /// occupied slot (lowest level first — that is the global minimum) and
+    /// drain it, cascading higher-level batches down.
+    fn settle(&mut self) {
+        'refill: while self.due.is_empty() && self.len > 0 {
+            for level in 0..LEVELS {
+                let shift = level * SLOT_BITS;
+                let c = (self.cursor >> shift) & SLOT_MASK;
+                let occ = self.occupied[level] & Self::mask_above(c);
+                if occ == 0 {
+                    continue;
+                }
+                let slot = occ.trailing_zeros() as u64;
+                // Advance the cursor to the slot's base time: clear all
+                // lower-level blocks, set this level's block to `slot`.
+                let high = if shift + SLOT_BITS >= 64 {
+                    0
+                } else {
+                    (self.cursor >> (shift + SLOT_BITS)) << (shift + SLOT_BITS)
+                };
+                self.cursor = high | (slot << shift);
+                let idx = level * SLOTS + slot as usize;
+                self.occupied[level] &= !(1u64 << slot);
+                let mut entries = std::mem::take(&mut self.slots[idx]);
+                if level == 0 {
+                    // One exact timestamp per level-0 slot: the batch is
+                    // already in (at, seq) order.
+                    for e in entries.drain(..) {
+                        debug_assert_eq!(e.at, self.cursor);
+                        self.due.push_back(e);
+                    }
+                } else {
+                    // Cascade: redistribute relative to the new cursor.
+                    // Entries that land exactly on the cursor go straight
+                    // to `due` (push order == seq order within the slot).
+                    for e in entries.drain(..) {
+                        if e.at == self.cursor {
+                            self.due.push_back(e);
+                        } else {
+                            self.insert_wheel(e);
+                        }
+                    }
+                }
+                if self.spare.len() < SPARE_CAP {
+                    self.spare.push(entries);
+                }
+                continue 'refill;
+            }
+            unreachable!("timer wheel: len > 0 but no occupied slot above cursor");
+        }
+    }
+
+    fn pop(&mut self) -> Option<Entry> {
+        self.settle();
+        let e = self.due.pop_front()?;
+        self.len -= 1;
+        Some(e)
+    }
+
+    fn peek_time(&mut self) -> Option<Time> {
+        self.settle();
+        self.due.front().map(|e| e.at)
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Facade
+// ---------------------------------------------------------------------------
+
+enum QueueImpl {
+    Wheel(TimerWheel),
+    Heap(HeapQueue),
+}
+
+/// Min-queue of timed events with deterministic tie-breaking. Defaults to
+/// the timer wheel; [`EventQueue::new_heap`] keeps the reference heap
+/// available for equivalence testing.
+pub struct EventQueue {
+    imp: QueueImpl,
     seq: u64,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        EventQueue::new()
+    }
 }
 
 impl EventQueue {
     pub fn new() -> EventQueue {
-        EventQueue::default()
+        EventQueue::with_kind(QueueKind::Wheel)
+    }
+
+    pub fn new_heap() -> EventQueue {
+        EventQueue::with_kind(QueueKind::Heap)
+    }
+
+    pub fn with_kind(kind: QueueKind) -> EventQueue {
+        let imp = match kind {
+            QueueKind::Wheel => QueueImpl::Wheel(TimerWheel::new()),
+            QueueKind::Heap => QueueImpl::Heap(HeapQueue::default()),
+        };
+        EventQueue { imp, seq: 0 }
+    }
+
+    pub fn kind(&self) -> QueueKind {
+        match &self.imp {
+            QueueImpl::Wheel(_) => QueueKind::Wheel,
+            QueueImpl::Heap(_) => QueueKind::Heap,
+        }
     }
 
     pub fn push(&mut self, at: Time, kind: EventKind) {
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Entry { at, seq, kind });
+        let e = Entry { at, seq, kind };
+        match &mut self.imp {
+            QueueImpl::Wheel(w) => w.push(e),
+            QueueImpl::Heap(h) => h.push(e),
+        }
     }
 
     pub fn pop(&mut self) -> Option<(Time, EventKind)> {
-        self.heap.pop().map(|e| (e.at, e.kind))
+        let e = match &mut self.imp {
+            QueueImpl::Wheel(w) => w.pop(),
+            QueueImpl::Heap(h) => h.pop(),
+        }?;
+        Some((e.at, e.kind))
     }
 
-    pub fn peek_time(&self) -> Option<Time> {
-        self.heap.peek().map(|e| e.at)
+    /// Earliest pending deadline. `&mut` because the wheel advances its
+    /// cursor (and cascades batches) to find the minimum.
+    pub fn peek_time(&mut self) -> Option<Time> {
+        match &mut self.imp {
+            QueueImpl::Wheel(w) => w.peek_time(),
+            QueueImpl::Heap(h) => h.peek_time(),
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.imp {
+            QueueImpl::Wheel(w) => w.len(),
+            QueueImpl::Heap(h) => h.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::netsim::SECOND;
+
+    fn queues() -> [EventQueue; 2] {
+        [EventQueue::new(), EventQueue::new_heap()]
+    }
 
     #[test]
     fn ordered_by_time_then_seq() {
-        let mut q = EventQueue::new();
-        q.push(10, EventKind::Timer { endpoint: 0, token: 1 });
-        q.push(5, EventKind::Timer { endpoint: 0, token: 2 });
-        q.push(10, EventKind::Timer { endpoint: 0, token: 3 });
-        let (t1, k1) = q.pop().unwrap();
-        assert_eq!(t1, 5);
-        assert!(matches!(k1, EventKind::Timer { token: 2, .. }));
-        let (t2, k2) = q.pop().unwrap();
-        assert_eq!(t2, 10);
-        assert!(matches!(k2, EventKind::Timer { token: 1, .. }));
-        let (_, k3) = q.pop().unwrap();
-        assert!(matches!(k3, EventKind::Timer { token: 3, .. }));
-        assert!(q.pop().is_none());
+        for mut q in queues() {
+            q.push(10, EventKind::Timer { endpoint: 0, token: 1 });
+            q.push(5, EventKind::Timer { endpoint: 0, token: 2 });
+            q.push(10, EventKind::Timer { endpoint: 0, token: 3 });
+            let (t1, k1) = q.pop().unwrap();
+            assert_eq!(t1, 5);
+            assert!(matches!(k1, EventKind::Timer { token: 2, .. }));
+            let (t2, k2) = q.pop().unwrap();
+            assert_eq!(t2, 10);
+            assert!(matches!(k2, EventKind::Timer { token: 1, .. }));
+            let (_, k3) = q.pop().unwrap();
+            assert!(matches!(k3, EventKind::Timer { token: 3, .. }));
+            assert!(q.pop().is_none());
+        }
     }
 
     #[test]
     fn interleaved_push_pop() {
+        for mut q in queues() {
+            q.push(100, EventKind::Stop);
+            q.push(50, EventKind::Stop);
+            assert_eq!(q.pop().unwrap().0, 50);
+            q.push(25, EventKind::Stop);
+            q.push(75, EventKind::Stop);
+            assert_eq!(q.pop().unwrap().0, 25);
+            assert_eq!(q.pop().unwrap().0, 75);
+            assert_eq!(q.pop().unwrap().0, 100);
+            assert!(q.is_empty());
+        }
+    }
+
+    #[test]
+    fn wheel_cascades_across_levels() {
         let mut q = EventQueue::new();
-        q.push(100, EventKind::Stop);
-        q.push(50, EventKind::Stop);
-        assert_eq!(q.pop().unwrap().0, 50);
-        q.push(25, EventKind::Stop);
-        q.push(75, EventKind::Stop);
-        assert_eq!(q.pop().unwrap().0, 25);
-        assert_eq!(q.pop().unwrap().0, 75);
-        assert_eq!(q.pop().unwrap().0, 100);
+        // Deadlines spanning every wheel level, pushed out of order.
+        let times = [
+            3 * 3600 * SECOND,
+            1,
+            SECOND,
+            63,
+            64,
+            4096,
+            4095,
+            u64::MAX / 2,
+            SECOND + 1,
+        ];
+        for (i, &t) in times.iter().enumerate() {
+            q.push(t, EventKind::Timer { endpoint: i, token: t });
+        }
+        let mut sorted = times.to_vec();
+        sorted.sort_unstable();
+        for want in sorted {
+            let (at, kind) = q.pop().unwrap();
+            assert_eq!(at, want);
+            assert!(matches!(kind, EventKind::Timer { token, .. } if token == want));
+        }
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn push_behind_cursor_still_sorted() {
+        let mut q = EventQueue::new();
+        q.push(1000, EventKind::Stop);
+        // Advance the wheel cursor to 1000 without consuming the event.
+        assert_eq!(q.peek_time(), Some(1000));
+        // A later push with an earlier deadline (the world idled past the
+        // cursor, then an endpoint armed a short timer).
+        q.push(500, EventKind::Timer { endpoint: 0, token: 500 });
+        q.push(700, EventKind::Timer { endpoint: 0, token: 700 });
+        assert_eq!(q.pop().unwrap().0, 500);
+        assert_eq!(q.pop().unwrap().0, 700);
+        assert_eq!(q.pop().unwrap().0, 1000);
+    }
+
+    #[test]
+    fn same_tick_batch_preserves_push_order() {
+        let mut q = EventQueue::new();
+        // A far-future shared deadline: the batch cascades through several
+        // levels and must still pop in push order.
+        let t = 12 * 3600 * SECOND + 17;
+        for token in 0..100u64 {
+            q.push(t, EventKind::Timer { endpoint: 0, token });
+        }
+        for want in 0..100u64 {
+            let (at, kind) = q.pop().unwrap();
+            assert_eq!(at, t);
+            assert!(matches!(kind, EventKind::Timer { token, .. } if token == want));
+        }
+    }
+
+    /// Differential fuzz: the wheel must produce the exact pop sequence of
+    /// the reference heap under an adversarial interleaving of pushes and
+    /// pops with clustered and far-flung deadlines.
+    #[test]
+    fn wheel_matches_heap_differential() {
+        let mut rng = crate::util::Rng::new(0xE7E7);
+        let mut wheel = EventQueue::new();
+        let mut heap = EventQueue::new_heap();
+        let mut now = 0u64;
+        let mut token = 0u64;
+        for _ in 0..20_000 {
+            if rng.gen_bool(0.55) || wheel.is_empty() {
+                // Mix of near deadlines, clustered ticks and far jumps.
+                let delay = match rng.gen_index(4) {
+                    0 => rng.gen_range(64),
+                    1 => 1000, // coalescing tick
+                    2 => rng.gen_range(100_000),
+                    _ => rng.gen_range(10 * SECOND),
+                };
+                let at = now + delay;
+                wheel.push(at, EventKind::Timer { endpoint: 0, token });
+                heap.push(at, EventKind::Timer { endpoint: 0, token });
+                token += 1;
+            } else {
+                let a = wheel.pop().unwrap();
+                let b = heap.pop().unwrap();
+                assert_eq!(a.0, b.0, "pop time diverged");
+                match (a.1, b.1) {
+                    (
+                        EventKind::Timer { token: ta, .. },
+                        EventKind::Timer { token: tb, .. },
+                    ) => assert_eq!(ta, tb, "pop order diverged at t={}", a.0),
+                    _ => panic!("unexpected kinds"),
+                }
+                now = a.0;
+            }
+        }
+        while let Some(a) = wheel.pop() {
+            let b = heap.pop().unwrap();
+            assert_eq!(a.0, b.0);
+        }
+        assert!(heap.pop().is_none());
     }
 }

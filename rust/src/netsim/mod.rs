@@ -25,7 +25,8 @@ pub mod world;
 pub mod churn;
 
 pub use churn::{ChurnAction, ChurnConfig, ChurnEvent, ChurnPlan};
-pub use net::{EndpointId, Net, Timer};
+pub use event::QueueKind;
+pub use net::{EndpointId, Net, NetStats, Timer};
 pub use topology::{HostCfg, LinkProfile, Region, TopologyBuilder};
 pub use world::{Endpoint, World};
 

@@ -1,5 +1,11 @@
 //! The network core: virtual clock, event queue, datagram routing through
 //! NATs and shapers, port bindings and timers.
+//!
+//! Listener lookup is a per-host sorted port table (`HostState::ports`)
+//! rather than a global `HashMap<SimAddr, EndpointId>`: at planet scale the
+//! lookup array for one host is a handful of entries probed by binary
+//! search in cache, and the per-host tables are freed wholesale when a
+//! scenario drops its world — no global map rehashing at 100k bindings.
 
 use super::event::{EventKind, EventQueue};
 use super::nat::NatBox;
@@ -7,9 +13,11 @@ use super::topology::{HostState, TopologyBuilder};
 use super::Time;
 use crate::multiaddr::SimAddr;
 use crate::util::Rng;
-use std::collections::HashMap;
 
 /// Handle to a registered endpoint (a node's datagram stack).
+///
+/// Packs a 32-bit slot index and a 32-bit generation (see
+/// `netsim::world`); treat it as opaque.
 pub type EndpointId = usize;
 
 /// A timer handle: `(endpoint, token)` pairs are delivered back to the
@@ -33,6 +41,21 @@ pub struct NetStats {
     pub events_processed: u64,
     pub timer_events: u64,
     pub deliver_events: u64,
+    /// Events whose destination endpoint was tombstoned before dispatch
+    /// (O(1) removal leaves stale events in the queue; they are dropped
+    /// here and counted).
+    pub events_dropped_stale: u64,
+    /// High-water mark of the event-queue depth (timers + in-flight
+    /// datagrams). The memory-boundedness gauge for scale scenarios.
+    pub peak_queue_depth: u64,
+    /// Datagram deliveries currently sitting in the queue (in flight on
+    /// the virtual wire), and its high-water mark.
+    pub inflight_datagrams: u64,
+    pub peak_inflight_datagrams: u64,
+    /// Payload bytes held by in-flight deliveries, and its high-water
+    /// mark — directly bounds event-queue heap usage.
+    pub inflight_payload_bytes: u64,
+    pub peak_inflight_payload_bytes: u64,
 }
 
 /// The simulated network. See module docs.
@@ -44,7 +67,6 @@ pub struct Net {
     nats: Vec<NatBox>,
     paths: Vec<Vec<super::link::PathProfile>>,
     loopback: super::link::PathProfile,
-    bindings: HashMap<SimAddr, EndpointId>,
     pub stats: NetStats,
     /// Maximum simulated datagram size; larger sends panic (transports must
     /// fragment). Mirrors a ~1500-byte MTU with headroom for headers.
@@ -54,14 +76,13 @@ pub struct Net {
 impl Net {
     pub(crate) fn from_topology(t: TopologyBuilder, seed: u64) -> Net {
         Net {
-            queue: EventQueue::new(),
+            queue: EventQueue::with_kind(t.queue_kind),
             now: 0,
             rng: Rng::new(seed),
             hosts: t.hosts,
             nats: t.nats,
             paths: t.paths,
             loopback: t.loopback,
-            bindings: HashMap::new(),
             stats: NetStats::default(),
             mtu: 1400,
         }
@@ -100,6 +121,16 @@ impl Net {
             .is_some_and(|h| h.nat_face.is_some())
     }
 
+    /// Endpoint listening on `addr`, if any (binary search in the host's
+    /// sorted port table).
+    fn listener(&self, addr: SimAddr) -> Option<EndpointId> {
+        let h = self.hosts.get(addr.host as usize)?;
+        h.ports
+            .binary_search_by_key(&addr.port, |&(p, _)| p)
+            .ok()
+            .map(|i| h.ports[i].1)
+    }
+
     /// Bind an endpoint to a concrete port on a host.
     pub fn bind(&mut self, endpoint: EndpointId, addr: SimAddr) -> anyhow::Result<()> {
         anyhow::ensure!(
@@ -112,32 +143,51 @@ impl Net {
             "bind: host {} is a NAT public face",
             addr.host
         );
-        if self.bindings.contains_key(&addr) {
-            anyhow::bail!("bind: address {addr} already bound");
+        let ports = &mut self.hosts[addr.host as usize].ports;
+        match ports.binary_search_by_key(&addr.port, |&(p, _)| p) {
+            Ok(_) => anyhow::bail!("bind: address {addr} already bound"),
+            Err(i) => ports.insert(i, (addr.port, endpoint)),
         }
-        self.bindings.insert(addr, endpoint);
         Ok(())
     }
 
     /// Bind to an ephemeral port; returns the address.
     pub fn bind_ephemeral(&mut self, endpoint: EndpointId, host: u32) -> SimAddr {
         loop {
-            let port = {
-                let h = &mut self.hosts[host as usize];
-                let p = h.next_ephemeral;
-                h.next_ephemeral = h.next_ephemeral.checked_add(1).unwrap_or(49_152);
-                p
-            };
-            let addr = SimAddr::new(host, port);
-            if !self.bindings.contains_key(&addr) {
-                self.bindings.insert(addr, endpoint);
-                return addr;
+            let h = &mut self.hosts[host as usize];
+            let port = h.next_ephemeral;
+            h.next_ephemeral = h.next_ephemeral.checked_add(1).unwrap_or(49_152);
+            if let Err(i) = h.ports.binary_search_by_key(&port, |&(p, _)| p) {
+                h.ports.insert(i, (port, endpoint));
+                return SimAddr::new(host, port);
             }
         }
     }
 
     pub fn unbind(&mut self, addr: SimAddr) {
-        self.bindings.remove(&addr);
+        if let Some(h) = self.hosts.get_mut(addr.host as usize) {
+            if let Ok(i) = h.ports.binary_search_by_key(&addr.port, |&(p, _)| p) {
+                h.ports.remove(i);
+            }
+        }
+    }
+
+    /// Record a queue push for the depth high-water mark.
+    #[inline]
+    fn note_push(&mut self) {
+        let depth = self.queue.len() as u64;
+        if depth > self.stats.peak_queue_depth {
+            self.stats.peak_queue_depth = depth;
+        }
+    }
+
+    /// A queued delivery left the queue (dispatched or dropped as stale):
+    /// release its in-flight accounting. Called by the world's run loop.
+    #[inline]
+    pub(crate) fn note_payload_released(&mut self, len: usize) {
+        self.stats.inflight_datagrams = self.stats.inflight_datagrams.saturating_sub(1);
+        self.stats.inflight_payload_bytes =
+            self.stats.inflight_payload_bytes.saturating_sub(len as u64);
     }
 
     /// Send a datagram from a bound local address to a destination address.
@@ -192,7 +242,7 @@ impl Net {
         };
 
         // 3. Listener lookup.
-        let Some(&endpoint) = self.bindings.get(&internal_dst) else {
+        let Some(endpoint) = self.listener(internal_dst) else {
             self.stats.datagrams_no_listener += 1;
             return;
         };
@@ -254,6 +304,14 @@ impl Net {
             arrive
         };
 
+        self.stats.inflight_datagrams += 1;
+        self.stats.inflight_payload_bytes += payload.len() as u64;
+        if self.stats.inflight_datagrams > self.stats.peak_inflight_datagrams {
+            self.stats.peak_inflight_datagrams = self.stats.inflight_datagrams;
+        }
+        if self.stats.inflight_payload_bytes > self.stats.peak_inflight_payload_bytes {
+            self.stats.peak_inflight_payload_bytes = self.stats.inflight_payload_bytes;
+        }
         self.queue.push(
             arrive,
             EventKind::Deliver {
@@ -263,6 +321,7 @@ impl Net {
                 payload,
             },
         );
+        self.note_push();
     }
 
     /// Arm a timer; it fires on the owning endpoint after `delay`.
@@ -271,6 +330,7 @@ impl Net {
             self.now + delay,
             EventKind::Timer { endpoint, token },
         );
+        self.note_push();
     }
 
     /// Number of pending events.
@@ -356,20 +416,13 @@ mod tests {
         }
 
         // A stranger cannot reach the mapping (port-restricted).
-        let stranger = t_public_extra(&mut net);
-        let _ = stranger;
+        t_public_extra(&mut net);
     }
 
     // Helper: sending from an unrelated (host,port) must be NAT-dropped.
     fn t_public_extra(net: &mut Net) {
         let before = net.stats.datagrams_dropped_nat;
         // Host 0 exists and is public; use an unrelated port.
-        let observed_port_space: Vec<SimAddr> = net
-            .bindings
-            .keys()
-            .copied()
-            .collect();
-        let _ = observed_port_space;
         net.send(SimAddr::new(0, 9999), SimAddr::new(1, 20_000), vec![9]);
         // Either NAT-dropped or no-listener (if the port guess missed the
         // mapping); both count as "not delivered".
@@ -398,6 +451,9 @@ mod tests {
         let delivered = net.pending() as u64;
         assert!(net.stats.datagrams_dropped_queue > 0, "expected drop-tail");
         assert!(delivered >= 40 && delivered <= 70, "delivered = {delivered}");
+        assert_eq!(net.stats.peak_queue_depth, delivered);
+        assert_eq!(net.stats.peak_inflight_datagrams, delivered);
+        assert!(net.stats.peak_inflight_payload_bytes >= delivered * (1000 - 28));
         // Last delivery time reflects ~1 ms per packet serialization.
         let mut last = 0;
         while let Some((at, _)) = net.queue.pop() {
@@ -413,6 +469,21 @@ mod tests {
         let y = net.bind_ephemeral(0, a);
         assert_ne!(x, y);
         assert_eq!(x.host, a);
+    }
+
+    #[test]
+    fn bind_unbind_rebind() {
+        let (mut net, _, b) = two_public_hosts();
+        net.bind(0, SimAddr::new(b, 80)).unwrap();
+        net.unbind(SimAddr::new(b, 80));
+        // Freed port is immediately rebindable to a new endpoint.
+        net.bind(5, SimAddr::new(b, 80)).unwrap();
+        net.bind(6, SimAddr::new(b, 79)).unwrap();
+        net.bind(7, SimAddr::new(b, 81)).unwrap();
+        assert_eq!(net.listener(SimAddr::new(b, 80)), Some(5));
+        assert_eq!(net.listener(SimAddr::new(b, 79)), Some(6));
+        assert_eq!(net.listener(SimAddr::new(b, 81)), Some(7));
+        assert_eq!(net.listener(SimAddr::new(b, 82)), None);
     }
 
     #[test]

@@ -5,8 +5,10 @@
 //! propagation delay/jitter/loss; presets mirror the paper's four Table 1
 //! scenarios (same host, same-region LAN, same-region WAN, inter-continent).
 
+use super::event::QueueKind;
 use super::link::{PathProfile, Shaper};
 use super::nat::{NatBox, NatType};
+use super::net::EndpointId;
 use super::{Time, MICRO, MILLI};
 
 /// Region index into the path matrix.
@@ -83,6 +85,10 @@ pub(crate) struct HostState {
     pub next_ephemeral: u16,
     /// Set if this host id is a NAT's public face (owned by that NAT).
     pub nat_face: Option<usize>,
+    /// Bound ports, sorted by port number for binary search. A host has a
+    /// handful of listeners, so a dense sorted Vec beats a global hash map
+    /// at scale (and drops with the host, no rehash churn).
+    pub ports: Vec<(u16, EndpointId)>,
 }
 
 /// Declarative topology builder. Produces the host/NAT tables consumed by
@@ -94,6 +100,10 @@ pub struct TopologyBuilder {
     pub(crate) loopback: PathProfile,
     /// Same-host serialization rate (bytes/sec); see HostState::lo.
     pub loopback_bps: u64,
+    /// Event-queue implementation for the built [`super::net::Net`]. The
+    /// timer wheel is the default; the reference heap is kept for
+    /// equivalence tests.
+    pub(crate) queue_kind: QueueKind,
 }
 
 impl TopologyBuilder {
@@ -107,7 +117,15 @@ impl TopologyBuilder {
             paths: vec![vec![default; n_regions]; n_regions],
             loopback: PathProfile::new(15 * MICRO, 5 * MICRO, 0.0),
             loopback_bps: 1_500_000_000,
+            queue_kind: QueueKind::default(),
         }
+    }
+
+    /// Select the event-queue implementation (wheel by default; the heap
+    /// survives for trace-equivalence testing).
+    pub fn set_queue_kind(&mut self, kind: QueueKind) -> &mut Self {
+        self.queue_kind = kind;
+        self
     }
 
     /// Set the path profile between two regions (symmetric).
@@ -164,6 +182,7 @@ impl TopologyBuilder {
             },
             next_ephemeral: 49_152,
             nat_face: None,
+            ports: Vec::new(),
         });
         id
     }
@@ -200,6 +219,7 @@ impl TopologyBuilder {
             },
             next_ephemeral: 49_152,
             nat_face: None,
+            ports: Vec::new(),
         });
         id
     }

@@ -1,4 +1,13 @@
 //! The dispatch loop: owns endpoints and drives events from [`Net`].
+//!
+//! Endpoint handles are *generational*: an [`EndpointId`] packs a 32-bit
+//! slot index with a 32-bit generation. Removing an endpoint is O(1) — the
+//! slot is tombstoned (generation bumped, index pushed on a free list) and
+//! any events still queued for the old id are dropped at dispatch when
+//! their generation no longer matches (counted in
+//! `NetStats::events_dropped_stale`). Churn respawn reuses slots, so a
+//! long-running scenario's endpoint table stays dense instead of growing
+//! with every restart.
 
 use super::event::EventKind;
 use super::net::{EndpointId, Net};
@@ -6,6 +15,23 @@ use super::Time;
 use crate::multiaddr::SimAddr;
 use std::cell::RefCell;
 use std::rc::Rc;
+
+// The generation scheme packs (gen << 32 | index) into EndpointId = usize.
+const _: () = assert!(std::mem::size_of::<usize>() >= 8, "needs 64-bit usize");
+
+const INDEX_BITS: u32 = 32;
+const INDEX_MASK: usize = (1 << INDEX_BITS) - 1;
+
+#[inline]
+fn pack(gen: u32, index: usize) -> EndpointId {
+    debug_assert!(index <= INDEX_MASK);
+    ((gen as usize) << INDEX_BITS) | index
+}
+
+#[inline]
+fn unpack(id: EndpointId) -> (u32, usize) {
+    ((id >> INDEX_BITS) as u32, id & INDEX_MASK)
+}
 
 /// A datagram-level endpoint: one per node network stack.
 pub trait Endpoint {
@@ -17,43 +43,166 @@ pub trait Endpoint {
     fn on_timer(&mut self, net: &mut Net, token: u64);
 }
 
+/// One endpoint slot: the live generation plus the (possibly vacated)
+/// endpoint. A slot whose `ep` is `None` is a tombstone awaiting reuse.
+struct Slot {
+    gen: u32,
+    ep: Option<Rc<RefCell<dyn Endpoint>>>,
+}
+
+/// FNV-1a digest over the dispatched event stream — order, timestamps and
+/// payload bytes. Two runs of the same seeded scenario are equivalent iff
+/// their digests match; `tests/dht_churn.rs` uses this to pin the timer
+/// wheel to the reference heap.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceDigest(u64);
+
+impl TraceDigest {
+    fn new() -> TraceDigest {
+        TraceDigest(0xcbf29ce484222325)
+    }
+
+    #[inline]
+    fn mix_bytes(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        self.0 = h;
+    }
+
+    #[inline]
+    fn mix_u64(&mut self, v: u64) {
+        self.mix_bytes(&v.to_le_bytes());
+    }
+
+    fn record(&mut self, at: Time, kind: &EventKind) {
+        self.mix_u64(at);
+        match kind {
+            EventKind::Deliver { dst_endpoint, from, to, payload } => {
+                self.mix_u64(1);
+                self.mix_u64(*dst_endpoint as u64);
+                self.mix_u64(((from.host as u64) << 16) | from.port as u64);
+                self.mix_u64(((to.host as u64) << 16) | to.port as u64);
+                self.mix_u64(payload.len() as u64);
+                self.mix_bytes(payload);
+            }
+            EventKind::Timer { endpoint, token } => {
+                self.mix_u64(2);
+                self.mix_u64(*endpoint as u64);
+                self.mix_u64(*token);
+            }
+            EventKind::Stop => self.mix_u64(3),
+        }
+    }
+
+    pub fn value(&self) -> u64 {
+        self.0
+    }
+}
+
 /// Owns the endpoint registry and the run loop.
 pub struct World {
     pub net: Net,
-    endpoints: Vec<Option<Rc<RefCell<dyn Endpoint>>>>,
+    slots: Vec<Slot>,
+    /// Vacated slot indices, reused LIFO.
+    free: Vec<usize>,
+    trace: TraceDigest,
 }
 
 impl World {
     pub fn new(net: Net) -> World {
         World {
             net,
-            endpoints: Vec::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            trace: TraceDigest::new(),
         }
     }
 
     /// Register an endpoint; returns its id (used for binds and timers).
+    /// Vacated slots are reused with a fresh generation.
     pub fn add_endpoint(&mut self, ep: Rc<RefCell<dyn Endpoint>>) -> EndpointId {
-        self.endpoints.push(Some(ep));
-        self.endpoints.len() - 1
+        if let Some(index) = self.free.pop() {
+            let slot = &mut self.slots[index];
+            debug_assert!(slot.ep.is_none());
+            slot.ep = Some(ep);
+            pack(slot.gen, index)
+        } else {
+            self.slots.push(Slot { gen: 0, ep: Some(ep) });
+            pack(0, self.slots.len() - 1)
+        }
     }
 
     /// The id the next [`World::add_endpoint`] call will return — lets a
     /// node construct subsystems that need their endpoint id before
     /// registration.
     pub fn next_endpoint_id(&self) -> EndpointId {
-        self.endpoints.len()
+        match self.free.last() {
+            Some(&index) => pack(self.slots[index].gen, index),
+            None => pack(0, self.slots.len()),
+        }
     }
 
-    /// Remove an endpoint (simulating a crashed node); its pending events
-    /// are silently dropped.
+    /// Remove an endpoint (a stopped or crashed node) in O(1): tombstone
+    /// the slot and bump its generation. Events still queued for the old
+    /// id are dropped at dispatch (`NetStats::events_dropped_stale`)
+    /// rather than swept out of the queue.
     pub fn remove_endpoint(&mut self, id: EndpointId) {
-        if let Some(slot) = self.endpoints.get_mut(id) {
-            *slot = None;
+        let (gen, index) = unpack(id);
+        if let Some(slot) = self.slots.get_mut(index) {
+            if slot.gen == gen && slot.ep.is_some() {
+                slot.ep = None;
+                slot.gen = slot.gen.wrapping_add(1);
+                self.free.push(index);
+            }
         }
     }
 
     pub fn endpoint(&self, id: EndpointId) -> Option<Rc<RefCell<dyn Endpoint>>> {
-        self.endpoints.get(id).and_then(|e| e.clone())
+        let (gen, index) = unpack(id);
+        let slot = self.slots.get(index)?;
+        if slot.gen != gen {
+            return None;
+        }
+        slot.ep.clone()
+    }
+
+    /// Number of live (non-tombstoned) endpoints.
+    pub fn live_endpoints(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// Digest of every event dispatched so far (see [`TraceDigest`]).
+    pub fn trace_digest(&self) -> u64 {
+        self.trace.value()
+    }
+
+    /// Dispatch one popped event. Stale endpoints (tombstoned or
+    /// generation-bumped) swallow their events, counted in stats.
+    fn dispatch(&mut self, at: Time, kind: EventKind) {
+        self.trace.record(at, &kind);
+        match kind {
+            EventKind::Deliver { dst_endpoint, from, to, payload } => {
+                self.net.stats.deliver_events += 1;
+                self.net.note_payload_released(payload.len());
+                match self.endpoint(dst_endpoint) {
+                    Some(ep) => {
+                        ep.borrow_mut().on_datagram(&mut self.net, from, to, payload)
+                    }
+                    None => self.net.stats.events_dropped_stale += 1,
+                }
+            }
+            EventKind::Timer { endpoint, token } => {
+                self.net.stats.timer_events += 1;
+                match self.endpoint(endpoint) {
+                    Some(ep) => ep.borrow_mut().on_timer(&mut self.net, token),
+                    None => self.net.stats.events_dropped_stale += 1,
+                }
+            }
+            EventKind::Stop => {}
+        }
     }
 
     /// Process events until the queue is empty or the virtual clock passes
@@ -68,26 +217,11 @@ impl World {
             self.net.set_now(at);
             self.net.stats.events_processed += 1;
             n += 1;
-            match kind {
-                EventKind::Deliver {
-                    dst_endpoint,
-                    from,
-                    to,
-                    payload,
-                } => {
-                    self.net.stats.deliver_events += 1;
-                    if let Some(ep) = self.endpoint(dst_endpoint) {
-                        ep.borrow_mut().on_datagram(&mut self.net, from, to, payload);
-                    }
-                }
-                EventKind::Timer { endpoint, token } => {
-                    self.net.stats.timer_events += 1;
-                    if let Some(ep) = self.endpoint(endpoint) {
-                        ep.borrow_mut().on_timer(&mut self.net, token);
-                    }
-                }
-                EventKind::Stop => break,
+            if matches!(kind, EventKind::Stop) {
+                self.trace.record(at, &kind);
+                break;
             }
+            self.dispatch(at, kind);
         }
         // Advance the clock to the deadline even if idle, so back-to-back
         // run_until calls observe monotonic time.
@@ -144,24 +278,11 @@ impl World {
             self.net.set_now(at);
             self.net.stats.events_processed += 1;
             n += 1;
-            match kind {
-                EventKind::Deliver {
-                    dst_endpoint,
-                    from,
-                    to,
-                    payload,
-                } => {
-                    if let Some(ep) = self.endpoint(dst_endpoint) {
-                        ep.borrow_mut().on_datagram(&mut self.net, from, to, payload);
-                    }
-                }
-                EventKind::Timer { endpoint, token } => {
-                    if let Some(ep) = self.endpoint(endpoint) {
-                        ep.borrow_mut().on_timer(&mut self.net, token);
-                    }
-                }
-                EventKind::Stop => break,
+            if matches!(kind, EventKind::Stop) {
+                self.trace.record(at, &kind);
+                break;
             }
+            self.dispatch(at, kind);
         }
         n
     }
@@ -272,6 +393,61 @@ mod tests {
         world.remove_endpoint(id);
         world.run_until(SECOND);
         assert!(ep.borrow().received.is_empty());
+        // The in-flight delivery was dropped at dispatch and counted.
+        assert_eq!(world.net.stats.events_dropped_stale, 1);
+    }
+
+    #[test]
+    fn slot_reuse_bumps_generation() {
+        let t = TopologyBuilder::new(1);
+        let mut world = World::new(t.build(11));
+        let mk = || {
+            Rc::new(RefCell::new(Sink { received: vec![] }))
+        };
+        let a = world.add_endpoint(mk());
+        let b = world.add_endpoint(mk());
+        assert_ne!(a, b);
+        world.remove_endpoint(a);
+        assert!(world.endpoint(a).is_none(), "tombstoned id must not resolve");
+        // The freed slot is predicted and reused with a new generation.
+        let predicted = world.next_endpoint_id();
+        let c = world.add_endpoint(mk());
+        assert_eq!(predicted, c);
+        assert_ne!(c, a, "reused slot must carry a fresh generation");
+        assert!(world.endpoint(c).is_some());
+        assert!(world.endpoint(a).is_none());
+        assert_eq!(world.live_endpoints(), 2);
+        // A timer armed on the dead id never reaches the new tenant.
+        world.net.set_timer(a, MILLI, 7);
+        world.run_until(SECOND);
+        assert_eq!(world.net.stats.events_dropped_stale, 1);
+    }
+
+    #[test]
+    fn trace_digest_is_deterministic() {
+        let run = |seed: u64| {
+            let mut t = TopologyBuilder::paper_regions();
+            let a = t.public_host(0, LinkProfile::UNLIMITED);
+            let b = t.public_host(1, LinkProfile::UNLIMITED);
+            let mut world = World::new(t.build(seed));
+            let server = Rc::new(RefCell::new(Echo {
+                addr: SimAddr::new(b, 80),
+                received: vec![],
+                timers: vec![],
+            }));
+            let sid = world.add_endpoint(server);
+            world.net.bind(sid, SimAddr::new(b, 80)).unwrap();
+            for i in 0..20u16 {
+                world
+                    .net
+                    .send(SimAddr::new(a, 9000), SimAddr::new(b, 80), vec![i as u8; 64]);
+                world.net.set_timer(sid, MILLI * (i as u64 + 1), i as u64);
+            }
+            world.run_until(SECOND);
+            world.trace_digest()
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4));
     }
 
     #[test]

@@ -17,9 +17,12 @@ pub const FANOUT: usize = 6;
 /// Seen-cache size.
 pub const SEEN_CAP: usize = 4096;
 
-const M_PUBLISH: u64 = 1;
-const M_SUBSCRIBE: u64 = 2;
-const M_UNSUBSCRIBE: u64 = 3;
+/// Wire message kinds — public so lightweight responders (e.g. the
+/// planet-scale background nodes in `scenarios::planet`) can join the
+/// mesh without a full `Gossip` instance.
+pub const M_PUBLISH: u64 = 1;
+pub const M_SUBSCRIBE: u64 = 2;
+pub const M_UNSUBSCRIBE: u64 = 3;
 
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct GossipMsg {

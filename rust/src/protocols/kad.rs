@@ -52,12 +52,15 @@ const MAX_REFRESH_PER_TICK: usize = 2;
 /// Maintenance refreshes pause above this many concurrent queries.
 const MAX_MAINTENANCE_QUERIES: usize = 8;
 
-const M_FIND_NODE: u64 = 1;
-const M_GET_PROVIDERS: u64 = 2;
-const M_ADD_PROVIDER: u64 = 3;
-const M_PUT_RECORD: u64 = 4;
-const M_GET_RECORD: u64 = 5;
-const M_REPLY: u64 = 6;
+/// Wire message kinds — public so lightweight responders (e.g. the
+/// planet-scale background nodes in `scenarios::planet`) can speak the
+/// protocol without a full `Kad` instance.
+pub const M_FIND_NODE: u64 = 1;
+pub const M_GET_PROVIDERS: u64 = 2;
+pub const M_ADD_PROVIDER: u64 = 3;
+pub const M_PUT_RECORD: u64 = 4;
+pub const M_GET_RECORD: u64 = 5;
+pub const M_REPLY: u64 = 6;
 
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct PeerEntry {

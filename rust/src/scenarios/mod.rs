@@ -4,17 +4,23 @@
 //! paper's evaluation settings (DESIGN.md §6) and returns the handles the
 //! harness needs.
 
+pub mod planet;
+
 use crate::identity::PeerId;
 use crate::netsim::link::PathProfile;
 use crate::netsim::nat::NatType;
 use crate::netsim::topology::{LinkProfile, TopologyBuilder};
-use crate::netsim::{Time, World, MICRO, MILLI, SECOND};
+use crate::netsim::{QueueKind, Time, World, MICRO, MILLI, SECOND};
 use crate::node::{LatticaNode, NodeConfig, NodeEvent};
 use crate::protocols::Ctx;
 use crate::rpc::{Outcome, Service, Stub, StubDone};
 use crate::util::buf::Buf;
 use std::cell::RefCell;
 use std::rc::Rc;
+
+pub use planet::{
+    planet_scale, BackgroundNode, BackgroundStats, PlanetConfig, PlanetOutcome, RoutingOracle,
+};
 
 pub type Node = Rc<RefCell<LatticaNode>>;
 
@@ -213,7 +219,7 @@ pub fn oracle_pair_success(a: Option<NatType>, b: Option<NatType>) -> bool {
 
 /// A mesh of `n` public nodes in one region bootstrapped through node 0.
 pub fn bootstrap_mesh(n: usize, seed: u64, link: LinkProfile) -> (World, Vec<Node>) {
-    bootstrap_mesh_on(n, seed, link, None)
+    bootstrap_mesh_kind(n, seed, link, None, QueueKind::default())
 }
 
 /// [`bootstrap_mesh`] with an optional override of the intra-region path
@@ -224,7 +230,20 @@ pub fn bootstrap_mesh_on(
     link: LinkProfile,
     path: Option<PathProfile>,
 ) -> (World, Vec<Node>) {
+    bootstrap_mesh_kind(n, seed, link, path, QueueKind::default())
+}
+
+/// [`bootstrap_mesh_on`] with an explicit event-queue implementation —
+/// the harness behind the heap-vs-wheel trace-equivalence test.
+pub fn bootstrap_mesh_kind(
+    n: usize,
+    seed: u64,
+    link: LinkProfile,
+    path: Option<PathProfile>,
+    queue: QueueKind,
+) -> (World, Vec<Node>) {
     let mut t = TopologyBuilder::paper_regions();
+    t.set_queue_kind(queue);
     if let Some(p) = path {
         t.intra(0, p);
     }
@@ -280,7 +299,13 @@ pub struct ChurnMesh {
 /// Node identities are deterministic in `(seed, index)`, so a restarted
 /// node keeps its PeerId and address.
 pub fn churn_mesh(n: usize, seed: u64, link: LinkProfile) -> ChurnMesh {
-    let (world, nodes) = bootstrap_mesh(n, seed, link);
+    churn_mesh_kind(n, seed, link, QueueKind::default())
+}
+
+/// [`churn_mesh`] with an explicit event-queue implementation (see
+/// [`bootstrap_mesh_kind`]).
+pub fn churn_mesh_kind(n: usize, seed: u64, link: LinkProfile, queue: QueueKind) -> ChurnMesh {
+    let (world, nodes) = bootstrap_mesh_kind(n, seed, link, None, queue);
     let hosts: Vec<u32> = nodes
         .iter()
         .map(|nd| nd.borrow().swarm.local_addr.host)

@@ -1,0 +1,69 @@
+//! Planet-scale scenario acceptance: lazy materialization keeps large
+//! meshes cheap while lookup quality holds, and the scaling-curve gauges
+//! (peak queue depth, in-flight payload bytes) are actually populated.
+//!
+//! Seeded and deterministic. The 1k-node arm is ignored under debug
+//! builds and runs in CI's release pass; the 10k and 100k arms live in
+//! `benches/dht_lookup.rs` (the 100k one behind `PLANET_100K=1`).
+
+use lattica::scenarios::{planet_scale, PlanetConfig};
+
+#[test]
+fn planet_mid_arm_lookups_succeed_and_stay_lazy() {
+    let mut o = planet_scale(&PlanetConfig::sized(150, 10, 1106));
+    assert_eq!(o.stats.attempted, 10);
+    assert!(
+        o.stats.success_rate() >= 0.8,
+        "mid-arm success collapsed: {:.2} ({:?})",
+        o.stats.success_rate(),
+        o.stats.summary()
+    );
+    // Laziness: the measured workload must not wake the whole planet.
+    assert!(o.materialized > 0, "no background node ever served traffic");
+    assert!(
+        (o.materialized as usize) < o.background_total / 2,
+        "materialized {}/{} background nodes — laziness broken",
+        o.materialized,
+        o.background_total
+    );
+    // The gauges behind the bench rows must be live, not default zeros.
+    assert!(o.peak_queue_depth > 0);
+    assert!(o.peak_inflight_datagrams > 0);
+    assert!(o.peak_inflight_payload_bytes > 0);
+    assert!(o.events_processed > 0);
+    assert!(o.kad_served > 0, "background responders never answered kad");
+    assert!(o.churn_downs + o.churn_ups > 0, "churn plan never fired");
+}
+
+#[test]
+fn planet_arm_is_deterministic_modulo_wall_clock() {
+    let a = planet_scale(&PlanetConfig::sized(120, 8, 77));
+    let b = planet_scale(&PlanetConfig::sized(120, 8, 77));
+    assert_eq!(a.stats.attempted, b.stats.attempted);
+    assert_eq!(a.stats.succeeded, b.stats.succeeded);
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.materialized, b.materialized);
+    assert_eq!(a.kad_served, b.kad_served);
+    assert_eq!(a.peak_queue_depth, b.peak_queue_depth);
+}
+
+/// The 1k-node scaling-curve arm with the acceptance bar from the issue:
+/// ≥95% lookup success. Heavy — release builds only (CI runs it).
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-mode scenario; run via CI or --include-ignored")]
+fn planet_1k_success_rate_meets_bar() {
+    let mut o = planet_scale(&PlanetConfig::sized(1_000, 40, 2024));
+    assert!(
+        o.stats.success_rate() >= 0.95,
+        "1k-arm success below the 95% bar: {:.3} ({:?})",
+        o.stats.success_rate(),
+        o.stats.summary()
+    );
+    assert!(
+        (o.materialized as usize) < o.background_total / 4,
+        "1k arm materialized {}/{} background nodes",
+        o.materialized,
+        o.background_total
+    );
+    assert!(o.events_dropped_stale > 0, "churn never produced stale events");
+}
