@@ -16,6 +16,13 @@
 //! the fraction of full demand actually moved (the delta evidence), and
 //! asserts the headline: swarm-delta beats central-full on BOTH trainer
 //! egress and p99 sync latency.
+//!
+//! A second A/B pair isolates the control plane on a 10k-chunk sync
+//! (256 B fixed chunks): `control/legacy` runs with compact addressing,
+//! HAVE batching and gossip lazy push disabled; `control/compact` with
+//! them on. Both rows emit `control_bytes` and `control_ratio`
+//! (bytes-of-control-per-delivered-byte), and the compressed arm must
+//! cut the ratio at least 5x.
 
 use lattica::scenarios::{model_sync_scenario, ModelSyncConfig, SyncMode};
 use lattica::util::cli::Args;
@@ -52,6 +59,8 @@ fn main() {
             mode,
             delta,
             nat_mixed: false,
+            chunk_bytes: 0,
+            compact_control: true,
             seed: 61,
             timeout_secs: 240,
         });
@@ -88,8 +97,54 @@ fn main() {
                 Json::num(out.replica_bytes_served as f64),
             ),
             ("wall_secs", Json::num(wall_start.elapsed().as_secs_f64())),
+            ("control_bytes", Json::num(out.control.control_bytes() as f64)),
+            ("control_ratio", Json::num(out.control.ratio())),
         ]));
     }
+
+    // Control-plane A/B: same swarm/delta topology, 10k fixed-size chunks
+    // so per-chunk metadata dominates, legacy vs compact control plane.
+    let control_arms: [(&str, bool); 2] = [("control/legacy", false), ("control/compact", true)];
+    let mut control_ratios: Vec<f64> = Vec::new();
+    for (label, compact) in control_arms {
+        let wall_start = std::time::Instant::now();
+        let out = model_sync_scenario(&ModelSyncConfig {
+            replicas: 3,
+            checkpoints: 1,
+            blob_bytes: 2_560_000,
+            churn: 0.0,
+            mode: SyncMode::Swarm,
+            delta: true,
+            nat_mixed: false,
+            chunk_bytes: 256,
+            compact_control: compact,
+            seed: 71,
+            timeout_secs: 240,
+        });
+        assert!(out.completed, "[{label}] sync did not complete");
+        assert!(out.all_identical, "[{label}] replicas diverged");
+        let ratio = out.control.ratio();
+        assert!(ratio > 0.0, "[{label}] control ratio must be nonzero");
+        println!("  [{label:<15}] {}", out.control.summary());
+        control_ratios.push(ratio);
+        rows.push(Json::obj(vec![
+            ("mode", Json::str("swarm")),
+            ("delta", Json::Bool(true)),
+            ("compact_control", Json::Bool(compact)),
+            ("replicas", Json::num(3.0)),
+            ("checkpoints", Json::num(1.0)),
+            ("blob_bytes", Json::num(2_560_000.0)),
+            ("chunk_bytes", Json::num(256.0)),
+            ("control_bytes", Json::num(out.control.control_bytes() as f64)),
+            ("control_ratio", Json::num(ratio)),
+            (
+                "delivered_bytes",
+                Json::num(out.control.delivered_bytes as f64),
+            ),
+            ("wall_secs", Json::num(wall_start.elapsed().as_secs_f64())),
+        ]));
+    }
+
     let doc = Json::obj(vec![
         ("bench", Json::str("model_sync")),
         ("blob_bytes", Json::num(blob_bytes as f64)),
@@ -111,5 +166,17 @@ fn main() {
         swarm_delta_p99 < central_full_p99,
         "swarm-delta p99 {swarm_delta_p99}s must beat central-full {central_full_p99}s"
     );
-    println!("shape check OK: swarm-delta beats parameter-server-full on egress and p99");
+    // Control-plane headline: compressed control plane must cut the
+    // bytes-of-control-per-delivered-byte ratio at least 5x on the
+    // 10k-chunk sync.
+    let (legacy_ratio, compact_ratio) = (control_ratios[0], control_ratios[1]);
+    assert!(
+        legacy_ratio >= 5.0 * compact_ratio,
+        "compact control plane must cut control ratio >=5x (legacy {legacy_ratio:.4} vs compact {compact_ratio:.4})"
+    );
+    println!(
+        "shape check OK: swarm-delta beats parameter-server-full on egress and p99; \
+         compact control plane cuts control ratio {:.1}x ({legacy_ratio:.4} -> {compact_ratio:.4})",
+        legacy_ratio / compact_ratio
+    );
 }

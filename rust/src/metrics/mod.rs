@@ -101,6 +101,10 @@ pub struct TransportStats {
     pub loss_events: u64,
     pub fast_retransmits: u64,
     pub rto_events: u64,
+    /// Wire bytes spent on ACK frames (control-plane accounting).
+    pub ack_bytes_sent: u64,
+    /// ACK frames whose range list was cut to the per-frame cap.
+    pub ack_truncations: u64,
     /// Share of send opportunities delayed by the pacer (0..1).
     pub pacer_utilization: f64,
 }
@@ -119,6 +123,8 @@ pub struct TransportHealth {
     pub loss_events: u64,
     pub fast_retransmits: u64,
     pub rto_events: u64,
+    pub ack_bytes_sent: u64,
+    pub ack_truncations: u64,
 }
 
 impl TransportHealth {
@@ -134,6 +140,8 @@ impl TransportHealth {
         self.loss_events += s.loss_events;
         self.fast_retransmits += s.fast_retransmits;
         self.rto_events += s.rto_events;
+        self.ack_bytes_sent += s.ack_bytes_sent;
+        self.ack_truncations += s.ack_truncations;
     }
 
     pub fn mean_cwnd(&self) -> u64 {
@@ -158,6 +166,63 @@ impl TransportHealth {
         } else {
             self.pacer_util_sum / self.conns as f64
         }
+    }
+}
+
+/// Control-plane bytes by category vs application bytes delivered — the
+/// "bytes of control per delivered byte" efficiency metric from the
+/// control-plane compression work (DESIGN.md §Control-plane
+/// compression). Aggregated across all nodes of a scenario; each
+/// category counts encoded message bytes at the sender, so legacy and
+/// compact encodings are compared on equal terms.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ControlPlaneStats {
+    /// Transport ACK frame bytes (from `TransportStats::ack_bytes_sent`).
+    pub ack_bytes: u64,
+    /// Bitswap non-BLOCK message bytes (WANT/WANT_HAVE/HAVE/DONT_HAVE/
+    /// CANCEL).
+    pub bitswap_meta_bytes: u64,
+    /// Gossip bytes (SUBSCRIBE/PUBLISH/IHAVE/IWANT — announcements are
+    /// metadata from the sync pipeline's point of view).
+    pub gossip_meta_bytes: u64,
+    /// Kademlia request/reply bytes.
+    pub kad_bytes: u64,
+    /// Application payload bytes delivered (Bitswap block payloads).
+    pub delivered_bytes: u64,
+}
+
+impl ControlPlaneStats {
+    pub fn control_bytes(&self) -> u64 {
+        self.ack_bytes + self.bitswap_meta_bytes + self.gossip_meta_bytes + self.kad_bytes
+    }
+
+    /// Control bytes per delivered byte; 0.0 when nothing was delivered.
+    pub fn ratio(&self) -> f64 {
+        if self.delivered_bytes == 0 {
+            return 0.0;
+        }
+        self.control_bytes() as f64 / self.delivered_bytes as f64
+    }
+
+    pub fn merge(&mut self, o: &ControlPlaneStats) {
+        self.ack_bytes += o.ack_bytes;
+        self.bitswap_meta_bytes += o.bitswap_meta_bytes;
+        self.gossip_meta_bytes += o.gossip_meta_bytes;
+        self.kad_bytes += o.kad_bytes;
+        self.delivered_bytes += o.delivered_bytes;
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "control={} (ack={} bitswap={} gossip={} kad={}) delivered={} ratio={:.4}",
+            crate::util::timefmt::fmt_bytes(self.control_bytes()),
+            crate::util::timefmt::fmt_bytes(self.ack_bytes),
+            crate::util::timefmt::fmt_bytes(self.bitswap_meta_bytes),
+            crate::util::timefmt::fmt_bytes(self.gossip_meta_bytes),
+            crate::util::timefmt::fmt_bytes(self.kad_bytes),
+            crate::util::timefmt::fmt_bytes(self.delivered_bytes),
+            self.ratio(),
+        )
     }
 }
 
@@ -489,6 +554,8 @@ mod tests {
             loss_events: 2,
             fast_retransmits: 1,
             rto_events: 1,
+            ack_bytes_sent: 40,
+            ack_truncations: 3,
             pacer_utilization: 0.5,
         };
         h.record(&s);
@@ -498,7 +565,29 @@ mod tests {
         assert_eq!(h.mean_srtt(), 10);
         assert_eq!(h.bytes_retransmitted, 14);
         assert_eq!(h.loss_events, 4);
+        assert_eq!(h.ack_bytes_sent, 80);
+        assert_eq!(h.ack_truncations, 6);
         assert!((h.mean_pacer_utilization() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn control_plane_ratio() {
+        let mut c = ControlPlaneStats {
+            ack_bytes: 100,
+            bitswap_meta_bytes: 200,
+            gossip_meta_bytes: 50,
+            kad_bytes: 150,
+            delivered_bytes: 0,
+        };
+        assert_eq!(c.control_bytes(), 500);
+        assert_eq!(c.ratio(), 0.0, "no delivery → ratio degenerates to 0");
+        c.delivered_bytes = 10_000;
+        assert!((c.ratio() - 0.05).abs() < 1e-9);
+        c.merge(&c.clone());
+        assert_eq!(c.control_bytes(), 1000);
+        assert_eq!(c.delivered_bytes, 20_000);
+        assert!((c.ratio() - 0.05).abs() < 1e-9, "merge preserves the rate");
+        assert!(!c.summary().is_empty());
     }
 
     #[test]

@@ -32,6 +32,13 @@ pub struct NodeConfig {
     /// downloading. Off = parameter-server behaviour (fetch only from the
     /// providers the caller names, never re-serve announcements).
     pub swarm_sync: bool,
+    /// Compact control plane: range-coded Bitswap chunk sets over
+    /// manifest indexes, batched HAVE pushes and gossip lazy push
+    /// (IHAVE/IWANT). Off = legacy full-CID / full-payload encodings —
+    /// the A/B baseline for the control-ratio bench (see DESIGN.md
+    /// §Control-plane compression). Either side of a conversation may
+    /// run legacy: the wire format is forward- and backward-compatible.
+    pub compact_control: bool,
     /// Human label for logs/reports.
     pub label: String,
 }
@@ -46,6 +53,7 @@ impl Default for NodeConfig {
             relay_enabled: false,
             rendezvous_server: false,
             swarm_sync: true,
+            compact_control: true,
             label: String::new(),
         }
     }
@@ -87,6 +95,9 @@ impl NodeConfig {
         }
         if let Some(v) = get("swarm_sync").and_then(|v| v.as_bool()) {
             c.swarm_sync = v;
+        }
+        if let Some(v) = get("compact_control").and_then(|v| v.as_bool()) {
+            c.compact_control = v;
         }
         if let Some(v) = get("label").and_then(|v| v.as_str()) {
             c.label = v.to_string();
@@ -231,6 +242,7 @@ lr = 0.5
         assert_eq!(c.port, 4001);
         assert!(!c.relay_enabled);
         assert!(c.swarm_sync);
+        assert!(c.compact_control);
         assert_eq!(c.cc, CcAlgorithm::Cubic);
         let r = NodeConfig::relay(9);
         assert!(r.relay_enabled && r.rendezvous_server);

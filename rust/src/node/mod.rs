@@ -153,10 +153,14 @@ impl LatticaNode {
         .iter()
         .map(|s| s.to_string())
         .collect();
+        let mut bitswap = Bitswap::new();
+        bitswap.compact_control = cfg.compact_control;
+        let mut gossip = Gossip::new(local_peer);
+        gossip.lazy_push = cfg.compact_control;
         let node = LatticaNode {
             kad: Kademlia::new(local_peer, host, cfg.port),
-            bitswap: Bitswap::new(),
-            gossip: Gossip::new(local_peer),
+            bitswap,
+            gossip,
             rpc: RpcNode::new(),
             ping: Ping::new(),
             identify: Identify::new(protocols),
@@ -287,6 +291,9 @@ impl LatticaNode {
         // The manifest is session-startup metadata: never choke it.
         self.bitswap.choke_exempt.insert(root);
         let mut ctx = Ctx::new(&mut self.swarm, net);
+        // Known chunk list → compact (root, index-set) control messages.
+        self.bitswap
+            .register_manifest(&mut ctx, &self.blockstore, root, &manifest.chunks);
         self.kad.provide(&mut ctx, root.to_key());
         for c in &manifest.chunks {
             // Providing the root is usually enough (fetchers ask the same
@@ -319,6 +326,9 @@ impl LatticaNode {
         let manifest = DagManifest::load(&self.blockstore, root)?;
         let missing = manifest.missing(&self.blockstore);
         let mut ctx = Ctx::new(&mut self.swarm, net);
+        // Known chunk list → compact (root, index-set) control messages.
+        self.bitswap
+            .register_manifest(&mut ctx, &self.blockstore, *root, &manifest.chunks);
         Ok(self.bitswap.fetch(&mut ctx, &self.blockstore, missing, providers))
     }
 
@@ -726,6 +736,7 @@ impl Endpoint for LatticaNode {
                     let mut ctx = Ctx::new(&mut self.swarm, net);
                     self.kad.tick(&mut ctx);
                     self.bitswap.tick(&mut ctx, &self.blockstore);
+                    self.gossip.tick(&mut ctx);
                     self.rpc.tick(&mut ctx);
                 }
                 self.autonat.tick(net.now());

@@ -25,7 +25,7 @@ use crate::content::{Blockstore, Cid};
 use crate::identity::PeerId;
 use crate::netsim::{Time, MILLI, SECOND};
 use crate::util::buf::Buf;
-use crate::wire::{encode_pooled, Message, PbReader, PbWriter};
+use crate::wire::{encode_pooled, Message, PbReader, PbWriter, RangeSet};
 use anyhow::Result;
 use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 
@@ -76,6 +76,15 @@ pub struct BitswapMsg {
     /// zero-copy with the blockstore — serving a block to N peers bumps a
     /// reference count N times instead of cloning the bytes.
     pub block: Buf,
+    /// Compact addressing for control messages: the manifest root whose
+    /// ordered chunk list `indexes` selects into. `cids` is empty when
+    /// set. Legacy messages never set these fields, so their encoding is
+    /// byte-identical to the pre-compact wire format; legacy decoders
+    /// skip them as unknown fields.
+    pub root: Option<Cid>,
+    /// Range-coded chunk index set over `root`'s manifest
+    /// ([`RangeSet::encode`] bytes).
+    pub indexes: Vec<u8>,
 }
 
 impl Message for BitswapMsg {
@@ -85,6 +94,10 @@ impl Message for BitswapMsg {
             w.bytes_always(2, c.as_bytes());
         }
         w.bytes(3, &self.block);
+        if let Some(r) = &self.root {
+            w.bytes_always(4, r.as_bytes());
+        }
+        w.bytes(5, &self.indexes);
     }
 
     fn decode(buf: &[u8]) -> Result<BitswapMsg> {
@@ -94,6 +107,8 @@ impl Message for BitswapMsg {
                 1 => m.kind = f.as_u64(),
                 2 => m.cids.push(Cid::from_bytes(f.as_bytes()?)?),
                 3 => m.block = Buf::copy_from_slice(f.as_bytes()?),
+                4 => m.root = Some(Cid::from_bytes(f.as_bytes()?)?),
+                5 => m.indexes = f.as_bytes()?.to_vec(),
                 _ => {}
             }
             Ok(())
@@ -113,6 +128,8 @@ impl Message for BitswapMsg {
                     f.as_bytes()?; // wire-type check
                     m.block = buf.slice(f.data_start..f.data_start + f.data.len());
                 }
+                4 => m.root = Some(Cid::from_bytes(f.as_bytes()?)?),
+                5 => m.indexes = f.as_bytes()?.to_vec(),
                 _ => {}
             }
             Ok(())
@@ -157,6 +174,13 @@ pub struct BitswapStats {
     pub want_timeouts: u64,
     pub endgame_duplicate_wants: u64,
     pub cancels_sent: u64,
+    /// WANT_HAVE polls suppressed entirely because nothing changed since
+    /// the last poll of that peer (delta polling).
+    pub want_haves_suppressed: u64,
+    /// Wire bytes of every non-BLOCK bitswap message sent — the bitswap
+    /// share of the control-plane ratio (DESIGN.md §Control-plane
+    /// compression).
+    pub meta_bytes_sent: u64,
 }
 
 #[derive(Debug)]
@@ -271,6 +295,28 @@ pub struct Bitswap {
     /// Metadata blocks (manifests, delta manifests) that must never
     /// choke regardless of size — publishers register them.
     pub choke_exempt: BTreeSet<Cid>,
+    /// Compact control plane: range-coded `(root, index set)` addressing
+    /// and per-tick HAVE batching. Set from `NodeConfig::compact_control`;
+    /// either encoding interoperates with either peer, so this only
+    /// affects what *we* send (the bench A/B flag).
+    pub compact_control: bool,
+    /// Registered manifests: root → ordered chunk list (decode side of
+    /// compact addressing).
+    manifests: BTreeMap<Cid, Vec<Cid>>,
+    /// Reverse chunk index: chunk → (root, position) (encode side).
+    rev: BTreeMap<Cid, (Cid, u64)>,
+    /// HAVE pushes queued per peer, flushed as one range-coded message
+    /// per peer per tick instead of one message per block.
+    pending_haves: BTreeMap<PeerId, (StreamRef, Vec<Cid>)>,
+    /// Compact WANT/WANT_HAVE whose root manifest we don't know yet:
+    /// root → peer → (stream, raw index bytes). Resolved the moment the
+    /// manifest lands here (mid-download re-serving across the compact
+    /// encoding).
+    pending_root_interest: BTreeMap<Cid, BTreeMap<PeerId, (StreamRef, Vec<u8>)>>,
+    /// Chunks already WANT_HAVE-announced per peer. Re-polls (restarted
+    /// sessions, churn recovery) send only the delta — the peer remembers
+    /// interest, so resending the full missing set is pure control waste.
+    announced: BTreeMap<PeerId, BTreeSet<Cid>>,
     next_session: u64,
     events: VecDeque<BitswapEvent>,
     pub stats: BitswapStats,
@@ -297,6 +343,12 @@ impl Bitswap {
             choked_set: BTreeSet::new(),
             served_once: BTreeSet::new(),
             choke_exempt: BTreeSet::new(),
+            compact_control: false,
+            manifests: BTreeMap::new(),
+            rev: BTreeMap::new(),
+            pending_haves: BTreeMap::new(),
+            pending_root_interest: BTreeMap::new(),
+            announced: BTreeMap::new(),
             next_session: 1,
             events: VecDeque::new(),
             stats: BitswapStats::default(),
@@ -327,6 +379,133 @@ impl Bitswap {
             ctx.open_stream_class(peer, BITSWAP_PROTO, crate::transport::TrafficClass::Bulk)?;
         self.streams.insert(*peer, (cid, stream));
         Ok((cid, stream))
+    }
+
+    /// Node hook: a manifest's chunk list became known here (publish, or
+    /// fetch start once the manifest block arrived) — enables compact
+    /// `(root, index set)` addressing for its chunks and answers any
+    /// compact interest parked on the root.
+    pub fn register_manifest(
+        &mut self,
+        ctx: &mut Ctx,
+        store: &Blockstore,
+        root: Cid,
+        chunks: &[Cid],
+    ) {
+        self.note_manifest(root, chunks);
+        self.resolve_pending_root(ctx, store, root);
+    }
+
+    /// Bookkeeping half of [`Bitswap::register_manifest`]: index the chunk
+    /// list both ways (root → chunks for decode, chunk → (root, index)
+    /// for encode).
+    fn note_manifest(&mut self, root: Cid, chunks: &[Cid]) {
+        if self.manifests.contains_key(&root) {
+            return;
+        }
+        for (i, c) in chunks.iter().enumerate() {
+            self.rev.insert(*c, (root, i as u64));
+        }
+        self.manifests.insert(root, chunks.to_vec());
+    }
+
+    /// Try to index a manifest whose block is already in the store.
+    fn try_load_manifest(&mut self, store: &Blockstore, root: &Cid) -> bool {
+        if self.manifests.contains_key(root) {
+            return true;
+        }
+        let Some(block) = store.get(root) else { return false };
+        match crate::content::DagManifest::decode(&block) {
+            Ok(man) if !man.chunks.is_empty() => {
+                self.note_manifest(*root, &man.chunks);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Build a control message addressing `cids`. With compact control on
+    /// and every cid belonging to one registered manifest, the set goes
+    /// out as `(root, range-coded index set)` — bytes proportional to the
+    /// number of runs, not the number of chunks. Falls back to the legacy
+    /// per-cid encoding otherwise (mixed roots, unregistered blocks, and
+    /// singletons, where the 32-byte root wouldn't pay for itself).
+    fn make_msg(&self, kind: u64, cids: Vec<Cid>) -> BitswapMsg {
+        if self.compact_control && cids.len() >= 2 {
+            if let Some(&(root, _)) = self.rev.get(&cids[0]) {
+                let mut set = RangeSet::new();
+                let mut uniform = true;
+                for c in &cids {
+                    match self.rev.get(c) {
+                        Some(&(r, i)) if r == root => set.insert(i),
+                        _ => {
+                            uniform = false;
+                            break;
+                        }
+                    }
+                }
+                if uniform {
+                    return BitswapMsg {
+                        kind,
+                        root: Some(root),
+                        indexes: set.encode(),
+                        ..BitswapMsg::default()
+                    };
+                }
+            }
+        }
+        BitswapMsg {
+            kind,
+            cids,
+            ..BitswapMsg::default()
+        }
+    }
+
+    /// Send a metadata (non-BLOCK) message, crediting its wire size to
+    /// [`BitswapStats::meta_bytes_sent`]. Associated fn so callers can
+    /// hold disjoint `self` borrows.
+    fn send_meta(
+        stats: &mut BitswapStats,
+        ctx: &mut Ctx,
+        conn: u64,
+        stream: u64,
+        msg: &BitswapMsg,
+    ) -> bool {
+        match encode_pooled(msg, |b| ctx.send(conn, stream, b).map(|()| b.len())) {
+            Ok(n) => {
+                stats.meta_bytes_sent += n as u64;
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Resolve compact interest parked on `root` once its manifest is
+    /// known: push HAVEs for chunks already held, remember interest in
+    /// the rest (the normal mid-download re-serving path).
+    fn resolve_pending_root(&mut self, ctx: &mut Ctx, store: &Blockstore, root: Cid) {
+        let Some(pending) = self.pending_root_interest.remove(&root) else { return };
+        let Some(chunks) = self.manifests.get(&root).cloned() else { return };
+        let n = chunks.len() as u64;
+        for (peer, ((conn, stream), indexes)) in pending {
+            let Ok(set) = RangeSet::decode(&indexes) else { continue };
+            let mut have = Vec::new();
+            for i in set.iter().take_while(|&i| i < n) {
+                let c = chunks[i as usize];
+                if store.has(&c) {
+                    have.push(c);
+                } else {
+                    self.interest.entry(c).or_default().insert(peer, (conn, stream));
+                }
+            }
+            if !have.is_empty() {
+                let pushed = have.len() as u64;
+                let msg = self.make_msg(M_HAVE, have);
+                if Self::send_meta(&mut self.stats, ctx, conn, stream, &msg) {
+                    self.stats.have_pushes += pushed;
+                }
+            }
+        }
     }
 
     /// Start fetching `cids` from `providers`. Returns the session id.
@@ -428,13 +607,25 @@ impl Bitswap {
                 continue;
             }
             self.dialing.remove(&p);
+            // Delta polling: only WANT_HAVE the chunks this peer hasn't
+            // been asked about yet. Restarted sessions and churn re-polls
+            // would otherwise resend the full missing set, and the peer's
+            // remembered interest makes those resends pure control waste.
+            let delta: Vec<Cid> = match self.announced.get(&p) {
+                Some(a) => want_list.iter().filter(|c| !a.contains(c)).copied().collect(),
+                None => want_list.clone(),
+            };
+            if delta.is_empty() {
+                self.stats.want_haves_suppressed += 1;
+                if let Some(s) = self.sessions.get_mut(&sid) {
+                    s.subscribed.insert(p);
+                }
+                continue;
+            }
             if let Ok((conn, stream)) = self.stream_to(ctx, &p) {
-                let msg = BitswapMsg {
-                    kind: M_WANT_HAVE,
-                    cids: want_list.clone(),
-                    block: Buf::new(),
-                };
-                if encode_pooled(&msg, |b| ctx.send(conn, stream, b)).is_ok() {
+                let msg = self.make_msg(M_WANT_HAVE, delta.clone());
+                if Self::send_meta(&mut self.stats, ctx, conn, stream, &msg) {
+                    self.announced.entry(p).or_default().extend(delta);
                     if let Some(s) = self.sessions.get_mut(&sid) {
                         s.subscribed.insert(p);
                     }
@@ -575,12 +766,8 @@ impl Bitswap {
         let mut sent_any = false;
         for (peer, cids) in batches {
             let Ok((conn, stream)) = self.stream_to(ctx, &peer) else { continue };
-            let msg = BitswapMsg {
-                kind: M_WANT,
-                cids: cids.clone(),
-                block: Buf::new(),
-            };
-            if encode_pooled(&msg, |b| ctx.send(conn, stream, b)).is_err() {
+            let msg = self.make_msg(M_WANT, cids.clone());
+            if !Self::send_meta(&mut self.stats, ctx, conn, stream, &msg) {
                 continue;
             }
             sent_any = true;
@@ -642,7 +829,42 @@ impl Bitswap {
     ) -> Result<()> {
         // Remember the stream for replies and pushes.
         self.streams.entry(peer).or_insert((conn, stream));
-        let m = BitswapMsg::decode_buf(msg)?;
+        let mut m = BitswapMsg::decode_buf(msg)?;
+        // Compact addressing: materialize (root, index set) back into
+        // CIDs. An unknown root cannot be materialized — for WANT and
+        // WANT_HAVE we park the interest until the manifest lands here
+        // and echo a compact DONT_HAVE so the requester fails over
+        // meanwhile; other kinds carry no obligation and are dropped.
+        if let Some(root) = m.root {
+            let set = RangeSet::decode(&m.indexes)?;
+            self.try_load_manifest(store, &root);
+            match self.manifests.get(&root) {
+                Some(chunks) => {
+                    let n = chunks.len() as u64;
+                    m.cids = set
+                        .iter()
+                        .take_while(|&i| i < n)
+                        .map(|i| chunks[i as usize])
+                        .collect();
+                }
+                None => {
+                    if m.kind == M_WANT || m.kind == M_WANT_HAVE {
+                        let reply = BitswapMsg {
+                            kind: M_DONT_HAVE,
+                            root: Some(root),
+                            indexes: m.indexes.clone(),
+                            ..BitswapMsg::default()
+                        };
+                        Self::send_meta(&mut self.stats, ctx, conn, stream, &reply);
+                        self.pending_root_interest
+                            .entry(root)
+                            .or_default()
+                            .insert(peer, ((conn, stream), m.indexes));
+                    }
+                    return Ok(());
+                }
+            }
+        }
         match m.kind {
             M_WANT => {
                 let mut dont = Vec::new();
@@ -681,12 +903,8 @@ impl Bitswap {
                     }
                 }
                 if !dont.is_empty() {
-                    let reply = BitswapMsg {
-                        kind: M_DONT_HAVE,
-                        cids: dont,
-                        block: Buf::new(),
-                    };
-                    let _ = encode_pooled(&reply, |b| ctx.send(conn, stream, b));
+                    let reply = self.make_msg(M_DONT_HAVE, dont);
+                    Self::send_meta(&mut self.stats, ctx, conn, stream, &reply);
                 }
             }
             M_WANT_HAVE => {
@@ -702,8 +920,8 @@ impl Bitswap {
                 }
                 for (kind, cids) in [(M_HAVE, have), (M_DONT_HAVE, dont)] {
                     if !cids.is_empty() {
-                        let reply = BitswapMsg { kind, cids, block: Buf::new() };
-                        let _ = encode_pooled(&reply, |b| ctx.send(conn, stream, b));
+                        let reply = self.make_msg(kind, cids);
+                        Self::send_meta(&mut self.stats, ctx, conn, stream, &reply);
                     }
                 }
             }
@@ -791,6 +1009,12 @@ impl Bitswap {
                     from: peer,
                     size,
                 });
+                // The stored block may itself be a manifest that compact
+                // interest is parked on.
+                if self.pending_root_interest.contains_key(&c) && self.try_load_manifest(store, &c)
+                {
+                    self.resolve_pending_root(ctx, store, c);
+                }
                 self.on_block_arrived(ctx, c, peer, size);
             }
             _ => {}
@@ -819,18 +1043,22 @@ impl Bitswap {
             kind: M_BLOCK,
             cids: vec![c],
             block,
+            ..BitswapMsg::default()
         };
         let _ = ctx.send_buf(conn, stream, reply.encode_buf());
     }
 
     fn send_cancel(&mut self, ctx: &mut Ctx, peer: &PeerId, cids: Vec<Cid>) {
+        // A cancel withdraws the peer's remembered interest, so these
+        // chunks must be re-announced if a later poll still wants them.
+        if let Some(a) = self.announced.get_mut(peer) {
+            for c in &cids {
+                a.remove(c);
+            }
+        }
         if let Some(&(conn, stream)) = self.streams.get(peer) {
-            let msg = BitswapMsg {
-                kind: M_CANCEL,
-                cids,
-                block: Buf::new(),
-            };
-            if encode_pooled(&msg, |b| ctx.send(conn, stream, b)).is_ok() {
+            let msg = self.make_msg(M_CANCEL, cids);
+            if Self::send_meta(&mut self.stats, ctx, conn, stream, &msg) {
                 self.stats.cancels_sent += 1;
             }
         }
@@ -890,20 +1118,36 @@ impl Bitswap {
                 }
             }
         }
+        // The chunk is no longer wanted here: a future poll may announce
+        // it again (e.g. for a later session).
+        for a in self.announced.values_mut() {
+            a.remove(&c);
+        }
         // Mid-download re-serving: push a HAVE to every peer whose
-        // interest in this chunk we remembered while we lacked it.
+        // interest in this chunk we remembered while we lacked it. With
+        // compact control the pushes batch into one range-coded HAVE per
+        // peer on the next tick instead of one message per block.
         if let Some(interested) = self.interest.remove(&c) {
             for (p, (conn, stream)) in interested {
                 if p == from {
                     continue;
                 }
-                let msg = BitswapMsg {
-                    kind: M_HAVE,
-                    cids: vec![c],
-                    block: Buf::new(),
-                };
-                if encode_pooled(&msg, |b| ctx.send(conn, stream, b)).is_ok() {
-                    self.stats.have_pushes += 1;
+                if self.compact_control {
+                    let e = self
+                        .pending_haves
+                        .entry(p)
+                        .or_insert_with(|| ((conn, stream), Vec::new()));
+                    e.0 = (conn, stream);
+                    e.1.push(c);
+                } else {
+                    let msg = BitswapMsg {
+                        kind: M_HAVE,
+                        cids: vec![c],
+                        ..BitswapMsg::default()
+                    };
+                    if Self::send_meta(&mut self.stats, ctx, conn, stream, &msg) {
+                        self.stats.have_pushes += 1;
+                    }
                 }
             }
         }
@@ -914,6 +1158,15 @@ impl Bitswap {
     /// subscriptions blocked on dials, and redispatch every session.
     pub fn tick(&mut self, ctx: &mut Ctx, store: &Blockstore) {
         let now = ctx.now();
+        // Flush batched HAVE pushes: one (range-coded) HAVE per peer for
+        // everything that arrived since the last tick.
+        for (_, ((conn, stream), cids)) in std::mem::take(&mut self.pending_haves) {
+            let pushed = cids.len() as u64;
+            let msg = self.make_msg(M_HAVE, cids);
+            if Self::send_meta(&mut self.stats, ctx, conn, stream, &msg) {
+                self.stats.have_pushes += pushed;
+            }
+        }
         // Optimistic unchoke: serve a bounded number of parked WANTs so a
         // chunk only the choking seeder holds still spreads.
         let mut served = 0;
@@ -999,6 +1252,14 @@ impl Bitswap {
         self.peers.remove(&peer);
         self.dialing.remove(&peer);
         self.choked_set.retain(|(p, _)| *p != peer);
+        // The peer's interest memory died with the connection: forget
+        // what we announced so a reconnect re-polls from scratch.
+        self.announced.remove(&peer);
+        self.pending_haves.remove(&peer);
+        for m in self.pending_root_interest.values_mut() {
+            m.remove(&peer);
+        }
+        self.pending_root_interest.retain(|_, m| !m.is_empty());
         for int in self.interest.values_mut() {
             int.remove(&peer);
         }
@@ -1038,19 +1299,27 @@ mod tests {
         let m = BitswapMsg {
             kind: M_WANT,
             cids: vec![Cid::of(b"a"), Cid::of(b"b")],
-            block: Buf::new(),
+            ..BitswapMsg::default()
         };
         assert_eq!(BitswapMsg::decode(&m.encode()).unwrap(), m);
         let m = BitswapMsg {
             kind: M_BLOCK,
             cids: vec![Cid::of(b"xyz")],
             block: b"xyz".into(),
+            ..BitswapMsg::default()
         };
         assert_eq!(BitswapMsg::decode(&m.encode()).unwrap(), m);
         let m = BitswapMsg {
             kind: M_WANT_HAVE,
             cids: vec![Cid::of(b"q"), Cid::of(b"r"), Cid::of(b"s")],
-            block: Buf::new(),
+            ..BitswapMsg::default()
+        };
+        assert_eq!(BitswapMsg::decode(&m.encode()).unwrap(), m);
+        let m = BitswapMsg {
+            kind: M_HAVE,
+            root: Some(Cid::of(b"root")),
+            indexes: RangeSet::from_iter([0u64, 1, 2, 9]).encode(),
+            ..BitswapMsg::default()
         };
         assert_eq!(BitswapMsg::decode(&m.encode()).unwrap(), m);
     }
@@ -1061,11 +1330,76 @@ mod tests {
             kind: M_BLOCK,
             cids: vec![Cid::of(b"big")],
             block: vec![6u8; 64 * 1024].into(),
+            ..BitswapMsg::default()
         };
         let wire = m.encode_buf();
         let d = BitswapMsg::decode_buf(&wire).unwrap();
         assert_eq!(d, m);
         assert_eq!(wire.ref_count(), 2, "block shares the wire buffer");
+    }
+
+    #[test]
+    fn legacy_encoding_byte_identical() {
+        // A message without compact fields must encode exactly as it did
+        // before fields 4/5 existed: old and new nodes interoperate
+        // bytewise, and old decoders skip the new fields as unknown.
+        let m = BitswapMsg {
+            kind: M_WANT_HAVE,
+            cids: vec![Cid::of(b"q"), Cid::of(b"r")],
+            ..BitswapMsg::default()
+        };
+        let mut w = PbWriter::new();
+        w.uint(1, M_WANT_HAVE);
+        w.bytes_always(2, Cid::of(b"q").as_bytes());
+        w.bytes_always(2, Cid::of(b"r").as_bytes());
+        assert_eq!(m.encode(), w.finish());
+    }
+
+    #[test]
+    fn compact_roundtrip_and_wire_size() {
+        let chunks: Vec<Cid> = (0..10_000u64).map(|i| Cid::of(&i.to_le_bytes())).collect();
+        let root = Cid::of(b"manifest-root");
+        let mut bs = Bitswap::new();
+        bs.compact_control = true;
+        bs.note_manifest(root, &chunks);
+        let m = bs.make_msg(M_WANT_HAVE, chunks.clone());
+        assert_eq!(m.root, Some(root));
+        assert!(m.cids.is_empty());
+        let wire = m.encode();
+        // kind + 34B root field + ~5B index field vs 10k × 34B legacy.
+        assert!(wire.len() <= 64, "compact wire size {}", wire.len());
+        let legacy = BitswapMsg {
+            kind: M_WANT_HAVE,
+            cids: chunks.clone(),
+            ..BitswapMsg::default()
+        };
+        assert!(legacy.encode().len() > 10_000 * 32);
+        // The decode side materializes the identical cid set.
+        let d = BitswapMsg::decode(&wire).unwrap();
+        let set = RangeSet::decode(&d.indexes).unwrap();
+        let back: Vec<Cid> = set.iter().map(|i| chunks[i as usize]).collect();
+        assert_eq!(back, chunks);
+    }
+
+    #[test]
+    fn make_msg_falls_back_without_manifest() {
+        let mut bs = Bitswap::new();
+        bs.compact_control = true;
+        let cids = vec![Cid::of(b"a"), Cid::of(b"b")];
+        let m = bs.make_msg(M_WANT, cids.clone());
+        assert_eq!(m.root, None);
+        assert_eq!(m.cids, cids);
+        // Mixed / partially-registered sets also fall back.
+        bs.note_manifest(Cid::of(b"r1"), &[Cid::of(b"a")]);
+        let m = bs.make_msg(M_WANT, cids.clone());
+        assert_eq!(m.root, None);
+        assert_eq!(m.cids, cids);
+        // Compact off keeps the legacy encoding even with a manifest.
+        bs.compact_control = false;
+        bs.note_manifest(Cid::of(b"r2"), &cids);
+        let m = bs.make_msg(M_WANT, cids.clone());
+        assert_eq!(m.root, None);
+        assert_eq!(m.cids, cids);
     }
 
     #[test]

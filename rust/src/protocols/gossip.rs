@@ -1,28 +1,82 @@
-//! Gossip pub-sub (flood-sub with a seen-cache and bounded fanout).
+//! Gossip pub-sub (flood-sub with a seen-cache, bounded fanout and an
+//! optional lazy-push layer).
 //!
 //! Protocol `/lattica/gossip/1`. Topics are strings; messages carry a
 //! (origin, seq) id so duplicates are suppressed. Used to announce new
 //! model versions (root CIDs) to inference clusters — Fig. 1(3).
+//!
+//! With [`Gossip::lazy_push`] on, full payloads go to only
+//! [`EAGER_FANOUT`] peers per hop; every other connected peer gets a
+//! batched IHAVE on the next tick — per-origin range-coded seq sets plus
+//! a bloom digest of the sender's recent window — and pulls what it
+//! misses with IWANT. That trades ≤ one tick + one RTT of latency for a
+//! control plane that no longer scales with (messages × fanout).
 
 use super::Ctx;
 use crate::identity::PeerId;
-use crate::wire::{Message, PbReader, PbWriter};
+use crate::netsim::{Time, SECOND};
+use crate::wire::{
+    encode_pooled, BloomDigest, Message, PbReader, PbWriter, RangeSet, BLOOM_BYTES,
+};
 use anyhow::Result;
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 
 pub const GOSSIP_PROTO: &str = "/lattica/gossip/1";
 
-/// Max peers a message is forwarded to per hop.
+/// Max peers a message is forwarded to per hop (eager flood mode).
 pub const FANOUT: usize = 6;
+/// Lazy push: peers that still get the full payload per hop; the rest
+/// learn about the message from the next IHAVE.
+pub const EAGER_FANOUT: usize = 2;
 /// Seen-cache size.
 pub const SEEN_CAP: usize = 4096;
+/// Recently-seen messages kept to serve IWANT pulls (also the digest
+/// window advertised in IHAVE).
+const MCACHE_CAP: usize = 128;
+/// An unanswered IWANT may be re-pulled (via a later IHAVE) after this.
+const IWANT_TIMEOUT: Time = SECOND;
+/// Hostile-input bounds when walking summaries of a received message.
+const MAX_SUMMARIES: usize = 64;
+const MAX_IDS_PER_SUMMARY: usize = 256;
 
 /// Wire message kinds — public so lightweight responders (e.g. the
 /// planet-scale background nodes in `scenarios::planet`) can join the
-/// mesh without a full `Gossip` instance.
+/// mesh without a full `Gossip` instance. Legacy decoders drop IHAVE and
+/// IWANT in their unknown-kind arm, so lazy and eager nodes interoperate.
 pub const M_PUBLISH: u64 = 1;
 pub const M_SUBSCRIBE: u64 = 2;
 pub const M_UNSUBSCRIBE: u64 = 3;
+pub const M_IHAVE: u64 = 4;
+pub const M_IWANT: u64 = 5;
+
+/// One origin's message ids, range-coded over seq numbers. IHAVE carries
+/// what the sender recently saw; IWANT carries what the receiver misses.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GossipSummary {
+    pub origin: Vec<u8>,
+    /// [`RangeSet::encode`] bytes over this origin's seq numbers.
+    pub seqs: Vec<u8>,
+}
+
+impl Message for GossipSummary {
+    fn encode_to(&self, w: &mut PbWriter) {
+        w.bytes(1, &self.origin);
+        w.bytes(2, &self.seqs);
+    }
+
+    fn decode(buf: &[u8]) -> Result<GossipSummary> {
+        let mut m = GossipSummary::default();
+        PbReader::new(buf).for_each(|f| {
+            match f.number {
+                1 => m.origin = f.as_bytes()?.to_vec(),
+                2 => m.seqs = f.as_bytes()?.to_vec(),
+                _ => {}
+            }
+            Ok(())
+        })?;
+        Ok(m)
+    }
+}
 
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct GossipMsg {
@@ -31,6 +85,13 @@ pub struct GossipMsg {
     pub origin: Vec<u8>,
     pub seq: u64,
     pub data: Vec<u8>,
+    /// IHAVE / IWANT: per-origin range-coded message-id summaries.
+    /// Absent on legacy kinds, so their encoding is byte-identical to the
+    /// pre-lazy wire format.
+    pub summaries: Vec<GossipSummary>,
+    /// IHAVE: [`BloomDigest`] bytes over the sender's recent-id window —
+    /// receivers skip eager pushes of messages the sender already holds.
+    pub digest: Vec<u8>,
 }
 
 impl Message for GossipMsg {
@@ -40,6 +101,8 @@ impl Message for GossipMsg {
         w.bytes(3, &self.origin);
         w.uint(4, self.seq);
         w.bytes(5, &self.data);
+        w.messages(6, &self.summaries);
+        w.bytes(7, &self.digest);
     }
 
     fn decode(buf: &[u8]) -> Result<GossipMsg> {
@@ -51,12 +114,36 @@ impl Message for GossipMsg {
                 3 => m.origin = f.as_bytes()?.to_vec(),
                 4 => m.seq = f.as_u64(),
                 5 => m.data = f.as_bytes()?.to_vec(),
+                6 => m.summaries.push(f.as_message()?),
+                7 => m.digest = f.as_bytes()?.to_vec(),
                 _ => {}
             }
             Ok(())
         })?;
         Ok(m)
     }
+}
+
+/// Control-plane accounting: every gossip frame is metadata from the
+/// transfer plane's point of view (DESIGN.md §Control-plane compression).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GossipStats {
+    /// Wire bytes of every gossip message sent.
+    pub bytes_sent: u64,
+    /// Full-payload forwards (eager path).
+    pub eager_pushes: u64,
+    pub ihaves_sent: u64,
+    pub iwants_sent: u64,
+    /// PUBLISHes served from the mcache in answer to an IWANT.
+    pub lazy_pulls_served: u64,
+}
+
+/// Message id as digest input: origin bytes ‖ big-endian seq.
+fn id_bytes(origin: &[u8], seq: u64) -> Vec<u8> {
+    let mut v = Vec::with_capacity(origin.len() + 8);
+    v.extend_from_slice(origin);
+    v.extend_from_slice(&seq.to_be_bytes());
+    v
 }
 
 #[derive(Debug)]
@@ -81,9 +168,22 @@ pub struct Gossip {
     streams: HashMap<PeerId, (u64, u64)>,
     seen: HashSet<(Vec<u8>, u64)>,
     seen_order: VecDeque<(Vec<u8>, u64)>,
+    /// Lazy push (IHAVE/IWANT) on. Set from `NodeConfig::compact_control`;
+    /// lazy and eager nodes interoperate on the same mesh.
+    pub lazy_push: bool,
+    /// Recently seen messages, kept to serve IWANT pulls.
+    mcache: HashMap<(Vec<u8>, u64), (String, Vec<u8>)>,
+    mcache_order: VecDeque<(Vec<u8>, u64)>,
+    /// Ids seen since the last tick, advertised in the next IHAVE batch.
+    adverts: Vec<(Vec<u8>, u64)>,
+    /// Outstanding pulls: id → retry deadline (a later IHAVE may re-pull).
+    pending_iwant: HashMap<(Vec<u8>, u64), Time>,
+    /// Last digest each peer advertised (eager-push suppression).
+    peer_digests: HashMap<PeerId, BloomDigest>,
     next_seq: u64,
     events: VecDeque<GossipEvent>,
     pub messages_forwarded: u64,
+    pub stats: GossipStats,
 }
 
 impl Gossip {
@@ -95,10 +195,56 @@ impl Gossip {
             streams: HashMap::new(),
             seen: HashSet::new(),
             seen_order: VecDeque::new(),
+            lazy_push: false,
+            mcache: HashMap::new(),
+            mcache_order: VecDeque::new(),
+            adverts: Vec::new(),
+            pending_iwant: HashMap::new(),
+            peer_digests: HashMap::new(),
             next_seq: 1,
             events: VecDeque::new(),
             messages_forwarded: 0,
+            stats: GossipStats::default(),
         }
+    }
+
+    /// Send one gossip frame, crediting its wire size to
+    /// [`GossipStats::bytes_sent`]. Associated fn so callers can hold
+    /// disjoint `self` borrows.
+    fn send_counted(
+        stats: &mut GossipStats,
+        ctx: &mut Ctx,
+        conn: u64,
+        stream: u64,
+        msg: &GossipMsg,
+    ) -> bool {
+        match encode_pooled(msg, |b| ctx.send(conn, stream, b).map(|()| b.len())) {
+            Ok(n) => {
+                stats.bytes_sent += n as u64;
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Cache a message for IWANT pulls and queue its id for the next
+    /// IHAVE advertisement (lazy mode only).
+    fn remember(&mut self, topic: &str, origin: &[u8], seq: u64, data: &[u8]) {
+        if !self.lazy_push {
+            return;
+        }
+        let key = (origin.to_vec(), seq);
+        if self.mcache.contains_key(&key) {
+            return;
+        }
+        self.mcache.insert(key.clone(), (topic.to_string(), data.to_vec()));
+        self.mcache_order.push_back(key.clone());
+        if self.mcache_order.len() > MCACHE_CAP {
+            if let Some(old) = self.mcache_order.pop_front() {
+                self.mcache.remove(&old);
+            }
+        }
+        self.adverts.push(key);
     }
 
     pub fn poll_event(&mut self) -> Option<GossipEvent> {
@@ -131,7 +277,7 @@ impl Gossip {
             .collect();
         for p in peers {
             if let Ok((c, s)) = self.stream_to(ctx, &p) {
-                let _ = ctx.send(c, s, &msg.encode());
+                Self::send_counted(&mut self.stats, ctx, c, s, &msg);
             }
         }
     }
@@ -146,7 +292,7 @@ impl Gossip {
                 ..Default::default()
             };
             if let Ok((c, s)) = self.stream_to(ctx, &peer) {
-                let _ = ctx.send(c, s, &msg.encode());
+                Self::send_counted(&mut self.stats, ctx, c, s, &msg);
             }
         }
     }
@@ -154,6 +300,7 @@ impl Gossip {
     pub fn on_peer_disconnected(&mut self, peer: PeerId) {
         self.streams.remove(&peer);
         self.peer_topics.remove(&peer);
+        self.peer_digests.remove(&peer);
     }
 
     /// Publish to a topic.
@@ -166,8 +313,10 @@ impl Gossip {
             origin: self.local.as_bytes().to_vec(),
             seq,
             data,
+            ..GossipMsg::default()
         };
         self.mark_seen(msg.origin.clone(), seq);
+        self.remember(topic, &msg.origin, seq, &msg.data);
         self.forward(ctx, &msg, None);
         seq
     }
@@ -202,21 +351,33 @@ impl Gossip {
                 }
             }
         }
+        // Lazy push: only EAGER_FANOUT peers get the payload now; the
+        // rest learn about it from the next tick's IHAVE and pull.
+        let cap = if self.lazy_push { EAGER_FANOUT } else { FANOUT };
+        let id = id_bytes(&msg.origin, msg.seq);
         let mut sent = 0;
         for p in targets {
             if Some(p) == exclude || p == self.local {
                 continue;
             }
-            if sent >= FANOUT {
+            if sent >= cap {
                 break;
             }
             if !ctx.swarm.is_connected(&p) {
                 continue;
             }
+            // Skip peers whose advertised digest already covers this id
+            // (a bloom false positive only costs them an IWANT pull).
+            if self.lazy_push
+                && self.peer_digests.get(&p).is_some_and(|d| d.contains(&id))
+            {
+                continue;
+            }
             if let Ok((c, s)) = self.stream_to(ctx, &p) {
-                if ctx.send(c, s, &msg.encode()).is_ok() {
+                if Self::send_counted(&mut self.stats, ctx, c, s, msg) {
                     sent += 1;
                     self.messages_forwarded += 1;
+                    self.stats.eager_pushes += 1;
                 }
             }
         }
@@ -243,9 +404,11 @@ impl Gossip {
                 }
             }
             M_PUBLISH => {
+                self.pending_iwant.remove(&(m.origin.clone(), m.seq));
                 if !self.mark_seen(m.origin.clone(), m.seq) {
                     return Ok(()); // duplicate
                 }
+                self.remember(&m.topic, &m.origin, m.seq, &m.data);
                 if self.subscriptions.contains(&m.topic) {
                     let mut origin = [0u8; 32];
                     if m.origin.len() == 32 {
@@ -260,9 +423,116 @@ impl Gossip {
                 }
                 self.forward(ctx, &m, Some(peer));
             }
+            M_IHAVE => {
+                if m.digest.len() == BLOOM_BYTES {
+                    if let Ok(d) = BloomDigest::from_bytes(&m.digest) {
+                        self.peer_digests.insert(peer, d);
+                    }
+                }
+                let now = ctx.now();
+                let mut missing: BTreeMap<Vec<u8>, RangeSet> = BTreeMap::new();
+                for s in m.summaries.iter().take(MAX_SUMMARIES) {
+                    let Ok(set) = RangeSet::decode(&s.seqs) else { continue };
+                    for seq in set.iter().take(MAX_IDS_PER_SUMMARY) {
+                        let key = (s.origin.clone(), seq);
+                        if self.seen.contains(&key) || self.pending_iwant.contains_key(&key) {
+                            continue;
+                        }
+                        self.pending_iwant.insert(key, now + IWANT_TIMEOUT);
+                        missing.entry(s.origin.clone()).or_default().insert(seq);
+                    }
+                }
+                if !missing.is_empty() {
+                    let reply = GossipMsg {
+                        kind: M_IWANT,
+                        summaries: missing
+                            .into_iter()
+                            .map(|(origin, set)| GossipSummary {
+                                origin,
+                                seqs: set.encode(),
+                            })
+                            .collect(),
+                        ..GossipMsg::default()
+                    };
+                    if Self::send_counted(&mut self.stats, ctx, conn, stream, &reply) {
+                        self.stats.iwants_sent += 1;
+                    }
+                }
+            }
+            M_IWANT => {
+                for s in m.summaries.iter().take(MAX_SUMMARIES) {
+                    let Ok(set) = RangeSet::decode(&s.seqs) else { continue };
+                    for seq in set.iter().take(MAX_IDS_PER_SUMMARY) {
+                        let key = (s.origin.clone(), seq);
+                        let Some((topic, data)) = self.mcache.get(&key) else { continue };
+                        let reply = GossipMsg {
+                            kind: M_PUBLISH,
+                            topic: topic.clone(),
+                            origin: s.origin.clone(),
+                            seq,
+                            data: data.clone(),
+                            ..GossipMsg::default()
+                        };
+                        if Self::send_counted(&mut self.stats, ctx, conn, stream, &reply) {
+                            self.stats.lazy_pulls_served += 1;
+                        }
+                    }
+                }
+            }
             _ => {}
         }
         Ok(())
+    }
+
+    /// Node hook: periodic tick. Flushes the lazy-push layer — one IHAVE
+    /// per connected peer summarizing everything seen since the last tick
+    /// (range-coded per origin, plus a bloom digest of the whole mcache
+    /// window) — and expires unanswered IWANTs so a later IHAVE can retry
+    /// the pull from another holder.
+    pub fn tick(&mut self, ctx: &mut Ctx) {
+        if !self.lazy_push {
+            return;
+        }
+        let now = ctx.now();
+        self.pending_iwant.retain(|_, deadline| *deadline > now);
+        if self.adverts.is_empty() {
+            return;
+        }
+        let mut by_origin: BTreeMap<Vec<u8>, RangeSet> = BTreeMap::new();
+        for (origin, seq) in self.adverts.drain(..) {
+            by_origin.entry(origin).or_default().insert(seq);
+        }
+        let summaries: Vec<GossipSummary> = by_origin
+            .into_iter()
+            .map(|(origin, set)| GossipSummary {
+                origin,
+                seqs: set.encode(),
+            })
+            .collect();
+        let mut digest = BloomDigest::new();
+        for (origin, seq) in self.mcache_order.iter() {
+            digest.insert(&id_bytes(origin, *seq));
+        }
+        let msg = GossipMsg {
+            kind: M_IHAVE,
+            summaries,
+            digest: digest.as_bytes().to_vec(),
+            ..GossipMsg::default()
+        };
+        let targets: Vec<PeerId> = ctx
+            .swarm
+            .peerstore
+            .known_peers()
+            .copied()
+            .filter(|p| *p != self.local && ctx.swarm.is_connected(p))
+            .collect();
+        for p in targets {
+            if let Ok((c, s)) = self.stream_to(ctx, &p) {
+                if Self::send_counted(&mut self.stats, ctx, c, s, &msg) {
+                    self.stats.ihaves_sent += 1;
+                }
+            }
+        }
     }
 }
 
@@ -279,6 +549,7 @@ mod tests {
             origin: vec![1u8; 32],
             seq: 42,
             data: b"root-cid".to_vec(),
+            ..GossipMsg::default()
         };
         assert_eq!(GossipMsg::decode(&m.encode()).unwrap(), m);
     }
@@ -292,5 +563,74 @@ mod tests {
             g.mark_seen(vec![2], i as u64);
         }
         assert!(g.seen.len() <= SEEN_CAP);
+    }
+
+    #[test]
+    fn legacy_encoding_byte_identical() {
+        // A message without summaries/digest must encode exactly as it
+        // did before fields 6/7 existed; legacy decoders skip the new
+        // fields and drop IHAVE/IWANT in their unknown-kind arm.
+        let m = GossipMsg {
+            kind: M_PUBLISH,
+            topic: "models".into(),
+            origin: vec![1u8; 32],
+            seq: 42,
+            data: b"root-cid".to_vec(),
+            ..GossipMsg::default()
+        };
+        let mut w = PbWriter::new();
+        w.uint(1, M_PUBLISH);
+        w.string(2, "models");
+        w.bytes(3, &[1u8; 32]);
+        w.uint(4, 42);
+        w.bytes(5, b"root-cid");
+        assert_eq!(m.encode(), w.finish());
+    }
+
+    #[test]
+    fn ihave_summary_roundtrip() {
+        let mut set = RangeSet::new();
+        for s in [1u64, 2, 3, 9, 10, 40] {
+            set.insert(s);
+        }
+        let mut digest = BloomDigest::new();
+        digest.insert(&id_bytes(&[7u8; 32], 3));
+        let m = GossipMsg {
+            kind: M_IHAVE,
+            summaries: vec![
+                GossipSummary {
+                    origin: vec![7u8; 32],
+                    seqs: set.encode(),
+                },
+                GossipSummary {
+                    origin: vec![8u8; 32],
+                    seqs: RangeSet::from_iter([5u64]).encode(),
+                },
+            ],
+            digest: digest.as_bytes().to_vec(),
+            ..GossipMsg::default()
+        };
+        let d = GossipMsg::decode(&m.encode()).unwrap();
+        assert_eq!(d, m);
+        let back = RangeSet::decode(&d.summaries[0].seqs).unwrap();
+        assert_eq!(back.iter().collect::<Vec<_>>(), vec![1, 2, 3, 9, 10, 40]);
+    }
+
+    #[test]
+    fn mcache_bounded_and_feeds_adverts() {
+        let mut g = Gossip::new(Keypair::from_seed(2).peer_id());
+        // Off: remember() is a no-op, nothing accumulates.
+        g.remember("t", &[1u8; 32], 1, b"x");
+        assert!(g.mcache.is_empty() && g.adverts.is_empty());
+        g.lazy_push = true;
+        for i in 0..(MCACHE_CAP as u64 + 50) {
+            g.remember("t", &[1u8; 32], i, b"payload");
+        }
+        assert!(g.mcache.len() <= MCACHE_CAP);
+        assert_eq!(g.mcache_order.len(), g.mcache.len());
+        assert_eq!(g.adverts.len(), MCACHE_CAP + 50);
+        // Duplicates neither grow the cache nor re-advertise.
+        g.remember("t", &[1u8; 32], MCACHE_CAP as u64 + 10, b"payload");
+        assert_eq!(g.adverts.len(), MCACHE_CAP + 50);
     }
 }

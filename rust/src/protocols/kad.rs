@@ -471,6 +471,10 @@ pub struct KadStats {
     pub republish_rounds: u64,
     pub providers_expired: u64,
     pub records_expired: u64,
+    /// Wire bytes of every kad message sent (requests and replies) — the
+    /// DHT share of the control-plane ratio (DESIGN.md §Control-plane
+    /// compression).
+    pub bytes_sent: u64,
 }
 
 impl KadStats {
@@ -488,6 +492,7 @@ impl KadStats {
         self.republish_rounds += o.republish_rounds;
         self.providers_expired += o.providers_expired;
         self.records_expired += o.records_expired;
+        self.bytes_sent += o.bytes_sent;
     }
 
     /// Share of tracked requests that hit a dead/stale peer (timed out or
@@ -908,7 +913,10 @@ impl Kademlia {
         match ctx.ensure_connected(&peer) {
             Ok(true) => match ctx.open_stream(&peer, KAD_PROTO) {
                 Ok((cid, stream)) => {
-                    let _ = ctx.send(cid, stream, &msg.encode());
+                    let wire = msg.encode();
+                    if ctx.send(cid, stream, &wire).is_ok() {
+                        self.stats.bytes_sent += wire.len() as u64;
+                    }
                     if oneway {
                         ctx.finish(cid, stream);
                     } else {
@@ -1104,7 +1112,9 @@ impl Kademlia {
                         }
                     }
                 }
-                ctx.send(cid, stream, &reply.encode())?;
+                let wire = reply.encode();
+                ctx.send(cid, stream, &wire)?;
+                self.stats.bytes_sent += wire.len() as u64;
                 ctx.finish(cid, stream);
             }
             M_ADD_PROVIDER => {

@@ -631,6 +631,15 @@ pub struct ModelSyncConfig {
     /// Mix NATted replicas into the mesh (2/5 public, 3/5 behind cone /
     /// port-restricted / symmetric NATs, round-robin).
     pub nat_mixed: bool,
+    /// Fixed chunk size for publishing (bytes). 0 = the publisher's
+    /// default content-defined chunking. Small fixed chunks (e.g. 256 B
+    /// over a 2.5 MB blob → 10k chunks) stress the per-chunk control
+    /// plane, which is what the control-ratio bench measures.
+    pub chunk_bytes: usize,
+    /// Compact control plane on every node (range-coded bitswap chunk
+    /// sets, batched HAVEs, gossip lazy push). Off = legacy encodings —
+    /// the bench A/B baseline.
+    pub compact_control: bool,
     pub seed: u64,
     /// Per-version sync deadline (virtual seconds).
     pub timeout_secs: u64,
@@ -649,13 +658,17 @@ pub struct ModelSyncOutcome {
     pub duplicate_blocks: u64,
     /// Bytes served by replica nodes (the re-seeding evidence).
     pub replica_bytes_served: u64,
+    /// Control-plane bytes by category across the whole mesh, against
+    /// delivered payload bytes (the bytes-of-control-per-delivered-byte
+    /// metric).
+    pub control: crate::metrics::ControlPlaneStats,
 }
 
 /// Build the mesh, publish `checkpoints` versions of a churned blob from
 /// the trainer, and drive every replica's `sync_blob` until each version
 /// replicates. Fully deterministic in the config.
 pub fn model_sync_scenario(cfg: &ModelSyncConfig) -> ModelSyncOutcome {
-    use crate::content::{Blockstore, DagManifest, DeltaManifest};
+    use crate::content::{Blockstore, Chunking, DagManifest, DeltaManifest};
     use crate::model::{model_topic, CheckpointPublisher};
     use crate::wire::Message;
 
@@ -683,6 +696,7 @@ pub fn model_sync_scenario(cfg: &ModelSyncConfig) -> ModelSyncOutcome {
     let mut world = World::new(t.build(cfg.seed));
     let trainer = LatticaNode::spawn(&mut world, trainer_host, {
         let mut c = NodeConfig::with_seed(cfg.seed * 1000);
+        c.compact_control = cfg.compact_control;
         c.label = "trainer".into();
         c
     });
@@ -693,6 +707,7 @@ pub fn model_sync_scenario(cfg: &ModelSyncConfig) -> ModelSyncOutcome {
             LatticaNode::spawn(&mut world, h, {
                 let mut c = NodeConfig::with_seed(cfg.seed * 1000 + 1 + i as u64);
                 c.swarm_sync = cfg.mode == SyncMode::Swarm;
+                c.compact_control = cfg.compact_control;
                 c.label = format!("replica-{i}");
                 c
             })
@@ -744,7 +759,11 @@ pub fn model_sync_scenario(cfg: &ModelSyncConfig) -> ModelSyncOutcome {
     // The trainer's model-sync control plane is a registered service:
     // replicas that miss the gossip announcement can pull the latest
     // checkpoint pointer via `model.latest`.
-    let publisher = Rc::new(RefCell::new(CheckpointPublisher::new("policy")));
+    let publisher = Rc::new(RefCell::new(if cfg.chunk_bytes > 0 {
+        CheckpointPublisher::with_chunking("policy", Chunking::Fixed(cfg.chunk_bytes))
+    } else {
+        CheckpointPublisher::new("policy")
+    }));
     trainer
         .borrow_mut()
         .register_service(CheckpointPublisher::service(publisher.clone()));
@@ -845,6 +864,20 @@ pub fn model_sync_scenario(cfg: &ModelSyncConfig) -> ModelSyncOutcome {
         .iter()
         .map(|r| r.borrow().bitswap.stats.bytes_served)
         .sum();
+    // Bytes-of-control-per-delivered-byte: every ACK, bitswap metadata
+    // frame, gossip frame and kad message across the mesh, against the
+    // payload bytes the replicas actually received. (ACK bytes come from
+    // live connections' transport stats — both A/B arms measure the same
+    // way, so the comparison is apples to apples.)
+    let mut control = crate::metrics::ControlPlaneStats::default();
+    for nd in std::iter::once(&trainer).chain(replicas.iter()) {
+        let n = nd.borrow();
+        control.ack_bytes += n.swarm.transport_health().ack_bytes_sent;
+        control.bitswap_meta_bytes += n.bitswap.stats.meta_bytes_sent;
+        control.gossip_meta_bytes += n.gossip.stats.bytes_sent;
+        control.kad_bytes += n.kad.stats.bytes_sent;
+        control.delivered_bytes += n.bitswap.stats.bytes_received;
+    }
     ModelSyncOutcome {
         stats,
         all_identical,
@@ -852,6 +885,7 @@ pub fn model_sync_scenario(cfg: &ModelSyncConfig) -> ModelSyncOutcome {
         delta_bytes_announced,
         duplicate_blocks,
         replica_bytes_served,
+        control,
     }
 }
 

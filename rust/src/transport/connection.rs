@@ -196,6 +196,10 @@ pub struct Connection {
     pub loss_events: u64,
     pub fast_retransmits: u64,
     pub rto_events: u64,
+    /// Wire bytes spent on ACK frames (control-plane accounting).
+    pub ack_bytes_sent: u64,
+    /// ACK frames built with the range list cut to the per-frame cap.
+    pub ack_truncations: u64,
 }
 
 impl Connection {
@@ -268,6 +272,8 @@ impl Connection {
             loss_events: 0,
             fast_retransmits: 0,
             rto_events: 0,
+            ack_bytes_sent: 0,
+            ack_truncations: 0,
         };
         match (role, conn.state) {
             (Role::Client, State::TcpConnect) => conn.ctrl.push_back(Frame::syn()),
@@ -321,6 +327,8 @@ impl Connection {
             loss_events: self.loss_events,
             fast_retransmits: self.fast_retransmits,
             rto_events: self.rto_events,
+            ack_bytes_sent: self.ack_bytes_sent,
+            ack_truncations: self.ack_truncations,
             pacer_utilization: self.pacer.utilization(),
         }
     }
@@ -714,6 +722,7 @@ impl Connection {
     // ------------------------------------------------------------------
 
     fn note_received(&mut self, num: u64) {
+        const MAX_RECV_RANGES: usize = 128;
         // Insert into merged ranges.
         let pos = self.recv_ranges.partition_point(|&(_, e)| e + 1 < num);
         if pos < self.recv_ranges.len() {
@@ -734,8 +743,9 @@ impl Connection {
         }
         self.recv_ranges.insert(pos, (num, num));
         self.merge_at(pos);
-        // Bound memory.
-        if self.recv_ranges.len() > 32 {
+        // Bound memory (duplicate-suppression window; wider than the
+        // per-ACK-frame cap so late arrivals still dedupe).
+        if self.recv_ranges.len() > MAX_RECV_RANGES {
             self.recv_ranges.remove(0);
         }
     }
@@ -759,13 +769,23 @@ impl Connection {
         }
     }
 
-    /// Build an ACK frame from received ranges.
-    fn make_ack(&self) -> Option<Frame> {
+    /// Build an ACK frame from received ranges. Under heavy loss the
+    /// range list can exceed what fits in one MTU, so the frame carries
+    /// at most `MAX_ACK_RANGES` of the *most recent* (highest) ranges;
+    /// dropped older ranges cost at worst a spurious retransmit, never
+    /// correctness. Truncations are counted in `TransportStats`.
+    fn make_ack(&mut self) -> Option<Frame> {
+        const MAX_ACK_RANGES: usize = 32;
         let &(_, largest) = self.recv_ranges.last()?;
+        let skip = self.recv_ranges.len().saturating_sub(MAX_ACK_RANGES);
+        if skip > 0 {
+            self.ack_truncations += 1;
+        }
+        let acked = &self.recv_ranges[skip..];
         // Encode alternating (run, gap) descending from largest.
-        let mut ranges = Vec::with_capacity(self.recv_ranges.len() * 2);
+        let mut ranges = Vec::with_capacity(acked.len() * 2);
         let mut prev_start = 0u64;
-        for (i, &(s, e)) in self.recv_ranges.iter().rev().enumerate() {
+        for (i, &(s, e)) in acked.iter().rev().enumerate() {
             if i > 0 {
                 ranges.push(prev_start - e - 1); // gap
             }
@@ -977,7 +997,9 @@ impl Connection {
                 || have_other;
             if first && self.ack_eliciting_unacked > 0 && ack_due {
                 if let Some(ack) = self.make_ack() {
-                    used += ack.wire_size_hint();
+                    let sz = ack.wire_size_hint();
+                    used += sz;
+                    self.ack_bytes_sent += sz as u64;
                     frames.push(ack);
                     self.ack_eliciting_unacked = 0;
                     self.ack_deadline = None;
@@ -1549,5 +1571,57 @@ mod tests {
             p.pump();
         }
         assert!(p.a.rtt.has_sample());
+    }
+
+    /// LossyWan-grade loss, compressed in time: dropping every other
+    /// a→b packet leaves permanent holes in b's packet-number space
+    /// (retransmits take fresh numbers), so the received-range list
+    /// fragments without bound. The ACK builder must cap the frame at
+    /// 32 ranges — well inside one MTU — and count the truncations.
+    #[test]
+    fn ack_ranges_bounded_under_heavy_loss() {
+        let mut p = Pair::new(TransportProfile::QUIC_LIKE);
+        p.pump();
+        let sid = p.a.open_stream("/lossy-wan/1");
+        let mut delivered = 0u32;
+        for round in 0u64..600 {
+            p.now += MILLI;
+            let _ = p.a.send_msg(sid, b"chunk-of-loss-test-payload");
+            if let Some(t) = p.a.next_timeout(p.now) {
+                if t <= p.now {
+                    p.a.on_timer(p.now);
+                }
+            }
+            for (i, pb) in p.a.poll_output(p.now).into_iter().enumerate() {
+                if (round + i as u64) % 2 == 0 {
+                    let pkt = Packet::decode(&pb).unwrap();
+                    p.b.handle_packet(p.now, pkt).unwrap();
+                    delivered += 1;
+                }
+            }
+            for pb in p.b.poll_output(p.now) {
+                let pkt = Packet::decode(&pb).unwrap();
+                p.a.handle_packet(p.now, pkt).unwrap();
+            }
+        }
+        assert!(delivered > 64, "not enough traffic survived: {delivered}");
+        assert!(
+            p.b.recv_ranges.len() > 32,
+            "loss pattern too tame to fragment ({} ranges)",
+            p.b.recv_ranges.len()
+        );
+        let ack = p.b.make_ack().expect("pending ranges");
+        // 32 ranges → 32 runs + 31 gaps.
+        assert!(
+            ack.ack_ranges.len() <= 63,
+            "ACK carries {} values",
+            ack.ack_ranges.len()
+        );
+        assert!(ack.wire_size_hint() < 1200, "ACK frame must fit one MTU");
+        let s = p.b.stats();
+        assert!(s.ack_truncations > 0, "truncations must be counted");
+        assert!(s.ack_bytes_sent > 0, "ACK bytes must be accounted");
+        // The peer keeps making forward progress on truncated ACKs.
+        assert!(p.a.largest_acked.is_some());
     }
 }

@@ -12,5 +12,7 @@
 //! slices via [`Message::decode_buf`].
 
 pub mod pb;
+pub mod ranges;
 
 pub use pb::{encode_pooled, Message, PbReader, PbWriter, WireType};
+pub use ranges::{BloomDigest, RangeSet, BLOOM_BYTES};

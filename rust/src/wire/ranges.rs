@@ -1,0 +1,346 @@
+//! Compact set encodings for the control plane.
+//!
+//! [`RangeSet`] is a run-length codec over sorted `u64` index sets:
+//! alternating gap/run varints walking upward from zero — the same shape
+//! as the QUIC-style alternating run/gap encoding in
+//! `transport::Frame.ack_ranges`, but anchored at the low end so dense
+//! prefixes (the common "I want chunks 0..n" case) collapse to a few
+//! bytes. [`BloomDigest`] is a fixed 32-byte bloom filter for unordered
+//! id sets where exact membership is not required (gossip IHAVE
+//! advertisements).
+//!
+//! Both encodings are deliberately self-delimiting-free: they are always
+//! carried inside a length-delimited protobuf field, so decode consumes
+//! the whole buffer.
+
+use crate::util::rng::mix64;
+use crate::util::varint::{get_uvarint, put_uvarint, uvarint_len};
+use anyhow::{bail, Result};
+
+/// A set of `u64` values stored as sorted, merged, inclusive ranges.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RangeSet {
+    /// Inclusive `(start, end)` ranges, ascending, gap ≥ 2 between them.
+    ranges: Vec<(u64, u64)>,
+}
+
+impl RangeSet {
+    pub fn new() -> RangeSet {
+        RangeSet::default()
+    }
+
+    /// Insert one value, merging adjacent/overlapping ranges.
+    pub fn insert(&mut self, v: u64) {
+        let pos = self
+            .ranges
+            .partition_point(|&(_, e)| e.saturating_add(1) < v);
+        if pos < self.ranges.len() {
+            let (s, e) = self.ranges[pos];
+            if v >= s && v <= e {
+                return; // already present
+            }
+            if v.checked_add(1) == Some(s) {
+                self.ranges[pos].0 = v;
+                return; // gap to the previous range was ≥ 2, no merge
+            }
+            if e.checked_add(1) == Some(v) {
+                self.ranges[pos].1 = v;
+                // May now touch the following range.
+                if pos + 1 < self.ranges.len() && self.ranges[pos + 1].0.saturating_sub(1) <= v {
+                    self.ranges[pos].1 = self.ranges[pos + 1].1;
+                    self.ranges.remove(pos + 1);
+                }
+                return;
+            }
+        }
+        self.ranges.insert(pos, (v, v));
+    }
+
+    pub fn contains(&self, v: u64) -> bool {
+        let pos = self.ranges.partition_point(|&(_, e)| e < v);
+        self.ranges.get(pos).is_some_and(|&(s, _)| v >= s)
+    }
+
+    /// Number of values in the set (saturating).
+    pub fn len(&self) -> u64 {
+        self.ranges
+            .iter()
+            .fold(0u64, |n, &(s, e)| n.saturating_add(e - s + 1))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+
+    pub fn ranges(&self) -> &[(u64, u64)] {
+        &self.ranges
+    }
+
+    /// Iterate the values in ascending order. Callers must bound the
+    /// set first (a hostile 3-byte encoding can describe 2^64 values).
+    pub fn iter(&self) -> impl Iterator<Item = u64> + '_ {
+        self.ranges.iter().flat_map(|&(s, e)| s..=e)
+    }
+
+    /// Encoded size in bytes (exact, without encoding).
+    pub fn encoded_len(&self) -> usize {
+        let mut cursor = 0u64;
+        let mut n = 0usize;
+        for &(s, e) in &self.ranges {
+            n += uvarint_len(s - cursor) + uvarint_len(e - s);
+            cursor = e.saturating_add(2);
+        }
+        n
+    }
+
+    /// Encode as alternating gap/run varints from a cursor starting at
+    /// zero: per range, `gap = start - cursor` then `run = end - start`;
+    /// the cursor then advances to `end + 2` (merged ranges are ≥ 2
+    /// apart, so gaps never go negative). The empty set encodes to zero
+    /// bytes.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut cursor = 0u64;
+        for &(s, e) in &self.ranges {
+            put_uvarint(out, s - cursor);
+            put_uvarint(out, e - s);
+            cursor = e.saturating_add(2);
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Decode a full buffer of alternating gap/run varints. Rejects
+    /// truncated varints, odd trailing values and overflowing ranges.
+    /// Allocation is bounded by the input: every range costs ≥ 2 bytes.
+    pub fn decode(buf: &[u8]) -> Result<RangeSet> {
+        let mut ranges = Vec::with_capacity(buf.len() / 2);
+        let mut rest = buf;
+        let mut cursor = 0u64;
+        while !rest.is_empty() {
+            let (gap, n) = get_uvarint(rest)?;
+            rest = &rest[n..];
+            if rest.is_empty() {
+                bail!("range set: gap without run");
+            }
+            let (run, n) = get_uvarint(rest)?;
+            rest = &rest[n..];
+            let Some(start) = cursor.checked_add(gap) else {
+                bail!("range set: start overflows");
+            };
+            let Some(end) = start.checked_add(run) else {
+                bail!("range set: end overflows");
+            };
+            ranges.push((start, end));
+            cursor = end.saturating_add(2);
+            if cursor <= end {
+                // end + 2 wrapped: nothing further can be encoded.
+                if !rest.is_empty() {
+                    bail!("range set: values past u64::MAX");
+                }
+            }
+        }
+        Ok(RangeSet { ranges })
+    }
+}
+
+impl FromIterator<u64> for RangeSet {
+    fn from_iter<T: IntoIterator<Item = u64>>(iter: T) -> RangeSet {
+        let mut vals: Vec<u64> = iter.into_iter().collect();
+        vals.sort_unstable();
+        let mut set = RangeSet::new();
+        for v in vals {
+            // Sorted input always extends the tail: O(n) total.
+            set.insert(v);
+        }
+        set
+    }
+}
+
+/// Fixed-size bloom filter over opaque byte ids (256 bits, 3 hashes).
+/// At the gossip history-window sizes it digests (≤ ~32 ids) the false
+/// positive rate stays under ~0.2%; false positives only cost a missed
+/// lazy pull, never correctness (IHAVE ids are re-advertised).
+pub const BLOOM_BYTES: usize = 32;
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct BloomDigest {
+    bits: [u8; BLOOM_BYTES],
+}
+
+impl Default for BloomDigest {
+    fn default() -> Self {
+        BloomDigest::new()
+    }
+}
+
+impl std::fmt::Debug for BloomDigest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BloomDigest({} bits set)", self.popcount())
+    }
+}
+
+impl BloomDigest {
+    pub fn new() -> BloomDigest {
+        BloomDigest { bits: [0; BLOOM_BYTES] }
+    }
+
+    fn hash(id: &[u8]) -> u64 {
+        let mut h = 0x9E37_79B9_7F4A_7C15u64 ^ (id.len() as u64);
+        for chunk in id.chunks(8) {
+            let mut w = [0u8; 8];
+            w[..chunk.len()].copy_from_slice(chunk);
+            h = mix64(h ^ u64::from_le_bytes(w));
+        }
+        h
+    }
+
+    fn bit_positions(id: &[u8]) -> [usize; 3] {
+        let h = Self::hash(id);
+        let mut out = [0usize; 3];
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = (mix64(h.wrapping_add(i as u64)) % (BLOOM_BYTES as u64 * 8)) as usize;
+        }
+        out
+    }
+
+    pub fn insert(&mut self, id: &[u8]) {
+        for bit in Self::bit_positions(id) {
+            self.bits[bit / 8] |= 1 << (bit % 8);
+        }
+    }
+
+    pub fn contains(&self, id: &[u8]) -> bool {
+        Self::bit_positions(id)
+            .iter()
+            .all(|&bit| self.bits[bit / 8] & (1 << (bit % 8)) != 0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits.iter().all(|&b| b == 0)
+    }
+
+    fn popcount(&self) -> u32 {
+        self.bits.iter().map(|b| b.count_ones()).sum()
+    }
+
+    pub fn as_bytes(&self) -> &[u8; BLOOM_BYTES] {
+        &self.bits
+    }
+
+    /// Strict decode: exactly [`BLOOM_BYTES`] bytes.
+    pub fn from_bytes(buf: &[u8]) -> Result<BloomDigest> {
+        if buf.len() != BLOOM_BYTES {
+            bail!("bloom digest must be {BLOOM_BYTES} bytes, got {}", buf.len());
+        }
+        let mut bits = [0u8; BLOOM_BYTES];
+        bits.copy_from_slice(buf);
+        Ok(BloomDigest { bits })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set_of(vals: &[u64]) -> RangeSet {
+        vals.iter().copied().collect()
+    }
+
+    #[test]
+    fn insert_merges_and_contains() {
+        let mut s = RangeSet::new();
+        for v in [5, 3, 4, 10, 11, 9, 1] {
+            s.insert(v);
+        }
+        assert_eq!(s.ranges(), &[(1, 1), (3, 5), (9, 11)]);
+        assert_eq!(s.len(), 7);
+        for v in [1, 3, 4, 5, 9, 10, 11] {
+            assert!(s.contains(v), "missing {v}");
+        }
+        for v in [0, 2, 6, 8, 12, u64::MAX] {
+            assert!(!s.contains(v), "phantom {v}");
+        }
+        s.insert(2); // bridges (1,1) and (3,5)
+        assert_eq!(s.ranges(), &[(1, 5), (9, 11)]);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![1, 2, 3, 4, 5, 9, 10, 11]);
+    }
+
+    #[test]
+    fn roundtrip_edge_shapes() {
+        for s in [
+            RangeSet::new(),
+            set_of(&[0]),
+            set_of(&[u64::MAX]),
+            set_of(&[0, u64::MAX]),
+            set_of(&[7, 8, 9, 100, 200, 201]),
+            (0..10_000).collect::<RangeSet>(),
+        ] {
+            let enc = s.encode();
+            assert_eq!(enc.len(), s.encoded_len());
+            assert_eq!(RangeSet::decode(&enc).unwrap(), s, "roundtrip failed");
+        }
+        assert!(RangeSet::new().encode().is_empty());
+    }
+
+    /// The wire-size pin from the issue: 10k dense indexes in ≤ 64 bytes
+    /// (the codec does it in 3: gap 0, run 9999).
+    #[test]
+    fn wire_size_pins() {
+        let dense: RangeSet = (0..10_000u64).collect();
+        assert_eq!(dense.encode().len(), 3);
+        assert!(dense.encode().len() <= 64);
+
+        // 10k indexes with every 100th missing: 100 ranges, 3 B each.
+        let holes: RangeSet = (0..10_000u64).filter(|v| v % 100 != 99).collect();
+        assert_eq!(holes.ranges().len(), 100);
+        assert!(holes.encode().len() <= 300, "got {}", holes.encode().len());
+
+        // Worst case — fully sparse alternating — still ~2 B per value
+        // vs 32 B per CID.
+        let sparse: RangeSet = (0..1_000u64).map(|v| v * 2).collect();
+        assert!(sparse.encode().len() <= 2 * 1_000);
+    }
+
+    #[test]
+    fn decode_rejects_hostile_input() {
+        // Truncated varint.
+        assert!(RangeSet::decode(&[0x80]).is_err());
+        // Gap without run.
+        assert!(RangeSet::decode(&[0x05]).is_err());
+        // Start overflow: gap = u64::MAX after a first range.
+        let mut evil = set_of(&[1]).encode();
+        evil.extend_from_slice(&[0xFF; 9]);
+        evil.push(0x01); // 10-byte varint ≈ u64::MAX
+        evil.push(0x00);
+        assert!(RangeSet::decode(&evil).is_err());
+        // Trailing data after a range ending at u64::MAX.
+        let mut evil = set_of(&[u64::MAX]).encode();
+        evil.extend_from_slice(&[0x00, 0x00]);
+        assert!(RangeSet::decode(&evil).is_err());
+    }
+
+    #[test]
+    fn bloom_no_false_negatives_and_bounded_fp() {
+        let mut b = BloomDigest::new();
+        let ids: Vec<Vec<u8>> = (0u64..32).map(|i| i.to_le_bytes().to_vec()).collect();
+        for id in &ids {
+            b.insert(id);
+        }
+        for id in &ids {
+            assert!(b.contains(id), "false negative");
+        }
+        let fps = (1000u64..11_000)
+            .filter(|i| b.contains(&i.to_le_bytes()))
+            .count();
+        // 32 entries / 256 bits / k=3 → expected fp ≈ 0.2%; allow 10x.
+        assert!(fps < 200, "false positive rate too high: {fps}/10000");
+        assert_eq!(BloomDigest::from_bytes(b.as_bytes()).unwrap(), b);
+        assert!(BloomDigest::from_bytes(&[0u8; 31]).is_err());
+        assert!(BloomDigest::new().is_empty());
+        assert!(!b.is_empty());
+    }
+}

@@ -10,12 +10,13 @@ use lattica::content::{Cid, DagManifest, DeltaManifest};
 use lattica::crdt::CrdtStore;
 use lattica::identity::Keypair;
 use lattica::protocols::bitswap::BitswapMsg;
+use lattica::protocols::gossip::{GossipMsg, GossipSummary};
 use lattica::protocols::kad::{KadMsg, PeerEntry};
 use lattica::rpc::RpcMsg;
 use lattica::util::buf::Buf;
 use lattica::util::varint;
 use lattica::util::Rng;
-use lattica::wire::{Message, PbReader, PbWriter};
+use lattica::wire::{BloomDigest, Message, PbReader, PbWriter, RangeSet};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicI64, Ordering};
 
@@ -95,11 +96,49 @@ fn kad_corpus() -> Vec<Vec<u8>> {
         kind: 6, // WANT_HAVE
         cids: (0..4u8).map(|i| Cid::of(&[0x80 | i])).collect(),
         block: Buf::new(),
+        ..Default::default()
     };
     let block = BitswapMsg {
         kind: 2, // BLOCK
         cids: vec![Cid::of(b"payload")],
         block: vec![0xAB; 400].into(),
+        ..Default::default()
+    };
+    // Compact bitswap addressing: (root, range-coded index set).
+    let compact_want = BitswapMsg {
+        kind: 6, // WANT_HAVE
+        root: Some(Cid::of(b"manifest-root")),
+        indexes: (0u64..512).chain(900..910).collect::<RangeSet>().encode(),
+        ..Default::default()
+    };
+    // Gossip frames: a legacy publish plus the lazy-push IHAVE/IWANT pair
+    // with range-coded per-origin summaries and a bloom digest.
+    let publish = GossipMsg {
+        kind: 1, // PUBLISH
+        topic: "checkpoints".into(),
+        origin: Keypair::from_seed(3).peer_id().as_bytes().to_vec(),
+        seq: 7,
+        data: vec![0xCD; 120],
+        ..Default::default()
+    };
+    let summary = GossipSummary {
+        origin: Keypair::from_seed(4).peer_id().as_bytes().to_vec(),
+        seqs: (1u64..40).collect::<RangeSet>().encode(),
+    };
+    let mut bloom = BloomDigest::new();
+    for i in 0..40u64 {
+        bloom.insert(&i.to_be_bytes());
+    }
+    let ihave = GossipMsg {
+        kind: 4, // IHAVE
+        summaries: vec![summary.clone()],
+        digest: bloom.as_bytes().to_vec(),
+        ..Default::default()
+    };
+    let iwant = GossipMsg {
+        kind: 5, // IWANT
+        summaries: vec![summary],
+        ..Default::default()
     };
     // RPC request with the deadline/detail fields populated…
     let rpc_req = RpcMsg {
@@ -138,6 +177,11 @@ fn kad_corpus() -> Vec<Vec<u8>> {
         rpc_req.encode(),
         rpc_resp.encode(),
         legacy.finish(),
+        compact_want.encode(),
+        publish.encode(),
+        ihave.encode(),
+        iwant.encode(),
+        GossipMsg::default().encode(),
     ]
 }
 
@@ -152,6 +196,10 @@ fn decode_everything(buf: &[u8]) {
     let _ = BitswapMsg::decode_buf(&Buf::from_vec(buf.to_vec()));
     let _ = RpcMsg::decode(buf);
     let _ = RpcMsg::decode_buf(&Buf::from_vec(buf.to_vec()));
+    let _ = GossipMsg::decode(buf);
+    let _ = GossipMsg::decode_buf(&Buf::from_vec(buf.to_vec()));
+    let _ = RangeSet::decode(buf);
+    let _ = BloomDigest::from_bytes(buf);
     let _ = lattica::model::ModelAnnouncement::decode(buf);
     // The raw field reader must also survive anything.
     let mut r = PbReader::new(buf);
@@ -235,6 +283,8 @@ fn oversized_length_prefix_errors_without_allocating() {
         assert!(DeltaManifest::decode(hostile).is_err());
         assert!(BitswapMsg::decode(hostile).is_err());
         assert!(RpcMsg::decode(hostile).is_err());
+        assert!(GossipMsg::decode(hostile).is_err());
+        assert!(BloomDigest::from_bytes(hostile).is_err());
         let mut r = PbReader::new(hostile);
         loop {
             match r.next_field() {
@@ -278,9 +328,29 @@ fn corpus_roundtrips_stay_valid() {
         let ok = DagManifest::decode(&base).is_ok()
             || DeltaManifest::decode(&base).is_ok()
             || BitswapMsg::decode(&base).is_ok()
-            || RpcMsg::decode(&base).is_ok();
+            || RpcMsg::decode(&base).is_ok()
+            || GossipMsg::decode(&base).is_ok();
         assert!(ok, "corpus entry decodes under none of its codecs");
     }
+    // Compact/lazy-push frames roundtrip exactly, including the nested
+    // range-coded payloads.
+    let compact = BitswapMsg {
+        kind: 6,
+        root: Some(Cid::of(b"manifest-root")),
+        indexes: (0u64..512).collect::<RangeSet>().encode(),
+        ..Default::default()
+    };
+    assert_eq!(BitswapMsg::decode(&compact.encode()).unwrap(), compact);
+    let ihave = GossipMsg {
+        kind: 4,
+        summaries: vec![GossipSummary {
+            origin: Keypair::from_seed(4).peer_id().as_bytes().to_vec(),
+            seqs: (1u64..40).collect::<RangeSet>().encode(),
+        }],
+        digest: BloomDigest::new().as_bytes().to_vec(),
+        ..Default::default()
+    };
+    assert_eq!(GossipMsg::decode(&ihave.encode()).unwrap(), ihave);
     // Nested hostile bytes inside a *valid* outer frame: a PeerEntry field
     // with a wrong-size id must error, not panic.
     let mut w = PbWriter::new();

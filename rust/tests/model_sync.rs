@@ -130,6 +130,8 @@ fn swarm_delta_sync_small_mesh() {
         mode: SyncMode::Swarm,
         delta: true,
         nat_mixed: false,
+        chunk_bytes: 0,
+        compact_control: true,
         seed: 81,
         timeout_secs: 120,
     });
@@ -164,6 +166,8 @@ fn model_sync_scenario_is_deterministic() {
         mode: SyncMode::Swarm,
         delta: true,
         nat_mixed: false,
+        chunk_bytes: 0,
+        compact_control: true,
         seed: 91,
         timeout_secs: 120,
     };
@@ -175,6 +179,10 @@ fn model_sync_scenario_is_deterministic() {
     assert_eq!(
         a.stats.fetched_per_version, b.stats.fetched_per_version,
         "same config must move the same bytes"
+    );
+    assert_eq!(
+        a.control, b.control,
+        "same config must spend the same control-plane bytes"
     );
 }
 
@@ -196,6 +204,8 @@ fn swarm_distribution_30_nodes_nat_mixed() {
         mode: SyncMode::Swarm,
         delta: true,
         nat_mixed: true,
+        chunk_bytes: 0,
+        compact_control: true,
         seed: 101,
         timeout_secs: 180,
     });
