@@ -226,6 +226,43 @@ impl ControlPlaneStats {
     }
 }
 
+/// Circuit-relay health, both roles in one struct: the server-side
+/// counters fill on nodes with `relay_enabled`, the client-side failover
+/// counters fill on nodes whose relayed connections re-home after a relay
+/// death. Snapshot via `Swarm::relay_stats`; the `nat_traversal` bench
+/// emits per-relay egress from these.
+#[derive(Clone, Debug, Default)]
+pub struct RelayStats {
+    // Server side.
+    /// Circuits spliced (lifetime count).
+    pub circuits_opened: u64,
+    /// CONNECTs refused: circuit cap, egress budget, or no reservation.
+    pub circuits_refused: u64,
+    /// RESERVEs refused at the reservation cap.
+    pub reservations_refused: u64,
+    /// Inner-packet bytes forwarded across circuits.
+    pub bytes_relayed: u64,
+    // Client side.
+    /// Re-home attempts started after a relay connection died.
+    pub failovers_started: u64,
+    /// Inner connections successfully rebound to a backup relay.
+    pub failovers_completed: u64,
+    /// Re-homes that ran out of candidate relays (inner conn torn down).
+    pub failovers_failed: u64,
+}
+
+impl RelayStats {
+    pub fn merge(&mut self, o: &RelayStats) {
+        self.circuits_opened += o.circuits_opened;
+        self.circuits_refused += o.circuits_refused;
+        self.reservations_refused += o.reservations_refused;
+        self.bytes_relayed += o.bytes_relayed;
+        self.failovers_started += o.failovers_started;
+        self.failovers_completed += o.failovers_completed;
+        self.failovers_failed += o.failovers_failed;
+    }
+}
+
 /// Aggregated DHT lookup outcomes under (optional) churn: success rate,
 /// hop counts, latency and routing-staleness. Filled by the churn harness
 /// in `benches/dht_lookup` / `tests/dht_churn` and emitted as a

@@ -207,21 +207,23 @@ impl Net {
         self.stats.bytes_sent += size as u64;
         let now = self.now;
 
-        // 1. Outbound NAT translation at the sender.
+        // 1. Outbound NAT translation at the sender. Destinations that are
+        //    another NAT's public face mark the flow as a punch (see
+        //    `NatBox::translate_outbound`).
         let src_host = from.host;
+        let dst_face = self
+            .hosts
+            .get(to.host as usize)
+            .and_then(|h| h.nat_face);
         let public_src = match self.hosts[src_host as usize].cfg.nat {
             Some(nat_id) => {
                 let nat = &mut self.nats[nat_id];
-                nat.translate_outbound(now, from, to, &mut self.rng)
+                nat.translate_outbound(now, from, to, dst_face.is_some(), &mut self.rng)
             }
             None => from,
         };
 
         // 2. Route: is the destination a NAT public face?
-        let dst_face = self
-            .hosts
-            .get(to.host as usize)
-            .and_then(|h| h.nat_face);
         let (internal_dst, dst_host) = match dst_face {
             Some(nat_id) => {
                 // Hairpin check: sender behind the same NAT.
@@ -238,7 +240,21 @@ impl Net {
                     }
                 }
             }
-            None => (to, to.host),
+            None => {
+                // An internal address behind a NAT is not routable from
+                // outside its own LAN — only the translated face is. (This
+                // is what makes AutoNAT dial-backs to a private bind
+                // address fail, flipping the node's status to Private.)
+                if let Some(dst_nat) = self.hosts.get(to.host as usize).and_then(|h| h.cfg.nat) {
+                    let same_lan =
+                        src_host == to.host || self.hosts[src_host as usize].cfg.nat == Some(dst_nat);
+                    if !same_lan {
+                        self.stats.datagrams_dropped_nat += 1;
+                        return;
+                    }
+                }
+                (to, to.host)
+            }
         };
 
         // 3. Listener lookup.

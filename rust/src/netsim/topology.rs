@@ -189,12 +189,55 @@ impl TopologyBuilder {
 
     /// Add a NAT device in `region`; returns the NAT id. The NAT's public
     /// face is itself a host (so it has an address and an access link).
+    ///
+    /// The box implements its RFC 4787 class *faithfully* (no filter
+    /// misbehaviour, symmetric = random port allocation): the clean-theory
+    /// configuration the Ford punch-matrix tests pin. Use
+    /// [`TopologyBuilder::nat_realistic`] for measured-realism boxes.
     pub fn nat(&mut self, region: Region, nat_type: NatType, link: LinkProfile) -> usize {
+        let alloc = match nat_type {
+            NatType::Symmetric => super::nat::PortAlloc::Random,
+            _ => super::nat::PortAlloc::Sequential { stride: 1 },
+        };
+        self.push_nat(region, nat_type, link, alloc, 0.0)
+    }
+
+    /// Add a NAT device with measured-realism behaviour: a per-class
+    /// filter-misbehaviour probability ([`super::nat::default_misbehave`])
+    /// and the population port-allocation mix for symmetric boxes
+    /// ([`super::nat::sym_port_alloc`] — mostly sequential/predictable,
+    /// a hard-wall random minority).
+    pub fn nat_realistic(&mut self, region: Region, nat_type: NatType, link: LinkProfile) -> usize {
+        let nat_id = self.nats.len();
+        let alloc = match nat_type {
+            NatType::Symmetric => super::nat::sym_port_alloc(nat_id as u64),
+            _ => super::nat::PortAlloc::Sequential { stride: 1 },
+        };
+        self.push_nat(
+            region,
+            nat_type,
+            link,
+            alloc,
+            super::nat::default_misbehave(nat_type),
+        )
+    }
+
+    fn push_nat(
+        &mut self,
+        region: Region,
+        nat_type: NatType,
+        link: LinkProfile,
+        alloc: super::nat::PortAlloc,
+        misbehave: f64,
+    ) -> usize {
         let face = self.public_host(region, link);
         let nat_id = self.nats.len();
         self.hosts[face as usize].nat_face = Some(nat_id);
-        self.nats
-            .push(NatBox::new(nat_type, face, 20_000 + (nat_id as u16 * 97) % 10_000));
+        self.nats.push(
+            NatBox::new(nat_type, face, 20_000 + (nat_id as u16 * 97) % 10_000)
+                .with_port_alloc(alloc)
+                .with_misbehave(misbehave),
+        );
         nat_id
     }
 

@@ -39,6 +39,15 @@ pub struct NodeConfig {
     /// §Control-plane compression). Either side of a conversation may
     /// run legacy: the wire format is forward- and backward-compatible.
     pub compact_control: bool,
+    /// Self-promote to relay duty when the known relay tier saturates
+    /// (requires an AutoNAT-confirmed public address).
+    pub relay_autopromote: bool,
+    /// Relay capacity knobs, forwarded into the swarm when relaying:
+    /// max concurrent circuits / reservations and the forwarding egress
+    /// budget in bytes/s (0 = unlimited).
+    pub relay_max_circuits: usize,
+    pub relay_max_reservations: usize,
+    pub relay_egress_bps: u64,
     /// Human label for logs/reports.
     pub label: String,
 }
@@ -54,6 +63,10 @@ impl Default for NodeConfig {
             rendezvous_server: false,
             swarm_sync: true,
             compact_control: true,
+            relay_autopromote: false,
+            relay_max_circuits: 1024,
+            relay_max_reservations: 512,
+            relay_egress_bps: 0,
             label: String::new(),
         }
     }
@@ -98,6 +111,18 @@ impl NodeConfig {
         }
         if let Some(v) = get("compact_control").and_then(|v| v.as_bool()) {
             c.compact_control = v;
+        }
+        if let Some(v) = get("relay_autopromote").and_then(|v| v.as_bool()) {
+            c.relay_autopromote = v;
+        }
+        if let Some(v) = get("relay_max_circuits").and_then(|v| v.as_int()) {
+            c.relay_max_circuits = v.max(0) as usize;
+        }
+        if let Some(v) = get("relay_max_reservations").and_then(|v| v.as_int()) {
+            c.relay_max_reservations = v.max(0) as usize;
+        }
+        if let Some(v) = get("relay_egress_bps").and_then(|v| v.as_int()) {
+            c.relay_egress_bps = v.max(0) as u64;
         }
         if let Some(v) = get("label").and_then(|v| v.as_str()) {
             c.label = v.to_string();

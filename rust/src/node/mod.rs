@@ -7,6 +7,7 @@
 //! examples build topologies out of them).
 
 pub mod config;
+pub mod relay;
 
 use crate::content::{Blockstore, Chunking, Cid, DagManifest};
 use crate::crdt::CrdtStore;
@@ -15,7 +16,7 @@ use crate::multiaddr::{Multiaddr, SimAddr};
 use crate::netsim::{Endpoint, EndpointId, Net, Time, World, MILLI, SECOND};
 use crate::protocols::autonat::{Autonat, AUTONAT_PROTO, PROBE_MAGIC};
 use crate::protocols::bitswap::{Bitswap, BitswapEvent, BITSWAP_PROTO};
-use crate::protocols::dcutr::{Dcutr, DCUTR_PROTO};
+use crate::protocols::dcutr::{Dcutr, DcutrEvent, DCUTR_PROTO};
 use crate::protocols::gossip::{Gossip, GossipEvent, GOSSIP_PROTO};
 use crate::protocols::identify::{Identify, IDENTIFY_PROTO};
 use crate::protocols::kad::{Kademlia, KadEvent, PeerEntry, KAD_PROTO};
@@ -31,6 +32,7 @@ use std::collections::VecDeque;
 use std::rc::Rc;
 
 pub use config::NodeConfig;
+pub use relay::{RelayManager, RELAY_ADS_TOPIC};
 
 /// Timer tokens (swarm owns token 1).
 pub const TIMER_PROTO_TICK: u64 = 2;
@@ -81,6 +83,8 @@ pub struct LatticaNode {
     pub autonat: Autonat,
     pub rendezvous: Rendezvous,
     pub dcutr: Dcutr,
+    /// Relay autoscaling: ad directory, reservation upkeep, promotion.
+    pub relay_mgr: RelayManager,
     pub blockstore: Blockstore,
     pub crdt: CrdtStore,
     /// Attached application logic (served inline, so RPC handlers add no
@@ -133,6 +137,9 @@ impl LatticaNode {
         let eid = world.next_endpoint_id();
         let mut swarm_cfg = SwarmConfig {
             relay_enabled: cfg.relay_enabled,
+            max_circuits: cfg.relay_max_circuits,
+            max_reservations: cfg.relay_max_reservations,
+            relay_egress_bps: cfg.relay_egress_bps,
             ..SwarmConfig::default()
         };
         swarm_cfg.conn.cc = cfg.cc;
@@ -167,6 +174,7 @@ impl LatticaNode {
             autonat: Autonat::new(),
             rendezvous: Rendezvous::new(cfg.rendezvous_server),
             dcutr: Dcutr::new(),
+            relay_mgr: RelayManager::new(),
             blockstore: Blockstore::new(),
             crdt: CrdtStore::new(),
             app: None,
@@ -185,6 +193,11 @@ impl LatticaNode {
         {
             let mut n = rc.borrow_mut();
             n.arm_proto_tick(&mut world.net);
+            // Everyone follows the relay-ad topic: NATted nodes pick
+            // relays from it, public nodes watch it for saturation.
+            let n = &mut *n;
+            let mut ctx = Ctx::new(&mut n.swarm, &mut world.net);
+            n.gossip.subscribe(&mut ctx, RELAY_ADS_TOPIC);
         }
         rc
     }
@@ -509,6 +522,14 @@ impl LatticaNode {
             self.events.push_back(NodeEvent::Bitswap(e));
         }
         while let Some(e) = self.gossip.poll_event() {
+            // Relay ads are node plumbing, not application traffic: feed
+            // them to the relay manager instead of surfacing them.
+            if let GossipEvent::Received { topic, data, .. } = &e {
+                if topic == RELAY_ADS_TOPIC {
+                    let _ = self.relay_mgr.handle_ad(net.now(), data);
+                    continue;
+                }
+            }
             self.events.push_back(NodeEvent::Gossip(e));
         }
         while let Some(e) = self.rpc.poll_event() {
@@ -541,7 +562,14 @@ impl LatticaNode {
         }
         while let Some(_e) = self.identify.poll_event() {}
         while let Some(_e) = self.autonat.poll_event() {}
-        while let Some(_e) = self.dcutr.poll_event() {}
+        while let Some(e) = self.dcutr.poll_event() {
+            // A failed/denied upgrade surfaces like a failed punch: the
+            // connection stays relayed and the app can keep using it.
+            if let DcutrEvent::PunchFailed { peer, .. } = e {
+                self.events
+                    .push_back(NodeEvent::PunchResult { peer, success: false });
+            }
+        }
         // Offer events to the attached app (take/put avoids double borrow).
         if let Some(mut app) = self.app.take() {
             let pending: Vec<NodeEvent> = self.events.drain(..).collect();
@@ -738,8 +766,15 @@ impl Endpoint for LatticaNode {
                     self.bitswap.tick(&mut ctx, &self.blockstore);
                     self.gossip.tick(&mut ctx);
                     self.rpc.tick(&mut ctx);
+                    self.relay_mgr.tick(
+                        &mut ctx,
+                        &mut self.gossip,
+                        &mut self.autonat,
+                        self.cfg.relay_autopromote,
+                    );
                 }
                 self.autonat.tick(net.now());
+                self.dcutr.tick(net.now());
                 self.arm_proto_tick(net);
             }
             _ => {}

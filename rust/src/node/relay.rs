@@ -1,0 +1,269 @@
+//! Relay autoscaling: a gossip-advertised relay directory, load-aware
+//! reservation maintenance, and self-promotion.
+//!
+//! Relays periodically publish a [`RelayAd`] (address + utilization 0–100)
+//! on the `lattica:relay-ads` gossip topic. Every node subscribes and
+//! keeps the live ads in a directory. NATted nodes maintain a couple of
+//! reservations on the least-loaded relays (dialing them as needed and
+//! refreshing before the reservation TTL lapses); well-reachable nodes
+//! with `relay_autopromote` watch the directory and enable relay duty on
+//! themselves when the whole advertised tier is saturated — the relay
+//! pool scales with demand instead of being a fixed set of seed nodes.
+
+use crate::identity::PeerId;
+use crate::multiaddr::{Multiaddr, Proto, SimAddr};
+use crate::netsim::{Time, SECOND};
+use crate::protocols::autonat::{Autonat, NatStatus};
+use crate::protocols::gossip::Gossip;
+use crate::protocols::Ctx;
+use crate::swarm::RESERVATION_TTL;
+use crate::wire::{Message, PbReader, PbWriter};
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Gossip topic relay ads travel on.
+pub const RELAY_ADS_TOPIC: &str = "lattica:relay-ads";
+/// How often a relay re-advertises itself.
+pub const AD_INTERVAL: Time = 2 * SECOND;
+/// Ads older than this are dropped from the directory.
+pub const AD_TTL: Time = 10 * SECOND;
+/// How many relay reservations a NATted node maintains (one live + one
+/// backup for mid-stream failover).
+pub const TARGET_RESERVATIONS: usize = 2;
+/// Minimum utilization across every advertised relay before a
+/// `relay_autopromote` node enables relay duty on itself.
+pub const PROMOTE_LOAD: u32 = 70;
+/// Spacing of AutoNAT dial-back probes while reachability is unknown.
+const PROBE_INTERVAL: Time = 2 * SECOND;
+
+/// One relay's gossip advertisement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RelayAd {
+    pub peer: PeerId,
+    pub host: u32,
+    pub port: u16,
+    /// Advertised utilization 0–100 (see `Swarm::relay_utilization`).
+    pub load: u32,
+}
+
+impl Message for RelayAd {
+    fn encode_to(&self, w: &mut PbWriter) {
+        w.bytes(1, self.peer.as_bytes());
+        w.uint(2, self.host as u64);
+        w.uint(3, self.port as u64);
+        w.uint(4, self.load as u64);
+    }
+
+    fn decode(buf: &[u8]) -> Result<RelayAd> {
+        let mut peer = None;
+        let (mut host, mut port, mut load) = (0u32, 0u64, 0u32);
+        PbReader::new(buf).for_each(|f| {
+            match f.number {
+                1 => {
+                    let b = f.as_bytes()?;
+                    anyhow::ensure!(b.len() == 32, "bad peer id length");
+                    let mut d = [0u8; 32];
+                    d.copy_from_slice(b);
+                    peer = Some(PeerId(d));
+                }
+                2 => host = f.as_u64() as u32,
+                3 => port = f.as_u64(),
+                4 => load = f.as_u64() as u32,
+                _ => {}
+            }
+            Ok(())
+        })?;
+        anyhow::ensure!(port <= u16::MAX as u64, "relay ad port {port} out of range");
+        Ok(RelayAd {
+            peer: peer.ok_or_else(|| anyhow::anyhow!("relay ad missing peer"))?,
+            host,
+            port: port as u16,
+            load: load.min(100),
+        })
+    }
+}
+
+impl RelayAd {
+    pub fn multiaddr(&self) -> Multiaddr {
+        Multiaddr::direct(SimAddr::new(self.host, self.port), Proto::QuicLike).with_peer(self.peer)
+    }
+}
+
+/// Per-node relay autoscaling state. Driven from the protocol tick.
+pub struct RelayManager {
+    /// Live ads by relay peer (BTreeMap: deterministic selection order).
+    ads: BTreeMap<PeerId, (RelayAd, Time)>,
+    last_ad: Time,
+    last_probe: Time,
+    last_refresh: Time,
+    /// Set once self-promotion fired (diagnostic; promotion is one-way).
+    pub promoted: bool,
+}
+
+impl Default for RelayManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RelayManager {
+    pub fn new() -> RelayManager {
+        RelayManager {
+            ads: BTreeMap::new(),
+            last_ad: 0,
+            last_probe: 0,
+            last_refresh: 0,
+            promoted: false,
+        }
+    }
+
+    /// Ingest a relay ad received on [`RELAY_ADS_TOPIC`].
+    pub fn handle_ad(&mut self, now: Time, data: &[u8]) -> Result<()> {
+        let ad = RelayAd::decode(data)?;
+        self.ads.insert(ad.peer, (ad, now + AD_TTL));
+        Ok(())
+    }
+
+    fn expire(&mut self, now: Time) {
+        self.ads.retain(|_, (_, exp)| *exp > now);
+    }
+
+    /// Live ads, least-loaded first (ties broken by peer id).
+    pub fn relays_by_load(&self) -> Vec<RelayAd> {
+        let mut v: Vec<RelayAd> = self.ads.values().map(|(ad, _)| ad.clone()).collect();
+        v.sort_by_key(|ad| (ad.load, ad.peer.0));
+        v
+    }
+
+    /// Lowest advertised utilization across the live relay tier.
+    pub fn min_load(&self) -> Option<u32> {
+        self.ads.values().map(|(ad, _)| ad.load).min()
+    }
+
+    pub fn known_relays(&self) -> usize {
+        self.ads.len()
+    }
+
+    /// Periodic drive. Relays advertise; NATted clients probe/reserve;
+    /// public nodes with `autopromote` watch for tier saturation.
+    pub fn tick(&mut self, ctx: &mut Ctx, gossip: &mut Gossip, autonat: &mut Autonat, autopromote: bool) {
+        let now = ctx.now();
+        self.expire(now);
+
+        if ctx.swarm.cfg.relay_enabled {
+            if now.saturating_sub(self.last_ad) >= AD_INTERVAL || self.last_ad == 0 {
+                self.last_ad = now;
+                let ad = RelayAd {
+                    peer: ctx.local_peer(),
+                    host: ctx.swarm.local_addr.host,
+                    port: ctx.swarm.local_addr.port,
+                    load: ctx.swarm.relay_utilization(now),
+                };
+                self.ads.insert(ad.peer, (ad.clone(), now + AD_TTL));
+                gossip.publish(ctx, RELAY_ADS_TOPIC, ad.encode());
+            }
+            return; // relays serve, they don't reserve
+        }
+
+        match autonat.status {
+            NatStatus::Unknown => {
+                // Find out whether we need a relay at all.
+                if now.saturating_sub(self.last_probe) >= PROBE_INTERVAL {
+                    self.last_probe = now;
+                    if let Some(p) = ctx.swarm.connected_peers().first().copied() {
+                        let _ = autonat.probe(ctx, &p);
+                    }
+                }
+            }
+            NatStatus::Public => {
+                // Tier saturated and we're reachable: become a relay. The
+                // next tick publishes our first ad.
+                if autopromote
+                    && !self.promoted
+                    && !self.ads.is_empty()
+                    && self.min_load().map_or(false, |l| l >= PROMOTE_LOAD)
+                {
+                    self.promoted = true;
+                    ctx.swarm.set_relay_enabled(true);
+                    crate::log_debug!("relay tier saturated: self-promoting to relay duty");
+                }
+            }
+            NatStatus::Private => {
+                let held = ctx.swarm.reserved_relays();
+                if held.len() < TARGET_RESERVATIONS {
+                    let want = TARGET_RESERVATIONS - held.len();
+                    let mut picked = 0;
+                    for ad in self.relays_by_load() {
+                        if picked >= want {
+                            break;
+                        }
+                        if held.contains(&ad.peer) || ad.load >= 100 {
+                            continue;
+                        }
+                        if ctx.swarm.is_connected(&ad.peer) {
+                            if ctx.swarm.relay_reserve(ctx.net, &ad.peer).is_ok() {
+                                picked += 1;
+                            }
+                        } else {
+                            // Reserve on the next tick, once connected.
+                            let _ = ctx.dial(&ad.multiaddr());
+                            picked += 1;
+                        }
+                    }
+                }
+                // Refresh held reservations well before the relay-side TTL.
+                if now.saturating_sub(self.last_refresh) >= RESERVATION_TTL / 2 {
+                    self.last_refresh = now;
+                    for p in &held {
+                        let _ = ctx.swarm.relay_reserve(ctx.net, p);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ad_roundtrip() {
+        let ad = RelayAd {
+            peer: PeerId([7; 32]),
+            host: 42,
+            port: 4001,
+            load: 63,
+        };
+        assert_eq!(RelayAd::decode(&ad.encode()).unwrap(), ad);
+    }
+
+    #[test]
+    fn ad_oversized_port_rejected() {
+        let mut w = PbWriter::new();
+        w.bytes(1, &[1u8; 32]);
+        w.uint(3, 70_000);
+        assert!(RelayAd::decode(&w.finish()).is_err());
+    }
+
+    #[test]
+    fn directory_orders_by_load_and_expires() {
+        let mut m = RelayManager::new();
+        let mk = |seed: u8, load: u32| RelayAd {
+            peer: PeerId([seed; 32]),
+            host: seed as u32,
+            port: 4001,
+            load,
+        };
+        m.handle_ad(0, &mk(1, 80).encode()).unwrap();
+        m.handle_ad(0, &mk(2, 10).encode()).unwrap();
+        m.handle_ad(5 * SECOND, &mk(3, 50).encode()).unwrap();
+        let order: Vec<u32> = m.relays_by_load().iter().map(|a| a.load).collect();
+        assert_eq!(order, vec![10, 50, 80]);
+        assert_eq!(m.min_load(), Some(10));
+        // First two ads expire at AD_TTL; the later one survives.
+        m.expire(AD_TTL + 1);
+        assert_eq!(m.known_relays(), 1);
+        assert_eq!(m.min_load(), Some(50));
+    }
+}

@@ -4,10 +4,16 @@
 //! public addresses and a synchronization point, then both call
 //! [`crate::swarm::Swarm::start_punch`] simultaneously. The swarm handles
 //! path probing and migration; this protocol is the coordination layer.
+//!
+//! Failure is explicit: a responder that cannot punch (no observed external
+//! address yet) replies `DENY` instead of going silent, and the initiator
+//! arms a deadline per upgrade attempt — either way the attempt ends in a
+//! [`DcutrEvent::PunchFailed`] and the connection cleanly stays relayed.
 
 use super::Ctx;
 use crate::identity::PeerId;
 use crate::multiaddr::SimAddr;
+use crate::netsim::{Time, SECOND};
 use crate::wire::{Message, PbReader, PbWriter};
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -16,12 +22,20 @@ pub const DCUTR_PROTO: &str = "/lattica/dcutr/1";
 
 const M_CONNECT: u64 = 1; // initiator → responder: my addrs
 const M_SYNC: u64 = 2; // responder → initiator: my addrs, punch now
+const M_DENY: u64 = 3; // responder → initiator: cannot punch now, retry later
+
+/// How long the initiator waits for the responder's SYNC (or DENY) before
+/// declaring the upgrade attempt failed. Generous: the exchange is one
+/// round trip through the relay.
+pub const UPGRADE_TIMEOUT: Time = 3 * SECOND;
 
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct DcutrMsg {
     pub kind: u64,
     pub host: u32,
     pub port: u32,
+    /// DENY reason (diagnostic only).
+    pub error: String,
 }
 
 impl Message for DcutrMsg {
@@ -29,6 +43,7 @@ impl Message for DcutrMsg {
         w.uint(1, self.kind);
         w.uint(2, self.host as u64);
         w.uint(3, self.port as u64);
+        w.string(4, &self.error);
     }
 
     fn decode(buf: &[u8]) -> Result<DcutrMsg> {
@@ -38,10 +53,18 @@ impl Message for DcutrMsg {
                 1 => m.kind = f.as_u64(),
                 2 => m.host = f.as_u64() as u32,
                 3 => m.port = f.as_u64() as u32,
+                4 => m.error = f.as_string()?,
                 _ => {}
             }
             Ok(())
         })?;
+        // Ports ride the wire as varints; anything above the u16 range
+        // would silently truncate at the punch site. Reject at decode.
+        anyhow::ensure!(
+            m.port <= u16::MAX as u32,
+            "dcutr port {} out of range",
+            m.port
+        );
         Ok(m)
     }
 }
@@ -50,11 +73,26 @@ impl Message for DcutrMsg {
 pub enum DcutrEvent {
     /// Both sides agreed; the swarm punch has been started on `conn`.
     PunchStarted { conn: u64, peer: PeerId },
+    /// The upgrade ended without a punch (denied, no external address, or
+    /// the responder never answered); the connection stays relayed.
+    PunchFailed {
+        conn: u64,
+        peer: PeerId,
+        reason: String,
+    },
+}
+
+/// An initiator-side upgrade waiting for the responder's SYNC/DENY.
+struct PendingUpgrade {
+    conn: u64,
+    peer: PeerId,
+    deadline: Time,
 }
 
 #[derive(Default)]
 pub struct Dcutr {
     events: VecDeque<DcutrEvent>,
+    pending: Vec<PendingUpgrade>,
 }
 
 impl Dcutr {
@@ -70,6 +108,12 @@ impl Dcutr {
         ctx.swarm.external_addrs.first().copied()
     }
 
+    fn resolve_pending(&mut self, conn: u64) -> bool {
+        let before = self.pending.len();
+        self.pending.retain(|p| p.conn != conn);
+        self.pending.len() != before
+    }
+
     /// Initiate an upgrade on relayed connection `conn` to `peer`.
     pub fn upgrade(&mut self, ctx: &mut Ctx, conn: u64, peer: &PeerId) -> Result<()> {
         let ext = Self::best_external(ctx)
@@ -82,10 +126,36 @@ impl Dcutr {
             kind: M_CONNECT,
             host: ext.host,
             port: ext.port as u32,
+            ..Default::default()
         };
         ctx.send(cid, stream, &msg.encode())?;
-        let _ = peer;
+        self.pending.push(PendingUpgrade {
+            conn,
+            peer: *peer,
+            deadline: ctx.now() + UPGRADE_TIMEOUT,
+        });
         Ok(())
+    }
+
+    /// Expire upgrade attempts whose responder never answered. Call from
+    /// the node's protocol tick.
+    pub fn tick(&mut self, now: Time) {
+        let mut expired = Vec::new();
+        self.pending.retain(|p| {
+            if p.deadline <= now {
+                expired.push((p.conn, p.peer));
+                false
+            } else {
+                true
+            }
+        });
+        for (conn, peer) in expired {
+            self.events.push_back(DcutrEvent::PunchFailed {
+                conn,
+                peer,
+                reason: "timed out waiting for responder sync".into(),
+            });
+        }
     }
 
     /// Inbound dcutr message on connection `conn`.
@@ -101,24 +171,53 @@ impl Dcutr {
         let their_addr = SimAddr::new(m.host, m.port as u16);
         match m.kind {
             M_CONNECT => {
-                // Responder: reply with our address, then punch.
-                if let Some(ext) = Self::best_external(ctx) {
-                    let reply = DcutrMsg {
-                        kind: M_SYNC,
-                        host: ext.host,
-                        port: ext.port as u32,
-                    };
-                    ctx.send(conn, stream, &reply.encode())?;
-                    ctx.finish(conn, stream);
-                }
-                if ctx.swarm.start_punch(ctx.net, conn, their_addr).is_ok() {
-                    self.events.push_back(DcutrEvent::PunchStarted { conn, peer });
+                // Responder: reply with our address and punch — or, if we
+                // have no observed external address yet, say so explicitly
+                // so the initiator doesn't dead-end waiting for SYNC.
+                match Self::best_external(ctx) {
+                    Some(ext) => {
+                        let reply = DcutrMsg {
+                            kind: M_SYNC,
+                            host: ext.host,
+                            port: ext.port as u32,
+                            ..Default::default()
+                        };
+                        ctx.send(conn, stream, &reply.encode())?;
+                        ctx.finish(conn, stream);
+                        if ctx.swarm.start_punch(ctx.net, conn, their_addr).is_ok() {
+                            self.events.push_back(DcutrEvent::PunchStarted { conn, peer });
+                        }
+                    }
+                    None => {
+                        let reply = DcutrMsg {
+                            kind: M_DENY,
+                            error: "no observed external address".into(),
+                            ..Default::default()
+                        };
+                        ctx.send(conn, stream, &reply.encode())?;
+                        ctx.finish(conn, stream);
+                        self.events.push_back(DcutrEvent::PunchFailed {
+                            conn,
+                            peer,
+                            reason: "no observed external address".into(),
+                        });
+                    }
                 }
             }
             M_SYNC => {
                 // Initiator: punch now.
+                self.resolve_pending(conn);
                 if ctx.swarm.start_punch(ctx.net, conn, their_addr).is_ok() {
                     self.events.push_back(DcutrEvent::PunchStarted { conn, peer });
+                }
+            }
+            M_DENY => {
+                if self.resolve_pending(conn) {
+                    self.events.push_back(DcutrEvent::PunchFailed {
+                        conn,
+                        peer,
+                        reason: format!("denied by responder: {}", m.error),
+                    });
                 }
             }
             _ => {}
@@ -137,7 +236,49 @@ mod tests {
             kind: M_SYNC,
             host: 3,
             port: 54321,
+            error: String::new(),
         };
         assert_eq!(DcutrMsg::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn deny_roundtrip() {
+        let m = DcutrMsg {
+            kind: M_DENY,
+            error: "no observed external address".into(),
+            ..Default::default()
+        };
+        assert_eq!(DcutrMsg::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn oversized_port_rejected_at_decode() {
+        // A varint port above u16::MAX used to truncate silently at the
+        // punch site (`as u16`); it must be rejected at decode instead.
+        let m = DcutrMsg {
+            kind: M_CONNECT,
+            host: 3,
+            port: 70_000,
+            ..Default::default()
+        };
+        assert!(DcutrMsg::decode(&m.encode()).is_err());
+    }
+
+    #[test]
+    fn timeout_emits_punch_failed() {
+        let mut d = Dcutr::new();
+        d.pending.push(PendingUpgrade {
+            conn: 7,
+            peer: PeerId([9; 32]),
+            deadline: 100,
+        });
+        d.tick(50);
+        assert!(d.poll_event().is_none());
+        d.tick(100);
+        match d.poll_event() {
+            Some(DcutrEvent::PunchFailed { conn: 7, .. }) => {}
+            other => panic!("expected PunchFailed, got {other:?}"),
+        }
+        assert!(d.pending.is_empty());
     }
 }

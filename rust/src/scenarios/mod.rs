@@ -4,6 +4,7 @@
 //! paper's evaluation settings (DESIGN.md §6) and returns the handles the
 //! harness needs.
 
+pub mod nat_mesh;
 pub mod planet;
 
 use crate::identity::PeerId;
@@ -18,6 +19,9 @@ use crate::util::buf::Buf;
 use std::cell::RefCell;
 use std::rc::Rc;
 
+pub use nat_mesh::{
+    nat_mesh, FailoverOutcome, NatMeshConfig, NatMeshOutcome, NatPairRow, RelayRow,
+};
 pub use planet::{
     planet_scale, BackgroundNode, BackgroundStats, PlanetConfig, PlanetOutcome, RoutingOracle,
 };

@@ -1,0 +1,496 @@
+//! Mixed-NAT mesh scenario: the acceptance harness behind
+//! `tests/nat_traversal.rs` and `BENCH_nat_traversal.json`.
+//!
+//! Builds a deployment where every non-relay node sits behind a NAT type
+//! sampled from [`super::NAT_DISTRIBUTION`] (with `nat_realistic`
+//! misbehaviour enabled), lets the relay-autoscaling machinery settle
+//! (AutoNAT probes → relay ads → load-aware reservations), then samples
+//! peer pairs and records per-NAT-pair connectivity, direct-upgrade
+//! fraction, and per-relay load. The optional relay-kill arm proves
+//! mid-stream failover: a circuit's relay dies unclean and the logical
+//! connection must recover onto a backup relay without a disconnect.
+
+use super::{echo_service, sample_nat, stub_call_blocking, Node};
+use crate::identity::PeerId;
+use crate::multiaddr::Multiaddr;
+use crate::netsim::nat::NatType;
+use crate::netsim::topology::{LinkProfile, TopologyBuilder};
+use crate::netsim::{World, SECOND};
+use crate::node::{run_until, LatticaNode, NodeConfig, NodeEvent};
+use crate::protocols::Ctx;
+use crate::rpc::{Status, Stub};
+use std::collections::BTreeMap;
+
+/// Configuration for [`nat_mesh`].
+#[derive(Clone, Debug)]
+pub struct NatMeshConfig {
+    /// Non-relay nodes (NAT types sampled from the distribution).
+    pub nodes: usize,
+    /// Seed relay nodes (public, `relay_enabled`).
+    pub relays: usize,
+    /// Random peer pairs to attempt connecting.
+    pub pair_samples: usize,
+    /// Run the relay-kill failover arm after pair sampling.
+    pub relay_kill: bool,
+    /// Non-relay nodes may self-promote when the relay tier saturates.
+    pub autopromote: bool,
+    /// Relay capacity knobs (forwarded to every node's swarm so promoted
+    /// nodes inherit them).
+    pub relay_max_circuits: usize,
+    pub relay_max_reservations: usize,
+    /// Relay forwarding budget in bytes/s (0 = unlimited).
+    pub relay_egress_bps: u64,
+    /// Settle time before sampling: AutoNAT probes (2 s cadence), relay
+    /// ads and reservation maintenance all need a few ticks.
+    pub settle_secs: u64,
+    pub seed: u64,
+}
+
+impl NatMeshConfig {
+    /// Small deterministic arm for always-on tests.
+    pub fn quick(seed: u64) -> NatMeshConfig {
+        NatMeshConfig {
+            nodes: 36,
+            relays: 3,
+            pair_samples: 40,
+            relay_kill: false,
+            autopromote: false,
+            relay_max_circuits: 1024,
+            relay_max_reservations: 512,
+            relay_egress_bps: 0,
+            settle_secs: 8,
+            seed,
+        }
+    }
+
+    /// The issue's 1k-node acceptance arm (release bench only).
+    pub fn ci(seed: u64) -> NatMeshConfig {
+        NatMeshConfig {
+            nodes: 1000,
+            relays: 8,
+            pair_samples: 200,
+            relay_kill: false,
+            autopromote: true,
+            relay_max_circuits: 1024,
+            relay_max_reservations: 512,
+            // Generous but finite: the budget is enforced (over-budget
+            // CONNECTs are refused) without binding on handshake traffic.
+            relay_egress_bps: 50_000_000,
+            settle_secs: 12,
+            seed,
+        }
+    }
+}
+
+/// Outcomes for one unordered NAT-type pairing (e.g. `prc|sym`).
+#[derive(Clone, Debug, Default)]
+pub struct NatPairRow {
+    pub label: String,
+    pub attempted: u64,
+    /// Pairs that ended connected at all (direct or relayed).
+    pub connected: u64,
+    /// Pairs that ended with a direct (punched or dialed) path.
+    pub direct: u64,
+    /// Pairs connected but still relayed after the upgrade attempt.
+    pub relayed: u64,
+}
+
+/// One relay's end-of-run load summary.
+#[derive(Clone, Debug)]
+pub struct RelayRow {
+    pub label: String,
+    pub bytes_relayed: u64,
+    pub circuits_opened: u64,
+    pub circuits_refused: u64,
+    pub reservations_refused: u64,
+    /// Utilization 0–100 at collection time.
+    pub utilization: u32,
+    /// Average forwarding egress over the whole run, bytes/s.
+    pub egress_bps_avg: u64,
+}
+
+/// Result of the relay-kill failover arm.
+#[derive(Clone, Debug)]
+pub struct FailoverOutcome {
+    /// The initiator rebound its inner connection to a backup relay.
+    pub recovered: bool,
+    /// An RPC issued after the kill completed OK over the re-homed path.
+    pub call_after_kill_ok: bool,
+    /// The logical connection surfaced a disconnect (must stay false).
+    pub peer_disconnected_seen: bool,
+    pub failovers_completed: u64,
+}
+
+/// Everything [`nat_mesh`] measures.
+#[derive(Clone, Debug)]
+pub struct NatMeshOutcome {
+    pub nodes: usize,
+    pub relays: usize,
+    pub pair_rows: Vec<NatPairRow>,
+    pub relay_rows: Vec<RelayRow>,
+    pub attempted: u64,
+    pub connected: u64,
+    pub direct: u64,
+    /// connected / attempted.
+    pub connectivity: f64,
+    /// Fraction of NATted nodes holding ≥1 relay reservation after settle.
+    pub reservation_coverage: f64,
+    /// Nodes that self-promoted to relay duty.
+    pub promoted: usize,
+    pub failover: Option<FailoverOutcome>,
+}
+
+fn nat_label(n: Option<NatType>) -> &'static str {
+    match n {
+        None => "public",
+        Some(t) => t.label(),
+    }
+}
+
+/// Canonical unordered pairing label, e.g. `full-cone|symmetric`.
+fn pair_label(a: Option<NatType>, b: Option<NatType>) -> String {
+    let (x, y) = (nat_label(a), nat_label(b));
+    if x <= y {
+        format!("{x}|{y}")
+    } else {
+        format!("{y}|{x}")
+    }
+}
+
+fn has_direct_path(node: &Node, peer: &PeerId) -> bool {
+    let n = node.borrow();
+    n.swarm
+        .conns_to(peer)
+        .iter()
+        .any(|c| matches!(n.swarm.connection_path(*c), Some(crate::swarm::Path::Direct(_))))
+}
+
+/// Build the mesh, settle autoscaling, sample pairs, optionally kill a
+/// relay mid-stream. Fully deterministic in the config.
+pub fn nat_mesh(cfg: &NatMeshConfig) -> NatMeshOutcome {
+    let mut rng = crate::util::Rng::new(cfg.seed ^ 0x4A70);
+    let mut t = TopologyBuilder::paper_regions();
+    let relay_hosts: Vec<u32> = (0..cfg.relays)
+        .map(|i| t.public_host(i % 3, LinkProfile::DATACENTER))
+        .collect();
+    let mut node_nats: Vec<Option<NatType>> = Vec::with_capacity(cfg.nodes);
+    let node_hosts: Vec<u32> = (0..cfg.nodes)
+        .map(|i| {
+            let region = i % 3;
+            let nat = sample_nat(&mut rng);
+            node_nats.push(nat);
+            match nat {
+                None => t.public_host(region, LinkProfile::FIBER),
+                Some(n) => {
+                    let id = t.nat_realistic(region, n, LinkProfile::FIBER);
+                    t.natted_host(id, LinkProfile::UNLIMITED)
+                }
+            }
+        })
+        .collect();
+    let mut world = World::new(t.build(cfg.seed));
+
+    let relays: Vec<Node> = relay_hosts
+        .iter()
+        .enumerate()
+        .map(|(i, &h)| {
+            LatticaNode::spawn(&mut world, h, {
+                let mut c = NodeConfig::relay(cfg.seed * 1000 + i as u64);
+                c.relay_max_circuits = cfg.relay_max_circuits;
+                c.relay_max_reservations = cfg.relay_max_reservations;
+                c.relay_egress_bps = cfg.relay_egress_bps;
+                c.label = format!("relay-{i}");
+                c
+            })
+        })
+        .collect();
+    let workers: Vec<Node> = node_hosts
+        .iter()
+        .enumerate()
+        .map(|(i, &h)| {
+            LatticaNode::spawn(&mut world, h, {
+                let mut c = NodeConfig::with_seed(cfg.seed * 1000 + 100 + i as u64);
+                c.relay_autopromote = cfg.autopromote;
+                c.relay_max_circuits = cfg.relay_max_circuits;
+                c.relay_max_reservations = cfg.relay_max_reservations;
+                c.relay_egress_bps = cfg.relay_egress_bps;
+                c.label = format!("node-{i}");
+                c
+            })
+        })
+        .collect();
+
+    let entry0 = crate::protocols::kad::PeerEntry {
+        id: relays[0].borrow().peer_id(),
+        host: relay_hosts[0],
+        port: 4001,
+    };
+    for nd in relays.iter().skip(1).chain(workers.iter()) {
+        nd.borrow_mut().bootstrap(&mut world.net, entry0.clone());
+    }
+    world.run_for(cfg.settle_secs * SECOND);
+
+    // Reservation coverage: every Private node should hold a reservation
+    // by now (RelayManager maintains TARGET_RESERVATIONS of them).
+    let natted: Vec<usize> = (0..cfg.nodes).filter(|&i| node_nats[i].is_some()).collect();
+    let with_res = natted
+        .iter()
+        .filter(|&&i| !workers[i].borrow().swarm.reserved_relays().is_empty())
+        .count();
+    let reservation_coverage = if natted.is_empty() {
+        1.0
+    } else {
+        with_res as f64 / natted.len() as f64
+    };
+
+    // Address book of every relay-capable node (seed relays + promoted).
+    let relay_addrs = |relays: &[Node], workers: &[Node]| -> BTreeMap<PeerId, Multiaddr> {
+        let mut m = BTreeMap::new();
+        for nd in relays.iter().chain(workers.iter()) {
+            let n = nd.borrow();
+            if n.swarm.cfg.relay_enabled {
+                m.insert(n.peer_id(), n.listen_addr());
+            }
+        }
+        m
+    };
+
+    // --- Pair sampling -----------------------------------------------------
+    let mut rows: BTreeMap<String, NatPairRow> = BTreeMap::new();
+    let (mut attempted, mut connected_n, mut direct_n) = (0u64, 0u64, 0u64);
+    for _ in 0..cfg.pair_samples {
+        let ai = rng.gen_index(cfg.nodes);
+        let mut bi = rng.gen_index(cfg.nodes);
+        if bi == ai {
+            bi = (bi + 1) % cfg.nodes;
+        }
+        let a = &workers[ai];
+        let b = &workers[bi];
+        let b_peer = b.borrow().peer_id();
+        let label = pair_label(node_nats[ai], node_nats[bi]);
+
+        let mut ok = a.borrow().swarm.is_connected(&b_peer);
+        if !ok {
+            if node_nats[bi].is_none() {
+                // Public target: plain direct dial.
+                let ma = b.borrow().listen_addr();
+                let _ = a.borrow_mut().dial(&mut world.net, &ma);
+                ok = run_until(&mut world, 10 * SECOND, || {
+                    a.borrow().swarm.is_connected(&b_peer)
+                });
+            } else {
+                // NATted target: circuit via a relay it holds a
+                // reservation on, then a DCUtR upgrade attempt.
+                let book = relay_addrs(&relays, &workers);
+                let reserved = b.borrow().swarm.reserved_relays();
+                if let Some(relay_ma) =
+                    reserved.iter().find_map(|p| book.get(p).cloned())
+                {
+                    let circuit = Multiaddr::circuit(relay_ma, b_peer);
+                    let _ = a.borrow_mut().dial(&mut world.net, &circuit);
+                    ok = run_until(&mut world, 10 * SECOND, || {
+                        a.borrow().swarm.is_connected(&b_peer)
+                    });
+                    if ok && !has_direct_path(a, &b_peer) {
+                        let cid = a.borrow().swarm.conns_to(&b_peer)[0];
+                        {
+                            let mut n = a.borrow_mut();
+                            let LatticaNode { swarm, dcutr, .. } = &mut *n;
+                            let mut ctx = Ctx::new(swarm, &mut world.net);
+                            let _ = dcutr.upgrade(&mut ctx, cid, &b_peer);
+                        }
+                        world.run_for(4 * SECOND);
+                    }
+                }
+            }
+        }
+        let direct = ok && has_direct_path(a, &b_peer);
+        let row = rows.entry(label.clone()).or_insert_with(|| NatPairRow {
+            label,
+            ..Default::default()
+        });
+        row.attempted += 1;
+        attempted += 1;
+        if ok {
+            row.connected += 1;
+            connected_n += 1;
+            if direct {
+                row.direct += 1;
+                direct_n += 1;
+            } else {
+                row.relayed += 1;
+            }
+        }
+    }
+
+    // --- Relay-kill failover arm ------------------------------------------
+    let mut killed_row: Option<RelayRow> = None;
+    let mut killed_idx: Option<usize> = None;
+    let failover = if cfg.relay_kill && cfg.relays >= 2 {
+        run_relay_kill(
+            &mut world,
+            &relays,
+            &workers,
+            &node_nats,
+            &mut killed_row,
+            &mut killed_idx,
+        )
+    } else {
+        None
+    };
+
+    // --- Collect -----------------------------------------------------------
+    let now = world.net.now();
+    let mut relay_rows: Vec<RelayRow> = Vec::new();
+    for (i, nd) in relays.iter().enumerate() {
+        if killed_idx == Some(i) {
+            relay_rows.push(killed_row.clone().expect("killed relay row captured"));
+            continue;
+        }
+        let n = nd.borrow();
+        relay_rows.push(relay_row(&n, now));
+    }
+    let mut promoted = 0usize;
+    for (i, nd) in workers.iter().enumerate() {
+        let n = nd.borrow();
+        if n.relay_mgr.promoted {
+            promoted += 1;
+            let mut row = relay_row(&n, now);
+            row.label = format!("promoted-node-{i}");
+            relay_rows.push(row);
+        }
+    }
+
+    NatMeshOutcome {
+        nodes: cfg.nodes,
+        relays: cfg.relays,
+        pair_rows: rows.into_values().collect(),
+        relay_rows,
+        attempted,
+        connected: connected_n,
+        direct: direct_n,
+        connectivity: if attempted == 0 {
+            1.0
+        } else {
+            connected_n as f64 / attempted as f64
+        },
+        reservation_coverage,
+        promoted,
+        failover,
+    }
+}
+
+fn relay_row(n: &LatticaNode, now: crate::netsim::Time) -> RelayRow {
+    let s = n.swarm.relay_stats.clone();
+    RelayRow {
+        label: n.cfg.label.clone(),
+        bytes_relayed: s.bytes_relayed,
+        circuits_opened: s.circuits_opened,
+        circuits_refused: s.circuits_refused,
+        reservations_refused: s.reservations_refused,
+        utilization: n.swarm.relay_utilization(now),
+        egress_bps_avg: s.bytes_relayed / (now / SECOND).max(1),
+    }
+}
+
+/// Kill the relay under an in-use circuit; the logical connection must
+/// re-home to a backup relay without surfacing a disconnect, and an RPC
+/// issued afterwards must still complete.
+fn run_relay_kill(
+    world: &mut World,
+    relays: &[Node],
+    workers: &[Node],
+    node_nats: &[Option<NatType>],
+    killed_row: &mut Option<RelayRow>,
+    killed_idx: &mut Option<usize>,
+) -> Option<FailoverOutcome> {
+    // Find a NATted pair sharing ≥2 reservations: one relay to kill, one
+    // to fail over to. (RelayManager targets 2 reservations per node, so
+    // with a small relay tier a shared pair is the common case.)
+    let relay_peers: Vec<PeerId> = relays.iter().map(|r| r.borrow().peer_id()).collect();
+    let mut pick: Option<(usize, usize, Vec<PeerId>)> = None;
+    'outer: for ai in 0..workers.len() {
+        if node_nats[ai].is_none() {
+            continue;
+        }
+        let ar = workers[ai].borrow().swarm.reserved_relays();
+        for bi in 0..workers.len() {
+            if bi == ai || node_nats[bi].is_none() {
+                continue;
+            }
+            let br = workers[bi].borrow().swarm.reserved_relays();
+            let common: Vec<PeerId> = ar
+                .iter()
+                .filter(|p| br.contains(p) && relay_peers.contains(p))
+                .copied()
+                .collect();
+            if common.len() >= 2 {
+                pick = Some((ai, bi, common));
+                break 'outer;
+            }
+        }
+    }
+    let (ai, bi, common) = pick?;
+    let a = &workers[ai];
+    let b = &workers[bi];
+    let b_peer = b.borrow().peer_id();
+    b.borrow_mut().register_service(echo_service(1024));
+
+    // Circuit through the first common relay (the one we will kill).
+    let kill_peer = common[0];
+    let ki = relay_peers.iter().position(|p| *p == kill_peer)?;
+    let relay_ma = relays[ki].borrow().listen_addr();
+    if !a.borrow().swarm.is_connected(&b_peer) {
+        let circuit = Multiaddr::circuit(relay_ma, b_peer);
+        let _ = a.borrow_mut().dial(&mut world.net, &circuit);
+        if !run_until(world, 10 * SECOND, || a.borrow().swarm.is_connected(&b_peer)) {
+            return None;
+        }
+    }
+    // Prove the path carries traffic before the kill.
+    let mut stub = Stub::new("bench", vec![b_peer]);
+    let pre = stub_call_blocking(world, a, &mut stub, "echo", b"pre".to_vec(), 10 * SECOND);
+    if pre.map(|d| d.status) != Some(Status::Ok) {
+        return None;
+    }
+    a.borrow_mut().drain_events(); // post-kill disconnect detection baseline
+
+    // Unclean kill: no close frames, circuits die with the process.
+    let kill_at = world.net.now();
+    *killed_row = Some({
+        let n = relays[ki].borrow();
+        let mut row = relay_row(&n, kill_at);
+        row.label = format!("{} (killed)", row.label);
+        row
+    });
+    *killed_idx = Some(ki);
+    let eid = {
+        let mut n = relays[ki].borrow_mut();
+        n.shutdown(&mut world.net, false);
+        n.endpoint_id()
+    };
+    world.remove_endpoint(eid);
+
+    // The initiator detects the dead relay connection (keepalive/RTO),
+    // parks the inner connection and re-homes it via CONNECT on the
+    // backup relay — all within the rehome grace window.
+    let recovered = run_until(world, 60 * SECOND, || {
+        let n = a.borrow();
+        n.swarm.relay_stats.failovers_completed >= 1
+            || n.swarm.relay_stats.failovers_failed >= 1
+    });
+    let fs = a.borrow().swarm.relay_stats.clone();
+    let still_connected = a.borrow().swarm.is_connected(&b_peer);
+    let peer_disconnected_seen = a
+        .borrow_mut()
+        .drain_events()
+        .iter()
+        .any(|ev| matches!(ev, NodeEvent::PeerDisconnected { peer } if *peer == b_peer));
+    let post = stub_call_blocking(world, a, &mut stub, "echo", b"post".to_vec(), 15 * SECOND);
+    Some(FailoverOutcome {
+        recovered: recovered && fs.failovers_completed >= 1 && still_connected,
+        call_after_kill_ok: post.map(|d| d.status) == Some(Status::Ok),
+        peer_disconnected_seen,
+        failovers_completed: fs.failovers_completed,
+    })
+}

@@ -16,7 +16,7 @@ pub mod peerstore;
 
 use crate::identity::{Keypair, PeerId};
 use crate::multiaddr::{Multiaddr, Proto, SimAddr};
-use crate::netsim::{EndpointId, Net, Time, MILLI};
+use crate::netsim::{EndpointId, Net, Time, MILLI, SECOND};
 use crate::transport::connection::{ConnEvent, Connection, ConnectionConfig, Role, RxInfo};
 use crate::transport::packet::Packet;
 use crate::transport::{TrafficClass, TransportProfile};
@@ -123,6 +123,9 @@ struct ConnState {
     punch: Option<PunchState>,
     /// True once this conn was reported established to the node layer.
     reported: bool,
+    /// Set while the conn's relay path is dead and a re-home is pending;
+    /// the conn is torn down if no backup circuit lands by this deadline.
+    parked: Option<Time>,
 }
 
 /// Relay-server side state for one circuit.
@@ -153,9 +156,23 @@ pub struct SwarmConfig {
     pub relay_enabled: bool,
     /// Max circuits when acting as a relay.
     pub max_circuits: usize,
+    /// Max reservations when acting as a relay; further RESERVEs get a
+    /// RESERVE_ERR so clients fail over to another relay.
+    pub max_reservations: usize,
+    /// Egress budget when acting as a relay (bytes/s of forwarded inner
+    /// packets); 0 = unlimited. New circuits are refused while the measured
+    /// forwarding rate exceeds the budget, bounding per-relay egress.
+    pub relay_egress_bps: u64,
     /// Hole-punch probe schedule: attempts and spacing.
     pub punch_attempts: u32,
     pub punch_interval: Time,
+    /// Port-prediction spray width: from the second volley on, probes also
+    /// target this many sequential ports above the observed endpoint
+    /// (defeats sequential-allocating symmetric NATs; harmless otherwise).
+    pub punch_spray: u16,
+    /// How long an inner connection may sit parked while we re-home it
+    /// through a backup relay after its relay connection died.
+    pub rehome_grace: Time,
 }
 
 impl Default for SwarmConfig {
@@ -165,10 +182,36 @@ impl Default for SwarmConfig {
             accept_inbound: true,
             relay_enabled: false,
             max_circuits: 1024,
+            max_reservations: 512,
+            relay_egress_bps: 0,
             punch_attempts: 5,
             punch_interval: 50 * MILLI,
+            punch_spray: 16,
+            // Must absorb the worst-case skew between the two endpoints
+            // detecting the dead relay (keepalive phase + RTO backoff).
+            rehome_grace: 15 * SECOND,
         }
     }
+}
+
+/// How long a relay honours a reservation before the client must refresh
+/// it (clients re-reserve at roughly half this interval).
+pub const RESERVATION_TTL: Time = 60 * SECOND;
+
+/// Relay-server side state for one reservation.
+struct Reservation {
+    cid: u64,
+    stream: u64,
+    expires: Time,
+}
+
+/// An inner connection being re-homed onto a backup relay after its relay
+/// connection died mid-stream.
+struct Rehome {
+    inner_cid: u64,
+    target: PeerId,
+    /// Relay conn ids already tried (first entry: the dead relay).
+    tried: Vec<u64>,
 }
 
 /// Timer tokens the node layer must route to [`Swarm::on_timer`].
@@ -193,14 +236,26 @@ pub struct Swarm {
     peer_conns: HashMap<PeerId, Vec<u64>>,
 
     // Relay server state.
-    reservations: HashMap<PeerId, (u64, u64)>, // peer → (cid, ctrl stream)
+    reservations: HashMap<PeerId, Reservation>,
     circuits: HashMap<u64, Circuit>,
     next_circuit_id: u64,
+    /// Rolling 1 s egress window for the relay bytes/s budget.
+    egress_window_start: Time,
+    egress_window_bytes: u64,
+    egress_last_bps: u64,
+    /// Relay-role counters (circuits, refusals, failovers, bytes).
+    pub relay_stats: crate::metrics::RelayStats,
 
     // Relay client: pending circuit dials keyed by relay cid.
     pending_circuit_dials: Vec<PendingCircuitDial>,
     /// Inner connections by (relay_cid, circuit_id).
     circuit_conns: HashMap<(u64, u64), u64>,
+    /// Relays this node holds reservations on (peer → last RESERVE_OK time).
+    my_reservations: HashMap<PeerId, Time>,
+    /// Last advertised utilization per relay peer (from RESERVE_OK).
+    relay_loads: HashMap<PeerId, u32>,
+    /// Inner connections awaiting a backup circuit (mid-stream failover).
+    pending_rehomes: Vec<Rehome>,
 
     events: VecDeque<SwarmEvent>,
     /// Next scheduled tick (so we arm at most one timer).
@@ -235,8 +290,15 @@ impl Swarm {
             reservations: HashMap::new(),
             circuits: HashMap::new(),
             next_circuit_id: 1,
+            egress_window_start: 0,
+            egress_window_bytes: 0,
+            egress_last_bps: 0,
+            relay_stats: crate::metrics::RelayStats::default(),
             pending_circuit_dials: Vec::new(),
             circuit_conns: HashMap::new(),
+            my_reservations: HashMap::new(),
+            relay_loads: HashMap::new(),
+            pending_rehomes: Vec::new(),
             events: VecDeque::new(),
             tick_armed_until: 0,
             external_addrs: Vec::new(),
@@ -377,6 +439,7 @@ impl Swarm {
                 pending_connects: VecDeque::new(),
                 punch: None,
                 reported: false,
+                parked: None,
             },
         );
         self.flush_conn(net, cid);
@@ -569,11 +632,21 @@ impl Swarm {
             return;
         }
         if net.now() >= p.deadline {
+            let first = p.attempts_left == self.cfg.punch_attempts;
             p.attempts_left -= 1;
             p.deadline = net.now() + self.cfg.punch_interval;
             let target = p.target;
             let probe = c.conn.make_path_challenge(p.token);
-            net.send(local_addr, target, probe);
+            // First volley targets the observed endpoint only. Later ones
+            // also spray sequential ports above it: a sequential symmetric
+            // NAT allocates new mappings near the observed one, so a few
+            // predicted probes open its filter (birthday-paradox port
+            // prediction). Random-allocating NATs just drop the extras.
+            let spray = if first { 0 } else { self.cfg.punch_spray };
+            for d in 0..=spray {
+                let t = SimAddr::new(target.host, target.port.wrapping_add(d));
+                net.send(local_addr, t, probe.clone());
+            }
         }
     }
 
@@ -623,6 +696,7 @@ impl Swarm {
                             pending_connects: VecDeque::new(),
                             punch: None,
                             reported: false,
+                            parked: None,
                         },
                     );
                     self.initial_index.insert((from, pkt.src_cid), cid);
@@ -812,6 +886,12 @@ impl Swarm {
         let peer = c.conn.peer;
         let dial_target = c.expected_peer.or(peer);
         let was_reported = c.reported;
+        let had_relay_ctrl = c.relay_ctrl_stream.is_some();
+        if had_relay_ctrl {
+            if let Some(p) = peer {
+                self.my_reservations.remove(&p);
+            }
+        }
         // Close circuits riding this connection (relay server side).
         let dead_circuits: Vec<u64> = self
             .circuits
@@ -833,18 +913,21 @@ impl Swarm {
                 &RelayMsg::circuit_closed(other_circ, "relay conn closed").encode(),
             );
         }
-        // Close inner connections riding this relay conn (client side).
-        let dead_inner: Vec<u64> = self
+        // Inner connections riding this relay conn (client side): don't
+        // tear them down — park them and try to re-home each onto a backup
+        // relay so the logical connection survives the relay's death.
+        let mut dead_inner: Vec<u64> = self
             .circuit_conns
             .iter()
             .filter(|((rcid, _), _)| *rcid == cid)
             .map(|(_, inner)| *inner)
             .collect();
-        for inner in dead_inner {
-            self.teardown_conn(net, inner, "relay connection lost");
-        }
+        dead_inner.sort_unstable(); // deterministic failover order
         self.circuit_conns.retain(|(rcid, _), _| *rcid != cid);
-        self.reservations.retain(|_, (rcid, _)| *rcid != cid);
+        for inner in dead_inner {
+            self.begin_rehome(net, inner, cid);
+        }
+        self.reservations.retain(|_, r| r.cid != cid);
         if let Some(p) = peer {
             if let Some(v) = self.peer_conns.get_mut(&p) {
                 v.retain(|x| *x != cid);
@@ -867,35 +950,231 @@ impl Swarm {
         }
     }
 
+    /// The relay connection under `inner` died. Park the inner connection
+    /// (its path keeps pointing at the dead relay, so sends no-op and the
+    /// transport's retransmissions cover the gap) and, on the circuit
+    /// initiator, start re-establishing a circuit through a backup relay.
+    fn begin_rehome(&mut self, net: &mut Net, inner: u64, dead_relay: u64) {
+        let now = net.now();
+        let grace = self.cfg.rehome_grace;
+        let (target, is_client) = match self.conns.get_mut(&inner) {
+            Some(c) => {
+                c.parked = Some(now + grace);
+                (
+                    c.expected_peer.or(c.conn.peer),
+                    matches!(c.conn.role, Role::Client),
+                )
+            }
+            None => return,
+        };
+        self.arm_at(net, now, now + grace);
+        // Only the circuit initiator re-homes actively; the responder parks
+        // and waits for the initiator's re-homed packets to find it (see the
+        // M_DATA dst_cid fallback). Both avoids duplicate circuits and
+        // matches who knows how to CONNECT.
+        let Some(target) = target else { return };
+        if !is_client {
+            return;
+        }
+        self.relay_stats.failovers_started += 1;
+        let mut r = Rehome {
+            inner_cid: inner,
+            target,
+            tried: vec![dead_relay],
+        };
+        if self.try_next_rehome(net, &mut r) {
+            self.pending_rehomes.push(r);
+        } else {
+            self.relay_stats.failovers_failed += 1;
+            self.teardown_conn(net, inner, "relay connection lost (no backup relay)");
+        }
+    }
+
+    /// Send a CONNECT for `r.target` on the next untried relay connection.
+    /// Candidates are established direct conns we already speak the relay
+    /// protocol on (reservations or prior circuit dials).
+    fn try_next_rehome(&mut self, net: &mut Net, r: &mut Rehome) -> bool {
+        loop {
+            let cand = self
+                .conns
+                .iter()
+                .filter(|(cid2, c)| {
+                    !r.tried.contains(cid2)
+                        && c.relay_ctrl_stream.is_some()
+                        && c.conn.is_established()
+                        && !c.conn.is_closed()
+                        && matches!(c.path, Path::Direct(_))
+                })
+                .map(|(cid2, _)| *cid2)
+                .next();
+            let Some(rcid) = cand else { return false };
+            r.tried.push(rcid);
+            let Ok(stream) = self.ensure_relay_ctrl(net, rcid) else {
+                continue;
+            };
+            if let Some(c) = self.conns.get_mut(&rcid) {
+                c.pending_connects.push_back(r.target);
+            }
+            if self
+                .send_msg(net, rcid, stream, &RelayMsg::connect(r.target).encode())
+                .is_ok()
+            {
+                return true;
+            }
+        }
+    }
+
+    /// Drop reservations past their TTL (relay server side).
+    fn expire_reservations(&mut self, now: Time) {
+        self.reservations.retain(|_, r| r.expires > now);
+    }
+
+    /// Account forwarded bytes into the rolling 1 s egress window.
+    fn note_egress(&mut self, now: Time, bytes: u64) {
+        let elapsed = now.saturating_sub(self.egress_window_start);
+        if elapsed >= SECOND {
+            self.egress_last_bps =
+                self.egress_window_bytes.saturating_mul(SECOND) / elapsed.max(1);
+            self.egress_window_start = now;
+            self.egress_window_bytes = 0;
+        }
+        self.egress_window_bytes += bytes;
+        self.relay_stats.bytes_relayed += bytes;
+    }
+
+    /// Measured relay egress rate in bytes/s. Blends the live window with
+    /// the last completed one so short windows don't read as zero.
+    pub fn measured_egress_bps(&self, now: Time) -> u64 {
+        let elapsed = now.saturating_sub(self.egress_window_start).max(1);
+        let cur = self.egress_window_bytes.saturating_mul(SECOND) / elapsed;
+        if elapsed >= SECOND {
+            cur // last window is stale; extrapolation decays toward zero
+        } else if elapsed >= SECOND / 4 {
+            cur.max(self.egress_last_bps)
+        } else {
+            self.egress_last_bps
+        }
+    }
+
+    fn relay_overloaded(&self, now: Time) -> bool {
+        self.cfg.relay_egress_bps > 0 && self.measured_egress_bps(now) >= self.cfg.relay_egress_bps
+    }
+
+    /// Advertised utilization 0–100: the most loaded of circuits,
+    /// reservations and the egress budget.
+    pub fn relay_utilization(&self, now: Time) -> u32 {
+        let frac = |num: u64, den: u64| if den == 0 { 0 } else { (num * 100 / den).min(100) };
+        let c = frac(self.circuits.len() as u64, self.cfg.max_circuits as u64);
+        let r = frac(
+            self.reservations.len() as u64,
+            self.cfg.max_reservations as u64,
+        );
+        let e = if self.cfg.relay_egress_bps > 0 {
+            frac(self.measured_egress_bps(now), self.cfg.relay_egress_bps)
+        } else {
+            0
+        };
+        c.max(r).max(e) as u32
+    }
+
+    /// Relays this node currently holds reservations on (sorted for
+    /// deterministic iteration).
+    pub fn reserved_relays(&self) -> Vec<PeerId> {
+        let mut v: Vec<PeerId> = self.my_reservations.keys().copied().collect();
+        v.sort_unstable_by_key(|p| p.0);
+        v
+    }
+
+    /// Last utilization a relay advertised to us (via RESERVE_OK), if any.
+    pub fn relay_load_of(&self, peer: &PeerId) -> Option<u32> {
+        self.relay_loads.get(peer).copied()
+    }
+
+    /// Flip relay-server duty at runtime (self-promotion when the relay
+    /// tier saturates).
+    pub fn set_relay_enabled(&mut self, on: bool) {
+        self.cfg.relay_enabled = on;
+    }
+
     fn handle_relay_msg(&mut self, net: &mut Net, cid: u64, stream: u64, msg: &Buf) -> Result<()> {
         let m = RelayMsg::decode_buf(msg)?;
         match m.kind {
             relay_msg::M_RESERVE => {
                 anyhow::ensure!(self.cfg.relay_enabled, "relaying disabled");
+                let now = net.now();
+                self.expire_reservations(now);
                 let c = self.conns.get(&cid).context("conn gone")?;
                 let peer = c.conn.peer.context("unidentified peer")?;
                 let observed = match c.path {
                     Path::Direct(a) => a,
                     _ => bail!("reservation over relayed conn"),
                 };
-                self.reservations.insert(peer, (cid, stream));
-                self.send_msg(net, cid, stream, &RelayMsg::reserve_ok(observed).encode())?;
+                if self.reservations.len() >= self.cfg.max_reservations
+                    && !self.reservations.contains_key(&peer)
+                {
+                    self.relay_stats.reservations_refused += 1;
+                    self.send_msg(
+                        net,
+                        cid,
+                        stream,
+                        &RelayMsg::reserve_err("relay at reservation capacity").encode(),
+                    )?;
+                } else {
+                    self.reservations.insert(
+                        peer,
+                        Reservation {
+                            cid,
+                            stream,
+                            expires: now + RESERVATION_TTL,
+                        },
+                    );
+                    let load = self.relay_utilization(now);
+                    self.send_msg(
+                        net,
+                        cid,
+                        stream,
+                        &RelayMsg::reserve_ok(observed, load).encode(),
+                    )?;
+                }
             }
             relay_msg::M_RESERVE_OK => {
                 let addr = m.observed_addr();
+                if let Some(p) = self.conns.get(&cid).and_then(|c| c.conn.peer) {
+                    self.my_reservations.insert(p, net.now());
+                    self.relay_loads.insert(p, m.load);
+                }
                 if !self.external_addrs.contains(&addr) {
                     self.external_addrs.push(addr);
                 }
                 self.events.push_back(SwarmEvent::ObservedAddr { addr });
             }
+            relay_msg::M_RESERVE_ERR => {
+                // Saturated relay: drop it from our reservation set and
+                // remember it as fully loaded so selection avoids it.
+                if let Some(p) = self.conns.get(&cid).and_then(|c| c.conn.peer) {
+                    self.my_reservations.remove(&p);
+                    self.relay_loads.insert(p, 100);
+                }
+                crate::log_debug!("reservation refused on conn {cid}: {}", m.error);
+            }
             relay_msg::M_CONNECT => {
                 anyhow::ensure!(self.cfg.relay_enabled, "relaying disabled");
+                let now = net.now();
+                self.expire_reservations(now);
                 let target = m.peer.context("CONNECT missing target")?;
-                let reply = match self.reservations.get(&target) {
-                    None => RelayMsg::connect_err("no reservation for target"),
-                    Some(&(t_cid, t_stream)) => {
+                let res = self.reservations.get(&target).map(|r| (r.cid, r.stream));
+                let reply = match res {
+                    None => {
+                        self.relay_stats.circuits_refused += 1;
+                        RelayMsg::connect_err("no reservation for target")
+                    }
+                    Some((t_cid, t_stream)) => {
                         if self.circuits.len() >= self.cfg.max_circuits {
+                            self.relay_stats.circuits_refused += 1;
                             RelayMsg::connect_err("relay at circuit capacity")
+                        } else if self.relay_overloaded(now) {
+                            self.relay_stats.circuits_refused += 1;
+                            RelayMsg::connect_err("relay egress budget exhausted")
                         } else {
                             let from_peer = self
                                 .conns
@@ -915,6 +1194,7 @@ impl Swarm {
                                     b_circuit_id: circuit_id,
                                 },
                             );
+                            self.relay_stats.circuits_opened += 1;
                             self.send_msg(
                                 net,
                                 t_cid,
@@ -934,6 +1214,29 @@ impl Swarm {
                     .get_mut(&cid)
                     .and_then(|c| c.pending_connects.pop_front())
                     .context("CONNECT_OK without pending connect")?;
+                // A pending re-home for this target rebinds the surviving
+                // inner connection onto the fresh circuit instead of
+                // creating a new one — the logical connection (and all its
+                // streams) continues where it left off.
+                if let Some(pos) = self
+                    .pending_rehomes
+                    .iter()
+                    .position(|r| r.target == target && r.tried.contains(&cid))
+                {
+                    let r = self.pending_rehomes.remove(pos);
+                    if let Some(c) = self.conns.get_mut(&r.inner_cid) {
+                        c.path = Path::Relayed {
+                            relay_cid: cid,
+                            circuit: m.circuit,
+                        };
+                        c.parked = None;
+                        self.circuit_conns.insert((cid, m.circuit), r.inner_cid);
+                        self.relay_stats.failovers_completed += 1;
+                        self.flush_conn(net, r.inner_cid);
+                        self.arm_tick_for(net, r.inner_cid);
+                    }
+                    return Ok(());
+                }
                 let proto = self.conns.get(&cid).map(|c| c.proto).unwrap_or(Proto::QuicLike);
                 let mut cfg = self.cfg.conn.clone();
                 cfg.profile = TransportProfile::for_proto(proto);
@@ -962,6 +1265,7 @@ impl Swarm {
                         pending_connects: VecDeque::new(),
                         punch: None,
                         reported: false,
+                        parked: None,
                     },
                 );
                 self.circuit_conns.insert((cid, m.circuit), inner_cid);
@@ -972,6 +1276,24 @@ impl Swarm {
                     .conns
                     .get_mut(&cid)
                     .and_then(|c| c.pending_connects.pop_front());
+                // A refused re-home tries the next backup relay before
+                // giving up on the parked inner connection.
+                if let Some(t) = target {
+                    if let Some(pos) = self
+                        .pending_rehomes
+                        .iter()
+                        .position(|r| r.target == t && r.tried.contains(&cid))
+                    {
+                        let mut r = self.pending_rehomes.remove(pos);
+                        if self.try_next_rehome(net, &mut r) {
+                            self.pending_rehomes.push(r);
+                        } else {
+                            self.relay_stats.failovers_failed += 1;
+                            self.teardown_conn(net, r.inner_cid, "relay failover exhausted");
+                        }
+                        return Ok(());
+                    }
+                }
                 crate::log_debug!("circuit dial to {target:?} failed: {}", m.error);
                 self.events.push_back(SwarmEvent::DialFailed {
                     cid,
@@ -1007,6 +1329,7 @@ impl Swarm {
                         pending_connects: VecDeque::new(),
                         punch: None,
                         reported: false,
+                        parked: None,
                     },
                 );
                 self.circuit_conns.insert((cid, m.circuit), inner_cid);
@@ -1019,16 +1342,53 @@ impl Swarm {
                     } else {
                         (circ.a_cid, circ.a_stream, circ.a_circuit_id)
                     };
+                    self.note_egress(net.now(), m.payload.len() as u64);
                     self.send_msg_buf(
                         net,
                         o_cid,
                         o_stream,
                         RelayMsg::data(o_circ, m.payload).encode_buf(),
                     )?;
-                } else if let Some(&inner_cid) = self.circuit_conns.get(&(cid, m.circuit)) {
+                } else {
                     // Client side: feed the inner connection (zero-copy view
                     // of the relay message payload).
                     let pkt = Packet::decode_buf(&m.payload)?;
+                    let mapped = self.circuit_conns.get(&(cid, m.circuit)).copied();
+                    // Passive re-home: packets addressed to an established
+                    // inner connection arriving on a circuit it doesn't
+                    // ride mean the initiator failed over to a backup
+                    // relay. Rebind the connection onto this circuit and
+                    // drop the placeholder conn M_INCOMING created.
+                    let inner_cid = if pkt.dst_cid != 0 && self.conns.contains_key(&pkt.dst_cid) {
+                        let ic = pkt.dst_cid;
+                        let here = Path::Relayed {
+                            relay_cid: cid,
+                            circuit: m.circuit,
+                        };
+                        let cur = self.conns[&ic].path;
+                        if !matches!(cur, Path::Direct(_)) && cur != here {
+                            if let Some(c) = self.conns.get_mut(&ic) {
+                                c.path = here;
+                                c.parked = None;
+                            }
+                            if let Some(old) = mapped {
+                                if old != ic {
+                                    self.teardown_conn(
+                                        net,
+                                        old,
+                                        "superseded by re-homed connection",
+                                    );
+                                }
+                            }
+                            self.circuit_conns.retain(|_, v| *v != ic);
+                            self.circuit_conns.insert((cid, m.circuit), ic);
+                        }
+                        ic
+                    } else if let Some(ic) = mapped {
+                        ic
+                    } else {
+                        return Ok(()); // unknown circuit: stateless drop
+                    };
                     let info = {
                         let c = self.conns.get_mut(&inner_cid).context("inner conn gone")?;
                         c.conn.handle_packet(net.now(), pkt).unwrap_or_default()
@@ -1049,9 +1409,12 @@ impl Swarm {
                 }
             }
             relay_msg::M_CIRCUIT_CLOSED => {
-                if let Some(&inner_cid) = self.circuit_conns.get(&(cid, m.circuit)) {
-                    self.teardown_conn(net, inner_cid, "circuit closed by relay");
-                    self.circuit_conns.remove(&(cid, m.circuit));
+                // The circuit died (usually the peer's relay leg). Park the
+                // inner conn and attempt failover through another relay
+                // rather than tearing it down outright; if no backup works
+                // out the parked conn is torn down by its grace deadline.
+                if let Some(inner_cid) = self.circuit_conns.remove(&(cid, m.circuit)) {
+                    self.begin_rehome(net, inner_cid, cid);
                 }
             }
             other => bail!("unexpected relay message kind {other}"),
@@ -1122,6 +1485,9 @@ impl Swarm {
             if let Some(p) = &c.punch {
                 consider(p.deadline);
             }
+            if let Some(d) = c.parked {
+                consider(d);
+            }
         }
         t
     }
@@ -1182,6 +1548,19 @@ impl Swarm {
             if punch_due {
                 self.drive_punch(net, cid);
             }
+            // Parked conns whose re-home grace expired are torn down.
+            let park_due = self
+                .conns
+                .get(&cid)
+                .and_then(|c| c.parked)
+                .map_or(false, |d| d <= now);
+            if park_due {
+                self.pending_rehomes.retain(|r| r.inner_cid != cid);
+                self.teardown_conn(net, cid, "relay failover timed out");
+            }
+        }
+        if self.cfg.relay_enabled {
+            self.expire_reservations(now);
         }
         self.arm_tick(net);
     }

@@ -22,6 +22,7 @@ pub const M_CONNECT_ERR: u64 = 5;
 pub const M_INCOMING: u64 = 6;
 pub const M_DATA: u64 = 7;
 pub const M_CIRCUIT_CLOSED: u64 = 8;
+pub const M_RESERVE_ERR: u64 = 9;
 
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct RelayMsg {
@@ -35,8 +36,13 @@ pub struct RelayMsg {
     /// RESERVE_OK: the client's address as observed by the relay.
     pub observed_host: u32,
     pub observed_port: u32,
-    /// CONNECT_ERR / CIRCUIT_CLOSED reason.
+    /// CONNECT_ERR / RESERVE_ERR / CIRCUIT_CLOSED reason.
     pub error: String,
+    /// RESERVE_OK: the relay's advertised utilization, 0–100 (circuits,
+    /// reservations and egress budget — whichever is most loaded). Clients
+    /// feed this into load-aware relay selection. Absent (0) from legacy
+    /// relays, which selection treats as "unknown, assume lightly loaded".
+    pub load: u32,
 }
 
 impl RelayMsg {
@@ -47,11 +53,20 @@ impl RelayMsg {
         }
     }
 
-    pub fn reserve_ok(observed: SimAddr) -> RelayMsg {
+    pub fn reserve_ok(observed: SimAddr, load: u32) -> RelayMsg {
         RelayMsg {
             kind: M_RESERVE_OK,
             observed_host: observed.host,
             observed_port: observed.port as u32,
+            load,
+            ..Default::default()
+        }
+    }
+
+    pub fn reserve_err(error: &str) -> RelayMsg {
+        RelayMsg {
+            kind: M_RESERVE_ERR,
+            error: error.to_string(),
             ..Default::default()
         }
     }
@@ -123,6 +138,7 @@ impl Message for RelayMsg {
         w.uint(5, self.observed_host as u64);
         w.uint(6, self.observed_port as u64);
         w.string(7, &self.error);
+        w.uint(8, self.load as u64);
     }
 
     fn decode(buf: &[u8]) -> Result<RelayMsg> {
@@ -172,13 +188,14 @@ fn decode_common_field(m: &mut RelayMsg, number: u32, f: &crate::wire::pb::Field
         5 => m.observed_host = f.as_u64() as u32,
         6 => m.observed_port = f.as_u64() as u32,
         7 => m.error = f.as_string()?,
+        8 => m.load = f.as_u64() as u32,
         _ => {}
     }
     Ok(())
 }
 
 fn check_kind(m: &RelayMsg) -> Result<()> {
-    if m.kind == 0 || m.kind > M_CIRCUIT_CLOSED {
+    if m.kind == 0 || m.kind > M_RESERVE_ERR {
         bail!("invalid relay message kind {}", m.kind);
     }
     Ok(())
@@ -194,13 +211,14 @@ mod tests {
         let pid = Keypair::from_seed(4).peer_id();
         let msgs = vec![
             RelayMsg::reserve(),
-            RelayMsg::reserve_ok(SimAddr::new(9, 1234)),
+            RelayMsg::reserve_ok(SimAddr::new(9, 1234), 63),
             RelayMsg::connect(pid),
             RelayMsg::connect_ok(77),
             RelayMsg::connect_err("no reservation"),
             RelayMsg::incoming(77, pid),
             RelayMsg::data(77, vec![1, 2, 3]),
             RelayMsg::circuit_closed(77, "peer gone"),
+            RelayMsg::reserve_err("relay at reservation capacity"),
         ];
         for m in msgs {
             let enc = m.encode();
@@ -210,7 +228,7 @@ mod tests {
 
     #[test]
     fn observed_addr_roundtrip() {
-        let m = RelayMsg::reserve_ok(SimAddr::new(42, 65_000));
+        let m = RelayMsg::reserve_ok(SimAddr::new(42, 65_000), 0);
         assert_eq!(m.observed_addr(), SimAddr::new(42, 65_000));
     }
 

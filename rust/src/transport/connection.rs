@@ -345,6 +345,11 @@ impl Connection {
         self.cc = self.cfg.cc.build(self.cfg.max_inflight);
         self.rtt.initial_rto = 1_000 * MILLI;
         self.rtt.min_rto = 500 * MILLI;
+        // An inner conn must outlive a dying relay conn: the relay path's
+        // own (shorter) idle timeout fires first, parks this conn, and
+        // re-homes it to a backup relay inside the grace window — instead
+        // of both racing to the same 30 s deadline.
+        self.cfg.idle_timeout *= 3;
     }
 
     /// Traffic class of a stream (default: best-effort streaming).

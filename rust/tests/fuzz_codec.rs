@@ -9,7 +9,9 @@
 use lattica::content::{Cid, DagManifest, DeltaManifest};
 use lattica::crdt::CrdtStore;
 use lattica::identity::Keypair;
+use lattica::node::relay::RelayAd;
 use lattica::protocols::bitswap::BitswapMsg;
+use lattica::protocols::dcutr::DcutrMsg;
 use lattica::protocols::gossip::{GossipMsg, GossipSummary};
 use lattica::protocols::kad::{KadMsg, PeerEntry};
 use lattica::rpc::RpcMsg;
@@ -163,6 +165,25 @@ fn kad_corpus() -> Vec<Vec<u8>> {
     legacy.string(3, "forward");
     legacy.bytes(4, &[7u8; 64]);
     legacy.uint(6, 2);
+    // NAT traversal control frames: a DCUtR CONNECT/DENY pair and a relay
+    // gossip ad (all carry ports, the truncation-prone field class).
+    let dcutr_connect = DcutrMsg {
+        kind: 1,
+        host: 42,
+        port: 65_000,
+        ..Default::default()
+    };
+    let dcutr_deny = DcutrMsg {
+        kind: 3,
+        error: "no observed external address".into(),
+        ..Default::default()
+    };
+    let relay_ad = RelayAd {
+        peer: Keypair::from_seed(5).peer_id(),
+        host: 9,
+        port: 4001,
+        load: 63,
+    };
     vec![
         full.encode(),
         small.encode(),
@@ -182,6 +203,9 @@ fn kad_corpus() -> Vec<Vec<u8>> {
         ihave.encode(),
         iwant.encode(),
         GossipMsg::default().encode(),
+        dcutr_connect.encode(),
+        dcutr_deny.encode(),
+        relay_ad.encode(),
     ]
 }
 
@@ -201,6 +225,8 @@ fn decode_everything(buf: &[u8]) {
     let _ = RangeSet::decode(buf);
     let _ = BloomDigest::from_bytes(buf);
     let _ = lattica::model::ModelAnnouncement::decode(buf);
+    let _ = DcutrMsg::decode(buf);
+    let _ = RelayAd::decode(buf);
     // The raw field reader must also survive anything.
     let mut r = PbReader::new(buf);
     while let Ok(Some(f)) = r.next_field() {
@@ -329,7 +355,9 @@ fn corpus_roundtrips_stay_valid() {
             || DeltaManifest::decode(&base).is_ok()
             || BitswapMsg::decode(&base).is_ok()
             || RpcMsg::decode(&base).is_ok()
-            || GossipMsg::decode(&base).is_ok();
+            || GossipMsg::decode(&base).is_ok()
+            || DcutrMsg::decode(&base).is_ok()
+            || RelayAd::decode(&base).is_ok();
         assert!(ok, "corpus entry decodes under none of its codecs");
     }
     // Compact/lazy-push frames roundtrip exactly, including the nested
@@ -361,4 +389,31 @@ fn corpus_roundtrips_stay_valid() {
         inner.finish()
     });
     assert!(KadMsg::decode(&w.finish()).is_err());
+}
+
+#[test]
+fn oversized_ports_rejected_at_decode() {
+    // Ports ride the wire as varints; a value above u16::MAX would
+    // silently truncate at the punch/dial site (`as u16`) if a decoder
+    // accepted it. Both port-carrying codecs must reject instead.
+    let mut dcutr = PbWriter::new();
+    dcutr.uint(1, 1); // CONNECT
+    dcutr.uint(2, 42); // host
+    dcutr.uint(3, 70_000); // port > u16::MAX
+    assert!(DcutrMsg::decode(&dcutr.finish()).is_err());
+
+    let mut ad = PbWriter::new();
+    ad.bytes(1, Keypair::from_seed(6).peer_id().as_bytes());
+    ad.uint(2, 9);
+    ad.uint(3, 1 << 20); // port way out of range
+    assert!(RelayAd::decode(&ad.finish()).is_err());
+
+    // The boundary value itself is fine.
+    let edge = DcutrMsg {
+        kind: 2,
+        host: 1,
+        port: u16::MAX as u32,
+        ..Default::default()
+    };
+    assert_eq!(DcutrMsg::decode(&edge.encode()).unwrap(), edge);
 }

@@ -1,0 +1,124 @@
+//! NAT traversal acceptance suite: the measured punch matrix must track
+//! its calibration bands, a mixed-NAT mesh must reach near-full pairwise
+//! connectivity through autoscaled relays, and killing a relay mid-stream
+//! must not drop the logical connections riding its circuits.
+//!
+//! The quick arms run in debug builds; the strict mesh arm is
+//! release-gated (CI runs it) like the other heavy scenarios.
+
+use lattica::netsim::nat::{measure_punch_matrix, punch_success_band, NatType};
+use lattica::scenarios::{nat_mesh, NatMeshConfig};
+
+/// The per-pair punch success rates out of the realistic lab harness must
+/// land inside the configured calibration bands (Trautwein et al. shape:
+/// cone-cone easy, cone-symmetric hard, symmetric-symmetric mostly lost),
+/// within sampling slack.
+#[test]
+fn punch_matrix_tracks_calibration_bands() {
+    let trials = 80u32;
+    let slack = 0.25 / (trials as f64).sqrt() * 3.0; // ~3σ for a proportion
+    for (a, b, rate) in measure_punch_matrix(trials, 16, 11) {
+        let (lo, hi) = punch_success_band(a, b);
+        assert!(
+            rate >= lo - slack && rate <= hi + slack,
+            "{}|{} measured {:.3} outside band [{lo}, {hi}] (slack {slack:.3})",
+            a.label(),
+            b.label(),
+            rate
+        );
+    }
+}
+
+/// Relative structure regression: the matrix must keep its ordering even
+/// if the absolute calibration shifts — symmetric pairs are the hard
+/// wall, cone pairs are easy, and the port spray keeps cone↔symmetric
+/// usable.
+#[test]
+fn punch_matrix_ordering_is_stable() {
+    use NatType::*;
+    let m = measure_punch_matrix(80, 16, 23);
+    let rate = |x: NatType, y: NatType| {
+        m.iter()
+            .find(|(a, b, _)| (*a == x && *b == y) || (*a == y && *b == x))
+            .map(|(_, _, r)| *r)
+            .unwrap()
+    };
+    assert!(rate(FullCone, FullCone) > rate(PortRestrictedCone, Symmetric));
+    assert!(rate(PortRestrictedCone, Symmetric) > rate(Symmetric, Symmetric));
+    assert!(
+        rate(Symmetric, Symmetric) < 0.5,
+        "symmetric|symmetric must stay a hard wall"
+    );
+}
+
+/// Small mixed-NAT mesh: AutoNAT classification, relay ads, load-aware
+/// reservations, and circuit dialing must yield near-full pairwise
+/// connectivity (relayed paths count).
+#[test]
+fn mixed_nat_mesh_connects() {
+    let mut cfg = NatMeshConfig::quick(3);
+    cfg.nodes = 18;
+    cfg.pair_samples = 15;
+    let out = nat_mesh(&cfg);
+    assert!(
+        out.reservation_coverage >= 0.8,
+        "only {:.0}% of NATted nodes hold a relay reservation after settle",
+        out.reservation_coverage * 100.0
+    );
+    assert!(
+        out.connectivity >= 0.9,
+        "mesh connectivity {:.3} ({} of {} sampled pairs)",
+        out.connectivity,
+        out.connected,
+        out.attempted
+    );
+}
+
+/// The acceptance-bar mesh: ≥95 % pairwise connectivity at the quick-arm
+/// scale, with every relay inside its egress budget. Heavy — release
+/// builds only (CI runs it; the 1k-node arm lives in the bench).
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-mode scenario; run via CI or --include-ignored")]
+fn mixed_nat_mesh_meets_acceptance_bar() {
+    let mut cfg = NatMeshConfig::quick(7);
+    cfg.relay_egress_bps = 50_000_000;
+    let out = nat_mesh(&cfg);
+    assert!(
+        out.connectivity >= 0.95,
+        "mesh connectivity {:.3} below the 95% acceptance bar ({} of {})",
+        out.connectivity,
+        out.connected,
+        out.attempted
+    );
+    for r in &out.relay_rows {
+        assert!(
+            r.egress_bps_avg <= 50_000_000,
+            "relay {} exceeded its egress budget: {} B/s",
+            r.label,
+            r.egress_bps_avg
+        );
+    }
+}
+
+/// Kill the relay under an active circuit: the initiator must re-home the
+/// inner connection to a backup relay without surfacing a disconnect, and
+/// RPCs must keep completing afterwards.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-mode scenario; run via CI or --include-ignored")]
+fn relay_kill_failover_keeps_logical_connection() {
+    let mut cfg = NatMeshConfig::quick(5);
+    cfg.nodes = 16;
+    cfg.pair_samples = 0; // the kill arm picks its own pair
+    cfg.relay_kill = true;
+    let out = nat_mesh(&cfg);
+    let f = out
+        .failover
+        .expect("no NATted pair with two shared reservations found");
+    assert!(f.recovered, "inner connection did not re-home to a backup relay");
+    assert!(
+        !f.peer_disconnected_seen,
+        "failover surfaced a PeerDisconnected for the logical connection"
+    );
+    assert!(f.call_after_kill_ok, "RPC after the relay kill did not complete");
+    assert!(f.failovers_completed >= 1);
+}
