@@ -19,12 +19,22 @@
 //!   protocol. Feed it node events and `tick` it from your drive loop
 //!   (or use `scenarios::stub_call_blocking` for linear code like this).
 //!
+//! **Overload:** a service can cap its admitted rate with
+//! [`Service::with_admission`] (or node-wide via `NodeConfig
+//! { admission_rate, .. }`); excess requests are rejected *before
+//! payload decode* with `Status::Overloaded` plus a retry-after hint,
+//! and a handler that defers work can answer `Reply::overloaded` when
+//! its own queue is full. Stubs honor the pushback automatically —
+//! backing off, failing over to a quieter replica and suppressing
+//! hedges — so a saturated server sheds load instead of melting down
+//! (see DESIGN.md §Overload & admission control).
+//!
 //! Run: `cargo run --release --example quickstart`
 
 use lattica::netsim::topology::{LinkProfile, TopologyBuilder};
 use lattica::netsim::{World, SECOND};
 use lattica::node::{run_until, LatticaNode, NodeConfig};
-use lattica::rpc::{Outcome, Service, Status, Stub};
+use lattica::rpc::{AdmissionPolicy, Outcome, Service, Status, Stub};
 use lattica::scenarios::stub_call_blocking;
 
 fn main() -> anyhow::Result<()> {
@@ -39,12 +49,16 @@ fn main() -> anyhow::Result<()> {
     //    no match on raw RPC events.
     let server = LatticaNode::spawn(&mut world, h1, NodeConfig::with_seed(1));
     let client = LatticaNode::spawn(&mut world, h2, NodeConfig::with_seed(2));
-    server.borrow_mut().register_service(Service::new("greeter").unary(
-        "hello",
-        |_node, _net, _ctx, payload| {
-            Outcome::reply(format!("hello, {}!", String::from_utf8_lossy(&payload)))
-        },
-    ));
+    //    The admission policy caps the service at 100 admitted requests
+    //    per second; anything past the burst is rejected before payload
+    //    decode with `Status::Overloaded` and a retry-after hint.
+    server.borrow_mut().register_service(
+        Service::new("greeter")
+            .with_admission(AdmissionPolicy::rate(100.0, 16.0))
+            .unary("hello", |_node, _net, _ctx, payload| {
+                Outcome::reply(format!("hello, {}!", String::from_utf8_lossy(&payload)))
+            }),
+    );
 
     // 3. Dial (multiaddr carries transport + expected peer id).
     let server_ma = server.borrow().listen_addr();

@@ -26,7 +26,7 @@ use lattica::node::{LatticaNode, NodeEvent};
 use lattica::protocols::ping::PingEvent;
 use lattica::protocols::Ctx;
 use lattica::rpc::{CallOptions, HedgePolicy, RetryPolicy, Status, Stub};
-use lattica::scenarios::{echo_service, table1_world_cc, NetScenario};
+use lattica::scenarios::{echo_service, overload_scenario, table1_world_cc, NetScenario, OverloadConfig};
 use lattica::transport::CcAlgorithm;
 use lattica::util::cli::Args;
 use lattica::util::json::Json;
@@ -322,6 +322,50 @@ fn main() {
         ping_ratio
     );
 
+    // Overload survival: drive a 10× surge through admission control,
+    // WFQ queues and server pushback, and check the metastable-failure
+    // bars (goodput holds through the surge, shedding is pre-decode
+    // cheap, the system recovers without operator action).
+    let overload = overload_scenario(&OverloadConfig::default());
+    println!();
+    println!(
+        "Overload survival (capacity {:.0} qps, nominal {:.0} qps):",
+        overload.capacity_qps, overload.nominal_capacity_qps
+    );
+    println!(
+        "{:<10} {:>10} {:>10} {:>8} {:>9} {:>12} {:>10} {:>12}",
+        "phase", "offered", "goodput", "ok", "rejected", "shed_pre", "shed_q", "p99_ok"
+    );
+    let mut overload_rows: Vec<Json> = Vec::new();
+    for r in &overload.rows {
+        println!(
+            "{:<10} {:>10.0} {:>10.0} {:>8} {:>9} {:>12} {:>10} {:>12}",
+            r.phase,
+            r.offered_qps,
+            r.goodput_qps,
+            r.ok,
+            r.rejected,
+            r.shed_predecode,
+            r.shed_queue,
+            lattica::util::timefmt::fmt_ns(r.p99_admitted_ns)
+        );
+        overload_rows.push(Json::obj(vec![
+            ("phase", Json::str(r.phase)),
+            ("offered_qps", Json::num(r.offered_qps)),
+            ("goodput_qps", Json::num(r.goodput_qps)),
+            ("ok", Json::num(r.ok as f64)),
+            ("rejected", Json::num(r.rejected as f64)),
+            ("shed_predecode", Json::num(r.shed_predecode as f64)),
+            ("shed_queue", Json::num(r.shed_queue as f64)),
+            ("p99_admitted_ns", Json::num(r.p99_admitted_ns as f64)),
+        ]));
+    }
+    println!(
+        "    stub: {}\n    router: {}",
+        overload.stub.summary(),
+        overload.router.summary()
+    );
+
     // Machine-readable result for cross-PR tracking.
     let json_rows: Vec<Json> = rows
         .iter_mut()
@@ -349,6 +393,12 @@ fn main() {
         ("rows", Json::Arr(json_rows)),
         ("wan_stress_rows", Json::Arr(stress_rows)),
         ("policy_rows", Json::Arr(policy_rows)),
+        ("overload_rows", Json::Arr(overload_rows)),
+        ("overload_capacity_qps", Json::num(overload.capacity_qps)),
+        ("overload_nominal_capacity_qps", Json::num(overload.nominal_capacity_qps)),
+        ("overload_shed_predecode", Json::num(overload.shed_predecode as f64)),
+        ("overload_shed_queue", Json::num(overload.shed_queue as f64)),
+        ("overload_replies_dropped", Json::num(overload.replies_dropped as f64)),
         ("ping_p99_idle_ns", Json::num(ping_idle as f64)),
         ("ping_p99_under_bulk_ns", Json::num(ping_bulk as f64)),
         ("ping_p99_bulk_ratio", Json::num(ping_ratio)),
@@ -385,6 +435,24 @@ fn main() {
         "retry+hedging must strictly beat the no-retry p99 under loss: hedge {} vs none {}",
         lattica::util::timefmt::fmt_ns(policy_p99[2]),
         lattica::util::timefmt::fmt_ns(policy_p99[0]),
+    );
+    let surge = overload
+        .rows
+        .iter()
+        .find(|r| r.phase == "surge")
+        .expect("overload scenario emits a surge row");
+    assert!(
+        surge.goodput_qps >= 0.8 * overload.capacity_qps,
+        "surge goodput {:.0} qps must hold ≥80% of measured capacity {:.0} qps",
+        surge.goodput_qps,
+        overload.capacity_qps
+    );
+    let total_shed = overload.shed_predecode + overload.shed_queue;
+    assert!(
+        total_shed == 0 || overload.shed_predecode * 10 >= total_shed * 9,
+        "shedding must be pre-decode cheap: {} of {} shed before payload decode",
+        overload.shed_predecode,
+        total_shed
     );
     println!("\nshape check OK: QPS degrades with network distance in both payload classes");
     println!(

@@ -464,12 +464,15 @@ pub struct RouterStats {
     pub expired: u64,
     /// Stream items routed to stream handlers.
     pub stream_items: u64,
+    /// Requests rejected by admission control before payload decode
+    /// (answered `Overloaded` from the header alone).
+    pub shed_predecode: u64,
 }
 
 impl RouterStats {
     pub fn summary(&self) -> String {
         format!(
-            "served={} failed={} deferred={} unknown={}/{} expired={} stream_items={}",
+            "served={} failed={} deferred={} unknown={}/{} expired={} stream_items={} shed_predecode={}",
             self.served,
             self.failed,
             self.deferred,
@@ -477,6 +480,7 @@ impl RouterStats {
             self.unknown_method,
             self.expired,
             self.stream_items,
+            self.shed_predecode,
         )
     }
 }
@@ -505,12 +509,17 @@ pub struct StubStats {
     pub cancelled: u64,
     /// Ops that exhausted their overall deadline.
     pub deadline_expired: u64,
+    /// `Overloaded` responses received (server pushback).
+    pub overloaded: u64,
+    /// Hedges not issued (or abandoned) because a target signalled
+    /// overload — speculative duplicates would amplify the saturation.
+    pub hedges_suppressed: u64,
 }
 
 impl StubStats {
     pub fn summary(&self) -> String {
         format!(
-            "ops={} ok={} failed={} attempts={} retries={} hedges={} (won {}) failovers={} expired={}",
+            "ops={} ok={} failed={} attempts={} retries={} hedges={} (won {}, suppressed {}) failovers={} expired={} overloaded={}",
             self.ops,
             self.ok,
             self.failed,
@@ -518,8 +527,10 @@ impl StubStats {
             self.retries,
             self.hedges,
             self.hedge_wins,
+            self.hedges_suppressed,
             self.failovers,
             self.deadline_expired,
+            self.overloaded,
         )
     }
 }

@@ -48,6 +48,12 @@ pub struct NodeConfig {
     pub relay_max_circuits: usize,
     pub relay_max_reservations: usize,
     pub relay_egress_bps: u64,
+    /// Default admission rate (requests/second) installed for services
+    /// registered without their own [`crate::rpc::AdmissionPolicy`].
+    /// 0 = no node-wide admission control (opt-in per service).
+    pub admission_rate: f64,
+    /// Bucket depth for the node-wide default admission policy.
+    pub admission_burst: f64,
     /// Human label for logs/reports.
     pub label: String,
 }
@@ -67,6 +73,8 @@ impl Default for NodeConfig {
             relay_max_circuits: 1024,
             relay_max_reservations: 512,
             relay_egress_bps: 0,
+            admission_rate: 0.0,
+            admission_burst: 32.0,
             label: String::new(),
         }
     }
@@ -123,6 +131,12 @@ impl NodeConfig {
         }
         if let Some(v) = get("relay_egress_bps").and_then(|v| v.as_int()) {
             c.relay_egress_bps = v.max(0) as u64;
+        }
+        if let Some(v) = get("admission_rate").and_then(|v| v.as_float()) {
+            c.admission_rate = v.max(0.0);
+        }
+        if let Some(v) = get("admission_burst").and_then(|v| v.as_float()) {
+            c.admission_burst = v.max(1.0);
         }
         if let Some(v) = get("label").and_then(|v| v.as_str()) {
             c.label = v.to_string();

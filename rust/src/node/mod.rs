@@ -222,13 +222,30 @@ impl LatticaNode {
     /// dispatched inline in the node pump, replacing ad-hoc
     /// `RpcEvent::Request` match arms. Safe to call from inside a running
     /// handler (the registration is merged after dispatch returns).
-    pub fn register_service(&mut self, svc: Service) {
+    ///
+    /// The service's admission policy (see [`Service::with_admission`]) —
+    /// or the node-wide default from `NodeConfig::admission_rate` when
+    /// the service has none — is installed into the RPC layer so shed
+    /// requests are refused before payload decode.
+    pub fn register_service(&mut self, mut svc: Service) {
+        if let Some(p) = svc.take_admission() {
+            self.rpc.admission.set_policy(svc.name(), p);
+        } else if self.cfg.admission_rate > 0.0 {
+            self.rpc.admission.set_policy(
+                svc.name(),
+                crate::rpc::AdmissionPolicy::rate(self.cfg.admission_rate, self.cfg.admission_burst),
+            );
+        }
         self.router.get_or_insert_with(ServiceRouter::new).register(svc);
     }
 
-    /// Counters of the service router (zeroes when none is registered).
+    /// Counters of the service router (zeroes when none is registered),
+    /// overlaid with the RPC layer's pre-decode shed count so operators
+    /// read sheds alongside the dispatch counters.
     pub fn router_stats(&self) -> crate::metrics::RouterStats {
-        self.router.as_ref().map(|r| r.stats).unwrap_or_default()
+        let mut s = self.router.as_ref().map(|r| r.stats).unwrap_or_default();
+        s.shed_predecode = self.rpc.admission.stats.shed_predecode;
+        s
     }
 
     pub fn drain_events(&mut self) -> Vec<NodeEvent> {
@@ -553,6 +570,22 @@ impl LatticaNode {
             if let Some(e) = e {
                 self.events.push_back(NodeEvent::Rpc(e));
             }
+        }
+        // Replies dropped without being sent (handler bug, shed queue
+        // entry, abandoned deferral) answer `Unavailable` now, so the
+        // caller fails over immediately instead of burning its whole
+        // deadline waiting on a response that will never come.
+        for h in self.rpc.take_orphaned() {
+            self.rpc.replies_dropped += 1;
+            let LatticaNode { swarm, rpc, .. } = self;
+            let mut ctx = Ctx::new(swarm, net);
+            let _ = rpc.respond_detail(
+                &mut ctx,
+                h,
+                crate::rpc::Status::Unavailable,
+                crate::util::buf::Buf::new(),
+                "reply dropped",
+            );
         }
         while let Some(e) = self.rendezvous.poll_event() {
             self.events.push_back(NodeEvent::Rendezvous(e));

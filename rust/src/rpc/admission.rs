@@ -1,0 +1,267 @@
+//! Token-bucket admission control for the unary RPC plane.
+//!
+//! A service driven past capacity must shed load *cheaply* — before the
+//! payload is decoded and long before a handler runs — or the work of
+//! rejecting requests itself becomes the bottleneck (the metastable-
+//! failure amplifier the overload scenario reproduces). The RPC layer
+//! consults [`Admission::check`] from the request header alone: a
+//! service-wide token bucket bounds sustained intake, an optional
+//! per-peer bucket stops one hot client from draining the shared bucket,
+//! and a rejected request is answered [`Status::Overloaded`] with a
+//! `retry_after_ns` hint derived from the bucket's refill rate (or
+//! pinned by the policy), so well-behaved stubs back off instead of
+//! retrying into the saturation.
+//!
+//! [`Status::Overloaded`]: crate::rpc::Status::Overloaded
+
+use crate::identity::PeerId;
+use crate::netsim::{Time, SECOND};
+use std::collections::HashMap;
+
+/// Cap on the derived retry-after hint (a near-zero refill rate would
+/// otherwise tell clients to go away for hours).
+const MAX_RETRY_AFTER: Time = 30 * SECOND;
+/// Evict idle per-peer buckets past this population.
+const MAX_PEER_BUCKETS: usize = 8192;
+/// A peer bucket untouched for this long is idle and reclaimable.
+const PEER_BUCKET_IDLE: Time = 10 * SECOND;
+
+/// Admission policy for one service.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionPolicy {
+    /// Sustained admission rate for the whole service, requests/second.
+    pub rate: f64,
+    /// Bucket depth in requests (burst allowance above the sustained
+    /// rate; also the bucket's initial fill).
+    pub burst: f64,
+    /// Optional per-peer rate cap (requests/second); 0 disables the
+    /// per-peer buckets.
+    pub peer_rate: f64,
+    /// Per-peer bucket depth.
+    pub peer_burst: f64,
+    /// Fixed pushback hint attached to `Overloaded` responses. 0 derives
+    /// the hint from the bucket: the time until one token accrues.
+    pub retry_after: Time,
+}
+
+impl AdmissionPolicy {
+    /// Service-wide bucket only.
+    pub fn rate(rate: f64, burst: f64) -> AdmissionPolicy {
+        AdmissionPolicy {
+            rate,
+            burst,
+            peer_rate: 0.0,
+            peer_burst: 0.0,
+            retry_after: 0,
+        }
+    }
+
+    /// Add a per-peer cap on top of the service-wide bucket.
+    pub fn with_peer_rate(mut self, rate: f64, burst: f64) -> AdmissionPolicy {
+        self.peer_rate = rate;
+        self.peer_burst = burst;
+        self
+    }
+
+    /// Pin the pushback hint instead of deriving it from the refill rate.
+    pub fn with_retry_after(mut self, t: Time) -> AdmissionPolicy {
+        self.retry_after = t;
+        self
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct TokenBucket {
+    tokens: f64,
+    last: Time,
+}
+
+impl TokenBucket {
+    fn full(now: Time, burst: f64) -> TokenBucket {
+        TokenBucket { tokens: burst, last: now }
+    }
+
+    /// Take one token, or report how long until one accrues.
+    fn try_take(&mut self, now: Time, rate: f64, burst: f64) -> Result<(), Time> {
+        let dt = now.saturating_sub(self.last) as f64 / SECOND as f64;
+        self.last = now;
+        self.tokens = (self.tokens + dt * rate).min(burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            return Ok(());
+        }
+        if rate <= 0.0 {
+            return Err(MAX_RETRY_AFTER);
+        }
+        let wait = ((1.0 - self.tokens) / rate) * SECOND as f64;
+        Err((wait as Time).min(MAX_RETRY_AFTER).max(1))
+    }
+
+    fn refund(&mut self, burst: f64) {
+        self.tokens = (self.tokens + 1.0).min(burst);
+    }
+}
+
+/// Admission verdict for one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admit {
+    Ok,
+    /// Reject with `Status::Overloaded`; the hint rides the wire as
+    /// `retry_after_ns`.
+    Shed { retry_after: Time },
+}
+
+/// Counters; surfaced through [`RouterStats::shed_predecode`] so
+/// operators read sheds alongside the dispatch counters.
+///
+/// [`RouterStats::shed_predecode`]: crate::metrics::RouterStats::shed_predecode
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdmissionStats {
+    /// Requests admitted through a configured policy.
+    pub admitted: u64,
+    /// Requests rejected before payload decode.
+    pub shed_predecode: u64,
+}
+
+/// Per-node admission state: one policy + bucket pair per service.
+#[derive(Default)]
+pub struct Admission {
+    policies: HashMap<String, AdmissionPolicy>,
+    service_buckets: HashMap<String, TokenBucket>,
+    peer_buckets: HashMap<(String, PeerId), TokenBucket>,
+    pub stats: AdmissionStats,
+}
+
+impl Admission {
+    pub fn set_policy(&mut self, service: &str, p: AdmissionPolicy) {
+        self.policies.insert(service.to_string(), p);
+        self.service_buckets.remove(service);
+    }
+
+    pub fn clear_policy(&mut self, service: &str) {
+        self.policies.remove(service);
+        self.service_buckets.remove(service);
+        self.peer_buckets.retain(|(s, _), _| s != service);
+    }
+
+    pub fn has_policy(&self, service: &str) -> bool {
+        self.policies.contains_key(service)
+    }
+
+    /// Decide from the request header whether `peer`'s request for
+    /// `service` gets in. Services without a policy always admit (and
+    /// are not counted — admission is opt-in per service).
+    pub fn check(&mut self, now: Time, service: &str, peer: &PeerId) -> Admit {
+        if self.policies.is_empty() {
+            return Admit::Ok;
+        }
+        let Some(p) = self.policies.get(service).copied() else {
+            return Admit::Ok;
+        };
+        let bucket = self
+            .service_buckets
+            .entry(service.to_string())
+            .or_insert_with(|| TokenBucket::full(now, p.burst));
+        if let Err(wait) = bucket.try_take(now, p.rate, p.burst) {
+            self.stats.shed_predecode += 1;
+            let retry_after = if p.retry_after > 0 { p.retry_after } else { wait };
+            return Admit::Shed { retry_after };
+        }
+        if p.peer_rate > 0.0 {
+            let pb = self
+                .peer_buckets
+                .entry((service.to_string(), *peer))
+                .or_insert_with(|| TokenBucket::full(now, p.peer_burst));
+            if let Err(wait) = pb.try_take(now, p.peer_rate, p.peer_burst) {
+                // Hand the service-wide token back: the request never got in.
+                if let Some(b) = self.service_buckets.get_mut(service) {
+                    b.refund(p.burst);
+                }
+                self.stats.shed_predecode += 1;
+                let retry_after = if p.retry_after > 0 { p.retry_after } else { wait };
+                return Admit::Shed { retry_after };
+            }
+            if self.peer_buckets.len() > MAX_PEER_BUCKETS {
+                self.peer_buckets
+                    .retain(|_, b| now.saturating_sub(b.last) < PEER_BUCKET_IDLE);
+            }
+        }
+        self.stats.admitted += 1;
+        Admit::Ok
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::MILLI;
+
+    fn peer(n: u8) -> PeerId {
+        PeerId([n; 32])
+    }
+
+    #[test]
+    fn bucket_admits_burst_then_sheds() {
+        let mut a = Admission::default();
+        a.set_policy("shard", AdmissionPolicy::rate(100.0, 4.0));
+        let now = SECOND;
+        for _ in 0..4 {
+            assert_eq!(a.check(now, "shard", &peer(1)), Admit::Ok);
+        }
+        let Admit::Shed { retry_after } = a.check(now, "shard", &peer(1)) else {
+            panic!("5th request within the same instant must shed");
+        };
+        // One token accrues in 10ms at 100 req/s.
+        assert_eq!(retry_after, 10 * MILLI);
+        assert_eq!(a.stats.admitted, 4);
+        assert_eq!(a.stats.shed_predecode, 1);
+    }
+
+    #[test]
+    fn bucket_refills_over_time() {
+        let mut a = Admission::default();
+        a.set_policy("shard", AdmissionPolicy::rate(10.0, 1.0));
+        assert_eq!(a.check(SECOND, "shard", &peer(1)), Admit::Ok);
+        assert!(matches!(a.check(SECOND, "shard", &peer(1)), Admit::Shed { .. }));
+        // 100ms later one token has accrued.
+        assert_eq!(a.check(SECOND + 100 * MILLI, "shard", &peer(1)), Admit::Ok);
+    }
+
+    #[test]
+    fn pinned_retry_after_overrides_derived_hint() {
+        let mut a = Admission::default();
+        a.set_policy(
+            "shard",
+            AdmissionPolicy::rate(0.0, 0.0).with_retry_after(2 * SECOND),
+        );
+        let Admit::Shed { retry_after } = a.check(SECOND, "shard", &peer(1)) else {
+            panic!("rate 0 sheds everything");
+        };
+        assert_eq!(retry_after, 2 * SECOND);
+    }
+
+    #[test]
+    fn per_peer_cap_protects_other_peers() {
+        let mut a = Admission::default();
+        a.set_policy(
+            "shard",
+            AdmissionPolicy::rate(1000.0, 1000.0).with_peer_rate(10.0, 2.0),
+        );
+        let now = SECOND;
+        // The hot peer exhausts its own bucket, not the shared one.
+        assert_eq!(a.check(now, "shard", &peer(1)), Admit::Ok);
+        assert_eq!(a.check(now, "shard", &peer(1)), Admit::Ok);
+        assert!(matches!(a.check(now, "shard", &peer(1)), Admit::Shed { .. }));
+        // A quiet peer still gets in at the same instant.
+        assert_eq!(a.check(now, "shard", &peer(2)), Admit::Ok);
+    }
+
+    #[test]
+    fn services_without_policy_always_admit() {
+        let mut a = Admission::default();
+        assert_eq!(a.check(SECOND, "anything", &peer(1)), Admit::Ok);
+        a.set_policy("shard", AdmissionPolicy::rate(0.0, 0.0));
+        assert_eq!(a.check(SECOND, "other", &peer(1)), Admit::Ok);
+        assert_eq!(a.stats.admitted, 0, "unpolicied services are not counted");
+    }
+}

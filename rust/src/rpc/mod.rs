@@ -16,9 +16,13 @@
 //! idempotent retries, hedging and multi-target failover on top of the
 //! raw unary plane.
 
+pub mod admission;
+pub mod queue;
 pub mod service;
 pub mod stub;
 
+pub use admission::{Admission, AdmissionPolicy, AdmissionStats, Admit};
+pub use queue::{Queued, QueueStats, ServiceQueue};
 pub use service::{Outcome, Reply, RequestCtx, Service, ServiceRouter, StreamHandler};
 pub use stub::{CallOptions, HedgePolicy, RetryPolicy, Stub, StubDone};
 
@@ -29,8 +33,10 @@ use crate::transport::TrafficClass;
 use crate::util::buf::Buf;
 use crate::wire::{encode_pooled, Message, PbReader, PbWriter};
 use anyhow::Result;
+use std::cell::RefCell;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::rc::Rc;
 
 pub const RPC_PROTO: &str = "/lattica/rpc/1";
 pub const RPC_STREAM_PROTO: &str = "/lattica/rpc-stream/1";
@@ -56,6 +62,13 @@ pub enum Status {
     NotFound = 1,
     Error = 2,
     Unavailable = 3,
+    /// The server deliberately shed this request (admission control or
+    /// queue overflow). Unlike `Unavailable`, retrying the same target
+    /// in place is counterproductive: stubs fail over to another replica
+    /// and floor any wait at the response's `retry_after_ns` hint.
+    /// Legacy peers decode this as `Error` (unknown → `Error`), which is
+    /// also non-retryable — degraded but safe.
+    Overloaded = 4,
 }
 
 impl Status {
@@ -64,6 +77,7 @@ impl Status {
             0 => Status::Ok,
             1 => Status::NotFound,
             3 => Status::Unavailable,
+            4 => Status::Overloaded,
             _ => Status::Error,
         }
     }
@@ -90,6 +104,11 @@ pub struct RpcMsg {
     /// RESPONSE with non-Ok status: human-readable failure detail, so
     /// errors surface with context instead of a bare status code.
     pub error_detail: String,
+    /// RESPONSE with `Overloaded` status: server pushback hint — how
+    /// long (ns) the caller should wait before offering this service
+    /// more load. 0 = no hint (and the field is skipped on the wire, so
+    /// legacy encodings stay byte-identical).
+    pub retry_after_ns: u64,
 }
 
 impl Message for RpcMsg {
@@ -100,10 +119,12 @@ impl Message for RpcMsg {
         w.bytes(4, &self.payload);
         w.uint(5, self.status);
         w.uint(6, self.seq);
-        // Fields 7/8 are skipped when default, so pre-deadline peers see
-        // byte-identical encodings for messages that don't use them.
+        // Fields 7/8/9 are skipped when default, so peers predating each
+        // field see byte-identical encodings for messages that don't use
+        // them.
         w.uint(7, self.deadline_ns);
         w.string(8, &self.error_detail);
+        w.uint(9, self.retry_after_ns);
     }
 
     fn decode(buf: &[u8]) -> Result<RpcMsg> {
@@ -147,6 +168,7 @@ fn decode_common_field(m: &mut RpcMsg, number: u32, f: &crate::wire::pb::Field<'
         6 => m.seq = f.as_u64(),
         7 => m.deadline_ns = f.as_u64(),
         8 => m.error_detail = f.as_string()?,
+        9 => m.retry_after_ns = f.as_u64(),
         _ => {}
     }
     Ok(())
@@ -206,6 +228,8 @@ pub enum RpcEvent {
         detail: String,
         /// Round-trip time of this call.
         rtt: Time,
+        /// Server pushback hint on `Overloaded` responses (0 = none).
+        retry_after: Time,
     },
     /// Client side: call failed locally (timeout / disconnect).
     CallFailed { call_id: u64, reason: String },
@@ -245,6 +269,32 @@ struct StreamState {
     ended: bool,
 }
 
+/// Header-only decode of an inbound unary frame: every field *except*
+/// the payload. The payload's byte range is recorded but not sliced, so
+/// admission control can reject a request without the payload ever being
+/// materialized (the "shed before decode" fast path — the rejected
+/// request costs one header parse, not a payload decode plus a handler).
+fn peek_unary(buf: &Buf) -> Result<(RpcMsg, Option<(usize, usize)>)> {
+    let mut m = RpcMsg::default();
+    let mut payload = None;
+    PbReader::new(buf.as_slice()).for_each(|f| {
+        match f.number {
+            4 => {
+                f.as_bytes()?; // wire-type check only
+                payload = Some((f.data_start, f.data.len()));
+            }
+            other => decode_common_field(&mut m, other, &f)?,
+        }
+        Ok(())
+    })?;
+    Ok((m, payload))
+}
+
+/// Shared queue of deferred [`ReplyHandle`]s whose [`service::Reply`] was
+/// dropped without responding; the node pump drains it and answers
+/// `Unavailable("reply dropped")` so callers fail over immediately.
+pub(crate) type OrphanQueue = Rc<RefCell<Vec<ReplyHandle>>>;
+
 /// Per-node RPC state.
 pub struct RpcNode {
     /// (conn, stream) → pending unary call.
@@ -259,12 +309,25 @@ pub struct RpcNode {
     next_call_id: u64,
     streams: HashMap<StreamHandle, StreamState>,
     events: VecDeque<RpcEvent>,
+    /// Token-bucket admission control consulted from the request header,
+    /// before the payload is touched (see [`admission`]).
+    pub admission: Admission,
+    /// Deferred replies dropped without a response (see [`OrphanQueue`]).
+    orphans: OrphanQueue,
     /// Counters for metrics.
     pub calls_sent: u64,
     pub calls_served: u64,
     /// Inbound requests dropped because their wire deadline had already
     /// passed on arrival (no handler was invoked for them).
     pub expired_dropped: u64,
+    /// Inbound requests whose payload was actually materialized (i.e.
+    /// that survived the pre-decode admission check). Together with
+    /// [`AdmissionStats::shed_predecode`] this pins that rejection skips
+    /// payload decode.
+    pub requests_decoded: u64,
+    /// Deferred replies that were dropped without responding and
+    /// answered `Unavailable` by the pump on the handler's behalf.
+    pub replies_dropped: u64,
 }
 
 impl Default for RpcNode {
@@ -282,10 +345,25 @@ impl RpcNode {
             next_call_id: 1,
             streams: HashMap::new(),
             events: VecDeque::new(),
+            admission: Admission::default(),
+            orphans: Rc::new(RefCell::new(Vec::new())),
             calls_sent: 0,
             calls_served: 0,
             expired_dropped: 0,
+            requests_decoded: 0,
+            replies_dropped: 0,
         }
+    }
+
+    /// Shared handle to the orphaned-reply queue (cloned into every
+    /// [`service::Reply`] so its `Drop` can report back).
+    pub(crate) fn orphan_queue(&self) -> OrphanQueue {
+        self.orphans.clone()
+    }
+
+    /// Drain reply handles whose `Reply` was dropped without responding.
+    pub(crate) fn take_orphaned(&mut self) -> Vec<ReplyHandle> {
+        std::mem::take(&mut *self.orphans.borrow_mut())
     }
 
     pub fn poll_event(&mut self) -> Option<RpcEvent> {
@@ -397,6 +475,27 @@ impl RpcNode {
         Ok(())
     }
 
+    /// Refuse a request with [`Status::Overloaded`] plus a retry-after
+    /// hint (server pushback). Not counted as served: no handler ran.
+    pub fn respond_pushback(
+        &mut self,
+        ctx: &mut Ctx,
+        reply: ReplyHandle,
+        retry_after: Time,
+        detail: &str,
+    ) -> Result<()> {
+        let msg = RpcMsg {
+            kind: M_RESPONSE,
+            status: Status::Overloaded as u64,
+            error_detail: detail.to_string(),
+            retry_after_ns: retry_after,
+            ..Default::default()
+        };
+        send_rpc_msg(ctx, reply.conn, reply.stream, &msg)?;
+        ctx.finish(reply.conn, reply.stream);
+        Ok(())
+    }
+
     // ------------------------------------------------------------------
     // Streaming plane
     // ------------------------------------------------------------------
@@ -493,8 +592,10 @@ impl RpcNode {
     // Node hooks
     // ------------------------------------------------------------------
 
-    /// Inbound message on an `/lattica/rpc/1` stream. The payload is sliced
-    /// zero-copy out of `msg`.
+    /// Inbound message on an `/lattica/rpc/1` stream. Decoded header
+    /// first: an expired or admission-rejected request is disposed of
+    /// without its payload ever being sliced out of `msg`; for admitted
+    /// traffic the payload is then materialized zero-copy.
     pub fn handle_unary_msg(
         &mut self,
         ctx: &mut Ctx,
@@ -503,7 +604,11 @@ impl RpcNode {
         stream: u64,
         msg: &Buf,
     ) -> Result<()> {
-        let m = RpcMsg::decode_buf(msg)?;
+        let (m, payload_range) = peek_unary(msg)?;
+        let slice_payload = |range: Option<(usize, usize)>| match range {
+            Some((start, len)) => msg.slice(start..start + len),
+            None => Buf::default(),
+        };
         match m.kind {
             M_REQUEST => {
                 let now = ctx.now();
@@ -522,11 +627,23 @@ impl RpcNode {
                     ctx.reset(conn, stream, "deadline expired");
                     return Ok(());
                 }
+                // Admission control, still header-only: an overloaded
+                // service answers from here — no payload decode, no
+                // router dispatch, no handler.
+                if let Admit::Shed { retry_after } = self.admission.check(now, &m.service, &peer) {
+                    return self.respond_pushback(
+                        ctx,
+                        ReplyHandle { conn, stream },
+                        retry_after,
+                        &format!("service {:?} overloaded", m.service),
+                    );
+                }
+                self.requests_decoded += 1;
                 self.events.push_back(RpcEvent::Request {
                     peer,
                     service: m.service,
                     method: m.method,
-                    payload: m.payload,
+                    payload: slice_payload(payload_range),
                     deadline,
                     reply: ReplyHandle { conn, stream },
                 });
@@ -537,9 +654,10 @@ impl RpcNode {
                     self.events.push_back(RpcEvent::Response {
                         call_id: call.call_id,
                         status: Status::from_u64(m.status),
-                        payload: m.payload,
+                        payload: slice_payload(payload_range),
                         detail: m.error_detail,
                         rtt: ctx.now().saturating_sub(call.sent_at),
+                        retry_after: m.retry_after_ns,
                     });
                 }
             }
@@ -705,6 +823,7 @@ mod tests {
             seq: 9,
             deadline_ns: 123_456_789,
             error_detail: "shard 2 unavailable".into(),
+            retry_after_ns: 250_000_000,
         };
         assert_eq!(RpcMsg::decode(&m.encode()).unwrap(), m);
     }
@@ -725,6 +844,7 @@ mod tests {
         assert_eq!(m.service, "inference");
         assert_eq!(m.deadline_ns, 0, "missing field 7 must default to 0");
         assert!(m.error_detail.is_empty());
+        assert_eq!(m.retry_after_ns, 0, "missing field 9 must default to 0");
         // And the reverse: a message that doesn't use the new fields
         // encodes byte-identically to the legacy form.
         let modern = RpcMsg {
@@ -736,6 +856,54 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(modern.encode(), legacy);
+    }
+
+    #[test]
+    fn pushback_frame_roundtrips_and_pins_field_nine() {
+        // An Overloaded response carries the hint in field 9; a
+        // handcrafted writer producing the same fields must be
+        // byte-identical (pins the wire format).
+        let resp = RpcMsg {
+            kind: M_RESPONSE,
+            status: Status::Overloaded as u64,
+            error_detail: "service \"shard\" overloaded".into(),
+            retry_after_ns: 250_000_000,
+            ..Default::default()
+        };
+        let mut w = PbWriter::new();
+        w.uint(1, M_RESPONSE);
+        w.uint(5, 4);
+        w.string(8, "service \"shard\" overloaded");
+        w.uint(9, 250_000_000);
+        assert_eq!(resp.encode(), w.finish());
+        let d = RpcMsg::decode(&resp.encode()).unwrap();
+        assert_eq!(Status::from_u64(d.status), Status::Overloaded);
+        assert_eq!(d.retry_after_ns, 250_000_000);
+    }
+
+    #[test]
+    fn peek_unary_reads_header_without_materializing_payload() {
+        let m = RpcMsg {
+            kind: M_REQUEST,
+            service: "shard".into(),
+            method: "forward".into(),
+            payload: vec![0x5Au8; 2048].into(),
+            deadline_ns: 77,
+            ..Default::default()
+        };
+        let wire = m.encode_buf();
+        let (h, range) = peek_unary(&wire).unwrap();
+        assert_eq!(h.service, "shard");
+        assert_eq!(h.method, "forward");
+        assert_eq!(h.deadline_ns, 77);
+        assert!(h.payload.is_empty(), "peek leaves the payload untouched");
+        assert_eq!(
+            wire.ref_count(),
+            1,
+            "no payload slice was taken from the wire buffer"
+        );
+        let (start, len) = range.unwrap();
+        assert_eq!(wire.slice(start..start + len).as_slice(), &[0x5Au8; 2048][..]);
     }
 
     #[test]
@@ -756,6 +924,7 @@ mod tests {
         assert_eq!(Status::from_u64(0), Status::Ok);
         assert_eq!(Status::from_u64(1), Status::NotFound);
         assert_eq!(Status::from_u64(3), Status::Unavailable);
+        assert_eq!(Status::from_u64(4), Status::Overloaded);
         assert_eq!(Status::from_u64(99), Status::Error);
     }
 }

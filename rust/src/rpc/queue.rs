@@ -1,0 +1,355 @@
+//! Server-side request queue: weighted fair queueing across peers plus
+//! deadline-aware shedding.
+//!
+//! Admission control (see [`admission`]) bounds how much work gets *in*;
+//! this queue decides what happens to admitted work while the service's
+//! workers are busy. Two policies compose:
+//!
+//! * **WFQ across peers** — each peer gets its own lane and a
+//!   deficit-round-robin share proportional to its weight, so a client
+//!   offering 10× the load of its neighbours still gets only its fair
+//!   share of service slots (the excess queues in — and is shed from —
+//!   its own lane). This layers *above* the transport's strict-priority
+//!   [`TrafficClass`] scheduler: the transport decides whose bytes move,
+//!   this queue decides whose requests run.
+//! * **Oldest-useless-first drop** — the queue tracks an EWMA of the
+//!   service's handle time; an entry whose remaining budget cannot cover
+//!   it can no longer be answered in time, so it is shed first (at push
+//!   when over capacity, and lazily at pop), before any fresh request is
+//!   touched. Serving stale work is how overload goes metastable: every
+//!   timed-out response was paid for in full and earns a retry.
+//!
+//! [`admission`]: crate::rpc::admission
+//! [`TrafficClass`]: crate::transport::TrafficClass
+
+use crate::identity::PeerId;
+use crate::netsim::Time;
+use std::collections::{BTreeMap, VecDeque};
+
+/// EWMA gain 1/8, TCP-SRTT style: new = 7/8·old + 1/8·sample.
+const EWMA_SHIFT: u32 = 3;
+
+/// One queued request plus the metadata the drop policy needs.
+#[derive(Debug)]
+pub struct Queued<T> {
+    pub item: T,
+    pub peer: PeerId,
+    /// Absolute deadline propagated from the wire.
+    pub deadline: Time,
+    pub enqueued_at: Time,
+}
+
+#[derive(Debug)]
+struct PeerLane<T> {
+    queue: VecDeque<Queued<T>>,
+    weight: u32,
+    /// Deficit-round-robin credit left in the current round.
+    deficit: u32,
+    in_order: bool,
+}
+
+impl<T> PeerLane<T> {
+    fn new(weight: u32) -> PeerLane<T> {
+        PeerLane {
+            queue: VecDeque::new(),
+            weight,
+            deficit: 0,
+            in_order: false,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    pub pushed: u64,
+    /// Entries handed to a worker.
+    pub served: u64,
+    /// Entries shed because their remaining budget could not cover the
+    /// EWMA handle time (oldest-useless-first).
+    pub shed_stale: u64,
+    /// Entries shed because the queue was full and nothing was stale —
+    /// taken from the longest lane, i.e. the peer over its fair share.
+    pub shed_capacity: u64,
+}
+
+/// Bounded multi-lane queue; see module docs. Lanes are keyed by peer in
+/// a `BTreeMap` so every tie-break is deterministic under the simulator.
+#[derive(Debug)]
+pub struct ServiceQueue<T> {
+    lanes: BTreeMap<PeerId, PeerLane<T>>,
+    /// Active-lane rotation for deficit round robin.
+    order: VecDeque<PeerId>,
+    len: usize,
+    capacity: usize,
+    ewma_handle: Time,
+    pub stats: QueueStats,
+}
+
+impl<T> ServiceQueue<T> {
+    /// `capacity` bounds total queued entries; `initial_handle_time`
+    /// seeds the EWMA before the first sample (pick the service's
+    /// expected per-request cost; 0 disables staleness shedding until a
+    /// sample arrives).
+    pub fn new(capacity: usize, initial_handle_time: Time) -> ServiceQueue<T> {
+        ServiceQueue {
+            lanes: BTreeMap::new(),
+            order: VecDeque::new(),
+            len: 0,
+            capacity: capacity.max(1),
+            ewma_handle: initial_handle_time,
+            stats: QueueStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Current handle-time estimate (ns).
+    pub fn ewma_handle(&self) -> Time {
+        self.ewma_handle
+    }
+
+    /// Fold a measured handle time into the EWMA.
+    pub fn note_handle_time(&mut self, sample: Time) {
+        if self.ewma_handle == 0 {
+            self.ewma_handle = sample;
+        } else {
+            self.ewma_handle =
+                self.ewma_handle - (self.ewma_handle >> EWMA_SHIFT) + (sample >> EWMA_SHIFT);
+        }
+    }
+
+    /// WFQ weight for a peer (default 1; higher = larger share).
+    pub fn set_weight(&mut self, peer: PeerId, weight: u32) {
+        self.lanes
+            .entry(peer)
+            .or_insert_with(|| PeerLane::new(1))
+            .weight = weight.max(1);
+    }
+
+    /// Enqueue; returns the entries shed to stay within capacity (answer
+    /// them `Overloaded` — silently dropping a deferred reply would leave
+    /// its caller waiting). The entry just pushed may itself be among
+    /// the shed ones.
+    pub fn push(&mut self, now: Time, peer: PeerId, deadline: Time, item: T) -> Vec<Queued<T>> {
+        let lane = self.lanes.entry(peer).or_insert_with(|| PeerLane::new(1));
+        lane.queue.push_back(Queued {
+            item,
+            peer,
+            deadline,
+            enqueued_at: now,
+        });
+        if !lane.in_order {
+            lane.in_order = true;
+            self.order.push_back(peer);
+        }
+        self.len += 1;
+        self.stats.pushed += 1;
+        let mut shed = Vec::new();
+        while self.len > self.capacity {
+            match self.shed_one(now) {
+                Some(q) => shed.push(q),
+                None => break,
+            }
+        }
+        shed
+    }
+
+    /// Next entry to serve under DRR, plus any entries shed on the way
+    /// because they became useless (remaining budget < EWMA handle time).
+    pub fn pop(&mut self, now: Time) -> (Option<Queued<T>>, Vec<Queued<T>>) {
+        let mut shed = Vec::new();
+        let horizon = now.saturating_add(self.ewma_handle);
+        while let Some(&p) = self.order.front() {
+            let lane = self.lanes.get_mut(&p).expect("lane for ordered peer");
+            // Lazily shed entries that can no longer make their deadline.
+            while lane.queue.front().is_some_and(|q| q.deadline <= horizon) {
+                shed.push(lane.queue.pop_front().unwrap());
+                self.len -= 1;
+                self.stats.shed_stale += 1;
+            }
+            if lane.queue.is_empty() {
+                lane.in_order = false;
+                lane.deficit = 0;
+                self.order.pop_front();
+                continue;
+            }
+            if lane.deficit == 0 {
+                lane.deficit = lane.weight;
+            }
+            let q = lane.queue.pop_front().unwrap();
+            self.len -= 1;
+            lane.deficit -= 1;
+            self.stats.served += 1;
+            // Quantum spent or lane drained: rotate to the next peer.
+            if lane.deficit == 0 || lane.queue.is_empty() {
+                lane.deficit = 0;
+                self.order.pop_front();
+                if self.lanes.get(&p).map_or(false, |l| !l.queue.is_empty()) {
+                    self.order.push_back(p);
+                } else if let Some(l) = self.lanes.get_mut(&p) {
+                    l.in_order = false;
+                }
+            }
+            return (Some(q), shed);
+        }
+        (None, shed)
+    }
+
+    /// Shed one entry: prefer the stalest useless one (earliest deadline
+    /// among lane fronts that can't cover the EWMA handle time); if every
+    /// front is still viable, take from the longest lane — the peer most
+    /// over its share.
+    fn shed_one(&mut self, now: Time) -> Option<Queued<T>> {
+        let horizon = now.saturating_add(self.ewma_handle);
+        let mut stale_pick: Option<(PeerId, Time)> = None;
+        let mut long_pick: Option<(PeerId, usize)> = None;
+        for (p, lane) in &self.lanes {
+            let Some(front) = lane.queue.front() else { continue };
+            if front.deadline <= horizon
+                && stale_pick.map_or(true, |(_, d)| front.deadline < d)
+            {
+                stale_pick = Some((*p, front.deadline));
+            }
+            if long_pick.map_or(true, |(_, l)| lane.queue.len() > l) {
+                long_pick = Some((*p, lane.queue.len()));
+            }
+        }
+        let (peer, stale) = match (stale_pick, long_pick) {
+            (Some((p, _)), _) => (p, true),
+            (None, Some((p, _))) => (p, false),
+            (None, None) => return None,
+        };
+        let lane = self.lanes.get_mut(&peer)?;
+        let q = lane.queue.pop_front()?;
+        self.len -= 1;
+        if stale {
+            self.stats.shed_stale += 1;
+        } else {
+            self.stats.shed_capacity += 1;
+        }
+        // Lane order bookkeeping happens lazily in `pop` (empty lanes are
+        // skipped and retired there).
+        Some(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{MILLI, SECOND};
+
+    fn peer(n: u8) -> PeerId {
+        PeerId([n; 32])
+    }
+
+    #[test]
+    fn drr_splits_service_evenly_under_asymmetric_load() {
+        // Peer 1 offers 10× the load of peer 2 at equal weight; while both
+        // stay backlogged, service alternates — equal goodput.
+        let mut q: ServiceQueue<u32> = ServiceQueue::new(1000, 0);
+        let now = SECOND;
+        let deadline = now + 10 * SECOND;
+        for i in 0..100 {
+            q.push(now, peer(1), deadline, i);
+        }
+        for i in 0..10 {
+            q.push(now, peer(2), deadline, 1000 + i);
+        }
+        let mut served = [0u32; 2];
+        for _ in 0..20 {
+            let (got, shed) = q.pop(now);
+            assert!(shed.is_empty());
+            let got = got.unwrap();
+            served[if got.peer == peer(1) { 0 } else { 1 }] += 1;
+        }
+        assert_eq!(served, [10, 10], "equal weights → equal share while backlogged");
+        // Once the light peer drains, the heavy one gets the leftovers.
+        let mut rest = 0;
+        while let (Some(got), _) = q.pop(now) {
+            assert_eq!(got.peer, peer(1));
+            rest += 1;
+        }
+        assert_eq!(rest, 90);
+    }
+
+    #[test]
+    fn weights_skew_the_split() {
+        let mut q: ServiceQueue<u32> = ServiceQueue::new(1000, 0);
+        q.set_weight(peer(1), 3);
+        let now = SECOND;
+        let deadline = now + 10 * SECOND;
+        for i in 0..40 {
+            q.push(now, peer(1), deadline, i);
+            q.push(now, peer(2), deadline, 100 + i);
+        }
+        let mut served = [0u32; 2];
+        for _ in 0..40 {
+            let (got, _) = q.pop(now);
+            served[if got.unwrap().peer == peer(1) { 0 } else { 1 }] += 1;
+        }
+        assert_eq!(served, [30, 10], "3:1 weights → 3:1 service");
+    }
+
+    #[test]
+    fn overflow_sheds_stalest_useless_entry_first() {
+        let mut q: ServiceQueue<u32> = ServiceQueue::new(3, 100 * MILLI);
+        let now = SECOND;
+        // Entry 0 has 50ms of budget left — under the 100ms EWMA it can
+        // no longer be answered in time. Entries 1/2 are fresh.
+        q.push(now, peer(1), now + 50 * MILLI, 0);
+        q.push(now, peer(2), now + SECOND, 1);
+        q.push(now, peer(3), now + SECOND, 2);
+        let shed = q.push(now, peer(4), now + SECOND, 3);
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].item, 0, "the useless entry goes first, not the newest");
+        assert_eq!(q.stats.shed_stale, 1);
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn overflow_without_stale_entries_sheds_from_longest_lane() {
+        let mut q: ServiceQueue<u32> = ServiceQueue::new(4, 0);
+        let now = SECOND;
+        let deadline = now + 10 * SECOND;
+        q.push(now, peer(1), deadline, 0);
+        q.push(now, peer(1), deadline, 1);
+        q.push(now, peer(1), deadline, 2);
+        q.push(now, peer(2), deadline, 10);
+        let shed = q.push(now, peer(2), deadline, 11);
+        assert_eq!(shed.len(), 1);
+        assert_eq!(
+            shed[0].peer,
+            peer(1),
+            "the hog's lane pays for the overflow, not the fair peer"
+        );
+        assert_eq!(q.stats.shed_capacity, 1);
+    }
+
+    #[test]
+    fn pop_sheds_entries_that_went_stale_while_queued() {
+        let mut q: ServiceQueue<u32> = ServiceQueue::new(10, 100 * MILLI);
+        let t0 = SECOND;
+        q.push(t0, peer(1), t0 + 150 * MILLI, 0);
+        q.push(t0, peer(1), t0 + 10 * SECOND, 1);
+        // 100ms later entry 0 has 50ms of budget — below the EWMA.
+        let (got, shed) = q.pop(t0 + 100 * MILLI);
+        assert_eq!(got.unwrap().item, 1, "fresh entry served");
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].item, 0, "stale entry shed, not served");
+    }
+
+    #[test]
+    fn ewma_tracks_handle_time() {
+        let mut q: ServiceQueue<u32> = ServiceQueue::new(10, 0);
+        q.note_handle_time(8 * MILLI);
+        assert_eq!(q.ewma_handle(), 8 * MILLI, "first sample seeds the EWMA");
+        q.note_handle_time(16 * MILLI);
+        assert_eq!(q.ewma_handle(), 9 * MILLI, "7/8·8ms + 1/8·16ms");
+    }
+}

@@ -28,7 +28,7 @@ use crate::metrics::RouterStats;
 use crate::netsim::{Net, Time};
 use crate::node::LatticaNode;
 use crate::protocols::Ctx;
-use crate::rpc::{ReplyHandle, RpcEvent, Status, StreamHandle};
+use crate::rpc::{AdmissionPolicy, OrphanQueue, ReplyHandle, RpcEvent, Status, StreamHandle};
 use crate::transport::TrafficClass;
 use crate::util::buf::Buf;
 use anyhow::Result;
@@ -52,6 +52,9 @@ pub struct RequestCtx {
     /// suppresses any inline outcome so the request cannot be answered
     /// twice.
     taken: std::cell::Cell<bool>,
+    /// Where a dropped-without-responding [`Reply`] reports itself (the
+    /// node's RPC layer answers `Unavailable` on its behalf).
+    orphans: OrphanQueue,
 }
 
 impl RequestCtx {
@@ -74,6 +77,8 @@ impl RequestCtx {
         Reply {
             handle: self.reply,
             deadline: self.deadline,
+            orphans: self.orphans.clone(),
+            sent: false,
         }
     }
 
@@ -86,14 +91,20 @@ impl RequestCtx {
 /// Typed reply handle for deferred responses. Consuming methods take
 /// `self` by value, so the handle sends at most one response; taking it
 /// makes the router skip its inline response (see
-/// [`RequestCtx::reply_handle`]). A handler that takes the handle and
-/// then drops it never answers — the caller's deadline bounds the damage.
+/// [`RequestCtx::reply_handle`]). A handle dropped without responding
+/// does *not* leave the caller waiting out its deadline: `Drop` reports
+/// the orphan and the node pump answers `Unavailable("reply dropped")`
+/// on the handler's behalf, so callers fail over immediately.
 #[derive(Debug)]
 pub struct Reply {
     handle: ReplyHandle,
     /// Deadline of the originating request (for budget math when the
     /// response is produced later).
     pub deadline: Time,
+    orphans: OrphanQueue,
+    /// A response went out through this handle (suppresses the orphan
+    /// report on drop).
+    sent: bool,
 }
 
 impl Reply {
@@ -112,16 +123,42 @@ impl Reply {
     }
 
     pub fn send(
-        self,
+        mut self,
         node: &mut LatticaNode,
         net: &mut Net,
         status: Status,
         payload: impl Into<Buf>,
         detail: &str,
     ) -> Result<()> {
+        self.sent = true;
         let LatticaNode { swarm, rpc, .. } = node;
         let mut ctx = Ctx::new(swarm, net);
         rpc.respond_detail(&mut ctx, self.handle, status, payload, detail)
+    }
+
+    /// Refuse with [`Status::Overloaded`] plus a retry-after hint —
+    /// server pushback for work shed *after* admission (queue overflow,
+    /// worker saturation). The caller's stub fails over or backs off
+    /// instead of retrying in place.
+    pub fn overloaded(
+        mut self,
+        node: &mut LatticaNode,
+        net: &mut Net,
+        retry_after: Time,
+        detail: &str,
+    ) -> Result<()> {
+        self.sent = true;
+        let LatticaNode { swarm, rpc, .. } = node;
+        let mut ctx = Ctx::new(swarm, net);
+        rpc.respond_pushback(&mut ctx, self.handle, retry_after, detail)
+    }
+}
+
+impl Drop for Reply {
+    fn drop(&mut self) {
+        if !self.sent {
+            self.orphans.borrow_mut().push(self.handle);
+        }
     }
 }
 
@@ -182,6 +219,7 @@ pub struct Service {
     name: String,
     unary: HashMap<String, UnaryHandler>,
     stream: Option<Box<dyn StreamHandler>>,
+    admission: Option<AdmissionPolicy>,
 }
 
 impl Service {
@@ -190,6 +228,7 @@ impl Service {
             name: name.to_string(),
             unary: HashMap::new(),
             stream: None,
+            admission: None,
         }
     }
 
@@ -207,6 +246,18 @@ impl Service {
     pub fn streaming(mut self, h: impl StreamHandler + 'static) -> Service {
         self.stream = Some(Box::new(h));
         self
+    }
+
+    /// Attach a token-bucket admission policy: requests beyond it are
+    /// answered [`Status::Overloaded`] from the header, before payload
+    /// decode or dispatch (see [`crate::rpc::admission`]).
+    pub fn with_admission(mut self, p: AdmissionPolicy) -> Service {
+        self.admission = Some(p);
+        self
+    }
+
+    pub(crate) fn take_admission(&mut self) -> Option<AdmissionPolicy> {
+        self.admission.take()
     }
 
     pub fn name(&self) -> &str {
@@ -306,6 +357,7 @@ impl ServiceRouter {
                     class: TrafficClass::Unary,
                     reply,
                     taken: std::cell::Cell::new(false),
+                    orphans: node.rpc.orphan_queue(),
                 };
                 let outcome = h(node, net, &rctx, payload);
                 if rctx.reply_taken() {

@@ -29,6 +29,13 @@
 //!   an adaptive delay (p95 of recent RTTs; a configured initial delay
 //!   until enough samples exist). First `Ok` wins; every other in-flight
 //!   attempt is cancelled at the RPC layer;
+//! * `Overloaded` is server pushback, not a transient fault: the target
+//!   is marked shedding until its `retry_after_ns` hint expires, retries
+//!   prefer failing over to a replica that is *not* shedding, any wait
+//!   is floored at the hint, hedging is suppressed while a target
+//!   signals overload, and when every replica is shedding and the hint
+//!   exceeds the remaining budget the op fails fast — retrying into a
+//!   saturated server is the amplifier that makes overload metastable;
 //! * non-retryable failures (`Error`, `NotFound`) and overall-deadline
 //!   expiry finish the op immediately. Deadline expiry surfaces as
 //!   `Unavailable` with a "deadline exceeded" detail.
@@ -217,6 +224,9 @@ struct LatWindow {
 const LAT_WINDOW: usize = 64;
 /// Minimum samples before the p95 estimate is trusted.
 const LAT_MIN_SAMPLES: usize = 8;
+/// Floor applied when an `Overloaded` response carries no
+/// `retry_after_ns` hint: treat the target as shedding for this long.
+const PUSHBACK_FLOOR: Time = 200 * MILLI;
 
 impl LatWindow {
     fn record(&mut self, t: Time) {
@@ -255,6 +265,9 @@ pub struct Stub {
     lat: LatWindow,
     done: VecDeque<StubDone>,
     rng: Rng,
+    /// Per-target pushback state: until when each peer said it is
+    /// shedding (absolute time, from `Overloaded` + `retry_after_ns`).
+    overload_until: HashMap<PeerId, Time>,
     pub stats: StubStats,
 }
 
@@ -283,6 +296,7 @@ impl Stub {
             lat: LatWindow::default(),
             done: VecDeque::new(),
             rng: Rng::new(seed),
+            overload_until: HashMap::new(),
             stats: StubStats::default(),
         }
     }
@@ -356,11 +370,45 @@ impl Stub {
             self.finish(node, net, op, Status::Unavailable, Buf::new(), false);
             return op;
         }
-        if opts.hedge.enabled {
-            state.hedge_at = Some(now + self.hedge_delay(&opts));
+        // Pushback-aware first attempt: keep the sticky target while it
+        // is not shedding; otherwise pick the replica whose retry-after
+        // window clears soonest.
+        let n = self.targets.len();
+        let sticky = state.next_target % n;
+        let (idx, wait) = if !self.target_overloaded(now, sticky) {
+            (sticky, 0)
+        } else {
+            self.best_failover(now, None).unwrap_or((sticky, 0))
+        };
+        state.next_target = idx;
+        if wait == 0 {
+            if opts.hedge.enabled {
+                if self.any_overloaded(now) {
+                    // No speculative load while a replica signals overload.
+                    self.stats.hedges_suppressed += 1;
+                } else {
+                    state.hedge_at = Some(now + self.hedge_delay(&opts));
+                }
+            }
+            self.ops.insert(op, state);
+            self.issue_attempt(node, net, op, false);
+        } else if now + wait >= state.deadline {
+            // Every replica is shedding and the earliest window outlives
+            // the budget: fail fast with zero wire attempts instead of
+            // adding load a server already refused.
+            state.last_status = Status::Overloaded;
+            state.last_detail = "all targets overloaded (pushback)".into();
+            self.ops.insert(op, state);
+            self.finish(node, net, op, Status::Overloaded, Buf::new(), false);
+        } else {
+            // Every replica is shedding but the budget can cover the
+            // wait: defer the first attempt until the window clears.
+            if opts.hedge.enabled {
+                self.stats.hedges_suppressed += 1;
+            }
+            state.retry_at = Some(now + wait);
+            self.ops.insert(op, state);
         }
-        self.ops.insert(op, state);
-        self.issue_attempt(node, net, op, false);
         op
     }
 
@@ -380,6 +428,7 @@ impl Stub {
                 status,
                 payload,
                 detail,
+                retry_after,
                 ..
             } => {
                 let Some(&op) = self.by_call.get(call_id) else {
@@ -407,6 +456,25 @@ impl Stub {
                         }
                         self.lat.record(net.now().saturating_sub(state.started));
                         self.finish(node, net, op, Status::Ok, payload.clone(), hedge);
+                    }
+                    Status::Overloaded => {
+                        // Server pushback: remember until when this
+                        // target said it is shedding, then prefer
+                        // failover over retry-in-place.
+                        self.stats.overloaded += 1;
+                        let hint = if *retry_after > 0 {
+                            *retry_after
+                        } else {
+                            PUSHBACK_FLOOR
+                        };
+                        if let Some(p) = won_target.and_then(|t| self.targets.get(t)).copied() {
+                            let until = net.now() + hint;
+                            let e = self.overload_until.entry(p).or_insert(0);
+                            if *e < until {
+                                *e = until;
+                            }
+                        }
+                        self.note_overload(node, net, op, detail.clone());
                     }
                     Status::Unavailable => {
                         self.note_failure(node, net, op, Status::Unavailable, detail.clone());
@@ -473,6 +541,15 @@ impl Stub {
                 && state.inflight.len() == 1
                 && !state.inflight[0].hedge;
             if hedge_due {
+                if self.any_overloaded(now) {
+                    // Speculative duplicates are pure amplification while
+                    // any replica is shedding: drop the hedge entirely.
+                    if let Some(s) = self.ops.get_mut(&op) {
+                        s.hedge_at = None;
+                    }
+                    self.stats.hedges_suppressed += 1;
+                    continue;
+                }
                 if let Some(s) = self.ops.get_mut(&op) {
                     s.hedge_at = None;
                     // Hedge races a *different* target when one exists.
@@ -546,6 +623,97 @@ impl Stub {
                 self.note_failure(node, net, op, Status::Unavailable, e.to_string());
             }
         }
+    }
+
+    /// Whether `targets[idx]` is inside a pushback window.
+    fn target_overloaded(&self, now: Time, idx: usize) -> bool {
+        self.targets
+            .get(idx)
+            .and_then(|p| self.overload_until.get(p))
+            .is_some_and(|&t| t > now)
+    }
+
+    /// Whether any target is inside a pushback window (hedge gate).
+    fn any_overloaded(&self, now: Time) -> bool {
+        (0..self.targets.len()).any(|i| self.target_overloaded(now, i))
+    }
+
+    /// Target with the shortest remaining pushback wait (0 for a clear
+    /// one); at equal waits, a target different from `exclude` wins.
+    fn best_failover(&self, now: Time, exclude: Option<usize>) -> Option<(usize, Time)> {
+        self.targets
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let wait = self
+                    .overload_until
+                    .get(p)
+                    .map_or(0, |&t| t.saturating_sub(now));
+                (i, wait)
+            })
+            .min_by_key(|&(i, wait)| (wait, Some(i) == exclude, i))
+    }
+
+    fn jittered_backoff(&mut self, retry: RetryPolicy, retries_done: u32) -> Time {
+        let mut backoff = retry
+            .base_backoff
+            .saturating_mul(1u64 << retries_done.min(20))
+            .min(retry.max_backoff.max(retry.base_backoff));
+        if retry.jitter > 0.0 && backoff > 0 {
+            let f = 1.0 - retry.jitter / 2.0 + retry.jitter * self.rng.gen_f64();
+            backoff = (backoff as f64 * f) as Time;
+        }
+        backoff
+    }
+
+    /// React to server pushback. Unlike [`Stub::note_failure`] (retry
+    /// next target after plain backoff), pushback (a) never hedges, (b)
+    /// prefers a replica that is not shedding, (c) floors the wait at
+    /// the server's hint when every replica is shedding, and (d) fails
+    /// fast when that floored wait cannot fit the remaining budget — a
+    /// permanently-shedding target sees at most the one attempt that
+    /// taught us it is shedding.
+    fn note_overload(&mut self, node: &mut LatticaNode, net: &mut Net, op: u64, detail: String) {
+        let now = net.now();
+        let info = {
+            let Some(state) = self.ops.get_mut(&op) else { return };
+            state.last_status = Status::Overloaded;
+            state.last_detail = detail;
+            if state.hedge_at.take().is_some() {
+                self.stats.hedges_suppressed += 1;
+            }
+            if state.inflight.is_empty() {
+                Some((
+                    state.opts.retry,
+                    state.deadline,
+                    state.retries_done,
+                    state.last_target,
+                ))
+            } else {
+                // A racing attempt may still win; just stop hedging.
+                None
+            }
+        };
+        let Some((retry, deadline, retries_done, shed_target)) = info else {
+            return;
+        };
+        let can_retry =
+            retries_done + 1 < retry.max_attempts && now < deadline && !self.targets.is_empty();
+        if can_retry {
+            if let Some((alt, wait)) = self.best_failover(now, shed_target) {
+                let backoff = self.jittered_backoff(retry, retries_done).max(wait);
+                if now + backoff < deadline {
+                    let state = self.ops.get_mut(&op).expect("op checked above");
+                    state.next_target = alt;
+                    state.retry_at = Some(now + backoff);
+                    return;
+                }
+            }
+        }
+        // Out of attempts, or the floored wait outlives the budget:
+        // surface the server's verdict now instead of burning the rest
+        // of the caller's deadline against a shedding service.
+        self.finish(node, net, op, Status::Overloaded, Buf::new(), false);
     }
 
     /// Record a retryable failure; schedule the next attempt on the next

@@ -5,6 +5,7 @@
 //! harness needs.
 
 pub mod nat_mesh;
+pub mod overload;
 pub mod planet;
 
 use crate::identity::PeerId;
@@ -22,6 +23,7 @@ use std::rc::Rc;
 pub use nat_mesh::{
     nat_mesh, FailoverOutcome, NatMeshConfig, NatMeshOutcome, NatPairRow, RelayRow,
 };
+pub use overload::{overload_scenario, OverloadConfig, OverloadOutcome, OverloadRow};
 pub use planet::{
     planet_scale, BackgroundNode, BackgroundStats, PlanetConfig, PlanetOutcome, RoutingOracle,
 };

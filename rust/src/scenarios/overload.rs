@@ -1,0 +1,410 @@
+//! Metastable-overload scenario: a replicated service driven far past
+//! capacity by a mixed client fleet (retries + hedging enabled — the
+//! amplifier configuration), surviving on admission control, weighted
+//! fair queueing and server pushback.
+//!
+//! The failure mode this reproduces is *metastable overload*: once a
+//! service saturates, client retries and hedges multiply the offered
+//! load, rejection work itself saturates the server, and goodput stays
+//! collapsed even after the original surge ends. The defenses under
+//! test:
+//!
+//! * token-bucket admission sheds excess *before payload decode*
+//!   ([`crate::rpc::Admission`]), so a rejected request costs a header
+//!   parse, not a dispatch;
+//! * the worker queue ([`crate::rpc::ServiceQueue`]) sheds
+//!   oldest-useless-first and answers shed entries with
+//!   [`crate::rpc::Status::Overloaded`] + a retry-after hint;
+//! * stubs honor pushback: no retry before the hint, failover to a
+//!   replica that is not shedding, hedges suppressed
+//!   ([`crate::rpc::Stub`]).
+//!
+//! Three phases run back to back — `measure` (offered = nominal
+//! capacity, establishing measured capacity), `surge` (offered =
+//! `surge_mult` × capacity), `recover` (offered back under capacity) —
+//! and each phase yields an [`OverloadRow`]. The acceptance bars
+//! (surge goodput ≥ 80 % of measured capacity, ≥ 90 % of sheds
+//! pre-decode, recovery without operator action) are asserted by
+//! `tests/service_api.rs` and the `rpc_throughput` bench, which both
+//! drive this same deployment.
+
+use crate::metrics::{Histogram, RouterStats, StubStats};
+use crate::netsim::link::PathProfile;
+use crate::netsim::topology::{LinkProfile, TopologyBuilder};
+use crate::netsim::{Time, World, MICRO, MILLI, SECOND};
+use crate::node::{LatticaNode, NodeConfig};
+use crate::rpc::{
+    AdmissionPolicy, CallOptions, HedgePolicy, Outcome, Queued, Reply, RetryPolicy, Service,
+    ServiceQueue, Status, Stub,
+};
+use crate::util::buf::Buf;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::Node;
+
+/// Deployment knobs; [`OverloadConfig::default`] is the canonical
+/// configuration shared by the acceptance test and the bench.
+#[derive(Clone, Copy, Debug)]
+pub struct OverloadConfig {
+    /// Replicas of the overloaded service.
+    pub servers: usize,
+    /// Client nodes, each with its own retrying + hedging stub.
+    pub clients: usize,
+    /// Worker slots per server (concurrent handlers).
+    pub concurrency: usize,
+    /// Per-request handler time.
+    pub service_time: Time,
+    /// Worker-queue depth per server.
+    pub queue_capacity: usize,
+    pub measure_secs: u64,
+    pub surge_secs: u64,
+    pub recover_secs: u64,
+    /// Surge offered load as a multiple of nominal capacity.
+    pub surge_mult: f64,
+    pub seed: u64,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> OverloadConfig {
+        OverloadConfig {
+            servers: 2,
+            clients: 4,
+            concurrency: 4,
+            service_time: 5 * MILLI,
+            queue_capacity: 32,
+            measure_secs: 3,
+            surge_secs: 3,
+            recover_secs: 3,
+            surge_mult: 10.0,
+            seed: 42,
+        }
+    }
+}
+
+/// One phase of the run.
+#[derive(Clone, Copy, Debug)]
+pub struct OverloadRow {
+    pub phase: &'static str,
+    /// Open-loop offered load this phase.
+    pub offered_qps: f64,
+    /// `Ok` completions per second of phase time.
+    pub goodput_qps: f64,
+    pub ok: u64,
+    /// Logical calls that finished with a failure status this phase.
+    pub rejected: u64,
+    /// Server-side requests shed before payload decode (phase delta).
+    pub shed_predecode: u64,
+    /// Server-side requests shed from the worker queue (phase delta:
+    /// capacity overflow + stale drops).
+    pub shed_queue: u64,
+    /// p99 latency of the calls that were admitted and served.
+    pub p99_admitted_ns: u64,
+}
+
+/// Aggregate result; assertion bars live with the callers.
+pub struct OverloadOutcome {
+    pub rows: Vec<OverloadRow>,
+    /// Goodput measured in the `measure` phase — the capacity baseline
+    /// the surge phase is judged against.
+    pub capacity_qps: f64,
+    /// `servers × concurrency / service_time` — what the worker pools
+    /// can serve in aggregate.
+    pub nominal_capacity_qps: f64,
+    /// Totals across the whole run (all servers).
+    pub shed_predecode: u64,
+    pub shed_queue: u64,
+    /// Replies answered by the orphan path (dropped without sending).
+    pub replies_dropped: u64,
+    /// Aggregate client-side stub counters.
+    pub stub: StubStats,
+    /// Aggregate server-side router counters (shed overlay included).
+    pub router: RouterStats,
+}
+
+fn add_stub(a: &mut StubStats, b: &StubStats) {
+    a.ops += b.ops;
+    a.ok += b.ok;
+    a.failed += b.failed;
+    a.attempts += b.attempts;
+    a.retries += b.retries;
+    a.hedges += b.hedges;
+    a.hedge_wins += b.hedge_wins;
+    a.failovers += b.failovers;
+    a.cancelled += b.cancelled;
+    a.deadline_expired += b.deadline_expired;
+    a.overloaded += b.overloaded;
+    a.hedges_suppressed += b.hedges_suppressed;
+}
+
+fn add_router(a: &mut RouterStats, b: &RouterStats) {
+    a.served += b.served;
+    a.failed += b.failed;
+    a.deferred += b.deferred;
+    a.unknown_service += b.unknown_service;
+    a.unknown_method += b.unknown_method;
+    a.expired += b.expired;
+    a.stream_items += b.stream_items;
+    a.shed_predecode += b.shed_predecode;
+}
+
+type WorkQueue = Rc<RefCell<ServiceQueue<Reply>>>;
+
+/// Run the scenario; fully deterministic in the config.
+pub fn overload_scenario(cfg: &OverloadConfig) -> OverloadOutcome {
+    // One-region LAN: every shed and every retry is a round trip of
+    // ~0.5 ms, so the client fleet can genuinely hammer the servers.
+    let mut t = TopologyBuilder::new(1);
+    t.intra(0, PathProfile::new(250 * MICRO, 50 * MICRO, 0.0));
+    let server_hosts: Vec<u32> = (0..cfg.servers)
+        .map(|_| t.public_host(0, LinkProfile::DATACENTER))
+        .collect();
+    let client_hosts: Vec<u32> = (0..cfg.clients)
+        .map(|_| t.public_host(0, LinkProfile::DATACENTER))
+        .collect();
+    let mut world = World::new(t.build(cfg.seed));
+    let servers: Vec<Node> = server_hosts
+        .iter()
+        .enumerate()
+        .map(|(i, &h)| {
+            LatticaNode::spawn(&mut world, h, {
+                let mut c = NodeConfig::with_seed(cfg.seed * 100 + 1 + i as u64);
+                c.label = format!("shard-{i}");
+                c
+            })
+        })
+        .collect();
+    let clients: Vec<Node> = client_hosts
+        .iter()
+        .enumerate()
+        .map(|(i, &h)| {
+            LatticaNode::spawn(&mut world, h, {
+                let mut c = NodeConfig::with_seed(cfg.seed * 100 + 50 + i as u64);
+                c.label = format!("client-{i}");
+                c
+            })
+        })
+        .collect();
+
+    // Admission sized to what the workers can actually serve: the bucket
+    // is the front door saying "no" cheaply so the queue never has to.
+    let per_server_rate = cfg.concurrency as f64 * SECOND as f64 / cfg.service_time as f64;
+    let queues: Vec<WorkQueue> = (0..cfg.servers)
+        .map(|_| {
+            Rc::new(RefCell::new(ServiceQueue::new(
+                cfg.queue_capacity,
+                cfg.service_time,
+            )))
+        })
+        .collect();
+    for (s, q) in servers.iter().zip(&queues) {
+        let queue = q.clone();
+        let svc = Service::new("shard")
+            .with_admission(AdmissionPolicy::rate(
+                per_server_rate,
+                (cfg.concurrency * 4) as f64,
+            ))
+            .unary("work", move |node, net, ctx, _payload| {
+                let now = net.now();
+                let (shed, hint) = {
+                    let mut q = queue.borrow_mut();
+                    let shed = q.push(now, ctx.peer, ctx.deadline, ctx.reply_handle());
+                    let backlog = q.len().max(1) as u64;
+                    (shed, q.ewma_handle().saturating_mul(backlog).max(MILLI))
+                };
+                for e in shed {
+                    let _ = e.item.overloaded(node, net, hint, "worker queue full");
+                }
+                Outcome::Deferred
+            });
+        s.borrow_mut().register_service(svc);
+    }
+
+    // Every client connects to every replica up front; the run measures
+    // overload behaviour, not dialing.
+    for c in &clients {
+        for s in &servers {
+            let ma = s.borrow().listen_addr();
+            c.borrow_mut().dial(&mut world.net, &ma).unwrap();
+        }
+    }
+    world.run_for(2 * SECOND);
+    for c in &clients {
+        for s in &servers {
+            assert!(
+                c.borrow().swarm.is_connected(&s.borrow().peer_id()),
+                "overload scenario setup failed to connect"
+            );
+        }
+    }
+
+    // The amplifier fleet: retries AND hedging on — the configuration
+    // that melts a service with no pushback handling.
+    let opts = CallOptions {
+        deadline: 500 * MILLI,
+        attempt_timeout: Some(200 * MILLI),
+        retry: RetryPolicy {
+            max_attempts: 3,
+            base_backoff: 10 * MILLI,
+            max_backoff: 200 * MILLI,
+            jitter: 0.5,
+            retry_on_error: false,
+        },
+        hedge: HedgePolicy::on(),
+    };
+    let server_peers: Vec<_> = servers.iter().map(|s| s.borrow().peer_id()).collect();
+    let mut stubs: Vec<Stub> = (0..cfg.clients)
+        .map(|_| Stub::new("shard", server_peers.clone()).with_options(opts))
+        .collect();
+
+    // Per-server worker pool: each slot holds (finish time, queued item).
+    let mut workers: Vec<Vec<Option<(Time, Queued<Reply>)>>> = (0..cfg.servers)
+        .map(|_| {
+            let mut w = Vec::new();
+            w.resize_with(cfg.concurrency, || None);
+            w
+        })
+        .collect();
+
+    let nominal = cfg.servers as f64 * per_server_rate;
+    let payload: Buf = vec![0x42u8; 64].into();
+    let response: Buf = vec![0x24u8; 64].into();
+    let shed_totals = |servers: &[Node], queues: &[WorkQueue]| -> (u64, u64) {
+        let pre = servers
+            .iter()
+            .map(|s| s.borrow().rpc.admission.stats.shed_predecode)
+            .sum();
+        let q = queues
+            .iter()
+            .map(|q| {
+                let st = q.borrow().stats;
+                st.shed_capacity + st.shed_stale
+            })
+            .sum();
+        (pre, q)
+    };
+
+    let mut rows = Vec::new();
+    let mut rr = 0usize;
+    let phases: Vec<(&'static str, f64, u64)> = vec![
+        ("measure", nominal, cfg.measure_secs),
+        ("surge", nominal * cfg.surge_mult, cfg.surge_secs),
+        ("recover", nominal * 0.75, cfg.recover_secs),
+    ];
+    for (phase, offered_qps, secs) in phases {
+        let (pre0, q0) = shed_totals(&servers, &queues);
+        let interval = ((SECOND as f64 / offered_qps) as Time).max(1);
+        let mut next_issue = world.net.now();
+        let phase_end = world.net.now() + secs * SECOND;
+        let mut ok = 0u64;
+        let mut rejected = 0u64;
+        let mut lat = Histogram::new();
+        // Drain the phase's own tail too: stop issuing at phase_end,
+        // keep serving until in-flight ops resolve (bounded by the call
+        // deadline), so completions are attributed where they belong.
+        let mut drain_until = phase_end + opts.deadline;
+        loop {
+            let now = world.net.now();
+            if now >= drain_until {
+                break;
+            }
+            if now < phase_end {
+                while next_issue <= now {
+                    let ci = rr % cfg.clients;
+                    rr += 1;
+                    let mut n = clients[ci].borrow_mut();
+                    stubs[ci].call(&mut n, &mut world.net, "work", payload.clone());
+                    next_issue += interval;
+                }
+            }
+            world.run_for(MILLI);
+            let now = world.net.now();
+            // Servers: complete finished work, pull new work from the
+            // queue, answer entries the queue shed as stale.
+            for (si, s) in servers.iter().enumerate() {
+                s.borrow_mut().drain_events();
+                let mut n = s.borrow_mut();
+                for slot in &mut workers[si] {
+                    if let Some((finish, item)) = slot.take() {
+                        if finish > now {
+                            *slot = Some((finish, item));
+                            continue;
+                        }
+                        queues[si]
+                            .borrow_mut()
+                            .note_handle_time(now.saturating_sub(item.enqueued_at));
+                        let _ = item.item.ok(&mut n, &mut world.net, response.clone());
+                    }
+                    let (serve, stale) = queues[si].borrow_mut().pop(now);
+                    for e in stale {
+                        let hint = queues[si].borrow().ewma_handle().max(MILLI);
+                        let _ = e
+                            .item
+                            .overloaded(&mut n, &mut world.net, hint, "shed stale in queue");
+                    }
+                    if let Some(item) = serve {
+                        *slot = Some((now + cfg.service_time, item));
+                    }
+                }
+            }
+            // Clients: feed stub events, drive timers, count completions.
+            let mut all_idle = true;
+            for (ci, c) in clients.iter().enumerate() {
+                let evs = c.borrow_mut().drain_events();
+                {
+                    let mut n = c.borrow_mut();
+                    for ev in &evs {
+                        stubs[ci].on_node_event(&mut n, &mut world.net, ev);
+                    }
+                    stubs[ci].tick(&mut n, &mut world.net);
+                }
+                while let Some(d) = stubs[ci].poll_done() {
+                    if d.status == Status::Ok {
+                        ok += 1;
+                        lat.record(d.rtt);
+                    } else {
+                        rejected += 1;
+                    }
+                }
+                all_idle &= stubs[ci].in_flight() == 0;
+            }
+            if now >= phase_end && all_idle {
+                drain_until = now;
+            }
+        }
+        let (pre1, q1) = shed_totals(&servers, &queues);
+        rows.push(OverloadRow {
+            phase,
+            offered_qps,
+            goodput_qps: ok as f64 / secs as f64,
+            ok,
+            rejected,
+            shed_predecode: pre1 - pre0,
+            shed_queue: q1 - q0,
+            p99_admitted_ns: lat.percentile(99.0),
+        });
+    }
+
+    let (shed_predecode, shed_queue) = shed_totals(&servers, &queues);
+    let mut stub = StubStats::default();
+    for s in &stubs {
+        add_stub(&mut stub, &s.stats);
+    }
+    let mut router = RouterStats::default();
+    let mut replies_dropped = 0;
+    for s in &servers {
+        let n = s.borrow();
+        add_router(&mut router, &n.router_stats());
+        replies_dropped += n.rpc.replies_dropped;
+    }
+    OverloadOutcome {
+        capacity_qps: rows[0].goodput_qps,
+        nominal_capacity_qps: nominal,
+        rows,
+        shed_predecode,
+        shed_queue,
+        replies_dropped,
+        stub,
+        router,
+    }
+}

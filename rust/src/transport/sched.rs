@@ -10,8 +10,21 @@
 //! here because the high classes are intrinsically light (control frames
 //! and request/response payloads); bulk always gets the leftover
 //! bandwidth, which on a saturated link is most of it.
+//!
+//! Pure strict priority has one pathological corner: a class saturated
+//! by its own load (e.g. unary RPC under an overload storm) would pin
+//! lower classes at exactly zero forever. To keep the anti-starvation
+//! guarantee symmetric, every [`SHARE_PERIOD`]-th serve is given to a
+//! waiting lower class instead (cycling across them when several wait),
+//! so lower classes always own ~1/16 of a saturated link — enough for
+//! model-sync and gossip to creep forward while the overload lasts,
+//! cheap enough to be noise when it doesn't.
 
 use std::collections::{HashSet, VecDeque};
+
+/// One serve in every `SHARE_PERIOD` goes to a waiting lower class even
+/// while a higher class is saturated.
+const SHARE_PERIOD: u64 = 16;
 
 /// Priority class for a stream, highest first.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -67,6 +80,9 @@ impl TrafficClass {
 pub struct StreamScheduler {
     queues: [VecDeque<u64>; TrafficClass::COUNT],
     queued: HashSet<u64>,
+    /// Chunks served so far (bumped by `rotate`); drives the periodic
+    /// lower-class share.
+    served: u64,
 }
 
 impl StreamScheduler {
@@ -81,25 +97,52 @@ impl StreamScheduler {
         }
     }
 
-    /// The stream to serve next: front of the highest-priority non-empty
-    /// class queue.
+    /// Class to serve next: the highest-priority non-empty queue, except
+    /// that every `SHARE_PERIOD`-th serve goes to a waiting lower class
+    /// (cycling across the lower classes when several are non-empty).
+    /// Shared by `current`/`rotate`/`remove_current` so the three views
+    /// of "the current stream" never disagree.
+    fn current_class(&self) -> Option<usize> {
+        let strict = self.queues.iter().position(|q| !q.is_empty())?;
+        if (self.served + 1) % SHARE_PERIOD == 0 {
+            let n_low = self.queues[strict + 1..]
+                .iter()
+                .filter(|q| !q.is_empty())
+                .count();
+            if n_low > 0 {
+                let k = (self.served / SHARE_PERIOD) as usize % n_low;
+                return self.queues[strict + 1..]
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, q)| !q.is_empty())
+                    .nth(k)
+                    .map(|(i, _)| strict + 1 + i);
+            }
+        }
+        Some(strict)
+    }
+
+    /// The stream to serve next; see [`StreamScheduler::current_class`].
     pub fn current(&self) -> Option<u64> {
-        self.queues.iter().find_map(|q| q.front().copied())
+        let c = self.current_class()?;
+        self.queues[c].front().copied()
     }
 
     /// Rotate the current class's queue (round-robin fairness after the
-    /// front stream contributed a chunk).
+    /// front stream contributed a chunk) and count the serve.
     pub fn rotate(&mut self) {
-        if let Some(q) = self.queues.iter_mut().find(|q| !q.is_empty()) {
-            q.rotate_left(1);
+        if let Some(c) = self.current_class() {
+            self.queues[c].rotate_left(1);
+            self.served += 1;
         }
     }
 
     /// Drop the current stream from its queue (it had nothing sendable;
-    /// it re-activates on new data, credit, or retransmission).
+    /// it re-activates on new data, credit, or retransmission). Not a
+    /// serve, so the share counter is untouched.
     pub fn remove_current(&mut self) {
-        if let Some(q) = self.queues.iter_mut().find(|q| !q.is_empty()) {
-            if let Some(sid) = q.pop_front() {
+        if let Some(c) = self.current_class() {
+            if let Some(sid) = self.queues[c].pop_front() {
                 self.queued.remove(&sid);
             }
         }
@@ -171,6 +214,38 @@ mod tests {
         assert_eq!(s.current(), Some(7));
         s.remove_current();
         assert_eq!(s.current(), None);
+    }
+
+    #[test]
+    fn bulk_gets_guaranteed_share_under_unary_saturation() {
+        // A saturating Unary stream must not pin Bulk at zero: every
+        // SHARE_PERIOD-th serve goes to the waiting lower class.
+        let mut s = StreamScheduler::new();
+        s.activate(1, TrafficClass::Unary);
+        s.activate(2, TrafficClass::Bulk);
+        let mut bulk_serves = 0;
+        for _ in 0..64 {
+            if s.current() == Some(2) {
+                bulk_serves += 1;
+            }
+            s.rotate();
+        }
+        assert_eq!(bulk_serves, 64 / SHARE_PERIOD, "bulk owns ~1/16 of serves");
+        // The share cycles across several waiting lower classes.
+        let mut s = StreamScheduler::new();
+        s.activate(1, TrafficClass::Unary);
+        s.activate(2, TrafficClass::Streaming);
+        s.activate(3, TrafficClass::Bulk);
+        let mut low = Vec::new();
+        for _ in 0..64 {
+            if let Some(sid) = s.current() {
+                if sid != 1 {
+                    low.push(sid);
+                }
+            }
+            s.rotate();
+        }
+        assert_eq!(low, vec![2, 3, 2, 3], "boost alternates across lower classes");
     }
 
     #[test]

@@ -157,6 +157,15 @@ fn kad_corpus() -> Vec<Vec<u8>> {
         error_detail: "replica down".into(),
         ..Default::default()
     };
+    // Server pushback: an `Overloaded` (status 4) response carrying the
+    // retry-after hint (field 9) — the overload-control frame class.
+    let rpc_pushback = RpcMsg {
+        kind: 2, // RESPONSE
+        status: 4,
+        error_detail: "service \"shard\" overloaded".into(),
+        retry_after_ns: 250_000_000,
+        ..Default::default()
+    };
     // …and a legacy pre-`deadline_ns` encoding (fields 1–6 only), exactly
     // as an old peer would put it on the wire.
     let mut legacy = PbWriter::new();
@@ -165,6 +174,13 @@ fn kad_corpus() -> Vec<Vec<u8>> {
     legacy.string(3, "forward");
     legacy.bytes(4, &[7u8; 64]);
     legacy.uint(6, 2);
+    // Handcrafted pushback wire frame: status 4 plus a bare field 9, the
+    // minimal overload signal a foreign implementation might emit.
+    let mut pushback_wire = PbWriter::new();
+    pushback_wire.uint(1, 2);
+    pushback_wire.uint(5, 4);
+    pushback_wire.uint(6, 99);
+    pushback_wire.uint(9, 1_000_000);
     // NAT traversal control frames: a DCUtR CONNECT/DENY pair and a relay
     // gossip ad (all carry ports, the truncation-prone field class).
     let dcutr_connect = DcutrMsg {
@@ -197,7 +213,9 @@ fn kad_corpus() -> Vec<Vec<u8>> {
         BitswapMsg::default().encode(),
         rpc_req.encode(),
         rpc_resp.encode(),
+        rpc_pushback.encode(),
         legacy.finish(),
+        pushback_wire.finish(),
         compact_want.encode(),
         publish.encode(),
         ihave.encode(),

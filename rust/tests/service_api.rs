@@ -10,11 +10,13 @@ use lattica::netsim::{MILLI, SECOND};
 use lattica::node::{run_until, App, LatticaNode, NodeEvent};
 use lattica::protocols::Ctx;
 use lattica::rpc::{
-    CallOptions, HedgePolicy, Outcome, Reply, RetryPolicy, RpcEvent, Service, Status, Stub,
+    AdmissionPolicy, CallOptions, HedgePolicy, Outcome, Reply, RetryPolicy, RpcEvent, Service,
+    Status, Stub, StubDone,
 };
 use lattica::runtime::Tensor;
 use lattica::scenarios::{
-    bootstrap_mesh, drain, echo_service, peer_of, stub_call_blocking, table1_world, NetScenario,
+    bootstrap_mesh, drain, echo_service, overload_scenario, peer_of, stub_call_blocking,
+    table1_world, NetScenario, Node, OverloadConfig,
 };
 use lattica::shard::{PipelineClient, ShardRequest, SHARD_SERVICE};
 use std::cell::RefCell;
@@ -366,5 +368,267 @@ fn hedged_calls_win_and_cancel_losers() {
         client.borrow().rpc.pending_calls(),
         0,
         "losing hedges must be cancelled, not leaked"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Overload survival: admission control, pushback, orphaned replies.
+// (Deadline-aware drop and WFQ semantics are unit-tested on
+// `ServiceQueue` in `rpc/queue.rs`; the end-to-end composition is the
+// release-gated metastable scenario below.)
+// ---------------------------------------------------------------------------
+
+/// Drive the world until every in-flight op of `stub` completes (or
+/// `timeout` virtual time passes); returns the completions.
+fn drive_until_idle(
+    world: &mut lattica::netsim::World,
+    node: &Node,
+    stub: &mut Stub,
+    timeout: u64,
+) -> Vec<StubDone> {
+    let deadline = world.net.now() + timeout;
+    let mut out = Vec::new();
+    while stub.in_flight() > 0 && world.net.now() < deadline {
+        world.run_for(MILLI);
+        let evs = drain(node);
+        let mut n = node.borrow_mut();
+        for ev in &evs {
+            stub.on_node_event(&mut n, &mut world.net, ev);
+        }
+        stub.tick(&mut n, &mut world.net);
+        drop(n);
+        while let Some(d) = stub.poll_done() {
+            out.push(d);
+        }
+    }
+    out
+}
+
+/// Once pushback has been seen, a permanently-shedding target gets at
+/// most one wire attempt per logical call — no retry-in-place against a
+/// server that already said no.
+#[test]
+fn overloaded_target_receives_at_most_one_attempt_per_call_after_pushback() {
+    let (mut world, client, server) = table1_world(NetScenario::SameRegionLan, 31);
+    let server_peer = server.borrow().peer_id();
+    // rate 0 sheds everything; the pinned 2 s hint outlives any 1 s call
+    // budget, so a well-behaved stub must not keep knocking.
+    server.borrow_mut().register_service(
+        Service::new("perma")
+            .with_admission(AdmissionPolicy::rate(0.0, 0.0).with_retry_after(2 * SECOND))
+            .unary("work", |_node, _net, _ctx, _payload| Outcome::reply(&b"never"[..])),
+    );
+
+    let mut stub = Stub::new("perma", vec![server_peer]).with_options(CallOptions {
+        deadline: SECOND,
+        retry: RetryPolicy {
+            max_attempts: 3,
+            base_backoff: 10 * MILLI,
+            max_backoff: 200 * MILLI,
+            jitter: 0.0,
+            retry_on_error: false,
+        },
+        ..CallOptions::default()
+    });
+    let d1 = stub_call_blocking(&mut world, &client, &mut stub, "work", b"", 5 * SECOND)
+        .expect("first call completes");
+    assert_eq!(d1.status, Status::Overloaded, "detail: {}", d1.detail);
+    assert_eq!(
+        d1.attempts, 1,
+        "the attempt that taught us the target is shedding is the only one"
+    );
+
+    // The pushback window (2 s) is still open and exceeds the budget:
+    // the second call must fail fast with ZERO wire attempts.
+    let d2 = stub_call_blocking(&mut world, &client, &mut stub, "work", b"", 5 * SECOND)
+        .expect("second call completes");
+    assert_eq!(d2.status, Status::Overloaded);
+    assert_eq!(d2.attempts, 0, "no wire attempt while the hint covers the budget");
+    assert!(stub.stats.overloaded >= 1, "stats: {}", stub.stats.summary());
+
+    // Server side: exactly one request was ever shed (one wire attempt
+    // total), none decoded, none dispatched.
+    let srv = server.borrow();
+    assert_eq!(srv.rpc.admission.stats.shed_predecode, 1);
+    assert_eq!(srv.rpc.requests_decoded, 0);
+    assert_eq!(srv.router_stats().served, 0);
+}
+
+/// Admission rejection happens from the request header: shed requests
+/// never have their payload decoded (counter-pinned).
+#[test]
+fn pre_decode_rejection_skips_payload_decode() {
+    let (mut world, client, server) = table1_world(NetScenario::SameRegionLan, 33);
+    let server_peer = server.borrow().peer_id();
+    // Burst of 2, negligible refill: of 4 back-to-back calls, exactly 2
+    // are admitted and 2 are shed before decode.
+    server.borrow_mut().register_service(
+        Service::new("bench")
+            .with_admission(AdmissionPolicy::rate(0.001, 2.0))
+            .unary("echo", |_node, _net, _ctx, payload| Outcome::Reply(payload)),
+    );
+
+    let mut stub = Stub::new("bench", vec![server_peer]).with_options(CallOptions {
+        deadline: 2 * SECOND,
+        ..CallOptions::default()
+    });
+    {
+        let mut n = client.borrow_mut();
+        for _ in 0..4 {
+            stub.call(&mut n, &mut world.net, "echo", vec![7u8; 256]);
+        }
+    }
+    let done = drive_until_idle(&mut world, &client, &mut stub, 10 * SECOND);
+    assert_eq!(done.len(), 4);
+    let ok = done.iter().filter(|d| d.status == Status::Ok).count();
+    let shed = done.iter().filter(|d| d.status == Status::Overloaded).count();
+    assert_eq!((ok, shed), (2, 2), "stats: {}", stub.stats.summary());
+
+    let srv = server.borrow();
+    assert_eq!(
+        srv.rpc.requests_decoded, 2,
+        "shed requests must not reach payload decode"
+    );
+    assert_eq!(srv.rpc.admission.stats.shed_predecode, 2);
+    assert_eq!(srv.router_stats().shed_predecode, 2, "stats overlay");
+    assert_eq!(srv.router_stats().served, 2);
+}
+
+/// A handler that drops its reply handle without responding must not
+/// leave the caller waiting out its deadline: the node answers
+/// `Unavailable("reply dropped")` on its behalf and the stub fails over.
+#[test]
+fn dropped_reply_fails_fast_and_fails_over() {
+    let (mut world, nodes) = bootstrap_mesh(3, 83, LinkProfile::DATACENTER);
+    let client = nodes[0].clone();
+    // Replica 1 takes the reply handle and leaks it; replica 2 is healthy.
+    nodes[1].borrow_mut().register_service(Service::new("flaky").unary(
+        "work",
+        |_node, _net, ctx, _payload| {
+            let _ = ctx.reply_handle();
+            Outcome::Deferred
+        },
+    ));
+    nodes[2].borrow_mut().register_service(Service::new("flaky").unary(
+        "work",
+        |_node, _net, _ctx, _payload| Outcome::reply(&b"served"[..]),
+    ));
+    world.run_for(SECOND);
+
+    let mut stub =
+        Stub::new("flaky", vec![peer_of(&nodes[1]), peer_of(&nodes[2])]).with_options(CallOptions {
+            deadline: 10 * SECOND,
+            retry: RetryPolicy {
+                max_attempts: 2,
+                base_backoff: 10 * MILLI,
+                max_backoff: 100 * MILLI,
+                jitter: 0.0,
+                retry_on_error: false,
+            },
+            ..CallOptions::default()
+        });
+    let t0 = world.net.now();
+    let done = stub_call_blocking(&mut world, &client, &mut stub, "work", b"", 15 * SECOND)
+        .expect("call completes");
+    assert_eq!(done.status, Status::Ok, "detail: {}", done.detail);
+    assert_eq!(done.payload, b"served");
+    // The whole dance — dropped reply answered, backoff, failover — must
+    // be an immediate-failover path, nowhere near the 10 s budget.
+    assert!(
+        world.net.now() - t0 < SECOND,
+        "dropped reply must fail fast, not wait out the deadline"
+    );
+    assert!(stub.stats.failovers >= 1, "stats: {}", stub.stats.summary());
+    assert_eq!(nodes[1].borrow().rpc.replies_dropped, 1);
+}
+
+/// While any target signals overload, speculative hedges are suppressed
+/// — duplicates are pure amplification against a saturated server.
+#[test]
+fn hedges_suppressed_under_overload_signal() {
+    let (mut world, client, server) = table1_world(NetScenario::SameRegionLan, 37);
+    let server_peer = server.borrow().peer_id();
+    server.borrow_mut().register_service(
+        Service::new("jam")
+            .with_admission(AdmissionPolicy::rate(0.0, 0.0).with_retry_after(300 * MILLI))
+            .unary("work", |_node, _net, _ctx, _payload| Outcome::reply(&b"x"[..])),
+    );
+
+    let mut stub = Stub::new("jam", vec![server_peer]).with_options(CallOptions {
+        deadline: 2 * SECOND,
+        retry: RetryPolicy {
+            max_attempts: 3,
+            base_backoff: 10 * MILLI,
+            max_backoff: 200 * MILLI,
+            jitter: 0.0,
+            retry_on_error: false,
+        },
+        hedge: HedgePolicy::on(),
+        ..CallOptions::default()
+    });
+    let done = stub_call_blocking(&mut world, &client, &mut stub, "work", b"", 10 * SECOND)
+        .expect("call completes");
+    assert_eq!(done.status, Status::Overloaded);
+    assert_eq!(
+        stub.stats.hedges, 0,
+        "no speculative duplicates against a shedding target: {}",
+        stub.stats.summary()
+    );
+    assert!(
+        stub.stats.hedges_suppressed >= 1,
+        "suppression must be counted: {}",
+        stub.stats.summary()
+    );
+    assert!(stub.stats.overloaded >= 1);
+}
+
+/// The metastable-overload scenario end to end: a mixed retrying+hedging
+/// fleet drives the replicated service at 10× capacity; admission +
+/// pushback must hold goodput, shed almost everything before decode, and
+/// recover without operator action. Release-only (drives ~50k calls).
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow in debug: run with --release")]
+fn overload_scenario_sheds_cheaply_and_recovers() {
+    let out = overload_scenario(&OverloadConfig::default());
+    let fmt = |r: &lattica::scenarios::OverloadRow| {
+        format!(
+            "{}: offered {:.0}/s goodput {:.0}/s ok {} rejected {} shed_pre {} shed_q {}",
+            r.phase, r.offered_qps, r.goodput_qps, r.ok, r.rejected, r.shed_predecode, r.shed_queue
+        )
+    };
+    let detail: Vec<String> = out.rows.iter().map(fmt).collect();
+    let surge = &out.rows[1];
+    let recover = &out.rows[2];
+
+    assert!(
+        out.capacity_qps >= 0.5 * out.nominal_capacity_qps,
+        "measured capacity {:.0}/s implausibly far under nominal {:.0}/s\n{detail:?}",
+        out.capacity_qps,
+        out.nominal_capacity_qps
+    );
+    assert!(
+        surge.goodput_qps >= 0.8 * out.capacity_qps,
+        "goodput under 10x surge {:.0}/s must hold >=80% of capacity {:.0}/s\n{detail:?}",
+        surge.goodput_qps,
+        out.capacity_qps
+    );
+    let total_shed = out.shed_predecode + out.shed_queue;
+    assert!(
+        total_shed > 0 && out.shed_predecode as f64 >= 0.9 * total_shed as f64,
+        "at least 90% of sheds must be pre-decode: pre {} / total {total_shed}\n{detail:?}",
+        out.shed_predecode
+    );
+    assert!(
+        recover.goodput_qps >= 0.8 * recover.offered_qps,
+        "goodput must recover without operator action: {:.0}/s of {:.0}/s offered\n{detail:?}",
+        recover.goodput_qps,
+        recover.offered_qps
+    );
+    // The pushback machinery actually engaged.
+    assert!(out.stub.overloaded > 0, "stub: {}", out.stub.summary());
+    assert!(
+        out.stub.hedges_suppressed > 0,
+        "hedges must be suppressed during the surge: {}",
+        out.stub.summary()
     );
 }
