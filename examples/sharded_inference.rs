@@ -1,101 +1,173 @@
-//! Sharded inference demo (Fig. 1(4)): the transformer split across two
-//! shard stages with replicas, served over the typed service layer with
-//! automatic stub failover — each shard registers the `shard` service
-//! ([`ShardServer::into_service`]) and the client's pipeline drives one
-//! retrying stub per stage. See `benches/sharded_inference.rs` for the
-//! measured version; this example walks through the moving parts and
-//! prints the predictions.
+//! Latency-aware sharded inference demo (DESIGN.md §Inference plane).
 //!
-//! Requires `make artifacts`.
+//! Two pipeline stages, each with a replica in the client's region and
+//! one across a continent. Every replica advertises its layer range on
+//! the layer-ads gossip topic + DHT provider buckets; the client's
+//! [`ChainClient`] assembles the lowest-latency chain covering the full
+//! layer range, streams a prompt through it token-by-token with KV state
+//! resident on the stages, then survives a mid-stream stage kill via
+//! splice-repair + replay.
+//!
+//! Needs no artifacts: the synthetic [`SimModel`] stands in for the
+//! stubbed PJRT runtime.
 //! Run: cargo run --release --example sharded_inference
 
-use lattica::netsim::topology::LinkProfile;
-use lattica::netsim::SECOND;
-use lattica::node::NodeEvent;
-use lattica::runtime::Engine;
-use lattica::scenarios::bootstrap_mesh;
-use lattica::shard::{PipelineClient, ShardServer};
-use std::cell::RefCell;
-use std::rc::Rc;
+use lattica::netsim::topology::{LinkProfile, TopologyBuilder};
+use lattica::netsim::{World, MILLI, SECOND};
+use lattica::node::{LatticaNode, NodeConfig};
+use lattica::route::{ChainClient, RouteMode, RouteShard, ShardSpec, SimModel};
+use lattica::scenarios::Node;
 
-fn main() -> anyhow::Result<()> {
-    let dir = std::path::Path::new("artifacts");
-    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
-    let engine = Rc::new(RefCell::new(Engine::load(dir)?));
-    let cfg = engine.borrow().manifest.config.clone();
-    let params = engine.borrow().manifest.load_init_params()?;
-    let split = cfg.n_layer / 2;
+type Replica = (Node, RouteShard, &'static str);
 
-    let (mut world, nodes) = bootstrap_mesh(5, 99, LinkProfile::DATACENTER);
-    let client = nodes[0].clone();
-    println!(
-        "pipeline: stage0 = embed+layers[0..{split}] (2 replicas), stage1 = layers[{split}..{}]+logits (2 replicas)",
-        cfg.n_layer
-    );
-    let stages = vec![
-        vec![nodes[1].borrow().peer_id(), nodes[2].borrow().peer_id()],
-        vec![nodes[3].borrow().peer_id(), nodes[4].borrow().peer_id()],
-    ];
-    for (i, nd) in nodes[1..].iter().enumerate() {
-        let stage = i / 2;
-        let (svc, _handle) = ShardServer::new(
-            engine.clone(),
-            if stage == 0 { (0, split) } else { (split, cfg.n_layer) },
-            stage == 0,
-            stage == 1,
-            params.clone(),
-        )
-        .into_service();
-        nd.borrow_mut().register_service(svc);
+/// Advance the world in 50 ms steps, ticking every live stage and
+/// feeding the client's events through the chain client.
+fn drive(
+    world: &mut World,
+    client: &Node,
+    chain: &mut ChainClient,
+    replicas: &[Replica],
+    steps: usize,
+) {
+    for _ in 0..steps {
+        world.run_for(50 * MILLI);
+        for (node, shard, _) in replicas {
+            node.borrow_mut().drain_events();
+            let mut n = node.borrow_mut();
+            shard.tick(&mut n, &mut world.net);
+        }
+        let evs = client.borrow_mut().drain_events();
+        let mut n = client.borrow_mut();
+        for ev in evs {
+            chain.on_event(&mut n, &mut world.net, &ev);
+        }
+        chain.tick(&mut n, &mut world.net);
     }
-    world.run_for(SECOND);
+}
 
-    let mut pipeline = PipelineClient::new(stages);
-    // An arithmetic-sequence prompt (the synthetic training task).
-    let delta = 3i32;
-    let tokens: Vec<i32> = (0..cfg.seq_len as i32).map(|i| (5 + delta * i) % cfg.vocab as i32).collect();
-    println!("prompt: arithmetic sequence mod {} with delta {delta}", cfg.vocab);
+fn main() {
+    let model = SimModel::tiny();
+    let split = model.n_layer / 2;
+    println!(
+        "model {}: {} layers, split at {split} across 2 stages",
+        model.model_id, model.n_layer
+    );
 
-    for q in 0..4u64 {
-        if q == 2 {
-            // Kill stage-0 replica 0 mid-demo: the stub fails over.
-            let dead = nodes[1].borrow().endpoint_id();
-            world.remove_endpoint(dead);
-            println!("!! killed stage-0 replica 0 — requests continue via replica 1");
-        }
-        {
-            let mut c = client.borrow_mut();
-            pipeline.infer(&mut c, &mut world.net, tokens.clone())?;
-        }
-        let deadline = world.net.now() + 60 * SECOND;
-        while pipeline.completed.len() <= q as usize && world.net.now() < deadline {
-            world.run_for(SECOND / 50);
-            let evs = client.borrow_mut().drain_events();
-            let mut c = client.borrow_mut();
-            for e in &evs {
-                if let NodeEvent::Rpc(ev) = e {
-                    pipeline.on_rpc_event(&mut c, &mut world.net, ev);
-                }
-            }
-            // Drive the per-stage stubs' retry/failover timers.
-            pipeline.tick(&mut c, &mut world.net);
-        }
-        let (rid, logits, started) = pipeline.completed.last().expect("completed");
-        let vals = logits.as_f32()?;
-        let argmax = vals
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i as i32)
-            .unwrap();
-        let expect = (tokens[cfg.seq_len - 1] + delta) % cfg.vocab as i32;
+    // Client in region 0; each stage has a local (region 0) and a remote
+    // (region 1/2, ~75 ms one-way away) replica.
+    let mut t = TopologyBuilder::paper_regions();
+    let client_host = t.public_host(0, LinkProfile::FIBER);
+    let specs = [
+        ((0, split), 1u32, "stage-0 remote"),
+        ((0, split), 0, "stage-0 local"),
+        ((split, model.n_layer), 2, "stage-1 remote"),
+        ((split, model.n_layer), 0, "stage-1 local"),
+    ];
+    let hosts: Vec<u32> = specs
+        .iter()
+        .map(|&(_, region, _)| t.public_host(region as usize, LinkProfile::FIBER))
+        .collect();
+    let mut world = World::new(t.build(7));
+    let client = LatticaNode::spawn(&mut world, client_host, NodeConfig::with_seed(100));
+    let replicas: Vec<Replica> = specs
+        .iter()
+        .zip(&hosts)
+        .enumerate()
+        .map(|(i, (&(layers, region, label), &host))| {
+            let node = LatticaNode::spawn(&mut world, host, NodeConfig::with_seed(101 + i as u64));
+            let shard = {
+                let mut n = node.borrow_mut();
+                RouteShard::install(
+                    &mut n,
+                    &mut world.net,
+                    ShardSpec {
+                        model: model.clone(),
+                        layers,
+                        region,
+                        capacity_entries: 1 << 16,
+                    },
+                )
+            };
+            (node, shard, label)
+        })
+        .collect();
+    let entry = lattica::protocols::kad::PeerEntry {
+        id: client.borrow().peer_id(),
+        host: client_host,
+        port: 4001,
+    };
+    for (node, _, _) in &replicas {
+        node.borrow_mut().bootstrap(&mut world.net, entry.clone());
+    }
+    world.run_for(3 * SECOND);
+
+    let mut chain = {
+        let mut n = client.borrow_mut();
+        ChainClient::new(&mut n, &mut world.net, model.clone(), 0, RouteMode::Routed)
+    };
+
+    // Let ads gossip out and RTT probes land.
+    drive(&mut world, &client, &mut chain, &replicas, 100);
+    println!("\nlayer ads known to the client:");
+    for ad in chain.book.ads_for(&model.model_id) {
         println!(
-            "request {rid}: predicted next token {argmax} (sequence-correct would be {expect}), latency {}",
-            lattica::util::timefmt::fmt_ns(world.net.now() - started)
+            "  {} layers [{}, {})  region {}  load {}%",
+            ad.peer, ad.layers.0, ad.layers.1, ad.region, ad.load
         );
     }
-    assert_eq!(pipeline.completed.len(), 4);
-    assert!(pipeline.failed.is_empty());
-    println!("sharded_inference OK (untrained weights predict arbitrarily; failover masked the kill)");
-    Ok(())
+
+    // One request: the router should pick the all-local chain.
+    let prompt = vec![5u32, 9, 2, 7];
+    let gen_len = 8;
+    let want = model.reference_generate(&prompt, gen_len);
+    let id = {
+        let mut n = client.borrow_mut();
+        chain.start(&mut n, &mut world.net, prompt.clone(), gen_len)
+    };
+    drive(&mut world, &client, &mut chain, &replicas, 4);
+    println!("\nchosen chain for request {id}:");
+    for (hop, peer) in chain.chain_of(id).iter().enumerate() {
+        let who = replicas
+            .iter()
+            .find(|(n, _, _)| n.borrow().peer_id() == *peer)
+            .map(|(_, _, l)| *l)
+            .unwrap_or("?");
+        println!("  hop {hop}: {peer} ({who})");
+    }
+
+    // Kill the tail stage's local replica mid-stream: the stage above it
+    // reports a fault upstream, the client quarantines the dead hop,
+    // splices in the remote holder and replays from the last acked token.
+    while chain.partially_acked() == 0 && chain.in_flight() > 0 {
+        drive(&mut world, &client, &mut chain, &replicas, 1);
+    }
+    let (victim, live) = replicas.split_last().expect("replicas");
+    println!(
+        "\nkilling mid-stream: {} ({})",
+        victim.2,
+        victim.0.borrow().peer_id()
+    );
+    let eid = {
+        let mut n = victim.0.borrow_mut();
+        n.shutdown(&mut world.net, false);
+        n.endpoint_id()
+    };
+    world.remove_endpoint(eid);
+
+    let deadline = world.net.now() + 120 * SECOND;
+    while chain.in_flight() > 0 && world.net.now() < deadline {
+        drive(&mut world, &client, &mut chain, live, 1);
+    }
+    let done = chain.completed.first().expect("request must complete");
+    println!("\nemitted tokens: {:?}", done.tokens);
+    println!("oracle tokens:  {want:?}");
+    println!(
+        "repairs: {}  ttft: {:.2} ms  (completed at t = {:.2}s virtual)",
+        done.repairs,
+        done.ttft as f64 / 1e6,
+        done.finished as f64 / 1e9
+    );
+    assert_eq!(done.tokens, want, "replayed output must match the oracle");
+    assert!(done.repairs >= 1, "the kill must have forced a repair");
+    println!("OK: stage death was masked by splice-repair + replay");
 }

@@ -39,6 +39,7 @@ pub mod protocols;
 pub mod rpc;
 pub mod metrics;
 pub mod node;
+pub mod route;
 pub mod model;
 pub mod shard;
 pub mod trainer;

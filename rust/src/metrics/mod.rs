@@ -54,6 +54,12 @@ impl Histogram {
         self.samples[idx]
     }
 
+    /// Fold another histogram's samples into this one.
+    pub fn merge(&mut self, o: &Histogram) {
+        self.samples.extend_from_slice(&o.samples);
+        self.sorted = false;
+    }
+
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -567,6 +573,78 @@ impl QpsMeter {
     }
 }
 
+/// Inference-plane counters ([`crate::route`]): KV-cache residency on
+/// shard stages plus client-side serving latency. Shards and clients each
+/// keep one; scenarios merge them for a fleet view.
+#[derive(Clone, Debug, Default)]
+pub struct InferenceStats {
+    /// KV sessions created (first Open of a request on this stage).
+    pub sessions_opened: u64,
+    /// Sessions reset by a higher-generation Open (post-repair replay).
+    pub sessions_reset: u64,
+    /// Sessions dropped on stream close / request completion.
+    pub sessions_closed: u64,
+    /// Sessions evicted by the LRU capacity sweep.
+    pub sessions_evicted: u64,
+    /// Resident KV entries right now (gauge; entry = layer × position).
+    pub kv_entries: u64,
+    /// High-water mark of `kv_entries`.
+    pub kv_peak: u64,
+    /// Positions appended into resident state.
+    pub kv_appends: u64,
+    /// Appends dropped because the position was already resident. Zero in
+    /// a correct run — replay uses generation resets, never re-appends.
+    pub duplicate_appends: u64,
+    /// Appends dropped for skipping ahead of the session.
+    pub gap_drops: u64,
+    /// Tokens emitted by a tail stage / acked by a client.
+    pub tokens_streamed: u64,
+    /// Chain repairs performed (client-side counter).
+    pub repairs: u64,
+    /// Fault frames forwarded upstream after a downstream death.
+    pub faults_propagated: u64,
+    /// Client-observed time-to-first-token.
+    pub ttft: Histogram,
+}
+
+impl InferenceStats {
+    pub fn merge(&mut self, o: &InferenceStats) {
+        self.sessions_opened += o.sessions_opened;
+        self.sessions_reset += o.sessions_reset;
+        self.sessions_closed += o.sessions_closed;
+        self.sessions_evicted += o.sessions_evicted;
+        self.kv_entries += o.kv_entries;
+        self.kv_peak += o.kv_peak;
+        self.kv_appends += o.kv_appends;
+        self.duplicate_appends += o.duplicate_appends;
+        self.gap_drops += o.gap_drops;
+        self.tokens_streamed += o.tokens_streamed;
+        self.repairs += o.repairs;
+        self.faults_propagated += o.faults_propagated;
+        self.ttft.merge(&o.ttft);
+    }
+
+    pub fn summary(&mut self) -> String {
+        format!(
+            "sessions={} (reset {}, closed {}, evicted {}) kv_entries={} (peak {}) appends={} dup={} gaps={} tokens={} repairs={} faults={} ttft_p50={} ttft_p99={}",
+            self.sessions_opened,
+            self.sessions_reset,
+            self.sessions_closed,
+            self.sessions_evicted,
+            self.kv_entries,
+            self.kv_peak,
+            self.kv_appends,
+            self.duplicate_appends,
+            self.gap_drops,
+            self.tokens_streamed,
+            self.repairs,
+            self.faults_propagated,
+            crate::util::timefmt::fmt_ns(self.ttft.percentile(50.0)),
+            crate::util::timefmt::fmt_ns(self.ttft.percentile(99.0)),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -680,5 +758,33 @@ mod tests {
         }
         let qps = m.qps();
         assert!((qps - 1000.0).abs() < 1.0, "qps={qps}");
+    }
+
+    #[test]
+    fn inference_stats_merge_and_summary() {
+        let mut a = InferenceStats {
+            sessions_opened: 2,
+            kv_appends: 10,
+            kv_entries: 40,
+            kv_peak: 48,
+            tokens_streamed: 6,
+            ..InferenceStats::default()
+        };
+        a.ttft.record(5 * 1_000_000);
+        let mut b = InferenceStats {
+            sessions_opened: 1,
+            sessions_evicted: 1,
+            duplicate_appends: 2,
+            repairs: 1,
+            ..InferenceStats::default()
+        };
+        b.ttft.record(9 * 1_000_000);
+        a.merge(&b);
+        assert_eq!(a.sessions_opened, 3);
+        assert_eq!(a.sessions_evicted, 1);
+        assert_eq!(a.duplicate_appends, 2);
+        assert_eq!(a.repairs, 1);
+        assert_eq!(a.ttft.len(), 2);
+        assert!(a.summary().contains("repairs=1"));
     }
 }

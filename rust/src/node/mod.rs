@@ -85,6 +85,9 @@ pub struct LatticaNode {
     pub dcutr: Dcutr,
     /// Relay autoscaling: ad directory, reservation upkeep, promotion.
     pub relay_mgr: RelayManager,
+    /// EWMA ping RTTs per peer, consumed by the inference-plane router
+    /// ([`crate::route::LayerRouter`]) and piggybacked on layer ads.
+    pub rtt: crate::route::RttTable,
     pub blockstore: Blockstore,
     pub crdt: CrdtStore,
     /// Attached application logic (served inline, so RPC handlers add no
@@ -175,6 +178,7 @@ impl LatticaNode {
             rendezvous: Rendezvous::new(cfg.rendezvous_server),
             dcutr: Dcutr::new(),
             relay_mgr: RelayManager::new(),
+            rtt: crate::route::RttTable::new(),
             blockstore: Blockstore::new(),
             crdt: CrdtStore::new(),
             app: None,
@@ -591,6 +595,11 @@ impl LatticaNode {
             self.events.push_back(NodeEvent::Rendezvous(e));
         }
         while let Some(e) = self.ping.poll_event() {
+            // Feed the RTT table the router costs chains with before the
+            // event surfaces to the app.
+            if let PingEvent::Rtt { peer, rtt } = &e {
+                self.rtt.observe(*peer, *rtt);
+            }
             self.events.push_back(NodeEvent::Ping(e));
         }
         while let Some(_e) = self.identify.poll_event() {}

@@ -1,0 +1,318 @@
+//! Layer advertisement: how shard nodes tell the mesh which model layers
+//! they host.
+//!
+//! Two channels, mirroring the relay tier's split (DESIGN.md §Inference
+//! plane):
+//!
+//! * **DHT provider records** keyed by [`bucket_key`] `(model, layer-bucket)`
+//!   — durable discovery with TTL/republish riding the existing kad
+//!   machinery; a cold client walks the buckets of `[0, n_layer)` to find
+//!   holders.
+//! * **Gossip fast path** on [`LAYER_ADS_TOPIC`] — every [`AD_INTERVAL`] a
+//!   shard floods its current [`LayerAd`] (capacity, load, measured RTTs to
+//!   other holders), so routers re-score chains within seconds of load or
+//!   placement shifts. Ads expire after [`AD_TTL`].
+//!
+//! Ads carry the advertiser's own peer-to-peer RTT samples so a client can
+//! cost *inter-stage* edges it can never measure itself.
+
+use crate::content::Cid;
+use crate::identity::PeerId;
+use crate::multiaddr::{Multiaddr, Proto, SimAddr};
+use crate::netsim::Time;
+use crate::wire::{Message, PbReader, PbWriter};
+use anyhow::{ensure, Result};
+use std::collections::BTreeMap;
+
+/// Gossip topic for layer-ad refresh.
+pub const LAYER_ADS_TOPIC: &str = "lattica:layer-ads";
+/// Gossip refresh cadence.
+pub const AD_INTERVAL: Time = 2 * crate::netsim::SECOND;
+/// An ad not refreshed for this long is dropped from the book.
+pub const AD_TTL: Time = 10 * crate::netsim::SECOND;
+/// Layer-range granularity of the DHT key space: one provider bucket per
+/// `LAYER_BUCKET` consecutive layers.
+pub const LAYER_BUCKET: u32 = 8;
+/// Cap on piggybacked RTT samples per ad.
+pub const MAX_AD_RTTS: usize = 32;
+/// Sanity cap on advertised layer indices.
+pub const MAX_LAYERS: u32 = 4096;
+
+/// One node's claim: "I host layers `[layers.0, layers.1)` of `model`,
+/// reachable at `host:port`, with this much session capacity and current
+/// load." `rtts` are the advertiser's EWMA RTTs to other holders (ns).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerAd {
+    pub peer: PeerId,
+    pub host: u32,
+    pub port: u16,
+    pub model: String,
+    pub layers: (u32, u32),
+    /// Topology hint from [`crate::netsim::TopologyBuilder`] regions; used
+    /// as the cost estimate when no measured RTT exists for an edge.
+    pub region: u32,
+    /// Max resident KV entries (capacity accounting unit of `KvStore`).
+    pub capacity: u32,
+    /// Utilization percent 0–100 (resident entries / capacity).
+    pub load: u32,
+    pub rtts: Vec<(PeerId, u64)>,
+}
+
+/// Nested pb entry for one RTT sample.
+#[derive(Clone, Debug, Default, PartialEq)]
+struct RttEntry {
+    peer: Vec<u8>,
+    rtt: u64,
+}
+
+impl Message for RttEntry {
+    fn encode_to(&self, w: &mut PbWriter) {
+        w.bytes(1, &self.peer);
+        w.uint(2, self.rtt);
+    }
+
+    fn decode(buf: &[u8]) -> Result<RttEntry> {
+        let mut m = RttEntry::default();
+        PbReader::new(buf).for_each(|f| {
+            match f.number {
+                1 => m.peer = f.as_bytes()?.to_vec(),
+                2 => m.rtt = f.as_u64(),
+                _ => {}
+            }
+            Ok(())
+        })?;
+        Ok(m)
+    }
+}
+
+impl Message for LayerAd {
+    fn encode_to(&self, w: &mut PbWriter) {
+        w.bytes(1, &self.peer.0);
+        w.uint(2, self.host as u64);
+        w.uint(3, self.port as u64);
+        w.string(4, &self.model);
+        w.uint(5, self.layers.0 as u64);
+        w.uint(6, self.layers.1 as u64);
+        w.uint(7, self.region as u64);
+        w.uint(8, self.capacity as u64);
+        w.uint(9, self.load as u64);
+        let entries: Vec<RttEntry> = self
+            .rtts
+            .iter()
+            .take(MAX_AD_RTTS)
+            .map(|(p, r)| RttEntry { peer: p.0.to_vec(), rtt: *r })
+            .collect();
+        w.messages(10, &entries);
+    }
+
+    fn decode(buf: &[u8]) -> Result<LayerAd> {
+        let mut peer = Vec::new();
+        let mut host = 0u32;
+        let mut port = 0u64;
+        let mut model = String::new();
+        let mut start = 0u64;
+        let mut end = 0u64;
+        let mut region = 0u32;
+        let mut capacity = 0u32;
+        let mut load = 0u32;
+        let mut entries: Vec<RttEntry> = Vec::new();
+        PbReader::new(buf).for_each(|f| {
+            match f.number {
+                1 => peer = f.as_bytes()?.to_vec(),
+                2 => host = f.as_u32(),
+                3 => port = f.as_u64(),
+                4 => model = f.as_string()?,
+                5 => start = f.as_u64(),
+                6 => end = f.as_u64(),
+                7 => region = f.as_u32(),
+                8 => capacity = f.as_u32(),
+                9 => load = f.as_u32(),
+                10 => {
+                    if entries.len() < MAX_AD_RTTS {
+                        entries.push(f.as_message()?);
+                    }
+                }
+                _ => {}
+            }
+            Ok(())
+        })?;
+        ensure!(peer.len() == 32, "layer ad peer id must be 32 bytes");
+        ensure!(port <= u16::MAX as u64, "layer ad port out of range");
+        ensure!(
+            start < end && end <= MAX_LAYERS as u64,
+            "layer ad range [{start}, {end}) invalid"
+        );
+        ensure!(model.len() <= crate::route::MAX_MODEL_ID, "layer ad model id too long");
+        let mut id = [0u8; 32];
+        id.copy_from_slice(&peer);
+        let mut rtts = Vec::with_capacity(entries.len());
+        for e in entries {
+            if e.peer.len() == 32 {
+                let mut rid = [0u8; 32];
+                rid.copy_from_slice(&e.peer);
+                rtts.push((PeerId(rid), e.rtt));
+            }
+        }
+        Ok(LayerAd {
+            peer: PeerId(id),
+            host,
+            port: port as u16,
+            model,
+            layers: (start as u32, end as u32),
+            region,
+            capacity,
+            load: load.min(100),
+            rtts,
+        })
+    }
+}
+
+impl LayerAd {
+    pub fn multiaddr(&self) -> Multiaddr {
+        Multiaddr::direct(SimAddr::new(self.host, self.port), Proto::QuicLike).with_peer(self.peer)
+    }
+
+    /// The advertiser's measured RTT to `peer`, if it piggybacked one.
+    pub fn rtt_to(&self, peer: &PeerId) -> Option<u64> {
+        self.rtts.iter().find(|(p, _)| p == peer).map(|(_, r)| *r)
+    }
+}
+
+/// DHT provider key for `(model, layer-bucket)`.
+pub fn bucket_key(model: &str, bucket: u32) -> [u8; 32] {
+    let mut seed = Vec::with_capacity(model.len() + 24);
+    seed.extend_from_slice(b"lattica:layer-bucket:");
+    seed.extend_from_slice(model.as_bytes());
+    seed.push(b':');
+    seed.extend_from_slice(&bucket.to_le_bytes());
+    Cid::of(&seed).to_key()
+}
+
+/// The buckets a layer range `[a, b)` belongs to.
+pub fn buckets(layers: (u32, u32)) -> impl Iterator<Item = u32> {
+    (layers.0 / LAYER_BUCKET)..=(layers.1.saturating_sub(1) / LAYER_BUCKET)
+}
+
+/// Everything a node currently believes about layer holders: the merged
+/// view of gossip ads (and `describe` replies), with TTL expiry. BTreeMap
+/// keying gives deterministic iteration for routing.
+#[derive(Default)]
+pub struct AdBook {
+    ads: BTreeMap<PeerId, (LayerAd, Time)>,
+}
+
+impl AdBook {
+    pub fn new() -> AdBook {
+        AdBook::default()
+    }
+
+    /// Ingest a decoded ad observed at `now`.
+    pub fn ingest(&mut self, now: Time, ad: LayerAd) {
+        self.ads.insert(ad.peer, (ad, now + AD_TTL));
+    }
+
+    /// Ingest raw gossip payload; malformed ads are dropped.
+    pub fn ingest_bytes(&mut self, now: Time, data: &[u8]) {
+        if let Ok(ad) = LayerAd::decode(data) {
+            self.ingest(now, ad);
+        }
+    }
+
+    pub fn prune(&mut self, now: Time) {
+        self.ads.retain(|_, (_, exp)| *exp > now);
+    }
+
+    pub fn get(&self, peer: &PeerId) -> Option<&LayerAd> {
+        self.ads.get(peer).map(|(ad, _)| ad)
+    }
+
+    pub fn len(&self) -> usize {
+        self.ads.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ads.is_empty()
+    }
+
+    /// All live ads for `model`, in peer-id order (deterministic).
+    pub fn ads_for(&self, model: &str) -> impl Iterator<Item = &LayerAd> {
+        self.ads.values().map(|(ad, _)| ad).filter(move |ad| ad.model == model)
+    }
+
+    /// Live ads for `model` whose range starts exactly at `layer` — chain
+    /// assembly candidates for the next uncovered layer.
+    pub fn holders_starting_at(&self, model: &str, layer: u32) -> Vec<&LayerAd> {
+        self.ads_for(model).filter(|ad| ad.layers.0 == layer).collect()
+    }
+
+    /// Peers worth probing for RTT (every holder of any model).
+    pub fn peers(&self) -> Vec<PeerId> {
+        self.ads.keys().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::identity::Keypair;
+
+    fn ad(seed: u64, layers: (u32, u32)) -> LayerAd {
+        LayerAd {
+            peer: Keypair::from_seed(seed).peer_id(),
+            host: seed as u32 + 10,
+            port: 4001,
+            model: "sim-tiny".into(),
+            layers,
+            region: (seed % 3) as u32,
+            capacity: 4096,
+            load: (seed % 100) as u32,
+            rtts: vec![(Keypair::from_seed(seed + 1).peer_id(), 5_000_000 + seed)],
+        }
+    }
+
+    #[test]
+    fn ad_roundtrips() {
+        let a = ad(3, (4, 8));
+        let dec = LayerAd::decode(&a.encode()).unwrap();
+        assert_eq!(dec, a);
+        assert_eq!(dec.rtt_to(&Keypair::from_seed(4).peer_id()), Some(5_000_003));
+    }
+
+    #[test]
+    fn hostile_ads_rejected() {
+        // Empty peer id.
+        assert!(LayerAd::decode(&[]).is_err());
+        // Inverted layer range.
+        let mut bad = ad(1, (4, 8));
+        bad.layers = (8, 4);
+        assert!(LayerAd::decode(&bad.encode()).is_err());
+        // Port overflow survives encode (u16 field) but a forged wire value fails.
+        let mut w = PbWriter::new();
+        w.bytes(1, &[7u8; 32]);
+        w.uint(3, 1 << 20);
+        w.uint(5, 0);
+        w.uint(6, 4);
+        assert!(LayerAd::decode(&w.finish()).is_err());
+    }
+
+    #[test]
+    fn bucket_math() {
+        assert_eq!(buckets((0, 8)).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(buckets((0, 9)).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(buckets((8, 16)).collect::<Vec<_>>(), vec![1]);
+        assert_ne!(bucket_key("m", 0), bucket_key("m", 1));
+        assert_ne!(bucket_key("a", 0), bucket_key("b", 0));
+    }
+
+    #[test]
+    fn book_expiry_and_lookup() {
+        let mut book = AdBook::new();
+        book.ingest(0, ad(1, (0, 4)));
+        book.ingest(0, ad(2, (4, 8)));
+        book.ingest(9 * crate::netsim::SECOND, ad(3, (4, 8)));
+        assert_eq!(book.holders_starting_at("sim-tiny", 4).len(), 2);
+        book.prune(11 * crate::netsim::SECOND);
+        assert_eq!(book.len(), 1);
+        assert_eq!(book.holders_starting_at("sim-tiny", 4).len(), 1);
+    }
+}

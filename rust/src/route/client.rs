@@ -1,0 +1,470 @@
+//! Client side of the inference plane: owns the routed chain for each
+//! request and drives token-level pipelining.
+//!
+//! Per request, a [`ChainClient`]:
+//!
+//! 1. assembles a chain via [`LayerRouter`] (or uses a fixed chain in
+//!    [`RouteMode::Static`] — the pre-router baseline);
+//! 2. opens one `route` stream to the head, sends `Open` + the whole
+//!    context as `Token` frames back-to-back (pipelined prefill: position
+//!    `t + 1` is on the wire while `t` is still propagating down the
+//!    chain);
+//! 3. consumes `Emit` frames on the tail's `emit` stream, acks each token
+//!    and feeds it back to the head as the next `Token`;
+//! 4. on a `Fault` frame, head-stream death, or stall: quarantines the
+//!    dead hop, splices a repaired chain ([`LayerRouter::repair`]), bumps
+//!    the generation and re-opens with `n_prompt = prompt + acked` — the
+//!    replay resumes from the last acked token by construction.
+//!
+//! The client is event-driven: the embedding scenario drains its node's
+//! events into [`ChainClient::on_event`] and calls [`ChainClient::tick`]
+//! periodically.
+
+use super::ads::{AdBook, LAYER_ADS_TOPIC};
+use super::model::SimModel;
+use super::router::{LayerRouter, RttTable};
+use super::shard::{PROBE_INTERVAL, ROUTE_SERVICE};
+use super::wire::{Hop, OpenFrame, RouteFrame};
+use crate::identity::PeerId;
+use crate::metrics::InferenceStats;
+use crate::netsim::{Net, Time, SECOND};
+use crate::node::{LatticaNode, NodeEvent};
+use crate::protocols::gossip::GossipEvent;
+use crate::protocols::Ctx;
+use crate::rpc::{RpcEvent, StreamHandle};
+use std::collections::HashMap;
+
+/// How long without progress before a request assumes its chain is dead
+/// and repairs without a fault report (backstop for silent losses).
+pub const STALL_TIMEOUT: Time = 4 * SECOND;
+
+/// Chain selection policy.
+pub enum RouteMode {
+    /// Latency-aware routing over live ads (the tentpole path).
+    Routed,
+    /// A fixed, hand-assigned chain — the placement-blind baseline the
+    /// bench's naive arm measures.
+    Static(Vec<Hop>),
+}
+
+/// A finished request.
+#[derive(Clone, Debug)]
+pub struct Completed {
+    pub request: u64,
+    pub tokens: Vec<u32>,
+    pub started: Time,
+    pub finished: Time,
+    /// Time-to-first-token (first acked emit, across repairs).
+    pub ttft: Time,
+    pub repairs: u32,
+}
+
+struct Req {
+    prompt: Vec<u32>,
+    acked: Vec<u32>,
+    gen_len: usize,
+    chain: Vec<Hop>,
+    generation: u64,
+    head: Option<StreamHandle>,
+    dialing: bool,
+    started: Time,
+    first_emit: Option<Time>,
+    last_activity: Time,
+    repairs: u32,
+}
+
+/// See module docs.
+pub struct ChainClient {
+    pub model: SimModel,
+    pub router: LayerRouter,
+    pub book: AdBook,
+    mode: RouteMode,
+    reqs: HashMap<u64, Req>,
+    next_req: u64,
+    head_streams: HashMap<StreamHandle, u64>,
+    /// Tail-opened emit streams; bound to a request by their first Emit.
+    emit_streams: HashMap<StreamHandle, Option<u64>>,
+    pub stats: InferenceStats,
+    pub completed: Vec<Completed>,
+    pub stall_timeout: Time,
+    probe_rr: usize,
+    last_probe: Time,
+}
+
+impl ChainClient {
+    /// Subscribes `node` to the layer-ads topic and returns a client for
+    /// `model`. `my_region` seeds unmeasured-edge cost estimates.
+    pub fn new(
+        node: &mut LatticaNode,
+        net: &mut Net,
+        model: SimModel,
+        my_region: u32,
+        mode: RouteMode,
+    ) -> ChainClient {
+        let mut ctx = Ctx::new(&mut node.swarm, net);
+        node.gossip.subscribe(&mut ctx, LAYER_ADS_TOPIC);
+        let router = LayerRouter::new(&model.model_id, model.n_layer, my_region);
+        ChainClient {
+            model,
+            router,
+            book: AdBook::new(),
+            mode,
+            reqs: HashMap::new(),
+            next_req: 1,
+            head_streams: HashMap::new(),
+            emit_streams: HashMap::new(),
+            stats: InferenceStats::default(),
+            completed: Vec::new(),
+            stall_timeout: STALL_TIMEOUT,
+            probe_rr: 0,
+            last_probe: 0,
+        }
+    }
+
+    /// Begin a request; returns its id. The chain opens as soon as the ad
+    /// book can cover the layer range (immediately, if it already can).
+    pub fn start(
+        &mut self,
+        node: &mut LatticaNode,
+        net: &mut Net,
+        prompt: Vec<u32>,
+        gen_len: usize,
+    ) -> u64 {
+        assert!(!prompt.is_empty() && gen_len > 0);
+        let now = net.now();
+        let id = self.next_req;
+        self.next_req += 1;
+        self.reqs.insert(
+            id,
+            Req {
+                prompt,
+                acked: Vec::new(),
+                gen_len,
+                chain: Vec::new(),
+                generation: 1,
+                head: None,
+                dialing: false,
+                started: now,
+                first_emit: None,
+                last_activity: now,
+                repairs: 0,
+            },
+        );
+        self.try_open(node, net, id, None);
+        id
+    }
+
+    /// Requests neither completed nor abandoned.
+    pub fn in_flight(&self) -> usize {
+        self.reqs.len()
+    }
+
+    /// In-flight requests that have acked at least one token — "mid-stream"
+    /// from the kill scenario's point of view.
+    pub fn partially_acked(&self) -> usize {
+        self.reqs.values().filter(|r| !r.acked.is_empty()).count()
+    }
+
+    /// The peers on `request`'s current chain (empty if unopened).
+    pub fn chain_of(&self, request: u64) -> Vec<PeerId> {
+        self.reqs
+            .get(&request)
+            .map(|r| r.chain.iter().map(|h| h.peer).collect())
+            .unwrap_or_default()
+    }
+
+    /// Feed one node event. Returns true if the event belonged to the
+    /// inference plane and was consumed.
+    pub fn on_event(&mut self, node: &mut LatticaNode, net: &mut Net, ev: &NodeEvent) -> bool {
+        match ev {
+            NodeEvent::Gossip(GossipEvent::Received { topic, data, .. })
+                if topic == LAYER_ADS_TOPIC =>
+            {
+                self.book.ingest_bytes(net.now(), data);
+                true
+            }
+            NodeEvent::Rpc(RpcEvent::StreamOpened { service, method, handle, .. })
+                if service == ROUTE_SERVICE && method == "emit" =>
+            {
+                self.emit_streams.insert(*handle, None);
+                true
+            }
+            NodeEvent::Rpc(RpcEvent::StreamItem { handle, payload, .. }) => {
+                if self.emit_streams.contains_key(handle) {
+                    if let Ok(RouteFrame::Emit { request, pos, token }) =
+                        RouteFrame::decode(payload.as_slice())
+                    {
+                        self.emit_streams.insert(*handle, Some(request));
+                        self.ack(node, net, request, pos, token);
+                    }
+                    return true;
+                }
+                if let Some(&request) = self.head_streams.get(handle) {
+                    if let Ok(RouteFrame::Fault { request: fr, hop_index, .. }) =
+                        RouteFrame::decode(payload.as_slice())
+                    {
+                        if fr == request {
+                            let dead = self
+                                .reqs
+                                .get(&request)
+                                .and_then(|r| r.chain.get(hop_index as usize))
+                                .map(|h| h.peer);
+                            self.repair(node, net, request, dead);
+                        }
+                    }
+                    return true;
+                }
+                false
+            }
+            NodeEvent::Rpc(RpcEvent::StreamEnded { handle }) => {
+                if let Some(bound) = self.emit_streams.remove(handle) {
+                    // Old-generation emit streams end during repair; live
+                    // tail death is reported by the stage above it (Fault)
+                    // or caught by the stall backstop.
+                    let _ = bound;
+                    return true;
+                }
+                if let Some(request) = self.head_streams.remove(handle) {
+                    if let Some(r) = self.reqs.get(&request) {
+                        if r.head == Some(*handle) {
+                            // Head died under us mid-stream.
+                            let dead = r.chain.first().map(|h| h.peer);
+                            self.repair(node, net, request, dead);
+                        }
+                    }
+                    return true;
+                }
+                false
+            }
+            NodeEvent::Rpc(RpcEvent::CreditsAvailable { handle, .. }) => {
+                self.head_streams.contains_key(handle)
+            }
+            NodeEvent::PeerConnected { peer, .. } => {
+                let waiting: Vec<u64> = self
+                    .reqs
+                    .iter()
+                    .filter(|(_, r)| r.dialing && r.chain.first().map(|h| h.peer) == Some(*peer))
+                    .map(|(id, _)| *id)
+                    .collect();
+                for id in waiting {
+                    self.open_head(node, net, id);
+                }
+                false // others may care about connectivity too
+            }
+            _ => false,
+        }
+    }
+
+    /// Periodic drive: ad expiry, RTT probes, dial retries, stall repair.
+    pub fn tick(&mut self, node: &mut LatticaNode, net: &mut Net) {
+        let now = net.now();
+        self.book.prune(now);
+        if now.saturating_sub(self.last_probe) >= PROBE_INTERVAL {
+            self.last_probe = now;
+            let peers = self.book.peers();
+            if !peers.is_empty() {
+                let p = peers[self.probe_rr % peers.len()];
+                self.probe_rr = self.probe_rr.wrapping_add(1);
+                if let Some(ad) = self.book.get(&p) {
+                    node.swarm.peerstore.add_address(p, ad.multiaddr());
+                }
+                if node.swarm.is_connected(&p) {
+                    let mut ctx = Ctx::new(&mut node.swarm, net);
+                    let _ = node.ping.ping(&mut ctx, &p);
+                } else {
+                    let mut ctx = Ctx::new(&mut node.swarm, net);
+                    let _ = ctx.ensure_connected(&p);
+                }
+            }
+        }
+        let ids: Vec<u64> = self.reqs.keys().copied().collect();
+        for id in ids {
+            let (needs_chain, dialing, has_head, stalled) = {
+                let r = &self.reqs[&id];
+                (
+                    r.chain.is_empty(),
+                    r.dialing,
+                    r.head.is_some(),
+                    now.saturating_sub(r.last_activity) >= self.stall_timeout,
+                )
+            };
+            if needs_chain {
+                self.try_open(node, net, id, None);
+            } else if dialing || !has_head {
+                self.open_head(node, net, id);
+            } else if stalled {
+                self.repair(node, net, id, None);
+            }
+        }
+    }
+
+    /// Assemble (or re-assemble) a chain for `id` and open it. `dead` is
+    /// the hop being routed around, if known — splice-repair keeps the
+    /// surviving hops (and their resident KV state relevance) intact.
+    fn try_open(&mut self, node: &mut LatticaNode, net: &mut Net, id: u64, dead: Option<PeerId>) {
+        let now = net.now();
+        let old_chain = match self.reqs.get(&id) {
+            Some(r) => r.chain.clone(),
+            None => return,
+        };
+        let chain = match (&self.mode, dead) {
+            (RouteMode::Static(c), _) => Some(c.clone()),
+            (RouteMode::Routed, Some(d)) if !old_chain.is_empty() => self
+                .router
+                .repair(now, &self.book, &node.rtt, &old_chain, &d)
+                .or_else(|| self.router.assemble(now, &self.book, &node.rtt)),
+            (RouteMode::Routed, _) => self.router.assemble(now, &self.book, &node.rtt),
+        };
+        let Some(chain) = chain else {
+            // Can't cover the layer range yet; tick retries as ads arrive.
+            if let Some(r) = self.reqs.get_mut(&id) {
+                r.chain.clear();
+            }
+            return;
+        };
+        if let Some(r) = self.reqs.get_mut(&id) {
+            r.chain = chain;
+        }
+        self.open_head(node, net, id);
+    }
+
+    /// Dial/open the head stream and replay the full context into it.
+    fn open_head(&mut self, node: &mut LatticaNode, net: &mut Net, id: u64) {
+        let now = net.now();
+        let Some(r) = self.reqs.get(&id) else { return };
+        if r.head.is_some() || r.chain.is_empty() {
+            return;
+        }
+        let head = r.chain[0];
+        node.swarm.peerstore.add_address(head.peer, head.multiaddr());
+        if !node.swarm.is_connected(&head.peer) {
+            let mut ctx = Ctx::new(&mut node.swarm, net);
+            let _ = ctx.ensure_connected(&head.peer);
+            if let Some(r) = self.reqs.get_mut(&id) {
+                r.dialing = true;
+            }
+            return;
+        }
+        let opened = {
+            let mut ctx = Ctx::new(&mut node.swarm, net);
+            node.rpc.open_rpc_stream_method(&mut ctx, &head.peer, ROUTE_SERVICE, "open")
+        };
+        let Ok(h) = opened else {
+            if let Some(r) = self.reqs.get_mut(&id) {
+                r.dialing = true;
+            }
+            return;
+        };
+        let client_hop = Hop {
+            peer: node.peer_id(),
+            host: node.swarm.local_addr.host,
+            port: node.swarm.local_addr.port,
+            layers: (0, 0),
+        };
+        let (open_frame, context) = {
+            let r = self.reqs.get_mut(&id).expect("checked above");
+            r.head = Some(h);
+            r.dialing = false;
+            r.last_activity = now;
+            let context: Vec<u32> = r.prompt.iter().chain(r.acked.iter()).copied().collect();
+            let o = OpenFrame {
+                request: id,
+                generation: r.generation,
+                model: self.model.model_id.clone(),
+                hop_index: 0,
+                n_prompt: context.len() as u64,
+                client: client_hop,
+                chain: r.chain.clone(),
+            };
+            (o, context)
+        };
+        self.head_streams.insert(h, id);
+        {
+            let mut ctx = Ctx::new(&mut node.swarm, net);
+            node.rpc.send_item(&mut ctx, h, RouteFrame::Open(open_frame).encode());
+        }
+        // Pipelined prefill/replay: every context position goes out
+        // back-to-back; stream credits buffer the burst.
+        for (pos, token) in context.into_iter().enumerate() {
+            let frame = RouteFrame::Token { request: id, pos: pos as u64, token }.encode();
+            let mut ctx = Ctx::new(&mut node.swarm, net);
+            node.rpc.send_item(&mut ctx, h, frame);
+        }
+    }
+
+    /// Accept an emitted token if it is exactly the next one this request
+    /// needs; stale (pre-repair) emits fall out here.
+    fn ack(&mut self, node: &mut LatticaNode, net: &mut Net, request: u64, pos: u64, token: u32) {
+        let now = net.now();
+        let (first, done, head) = {
+            let Some(r) = self.reqs.get_mut(&request) else { return };
+            let expect_ctx = (r.prompt.len() + r.acked.len()) as u64;
+            if pos + 1 != expect_ctx {
+                return; // duplicate from a pre-repair generation (or gap)
+            }
+            r.acked.push(token);
+            r.last_activity = now;
+            let first = r.first_emit.is_none();
+            if first {
+                r.first_emit = Some(now);
+            }
+            (first, r.acked.len() >= r.gen_len, r.head)
+        };
+        if first {
+            let started = self.reqs[&request].started;
+            self.stats.ttft.record(now.saturating_sub(started));
+        }
+        self.stats.tokens_streamed += 1;
+        if done {
+            let r = self.reqs.remove(&request).expect("present");
+            if let Some(h) = r.head {
+                self.head_streams.remove(&h);
+                let mut ctx = Ctx::new(&mut node.swarm, net);
+                node.rpc.end_stream(&mut ctx, h);
+            }
+            self.completed.push(Completed {
+                request,
+                tokens: r.acked,
+                started: r.started,
+                finished: now,
+                ttft: r.first_emit.unwrap_or(now).saturating_sub(r.started),
+                repairs: r.repairs,
+            });
+            return;
+        }
+        // Feed the accepted token back as the next context position.
+        if let Some(h) = head {
+            let frame = RouteFrame::Token { request, pos: pos + 1, token }.encode();
+            let mut ctx = Ctx::new(&mut node.swarm, net);
+            node.rpc.send_item(&mut ctx, h, frame);
+        }
+    }
+
+    /// Splice around `dead` (or re-assemble when unknown) and replay.
+    fn repair(&mut self, node: &mut LatticaNode, net: &mut Net, request: u64, dead: Option<PeerId>) {
+        let now = net.now();
+        let Some(r) = self.reqs.get_mut(&request) else { return };
+        r.repairs += 1;
+        r.generation += 1;
+        r.dialing = false;
+        r.last_activity = now;
+        let old_head = r.head.take();
+        self.stats.repairs += 1;
+        if let Some(p) = dead {
+            self.router.mark_dead(p, now);
+        }
+        // Unbind this request's emit stream so its eventual end (the old
+        // chain tearing down) isn't mistaken for a fresh failure.
+        for bound in self.emit_streams.values_mut() {
+            if *bound == Some(request) {
+                *bound = None;
+            }
+        }
+        if let Some(h) = old_head {
+            self.head_streams.remove(&h);
+            let mut ctx = Ctx::new(&mut node.swarm, net);
+            node.rpc.end_stream(&mut ctx, h);
+        }
+        self.try_open(node, net, request, dead);
+    }
+}

@@ -1,0 +1,33 @@
+//! The distributed inference plane (DESIGN.md §Inference plane).
+//!
+//! Turns "model sync + RPC" into an end-to-end serving system on top of
+//! the mesh:
+//!
+//! * [`ads`] — layer advertisement: DHT provider buckets + a gossip fast
+//!   path announcing which model layers each node hosts;
+//! * [`router`] — latency-aware chain assembly over measured RTTs, with
+//!   quarantine and splice-repair;
+//! * [`session`] — per-request KV-cache residency on shard stages with
+//!   LRU eviction and capacity accounting;
+//! * [`shard`] — the stage itself: `route` streams in, activations
+//!   forwarded downstream, faults upstream;
+//! * [`client`] — chain ownership, token-level pipelining, repair/replay;
+//! * [`model`] — the deterministic synthetic model standing in for the
+//!   stubbed PJRT runtime;
+//! * [`wire`] — the stream frame codec.
+
+pub mod ads;
+pub mod client;
+pub mod model;
+pub mod router;
+pub mod session;
+pub mod shard;
+pub mod wire;
+
+pub use ads::{bucket_key, buckets, AdBook, LayerAd, AD_INTERVAL, AD_TTL, LAYER_ADS_TOPIC};
+pub use client::{ChainClient, Completed, RouteMode, STALL_TIMEOUT};
+pub use model::SimModel;
+pub use router::{LayerRouter, RttTable, QUARANTINE};
+pub use session::{Advance, KvSession, KvStore};
+pub use shard::{RouteShard, ShardSpec, ROUTE_SERVICE};
+pub use wire::{Hop, OpenFrame, RouteFrame, MAX_CHAIN, MAX_HIDDEN, MAX_MODEL_ID};

@@ -1,0 +1,184 @@
+//! Deterministic synthetic transformer stand-in for the inference plane.
+//!
+//! The PJRT runtime in this tree is a stub, so nothing in the route plane
+//! can execute a compiled model. [`SimModel`] substitutes a tiny pure-Rust
+//! recurrence with the *structural* properties the serving system needs:
+//!
+//! * layers are split across stages exactly like pipeline parallelism —
+//!   stage k applies layers `[a, b)` to a hidden vector and forwards it;
+//! * each layer carries per-request state (one vector per layer) that must
+//!   stay resident on the stage between tokens — the KV-cache analogue that
+//!   [`crate::route::KvSession`] manages;
+//! * decode is autoregressive: the token at position `p + 1` is the argmax
+//!   of the logits at position `p`, so a stage that loses state and replays
+//!   from the wrong context produces visibly different output.
+//!
+//! Everything is seeded integer hashing mapped to `f32`, with a fixed
+//! operation order (position outer, layer inner), so a distributed chain
+//! and [`SimModel::reference_generate`] produce byte-identical token
+//! streams — the property the kill/replay scenario asserts.
+
+/// Synthetic model description: enough of a `ModelConfig` to size the
+/// hidden state and vocab without any compiled artifacts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimModel {
+    pub model_id: String,
+    pub n_layer: u32,
+    pub d_model: usize,
+    pub vocab: u32,
+}
+
+/// splitmix64 — the repo's standard deterministic mixer.
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Map a seed to a float in `[-1, 1)`. Derived from the high bits so the
+/// value is identical on every platform.
+#[inline]
+fn unit(seed: u64) -> f32 {
+    let v = (mix(seed) >> 40) as u32; // 24 bits
+    (v as f32) / ((1u32 << 23) as f32) - 1.0
+}
+
+impl SimModel {
+    /// Small default used by benches/tests when no artifacts exist: 12
+    /// layers (splits evenly into 2/3/4 stages), tiny hidden dim, small
+    /// vocab so argmax decode stays cheap.
+    pub fn tiny() -> SimModel {
+        SimModel {
+            model_id: "sim-tiny".to_string(),
+            n_layer: 12,
+            d_model: 16,
+            vocab: 61,
+        }
+    }
+
+    fn salt(&self) -> u64 {
+        self.model_id
+            .bytes()
+            .fold(0xa076_1d64_78bd_642fu64, |h, b| mix(h ^ b as u64))
+    }
+
+    /// Token + position embedding: the hidden vector entering layer 0.
+    pub fn embed(&self, token: u32, pos: u64) -> Vec<f32> {
+        let salt = self.salt();
+        (0..self.d_model)
+            .map(|i| {
+                let t = unit(salt ^ ((token as u64) << 20) ^ i as u64);
+                let p = unit(salt ^ 0x517c_c1b7_2722_0a95 ^ (pos << 20) ^ i as u64);
+                0.9 * t + 0.1 * p
+            })
+            .collect()
+    }
+
+    /// Apply one layer at one position. `state` is that layer's resident
+    /// per-request state (the KV-cache analogue); both the hidden vector
+    /// and the state are updated in place. The contraction (coefficients
+    /// sum below 1 plus a small bounded injection) keeps values bounded
+    /// over arbitrarily long sequences.
+    pub fn layer_step(&self, layer: u32, h: &mut [f32], state: &mut [f32]) {
+        debug_assert_eq!(h.len(), self.d_model);
+        debug_assert_eq!(state.len(), self.d_model);
+        let salt = self.salt() ^ ((layer as u64) << 40);
+        for i in 0..self.d_model {
+            let w = unit(salt ^ i as u64);
+            let hv = 0.7 * h[i] + 0.3 * state[i] + 0.05 * w;
+            state[i] = 0.5 * state[i] + 0.5 * hv;
+            h[i] = hv;
+        }
+    }
+
+    /// Greedy decode head: argmax over pseudo-random per-vocab projections
+    /// of the final hidden vector. Ties break to the lowest token id, so
+    /// the result is deterministic even under f32 equality.
+    pub fn logits_argmax(&self, h: &[f32]) -> u32 {
+        let salt = self.salt() ^ 0xd6e8_feb8_6659_fd93;
+        let mut best = 0u32;
+        let mut best_score = f32::NEG_INFINITY;
+        for v in 0..self.vocab {
+            let mut score = 0.0f32;
+            for (i, &hv) in h.iter().enumerate() {
+                score += hv * unit(salt ^ ((v as u64) << 24) ^ i as u64);
+            }
+            if score > best_score {
+                best_score = score;
+                best = v;
+            }
+        }
+        best
+    }
+
+    /// Single-process oracle: run the full layer stack autoregressively and
+    /// return the `gen_len` generated tokens. The operation order (position
+    /// outer, layer inner) matches the distributed chain exactly, so a
+    /// correct chain — including one repaired mid-stream — reproduces this
+    /// byte for byte.
+    pub fn reference_generate(&self, prompt: &[u32], gen_len: usize) -> Vec<u32> {
+        assert!(!prompt.is_empty(), "prompt must be non-empty");
+        let mut state: Vec<Vec<f32>> = (0..self.n_layer).map(|_| vec![0.0; self.d_model]).collect();
+        let mut out = Vec::with_capacity(gen_len);
+        let mut pos = 0u64;
+        let mut last_h = vec![0.0; self.d_model];
+        let mut feed: Vec<u32> = prompt.to_vec();
+        while out.len() < gen_len {
+            let token = feed[pos as usize];
+            let mut h = self.embed(token, pos);
+            for l in 0..self.n_layer {
+                self.layer_step(l, &mut h, &mut state[l as usize]);
+            }
+            last_h.copy_from_slice(&h);
+            if (pos + 1) as usize >= prompt.len() {
+                let next = self.logits_argmax(&last_h);
+                out.push(next);
+                feed.push(next);
+            }
+            pos += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_is_deterministic_and_in_vocab() {
+        let m = SimModel::tiny();
+        let prompt = [3, 1, 4, 1, 5];
+        let a = m.reference_generate(&prompt, 12);
+        let b = m.reference_generate(&prompt, 12);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 12);
+        assert!(a.iter().all(|&t| t < m.vocab));
+        // Not a constant stream (the recurrence actually mixes state).
+        assert!(a.windows(2).any(|w| w[0] != w[1]), "degenerate output {a:?}");
+    }
+
+    #[test]
+    fn different_prompts_diverge() {
+        let m = SimModel::tiny();
+        let a = m.reference_generate(&[1, 2, 3], 8);
+        let b = m.reference_generate(&[3, 2, 1], 8);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn values_stay_bounded() {
+        let m = SimModel::tiny();
+        let mut state: Vec<Vec<f32>> =
+            (0..m.n_layer).map(|_| vec![0.0; m.d_model]).collect();
+        for pos in 0..500u64 {
+            let mut h = m.embed((pos % m.vocab as u64) as u32, pos);
+            for l in 0..m.n_layer {
+                m.layer_step(l, &mut h, &mut state[l as usize]);
+            }
+            assert!(h.iter().all(|v| v.abs() < 10.0), "unbounded at pos {pos}");
+        }
+    }
+}

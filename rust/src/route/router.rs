@@ -1,0 +1,403 @@
+//! Chain routing: assemble the lowest-cost chain of layer-holders covering
+//! `[0, n_layer)`.
+//!
+//! Costing uses three sources, best first:
+//!
+//! 1. the local [`RttTable`] (EWMA of ping probes) for edges touching this
+//!    node;
+//! 2. RTT samples piggybacked on [`LayerAd`]s for inter-stage edges this
+//!    node can never measure itself (either endpoint's sample counts);
+//! 3. a region estimate ([`SAME_REGION_RTT`] / [`CROSS_REGION_RTT`]) when
+//!    nothing was measured — enough to prefer LAN/same-region holders from
+//!    the first request, before any probe returns.
+//!
+//! Advertised load adds up to [`LOAD_PENALTY_FULL`] so a saturated local
+//! replica loses to an idle remote one. Chain search is Dijkstra over
+//! `(covered_layers, holder)` states with peer-id tie-breaks, so results
+//! are deterministic for a given book + RTT table.
+
+use super::ads::{AdBook, LayerAd};
+use super::wire::Hop;
+use crate::identity::PeerId;
+use crate::netsim::{Time, MILLI, SECOND};
+use std::collections::{BinaryHeap, HashMap};
+
+/// EWMA weight of a new RTT sample.
+const RTT_ALPHA_NUM: u64 = 3;
+const RTT_ALPHA_DEN: u64 = 10;
+
+/// Cost estimate for an unmeasured same-region edge.
+pub const SAME_REGION_RTT: Time = 25 * MILLI;
+/// Cost estimate for an unmeasured cross-region edge.
+pub const CROSS_REGION_RTT: Time = 150 * MILLI;
+/// Added cost at 100% advertised load.
+pub const LOAD_PENALTY_FULL: Time = 50 * MILLI;
+/// How long a peer reported dead stays out of chain assembly.
+pub const QUARANTINE: Time = 15 * SECOND;
+
+/// EWMA round-trip times per peer, fed from ping probes (see the ping loop
+/// in `LatticaNode::pump`).
+#[derive(Default)]
+pub struct RttTable {
+    ewma: HashMap<PeerId, Time>,
+}
+
+impl RttTable {
+    pub fn new() -> RttTable {
+        RttTable::default()
+    }
+
+    pub fn observe(&mut self, peer: PeerId, sample: Time) {
+        let e = self.ewma.entry(peer).or_insert(sample);
+        *e = (*e * (RTT_ALPHA_DEN - RTT_ALPHA_NUM) + sample * RTT_ALPHA_NUM) / RTT_ALPHA_DEN;
+    }
+
+    pub fn get(&self, peer: &PeerId) -> Option<Time> {
+        self.ewma.get(peer).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ewma.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ewma.is_empty()
+    }
+
+    /// Samples in deterministic (peer-id) order, for ad piggybacking.
+    pub fn samples(&self) -> Vec<(PeerId, Time)> {
+        let mut v: Vec<(PeerId, Time)> = self.ewma.iter().map(|(p, r)| (*p, *r)).collect();
+        v.sort_by_key(|(p, _)| *p);
+        v
+    }
+}
+
+/// Assembles and repairs layer chains for one model.
+pub struct LayerRouter {
+    pub model: String,
+    pub n_layer: u32,
+    /// Region of the node doing the routing (the client), for estimating
+    /// unmeasured client↔holder edges.
+    pub my_region: u32,
+    quarantine: HashMap<PeerId, Time>,
+}
+
+fn region_estimate(a: u32, b: u32) -> Time {
+    if a == b {
+        SAME_REGION_RTT
+    } else {
+        CROSS_REGION_RTT
+    }
+}
+
+fn load_penalty(ad: &LayerAd) -> Time {
+    LOAD_PENALTY_FULL * ad.load.min(100) as Time / 100
+}
+
+impl LayerRouter {
+    pub fn new(model: &str, n_layer: u32, my_region: u32) -> LayerRouter {
+        LayerRouter {
+            model: model.to_string(),
+            n_layer,
+            my_region,
+            quarantine: HashMap::new(),
+        }
+    }
+
+    /// Exclude `peer` from assembly for [`QUARANTINE`] after a mid-stream
+    /// death or fault report.
+    pub fn mark_dead(&mut self, peer: PeerId, now: Time) {
+        self.quarantine.insert(peer, now + QUARANTINE);
+    }
+
+    pub fn is_quarantined(&self, peer: &PeerId, now: Time) -> bool {
+        self.quarantine.get(peer).is_some_and(|&until| until > now)
+    }
+
+    /// Cost of the client↔holder edge (used for both the head hop and the
+    /// tail's emit path back to the client).
+    fn client_cost(&self, ad: &LayerAd, rtt: &RttTable) -> Time {
+        rtt.get(&ad.peer)
+            .unwrap_or_else(|| region_estimate(self.my_region, ad.region))
+    }
+
+    /// Cost of the stage→stage edge `prev → next`.
+    fn hop_cost(prev: &LayerAd, next: &LayerAd) -> Time {
+        prev.rtt_to(&next.peer)
+            .or_else(|| next.rtt_to(&prev.peer))
+            .unwrap_or_else(|| region_estimate(prev.region, next.region))
+    }
+
+    /// Lowest-cost chain covering `[0, n_layer)`, or None if the live ads
+    /// can't cover the range. Cost = client→head RTT + inter-stage RTTs +
+    /// tail→client RTT + per-stage load penalties.
+    pub fn assemble(&self, now: Time, book: &AdBook, rtt: &RttTable) -> Option<Vec<Hop>> {
+        let usable: Vec<&LayerAd> = book
+            .ads_for(&self.model)
+            .filter(|ad| !self.is_quarantined(&ad.peer, now) && ad.layers.1 <= self.n_layer)
+            .collect();
+        if usable.is_empty() {
+            return None;
+        }
+        // State = index into `usable`; dist keyed by holder (its covered
+        // end is fixed by its ad). Deterministic: BinaryHeap ties broken by
+        // (cost, covered_end, peer id).
+        let mut dist: HashMap<PeerId, (Time, Option<PeerId>)> = HashMap::new();
+        let by_peer: HashMap<PeerId, &LayerAd> =
+            usable.iter().map(|ad| (ad.peer, *ad)).collect();
+        let mut heap: BinaryHeap<std::cmp::Reverse<(Time, u32, PeerId)>> = BinaryHeap::new();
+        for ad in &usable {
+            if ad.layers.0 == 0 {
+                let c = self.client_cost(ad, rtt) + load_penalty(ad);
+                let better = dist.get(&ad.peer).is_none_or(|(d, _)| c < *d);
+                if better {
+                    dist.insert(ad.peer, (c, None));
+                    heap.push(std::cmp::Reverse((c, ad.layers.1, ad.peer)));
+                }
+            }
+        }
+        let mut best_tail: Option<(Time, PeerId)> = None;
+        while let Some(std::cmp::Reverse((c, end, peer))) = heap.pop() {
+            let Some(&(dc, _)) = dist.get(&peer) else { continue };
+            if c > dc {
+                continue; // stale heap entry
+            }
+            let ad = by_peer[&peer];
+            if end == self.n_layer {
+                let total = c + self.client_cost(ad, rtt);
+                let better = best_tail.is_none_or(|(t, p)| total < t || (total == t && peer < p));
+                if better {
+                    best_tail = Some((total, peer));
+                }
+                continue;
+            }
+            for next in book.holders_starting_at(&self.model, end) {
+                if self.is_quarantined(&next.peer, now)
+                    || next.layers.1 > self.n_layer
+                    || next.peer == peer
+                {
+                    continue;
+                }
+                let nc = c + Self::hop_cost(ad, next) + load_penalty(next);
+                let better = dist
+                    .get(&next.peer)
+                    .is_none_or(|(d, p)| nc < *d || (nc == *d && Some(peer) < *p));
+                if better {
+                    dist.insert(next.peer, (nc, Some(peer)));
+                    heap.push(std::cmp::Reverse((nc, next.layers.1, next.peer)));
+                }
+            }
+        }
+        let (_, tail) = best_tail?;
+        // Reconstruct hops tail-to-head, then reverse.
+        let mut chain = Vec::new();
+        let mut cur = Some(tail);
+        while let Some(p) = cur {
+            let ad = by_peer[&p];
+            chain.push(Hop { peer: ad.peer, host: ad.host, port: ad.port, layers: ad.layers });
+            cur = dist[&p].1;
+        }
+        chain.reverse();
+        debug_assert_eq!(chain.first().map(|h| h.layers.0), Some(0));
+        debug_assert_eq!(chain.last().map(|h| h.layers.1), Some(self.n_layer));
+        Some(chain)
+    }
+
+    /// Placement-blind baseline: greedily take the lowest peer id that
+    /// starts at each uncovered layer — what the pre-router hand-assigned
+    /// stage map amounts to. Used by the bench's naive arm.
+    pub fn naive(&self, now: Time, book: &AdBook) -> Option<Vec<Hop>> {
+        let mut chain = Vec::new();
+        let mut covered = 0u32;
+        while covered < self.n_layer {
+            let next = book
+                .holders_starting_at(&self.model, covered)
+                .into_iter()
+                .filter(|ad| !self.is_quarantined(&ad.peer, now) && ad.layers.1 <= self.n_layer)
+                .min_by_key(|ad| ad.peer)?;
+            chain.push(Hop {
+                peer: next.peer,
+                host: next.host,
+                port: next.port,
+                layers: next.layers,
+            });
+            covered = next.layers.1;
+        }
+        Some(chain)
+    }
+
+    /// Repair a chain whose hop `dead` died mid-stream: splice the cheapest
+    /// alternate holder of the same range(s) and keep every live hop.
+    /// Falls back to full re-assembly when no drop-in alternate exists.
+    pub fn repair(
+        &self,
+        now: Time,
+        book: &AdBook,
+        rtt: &RttTable,
+        chain: &[Hop],
+        dead: &PeerId,
+    ) -> Option<Vec<Hop>> {
+        let mut out = Vec::with_capacity(chain.len());
+        for (i, hop) in chain.iter().enumerate() {
+            if hop.peer != *dead {
+                out.push(*hop);
+                continue;
+            }
+            let alt = book
+                .ads_for(&self.model)
+                .filter(|ad| {
+                    ad.layers == hop.layers
+                        && ad.peer != *dead
+                        && !self.is_quarantined(&ad.peer, now)
+                        && !chain.iter().any(|h| h.peer == ad.peer)
+                })
+                .min_by_key(|ad| {
+                    let up = match i.checked_sub(1).and_then(|j| chain.get(j)) {
+                        Some(prev) => match book.get(&prev.peer) {
+                            Some(pad) => Self::hop_cost(pad, ad),
+                            None => self.client_cost(ad, rtt),
+                        },
+                        None => self.client_cost(ad, rtt),
+                    };
+                    let down = match chain.get(i + 1) {
+                        Some(nx) => match book.get(&nx.peer) {
+                            Some(nad) => Self::hop_cost(ad, nad),
+                            None => self.client_cost(ad, rtt),
+                        },
+                        None => self.client_cost(ad, rtt),
+                    };
+                    (up + down + load_penalty(ad), ad.peer)
+                })?;
+            out.push(Hop { peer: alt.peer, host: alt.host, port: alt.port, layers: alt.layers });
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::identity::Keypair;
+
+    fn peer(seed: u64) -> PeerId {
+        Keypair::from_seed(seed).peer_id()
+    }
+
+    fn ad(seed: u64, layers: (u32, u32), region: u32, load: u32) -> LayerAd {
+        LayerAd {
+            peer: peer(seed),
+            host: seed as u32 + 10,
+            port: 4001,
+            model: "m".into(),
+            layers,
+            region,
+            capacity: 1024,
+            load,
+            rtts: Vec::new(),
+        }
+    }
+
+    /// Two stages, each with a local (region 0) and a remote (region 1)
+    /// replica. The router must pick both locals.
+    #[test]
+    fn prefers_measured_low_rtt_chain() {
+        let mut book = AdBook::new();
+        book.ingest(0, ad(1, (0, 4), 0, 0)); // local head
+        book.ingest(0, ad(2, (0, 4), 1, 0)); // remote head
+        book.ingest(0, ad(3, (4, 8), 0, 0)); // local tail
+        book.ingest(0, ad(4, (4, 8), 1, 0)); // remote tail
+        let mut rtt = RttTable::new();
+        rtt.observe(peer(1), 2 * MILLI);
+        rtt.observe(peer(2), 160 * MILLI);
+        rtt.observe(peer(3), 2 * MILLI);
+        rtt.observe(peer(4), 160 * MILLI);
+        let router = LayerRouter::new("m", 8, 0);
+        let chain = router.assemble(0, &book, &rtt).unwrap();
+        assert_eq!(
+            chain.iter().map(|h| h.peer).collect::<Vec<_>>(),
+            vec![peer(1), peer(3)]
+        );
+
+        // RTTs shift (local head now slow): the router re-scores.
+        rtt.observe(peer(1), 500 * MILLI);
+        rtt.observe(peer(1), 500 * MILLI);
+        rtt.observe(peer(1), 500 * MILLI);
+        rtt.observe(peer(1), 500 * MILLI);
+        rtt.observe(peer(1), 500 * MILLI);
+        let chain = router.assemble(0, &book, &rtt).unwrap();
+        assert_eq!(chain[0].peer, peer(2), "router must re-score on RTT shift");
+    }
+
+    /// With no measurements at all, region hints drive the choice.
+    #[test]
+    fn region_estimates_prefer_local() {
+        let mut book = AdBook::new();
+        book.ingest(0, ad(1, (0, 4), 1, 0));
+        book.ingest(0, ad(2, (0, 4), 0, 0));
+        book.ingest(0, ad(3, (4, 8), 1, 0));
+        book.ingest(0, ad(4, (4, 8), 0, 0));
+        let router = LayerRouter::new("m", 8, 0);
+        let chain = router.assemble(0, &book, &RttTable::new()).unwrap();
+        assert_eq!(
+            chain.iter().map(|h| h.peer).collect::<Vec<_>>(),
+            vec![peer(2), peer(4)]
+        );
+    }
+
+    /// A saturated local replica loses to an idle one.
+    #[test]
+    fn load_penalty_shifts_choice() {
+        let mut book = AdBook::new();
+        book.ingest(0, ad(1, (0, 8), 0, 100));
+        book.ingest(0, ad(2, (0, 8), 0, 0));
+        let router = LayerRouter::new("m", 8, 0);
+        let chain = router.assemble(0, &book, &RttTable::new()).unwrap();
+        assert_eq!(chain[0].peer, peer(2));
+    }
+
+    #[test]
+    fn quarantine_and_repair_splice() {
+        let mut book = AdBook::new();
+        book.ingest(0, ad(1, (0, 4), 0, 0));
+        book.ingest(0, ad(3, (4, 8), 0, 0));
+        book.ingest(0, ad(4, (4, 8), 1, 0));
+        let mut router = LayerRouter::new("m", 8, 0);
+        let rtt = RttTable::new();
+        let chain = router.assemble(0, &book, &rtt).unwrap();
+        assert_eq!(chain[1].peer, peer(3));
+
+        // Mid-stream death of the tail: splice in the remote alternate,
+        // keep the live head.
+        let repaired = router.repair(0, &book, &rtt, &chain, &peer(3)).unwrap();
+        assert_eq!(repaired[0].peer, peer(1), "live hop must be preserved");
+        assert_eq!(repaired[1].peer, peer(4));
+
+        // Quarantine also bars it from fresh assembly, then expires.
+        router.mark_dead(peer(3), 0);
+        let chain = router.assemble(MILLI, &book, &rtt).unwrap();
+        assert_eq!(chain[1].peer, peer(4));
+        let chain = router.assemble(QUARANTINE + MILLI, &book, &rtt).unwrap();
+        assert_eq!(chain[1].peer, peer(3));
+    }
+
+    #[test]
+    fn uncoverable_range_returns_none() {
+        let mut book = AdBook::new();
+        book.ingest(0, ad(1, (0, 4), 0, 0));
+        let router = LayerRouter::new("m", 8, 0);
+        assert!(router.assemble(0, &book, &RttTable::new()).is_none());
+        assert!(router.naive(0, &book).is_none());
+    }
+
+    #[test]
+    fn naive_ignores_latency() {
+        let mut book = AdBook::new();
+        // peer(1) < peer(2) not guaranteed; compare against computed order.
+        book.ingest(0, ad(1, (0, 8), 1, 0));
+        book.ingest(0, ad(2, (0, 8), 0, 0));
+        let router = LayerRouter::new("m", 8, 0);
+        let naive = router.naive(0, &book).unwrap();
+        let expect = peer(1).min(peer(2));
+        assert_eq!(naive[0].peer, expect);
+    }
+}

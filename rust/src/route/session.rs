@@ -1,0 +1,333 @@
+//! Per-request KV-cache residency on a shard stage.
+//!
+//! A [`KvSession`] is the stage-local state for one in-flight request: one
+//! resident vector per owned layer (the KV-cache analogue of
+//! [`super::SimModel`]) plus the next expected position. Sessions live in a
+//! [`KvStore`] keyed by request id, with LRU eviction against an entry
+//! capacity — accounting lands in [`crate::metrics::InferenceStats`].
+//!
+//! Replay correctness: a re-`open` with a higher generation resets the
+//! session (state zeroed, position rewound) so replayed positions recompute
+//! rather than double-append; a re-`open` with the *same* generation keeps
+//! it. Out-of-order positions are detected per append: `pos < next_pos` is
+//! a duplicate (dropped, counted), `pos > next_pos` is a gap (dropped,
+//! counted) — the chain protocol never legitimately produces either.
+
+use super::model::SimModel;
+use crate::metrics::InferenceStats;
+use crate::netsim::Time;
+use std::collections::HashMap;
+
+/// Outcome of feeding one position into a session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Advance {
+    /// State advanced; the hidden vector now reflects this stage's layers.
+    Ok,
+    /// `pos` already applied (pre-repair retransmit) — dropped.
+    Duplicate,
+    /// `pos` skips ahead of the session — dropped.
+    Gap,
+    /// No session is open for this request.
+    NoSession,
+}
+
+/// One request's resident state on one stage.
+pub struct KvSession {
+    pub request: u64,
+    pub generation: u64,
+    pub layers: (u32, u32),
+    /// Per-owned-layer recurrent state, `layers.1 - layers.0` vectors.
+    state: Vec<Vec<f32>>,
+    /// Next position this session expects.
+    pub next_pos: u64,
+    pub last_used: Time,
+}
+
+impl KvSession {
+    fn new(request: u64, generation: u64, layers: (u32, u32), d_model: usize, now: Time) -> Self {
+        let n = (layers.1 - layers.0) as usize;
+        KvSession {
+            request,
+            generation,
+            layers,
+            state: (0..n).map(|_| vec![0.0; d_model]).collect(),
+            next_pos: 0,
+            last_used: now,
+        }
+    }
+
+    /// Resident KV entries: one per (owned layer, position) pair — the unit
+    /// the store's capacity is accounted in.
+    pub fn entries(&self) -> u64 {
+        self.next_pos * self.state.len() as u64
+    }
+
+    fn advance(&mut self, model: &SimModel, pos: u64, h: &mut [f32], now: Time) -> Advance {
+        self.last_used = now;
+        if pos < self.next_pos {
+            return Advance::Duplicate;
+        }
+        if pos > self.next_pos {
+            return Advance::Gap;
+        }
+        for (i, l) in (self.layers.0..self.layers.1).enumerate() {
+            model.layer_step(l, h, &mut self.state[i]);
+        }
+        self.next_pos += 1;
+        Advance::Ok
+    }
+}
+
+/// All resident sessions on one stage, with LRU eviction against an entry
+/// capacity.
+pub struct KvStore {
+    pub capacity_entries: u64,
+    sessions: HashMap<u64, KvSession>,
+}
+
+impl KvStore {
+    pub fn new(capacity_entries: u64) -> KvStore {
+        KvStore { capacity_entries, sessions: HashMap::new() }
+    }
+
+    /// Open (or re-open) the session for `request`. Same generation: keep
+    /// resident state (duplicate Opens are harmless). Newer generation:
+    /// reset — the client is replaying after a repair and every position
+    /// must recompute. Older generation: stale frame, ignored.
+    pub fn open(
+        &mut self,
+        request: u64,
+        generation: u64,
+        layers: (u32, u32),
+        d_model: usize,
+        now: Time,
+        stats: &mut InferenceStats,
+    ) {
+        match self.sessions.get(&request) {
+            Some(s) if s.generation == generation => {}
+            Some(s) if s.generation > generation => {}
+            Some(_) => {
+                self.sessions
+                    .insert(request, KvSession::new(request, generation, layers, d_model, now));
+                stats.sessions_reset += 1;
+            }
+            None => {
+                self.sessions
+                    .insert(request, KvSession::new(request, generation, layers, d_model, now));
+                stats.sessions_opened += 1;
+            }
+        }
+        self.account(stats);
+    }
+
+    /// Feed position `pos` through `request`'s owned layers, evicting idle
+    /// sessions first if the append would exceed capacity. The active
+    /// request itself is never evicted.
+    pub fn advance(
+        &mut self,
+        model: &SimModel,
+        request: u64,
+        pos: u64,
+        h: &mut [f32],
+        now: Time,
+        stats: &mut InferenceStats,
+    ) -> Advance {
+        let Some(per_pos) = self
+            .sessions
+            .get(&request)
+            .map(|s| (s.layers.1 - s.layers.0) as u64)
+        else {
+            return Advance::NoSession;
+        };
+        while self.total_entries() + per_pos > self.capacity_entries {
+            if !self.evict_lru(request, stats) {
+                break; // only the active session left: let it run
+            }
+        }
+        let s = self.sessions.get_mut(&request).expect("checked above");
+        let adv = s.advance(model, pos, h, now);
+        match adv {
+            Advance::Ok => stats.kv_appends += 1,
+            Advance::Duplicate => stats.duplicate_appends += 1,
+            Advance::Gap => stats.gap_drops += 1,
+            Advance::NoSession => unreachable!(),
+        }
+        self.account(stats);
+        adv
+    }
+
+    /// Drop `request`'s session (stream closed or request complete).
+    pub fn close(&mut self, request: u64, stats: &mut InferenceStats) {
+        if self.sessions.remove(&request).is_some() {
+            stats.sessions_closed += 1;
+        }
+        self.account(stats);
+    }
+
+    pub fn get(&self, request: &u64) -> Option<&KvSession> {
+        self.sessions.get(request)
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    pub fn total_entries(&self) -> u64 {
+        self.sessions.values().map(|s| s.entries()).sum()
+    }
+
+    /// Utilization percent for load advertisement.
+    pub fn load_pct(&self) -> u32 {
+        if self.capacity_entries == 0 {
+            return 100;
+        }
+        ((self.total_entries() * 100 / self.capacity_entries) as u32).min(100)
+    }
+
+    fn account(&self, stats: &mut InferenceStats) {
+        stats.kv_entries = self.total_entries();
+        stats.kv_peak = stats.kv_peak.max(stats.kv_entries);
+    }
+
+    /// Evict the least-recently-used session other than `keep`. Ties break
+    /// on request id for determinism.
+    fn evict_lru(&mut self, keep: u64, stats: &mut InferenceStats) -> bool {
+        let victim = self
+            .sessions
+            .values()
+            .filter(|s| s.request != keep)
+            .map(|s| (s.last_used, s.request))
+            .min();
+        match victim {
+            Some((_, req)) => {
+                self.sessions.remove(&req);
+                stats.sessions_evicted += 1;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> SimModel {
+        SimModel::tiny()
+    }
+
+    fn push(store: &mut KvStore, m: &SimModel, req: u64, pos: u64, now: Time, st: &mut InferenceStats) -> Advance {
+        let mut h = m.embed(1, pos);
+        store.advance(m, req, pos, &mut h, now, st)
+    }
+
+    #[test]
+    fn lru_eviction_order_and_capacity() {
+        let m = model();
+        let mut st = InferenceStats::default();
+        // Each session owns 12 layers; capacity of 48 entries = 4 positions
+        // across all sessions.
+        let mut store = KvStore::new(48);
+        for req in 0..3u64 {
+            store.open(req, 0, (0, m.n_layer), m.d_model, req, &mut st);
+            assert_eq!(push(&mut store, &m, req, 0, req, &mut st), Advance::Ok);
+        }
+        assert_eq!(store.total_entries(), 36);
+        // Touch 0 so 1 becomes LRU, then grow 2 past capacity.
+        assert_eq!(push(&mut store, &m, 0, 1, 10, &mut st), Advance::Ok);
+        assert_eq!(push(&mut store, &m, 2, 1, 11, &mut st), Advance::Ok);
+        assert_eq!(st.sessions_evicted, 1);
+        assert!(store.get(&1).is_none(), "LRU session (1) must be evicted");
+        assert!(store.get(&0).is_some() && store.get(&2).is_some());
+        assert!(store.total_entries() <= 48);
+        assert_eq!(st.kv_entries, store.total_entries());
+        assert!(st.kv_peak >= st.kv_entries);
+    }
+
+    #[test]
+    fn active_session_never_evicted() {
+        let m = model();
+        let mut st = InferenceStats::default();
+        let mut store = KvStore::new(12); // one position of one session
+        store.open(7, 0, (0, m.n_layer), m.d_model, 0, &mut st);
+        for pos in 0..5 {
+            assert_eq!(push(&mut store, &m, 7, pos, pos, &mut st), Advance::Ok);
+        }
+        assert_eq!(st.sessions_evicted, 0);
+        assert!(store.get(&7).is_some());
+    }
+
+    #[test]
+    fn duplicates_and_gaps_do_not_mutate() {
+        let m = model();
+        let mut st = InferenceStats::default();
+        let mut store = KvStore::new(1_000_000);
+        store.open(1, 0, (0, 4), m.d_model, 0, &mut st);
+        assert_eq!(push(&mut store, &m, 1, 0, 0, &mut st), Advance::Ok);
+        assert_eq!(push(&mut store, &m, 1, 1, 1, &mut st), Advance::Ok);
+        let entries = store.total_entries();
+        assert_eq!(push(&mut store, &m, 1, 0, 2, &mut st), Advance::Duplicate);
+        assert_eq!(push(&mut store, &m, 1, 5, 3, &mut st), Advance::Gap);
+        assert_eq!(store.total_entries(), entries);
+        assert_eq!(st.duplicate_appends, 1);
+        assert_eq!(st.gap_drops, 1);
+        assert_eq!(push(&mut store, &m, 99, 0, 4, &mut st), Advance::NoSession);
+    }
+
+    #[test]
+    fn generation_bump_resets_same_keeps() {
+        let m = model();
+        let mut st = InferenceStats::default();
+        let mut store = KvStore::new(1_000_000);
+        store.open(1, 0, (0, 4), m.d_model, 0, &mut st);
+        push(&mut store, &m, 1, 0, 0, &mut st);
+        push(&mut store, &m, 1, 1, 0, &mut st);
+        // Same generation: duplicate Open keeps state.
+        store.open(1, 0, (0, 4), m.d_model, 1, &mut st);
+        assert_eq!(store.get(&1).unwrap().next_pos, 2);
+        // Newer generation: replay resets to position 0.
+        store.open(1, 1, (0, 4), m.d_model, 2, &mut st);
+        assert_eq!(store.get(&1).unwrap().next_pos, 0);
+        assert_eq!(st.sessions_reset, 1);
+        assert_eq!(push(&mut store, &m, 1, 0, 3, &mut st), Advance::Ok);
+    }
+
+    /// Three stages driven by hand through their KvStores reproduce the
+    /// single-process oracle exactly — the distributed-equals-reference
+    /// property the networked scenario also asserts.
+    #[test]
+    fn staged_sessions_match_reference() {
+        let m = model();
+        let prompt = [5u32, 9, 2, 7];
+        let gen_len = 6;
+        let want = m.reference_generate(&prompt, gen_len);
+
+        let ranges = [(0u32, 4u32), (4, 8), (8, 12)];
+        let mut st = InferenceStats::default();
+        let mut stores: Vec<KvStore> = ranges.iter().map(|_| KvStore::new(1 << 20)).collect();
+        for (i, r) in ranges.iter().enumerate() {
+            stores[i].open(1, 0, *r, m.d_model, 0, &mut st);
+        }
+        let mut got = Vec::new();
+        let mut feed: Vec<u32> = prompt.to_vec();
+        let mut pos = 0u64;
+        while got.len() < gen_len {
+            let mut h = m.embed(feed[pos as usize], pos);
+            for (i, _) in ranges.iter().enumerate() {
+                assert_eq!(stores[i].advance(&m, 1, pos, &mut h, pos, &mut st), Advance::Ok);
+            }
+            if (pos + 1) as usize >= prompt.len() {
+                let t = m.logits_argmax(&h);
+                got.push(t);
+                feed.push(t);
+            }
+            pos += 1;
+        }
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,594 @@
+//! Shard-side of the inference plane: one pipeline stage.
+//!
+//! [`RouteShard::install`] registers the `route` service on a node and
+//! wires an [`App`] interceptor, turning it into a stage that:
+//!
+//! * advertises its layer range on [`LAYER_ADS_TOPIC`] + DHT provider
+//!   buckets (see [`super::ads`]) and answers unary `describe` with its
+//!   current [`LayerAd`];
+//! * accepts `route` streams carrying [`RouteFrame`]s: `Open` pins a
+//!   [`KvSession`](super::KvSession) and a downstream stream to the next
+//!   hop (or an `emit` stream back to the client if this stage is the
+//!   tail), `Token`/`Act` advance the session through this stage's layers
+//!   and forward the result while later positions are already in flight —
+//!   token-level pipelining with the KV state resident stage-side;
+//! * on downstream death, sends a `Fault` *upstream* on the inbound
+//!   stream so the client can splice in an alternate holder and replay.
+//!
+//! Ticks are scenario-driven (call [`RouteShard::tick`] alongside the
+//! node's own timers), matching how the relay manager is driven.
+
+use super::ads::{bucket_key, buckets, AdBook, LayerAd, AD_INTERVAL, LAYER_ADS_TOPIC, MAX_AD_RTTS};
+use super::model::SimModel;
+use super::session::{Advance, KvStore};
+use super::wire::{OpenFrame, RouteFrame};
+use crate::identity::PeerId;
+use crate::metrics::InferenceStats;
+use crate::multiaddr::Multiaddr;
+use crate::netsim::{Net, Time, SECOND};
+use crate::node::{App, LatticaNode, NodeEvent};
+use crate::protocols::gossip::GossipEvent;
+use crate::protocols::Ctx;
+use crate::rpc::{Outcome, RpcEvent, Service, StreamHandle};
+use crate::util::buf::Buf;
+use crate::wire::Message;
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
+
+/// Service name for inference-plane streams and `describe`.
+pub const ROUTE_SERVICE: &str = "route";
+/// RTT probe cadence (round-robin over known holders).
+pub const PROBE_INTERVAL: Time = SECOND;
+
+/// Static description of what this stage hosts.
+#[derive(Clone)]
+pub struct ShardSpec {
+    pub model: SimModel,
+    /// Layer range this node hosts (ads and Opens use it).
+    pub layers: (u32, u32),
+    /// Region hint advertised for unmeasured-edge costing.
+    pub region: u32,
+    /// KV capacity in entries (layer × position).
+    pub capacity_entries: u64,
+}
+
+/// Where a flow's forwarded frames go.
+struct Flow {
+    generation: u64,
+    hop_index: u32,
+    n_prompt: u64,
+    is_tail: bool,
+    /// Stream the frames for this request arrive on.
+    inbound: Option<StreamHandle>,
+    down_peer: PeerId,
+    down_addr: Multiaddr,
+    /// "open" towards the next stage, "emit" back to the client.
+    down_method: &'static str,
+    down: Option<StreamHandle>,
+    dialing: bool,
+    /// Encoded frames buffered while the downstream dial is in flight.
+    pending: VecDeque<Vec<u8>>,
+}
+
+struct RouteState {
+    spec: ShardSpec,
+    book: AdBook,
+    kv: KvStore,
+    stats: InferenceStats,
+    flows: HashMap<u64, Flow>,
+    inbound: HashMap<StreamHandle, u64>,
+    outbound: HashMap<StreamHandle, u64>,
+    last_ad: Time,
+    last_probe: Time,
+    probe_rr: usize,
+    provided: bool,
+}
+
+/// Handle to an installed stage; clone-cheap (shared state).
+#[derive(Clone)]
+pub struct RouteShard {
+    st: Rc<RefCell<RouteState>>,
+}
+
+impl RouteShard {
+    /// Register the `route` service + app interceptor on `node` and start
+    /// advertising `spec`.
+    pub fn install(node: &mut LatticaNode, net: &mut Net, spec: ShardSpec) -> RouteShard {
+        let st = Rc::new(RefCell::new(RouteState {
+            kv: KvStore::new(spec.capacity_entries),
+            spec,
+            book: AdBook::new(),
+            stats: InferenceStats::default(),
+            flows: HashMap::new(),
+            inbound: HashMap::new(),
+            outbound: HashMap::new(),
+            last_ad: 0,
+            last_probe: 0,
+            probe_rr: 0,
+            provided: false,
+        }));
+        {
+            let mut ctx = Ctx::new(&mut node.swarm, net);
+            node.gossip.subscribe(&mut ctx, LAYER_ADS_TOPIC);
+        }
+        let describe_st = st.clone();
+        let svc = Service::new(ROUTE_SERVICE)
+            .unary("describe", move |node, net, _rctx, _payload| {
+                let s = describe_st.borrow();
+                Outcome::reply(build_ad(node, net, &s).encode())
+            })
+            .streaming(ShardStream { st: st.clone() });
+        node.register_service(svc);
+        node.app = Some(Box::new(ShardApp { st: st.clone() }));
+        RouteShard { st }
+    }
+
+    /// Snapshot of this stage's counters.
+    pub fn stats(&self) -> InferenceStats {
+        self.st.borrow().stats.clone()
+    }
+
+    /// Resident sessions right now.
+    pub fn resident_sessions(&self) -> usize {
+        self.st.borrow().kv.len()
+    }
+
+    /// Holders currently known via ads.
+    pub fn known_holders(&self) -> usize {
+        self.st.borrow().book.len()
+    }
+
+    /// Periodic drive: ad publish/provide, RTT probes, ad expiry, and
+    /// downstream-dial retries.
+    pub fn tick(&self, node: &mut LatticaNode, net: &mut Net) {
+        let now = net.now();
+        let (publish, provide, probe_peer, retries) = {
+            let mut s = self.st.borrow_mut();
+            s.book.prune(now);
+            let publish = if now.saturating_sub(s.last_ad) >= AD_INTERVAL || s.last_ad == 0 {
+                s.last_ad = now;
+                true
+            } else {
+                false
+            };
+            let provide = if !s.provided {
+                s.provided = true;
+                Some((s.spec.model.model_id.clone(), s.spec.layers))
+            } else {
+                None
+            };
+            let probe_peer = if now.saturating_sub(s.last_probe) >= PROBE_INTERVAL {
+                s.last_probe = now;
+                let peers = s.book.peers();
+                if peers.is_empty() {
+                    None
+                } else {
+                    let p = peers[s.probe_rr % peers.len()];
+                    s.probe_rr = s.probe_rr.wrapping_add(1);
+                    s.book.get(&p).map(|ad| (p, ad.multiaddr()))
+                }
+            } else {
+                None
+            };
+            let retries: Vec<u64> = s
+                .flows
+                .iter()
+                .filter(|(_, f)| f.down.is_none())
+                .map(|(r, _)| *r)
+                .collect();
+            (publish, provide, probe_peer, retries)
+        };
+        if publish {
+            let ad = {
+                let s = self.st.borrow();
+                build_ad(node, net, &s)
+            };
+            let mut ctx = Ctx::new(&mut node.swarm, net);
+            node.gossip.publish(&mut ctx, LAYER_ADS_TOPIC, ad.encode());
+        }
+        if let Some((model, layers)) = provide {
+            let mut ctx = Ctx::new(&mut node.swarm, net);
+            for b in buckets(layers) {
+                node.kad.provide(&mut ctx, bucket_key(&model, b));
+            }
+        }
+        if let Some((peer, addr)) = probe_peer {
+            if peer != node.peer_id() {
+                node.swarm.peerstore.add_address(peer, addr);
+                if node.swarm.is_connected(&peer) {
+                    let mut ctx = Ctx::new(&mut node.swarm, net);
+                    let _ = node.ping.ping(&mut ctx, &peer);
+                } else {
+                    let mut ctx = Ctx::new(&mut node.swarm, net);
+                    let _ = ctx.ensure_connected(&peer);
+                }
+            }
+        }
+        for r in retries {
+            ensure_down(&self.st, node, net, r);
+        }
+    }
+}
+
+/// Current advertisement for this stage.
+fn build_ad(node: &LatticaNode, _net: &Net, s: &RouteState) -> LayerAd {
+    let mut rtts = node.rtt.samples();
+    rtts.truncate(MAX_AD_RTTS);
+    LayerAd {
+        peer: node.peer_id(),
+        host: node.swarm.local_addr.host,
+        port: node.swarm.local_addr.port,
+        model: s.spec.model.model_id.clone(),
+        layers: s.spec.layers,
+        region: s.spec.region,
+        capacity: s.kv.capacity_entries.min(u32::MAX as u64) as u32,
+        load: s.kv.load_pct(),
+        rtts,
+    }
+}
+
+/// Open (or reuse) the downstream stream for `request` and flush pending
+/// frames. Dials first when not yet connected; `PeerConnected` (or the
+/// next tick) retries.
+fn ensure_down(st: &Rc<RefCell<RouteState>>, node: &mut LatticaNode, net: &mut Net, request: u64) {
+    let (peer, addr, method) = {
+        let s = st.borrow();
+        let Some(f) = s.flows.get(&request) else { return };
+        if f.down.is_some() {
+            return;
+        }
+        (f.down_peer, f.down_addr.clone(), f.down_method)
+    };
+    node.swarm.peerstore.add_address(peer, addr);
+    if !node.swarm.is_connected(&peer) {
+        let mut ctx = Ctx::new(&mut node.swarm, net);
+        let _ = ctx.ensure_connected(&peer);
+        if let Some(f) = st.borrow_mut().flows.get_mut(&request) {
+            f.dialing = true;
+        }
+        return;
+    }
+    let opened = {
+        let mut ctx = Ctx::new(&mut node.swarm, net);
+        node.rpc.open_rpc_stream_method(&mut ctx, &peer, ROUTE_SERVICE, method)
+    };
+    match opened {
+        Ok(h) => {
+            let pend: Vec<Vec<u8>> = {
+                let mut s = st.borrow_mut();
+                s.outbound.insert(h, request);
+                let f = s.flows.get_mut(&request).expect("flow checked above");
+                f.down = Some(h);
+                f.dialing = false;
+                f.pending.drain(..).collect()
+            };
+            for b in pend {
+                let mut ctx = Ctx::new(&mut node.swarm, net);
+                node.rpc.send_item(&mut ctx, h, b);
+            }
+        }
+        Err(_) => {
+            if let Some(f) = st.borrow_mut().flows.get_mut(&request) {
+                f.dialing = true;
+            }
+        }
+    }
+}
+
+/// Forward one encoded frame downstream, buffering if the stream isn't up.
+fn queue_frame(
+    st: &Rc<RefCell<RouteState>>,
+    node: &mut LatticaNode,
+    net: &mut Net,
+    request: u64,
+    bytes: Vec<u8>,
+) {
+    let down = {
+        let mut s = st.borrow_mut();
+        let Some(f) = s.flows.get_mut(&request) else { return };
+        match f.down {
+            Some(h) => Some(h),
+            None => {
+                f.pending.push_back(bytes.clone());
+                None
+            }
+        }
+    };
+    match down {
+        Some(h) => {
+            let mut ctx = Ctx::new(&mut node.swarm, net);
+            node.rpc.send_item(&mut ctx, h, bytes);
+        }
+        None => ensure_down(st, node, net, request),
+    }
+}
+
+/// Downstream stream died: detach it and report a `Fault` upstream naming
+/// the dead hop, so the client repairs the chain.
+fn downstream_died(
+    st: &Rc<RefCell<RouteState>>,
+    node: &mut LatticaNode,
+    net: &mut Net,
+    request: u64,
+    handle: StreamHandle,
+) {
+    let up = {
+        let mut s = st.borrow_mut();
+        s.outbound.remove(&handle);
+        let Some(f) = s.flows.get_mut(&request) else { return };
+        if f.down != Some(handle) {
+            return; // stale generation's stream
+        }
+        f.down = None;
+        f.dialing = false;
+        s.stats.faults_propagated += 1;
+        let f = s.flows.get(&request).expect("just updated");
+        f.inbound.map(|h| (h, f.hop_index + 1))
+    };
+    if let Some((h, dead_idx)) = up {
+        let frame = RouteFrame::Fault {
+            request,
+            hop_index: dead_idx,
+            detail: "downstream stream ended".into(),
+        }
+        .encode();
+        let mut ctx = Ctx::new(&mut node.swarm, net);
+        node.rpc.send_item(&mut ctx, h, frame);
+    }
+}
+
+struct ShardStream {
+    st: Rc<RefCell<RouteState>>,
+}
+
+impl ShardStream {
+    fn handle_open(&self, node: &mut LatticaNode, net: &mut Net, handle: StreamHandle, o: OpenFrame) {
+        let now = net.now();
+        let end_old;
+        let forward;
+        {
+            let mut s = self.st.borrow_mut();
+            if o.model != s.spec.model.model_id {
+                return;
+            }
+            let Some(hop) = o.chain.get(o.hop_index as usize).copied() else { return };
+            if hop.peer != node.peer_id()
+                || hop.layers.0 < s.spec.layers.0
+                || hop.layers.1 > s.spec.layers.1
+                || hop.layers.0 >= hop.layers.1
+            {
+                return;
+            }
+            if let Some(f) = s.flows.get(&o.request) {
+                if f.generation >= o.generation {
+                    return; // duplicate or stale Open
+                }
+            }
+            let is_tail = o.hop_index as usize == o.chain.len() - 1;
+            let (down_peer, down_addr, down_method) = if is_tail {
+                (o.client.peer, o.client.multiaddr(), "emit")
+            } else {
+                let nh = o.chain[o.hop_index as usize + 1];
+                (nh.peer, nh.multiaddr(), "open")
+            };
+            {
+                let RouteState { spec, kv, stats, .. } = &mut *s;
+                kv.open(o.request, o.generation, hop.layers, spec.model.d_model, now, stats);
+            }
+            // Detach any previous generation's streams for this request.
+            end_old = s.flows.get(&o.request).and_then(|f| f.down);
+            if let Some(f) = s.flows.get(&o.request) {
+                if let Some(h) = f.inbound {
+                    s.inbound.remove(&h);
+                }
+                if let Some(h) = f.down {
+                    s.outbound.remove(&h);
+                }
+            }
+            forward = if is_tail {
+                None
+            } else {
+                let mut fwd = o.clone();
+                fwd.hop_index += 1;
+                Some(RouteFrame::Open(fwd).encode())
+            };
+            s.flows.insert(
+                o.request,
+                Flow {
+                    generation: o.generation,
+                    hop_index: o.hop_index,
+                    n_prompt: o.n_prompt,
+                    is_tail,
+                    inbound: Some(handle),
+                    down_peer,
+                    down_addr,
+                    down_method,
+                    down: None,
+                    dialing: false,
+                    pending: VecDeque::new(),
+                },
+            );
+            s.inbound.insert(handle, o.request);
+        }
+        if let Some(h) = end_old {
+            let mut ctx = Ctx::new(&mut node.swarm, net);
+            node.rpc.end_stream(&mut ctx, h);
+        }
+        match forward {
+            Some(bytes) => queue_frame(&self.st, node, net, o.request, bytes),
+            // Tail: open the emit stream eagerly so the first token isn't
+            // blocked on a dial.
+            None => ensure_down(&self.st, node, net, o.request),
+        }
+    }
+
+    /// Run one position through this stage's layers and forward. Frames
+    /// from a stream that is no longer the flow's current inbound (a
+    /// pre-repair generation draining late) are discarded before they can
+    /// touch the session.
+    fn process(
+        &self,
+        node: &mut LatticaNode,
+        net: &mut Net,
+        handle: StreamHandle,
+        request: u64,
+        pos: u64,
+        mut h: Vec<f32>,
+    ) {
+        let now = net.now();
+        let out = {
+            let mut s = self.st.borrow_mut();
+            let Some(f) = s.flows.get(&request) else { return };
+            if f.inbound != Some(handle) {
+                return;
+            }
+            let (is_tail, n_prompt) = (f.is_tail, f.n_prompt);
+            let adv = {
+                let RouteState { spec, kv, stats, .. } = &mut *s;
+                kv.advance(&spec.model, request, pos, &mut h, now, stats)
+            };
+            if adv != Advance::Ok {
+                return;
+            }
+            if is_tail {
+                if pos + 1 >= n_prompt {
+                    let token = s.spec.model.logits_argmax(&h);
+                    s.stats.tokens_streamed += 1;
+                    Some(RouteFrame::Emit { request, pos, token }.encode())
+                } else {
+                    None // prefill position: state absorbed, nothing to emit
+                }
+            } else {
+                Some(RouteFrame::Act { request, pos, hidden: h }.encode())
+            }
+        };
+        if let Some(bytes) = out {
+            queue_frame(&self.st, node, net, request, bytes);
+        }
+    }
+}
+
+impl crate::rpc::StreamHandler for ShardStream {
+    fn on_item(
+        &mut self,
+        node: &mut LatticaNode,
+        net: &mut Net,
+        handle: StreamHandle,
+        _seq: u64,
+        payload: Buf,
+    ) {
+        let Ok(frame) = RouteFrame::decode(payload.as_slice()) else { return };
+        match frame {
+            RouteFrame::Open(o) => self.handle_open(node, net, handle, o),
+            RouteFrame::Token { request, pos, token } => {
+                // Head of the chain: embed, then run our layers.
+                let h = self.st.borrow().spec.model.embed(token, pos);
+                self.process(node, net, handle, request, pos, h);
+            }
+            RouteFrame::Act { request, pos, hidden } => {
+                if hidden.len() == self.st.borrow().spec.model.d_model {
+                    self.process(node, net, handle, request, pos, hidden);
+                }
+            }
+            // Emit/Fault never legitimately arrive on an inbound stream.
+            RouteFrame::Emit { .. } | RouteFrame::Fault { .. } => {}
+        }
+    }
+
+    /// Inbound stream closed (client finished, repaired away from us, or
+    /// the upstream died): release the session and cascade the close
+    /// downstream.
+    fn on_end(&mut self, node: &mut LatticaNode, net: &mut Net, handle: StreamHandle) {
+        let down = {
+            let mut s = self.st.borrow_mut();
+            let Some(request) = s.inbound.remove(&handle) else { return };
+            let current = s.flows.get(&request).and_then(|f| f.inbound) == Some(handle);
+            if !current {
+                return; // an old generation's stream drained late
+            }
+            let f = s.flows.remove(&request).expect("checked above");
+            if let Some(h) = f.down {
+                s.outbound.remove(&h);
+            }
+            {
+                let RouteState { kv, stats, .. } = &mut *s;
+                kv.close(request, stats);
+            }
+            f.down
+        };
+        if let Some(h) = down {
+            let mut ctx = Ctx::new(&mut node.swarm, net);
+            node.rpc.end_stream(&mut ctx, h);
+        }
+    }
+}
+
+struct ShardApp {
+    st: Rc<RefCell<RouteState>>,
+}
+
+impl App for ShardApp {
+    fn handle(&mut self, node: &mut LatticaNode, net: &mut Net, ev: NodeEvent) -> Option<NodeEvent> {
+        match ev {
+            NodeEvent::Gossip(GossipEvent::Received { ref topic, ref data, .. })
+                if topic == LAYER_ADS_TOPIC =>
+            {
+                self.st.borrow_mut().book.ingest_bytes(net.now(), data);
+                None
+            }
+            NodeEvent::PeerConnected { peer, .. } => {
+                let waiting: Vec<u64> = self
+                    .st
+                    .borrow()
+                    .flows
+                    .iter()
+                    .filter(|(_, f)| f.dialing && f.down_peer == peer)
+                    .map(|(r, _)| *r)
+                    .collect();
+                for r in waiting {
+                    ensure_down(&self.st, node, net, r);
+                }
+                Some(ev)
+            }
+            NodeEvent::Rpc(RpcEvent::StreamEnded { handle }) => {
+                let request = self.st.borrow().outbound.get(&handle).copied();
+                match request {
+                    Some(r) => {
+                        downstream_died(&self.st, node, net, r, handle);
+                        None
+                    }
+                    None => Some(ev),
+                }
+            }
+            NodeEvent::Rpc(RpcEvent::StreamItem { handle, ref payload, .. })
+                if self.st.borrow().outbound.contains_key(&handle) =>
+            {
+                // Items flowing *backward* on a stream we opened: a Fault
+                // from further down the chain — relay it upstream.
+                if let Ok(RouteFrame::Fault { request, hop_index, detail }) =
+                    RouteFrame::decode(payload.as_slice())
+                {
+                    let up = {
+                        let mut s = self.st.borrow_mut();
+                        s.stats.faults_propagated += 1;
+                        s.flows.get(&request).and_then(|f| f.inbound)
+                    };
+                    if let Some(h) = up {
+                        let frame = RouteFrame::Fault { request, hop_index, detail }.encode();
+                        let mut ctx = Ctx::new(&mut node.swarm, net);
+                        node.rpc.send_item(&mut ctx, h, frame);
+                    }
+                }
+                None
+            }
+            NodeEvent::Rpc(RpcEvent::CreditsAvailable { handle, .. })
+                if self.st.borrow().outbound.contains_key(&handle) =>
+            {
+                // Backlog already drained by the rpc layer on the grant.
+                None
+            }
+            other => Some(other),
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! Wire frames for the inference plane's stage-to-stage streams.
+//!
+//! Everything that flows over a `route` Streaming-class RPC session is one
+//! [`RouteFrame`]: a 1-byte tag + varint fields (raw LE bytes for the f32
+//! activation payload). Frames carry the request id explicitly so a stage
+//! can multiplex many requests over per-peer state without per-stream
+//! bookkeeping, and so stale frames from a pre-repair generation are cheap
+//! to discard.
+//!
+//! Decode is hostile-input safe: every length is capped before allocation
+//! and clamped to the bytes actually remaining, mirroring the discipline
+//! the codec fuzz corpus enforces across the repo.
+
+use crate::identity::PeerId;
+use crate::multiaddr::{Multiaddr, Proto, SimAddr};
+use crate::util::varint;
+use anyhow::{bail, ensure, Result};
+
+/// Max hops in an advertised chain (paranoia bound; real chains are ≤ the
+/// model's layer count / 1).
+pub const MAX_CHAIN: usize = 64;
+/// Max model-id bytes on the wire.
+pub const MAX_MODEL_ID: usize = 128;
+/// Max activation width (f32 elements) a stage will accept.
+pub const MAX_HIDDEN: usize = 1 << 16;
+/// Max fault detail bytes.
+pub const MAX_DETAIL: usize = 512;
+
+const T_OPEN: u8 = 1;
+const T_TOKEN: u8 = 2;
+const T_ACT: u8 = 3;
+const T_EMIT: u8 = 4;
+const T_FAULT: u8 = 5;
+
+/// One chain stage (or the client endpoint): who, where to dial them, and
+/// which layer range they compute. `layers == (0, 0)` marks a non-compute
+/// endpoint (the client hop in [`OpenFrame::client`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hop {
+    pub peer: PeerId,
+    pub host: u32,
+    pub port: u16,
+    pub layers: (u32, u32),
+}
+
+impl Hop {
+    /// Dialable address for this hop (direct QUIC-like, as published).
+    pub fn multiaddr(&self) -> Multiaddr {
+        Multiaddr::direct(SimAddr::new(self.host, self.port), Proto::QuicLike).with_peer(self.peer)
+    }
+
+    fn put(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.peer.0);
+        varint::put_uvarint(out, self.host as u64);
+        varint::put_uvarint(out, self.port as u64);
+        varint::put_uvarint(out, self.layers.0 as u64);
+        varint::put_uvarint(out, self.layers.1 as u64);
+    }
+
+    fn get(r: &mut varint::Reader<'_>) -> Result<Hop> {
+        let id = r.take(32)?;
+        let mut peer = [0u8; 32];
+        peer.copy_from_slice(id);
+        let host = r.uvarint()?;
+        ensure!(host <= u32::MAX as u64, "hop host out of range");
+        let port = r.uvarint()?;
+        ensure!(port <= u16::MAX as u64, "hop port out of range");
+        let a = r.uvarint()?;
+        let b = r.uvarint()?;
+        ensure!(a <= u32::MAX as u64 && b <= u32::MAX as u64 && a <= b, "bad hop layer range");
+        Ok(Hop {
+            peer: PeerId(peer),
+            host: host as u32,
+            port: port as u16,
+            layers: (a as u32, b as u32),
+        })
+    }
+}
+
+/// Session open: carries the full routed chain so every stage knows its
+/// successor without further lookups, plus the client endpoint the tail
+/// dials back to with emitted tokens.
+///
+/// Repair does not need a separate resume field: the client re-opens with
+/// `generation + 1` and folds already-acked tokens into the prompt
+/// (`n_prompt' = prompt + acked`), so the tail's first emit is exactly the
+/// next unacked position.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OpenFrame {
+    pub request: u64,
+    pub generation: u64,
+    pub model: String,
+    /// This receiver's index into `chain`.
+    pub hop_index: u32,
+    /// Context length already decided (prompt + previously acked tokens):
+    /// positions `>= n_prompt - 1` produce emits.
+    pub n_prompt: u64,
+    pub client: Hop,
+    pub chain: Vec<Hop>,
+}
+
+/// A stage-to-stage (or client↔chain) inference-plane frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RouteFrame {
+    Open(OpenFrame),
+    /// Client → head: next context token (prompt during prefill, then the
+    /// echoed emit during decode).
+    Token { request: u64, pos: u64, token: u32 },
+    /// Stage k → stage k+1: hidden activations for one position.
+    Act { request: u64, pos: u64, hidden: Vec<f32> },
+    /// Tail → client: greedy-decoded token at `pos` (predicts `pos + 1`).
+    Emit { request: u64, pos: u64, token: u32 },
+    /// Any stage → upstream: my downstream for this request died; the
+    /// router should splice in an alternate for `chain[hop_index]`.
+    Fault { request: u64, hop_index: u32, detail: String },
+}
+
+impl RouteFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32);
+        match self {
+            RouteFrame::Open(o) => {
+                out.push(T_OPEN);
+                varint::put_uvarint(&mut out, o.request);
+                varint::put_uvarint(&mut out, o.generation);
+                varint::put_length_prefixed(&mut out, o.model.as_bytes());
+                varint::put_uvarint(&mut out, o.hop_index as u64);
+                varint::put_uvarint(&mut out, o.n_prompt);
+                o.client.put(&mut out);
+                varint::put_uvarint(&mut out, o.chain.len() as u64);
+                for h in &o.chain {
+                    h.put(&mut out);
+                }
+            }
+            RouteFrame::Token { request, pos, token } => {
+                out.push(T_TOKEN);
+                varint::put_uvarint(&mut out, *request);
+                varint::put_uvarint(&mut out, *pos);
+                varint::put_uvarint(&mut out, *token as u64);
+            }
+            RouteFrame::Act { request, pos, hidden } => {
+                out.push(T_ACT);
+                varint::put_uvarint(&mut out, *request);
+                varint::put_uvarint(&mut out, *pos);
+                varint::put_uvarint(&mut out, hidden.len() as u64);
+                for v in hidden {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            RouteFrame::Emit { request, pos, token } => {
+                out.push(T_EMIT);
+                varint::put_uvarint(&mut out, *request);
+                varint::put_uvarint(&mut out, *pos);
+                varint::put_uvarint(&mut out, *token as u64);
+            }
+            RouteFrame::Fault { request, hop_index, detail } => {
+                out.push(T_FAULT);
+                varint::put_uvarint(&mut out, *request);
+                varint::put_uvarint(&mut out, *hop_index as u64);
+                varint::put_length_prefixed(&mut out, detail.as_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<RouteFrame> {
+        ensure!(!buf.is_empty(), "empty route frame");
+        let mut r = varint::Reader::new(&buf[1..]);
+        let f = match buf[0] {
+            T_OPEN => {
+                let request = r.uvarint()?;
+                let generation = r.uvarint()?;
+                let model_bytes = r.length_prefixed()?;
+                ensure!(model_bytes.len() <= MAX_MODEL_ID, "model id too long");
+                let model = std::str::from_utf8(model_bytes)?.to_string();
+                let hop_index = r.uvarint()?;
+                ensure!(hop_index < MAX_CHAIN as u64, "hop index out of range");
+                let n_prompt = r.uvarint()?;
+                let client = Hop::get(&mut r)?;
+                let n = r.uvarint()? as usize;
+                ensure!(n >= 1 && n <= MAX_CHAIN, "chain length {n} out of range");
+                ensure!((hop_index as usize) < n, "hop index beyond chain");
+                // ≥ 36 bytes per hop on the wire: never trust n alone.
+                let mut chain = Vec::with_capacity(n.min(r.remaining() / 36 + 1));
+                for _ in 0..n {
+                    chain.push(Hop::get(&mut r)?);
+                }
+                RouteFrame::Open(OpenFrame {
+                    request,
+                    generation,
+                    model,
+                    hop_index: hop_index as u32,
+                    n_prompt,
+                    client,
+                    chain,
+                })
+            }
+            T_TOKEN | T_EMIT => {
+                let request = r.uvarint()?;
+                let pos = r.uvarint()?;
+                let token = r.uvarint()?;
+                ensure!(token <= u32::MAX as u64, "token out of range");
+                if buf[0] == T_TOKEN {
+                    RouteFrame::Token { request, pos, token: token as u32 }
+                } else {
+                    RouteFrame::Emit { request, pos, token: token as u32 }
+                }
+            }
+            T_ACT => {
+                let request = r.uvarint()?;
+                let pos = r.uvarint()?;
+                let n = r.uvarint()? as usize;
+                ensure!(n <= MAX_HIDDEN, "activation width {n} exceeds cap");
+                ensure!(r.remaining() >= n * 4, "activation payload truncated");
+                let mut hidden = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let b = r.take(4)?;
+                    hidden.push(f32::from_le_bytes(b.try_into()?));
+                }
+                RouteFrame::Act { request, pos, hidden }
+            }
+            T_FAULT => {
+                let request = r.uvarint()?;
+                let hop_index = r.uvarint()?;
+                ensure!(hop_index <= MAX_CHAIN as u64, "fault hop index out of range");
+                let detail_bytes = r.length_prefixed()?;
+                ensure!(detail_bytes.len() <= MAX_DETAIL, "fault detail too long");
+                let detail = String::from_utf8_lossy(detail_bytes).into_owned();
+                RouteFrame::Fault { request, hop_index: hop_index as u32, detail }
+            }
+            t => bail!("unknown route frame tag {t}"),
+        };
+        ensure!(r.is_empty(), "trailing bytes after route frame");
+        Ok(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::identity::Keypair;
+
+    fn hop(seed: u64) -> Hop {
+        Hop {
+            peer: Keypair::from_seed(seed).peer_id(),
+            host: 10 + seed as u32,
+            port: 4001,
+            layers: (seed as u32 * 4, seed as u32 * 4 + 4),
+        }
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        let frames = vec![
+            RouteFrame::Open(OpenFrame {
+                request: 7,
+                generation: 2,
+                model: "sim-tiny".into(),
+                hop_index: 1,
+                n_prompt: 9,
+                client: Hop { layers: (0, 0), ..hop(0) },
+                chain: vec![hop(1), hop(2), hop(3)],
+            }),
+            RouteFrame::Token { request: 7, pos: 0, token: 42 },
+            RouteFrame::Act { request: 7, pos: 3, hidden: vec![0.5, -1.25, 3.0] },
+            RouteFrame::Emit { request: 7, pos: 8, token: 11 },
+            RouteFrame::Fault { request: 7, hop_index: 2, detail: "conn closed".into() },
+        ];
+        for f in frames {
+            let enc = f.encode();
+            assert_eq!(RouteFrame::decode(&enc).unwrap(), f, "frame {f:?}");
+        }
+    }
+
+    #[test]
+    fn hostile_lengths_rejected_without_allocating() {
+        // Act frame claiming 2^60 floats: must error before allocation.
+        let mut buf = vec![T_ACT];
+        crate::util::varint::put_uvarint(&mut buf, 1);
+        crate::util::varint::put_uvarint(&mut buf, 0);
+        crate::util::varint::put_uvarint(&mut buf, 1u64 << 60);
+        assert!(RouteFrame::decode(&buf).is_err());
+
+        // Open frame claiming a 10k-hop chain with no bytes behind it.
+        let mut buf = vec![T_OPEN];
+        crate::util::varint::put_uvarint(&mut buf, 1); // request
+        crate::util::varint::put_uvarint(&mut buf, 0); // generation
+        crate::util::varint::put_length_prefixed(&mut buf, b"m");
+        crate::util::varint::put_uvarint(&mut buf, 0); // hop_index
+        crate::util::varint::put_uvarint(&mut buf, 1); // n_prompt
+        Hop { layers: (0, 0), ..hop(0) }.put(&mut buf);
+        crate::util::varint::put_uvarint(&mut buf, 10_000);
+        assert!(RouteFrame::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn truncations_never_panic() {
+        let f = RouteFrame::Open(OpenFrame {
+            request: 1,
+            generation: 1,
+            model: "m".into(),
+            hop_index: 0,
+            n_prompt: 4,
+            client: Hop { layers: (0, 0), ..hop(0) },
+            chain: vec![hop(1), hop(2)],
+        });
+        let enc = f.encode();
+        for cut in 0..enc.len() {
+            let _ = RouteFrame::decode(&enc[..cut]);
+        }
+    }
+}

@@ -1,0 +1,337 @@
+//! Distributed-inference scenario (DESIGN.md §Inference plane): a
+//! geo-distributed set of layer-shard replicas serving token streams to a
+//! client, comparing latency-aware chain routing against a
+//! placement-blind static chain, with an optional mid-stream stage kill
+//! exercising splice-repair + replay.
+//!
+//! Deployment: the client sits in region 0; every pipeline stage has two
+//! replicas — one in the client's region (LAN) and one across a continent
+//! (region 1 or 2). The static baseline pins each stage to its
+//! first-registered holder, which is the remote one (a capacity-ordered
+//! assignment that never looked at latency); the routed arm assembles the
+//! chain from live ads + measured RTTs and should discover the all-local
+//! chain.
+//!
+//! Fully deterministic in the config.
+
+use super::Node;
+use crate::metrics::{Histogram, InferenceStats};
+use crate::netsim::topology::{LinkProfile, TopologyBuilder};
+use crate::netsim::{Time, World, MILLI, SECOND};
+use crate::node::{LatticaNode, NodeConfig, NodeEvent};
+use crate::protocols::kad::KadEvent;
+use crate::protocols::Ctx;
+use crate::route::{bucket_key, ChainClient, Hop, RouteMode, RouteShard, ShardSpec, SimModel};
+
+/// Deployment + workload for [`route_inference`].
+#[derive(Clone)]
+pub struct RouteScenarioConfig {
+    pub seed: u64,
+    /// Requests issued (staggered starts, concurrent streams).
+    pub requests: usize,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    /// Pipeline stages; must divide the model's layer count.
+    pub stages: usize,
+    /// Latency-aware routing; false = the static first-holder baseline.
+    pub routed: bool,
+    /// Kill the local replica of the middle stage once at least one
+    /// request is mid-stream (has acked ≥ 1 token). Routed arm only.
+    pub kill: bool,
+    pub model: SimModel,
+    /// Per-stage KV capacity in entries (owned-layer × position).
+    pub capacity_entries: u64,
+}
+
+impl RouteScenarioConfig {
+    /// Small smoke-test shape (unit-test friendly).
+    pub fn quick(routed: bool, kill: bool) -> RouteScenarioConfig {
+        RouteScenarioConfig {
+            seed: 7,
+            requests: 2,
+            prompt_len: 4,
+            gen_len: 4,
+            stages: 2,
+            routed,
+            kill,
+            model: SimModel::tiny(),
+            capacity_entries: 1 << 16,
+        }
+    }
+
+    /// The shape the release tests and `BENCH_sharded_inference.json` use.
+    pub fn ci(routed: bool, kill: bool) -> RouteScenarioConfig {
+        RouteScenarioConfig {
+            seed: 42,
+            requests: 6,
+            prompt_len: 6,
+            gen_len: 8,
+            stages: 3,
+            routed,
+            kill,
+            model: SimModel::tiny(),
+            capacity_entries: 1 << 16,
+        }
+    }
+}
+
+/// Result of one [`route_inference`] run.
+pub struct RouteOutcome {
+    pub requests: usize,
+    pub completed: usize,
+    /// Requests that missed the deadline (client-visible failures).
+    pub failed: usize,
+    /// Time-to-first-token per completed request.
+    pub ttft: Histogram,
+    /// Tokens delivered to the client.
+    pub tokens: u64,
+    /// Tokens per virtual second, first start → last completion.
+    pub tokens_per_sec: f64,
+    /// Chain repairs performed by the client.
+    pub repairs: u64,
+    /// Duplicate KV appends across all stages (must be 0: replays
+    /// recompute via generation reset, they never double-append).
+    pub duplicate_appends: u64,
+    pub evictions: u64,
+    pub kv_peak: u64,
+    /// Every completed request's tokens matched the single-process
+    /// oracle ([`SimModel::reference_generate`]).
+    pub reference_match: bool,
+    /// Providers returned for the model's first layer bucket (DHT
+    /// advertisement path).
+    pub dht_holders: usize,
+    /// Merged stage-side counters (including any killed stage, captured
+    /// pre-kill).
+    pub shard_stats: InferenceStats,
+}
+
+struct Replica {
+    node: Node,
+    shard: RouteShard,
+    /// Index of the pipeline stage this replica serves.
+    stage: usize,
+    /// True for the replica in the client's region.
+    local: bool,
+    alive: bool,
+}
+
+/// Build the deployment, run the workload, and collect the outcome.
+pub fn route_inference(cfg: &RouteScenarioConfig) -> RouteOutcome {
+    assert!(cfg.stages >= 2, "need a chain, not a single stage");
+    assert_eq!(
+        cfg.model.n_layer as usize % cfg.stages,
+        0,
+        "stages must divide n_layer"
+    );
+    let per_stage = cfg.model.n_layer / cfg.stages as u32;
+
+    // --- Topology: client region 0; per stage one remote + one local
+    // replica. Remote-first spawn order makes the static baseline's
+    // "first registered holder" the cross-continent one.
+    let mut t = TopologyBuilder::paper_regions();
+    let client_host = t.public_host(0, LinkProfile::FIBER);
+    let mut replica_hosts: Vec<(u32, u32, bool)> = Vec::new(); // (host, region, local)
+    for i in 0..cfg.stages {
+        let remote_region = 1 + (i as u32 % 2);
+        replica_hosts.push((
+            t.public_host(remote_region as usize, LinkProfile::FIBER),
+            remote_region,
+            false,
+        ));
+        replica_hosts.push((t.public_host(0, LinkProfile::FIBER), 0, true));
+    }
+    let mut world = World::new(t.build(cfg.seed));
+    let client = LatticaNode::spawn(&mut world, client_host, {
+        let mut c = NodeConfig::with_seed(cfg.seed * 1000);
+        c.label = "client".into();
+        c
+    });
+    let mut replicas: Vec<Replica> = replica_hosts
+        .iter()
+        .enumerate()
+        .map(|(i, &(host, region, local))| {
+            let node = LatticaNode::spawn(&mut world, host, {
+                let mut c = NodeConfig::with_seed(cfg.seed * 1000 + 1 + i as u64);
+                c.label = format!("shard-{}-{}", i / 2, if local { "local" } else { "remote" });
+                c
+            });
+            let stage = i / 2;
+            let layers = (stage as u32 * per_stage, (stage as u32 + 1) * per_stage);
+            let shard = {
+                let mut n = node.borrow_mut();
+                RouteShard::install(
+                    &mut n,
+                    &mut world.net,
+                    ShardSpec {
+                        model: cfg.model.clone(),
+                        layers,
+                        region,
+                        capacity_entries: cfg.capacity_entries,
+                    },
+                )
+            };
+            Replica { node, shard, stage, local, alive: true }
+        })
+        .collect();
+
+    let entry = crate::protocols::kad::PeerEntry {
+        id: client.borrow().peer_id(),
+        host: client_host,
+        port: 4001,
+    };
+    for r in &replicas {
+        r.node.borrow_mut().bootstrap(&mut world.net, entry.clone());
+    }
+    world.run_for(3 * SECOND);
+
+    // Static baseline: first-registered (remote) holder per stage.
+    let static_chain: Vec<Hop> = replicas
+        .iter()
+        .filter(|r| !r.local)
+        .map(|r| {
+            let n = r.node.borrow();
+            Hop {
+                peer: n.peer_id(),
+                host: n.swarm.local_addr.host,
+                port: n.swarm.local_addr.port,
+                layers: (r.stage as u32 * per_stage, (r.stage as u32 + 1) * per_stage),
+            }
+        })
+        .collect();
+    let mode = if cfg.routed {
+        RouteMode::Routed
+    } else {
+        RouteMode::Static(static_chain)
+    };
+    let mut chain = {
+        let mut n = client.borrow_mut();
+        ChainClient::new(&mut n, &mut world.net, cfg.model.clone(), 0, mode)
+    };
+
+    // One pump step: advance the world, tick every stage and the client,
+    // feed client events through the chain, return unconsumed ones.
+    let step = |world: &mut World,
+                replicas: &mut Vec<Replica>,
+                chain: &mut ChainClient,
+                client: &Node|
+     -> Vec<NodeEvent> {
+        world.run_for(50 * MILLI);
+        for r in replicas.iter().filter(|r| r.alive) {
+            r.node.borrow_mut().drain_events();
+            let mut n = r.node.borrow_mut();
+            r.shard.tick(&mut n, &mut world.net);
+        }
+        let evs = client.borrow_mut().drain_events();
+        let mut n = client.borrow_mut();
+        let mut leftover = Vec::new();
+        for ev in evs {
+            if !chain.on_event(&mut n, &mut world.net, &ev) {
+                leftover.push(ev);
+            }
+        }
+        chain.tick(&mut n, &mut world.net);
+        leftover
+    };
+
+    // Warm-up: ads gossip out, provider records land, probes measure RTTs.
+    for _ in 0..120 {
+        step(&mut world, &mut replicas, &mut chain, &client);
+    }
+
+    // DHT advertisement check: who provides the model's first bucket?
+    let qid = {
+        let mut n = client.borrow_mut();
+        let LatticaNode { swarm, kad, .. } = &mut *n;
+        let mut ctx = Ctx::new(swarm, &mut world.net);
+        kad.get_providers(&mut ctx, bucket_key(&cfg.model.model_id, 0))
+    };
+    let mut dht_holders = 0usize;
+    let lookup_deadline = world.net.now() + 10 * SECOND;
+    'lookup: while world.net.now() < lookup_deadline {
+        for ev in step(&mut world, &mut replicas, &mut chain, &client) {
+            if let NodeEvent::Kad(KadEvent::QueryFinished { query_id, providers, .. }) = ev {
+                if query_id == qid {
+                    dht_holders = providers.len();
+                    break 'lookup;
+                }
+            }
+        }
+    }
+
+    // Workload: staggered starts.
+    let mut prompts: Vec<(u64, Vec<u32>)> = Vec::new();
+    for i in 0..cfg.requests {
+        let prompt: Vec<u32> = (0..cfg.prompt_len)
+            .map(|j| ((i * 7 + j * 3 + 1) % cfg.model.vocab as usize) as u32)
+            .collect();
+        let id = {
+            let mut n = client.borrow_mut();
+            chain.start(&mut n, &mut world.net, prompt.clone(), cfg.gen_len)
+        };
+        prompts.push((id, prompt));
+        for _ in 0..6 {
+            step(&mut world, &mut replicas, &mut chain, &client);
+        }
+    }
+
+    // Drive to completion; fire the kill once a request is mid-stream.
+    let mut kill_pending = cfg.kill;
+    let mut killed_stats: Option<InferenceStats> = None;
+    let deadline = world.net.now() + 120 * SECOND;
+    while world.net.now() < deadline && chain.in_flight() > 0 {
+        step(&mut world, &mut replicas, &mut chain, &client);
+        if kill_pending && chain.partially_acked() >= 1 {
+            kill_pending = false;
+            let mid = cfg.stages / 2;
+            if let Some(r) = replicas.iter_mut().find(|r| r.alive && r.local && r.stage == mid) {
+                killed_stats = Some(r.shard.stats());
+                let eid = {
+                    let mut n = r.node.borrow_mut();
+                    n.shutdown(&mut world.net, false);
+                    n.endpoint_id()
+                };
+                world.remove_endpoint(eid);
+                r.alive = false;
+            }
+        }
+    }
+
+    // --- Collect -----------------------------------------------------------
+    let mut shard_stats = killed_stats.unwrap_or_default();
+    for r in replicas.iter().filter(|r| r.alive) {
+        shard_stats.merge(&r.shard.stats());
+    }
+    let completed = chain.completed.len();
+    let mut ttft = Histogram::default();
+    let mut tokens = 0u64;
+    let mut reference_match = true;
+    let mut first_start: Option<Time> = None;
+    let mut last_finish: Time = 0;
+    for c in &chain.completed {
+        ttft.record(c.ttft);
+        tokens += c.tokens.len() as u64;
+        first_start = Some(first_start.map_or(c.started, |f: Time| f.min(c.started)));
+        last_finish = last_finish.max(c.finished);
+        let prompt = &prompts.iter().find(|(id, _)| *id == c.request).expect("known request").1;
+        reference_match &= c.tokens == cfg.model.reference_generate(prompt, cfg.gen_len);
+    }
+    let tokens_per_sec = match first_start {
+        Some(f) if last_finish > f => tokens as f64 * SECOND as f64 / (last_finish - f) as f64,
+        _ => 0.0,
+    };
+    RouteOutcome {
+        requests: cfg.requests,
+        completed,
+        failed: cfg.requests - completed,
+        ttft,
+        tokens,
+        tokens_per_sec,
+        repairs: chain.stats.repairs,
+        duplicate_appends: shard_stats.duplicate_appends,
+        evictions: shard_stats.sessions_evicted,
+        kv_peak: shard_stats.kv_peak,
+        reference_match,
+        dht_holders,
+        shard_stats,
+    }
+}

@@ -4,6 +4,7 @@
 //! paper's evaluation settings (DESIGN.md §6) and returns the handles the
 //! harness needs.
 
+pub mod inference;
 pub mod nat_mesh;
 pub mod overload;
 pub mod planet;
@@ -20,6 +21,7 @@ use crate::util::buf::Buf;
 use std::cell::RefCell;
 use std::rc::Rc;
 
+pub use inference::{route_inference, RouteOutcome, RouteScenarioConfig};
 pub use nat_mesh::{
     nat_mesh, FailoverOutcome, NatMeshConfig, NatMeshOutcome, NatPairRow, RelayRow,
 };

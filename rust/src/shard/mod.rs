@@ -25,6 +25,10 @@ use std::rc::Rc;
 
 pub const SHARD_SERVICE: &str = "shard";
 
+/// Upper bound on the token count a [`ShardRequest`] may carry; caps the
+/// decode-side preallocation against hostile length prefixes.
+pub const MAX_TOKENS: usize = 1 << 20;
+
 /// Request payload for the `forward` method.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ShardRequest {
@@ -58,7 +62,11 @@ impl ShardRequest {
         let mut r = varint::Reader::new(buf);
         let request_id = r.uvarint()?;
         let n = r.uvarint()? as usize;
-        let mut tokens = Vec::with_capacity(n);
+        // The count is attacker-controlled: bound it, and never preallocate
+        // more slots than the remaining bytes could possibly encode (each
+        // token takes at least one byte).
+        anyhow::ensure!(n <= MAX_TOKENS, "token count {n} exceeds cap {MAX_TOKENS}");
+        let mut tokens = Vec::with_capacity(n.min(r.remaining()));
         for _ in 0..n {
             tokens.push(r.uvarint()? as i32);
         }
@@ -359,5 +367,31 @@ mod tests {
             hidden: Some(Tensor::from_f32(&[1, 2, 2], &[1.0, 2.0, 3.0, 4.0])),
         };
         assert_eq!(ShardRequest::decode(&r.encode()).unwrap(), r);
+    }
+
+    /// A hostile token count must be rejected before any allocation sized
+    /// from it — a 10-byte frame claiming 2^60 tokens previously asked the
+    /// allocator for 2^62 bytes up front.
+    #[test]
+    fn shard_request_hostile_token_count() {
+        let mut buf = Vec::new();
+        varint::put_uvarint(&mut buf, 1); // request_id
+        varint::put_uvarint(&mut buf, 1u64 << 60); // claimed token count
+        assert!(ShardRequest::decode(&buf).is_err());
+
+        // Just over the cap is also rejected, even with the count itself
+        // well-formed.
+        let mut buf = Vec::new();
+        varint::put_uvarint(&mut buf, 1);
+        varint::put_uvarint(&mut buf, (MAX_TOKENS + 1) as u64);
+        assert!(ShardRequest::decode(&buf).is_err());
+
+        // At the cap but truncated: errors on the missing bytes without
+        // over-allocating (capacity is bounded by remaining input).
+        let mut buf = Vec::new();
+        varint::put_uvarint(&mut buf, 1);
+        varint::put_uvarint(&mut buf, MAX_TOKENS as u64);
+        buf.push(7);
+        assert!(ShardRequest::decode(&buf).is_err());
     }
 }

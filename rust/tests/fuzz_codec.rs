@@ -14,7 +14,10 @@ use lattica::protocols::bitswap::BitswapMsg;
 use lattica::protocols::dcutr::DcutrMsg;
 use lattica::protocols::gossip::{GossipMsg, GossipSummary};
 use lattica::protocols::kad::{KadMsg, PeerEntry};
+use lattica::route::{Hop, LayerAd, OpenFrame, RouteFrame};
 use lattica::rpc::RpcMsg;
+use lattica::runtime::Tensor;
+use lattica::shard::ShardRequest;
 use lattica::util::buf::Buf;
 use lattica::util::varint;
 use lattica::util::Rng;
@@ -200,6 +203,61 @@ fn kad_corpus() -> Vec<Vec<u8>> {
         port: 4001,
         load: 63,
     };
+    // Inference-plane frames: the shard request (tokens and hidden-tensor
+    // forms), a tensor as the response payload, the route-stream frame
+    // family, and a layer ad with a piggybacked RTT sample.
+    let shard_tokens = ShardRequest {
+        request_id: 9,
+        tokens: (0..32).collect(),
+        hidden: None,
+    };
+    let shard_resp = Tensor::from_f32(&[1, 4], &[1.0, -2.0, 3.5, 0.25]);
+    let shard_hidden = ShardRequest {
+        request_id: 10,
+        tokens: vec![],
+        hidden: Some(shard_resp.clone()),
+    };
+    let hop = |i: u64| Hop {
+        peer: Keypair::from_seed(20 + i).peer_id(),
+        host: i as u32,
+        port: 4001,
+        layers: (i as u32 * 4, i as u32 * 4 + 4),
+    };
+    let route_open = RouteFrame::Open(OpenFrame {
+        request: 3,
+        generation: 1,
+        model: "sim-tiny".into(),
+        hop_index: 0,
+        n_prompt: 4,
+        client: Hop {
+            peer: Keypair::from_seed(30).peer_id(),
+            host: 9,
+            port: 4001,
+            layers: (0, 0),
+        },
+        chain: vec![hop(0), hop(1), hop(2)],
+    });
+    let route_act = RouteFrame::Act {
+        request: 3,
+        pos: 2,
+        hidden: vec![0.5; 16],
+    };
+    let route_fault = RouteFrame::Fault {
+        request: 3,
+        hop_index: 1,
+        detail: "downstream stream ended".into(),
+    };
+    let layer_ad = LayerAd {
+        peer: Keypair::from_seed(31).peer_id(),
+        host: 7,
+        port: 4001,
+        model: "sim-tiny".into(),
+        layers: (4, 8),
+        region: 2,
+        capacity: 1 << 16,
+        load: 35,
+        rtts: vec![(Keypair::from_seed(32).peer_id(), 12_000_000)],
+    };
     vec![
         full.encode(),
         small.encode(),
@@ -224,6 +282,13 @@ fn kad_corpus() -> Vec<Vec<u8>> {
         dcutr_connect.encode(),
         dcutr_deny.encode(),
         relay_ad.encode(),
+        shard_tokens.encode(),
+        shard_hidden.encode(),
+        shard_resp.encode(),
+        route_open.encode(),
+        route_act.encode(),
+        route_fault.encode(),
+        layer_ad.encode(),
     ]
 }
 
@@ -245,6 +310,10 @@ fn decode_everything(buf: &[u8]) {
     let _ = lattica::model::ModelAnnouncement::decode(buf);
     let _ = DcutrMsg::decode(buf);
     let _ = RelayAd::decode(buf);
+    let _ = ShardRequest::decode(buf);
+    let _ = Tensor::decode(buf);
+    let _ = RouteFrame::decode(buf);
+    let _ = LayerAd::decode(buf);
     // The raw field reader must also survive anything.
     let mut r = PbReader::new(buf);
     while let Ok(Some(f)) = r.next_field() {
@@ -329,6 +398,9 @@ fn oversized_length_prefix_errors_without_allocating() {
         assert!(RpcMsg::decode(hostile).is_err());
         assert!(GossipMsg::decode(hostile).is_err());
         assert!(BloomDigest::from_bytes(hostile).is_err());
+        assert!(ShardRequest::decode(hostile).is_err());
+        assert!(RouteFrame::decode(hostile).is_err());
+        assert!(LayerAd::decode(hostile).is_err());
         let mut r = PbReader::new(hostile);
         loop {
             match r.next_field() {
@@ -345,6 +417,21 @@ fn oversized_length_prefix_errors_without_allocating() {
             "decode of a hostile length prefix allocated {grew} bytes"
         );
     }
+
+    // Shard requests are varint-framed (not pb): a claimed 2^40-token
+    // batch in a 7-byte frame must error before any allocation sized by
+    // the claim.
+    let mut shard_hostile = Vec::new();
+    varint::put_uvarint(&mut shard_hostile, 1); // request_id
+    varint::put_uvarint(&mut shard_hostile, 1u64 << 40); // token count
+    PEAK.store(CUR.load(Ordering::Relaxed), Ordering::Relaxed);
+    let before = PEAK.load(Ordering::Relaxed);
+    assert!(ShardRequest::decode(&shard_hostile).is_err());
+    let grew = PEAK.load(Ordering::Relaxed) - before;
+    assert!(
+        grew < (1 << 20),
+        "hostile shard token count allocated {grew} bytes"
+    );
 }
 
 #[test]
@@ -375,7 +462,11 @@ fn corpus_roundtrips_stay_valid() {
             || RpcMsg::decode(&base).is_ok()
             || GossipMsg::decode(&base).is_ok()
             || DcutrMsg::decode(&base).is_ok()
-            || RelayAd::decode(&base).is_ok();
+            || RelayAd::decode(&base).is_ok()
+            || ShardRequest::decode(&base).is_ok()
+            || Tensor::decode(&base).is_ok()
+            || RouteFrame::decode(&base).is_ok()
+            || LayerAd::decode(&base).is_ok();
         assert!(ok, "corpus entry decodes under none of its codecs");
     }
     // Compact/lazy-push frames roundtrip exactly, including the nested

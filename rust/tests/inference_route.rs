@@ -1,0 +1,119 @@
+//! Inference-plane acceptance tests (DESIGN.md §Inference plane).
+//!
+//! Always-on: wire/ad codec roundtrips and hostile-input rejection.
+//! Release-gated: the full geo-distributed serving scenarios — routed
+//! beats the placement-blind static chain, and a mid-chain replica kill
+//! mid-stream completes every request via splice-repair + replay with
+//! zero duplicate KV appends.
+
+use lattica::identity::Keypair;
+use lattica::route::{Hop, LayerAd, OpenFrame, RouteFrame};
+use lattica::scenarios::{route_inference, RouteScenarioConfig};
+use lattica::wire::Message;
+
+fn peer(seed: u64) -> lattica::identity::PeerId {
+    Keypair::from_seed(seed).peer_id()
+}
+
+#[test]
+fn route_frame_roundtrips() {
+    let chain: Vec<Hop> = (0..3)
+        .map(|i| Hop {
+            peer: peer(i),
+            host: 10 + i as u32,
+            port: 4001,
+            layers: (i as u32 * 4, (i as u32 + 1) * 4),
+        })
+        .collect();
+    let open = RouteFrame::Open(OpenFrame {
+        request: 7,
+        generation: 2,
+        model: "sim-tiny".into(),
+        hop_index: 1,
+        n_prompt: 5,
+        client: Hop { peer: peer(99), host: 1, port: 4001, layers: (0, 0) },
+        chain,
+    });
+    for f in [
+        open,
+        RouteFrame::Token { request: 7, pos: 4, token: 19 },
+        RouteFrame::Act { request: 7, pos: 4, hidden: vec![0.5, -1.25, 3.0] },
+        RouteFrame::Emit { request: 7, pos: 9, token: 3 },
+        RouteFrame::Fault { request: 7, hop_index: 1, detail: "died".into() },
+    ] {
+        let bytes = f.encode();
+        let back = RouteFrame::decode(&bytes).expect("roundtrip");
+        assert_eq!(back.encode(), bytes);
+    }
+}
+
+#[test]
+fn hostile_route_frames_rejected() {
+    // Truncations of every valid frame must error, never panic.
+    let f = RouteFrame::Act { request: 1, pos: 0, hidden: vec![1.0; 8] };
+    let bytes = f.encode();
+    for cut in 0..bytes.len() {
+        let _ = RouteFrame::decode(&bytes[..cut]);
+    }
+    // Semantically invalid ads are rejected on decode.
+    let ad = LayerAd {
+        peer: peer(1),
+        host: 9,
+        port: 4001,
+        model: "m".into(),
+        layers: (8, 4), // inverted range
+        region: 0,
+        capacity: 10,
+        load: 5,
+        rtts: Vec::new(),
+    };
+    assert!(LayerAd::decode(&ad.encode()).is_err());
+}
+
+#[test]
+fn quick_routed_scenario_completes() {
+    let out = route_inference(&RouteScenarioConfig::quick(true, false));
+    assert_eq!(out.failed, 0, "quick routed run had failures");
+    assert_eq!(out.completed, out.requests);
+    assert!(out.reference_match, "outputs diverged from the oracle");
+    assert_eq!(out.duplicate_appends, 0);
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-mode scenario; run via CI or --include-ignored")]
+fn routed_beats_static() {
+    let mut routed = route_inference(&RouteScenarioConfig::ci(true, false));
+    let mut naive = route_inference(&RouteScenarioConfig::ci(false, false));
+    for (name, o) in [("routed", &routed), ("static", &naive)] {
+        assert_eq!(o.failed, 0, "{name}: failures");
+        assert!(o.reference_match, "{name}: outputs diverged from the oracle");
+    }
+    assert!(routed.dht_holders >= 1, "layer bucket has no DHT providers");
+    assert!(
+        routed.ttft.percentile(99.0) < naive.ttft.percentile(99.0),
+        "routed p99 TTFT {} must beat static {}",
+        routed.ttft.percentile(99.0),
+        naive.ttft.percentile(99.0)
+    );
+    assert!(
+        routed.tokens_per_sec > naive.tokens_per_sec,
+        "routed {} tok/s must beat static {} tok/s",
+        routed.tokens_per_sec,
+        naive.tokens_per_sec
+    );
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-mode scenario; run via CI or --include-ignored")]
+fn mid_chain_kill_completes_with_replay() {
+    let out = route_inference(&RouteScenarioConfig::ci(true, true));
+    assert_eq!(out.failed, 0, "kill must be client-invisible");
+    assert_eq!(out.completed, out.requests);
+    assert!(out.repairs >= 1, "no chain repair happened");
+    assert!(out.reference_match, "replayed outputs diverged from the oracle");
+    assert_eq!(
+        out.duplicate_appends, 0,
+        "replay must recompute via generation reset, never double-append"
+    );
+    assert!(out.shard_stats.sessions_reset >= 1, "no session was replay-reset");
+}
